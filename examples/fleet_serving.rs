@@ -1,0 +1,35 @@
+//! Heterogeneous fleet serving (paper future-work (iii)): a Samsung J6 on
+//! a congested link and a Redmi Note 8 on a healthy one share one cloud
+//! daemon. Each phone gets its own SmartSplit decision; the dispatcher
+//! routes requests by shortest expected delay.
+//!
+//!     make artifacts && cargo run --release --example fleet_serving
+
+use smartsplit::coordinator::fleet::{Fleet, FleetConfig, FleetMember};
+use smartsplit::device::profiles;
+use smartsplit::optimizer::Nsga2Params;
+use smartsplit::workload::{generate, Arrival};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = FleetConfig {
+        artifacts_dir: smartsplit::artifacts_dir(),
+        model: "alexnet".into(),
+        batch: 1,
+        members: vec![
+            FleetMember { profile: profiles::samsung_j6(), bandwidth_mbps: 8.0 },
+            FleetMember { profile: profiles::redmi_note8(), bandwidth_mbps: 30.0 },
+        ],
+        nsga2: Nsga2Params { pop_size: 60, generations: 60, ..Default::default() },
+        emulate_slowdown: false,
+    };
+    println!("== heterogeneous fleet: J6 @ 8 Mbps + Redmi @ 30 Mbps ==");
+    let fleet = Fleet::start(cfg)?;
+    println!("per-device splits: {:?}", fleet.splits());
+
+    let reqs = generate(24, Arrival::Poisson { rps: 6.0 }, 21);
+    let report = fleet.serve(&reqs)?;
+    report.print();
+    assert_eq!(report.completed + report.errors, 24);
+    fleet.shutdown();
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Pareto-surface explorer: sweep bandwidth × device and print how the
+//! NSGA-II Pareto set and the TOPSIS compromise move. Useful for building
+//! intuition about Eq. 14–16 — and a compact regression of the optimiser
+//! stack. Analytical only; no artifacts needed.
+//!
+//!     cargo run --release --example pareto_explorer -- --model vgg16
+
+use smartsplit::bench::Table;
+use smartsplit::device::profiles;
+use smartsplit::figures::{normalise_columns, pareto_and_choice, perf_model};
+use smartsplit::models::zoo;
+use smartsplit::optimizer::Nsga2Params;
+use smartsplit::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::new("pareto_explorer").opt("model", "vgg16", "model to explore");
+    let p = match cli.parse(&args) {
+        Ok(p) => p,
+        Err(u) => {
+            println!("{u}");
+            return Ok(());
+        }
+    };
+    let model = p.get("model");
+    let params = Nsga2Params::default();
+
+    for phone in [profiles::samsung_j6(), profiles::redmi_note8()] {
+        println!("\n== {model} on {} ==", phone.name);
+        let mut t = Table::new(&["bandwidth", "Pareto set (l1)", "TOPSIS l1", "f1 (s)", "f2 (J)", "f3 (MB)"]);
+        for bw in [0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 500.0] {
+            let r = pareto_and_choice(model, phone, bw, &params)?;
+            let profile = zoo::by_name(model).unwrap().analyze(1);
+            let pm = perf_model(&profile, phone, bw);
+            let set: Vec<usize> = r.pareto.iter().map(|(l1, _)| *l1).collect();
+            let l1 = r.decision.l1;
+            t.row(&[
+                format!("{bw} Mbps"),
+                format!("{set:?}"),
+                l1.to_string(),
+                format!("{:.3}", pm.f1(l1)),
+                format!("{:.3}", pm.f2(l1)),
+                format!("{:.1}", pm.f3(l1) / 1e6),
+            ]);
+        }
+        t.print();
+    }
+
+    // Show one full normalised Pareto surface (Fig. 6 style).
+    println!("\nnormalised Pareto surface at 10 Mbps on samsung_j6:");
+    let r = pareto_and_choice(model, profiles::samsung_j6(), 10.0, &params)?;
+    let raw: Vec<[f64; 3]> = r.pareto.iter().map(|(_, o)| *o).collect();
+    let mut t = Table::new(&["l1", "norm f1", "norm f2", "norm f3", ""]);
+    for ((l1, _), n) in r.pareto.iter().zip(normalise_columns(&raw)) {
+        t.row(&[
+            l1.to_string(),
+            format!("{:.3}", n[0]),
+            format!("{:.3}", n[1]),
+            format!("{:.3}", n[2]),
+            if *l1 == r.decision.l1 { "◀ TOPSIS".into() } else { String::new() },
+        ]);
+    }
+    t.print();
+    Ok(())
+}

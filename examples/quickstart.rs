@@ -1,0 +1,43 @@
+//! Quickstart: plan a split for AlexNet on a Samsung J6 over 10 Mbps WiFi
+//! using the full SmartSplit pipeline (NSGA-II → Pareto set → TOPSIS) and
+//! inspect the trade-off surface. Pure analytical path — no artifacts
+//! needed.
+//!
+//!     cargo run --release --example quickstart
+
+use smartsplit::coordinator::{optimize_report, Config};
+use smartsplit::device::profiles;
+use smartsplit::figures::perf_model;
+use smartsplit::models::zoo;
+use smartsplit::optimizer::{smartsplit, Nsga2Params};
+
+fn main() -> anyhow::Result<()> {
+    // 1. High-level report: Pareto set + decisions of all six algorithms.
+    let cfg = Config::default();
+    print!("{}", optimize_report(&cfg)?);
+
+    // 2. The same decision through the library API.
+    let spec = zoo::alexnet();
+    let profile = spec.analyze(1);
+    let pm = perf_model(&profile, profiles::samsung_j6(), 10.0);
+    let result = smartsplit(&pm, &Nsga2Params::default());
+    let l1 = result.decision.l1;
+    println!("\nchosen split: layers 1..={l1} on the phone, {}..={} on the cloud",
+             l1 + 1, profile.num_layers);
+    println!("  end-to-end latency (Eq. 14): {:.3} s", pm.f1(l1));
+    println!("  smartphone energy  (Eq. 15): {:.3} J", pm.f2(l1));
+    println!("  smartphone memory  (Eq. 16): {}",
+             smartsplit::util::fmt_bytes(pm.f3(l1) as u64));
+    println!("  intermediate upload I|l1   : {}",
+             smartsplit::util::fmt_bytes(profile.intermediate_bytes(l1)));
+
+    // 3. How the decision reacts to network conditions.
+    println!("\nsplit vs bandwidth:");
+    for bw in [0.5, 2.0, 10.0, 50.0, 200.0] {
+        let pm = perf_model(&profile, profiles::samsung_j6(), bw);
+        let d = smartsplit(&pm, &Nsga2Params::default()).decision;
+        println!("  {bw:>6.1} Mbps → l1 = {:<2} (latency {:.3} s, energy {:.3} J)",
+                 d.l1, pm.f1(d.l1), pm.f2(d.l1));
+    }
+    Ok(())
+}

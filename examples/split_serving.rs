@@ -1,0 +1,83 @@
+//! End-to-end split serving (the EXPERIMENTS.md §E2E driver): a cloud
+//! daemon and a device client in one process, real PJRT execution of the
+//! AOT-compiled AlexNet on both sides, batched requests over a
+//! token-bucket-shaped TCP link, energy/memory/latency accounting.
+//!
+//!     make artifacts && cargo run --release --example split_serving
+//!
+//! Flags: --requests N --model M --batch B --max-batch K --bandwidth-mbps B
+//!        --algorithm A --no-slowdown
+
+use std::time::Duration;
+
+use smartsplit::coordinator::{Config, Deployment};
+use smartsplit::device::profiles;
+use smartsplit::optimizer::{Algorithm, Nsga2Params};
+use smartsplit::serve::RouterConfig;
+use smartsplit::util::cli::Cli;
+use smartsplit::workload::{generate, Arrival};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::new("split_serving — end-to-end split-serving driver")
+        .opt("model", "alexnet", "model to serve")
+        .opt("batch", "1", "hardware batch of the artifacts (1 or 8)")
+        .opt("max-batch", "1", "router batching degree")
+        .opt("requests", "24", "number of requests")
+        .opt("rps", "0", "open-loop Poisson rate (0 = closed loop)")
+        .opt("bandwidth-mbps", "10", "shaped link bandwidth")
+        .opt("algorithm", "SmartSplit", "split policy")
+        .opt("device-profile", "samsung_j6", "phone profile")
+        .flag("no-slowdown", "run device at host speed");
+    let p = match cli.parse(&args) {
+        Ok(p) => p,
+        Err(u) => {
+            println!("{u}");
+            return Ok(());
+        }
+    };
+
+    let cfg = Config {
+        model: p.get("model").into(),
+        batch: p.get_usize("batch"),
+        bandwidth_mbps: p.get_f64("bandwidth-mbps"),
+        algorithm: Algorithm::by_name(p.get("algorithm")).expect("algorithm"),
+        device_profile: profiles::by_name(p.get("device-profile")).expect("profile"),
+        router: RouterConfig {
+            max_batch: p.get_usize("max-batch"),
+            max_wait: Duration::from_millis(100),
+        },
+        emulate_slowdown: !p.get_bool("no-slowdown"),
+        nsga2: Nsga2Params::default(),
+        ..Config::default()
+    };
+    let n = p.get_usize("requests");
+    let arrival = match p.get_f64("rps") {
+        r if r > 0.0 => Arrival::Poisson { rps: r },
+        _ => Arrival::ClosedLoop,
+    };
+
+    println!(
+        "== split serving: {} b{} on {} over {} Mbps, policy {} ==",
+        cfg.model, cfg.batch, cfg.device_profile.name, cfg.bandwidth_mbps,
+        cfg.algorithm.name()
+    );
+    let t0 = std::time::Instant::now();
+    let dep = Deployment::start(cfg.clone())?;
+    println!(
+        "deployment up in {:?}: split l1={} (device) / l2={} (cloud), cloud at {}",
+        t0.elapsed(), dep.split.l1,
+        dep.device.num_layers() - dep.split.l1, dep.cloud.addr
+    );
+
+    let reqs = generate(n, arrival, 42);
+    let report = dep.serve(&reqs)?;
+    report.print();
+    println!(
+        "battery used: {:.4}% of {} mAh",
+        dep.device.energy.battery_fraction_used() * 100.0,
+        dep.device.profile.battery_mah.unwrap_or(0.0)
+    );
+    dep.shutdown();
+    Ok(())
+}

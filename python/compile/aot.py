@@ -1,0 +1,186 @@
+"""AOT driver: lower every layer of every zoo model to HLO text + weight
+binaries + a JSON manifest consumed by the rust runtime.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact layout (per model)::
+
+    artifacts/<model>/manifest.json
+    artifacts/<model>/weights/layer_NNN_<name>.bin      raw little-endian f32
+    artifacts/<model>/b<B>/layer_NNN.hlo.txt            one HLO per layer
+
+Each layer HLO computes ``fn(activation, *weights) -> (activation,)``
+(tuple-returned). Weights are HLO *parameters* so the rust runtime uploads
+them once as PJRT literals and reuses them across requests; embedding
+VGG16's 138M parameters as HLO text constants would produce multi-GB
+artifacts.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts \
+        --models alexnet:1,8 vgg11 vgg13 vgg16 mobilenet_v2:1,8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as mdl
+from . import specs, zoo
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text.
+
+    ``return_tuple=False``: every layer has exactly one output, and a bare
+    array result lets the rust runtime chain layer executions entirely in
+    PJRT device buffers (``execute_b``) without the host round-trip a tuple
+    result would force. (§Perf: buffer-chaining vs literal path.)"""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def lower_layer(layer, in_shape: Tuple[int, ...], params: mdl.Params,
+                impl: str = "pallas") -> str:
+    """Lower one layer to HLO text, with activation + weights as params."""
+    fn = mdl.layer_fn(layer, impl)
+    x_spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    w_specs = [jax.ShapeDtypeStruct(a.shape, jnp.float32)
+               for _, a in mdl.flat_weights(layer, params)]
+    lowered = jax.jit(fn).lower(x_spec, *w_specs)
+    return to_hlo_text(lowered)
+
+
+def build_model_artifacts(
+    model: specs.ModelSpec,
+    out_dir: str,
+    batches: Sequence[int] = (1,),
+    impl: str = "pallas",
+    seed: int = 0,
+    verbose: bool = True,
+) -> Dict:
+    """Emit all artifacts for one model; returns the manifest dict."""
+    mdir = os.path.join(out_dir, model.name)
+    wdir = os.path.join(mdir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+    params = mdl.init_model_params(model, seed)
+    infos = specs.analyze(model, batch=1)
+
+    manifest: Dict = {
+        "model": model.name,
+        "impl": impl,
+        "seed": seed,
+        "num_layers": model.num_layers,
+        "paper_layers": zoo.PAPER_LAYERS[model.name],
+        "input_hw": model.input_hw,
+        "input_ch": model.input_ch,
+        "num_classes": model.num_classes,
+        "top1_accuracy": model.top1_accuracy,
+        "total_params": specs.total_params(model),
+        "batches": list(batches),
+        "layers": [],
+    }
+
+    # Weights (batch-independent).
+    weight_meta: List[List[Dict]] = []
+    for i, (layer, p) in enumerate(zip(model.layers, params)):
+        metas = []
+        for name, arr in mdl.flat_weights(layer, p):
+            fname = f"layer_{i + 1:03d}_{name}.bin"
+            arr.astype("<f4").tofile(os.path.join(wdir, fname))
+            metas.append({"name": name, "file": f"weights/{fname}",
+                          "shape": list(arr.shape)})
+        weight_meta.append(metas)
+
+    # Per-layer HLO, per batch size.
+    hlo_paths: List[Dict[str, str]] = [dict() for _ in model.layers]
+    for b in batches:
+        bdir = os.path.join(mdir, f"b{b}")
+        os.makedirs(bdir, exist_ok=True)
+        binfos = specs.analyze(model, batch=b)
+        for i, (layer, p, info) in enumerate(zip(model.layers, params, binfos)):
+            text = lower_layer(layer, info.in_shape, p, impl)
+            rel = f"b{b}/layer_{i + 1:03d}.hlo.txt"
+            with open(os.path.join(mdir, rel), "w") as f:
+                f.write(text)
+            hlo_paths[i][str(b)] = rel
+            if verbose:
+                print(f"  [{model.name} b{b}] layer {i + 1:3d}/{model.num_layers} "
+                      f"{layer.kind:<18} {info.in_shape} -> {info.out_shape} "
+                      f"({len(text) / 1024:.0f} KiB hlo)", flush=True)
+
+    for i, (layer, info) in enumerate(zip(model.layers, infos)):
+        manifest["layers"].append({
+            "index": info.index,
+            "kind": info.kind,
+            "in_shape": list(info.in_shape),
+            "out_shape": list(info.out_shape),
+            "params": info.params,
+            "param_bytes": info.param_bytes,
+            "act_bytes": info.act_bytes,
+            "flops": info.flops,
+            "weights": weight_meta[i],
+            "hlo": hlo_paths[i],
+        })
+
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def parse_model_arg(arg: str) -> Tuple[str, List[int]]:
+    """``vgg11`` -> ("vgg11", [1]);  ``alexnet:1,8`` -> ("alexnet", [1, 8])."""
+    if ":" in arg:
+        name, bs = arg.split(":", 1)
+        return name, [int(x) for x in bs.split(",")]
+    return arg, [1]
+
+
+DEFAULT_MODELS = ["alexnet:1,8", "vgg11", "vgg13", "vgg16", "mobilenet_v2:1,8"]
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=DEFAULT_MODELS,
+                    help="model[:batch,batch...] entries")
+    ap.add_argument("--kernel-impl", choices=["pallas", "ref"], default="pallas")
+    ap.add_argument("--tile-profile", choices=["cpu", "tpu"], default="cpu",
+                    help="L1 matmul tiling: cpu = fewest grid steps for the "
+                         "interpret/CPU artifacts; tpu = VMEM-faithful BlockSpec")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    from .kernels.matmul import set_tile_profile
+    set_tile_profile(args.tile_profile)
+    for entry in args.models:
+        name, batches = parse_model_arg(entry)
+        model = zoo.ZOO[name]()
+        print(f"== {name}: {model.num_layers} layers, batches {batches}, "
+              f"impl={args.kernel_impl}", flush=True)
+        build_model_artifacts(model, args.out_dir, batches,
+                              args.kernel_impl, args.seed,
+                              verbose=not args.quiet)
+    # Build stamp lets `make` skip regeneration when inputs are unchanged.
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

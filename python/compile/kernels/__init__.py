@@ -1,0 +1,11 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp reference oracle.
+
+Public surface:
+  matmul_pallas, conv2d_pallas, depthwise_conv_pallas, maxpool2d_pallas
+  ref.* — oracle used by pytest and the --kernel-impl=ref ablation.
+"""
+
+from . import ref  # noqa: F401
+from .conv import conv2d_pallas, depthwise_conv_pallas  # noqa: F401
+from .matmul import matmul_pallas, vmem_bytes  # noqa: F401
+from .pool import maxpool2d_pallas  # noqa: F401

@@ -1,0 +1,145 @@
+"""L1 conv kernels: im2col conv2d (over the Pallas matmul) and a dedicated
+depthwise kernel for MobileNetV2.
+
+The GPU-idiomatic formulation of conv is a threadblock-tiled implicit GEMM;
+the TPU re-think (DESIGN.md §3) keeps the GEMM but makes the patch
+extraction an XLA data-movement prologue (gather/reshape fuse into the
+surrounding HLO) so that 100% of the MACs execute inside the MXU-tiled
+Pallas matmul.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .matmul import matmul_pallas
+from .ref import apply_act
+
+
+def _im2col(x: jax.Array, kernel: int, stride: int, padding: int) -> jax.Array:
+    """(N, C, H, W) -> (C*KH*KW, N*OH*OW) patch matrix."""
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    oh = (h + 2 * padding - kernel) // stride + 1
+    ow = (w + 2 * padding - kernel) // stride + 1
+    # One strided slice per (kh, kw) tap: kernel*kernel slices, each
+    # (N, C, OH, OW). Static python loop => unrolled, fusable HLO.
+    taps = []
+    for kh in range(kernel):
+        for kw in range(kernel):
+            sl = lax.slice(
+                xp,
+                (0, 0, kh, kw),
+                (n, c, kh + (oh - 1) * stride + 1, kw + (ow - 1) * stride + 1),
+                (1, 1, stride, stride),
+            )
+            taps.append(sl)
+    # (KH*KW, N, C, OH, OW) -> (C, KH*KW, N, OH, OW) -> (C*KH*KW, N*OH*OW)
+    pat = jnp.stack(taps, axis=0).transpose(2, 0, 1, 3, 4)
+    return pat.reshape(c * kernel * kernel, n * oh * ow), (n, oh, ow)
+
+
+def conv2d_pallas(
+    x: jax.Array,  # (N, C, H, W)
+    w: jax.Array,  # (OC, C, KH, KW)
+    bias: Optional[jax.Array] = None,
+    stride: int = 1,
+    padding: int = 0,
+    act: Optional[str] = None,
+    bn_scale: Optional[jax.Array] = None,
+    bn_shift: Optional[jax.Array] = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Standard conv as im2col + MXU matmul: out[oc, p] = W[oc, :] . pat[:, p]."""
+    oc, c, kh, kw = w.shape
+    assert kh == kw, "square kernels only in this zoo"
+    pat, (n, oh, ow) = _im2col(x, kh, stride, padding)
+    wmat = w.reshape(oc, c * kh * kw)
+    # Fold inference batch-norm into the GEMM epilogue: scale rows of W and
+    # fold shift into the bias so the fused epilogue handles everything.
+    if bn_scale is not None:
+        wmat = wmat * bn_scale[:, None]
+        shift = bn_shift if bn_shift is not None else 0.0
+        bias = shift if bias is None else bias * bn_scale + shift
+    out = matmul_pallas(wmat, pat, None, None, interpret=interpret)  # (OC, N*OH*OW)
+    if bias is not None:
+        out = out + bias[:, None]
+    out = apply_act(out, act)
+    return out.reshape(oc, n, oh, ow).transpose(1, 0, 2, 3)
+
+
+def _depthwise_kernel(x_ref, w_ref, o_ref, *, kernel: int, stride: int, act):
+    """One block of channels. x block: (1, TC, HP, WP) pre-padded; w block:
+    (TC, KH*KW); out block: (1, TC, OH, OW). Static tap loop -> vector FMAs."""
+    x = x_ref[...]
+    _, tc, hp, wp = x.shape
+    _, oh, ow = o_ref.shape[1], o_ref.shape[2], o_ref.shape[3]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for t in range(kernel * kernel):
+        dh, dw = divmod(t, kernel)
+        sl = lax.slice(
+            x,
+            (0, 0, dh, dw),
+            (1, tc, dh + (oh - 1) * stride + 1, dw + (ow - 1) * stride + 1),
+            (1, 1, stride, stride),
+        )
+        acc = acc + sl * w_ref[:, t][None, :, None, None]
+    o_ref[...] = apply_act(acc, act)
+
+
+def depthwise_conv_pallas(
+    x: jax.Array,  # (N, C, H, W)
+    w: jax.Array,  # (C, 1, KH, KW)
+    stride: int = 1,
+    padding: int = 1,
+    act: Optional[str] = None,
+    bn_scale: Optional[jax.Array] = None,
+    bn_shift: Optional[jax.Array] = None,
+    *,
+    tc: int = 32,
+    interpret: bool = True,
+) -> jax.Array:
+    """Depthwise 3x3: one VMEM-resident channel block per grid step; the
+    KH*KW tap loop is unrolled into vector FMAs (VPU work, no MXU)."""
+    n, c, h, w_in = x.shape
+    kh = w.shape[2]
+    assert n == 1 or True
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w_in + 2 * padding - kh) // stride + 1
+
+    wmat = w.reshape(c, kh * kh)
+    shift = None
+    if bn_scale is not None:
+        wmat = wmat * bn_scale[:, None]
+        shift = bn_shift
+
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    tc = min(tc, c)
+    cp = (c + tc - 1) // tc * tc
+    xp = jnp.pad(xp, ((0, 0), (0, cp - c), (0, 0), (0, 0)))
+    wp = jnp.pad(wmat, ((0, cp - c), (0, 0)))
+    hp, wpad = xp.shape[2], xp.shape[3]
+
+    grid = (xp.shape[0], cp // tc)
+    out = pl.pallas_call(
+        lambda x_ref, w_ref, o_ref: _depthwise_kernel(
+            x_ref, w_ref, o_ref, kernel=kh, stride=stride, act=None
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tc, hp, wpad), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((tc, kh * kh), lambda b, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tc, oh, ow), lambda b, j: (b, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], cp, oh, ow), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    out = out[:, :c]
+    if shift is not None:
+        out = out + shift[None, :, None, None]
+    return apply_act(out, act)

@@ -1,0 +1,160 @@
+"""L1 Pallas kernel: MXU-tiled matmul with fused bias + activation.
+
+This is the single compute hot-spot of the whole stack: conv layers are
+lowered to it via im2col (``conv.py``) and linear layers call it directly,
+so every MAC in every CNN of the zoo flows through this kernel.
+
+TPU thinking (see DESIGN.md §3 Hardware-Adaptation):
+
+* the grid is (M/TM, N/TN, K/TK); each (i, j) output tile is accumulated
+  over the K axis — the BlockSpec expresses the HBM->VMEM schedule that a
+  GPU implementation would express with threadblocks + shared-memory
+  staging;
+* default tiles TM=TN=128, TK=512 keep the VMEM working set at
+  TM*TK + TK*TN + TM*TN = 147k f32 = 0.56 MiB, leaving double-buffering
+  headroom way under the 16 MiB VMEM budget while feeding the 128x128 MXU
+  systolic array full-width tiles;
+* bias add + activation are fused into the final K step so the output tile
+  is written exactly once.
+
+Lowered with ``interpret=True`` — the CPU PJRT client cannot execute Mosaic
+custom-calls; on a real TPU the same kernel lowers natively (§Perf records
+the estimated MXU utilisation).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import apply_act
+
+# Default MXU-shaped tiles.
+TM_DEFAULT = 128
+TN_DEFAULT = 128
+TK_DEFAULT = 512
+
+# Tile profiles (§Perf L1, DESIGN.md §Hardware-Adaptation):
+#
+# * "tpu" — VMEM-faithful schedule: one grid step's working set stays under
+#   half of a 16 MiB VMEM (double-buffer headroom). This is the BlockSpec a
+#   real TPU lowering would use; the §Perf MXU/VMEM estimates use it.
+# * "cpu" — execution profile for the interpret-mode artifacts the CPU PJRT
+#   client runs. Interpret lowering pays a per-grid-step cost proportional
+#   to the bytes it dynamic-slices, so the optimum is the *fewest* grid
+#   steps: single-block whenever the operands fit a generous host budget.
+#   (Measured on AlexNet fc1: 32-step K-grid 32.4 s → single block 21 ms.)
+#
+# The AOT driver selects the profile (`--tile-profile`, default cpu).
+
+VMEM_BUDGET_WORDS = (8 * 1024 * 1024) // 4
+CPU_BUDGET_WORDS = 64 * 1024 * 1024  # 256 MiB working set cap
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+_TILE_PROFILE = "cpu"
+
+
+def set_tile_profile(profile: str) -> None:
+    """Select the tiling profile: "cpu" (default) or "tpu"."""
+    global _TILE_PROFILE
+    assert profile in ("cpu", "tpu"), profile
+    _TILE_PROFILE = profile
+
+
+def get_tile_profile() -> str:
+    return _TILE_PROFILE
+
+
+def pick_tiles(m: int, k: int, n: int, profile: str = None) -> tuple:
+    """Choose (tm, tn, tk) for an (M,K)x(K,N) matmul under the profile."""
+    profile = profile or _TILE_PROFILE
+    if profile == "cpu":
+        # Minimise grid steps: full M and K, widest N that fits the budget.
+        tm = _round_up(m, 8)
+        tk = _round_up(k, 8)
+        tn_cap = max(128, (CPU_BUDGET_WORDS - tm * tk) // max(1, tk + tm))
+        tn = min(_round_up(n, 8), _round_up(tn_cap, 8))
+        return tm, tn, tk
+    # "tpu": MXU-width output tiles, K streamed up to the VMEM budget.
+    tm = min(TM_DEFAULT, _round_up(m, 8))
+    tn = min(TN_DEFAULT, _round_up(n, 8))
+    tk_budget = max(TK_DEFAULT, (VMEM_BUDGET_WORDS - tm * tn) // (tm + tn))
+    tk = min(_round_up(k, 8), _round_up(tk_budget, 8))
+    return tm, tn, tk
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, act: Optional[str], bias: bool):
+    """One (TM, TN) output tile; grid axis 2 streams K in TK chunks."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        out = o_ref[...]
+        if bias:
+            out = out + b_ref[...]
+        o_ref[...] = apply_act(out, act)
+
+
+def matmul_pallas(
+    x: jax.Array,  # (M, K)
+    w: jax.Array,  # (K, N)
+    bias: Optional[jax.Array] = None,  # (N,)
+    act: Optional[str] = None,
+    *,
+    tm: int = 0,
+    tn: int = 0,
+    tk: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled ``x @ w (+ bias) (act)`` -> (M, N) f32. Tiles default to
+    ``pick_tiles``; explicit values are clamped to the padded problem."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+
+    auto_tm, auto_tn, auto_tk = pick_tiles(m, k, n)
+    tm = auto_tm if tm <= 0 else min(tm, _round_up(m, 8))
+    tn = auto_tn if tn <= 0 else min(tn, _round_up(n, 8))
+    tk = auto_tk if tk <= 0 else min(tk, _round_up(k, 8))
+    mp, kp, np_ = _round_up(m, tm), _round_up(k, tk), _round_up(n, tn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    has_bias = bias is not None
+    bp = jnp.pad(bias, (0, np_ - n)) if has_bias else jnp.zeros((np_,), x.dtype)
+    bp = bp.reshape(1, np_)
+
+    grid = (mp // tm, np_ // tn, kp // tk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=grid[2], act=act, bias=has_bias),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, tn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(tm: int = TM_DEFAULT, tn: int = TN_DEFAULT, tk: int = TK_DEFAULT) -> int:
+    """Estimated VMEM working set of one grid step (f32), used by the §Perf
+    roofline accounting."""
+    return 4 * (tm * tk + tk * tn + tm * tn + tn)

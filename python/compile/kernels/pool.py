@@ -1,0 +1,58 @@
+"""L1 pooling kernel: max-pool as a Pallas kernel with an unrolled tap loop.
+
+Pooling is bandwidth-bound, so the only thing that matters is touching each
+input element once while it is VMEM-resident: the grid walks channel blocks
+of the (N, C, H, W) input and the KxK tap loop runs as vector max ops over
+strided slices of the resident block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref, *, kernel: int, stride: int):
+    x = x_ref[...]
+    _, tc, hp, wp = x.shape
+    oh, ow = o_ref.shape[2], o_ref.shape[3]
+    acc = jnp.full(o_ref.shape, -jnp.inf, jnp.float32)
+    for t in range(kernel * kernel):
+        dh, dw = divmod(t, kernel)
+        sl = lax.slice(
+            x,
+            (0, 0, dh, dw),
+            (1, tc, dh + (oh - 1) * stride + 1, dw + (ow - 1) * stride + 1),
+            (1, 1, stride, stride),
+        )
+        acc = jnp.maximum(acc, sl)
+    o_ref[...] = acc
+
+
+def maxpool2d_pallas(
+    x: jax.Array,  # (N, C, H, W)
+    kernel: int,
+    stride: int,
+    *,
+    tc: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    n, c, h, w = x.shape
+    oh = (h - kernel) // stride + 1
+    ow = (w - kernel) // stride + 1
+    tc = min(tc, c)
+    cp = (c + tc - 1) // tc * tc
+    # Pad channels with -inf-safe zeros (sliced off below) to a tile multiple.
+    xp = jnp.pad(x, ((0, 0), (0, cp - c), (0, 0), (0, 0)))
+    grid = (n, cp // tc)
+    out = pl.pallas_call(
+        lambda x_ref, o_ref: _maxpool_kernel(x_ref, o_ref, kernel=kernel, stride=stride),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, tc, h, w), lambda b, j: (b, j, 0, 0))],
+        out_specs=pl.BlockSpec((1, tc, oh, ow), lambda b, j: (b, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, cp, oh, ow), jnp.float32),
+        interpret=interpret,
+    )(xp)
+    return out[:, :c]

@@ -1,0 +1,108 @@
+"""Pure-jnp/lax reference oracle for every L1 kernel.
+
+These are the ground truth the Pallas kernels are pytest-checked against
+(``python/tests/test_kernels.py``), and double as the ``--kernel-impl=ref``
+AOT path used by the L1-vs-ref ablation bench.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def apply_act(x: jax.Array, act: str | None) -> jax.Array:
+    if act is None:
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def matmul_ref(x: jax.Array, w: jax.Array, bias=None, act: str | None = None) -> jax.Array:
+    """(M,K) @ (K,N) with optional bias (N,) and activation fusion."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias[None, :]
+    return apply_act(out, act)
+
+
+def conv2d_ref(
+    x: jax.Array,  # (N, C, H, W)
+    w: jax.Array,  # (OC, C/groups, KH, KW)
+    bias=None,  # (OC,)
+    stride: int = 1,
+    padding: int = 0,
+    groups: int = 1,
+    act: str | None = None,
+    bn_scale=None,  # (OC,) folded batch-norm scale
+    bn_shift=None,  # (OC,) folded batch-norm shift
+) -> jax.Array:
+    out = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups,
+    )
+    if bias is not None:
+        out = out + bias[None, :, None, None]
+    if bn_scale is not None:
+        out = out * bn_scale[None, :, None, None] + bn_shift[None, :, None, None]
+    return apply_act(out, act)
+
+
+def depthwise_conv_ref(
+    x: jax.Array,  # (N, C, H, W)
+    w: jax.Array,  # (C, 1, KH, KW)
+    stride: int = 1,
+    padding: int = 1,
+    act: str | None = None,
+    bn_scale=None,
+    bn_shift=None,
+) -> jax.Array:
+    c = x.shape[1]
+    return conv2d_ref(
+        x, w, None, stride, padding, groups=c, act=act, bn_scale=bn_scale, bn_shift=bn_shift
+    )
+
+
+def maxpool2d_ref(x: jax.Array, kernel: int, stride: int) -> jax.Array:
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 1, kernel, kernel),
+        window_strides=(1, 1, stride, stride),
+        padding="VALID",
+    )
+
+
+def adaptive_avgpool2d_ref(x: jax.Array, out_hw: int) -> jax.Array:
+    """Matches torch AdaptiveAvgPool2d for the sizes in our zoo: each output
+    cell averages the window [floor(i*H/O), ceil((i+1)*H/O))."""
+    n, c, h, w = x.shape
+    if h == out_hw and w == out_hw:
+        return x
+    rows = []
+    for i in range(out_hw):
+        h0, h1 = (i * h) // out_hw, -(-((i + 1) * h) // out_hw)
+        cols = []
+        for j in range(out_hw):
+            w0, w1 = (j * w) // out_hw, -(-((j + 1) * w) // out_hw)
+            cols.append(jnp.mean(x[:, :, h0:h1, w0:w1], axis=(2, 3)))
+        rows.append(jnp.stack(cols, axis=-1))
+    return jnp.stack(rows, axis=-2)
+
+
+def linear_ref(x: jax.Array, w: jax.Array, bias=None, act: str | None = None,
+               global_pool: bool = False) -> jax.Array:
+    """(N, F) or (N,C,H,W) -> (N, out). 4-D input is globally mean-pooled
+    (``global_pool``) or flattened, mirroring torchvision's functional ops."""
+    if x.ndim == 4:
+        x = jnp.mean(x, axis=(2, 3)) if global_pool else x.reshape(x.shape[0], -1)
+    return matmul_ref(x, w, bias, act)

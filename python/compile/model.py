@@ -1,0 +1,215 @@
+"""L2: per-layer jax forward functions for the CNN zoo, calling the L1
+Pallas kernels.
+
+Every paper "layer" becomes an independent jax function
+``fn(activation, *weights) -> activation`` so that ``aot.py`` can lower each
+one to its own HLO module. Weights are *runtime parameters* (not HLO
+constants): VGG16's fc1 alone is 102.7M f32 values, which as HLO text
+constants would be gigabytes; instead weights live in little-endian ``.bin``
+files the rust runtime feeds as PJRT literals (uploaded once, reused across
+requests).
+
+``impl`` selects the kernel implementation: ``"pallas"`` (L1 kernels, the
+real artifact path) or ``"ref"`` (pure jnp oracle) — the ablation bench
+compares the two.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import specs
+from .kernels import (
+    conv2d_pallas,
+    depthwise_conv_pallas,
+    matmul_pallas,
+    maxpool2d_pallas,
+    ref,
+)
+
+Params = Dict[str, np.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Weight initialisation (He-normal convs, Xavier-uniform linears).
+# Random weights are a documented substitution (DESIGN.md §4): no network
+# access for torchvision checkpoints, and none of the measured quantities
+# (latency / energy / memory) depend on weight *values*.
+# ---------------------------------------------------------------------------
+
+
+def init_layer_params(layer, rng: np.random.RandomState) -> Params:
+    if isinstance(layer, specs.Conv2d):
+        fan_in = (layer.in_ch // layer.groups) * layer.kernel * layer.kernel
+        p: Params = {
+            "w": (rng.standard_normal(
+                (layer.out_ch, layer.in_ch // layer.groups, layer.kernel, layer.kernel)
+            ) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+        }
+        if layer.bias:
+            p["b"] = np.zeros((layer.out_ch,), np.float32)
+        if layer.folded_bn:
+            p["bn_scale"] = rng.uniform(0.5, 1.5, (layer.out_ch,)).astype(np.float32)
+            p["bn_shift"] = (rng.standard_normal((layer.out_ch,)) * 0.1).astype(np.float32)
+        return p
+    if isinstance(layer, specs.Linear):
+        bound = np.sqrt(1.0 / layer.in_features)
+        p = {"w": rng.uniform(-bound, bound,
+                              (layer.in_features, layer.out_features)).astype(np.float32)}
+        if layer.bias:
+            p["b"] = rng.uniform(-bound, bound, (layer.out_features,)).astype(np.float32)
+        return p
+    if isinstance(layer, specs.InvertedResidual):
+        hid = layer.hidden_ch
+        p = {}
+        if layer.expand_ratio != 1:
+            p["exp_w"] = (rng.standard_normal((hid, layer.in_ch, 1, 1))
+                          * np.sqrt(2.0 / layer.in_ch)).astype(np.float32)
+            p["exp_bn_scale"] = rng.uniform(0.5, 1.5, (hid,)).astype(np.float32)
+            p["exp_bn_shift"] = (rng.standard_normal((hid,)) * 0.1).astype(np.float32)
+        p["dw_w"] = (rng.standard_normal((hid, 1, 3, 3)) * np.sqrt(2.0 / 9)).astype(np.float32)
+        p["dw_bn_scale"] = rng.uniform(0.5, 1.5, (hid,)).astype(np.float32)
+        p["dw_bn_shift"] = (rng.standard_normal((hid,)) * 0.1).astype(np.float32)
+        p["proj_w"] = (rng.standard_normal((layer.out_ch, hid, 1, 1))
+                       * np.sqrt(2.0 / hid)).astype(np.float32)
+        p["proj_bn_scale"] = rng.uniform(0.5, 1.5, (layer.out_ch,)).astype(np.float32)
+        p["proj_bn_shift"] = (rng.standard_normal((layer.out_ch,)) * 0.1).astype(np.float32)
+        return p
+    return {}
+
+
+# Deterministic flat ordering of each layer's weights: this IS the wire
+# contract with the rust runtime (manifest lists names in this order).
+WEIGHT_ORDER = {
+    "conv2d": ["w", "b", "bn_scale", "bn_shift"],
+    "linear": ["w", "b"],
+    "inverted_residual": [
+        "exp_w", "exp_bn_scale", "exp_bn_shift",
+        "dw_w", "dw_bn_scale", "dw_bn_shift",
+        "proj_w", "proj_bn_scale", "proj_bn_shift",
+    ],
+}
+
+
+def flat_weights(layer, params: Params) -> List[Tuple[str, np.ndarray]]:
+    order = WEIGHT_ORDER.get(layer.kind, [])
+    return [(k, params[k]) for k in order if k in params]
+
+
+def init_model_params(model: specs.ModelSpec, seed: int = 0) -> List[Params]:
+    rng = np.random.RandomState(seed)
+    return [init_layer_params(l, rng) for l in model.layers]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer forward functions
+# ---------------------------------------------------------------------------
+
+
+def _inverted_residual_fn(layer: specs.InvertedResidual, impl: str):
+    conv = conv2d_pallas if impl == "pallas" else (
+        lambda x, w, b, s, p, act, bn_scale, bn_shift: ref.conv2d_ref(
+            x, w, b, s, p, act=act, bn_scale=bn_scale, bn_shift=bn_shift))
+    dw = depthwise_conv_pallas if impl == "pallas" else (
+        lambda x, w, s, p, act, bn_scale, bn_shift: ref.depthwise_conv_ref(
+            x, w, s, p, act=act, bn_scale=bn_scale, bn_shift=bn_shift))
+
+    def fn(x, *ws):
+        i = 0
+        h = x
+        if layer.expand_ratio != 1:
+            ew, es, eb = ws[i], ws[i + 1], ws[i + 2]
+            i += 3
+            h = conv(h, ew, None, 1, 0, "relu6", es, eb)
+        dww, dws, dwb = ws[i], ws[i + 1], ws[i + 2]
+        i += 3
+        h = dw(h, dww, layer.stride, 1, "relu6", dws, dwb)
+        pw, ps, pb = ws[i], ws[i + 1], ws[i + 2]
+        h = conv(h, pw, None, 1, 0, None, ps, pb)
+        if layer.use_residual:
+            h = h + x
+        return h
+
+    return fn
+
+
+def layer_fn(layer, impl: str = "pallas") -> Callable:
+    """Return ``fn(activation, *weights) -> activation`` for one layer."""
+    pallas = impl == "pallas"
+    if isinstance(layer, specs.Conv2d):
+        if layer.groups != 1:
+            raise NotImplementedError("grouped conv only via InvertedResidual")
+        return _make_conv(layer, pallas)
+    if isinstance(layer, specs.Linear):
+        return _make_linear(layer, pallas)
+    if isinstance(layer, specs.InvertedResidual):
+        return _inverted_residual_fn(layer, impl)
+    if isinstance(layer, specs.ReLU):
+        return lambda x: jnp.maximum(x, 0.0)
+    if isinstance(layer, specs.ReLU6):
+        return lambda x: jnp.clip(x, 0.0, 6.0)
+    if isinstance(layer, specs.Dropout):
+        return lambda x: x  # inference identity
+    if isinstance(layer, specs.MaxPool2d):
+        if pallas:
+            return lambda x: maxpool2d_pallas(x, layer.kernel, layer.stride)
+        return lambda x: ref.maxpool2d_ref(x, layer.kernel, layer.stride)
+    if isinstance(layer, specs.AdaptiveAvgPool2d):
+        return lambda x: ref.adaptive_avgpool2d_ref(x, layer.out_hw)
+    if isinstance(layer, specs.Flatten):
+        return lambda x: x.reshape(x.shape[0], -1)
+    raise TypeError(f"unknown layer {layer!r}")
+
+
+def _make_conv(layer: specs.Conv2d, pallas: bool) -> Callable:
+    has_bias, has_bn = layer.bias, layer.folded_bn
+
+    def fn(x, *ws):
+        w = ws[0]
+        i = 1
+        b = ws[i] if has_bias else None
+        i += int(has_bias)
+        bn_s = ws[i] if has_bn else None
+        bn_b = ws[i + 1] if has_bn else None
+        if pallas:
+            return conv2d_pallas(x, w, b, layer.stride, layer.padding,
+                                 None, bn_s, bn_b)
+        return ref.conv2d_ref(x, w, b, layer.stride, layer.padding,
+                              act=None, bn_scale=bn_s, bn_shift=bn_b)
+
+    return fn
+
+
+def _make_linear(layer: specs.Linear, pallas: bool) -> Callable:
+    has_bias, gp = layer.bias, layer.global_pool
+
+    def fn(x, *ws):
+        w = ws[0]
+        b = ws[1] if has_bias else None
+        if x.ndim == 4:
+            x = jnp.mean(x, axis=(2, 3)) if gp else x.reshape(x.shape[0], -1)
+        if pallas:
+            return matmul_pallas(x, w, b, None)
+        return ref.matmul_ref(x, w, b, None)
+
+    return fn
+
+
+def model_forward(
+    model: specs.ModelSpec,
+    params: Sequence[Params],
+    x: jax.Array,
+    impl: str = "pallas",
+    upto: Optional[int] = None,
+) -> jax.Array:
+    """Run layers 1..upto (all if None). Used by tests and the oracle."""
+    n = len(model.layers) if upto is None else upto
+    for layer, p in zip(model.layers[:n], params[:n]):
+        ws = [jnp.asarray(a) for _, a in flat_weights(layer, p)]
+        x = layer_fn(layer, impl)(x, *ws)
+    return x

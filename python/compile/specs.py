@@ -1,0 +1,335 @@
+"""Declarative CNN layer specifications with shape / parameter / FLOPs /
+memory inference.
+
+A "layer" here mirrors one torchvision ``nn.Module`` in the flattened
+``features → avgpool → classifier`` ordering, because that is how the paper
+counts layers (AlexNet 21, VGG11 29, VGG13 33, VGG16 39, MobileNetV2 21).
+The rust side (``rust/src/models``) implements the same algebra; the
+manifest emitted by ``aot.py`` is the cross-check contract between the two.
+
+Memory accounting follows the paper's reference [39] (learnopencv
+"Number of Parameters and Tensor Sizes in a CNN"):
+
+* parameter memory  = #params * 4 bytes (f32)
+* activation memory = #elements of the layer *output* tensor * 4 bytes
+* ``M_client | l1``  = sum over layers 1..l1 of (param + activation) memory
+* ``I | l1``         = activation bytes of layer l1 (what must be uploaded)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+DTYPE_BYTES = 4  # f32 end to end
+
+
+# ---------------------------------------------------------------------------
+# Layer specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Conv2d:
+    """Standard 2-D convolution (NCHW, OIHW weights), with bias."""
+
+    in_ch: int
+    out_ch: int
+    kernel: int
+    stride: int = 1
+    padding: int = 0
+    groups: int = 1
+    bias: bool = True
+    # Inference-time folded batch-norm: affine scale/shift applied to the
+    # conv output. Parameters counted as 2*out_ch when present.
+    folded_bn: bool = False
+
+    @property
+    def kind(self) -> str:
+        return "conv2d"
+
+
+@dataclass(frozen=True)
+class ReLU:
+    inplace: bool = True
+
+    @property
+    def kind(self) -> str:
+        return "relu"
+
+
+@dataclass(frozen=True)
+class ReLU6:
+    @property
+    def kind(self) -> str:
+        return "relu6"
+
+
+@dataclass(frozen=True)
+class MaxPool2d:
+    kernel: int
+    stride: int
+
+    @property
+    def kind(self) -> str:
+        return "maxpool2d"
+
+
+@dataclass(frozen=True)
+class AdaptiveAvgPool2d:
+    out_hw: int  # target H = W
+
+    @property
+    def kind(self) -> str:
+        return "adaptiveavgpool2d"
+
+
+@dataclass(frozen=True)
+class Flatten:
+    @property
+    def kind(self) -> str:
+        return "flatten"
+
+
+@dataclass(frozen=True)
+class Dropout:
+    p: float = 0.5  # identity at inference; kept to preserve layer indices
+
+    @property
+    def kind(self) -> str:
+        return "dropout"
+
+
+@dataclass(frozen=True)
+class Linear:
+    """Fully-connected layer. torchvision applies ``torch.flatten`` (and for
+    MobileNetV2, global average pooling) *functionally* inside ``forward``,
+    so those ops are not separate modules and must not consume a layer
+    index. A Linear therefore accepts 4-D input directly: with
+    ``global_pool`` it mean-pools over H,W first (MobileNetV2), otherwise it
+    flattens C*H*W (AlexNet/VGG)."""
+
+    in_features: int
+    out_features: int
+    bias: bool = True
+    global_pool: bool = False
+
+    @property
+    def kind(self) -> str:
+        return "linear"
+
+
+@dataclass(frozen=True)
+class InvertedResidual:
+    """MobileNetV2 inverted-residual block (counted as ONE layer, matching
+    torchvision's ``features[i]`` granularity and the paper's 21-layer
+    count). expand (1x1) → depthwise (3x3) → project (1x1), residual add
+    when stride == 1 and in_ch == out_ch. BNs are folded."""
+
+    in_ch: int
+    out_ch: int
+    stride: int
+    expand_ratio: int
+
+    @property
+    def kind(self) -> str:
+        return "inverted_residual"
+
+    @property
+    def hidden_ch(self) -> int:
+        return self.in_ch * self.expand_ratio
+
+    @property
+    def use_residual(self) -> bool:
+        return self.stride == 1 and self.in_ch == self.out_ch
+
+
+LayerSpec = object  # union of the dataclasses above
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    layers: Tuple[LayerSpec, ...]
+    input_hw: int = 224
+    input_ch: int = 3
+    num_classes: int = 1000
+    # Published ImageNet top-1 accuracy (fraction). Used only for Fig. 10's
+    # accuracy axis — a literature constant in the paper as well.
+    top1_accuracy: float = 0.0
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+
+# ---------------------------------------------------------------------------
+# Shape / parameter / FLOPs inference
+# ---------------------------------------------------------------------------
+
+
+def conv_out_hw(h: int, kernel: int, stride: int, padding: int) -> int:
+    return (h + 2 * padding - kernel) // stride + 1
+
+
+def out_shape(layer: LayerSpec, in_shape: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Output shape for a single layer. Shapes are (N, C, H, W) for conv
+    stacks and (N, F) after Flatten."""
+    if isinstance(layer, Conv2d):
+        n, c, h, w = in_shape
+        assert c == layer.in_ch, f"conv expects C={layer.in_ch}, got {c}"
+        oh = conv_out_hw(h, layer.kernel, layer.stride, layer.padding)
+        ow = conv_out_hw(w, layer.kernel, layer.stride, layer.padding)
+        return (n, layer.out_ch, oh, ow)
+    if isinstance(layer, (ReLU, ReLU6, Dropout)):
+        return in_shape
+    if isinstance(layer, MaxPool2d):
+        n, c, h, w = in_shape
+        oh = conv_out_hw(h, layer.kernel, layer.stride, 0)
+        ow = conv_out_hw(w, layer.kernel, layer.stride, 0)
+        return (n, c, oh, ow)
+    if isinstance(layer, AdaptiveAvgPool2d):
+        n, c, _, _ = in_shape
+        return (n, c, layer.out_hw, layer.out_hw)
+    if isinstance(layer, Flatten):
+        n = in_shape[0]
+        return (n, int(math.prod(in_shape[1:])))
+    if isinstance(layer, Linear):
+        n = in_shape[0]
+        if len(in_shape) == 4 and layer.global_pool:
+            f = in_shape[1]  # mean over H,W then flatten
+        else:
+            f = int(math.prod(in_shape[1:]))  # implicit flatten
+        assert f == layer.in_features, f"linear expects F={layer.in_features}, got {f}"
+        return (n, layer.out_features)
+    if isinstance(layer, InvertedResidual):
+        n, c, h, w = in_shape
+        assert c == layer.in_ch
+        oh = conv_out_hw(h, 3, layer.stride, 1)
+        ow = conv_out_hw(w, 3, layer.stride, 1)
+        return (n, layer.out_ch, oh, ow)
+    raise TypeError(f"unknown layer spec {layer!r}")
+
+
+def param_count(layer: LayerSpec) -> int:
+    if isinstance(layer, Conv2d):
+        per_group_in = layer.in_ch // layer.groups
+        n = layer.out_ch * per_group_in * layer.kernel * layer.kernel
+        if layer.bias:
+            n += layer.out_ch
+        if layer.folded_bn:
+            n += 2 * layer.out_ch
+        return n
+    if isinstance(layer, Linear):
+        n = layer.in_features * layer.out_features
+        if layer.bias:
+            n += layer.out_features
+        return n
+    if isinstance(layer, InvertedResidual):
+        hid = layer.hidden_ch
+        n = 0
+        if layer.expand_ratio != 1:
+            n += layer.in_ch * hid + 2 * hid  # 1x1 expand + folded BN
+        n += hid * 9 + 2 * hid  # 3x3 depthwise + folded BN
+        n += hid * layer.out_ch + 2 * layer.out_ch  # 1x1 project + folded BN
+        return n
+    return 0
+
+
+def flop_count(layer: LayerSpec, in_shape: Tuple[int, ...]) -> int:
+    """Multiply-accumulate-based FLOPs (2 * MACs) for the layer."""
+    o = out_shape(layer, in_shape)
+    if isinstance(layer, Conv2d):
+        n, oc, oh, ow = o
+        per_group_in = layer.in_ch // layer.groups
+        macs = n * oc * oh * ow * per_group_in * layer.kernel * layer.kernel
+        return 2 * macs
+    if isinstance(layer, Linear):
+        n = in_shape[0]
+        flops = 2 * n * layer.in_features * layer.out_features
+        if len(in_shape) == 4 and layer.global_pool:
+            flops += int(math.prod(in_shape))  # global mean pool
+        return flops
+    if isinstance(layer, (ReLU, ReLU6)):
+        return int(math.prod(in_shape))
+    if isinstance(layer, MaxPool2d):
+        n, c, oh, ow = o
+        return n * c * oh * ow * layer.kernel * layer.kernel
+    if isinstance(layer, AdaptiveAvgPool2d):
+        return int(math.prod(in_shape))
+    if isinstance(layer, InvertedResidual):
+        n, c, h, w = in_shape
+        hid = layer.hidden_ch
+        _, oc, oh, ow = o
+        macs = 0
+        if layer.expand_ratio != 1:
+            macs += n * h * w * layer.in_ch * hid  # 1x1 expand
+        macs += n * oh * ow * hid * 9  # 3x3 depthwise
+        macs += n * oh * ow * hid * oc  # 1x1 project
+        flops = 2 * macs
+        if layer.use_residual:
+            flops += int(math.prod(o))
+        return flops
+    return 0
+
+
+@dataclass(frozen=True)
+class LayerInfo:
+    """Everything the rust side needs to know about one layer."""
+
+    index: int  # 1-based, matching the paper's split indices
+    kind: str
+    in_shape: Tuple[int, ...]
+    out_shape: Tuple[int, ...]
+    params: int
+    param_bytes: int
+    act_bytes: int  # output activation bytes == I|l when split after here
+    flops: int
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(model: ModelSpec, batch: int = 1) -> List[LayerInfo]:
+    """Walk the model, inferring shapes and derived quantities per layer."""
+    infos: List[LayerInfo] = []
+    shape: Tuple[int, ...] = (batch, model.input_ch, model.input_hw, model.input_hw)
+    for i, layer in enumerate(model.layers):
+        o = out_shape(layer, shape)
+        p = param_count(layer)
+        infos.append(
+            LayerInfo(
+                index=i + 1,
+                kind=layer.kind,
+                in_shape=shape,
+                out_shape=o,
+                params=p,
+                param_bytes=p * DTYPE_BYTES,
+                act_bytes=int(math.prod(o)) * DTYPE_BYTES,
+                flops=flop_count(layer, shape),
+            )
+        )
+        shape = o
+    return infos
+
+
+def client_memory_bytes(infos: Sequence[LayerInfo], l1: int) -> int:
+    """``M_client | l1`` — params + activations of layers 1..l1 (paper §III-B1,
+    ref [39])."""
+    return sum(i.param_bytes + i.act_bytes for i in infos[:l1])
+
+
+def intermediate_bytes(infos: Sequence[LayerInfo], l1: int) -> int:
+    """``I | l1`` — bytes shipped to the cloud when splitting after layer l1."""
+    return infos[l1 - 1].act_bytes
+
+
+def server_memory_bytes(infos: Sequence[LayerInfo], l1: int) -> int:
+    """``M_server | l2`` — params + activations of layers l1+1..L."""
+    return sum(i.param_bytes + i.act_bytes for i in infos[l1:])
+
+
+def total_params(model: ModelSpec) -> int:
+    return sum(param_count(l) for l in model.layers)

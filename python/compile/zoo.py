@@ -1,0 +1,149 @@
+"""The CNN zoo used by the paper: AlexNet (21 layers), VGG11 (29), VGG13
+(33), VGG16 (39) and MobileNetV2 (21).
+
+Layer sequences mirror torchvision's flattened
+``features → avgpool → classifier`` module lists exactly — that is the
+granularity at which the paper counts split indices. Dropout layers are
+inference-time identities but are kept so indices line up.
+
+Top-1 accuracies are the published torchvision ImageNet numbers; they feed
+only Fig. 10's accuracy axis (the paper likewise reports literature
+accuracy, not re-trained accuracy).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from .specs import (
+    AdaptiveAvgPool2d,
+    Conv2d,
+    Dropout,
+    Flatten,
+    InvertedResidual,
+    Linear,
+    MaxPool2d,
+    ModelSpec,
+    ReLU,
+    ReLU6,
+)
+
+
+def alexnet(num_classes: int = 1000) -> ModelSpec:
+    """AlexNet — 13 feature modules + avgpool + flatten-free classifier of 7
+    modules = 21 layers. (torchvision inserts the flatten as a functional
+    op, so the paper's count of 21 holds; we fold the flatten into the
+    first Linear's input and model avgpool as AdaptiveAvgPool2d(6).)"""
+    layers = (
+        Conv2d(3, 64, kernel=11, stride=4, padding=2),
+        ReLU(),
+        MaxPool2d(kernel=3, stride=2),
+        Conv2d(64, 192, kernel=5, padding=2),
+        ReLU(),
+        MaxPool2d(kernel=3, stride=2),
+        Conv2d(192, 384, kernel=3, padding=1),
+        ReLU(),
+        Conv2d(384, 256, kernel=3, padding=1),
+        ReLU(),
+        Conv2d(256, 256, kernel=3, padding=1),
+        ReLU(),
+        MaxPool2d(kernel=3, stride=2),
+        AdaptiveAvgPool2d(6),
+        Dropout(),
+        Linear(256 * 6 * 6, 4096),
+        ReLU(),
+        Dropout(),
+        Linear(4096, 4096),
+        ReLU(),
+        Linear(4096, num_classes),
+    )
+    return ModelSpec("alexnet", layers, top1_accuracy=0.5652)
+
+
+def _vgg(name: str, cfg: List, num_classes: int, top1: float) -> ModelSpec:
+    layers: List = []
+    in_ch = 3
+    for v in cfg:
+        if v == "M":
+            layers.append(MaxPool2d(kernel=2, stride=2))
+        else:
+            layers.append(Conv2d(in_ch, v, kernel=3, padding=1))
+            layers.append(ReLU())
+            in_ch = v
+    layers.append(AdaptiveAvgPool2d(7))
+    layers += [
+        Dropout(),
+        Linear(512 * 7 * 7, 4096),
+        ReLU(),
+        Dropout(),
+        Linear(4096, 4096),
+        ReLU(),
+        Linear(4096, num_classes),
+    ]
+    return ModelSpec(name, tuple(layers), top1_accuracy=top1)
+
+
+def vgg11(num_classes: int = 1000) -> ModelSpec:
+    """VGG11 — 21 feature modules + avgpool + 7 classifier modules = 29."""
+    cfg = [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"]
+    return _vgg("vgg11", cfg, num_classes, top1=0.6902)
+
+
+def vgg13(num_classes: int = 1000) -> ModelSpec:
+    """VGG13 — 25 feature modules + avgpool + 7 classifier modules = 33."""
+    cfg = [64, 64, "M", 128, 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"]
+    return _vgg("vgg13", cfg, num_classes, top1=0.6992)
+
+
+def vgg16(num_classes: int = 1000) -> ModelSpec:
+    """VGG16 — 31 feature modules + avgpool + 7 classifier modules = 39."""
+    cfg = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+           512, 512, 512, "M", 512, 512, 512, "M"]
+    return _vgg("vgg16", cfg, num_classes, top1=0.7159)
+
+
+def mobilenet_v2(num_classes: int = 1000) -> ModelSpec:
+    """MobileNetV2 — 19 feature blocks + avgpool-equivalent + classifier =
+    21 layers at torchvision ``features[i]`` granularity: stem conv,
+    17 inverted-residual blocks, head conv, then (pool+flatten folded)
+    dropout + linear."""
+    # (expand_ratio t, out channels c, repeats n, first stride s)
+    inverted_cfg = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ]
+    layers: List = [Conv2d(3, 32, kernel=3, stride=2, padding=1, bias=False, folded_bn=True)]
+    in_ch = 32
+    for t, c, n, s in inverted_cfg:
+        for i in range(n):
+            layers.append(InvertedResidual(in_ch, c, stride=s if i == 0 else 1, expand_ratio=t))
+            in_ch = c
+    layers.append(Conv2d(in_ch, 1280, kernel=1, bias=False, folded_bn=True))  # head
+    # torchvision applies global avg-pool + flatten functionally; they are
+    # not modules and don't consume layer indices (paper count: 21).
+    layers.append(Dropout(0.2))
+    layers.append(Linear(1280, num_classes, global_pool=True))
+    return ModelSpec("mobilenet_v2", tuple(layers), top1_accuracy=0.7188)
+
+
+ZOO = {
+    "alexnet": alexnet,
+    "vgg11": vgg11,
+    "vgg13": vgg13,
+    "vgg16": vgg16,
+    "mobilenet_v2": mobilenet_v2,
+}
+
+# Paper layer counts (§VI-A); each must equal ModelSpec.num_layers.
+PAPER_LAYERS = {
+    "alexnet": 21,
+    "vgg11": 29,
+    "vgg13": 33,
+    "vgg16": 39,
+    "mobilenet_v2": 21,
+}

@@ -1,0 +1,124 @@
+"""AOT pipeline: HLO text format, manifest contract, CLI arg parsing."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model as mdl, specs, zoo
+
+
+def test_parse_model_arg():
+    assert aot.parse_model_arg("vgg11") == ("vgg11", [1])
+    assert aot.parse_model_arg("alexnet:1,8") == ("alexnet", [1, 8])
+
+
+def test_to_hlo_text_smoke():
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((2, 2), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f32[2,2]" in text
+
+
+def test_lower_layer_entry_layout_has_weights_as_params():
+    """Weights must be HLO parameters (the manifest/runtime contract),
+    never giant text constants."""
+    layer = specs.Conv2d(3, 4, 3, padding=1)
+    p = mdl.init_layer_params(layer, np.random.RandomState(0))
+    text = aot.lower_layer(layer, (1, 3, 8, 8), p)
+    head = text.splitlines()[0]
+    # activation + w + b = 3 params in the entry layout
+    assert "f32[1,3,8,8]" in head and "f32[4,3,3,3]" in head and "f32[4]" in head
+    assert "->f32[1,4,8,8]" in head  # bare array return (buffer chaining)
+
+
+def test_lower_layer_bare_return_for_identity():
+    layer = specs.Dropout()
+    text = aot.lower_layer(layer, (1, 10), {})
+    assert "->f32[1,10]" in text.splitlines()[0]
+
+
+@pytest.fixture(scope="module")
+def tiny_artifacts(tmp_path_factory):
+    """A 4-layer toy model through the full artifact pipeline."""
+    out = tmp_path_factory.mktemp("artifacts")
+    model = specs.ModelSpec(
+        "tiny",
+        (
+            specs.Conv2d(3, 4, 3, stride=2, padding=1),
+            specs.ReLU(),
+            specs.MaxPool2d(2, 2),
+            specs.Linear(4 * 4 * 4, 7),
+        ),
+        input_hw=16,
+        top1_accuracy=0.5,
+    )
+    zoo.PAPER_LAYERS["tiny"] = 4
+    manifest = aot.build_model_artifacts(model, str(out), batches=(1, 2),
+                                         verbose=False)
+    return out, model, manifest
+
+
+def test_manifest_contents(tiny_artifacts):
+    out, model, manifest = tiny_artifacts
+    ondisk = json.load(open(out / "tiny" / "manifest.json"))
+    assert ondisk == manifest
+    assert manifest["num_layers"] == 4
+    assert manifest["batches"] == [1, 2]
+    ls = manifest["layers"]
+    assert [l["kind"] for l in ls] == ["conv2d", "relu", "maxpool2d", "linear"]
+    assert ls[0]["out_shape"] == [1, 4, 8, 8]
+    assert ls[2]["out_shape"] == [1, 4, 4, 4]
+    assert ls[3]["out_shape"] == [1, 7]
+    # act_bytes is the I|l1 contract
+    assert ls[0]["act_bytes"] == 4 * 8 * 8 * 4
+    # params: conv 4*3*3*3+4, linear 64*7+7
+    assert ls[0]["params"] == 112 and ls[3]["params"] == 455
+
+
+def test_artifact_files_exist_and_weights_roundtrip(tiny_artifacts):
+    out, model, manifest = tiny_artifacts
+    mdir = out / "tiny"
+    params = mdl.init_model_params(model, manifest["seed"])
+    for l in manifest["layers"]:
+        for b in ("1", "2"):
+            path = mdir / l["hlo"][b]
+            assert path.exists()
+            assert path.read_text().startswith("HloModule")
+        for wmeta, (name, arr) in zip(l["weights"],
+                                      mdl.flat_weights(model.layers[l["index"] - 1],
+                                                       params[l["index"] - 1])):
+            assert wmeta["name"] == name
+            data = np.fromfile(mdir / wmeta["file"], dtype="<f4")
+            np.testing.assert_array_equal(data.reshape(wmeta["shape"]), arr)
+
+
+def test_batch_variant_shapes(tiny_artifacts):
+    out, _, manifest = tiny_artifacts
+    text = (out / "tiny" / manifest["layers"][0]["hlo"]["2"]).read_text()
+    assert "f32[2,3,16,16]" in text.splitlines()[0]
+
+
+def test_real_manifests_on_disk_if_built():
+    """When `make artifacts` has run, validate the real manifests'
+    cross-layer consistency (shape chaining + paper layer counts)."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(root):
+        pytest.skip("artifacts not built")
+    for name, expect in zoo.PAPER_LAYERS.items():
+        if name == "tiny":
+            continue
+        mpath = os.path.join(root, name, "manifest.json")
+        if not os.path.exists(mpath):
+            continue
+        m = json.load(open(mpath))
+        assert m["num_layers"] == expect == m["paper_layers"]
+        ls = m["layers"]
+        for a, b in zip(ls, ls[1:]):
+            assert a["out_shape"] == b["in_shape"]
+        assert ls[-1]["out_shape"] == [1, m["num_classes"]]

@@ -1,0 +1,213 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes / strides / paddings / activations; every property
+asserts allclose against ``kernels.ref``.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+from compile.kernels import (
+    conv2d_pallas,
+    depthwise_conv_pallas,
+    matmul_pallas,
+    maxpool2d_pallas,
+    ref,
+    vmem_bytes,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rnd(rng, shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 90),
+    n=st.integers(1, 70),
+    bias=st.booleans(),
+    act=st.sampled_from([None, "relu", "relu6"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, bias, act, seed):
+    rng = np.random.RandomState(seed)
+    x, w = rnd(rng, (m, k)), rnd(rng, (k, n))
+    b = rnd(rng, (n,)) if bias else None
+    got = matmul_pallas(x, w, b, act)
+    want = ref.matmul_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 40), k=st.integers(1, 600), n=st.integers(1, 40),
+    tm=st.sampled_from([8, 16, 128]), tn=st.sampled_from([8, 16, 128]),
+    tk=st.sampled_from([8, 64, 512]),
+)
+def test_matmul_tile_shapes_dont_change_result(m, k, n, tm, tn, tk):
+    """Tiling is a pure schedule: any (tm, tn, tk) gives the same numbers."""
+    rng = np.random.RandomState(m * 1000 + k * 10 + n)
+    x, w = rnd(rng, (m, k)), rnd(rng, (k, n))
+    got = matmul_pallas(x, w, tm=tm, tn=tn, tk=tk)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_large_contraction():
+    """K ~ fc1-of-VGG scale accumulation stays accurate."""
+    rng = np.random.RandomState(0)
+    x, w = rnd(rng, (4, 2048)), rnd(rng, (2048, 64))
+    np.testing.assert_allclose(
+        matmul_pallas(x, w), ref.matmul_ref(x, w), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_vmem_budget():
+    """Default tiles fit well inside a 16 MiB VMEM with 2x double-buffering."""
+    assert 2 * vmem_bytes() < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# conv2d (im2col + matmul)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 3),
+    c=st.integers(1, 8),
+    oc=st.integers(1, 12),
+    hw=st.integers(5, 20),
+    kernel=st.sampled_from([1, 3, 5]),
+    stride=st.integers(1, 3),
+    padding=st.integers(0, 2),
+    bias=st.booleans(),
+    act=st.sampled_from([None, "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(n, c, oc, hw, kernel, stride, padding, bias, act, seed):
+    if hw + 2 * padding < kernel:
+        return
+    rng = np.random.RandomState(seed)
+    x = rnd(rng, (n, c, hw, hw))
+    w = rnd(rng, (oc, c, kernel, kernel))
+    b = rnd(rng, (oc,)) if bias else None
+    got = conv2d_pallas(x, w, b, stride, padding, act)
+    want = ref.conv2d_ref(x, w, b, stride, padding, act=act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_conv2d_folded_bn(seed):
+    rng = np.random.RandomState(seed)
+    x, w = rnd(rng, (2, 4, 10, 10)), rnd(rng, (6, 4, 3, 3))
+    s = rng.uniform(0.5, 1.5, (6,)).astype(np.float32)
+    sh = rnd(rng, (6,)) * 0.1
+    got = conv2d_pallas(x, w, None, 1, 1, "relu6", s, sh)
+    want = ref.conv2d_ref(x, w, None, 1, 1, act="relu6", bn_scale=s, bn_shift=sh)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_alexnet_first_layer_shape():
+    rng = np.random.RandomState(0)
+    x, w, b = rnd(rng, (1, 3, 224, 224)), rnd(rng, (64, 3, 11, 11)), rnd(rng, (64,))
+    got = conv2d_pallas(x, w, b, 4, 2)
+    assert got.shape == (1, 64, 55, 55)
+    np.testing.assert_allclose(
+        got, ref.conv2d_ref(x, w, b, 4, 2), rtol=1e-3, atol=1e-3
+    )
+
+
+# ---------------------------------------------------------------------------
+# depthwise conv
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    c=st.integers(1, 48),
+    hw=st.integers(4, 20),
+    stride=st.sampled_from([1, 2]),
+    act=st.sampled_from([None, "relu6"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_depthwise_matches_ref(c, hw, stride, act, seed):
+    rng = np.random.RandomState(seed)
+    x, w = rnd(rng, (1, c, hw, hw)), rnd(rng, (c, 1, 3, 3))
+    got = depthwise_conv_pallas(x, w, stride, 1, act)
+    want = ref.depthwise_conv_ref(x, w, stride, 1, act=act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_depthwise_folded_bn(seed):
+    rng = np.random.RandomState(seed)
+    x, w = rnd(rng, (1, 16, 9, 9)), rnd(rng, (16, 1, 3, 3))
+    s = rng.uniform(0.5, 1.5, (16,)).astype(np.float32)
+    sh = rnd(rng, (16,)) * 0.1
+    got = depthwise_conv_pallas(x, w, 1, 1, "relu6", s, sh)
+    want = ref.depthwise_conv_ref(x, w, 1, 1, act="relu6", bn_scale=s, bn_shift=sh)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# maxpool
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 3),
+    c=st.integers(1, 70),
+    hw=st.integers(4, 30),
+    kernel=st.sampled_from([2, 3]),
+    stride=st.sampled_from([1, 2, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_matches_ref(n, c, hw, kernel, stride, seed):
+    if hw < kernel:
+        return
+    rng = np.random.RandomState(seed)
+    x = rnd(rng, (n, c, hw, hw))
+    got = maxpool2d_pallas(x, kernel, stride)
+    want = ref.maxpool2d_ref(x, kernel, stride)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_maxpool_negative_inputs_not_clobbered_by_padding():
+    """Channel padding must not leak zeros into real channels' max."""
+    x = -np.ones((1, 5, 6, 6), np.float32)
+    got = maxpool2d_pallas(x, 2, 2, tc=4)  # forces channel padding
+    np.testing.assert_allclose(got, -np.ones((1, 5, 3, 3), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# adaptive avgpool oracle sanity (used directly by L2)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hw,out", [(6, 6), (7, 7), (13, 6), (55, 6), (7, 1)])
+def test_adaptive_avgpool_shapes(hw, out):
+    rng = np.random.RandomState(0)
+    x = rnd(rng, (1, 4, hw, hw))
+    y = ref.adaptive_avgpool2d_ref(x, out)
+    assert y.shape == (1, 4, out, out)
+    if hw == out:
+        np.testing.assert_allclose(y, x)
+
+
+def test_adaptive_avgpool_identity_mean():
+    x = np.ones((2, 3, 13, 13), np.float32) * 5.0
+    np.testing.assert_allclose(ref.adaptive_avgpool2d_ref(x, 6), np.full((2, 3, 6, 6), 5.0))

@@ -1,0 +1,149 @@
+"""Shape / parameter / memory algebra: inference in ``specs`` must match
+what jax actually computes, and the published parameter counts."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as mdl
+from compile import specs, zoo
+
+
+@pytest.mark.parametrize("name,layers", sorted(zoo.PAPER_LAYERS.items()))
+def test_paper_layer_counts(name, layers):
+    assert zoo.ZOO[name]().num_layers == layers
+
+
+# Published torchvision parameter counts.
+@pytest.mark.parametrize(
+    "name,params",
+    [
+        ("alexnet", 61_100_840),
+        ("vgg11", 132_863_336),
+        ("vgg13", 133_047_848),
+        ("vgg16", 138_357_544),
+    ],
+)
+def test_published_param_counts(name, params):
+    assert specs.total_params(zoo.ZOO[name]()) == params
+
+
+def test_mobilenet_param_count_close_to_published():
+    # Folded BN counts scale+shift (2/ch) where torch counts
+    # weight+bias+running stats; the trainable count is ~3.50M.
+    p = specs.total_params(zoo.mobilenet_v2())
+    assert abs(p - 3_504_872) / 3_504_872 < 0.01
+
+
+@pytest.mark.parametrize("name", sorted(zoo.ZOO))
+def test_shape_inference_matches_jax(name):
+    """analyze() shapes == actual jax forward shapes, layer by layer."""
+    model = zoo.ZOO[name]()
+    small = 224  # classifier in_features pin the input size
+    infos = specs.analyze(model, batch=1)
+    params = mdl.init_model_params(model, 0)
+    x = np.zeros((1, 3, small, small), np.float32)
+    for layer, p, info in zip(model.layers, params, infos):
+        ws = [a for _, a in mdl.flat_weights(layer, p)]
+        x = np.asarray(mdl.layer_fn(layer, "ref")(x, *ws))
+        assert x.shape == info.out_shape, f"{name} layer {info.index} {info.kind}"
+
+
+def test_client_memory_monotone_nondecreasing():
+    infos = specs.analyze(zoo.alexnet())
+    mems = [specs.client_memory_bytes(infos, l) for l in range(1, 22)]
+    assert all(b >= a for a, b in zip(mems, mems[1:]))
+    assert mems[0] > 0
+
+
+def test_client_plus_server_memory_is_total():
+    infos = specs.analyze(zoo.vgg11())
+    total = specs.client_memory_bytes(infos, len(infos))
+    for l1 in range(1, len(infos) + 1):
+        assert (
+            specs.client_memory_bytes(infos, l1) + specs.server_memory_bytes(infos, l1)
+            == total
+        )
+
+
+def test_intermediate_bytes_alexnet():
+    infos = specs.analyze(zoo.alexnet())
+    # layer 1 output: (1, 64, 55, 55) f32
+    assert specs.intermediate_bytes(infos, 1) == 64 * 55 * 55 * 4
+    # final output: 1000 logits
+    assert specs.intermediate_bytes(infos, 21) == 1000 * 4
+
+
+def test_relu_dropout_zero_params():
+    for layer in (specs.ReLU(), specs.ReLU6(), specs.Dropout(), specs.MaxPool2d(2, 2)):
+        assert specs.param_count(layer) == 0
+
+
+def test_conv_out_hw_formula():
+    assert specs.conv_out_hw(224, 11, 4, 2) == 55  # AlexNet conv1
+    assert specs.conv_out_hw(224, 3, 1, 1) == 224  # VGG conv
+    assert specs.conv_out_hw(224, 3, 2, 1) == 112  # MobileNet stem
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    h=st.integers(1, 300),
+    k=st.integers(1, 11),
+    s=st.integers(1, 4),
+    p=st.integers(0, 5),
+)
+def test_conv_out_hw_matches_definition(h, k, s, p):
+    if h + 2 * p < k:
+        return
+    expected = len(range(0, h + 2 * p - k + 1, s))
+    assert specs.conv_out_hw(h, k, s, p) == expected
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    inc=st.integers(1, 32),
+    outc=st.integers(1, 32),
+    k=st.sampled_from([1, 3, 5]),
+    bias=st.booleans(),
+)
+def test_conv_param_count_matches_array_sizes(inc, outc, k, bias):
+    layer = specs.Conv2d(inc, outc, k, bias=bias)
+    p = mdl.init_layer_params(layer, np.random.RandomState(0))
+    assert specs.param_count(layer) == sum(a.size for a in p.values())
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    inc=st.sampled_from([16, 24, 32]),
+    outc=st.sampled_from([16, 24, 32]),
+    stride=st.sampled_from([1, 2]),
+    t=st.sampled_from([1, 6]),
+)
+def test_inverted_residual_param_count_matches_arrays(inc, outc, stride, t):
+    layer = specs.InvertedResidual(inc, outc, stride, t)
+    p = mdl.init_layer_params(layer, np.random.RandomState(0))
+    assert specs.param_count(layer) == sum(a.size for a in p.values())
+
+
+def test_flops_alexnet_total_magnitude():
+    """AlexNet forward ~0.71 GMACs => ~1.4 GFLOPs at batch 1."""
+    infos = specs.analyze(zoo.alexnet())
+    total = sum(i.flops for i in infos)
+    assert 1.3e9 < total < 1.7e9
+
+
+def test_flops_vgg16_total_magnitude():
+    """VGG16 forward ~15.5 GMACs => ~31 GFLOPs at batch 1."""
+    infos = specs.analyze(zoo.vgg16())
+    total = sum(i.flops for i in infos)
+    assert 29e9 < total < 33e9
+
+
+def test_flops_scale_linearly_with_batch():
+    i1 = specs.analyze(zoo.alexnet(), batch=1)
+    i8 = specs.analyze(zoo.alexnet(), batch=8)
+    conv_idx = [k for k, i in enumerate(i1) if i.kind in ("conv2d", "linear")]
+    for k in conv_idx:
+        assert i8[k].flops == 8 * i1[k].flops

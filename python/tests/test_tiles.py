@@ -1,0 +1,74 @@
+"""Tile-picker invariants (§Perf L1): both profiles must produce legal,
+budget-respecting schedules for every layer shape in the zoo."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import (
+    CPU_BUDGET_WORDS,
+    VMEM_BUDGET_WORDS,
+    get_tile_profile,
+    pick_tiles,
+    set_tile_profile,
+)
+from compile import specs, zoo
+
+
+@settings(max_examples=60, deadline=None)
+@given(m=st.integers(1, 5000), k=st.integers(1, 30000), n=st.integers(1, 60000))
+def test_tpu_profile_respects_vmem_budget(m, k, n):
+    tm, tn, tk = pick_tiles(m, k, n, "tpu")
+    words = tm * tk + tk * tn + tm * tn
+    # Budget may be exceeded only when the MINIMUM legal tile (K streamed at
+    # the floor TK) already exceeds it — never by the picker's choice of a
+    # larger TK.
+    floor_words = tm * 512 + 512 * tn + tm * tn
+    assert words <= max(VMEM_BUDGET_WORDS, floor_words) + 8 * (tm + tn)
+    for t in (tm, tn, tk):
+        assert t % 8 == 0 or t == min(t, 8)
+    assert tm >= min(m, 8) and tk >= min(k, 8)
+
+
+@settings(max_examples=60, deadline=None)
+@given(m=st.integers(1, 512), k=st.integers(1, 30000), n=st.integers(1, 600000))
+def test_cpu_profile_minimises_grid_steps(m, k, n):
+    tm, tn, tk = pick_tiles(m, k, n, "cpu")
+    # Full M and K in one block (the interpret-mode cost model).
+    assert tm >= m and tk >= k
+    words = tm * tk + tk * tn + tm * tn
+    small = tm * tk + (tk + tm) * 128
+    assert words <= max(CPU_BUDGET_WORDS + 8 * (tk + tm), small)
+
+
+def test_profile_toggle_roundtrip():
+    old = get_tile_profile()
+    try:
+        set_tile_profile("tpu")
+        assert get_tile_profile() == "tpu"
+        assert pick_tiles(1, 9216, 4096) == pick_tiles(1, 9216, 4096, "tpu")
+        set_tile_profile("cpu")
+        assert pick_tiles(1, 9216, 4096)[2] >= 9216
+    finally:
+        set_tile_profile(old)
+    with pytest.raises(AssertionError):
+        set_tile_profile("gpu")
+
+
+def test_zoo_matmul_shapes_few_steps_under_cpu_profile():
+    """Every linear layer in the zoo runs in at most TWO grid steps at
+    batch<=8 under the cpu profile (the §Perf fc1 fix, 32.4 s → ms);
+    AlexNet's fc layers — the measured pathology — in exactly one.
+    (VGG's 25088x4096 fc1 needs two N-tiles to stay under the 256 MiB
+    working-set budget.)"""
+    for name, f in zoo.ZOO.items():
+        model = f()
+        for layer in model.layers:
+            if isinstance(layer, specs.Linear):
+                for b in (1, 8):
+                    tm, tn, tk = pick_tiles(b, layer.in_features, layer.out_features, "cpu")
+                    steps = (
+                        -(-b // tm) * -(-layer.out_features // tn) * -(-layer.in_features // tk)
+                    )
+                    assert steps <= 2, (name, layer, steps)
+                    if name == "alexnet":
+                        assert steps == 1, (layer, steps)

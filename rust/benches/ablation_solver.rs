@@ -1,0 +1,105 @@
+//! Ablation: is NSGA-II + TOPSIS actually necessary on a ≤38-point split
+//! domain? (A DESIGN.md §6 design-choice check the paper does not run.)
+//!
+//! We compare SmartSplit's front against brute-force enumeration of every
+//! split (the ground truth — feasible only because the domain is tiny) and
+//! against the weighted-sum scalarisation the paper argues against (§V-A).
+//! Expected: NSGA-II recovers the exact true front; weighted-sum misses
+//! non-convex front members and is sensitive to its weights; the GA costs
+//! milliseconds, so the generality is free.
+
+use smartsplit::bench::{Bench, Table};
+use smartsplit::device::profiles;
+use smartsplit::figures::{perf_model, MODELS};
+use smartsplit::models::zoo;
+use smartsplit::optimizer::{
+    epsilon_constrained, exhaustive_pareto_front as true_front, smartsplit, topsis,
+    weighted_metric, weighted_sum, Nsga2Params,
+};
+
+fn main() -> anyhow::Result<()> {
+    let params = Nsga2Params::default();
+    println!("== ablation: NSGA-II front vs exhaustive ground truth ==");
+    let mut t = Table::new(&["model", "true front", "NSGA-II front", "exact", "TOPSIS(true)", "TOPSIS(GA)"]);
+    for model in MODELS {
+        let profile = zoo::by_name(model).unwrap().analyze(1);
+        let pm = perf_model(&profile, profiles::samsung_j6(), 10.0);
+        let truth = true_front(&pm);
+        let ga = smartsplit(&pm, &params);
+        let ga_front: Vec<usize> = ga.pareto.iter().map(|(l1, _)| *l1).collect();
+        // TOPSIS over the true front for reference.
+        let rows: Vec<Vec<f64>> = truth.iter().map(|&i| pm.objectives(i).to_vec()).collect();
+        let feas = vec![true; rows.len()];
+        let t_true = truth[topsis(&rows, &feas).unwrap().chosen];
+        t.row(&[
+            model.into(),
+            format!("{truth:?}"),
+            format!("{ga_front:?}"),
+            (truth == ga_front).to_string(),
+            t_true.to_string(),
+            ga.decision.l1.to_string(),
+        ]);
+        assert_eq!(truth, ga_front, "{model}: GA missed the true front");
+        assert_eq!(t_true, ga.decision.l1, "{model}: decisions diverge");
+    }
+    t.print();
+
+    println!("\n== ablation: weighted-sum sensitivity (the paper's §V-A argument) ==");
+    let profile = zoo::vgg16().analyze(1);
+    let pm = perf_model(&profile, profiles::samsung_j6(), 10.0);
+    let mut t = Table::new(&["weights (f1,f2,f3)", "chosen l1"]);
+    let mut choices = std::collections::BTreeSet::new();
+    for w in [
+        [1.0, 1.0, 1.0],
+        [2.0, 1.0, 1.0],
+        [1.0, 2.0, 1.0],
+        [1.0, 1.0, 2.0],
+        [4.0, 1.0, 1.0],
+        [1.0, 4.0, 1.0],
+    ] {
+        let l1 = weighted_sum(&pm, w).unwrap();
+        choices.insert(l1);
+        t.row(&[format!("{w:?}"), l1.to_string()]);
+    }
+    t.print();
+    println!(
+        "weighted-sum gave {} different answers across 6 weightings; \
+         SmartSplit needs no weights.",
+        choices.len()
+    );
+
+    println!("\n== ablation: weighted-metric (p=2) and ε-constrained (§V-A kin) ==");
+    let mut t = Table::new(&["method", "setting", "chosen l1"]);
+    for (p, w) in [(2.0, [1.0, 1.0, 1.0]), (2.0, [1.0, 2.0, 1.0]), (8.0, [1.0, 1.0, 1.0])] {
+        t.row(&[
+            "weighted-metric".into(),
+            format!("p={p} w={w:?}"),
+            weighted_metric(&pm, w, p).unwrap().to_string(),
+        ]);
+    }
+    for eps in [[1.0, 0.5, 0.5], [1.0, 0.2, 0.2], [1.0, 0.05, 0.05]] {
+        t.row(&[
+            "ε-constrained (min f1)".into(),
+            format!("ε={eps:?}"),
+            match epsilon_constrained(&pm, 0, eps) {
+                Some(l1) => l1.to_string(),
+                None => "infeasible ε-box".into(),
+            },
+        ]);
+    }
+    t.print();
+
+    println!("\n== ablation: solver cost (GA generality is ~free) ==");
+    let profile = zoo::vgg16().analyze(1);
+    let pm = perf_model(&profile, profiles::samsung_j6(), 10.0);
+    Bench::new("exhaustive front + TOPSIS (38 points)").iters(50).run(|| {
+        let truth = true_front(&pm);
+        let rows: Vec<Vec<f64>> = truth.iter().map(|&i| pm.objectives(i).to_vec()).collect();
+        let feas = vec![true; rows.len()];
+        smartsplit::bench::black_box(topsis(&rows, &feas).unwrap());
+    });
+    Bench::new("NSGA-II pop=100 gens=250 + TOPSIS").iters(10).run(|| {
+        smartsplit::bench::black_box(smartsplit(&pm, &params));
+    });
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Fig. 1 / Fig. 2 — latency vs CNN split index, four models × two phones.
+//!
+//! Paper shape: Upload Latency is the primary contributor to total latency;
+//! Client Latency grows with the split index; Cloud Server Latency varies
+//! little. Regenerate with `cargo bench --bench fig1_2_latency_sweep`.
+
+use std::collections::BTreeMap;
+
+use smartsplit::bench::Table;
+use smartsplit::device::profiles;
+use smartsplit::figures::{dump_json, latency_sweep, series_json, MODELS};
+
+fn main() -> anyhow::Result<()> {
+    let bandwidth = 10.0;
+    for (fig, phone) in [("fig1", profiles::samsung_j6()), ("fig2", profiles::redmi_note8())] {
+        println!("\n== {} — latency vs split index on {} (B = {bandwidth} Mbps) ==",
+                 if fig == "fig1" { "Figure 1" } else { "Figure 2" }, phone.name);
+        let mut series = BTreeMap::new();
+        for model in MODELS {
+            let sweep = latency_sweep(model, phone, bandwidth)?;
+            let mut t = Table::new(&["l1", "client (s)", "upload (s)", "server (s)", "total (s)"]);
+            for (l1, b) in &sweep {
+                t.row(&[
+                    l1.to_string(),
+                    format!("{:.4}", b.client_s),
+                    format!("{:.4}", b.upload_s),
+                    format!("{:.4}", b.server_s),
+                    format!("{:.4}", b.total()),
+                ]);
+            }
+            println!("\n-- {model} --");
+            t.print();
+            type Get = fn(&smartsplit::perfmodel::LatencyBreakdown) -> f64;
+            for (key, f) in [
+                ("client", (|b: &smartsplit::perfmodel::LatencyBreakdown| b.client_s) as Get),
+                ("upload", |b: &smartsplit::perfmodel::LatencyBreakdown| b.upload_s),
+                ("server", |b: &smartsplit::perfmodel::LatencyBreakdown| b.server_s),
+                ("total", |b: &smartsplit::perfmodel::LatencyBreakdown| b.total()),
+            ] {
+                series.insert(
+                    format!("{model}/{key}"),
+                    sweep.iter().map(|(l1, b)| (*l1 as f64, f(b))).collect(),
+                );
+            }
+        }
+        let path = dump_json(fig, &series_json(&series))?;
+        println!("\nwrote {}", path.display());
+    }
+    Ok(())
+}

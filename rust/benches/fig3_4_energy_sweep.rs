@@ -1,0 +1,50 @@
+//! Fig. 3 / Fig. 4 — energy consumption vs CNN split index, two phones.
+//!
+//! Paper shape: upload energy dominates on Samsung J6 (802.11 b/g/n radio);
+//! client energy dominates on Redmi Note 8 (802.11 ac); download energy is
+//! negligible everywhere.
+
+use std::collections::BTreeMap;
+
+use smartsplit::bench::Table;
+use smartsplit::device::profiles;
+use smartsplit::figures::{dump_json, energy_sweep, series_json, MODELS};
+
+fn main() -> anyhow::Result<()> {
+    let bandwidth = 10.0;
+    for (fig, phone) in [("fig3", profiles::samsung_j6()), ("fig4", profiles::redmi_note8())] {
+        println!("\n== {} — energy vs split index on {} (B = {bandwidth} Mbps) ==",
+                 if fig == "fig3" { "Figure 3" } else { "Figure 4" }, phone.name);
+        let mut series = BTreeMap::new();
+        for model in MODELS {
+            let sweep = energy_sweep(model, phone, bandwidth)?;
+            let mut t = Table::new(&["l1", "client (J)", "upload (J)", "download (J)", "total (J)"]);
+            for (l1, e) in &sweep {
+                t.row(&[
+                    l1.to_string(),
+                    format!("{:.4}", e.client_j),
+                    format!("{:.4}", e.upload_j),
+                    format!("{:.5}", e.download_j),
+                    format!("{:.4}", e.total()),
+                ]);
+            }
+            println!("\n-- {model} --");
+            t.print();
+            type Get = fn(&smartsplit::perfmodel::EnergyBreakdown) -> f64;
+            for (key, f) in [
+                ("client", (|e: &smartsplit::perfmodel::EnergyBreakdown| e.client_j) as Get),
+                ("upload", |e: &smartsplit::perfmodel::EnergyBreakdown| e.upload_j),
+                ("download", |e: &smartsplit::perfmodel::EnergyBreakdown| e.download_j),
+                ("total", |e: &smartsplit::perfmodel::EnergyBreakdown| e.total()),
+            ] {
+                series.insert(
+                    format!("{model}/{key}"),
+                    sweep.iter().map(|(l1, e)| (*l1 as f64, f(e))).collect(),
+                );
+            }
+        }
+        let path = dump_json(fig, &series_json(&series))?;
+        println!("\nwrote {}", path.display());
+    }
+    Ok(())
+}

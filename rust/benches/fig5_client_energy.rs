@@ -1,0 +1,33 @@
+//! Fig. 5 — client energy consumption, Samsung J6 vs Redmi Note 8.
+//!
+//! Paper shape: "the client energy consumption remains almost similar for
+//! both the devices" (the radio, not the SoC, differentiates them).
+
+use std::collections::BTreeMap;
+
+use smartsplit::bench::Table;
+use smartsplit::figures::{client_energy_compare, dump_json, series_json, MODELS};
+
+fn main() -> anyhow::Result<()> {
+    println!("== Figure 5 — client energy: Samsung J6 vs Redmi Note 8 ==");
+    let mut series = BTreeMap::new();
+    for model in MODELS {
+        let rows = client_energy_compare(model, 10.0)?;
+        let mut t = Table::new(&["l1", "J6 client (J)", "Redmi client (J)", "ratio"]);
+        for (l1, j6, redmi) in &rows {
+            t.row(&[
+                l1.to_string(),
+                format!("{j6:.4}"),
+                format!("{redmi:.4}"),
+                format!("{:.3}", redmi / j6.max(1e-12)),
+            ]);
+        }
+        println!("\n-- {model} --");
+        t.print();
+        series.insert(format!("{model}/j6"), rows.iter().map(|(l, a, _)| (*l as f64, *a)).collect());
+        series.insert(format!("{model}/redmi"), rows.iter().map(|(l, _, b)| (*l as f64, *b)).collect());
+    }
+    let path = dump_json("fig5", &series_json(&series))?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

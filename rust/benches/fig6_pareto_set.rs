@@ -1,0 +1,52 @@
+//! Fig. 6 — normalised latency / energy / memory of every Pareto-set
+//! member produced by NSGA-II, per model.
+
+use std::collections::BTreeMap;
+
+use smartsplit::bench::{Bench, Table};
+use smartsplit::device::profiles;
+use smartsplit::figures::{dump_json, normalise_columns, pareto_and_choice, series_json, MODELS};
+use smartsplit::optimizer::Nsga2Params;
+
+fn main() -> anyhow::Result<()> {
+    println!("== Figure 6 — Pareto sets from NSGA-II (pop=100, gens=250) ==");
+    let params = Nsga2Params::default();
+    let mut series = BTreeMap::new();
+    for model in MODELS {
+        let r = pareto_and_choice(model, profiles::samsung_j6(), 10.0, &params)?;
+        let raw: Vec<[f64; 3]> = r.pareto.iter().map(|(_, o)| *o).collect();
+        let norm = normalise_columns(&raw);
+        let mut t = Table::new(&["l1", "norm latency", "norm energy", "norm memory"]);
+        for ((l1, _), n) in r.pareto.iter().zip(&norm) {
+            t.row(&[
+                l1.to_string(),
+                format!("{:.3}", n[0]),
+                format!("{:.3}", n[1]),
+                format!("{:.3}", n[2]),
+            ]);
+        }
+        println!("\n-- {model} ({} Pareto members, {} evals) --",
+                 r.pareto.len(), r.evaluations);
+        t.print();
+        for (j, key) in ["latency", "energy", "memory"].iter().enumerate() {
+            series.insert(
+                format!("{model}/{key}"),
+                r.pareto
+                    .iter()
+                    .zip(&norm)
+                    .map(|((l1, _), n)| (*l1 as f64, n[j]))
+                    .collect(),
+            );
+        }
+    }
+    let path = dump_json("fig6", &series_json(&series))?;
+    println!("\nwrote {}", path.display());
+
+    // NSGA-II wall-time (the optimiser must be cheap enough to re-run on
+    // every bandwidth change — §Perf L3).
+    println!("\nsolver cost:");
+    Bench::new("nsga2 alexnet pop=100 gens=250").iters(5).run(|| {
+        let _ = pareto_and_choice("alexnet", profiles::samsung_j6(), 10.0, &params).unwrap();
+    });
+    Ok(())
+}

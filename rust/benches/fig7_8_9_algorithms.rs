@@ -1,0 +1,53 @@
+//! Figs. 7 / 8 / 9 — latency, energy and memory achieved by the six
+//! competing algorithms on the four CNNs (100 runs, averaged — only RS
+//! varies across runs).
+//!
+//! Paper shape: COC minimises latency+energy with zero device memory but
+//! defeats on-device AI; COS maximises energy+memory; EBO low energy, high
+//! latency; LBO closest to SmartSplit; SmartSplit beats LBO on energy and
+//! memory at comparable latency.
+
+use std::collections::BTreeMap;
+
+use smartsplit::bench::Table;
+use smartsplit::device::profiles;
+use smartsplit::figures::{algorithm_comparison, dump_json, series_json, MODELS};
+use smartsplit::optimizer::{Algorithm, Nsga2Params};
+
+fn main() -> anyhow::Result<()> {
+    let params = Nsga2Params::default();
+    let cells = algorithm_comparison(profiles::samsung_j6(), 10.0, &params, 100, 7)?;
+
+    for (fig, title, unit, get) in [
+        ("fig7", "Figure 7 — latency", "s", 0usize),
+        ("fig8", "Figure 8 — energy", "J", 1),
+        ("fig9", "Figure 9 — memory", "MB", 2),
+    ] {
+        println!("\n== {title} by algorithm ({unit}) ==");
+        let mut t = Table::new(&["algorithm", "alexnet", "vgg11", "vgg13", "vgg16"]);
+        let mut series = BTreeMap::new();
+        for algo in Algorithm::ALL {
+            let mut row = vec![algo.name().to_string()];
+            let mut pts = Vec::new();
+            for (i, model) in MODELS.iter().enumerate() {
+                let c = cells
+                    .iter()
+                    .find(|c| c.model == *model && c.algorithm == algo)
+                    .unwrap();
+                let v = match get {
+                    0 => c.latency_s,
+                    1 => c.energy_j,
+                    _ => c.memory_bytes / 1e6,
+                };
+                row.push(format!("{v:.3}"));
+                pts.push((i as f64, v));
+            }
+            series.insert(algo.name().to_string(), pts);
+            t.row(&row);
+        }
+        t.print();
+        let path = dump_json(fig, &series_json(&series))?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! §Perf hot-path benchmarks: the numbers EXPERIMENTS.md §Perf records.
+//!
+//! L1  — per-layer PJRT execution time of the AOT artifacts (the pallas
+//!       interpret-lowered kernels), including the fc layers whose tiling
+//!       was the big §Perf win (32.4 s → ~30 ms).
+//! L3  — optimiser cost (NSGA-II+TOPSIS must be re-runnable per bandwidth
+//!       change), protocol framing throughput, router dispatch overhead,
+//!       and end-to-end single-request serving time at several splits.
+//!
+//! Skips the artifact-dependent sections when `artifacts/` is absent.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use smartsplit::bench::{black_box, Bench};
+use smartsplit::coordinator::{Config, Deployment};
+use smartsplit::device::profiles;
+use smartsplit::figures::perf_model;
+use smartsplit::models::zoo;
+use smartsplit::optimizer::{smartsplit, Nsga2Params, SplitDecision};
+use smartsplit::runtime::{ModelRuntime, Tensor};
+use smartsplit::serve::{write_msg, Msg};
+use smartsplit::workload::{generate, synth_images, Arrival};
+
+fn main() -> anyhow::Result<()> {
+    println!("== §Perf L3: optimiser (must be cheap enough to re-run per bandwidth change) ==");
+    let profile = zoo::vgg16().analyze(1);
+    let pm = perf_model(&profile, profiles::samsung_j6(), 10.0);
+    Bench::new("smartsplit vgg16 pop=100 gens=250").iters(10).run(|| {
+        black_box(smartsplit(&pm, &Nsga2Params::default()));
+    });
+    Bench::new("smartsplit vgg16 pop=40 gens=40 (adaptive loop setting)")
+        .iters(30)
+        .run(|| {
+            black_box(smartsplit(
+                &pm,
+                &Nsga2Params { pop_size: 40, generations: 40, ..Default::default() },
+            ));
+        });
+
+    println!("\n== §Perf L3: protocol framing ==");
+    let act = Tensor::new(vec![1, 64, 27, 27], synth_images(1, 64, 27, 0)[..64 * 27 * 27].to_vec())?;
+    let mut sink = Vec::with_capacity(1 << 20);
+    Bench::new("frame 186k-float activation (write_msg)").iters(200).run(|| {
+        sink.clear();
+        write_msg(&mut sink, &Msg::Infer { request_id: 1, from_layer: 4, tensor: act.clone() })
+            .unwrap();
+        black_box(sink.len());
+    });
+
+    if !Path::new("artifacts/alexnet/manifest.json").exists() {
+        println!("\n(artifacts not built — skipping L1/E2E sections)");
+        return Ok(());
+    }
+
+    println!("\n== §Perf L1: per-layer artifact execution (alexnet b1) ==");
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rt = ModelRuntime::load(&client, Path::new("artifacts"), "alexnet", 1)?;
+    let img = Tensor::new(vec![1, 3, 224, 224], synth_images(1, 3, 224, 7))?;
+    Bench::new("alexnet full forward (21 layers, buffer-chained)")
+        .iters(20)
+        .run(|| {
+            black_box(rt.run_all(&client, &img).unwrap());
+        });
+    let head = rt.run_segment(&client, 1, 15, &img)?;
+    Bench::new("alexnet fc1 (layer 16, 9216x4096)").iters(20).run(|| {
+        black_box(rt.layer(16).execute(&client, &head).unwrap());
+    });
+    Bench::new("alexnet conv1 (layer 1)").iters(20).run(|| {
+        black_box(rt.layer(1).execute(&client, &img).unwrap());
+    });
+
+    println!("\n== §Perf E2E: split serving, single request (no slowdown, 200 Mbps) ==");
+    for l1 in [0usize, 3, 13, 21] {
+        let cfg = Config {
+            model: "alexnet".into(),
+            bandwidth_mbps: 200.0,
+            emulate_slowdown: false,
+            ..Config::default()
+        };
+        let dep = Deployment::start_with_split(cfg, SplitDecision { l1 })?;
+        let reqs = generate(3, Arrival::ClosedLoop, 1);
+        let _ = dep.serve(&reqs)?; // warm
+        let stats = Bench::new(&format!("serve 4 requests @ l1={l1}"))
+            .warmup(0)
+            .iters(4)
+            .run(|| {
+                let reqs = generate(4, Arrival::ClosedLoop, 2);
+                black_box(dep.serve(&reqs).unwrap());
+            });
+        let _ = stats;
+        dep.shutdown();
+    }
+
+    println!("\n== §Perf L3: dynamic batching ablation (b8 artifacts) ==");
+    for (batch, max_batch) in [(1usize, 1usize), (8, 8)] {
+        let cfg = Config {
+            model: "alexnet".into(),
+            batch,
+            bandwidth_mbps: 200.0,
+            emulate_slowdown: false,
+            router: smartsplit::serve::RouterConfig {
+                max_batch,
+                max_wait: Duration::from_millis(40),
+            },
+            ..Config::default()
+        };
+        let dep = Deployment::start_with_split(cfg, SplitDecision { l1: 3 })?;
+        let reqs = generate(16, Arrival::ClosedLoop, 3);
+        let report = dep.serve(&reqs)?;
+        println!(
+            "  hw_batch={batch} max_batch={max_batch}: {} req in {:?} → {:.2} req/s (mean latency {})",
+            report.completed, report.elapsed, report.throughput_rps,
+            smartsplit::util::fmt_secs(report.latency.mean_s())
+        );
+        dep.shutdown();
+    }
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Table I — TOPSIS-chosen split per model; Table II — splits chosen by
+//! every competing algorithm. Paper values printed alongside for the
+//! paper-vs-ours comparison recorded in EXPERIMENTS.md.
+
+use smartsplit::bench::Table;
+use smartsplit::device::profiles;
+use smartsplit::figures::{algorithm_comparison, dump_json, pareto_and_choice, MODELS};
+use smartsplit::optimizer::{Algorithm, Nsga2Params};
+use smartsplit::util::json::Json;
+
+const PAPER_TABLE1: [(&str, usize); 4] =
+    [("alexnet", 3), ("vgg11", 11), ("vgg13", 10), ("vgg16", 10)];
+const PAPER_TABLE2_LBO: [(&str, usize); 4] =
+    [("alexnet", 3), ("vgg11", 21), ("vgg13", 20), ("vgg16", 25)];
+const PAPER_TABLE2_EBO: [(&str, usize); 4] =
+    [("alexnet", 6), ("vgg11", 11), ("vgg13", 15), ("vgg16", 17)];
+
+fn main() -> anyhow::Result<()> {
+    let params = Nsga2Params::default();
+    println!("== Table I — optimal smartphone layers after TOPSIS ==");
+    let mut t1 = Table::new(&["model", "ours l1", "paper l1"]);
+    let mut j1 = Vec::new();
+    for (model, paper) in PAPER_TABLE1 {
+        let r = pareto_and_choice(model, profiles::samsung_j6(), 10.0, &params)?;
+        t1.row(&[model.into(), r.decision.l1.to_string(), paper.to_string()]);
+        j1.push((model, r.decision.l1, paper));
+    }
+    t1.print();
+
+    println!("\n== Table II — smartphone layers per competing algorithm ==");
+    let cells = algorithm_comparison(profiles::samsung_j6(), 10.0, &params, 100, 7)?;
+    let mut t2 = Table::new(&["algorithm", "alexnet", "vgg11", "vgg13", "vgg16", "paper row"]);
+    for algo in Algorithm::ALL {
+        let mut row = vec![algo.name().to_string()];
+        for model in MODELS {
+            let c = cells
+                .iter()
+                .find(|c| c.model == model && c.algorithm == algo)
+                .unwrap();
+            row.push(if algo == Algorithm::Rs {
+                format!("{:.1}", c.mean_l1)
+            } else {
+                format!("{:.0}", c.mean_l1)
+            });
+        }
+        row.push(match algo {
+            Algorithm::SmartSplit => "3 / 11 / 10 / 10".into(),
+            Algorithm::Lbo => "3 / 21 / 20 / 25".into(),
+            Algorithm::Ebo => "6 / 11 / 15 / 17".into(),
+            Algorithm::Cos => "21 / 29 / 33 / 39".into(),
+            Algorithm::Coc => "0 (all cloud)".into(),
+            Algorithm::Rs => "random".into(),
+        });
+        t2.row(&row);
+    }
+    t2.print();
+    let _ = PAPER_TABLE2_LBO;
+    let _ = PAPER_TABLE2_EBO;
+
+    let json = Json::Arr(
+        j1.into_iter()
+            .map(|(m, ours, paper)| {
+                Json::obj(vec![
+                    ("model", Json::str(m)),
+                    ("ours", Json::Num(ours as f64)),
+                    ("paper", Json::Num(paper as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let path = dump_json("table1", &json)?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,213 @@
+//! Benchmark harness substrate (`criterion` is unavailable offline —
+//! DESIGN.md §4). Drives every `cargo bench` target: warmup, fixed-count
+//! or time-budgeted measurement, robust stats, and aligned table output
+//! for the paper-figure emitters.
+
+use std::time::{Duration, Instant};
+
+/// Measurement statistics over the recorded iteration times.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub n: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub max_s: f64,
+}
+
+impl Stats {
+    pub fn from_samples(name: &str, mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+        let q = |p: f64| samples[(p * (n - 1) as f64).round() as usize];
+        Stats {
+            name: name.to_string(),
+            n,
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: samples[0],
+            p50_s: q(0.50),
+            p95_s: q(0.95),
+            max_s: samples[n - 1],
+        }
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<42} n={:<5} mean={:>10} ±{:>9} p50={:>10} p95={:>10}",
+            self.name,
+            self.n,
+            crate::util::fmt_secs(self.mean_s),
+            crate::util::fmt_secs(self.std_s),
+            crate::util::fmt_secs(self.p50_s),
+            crate::util::fmt_secs(self.p95_s),
+        )
+    }
+}
+
+/// Harness: `Bench::new("x").iters(100).run(|| work())`.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    iters: usize,
+    max_time: Duration,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            warmup: 3,
+            iters: 30,
+            max_time: Duration::from_secs(20),
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Self {
+        self.iters = n;
+        self
+    }
+
+    pub fn max_time(mut self, d: Duration) -> Self {
+        self.max_time = d;
+        self
+    }
+
+    /// Measure `f`; prints the stats row and returns it.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let budget_start = Instant::now();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            if budget_start.elapsed() > self.max_time && samples.len() >= 5 {
+                break;
+            }
+        }
+        let stats = Stats::from_samples(&self.name, samples);
+        println!("{}", stats.row());
+        stats
+    }
+}
+
+/// Keep a value alive / opaque to the optimiser (std::hint-based blackbox).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Aligned-table printer for the figure/table emitters.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len() - 1));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let s = Stats::from_samples("t", vec![0.004, 0.002, 0.001, 0.003, 0.005]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean_s - 0.003).abs() < 1e-12);
+        assert_eq!(s.min_s, 0.001);
+        assert_eq!(s.max_s, 0.005);
+        assert_eq!(s.p50_s, 0.003);
+    }
+
+    #[test]
+    fn bench_runs_requested_iters() {
+        let mut count = 0;
+        let s = Bench::new("count").warmup(2).iters(10).run(|| {
+            count += 1;
+        });
+        assert_eq!(count, 12); // warmup + iters
+        assert_eq!(s.n, 10);
+    }
+
+    #[test]
+    fn bench_respects_time_budget() {
+        let s = Bench::new("slow")
+            .warmup(0)
+            .iters(10_000)
+            .max_time(Duration::from_millis(50))
+            .run(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(s.n < 10_000);
+        assert!(s.n >= 5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "split", "latency"]);
+        t.row(&["alexnet".into(), "3".into(), "1.23 s".into()]);
+        t.row(&["vgg16".into(), "10".into(), "4.56 s".into()]);
+        let s = t.to_string();
+        assert!(s.contains("alexnet"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[1].chars().next(), Some('-'));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,134 @@
+//! Battery-aware split policy — an extension the paper's conclusion
+//! motivates ("minimal memory and energy utilisation is essential as many
+//! applications are run concurrently"): as the battery drains, the
+//! coordinator shifts the TOPSIS trade-off toward energy by tightening the
+//! Eq. 15 objective with a state-of-charge weight, pushing the split
+//! toward offloading (or, on an 802.11n radio where uploads are the
+//! expensive part, toward whichever side the energy model actually
+//! favours — the policy reasons through f2, not a heuristic).
+
+use crate::optimizer::{exhaustive_pareto_front, topsis};
+use crate::perfmodel::PerfModel;
+
+/// Battery-state bands and the f2 emphasis they apply.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BatteryBand {
+    /// > 50% charge: paper-standard TOPSIS (equal emphasis).
+    Comfort,
+    /// 20–50%: energy column doubled before TOPSIS.
+    Saver,
+    /// < 20%: energy column quadrupled; memory still enforced via Eq. 17.
+    Critical,
+}
+
+impl BatteryBand {
+    pub fn of_fraction(state_of_charge: f64) -> BatteryBand {
+        if state_of_charge > 0.5 {
+            BatteryBand::Comfort
+        } else if state_of_charge > 0.2 {
+            BatteryBand::Saver
+        } else {
+            BatteryBand::Critical
+        }
+    }
+
+    pub fn energy_weight(self) -> f64 {
+        match self {
+            BatteryBand::Comfort => 1.0,
+            BatteryBand::Saver => 2.0,
+            BatteryBand::Critical => 4.0,
+        }
+    }
+}
+
+/// Pick a split with the energy objective emphasised per the battery band:
+/// TOPSIS over the true Pareto front with the f2 column scaled. (Scaling a
+/// column before vector normalisation changes the ideal-distance geometry
+/// exactly like a TOPSIS attribute weight.)
+pub fn battery_aware_split(pm: &PerfModel<'_>, state_of_charge: f64) -> Option<usize> {
+    let band = BatteryBand::of_fraction(state_of_charge);
+    let w = band.energy_weight();
+    let front = exhaustive_pareto_front(pm);
+    if front.is_empty() {
+        return None;
+    }
+    let rows: Vec<Vec<f64>> = front
+        .iter()
+        .map(|&l1| {
+            let o = pm.objectives(l1);
+            vec![o[0], o[1] * w, o[2]]
+        })
+        .collect();
+    let feasible = vec![true; rows.len()];
+    topsis(&rows, &feasible).map(|r| front[r.chosen])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::models::zoo;
+    use crate::perfmodel::{NetworkEnv, RadioPower};
+
+    fn pm(profile: &crate::models::ModelProfile) -> PerfModel<'_> {
+        PerfModel::new(
+            profiles::redmi_note8(),
+            profiles::cloud_server(),
+            RadioPower::WIFI_80211AC,
+            NetworkEnv::paper_default(),
+            profile,
+        )
+    }
+
+    #[test]
+    fn bands() {
+        assert_eq!(BatteryBand::of_fraction(0.9), BatteryBand::Comfort);
+        assert_eq!(BatteryBand::of_fraction(0.5), BatteryBand::Saver);
+        assert_eq!(BatteryBand::of_fraction(0.21), BatteryBand::Saver);
+        assert_eq!(BatteryBand::of_fraction(0.1), BatteryBand::Critical);
+    }
+
+    #[test]
+    fn low_battery_never_costs_more_energy() {
+        // Monotonicity: the critical-band choice must not consume more
+        // energy (f2) than the comfort-band choice.
+        for model in ["alexnet", "vgg11", "vgg13", "vgg16"] {
+            let profile = zoo::by_name(model).unwrap().analyze(1);
+            let m = pm(&profile);
+            let comfort = battery_aware_split(&m, 1.0).unwrap();
+            let critical = battery_aware_split(&m, 0.05).unwrap();
+            assert!(
+                m.f2(critical) <= m.f2(comfort) + 1e-12,
+                "{model}: critical split {critical} uses more energy than comfort {comfort}"
+            );
+        }
+    }
+
+    #[test]
+    fn choices_stay_on_true_front() {
+        let profile = zoo::vgg16().analyze(1);
+        let m = pm(&profile);
+        let front = exhaustive_pareto_front(&m);
+        for soc in [1.0, 0.4, 0.1] {
+            let c = battery_aware_split(&m, soc).unwrap();
+            assert!(front.contains(&c));
+        }
+    }
+
+    #[test]
+    fn critical_band_moves_toward_energy_optimum() {
+        // Tightening the band must move the choice monotonically toward
+        // (or keep it at) the energy optimum: f2(critical) ≤ f2(saver) ≤
+        // f2(comfort), and critical lands within 2× of EBO's absolute
+        // optimum (TOPSIS still trades against latency and memory).
+        let profile = zoo::vgg11().analyze(1);
+        let m = pm(&profile);
+        let comfort = battery_aware_split(&m, 1.0).unwrap();
+        let saver = battery_aware_split(&m, 0.4).unwrap();
+        let critical = battery_aware_split(&m, 0.05).unwrap();
+        assert!(m.f2(saver) <= m.f2(comfort) + 1e-12);
+        assert!(m.f2(critical) <= m.f2(saver) + 1e-12);
+        let ebo = crate::optimizer::ebo(&m).l1;
+        assert!(m.f2(critical) <= 2.0 * m.f2(ebo), "critical {critical} vs ebo {ebo}");
+    }
+}

@@ -1,0 +1,275 @@
+//! Heterogeneous fleet coordinator — the paper's future-work item (iii):
+//! "smartphones combined with other edge devices to create a heterogeneous
+//! edge ecosystem performing shared AI tasks".
+//!
+//! N phones (different profiles, different link bandwidths) share ONE
+//! cloud daemon. Each device gets its own SmartSplit decision (its radio
+//! and link differ, so its optimal split differs), and the fleet
+//! dispatcher routes each incoming request to the device with the lowest
+//! expected completion time (queue depth × modelled per-request latency) —
+//! a shortest-expected-delay policy.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::device::ComputeProfile;
+use crate::metrics::{Histogram, ThroughputMeter};
+use crate::models::zoo;
+use crate::netsim::Link;
+use crate::optimizer::{smartsplit, Nsga2Params};
+use crate::perfmodel::{NetworkEnv, PerfModel};
+use crate::runtime::Tensor;
+use crate::serve::{CloudServer, DeviceClient};
+use crate::util::pool::ThreadPool;
+use crate::workload::{synth_images, Request};
+
+/// One fleet member: a phone profile and its own link bandwidth.
+#[derive(Clone, Debug)]
+pub struct FleetMember {
+    pub profile: &'static ComputeProfile,
+    pub bandwidth_mbps: f64,
+}
+
+/// Fleet-level configuration.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    pub model: String,
+    pub batch: usize,
+    pub members: Vec<FleetMember>,
+    pub nsga2: Nsga2Params,
+    pub emulate_slowdown: bool,
+}
+
+struct FleetDevice {
+    device: Arc<DeviceClient>,
+    /// Modelled per-request latency at this device's split (for dispatch).
+    expected_s: f64,
+    inflight: AtomicU64,
+    served: AtomicU64,
+}
+
+/// Per-device slice of the fleet report.
+#[derive(Debug)]
+pub struct MemberReport {
+    pub name: &'static str,
+    pub bandwidth_mbps: f64,
+    pub split_l1: usize,
+    pub served: u64,
+    pub client_energy_j: f64,
+    pub upload_energy_j: f64,
+    pub head_memory_bytes: u64,
+}
+
+/// Whole-fleet serving report.
+#[derive(Debug)]
+pub struct FleetReport {
+    pub completed: u64,
+    pub errors: u64,
+    pub elapsed_s: f64,
+    pub throughput_rps: f64,
+    pub latency: Histogram,
+    pub members: Vec<MemberReport>,
+}
+
+impl FleetReport {
+    pub fn print(&self) {
+        println!("== fleet report ==");
+        println!("  requests   : {} ok, {} errors in {:.2}s", self.completed, self.errors, self.elapsed_s);
+        println!("  throughput : {:.3} req/s (fleet)", self.throughput_rps);
+        println!("  latency    : {}", self.latency.summary());
+        for m in &self.members {
+            println!(
+                "  {:<14} @{:>6.1} Mbps  l1={:<2} served={:<4} E_client={:.2}J E_up={:.2}J M|l1={}",
+                m.name, m.bandwidth_mbps, m.split_l1, m.served,
+                m.client_energy_j, m.upload_energy_j,
+                crate::util::fmt_bytes(m.head_memory_bytes)
+            );
+        }
+    }
+}
+
+/// The fleet: one cloud, many devices.
+pub struct Fleet {
+    pub cloud: Arc<CloudServer>,
+    devices: Vec<Arc<FleetDevice>>,
+    pool: ThreadPool,
+    cfg: FleetConfig,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Fleet {
+    /// Plan per-member splits and stand everything up.
+    pub fn start(cfg: FleetConfig) -> Result<Fleet> {
+        anyhow::ensure!(!cfg.members.is_empty(), "empty fleet");
+        let cloud = CloudServer::bind("127.0.0.1:0", cfg.artifacts_dir.clone())?;
+        let accept_handle = cloud.spawn();
+        let spec = zoo::by_name(&cfg.model).context("unknown model")?;
+        let profile = spec.analyze(cfg.batch);
+
+        let mut devices = Vec::new();
+        for member in &cfg.members {
+            let pm = PerfModel::new(
+                member.profile,
+                crate::device::profiles::cloud_server(),
+                member.profile.wifi.context("member has no radio")?.radio_power(),
+                NetworkEnv::with_bandwidth(member.bandwidth_mbps),
+                &profile,
+            );
+            let decision = smartsplit(&pm, &cfg.nsga2);
+            let link = Arc::new(Link::new(member.bandwidth_mbps));
+            let mut device = DeviceClient::connect(
+                &cloud.addr.to_string(),
+                &cfg.artifacts_dir,
+                &cfg.model,
+                cfg.batch,
+                decision.decision.l1,
+                member.profile,
+                link,
+            )?;
+            device.emulate_slowdown = cfg.emulate_slowdown;
+            devices.push(Arc::new(FleetDevice {
+                device: Arc::new(device),
+                expected_s: pm.f1(decision.decision.l1)
+                    * if cfg.emulate_slowdown { 1.0 } else { 0.25 },
+                inflight: AtomicU64::new(0),
+                served: AtomicU64::new(0),
+            }));
+            log::info!(
+                "fleet: {} @ {} Mbps → l1={}",
+                member.profile.name, member.bandwidth_mbps, decision.decision.l1
+            );
+        }
+        let pool = ThreadPool::new(devices.len());
+        Ok(Fleet { cloud, devices, pool, cfg, accept_handle: Some(accept_handle) })
+    }
+
+    /// Splits chosen per member (ordered as configured).
+    pub fn splits(&self) -> Vec<usize> {
+        self.devices.iter().map(|d| d.device.split()).collect()
+    }
+
+    /// Shortest-expected-delay dispatch: queue depth × modelled latency.
+    fn pick_device(&self) -> Arc<FleetDevice> {
+        Arc::clone(
+            self.devices
+                .iter()
+                .min_by(|a, b| {
+                    let ca = (a.inflight.load(Ordering::SeqCst) + 1) as f64 * a.expected_s;
+                    let cb = (b.inflight.load(Ordering::SeqCst) + 1) as f64 * b.expected_s;
+                    ca.partial_cmp(&cb).unwrap()
+                })
+                .unwrap(),
+        )
+    }
+
+    /// Serve a workload across the fleet; blocks for completion.
+    pub fn serve(&self, requests: &[Request]) -> Result<FleetReport> {
+        let latency = Arc::new(Histogram::new());
+        let meter = Arc::new(ThroughputMeter::new());
+        let errors = Arc::new(AtomicU64::new(0));
+        let start = Instant::now();
+        let shape = self.devices[0].device.input_shape().to_vec();
+        let (c, hw) = (shape[1], shape[2]);
+
+        for req in requests {
+            let now = start.elapsed();
+            if req.arrival > now {
+                std::thread::sleep(req.arrival - now);
+            }
+            let dev = self.pick_device();
+            dev.inflight.fetch_add(1, Ordering::SeqCst);
+            let latency = Arc::clone(&latency);
+            let meter = Arc::clone(&meter);
+            let errors = Arc::clone(&errors);
+            let seed = req.image_seed;
+            self.pool.execute(move || {
+                let img = Tensor::new(vec![1, c, hw, hw], synth_images(1, c, hw, seed))
+                    .expect("image");
+                match dev.device.infer(&img) {
+                    Ok((_, timing)) => {
+                        latency.record_secs(timing.total_s);
+                        meter.record(1);
+                        dev.served.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Err(e) => {
+                        log::warn!("fleet request failed: {e:#}");
+                        errors.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+                dev.inflight.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+        self.pool.wait_idle();
+
+        let members = self
+            .devices
+            .iter()
+            .zip(&self.cfg.members)
+            .map(|(d, m)| MemberReport {
+                name: m.profile.name,
+                bandwidth_mbps: m.bandwidth_mbps,
+                split_l1: d.device.split(),
+                served: d.served.load(Ordering::SeqCst),
+                client_energy_j: d.device.energy.client_j(),
+                upload_energy_j: d.device.energy.upload_j(),
+                head_memory_bytes: d.device.memory.used(),
+            })
+            .collect();
+        let latency = Arc::try_unwrap(latency).unwrap_or_else(|_| panic!("latency still shared"));
+        Ok(FleetReport {
+            completed: meter.completed(),
+            errors: errors.load(Ordering::SeqCst),
+            elapsed_s: start.elapsed().as_secs_f64(),
+            throughput_rps: meter.completed() as f64 / start.elapsed().as_secs_f64(),
+            latency,
+            members,
+        })
+    }
+
+    pub fn shutdown(mut self) {
+        for d in &self.devices {
+            let _ = d.device.shutdown();
+            d.device.stop();
+        }
+        self.cloud.stop();
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+
+    #[test]
+    fn per_member_splits_differ_with_conditions() {
+        // Planning only (no artifacts): a starved J6 and a fast Redmi must
+        // generally receive different split decisions.
+        let spec = zoo::alexnet();
+        let profile = spec.analyze(1);
+        let params = Nsga2Params { pop_size: 40, generations: 40, ..Default::default() };
+        let starved = PerfModel::new(
+            profiles::samsung_j6(),
+            profiles::cloud_server(),
+            crate::perfmodel::RadioPower::PAPER_80211N,
+            NetworkEnv::with_bandwidth(0.5),
+            &profile,
+        );
+        let fast = PerfModel::new(
+            profiles::redmi_note8(),
+            profiles::cloud_server(),
+            crate::perfmodel::RadioPower::WIFI_80211AC,
+            NetworkEnv::with_bandwidth(200.0),
+            &profile,
+        );
+        let a = smartsplit(&starved, &params).decision.l1;
+        let b = smartsplit(&fast, &params).decision.l1;
+        assert_ne!(a, b, "identical splits under opposite network conditions");
+    }
+}

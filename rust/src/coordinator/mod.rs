@@ -1,0 +1,367 @@
+//! Top-level coordinator: the piece a deployment actually drives.
+//!
+//! Responsibilities:
+//! 1. run SmartSplit (or any §VI-C baseline) against the current device /
+//!    network conditions to pick the split;
+//! 2. stand up the split topology (cloud daemon + device client + router);
+//! 3. serve workloads, collecting latency / energy / memory metrics;
+//! 4. **adapt**: watch the link bandwidth and re-run the optimiser when it
+//!    drifts, moving the split on the live system (the knob the paper's
+//!    conclusion calls out: "network bandwidth is a crucial parameter").
+
+pub mod battery;
+pub mod fleet;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::device::{profiles, ComputeProfile};
+use crate::metrics::{Histogram, ThroughputMeter};
+use crate::models::zoo;
+use crate::netsim::{BandwidthTrace, Link};
+use crate::optimizer::{decide, smartsplit, Algorithm, Nsga2Params, SplitDecision};
+use crate::perfmodel::{NetworkEnv, PerfModel};
+use crate::runtime::Tensor;
+use crate::serve::{CloudServer, DeviceClient, Router, RouterConfig};
+use crate::util::rng::Xoshiro256;
+use crate::workload::{synth_images, Request};
+
+/// Coordinator configuration (CLI-mappable).
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    pub batch: usize,
+    pub device_profile: &'static ComputeProfile,
+    pub bandwidth_mbps: f64,
+    pub algorithm: Algorithm,
+    pub nsga2: Nsga2Params,
+    pub router: RouterConfig,
+    /// Emulate phone-speed compute (stretch PJRT wall time).
+    pub emulate_slowdown: bool,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: crate::artifacts_dir(),
+            model: "alexnet".into(),
+            batch: 1,
+            device_profile: profiles::samsung_j6(),
+            bandwidth_mbps: 10.0,
+            algorithm: Algorithm::SmartSplit,
+            nsga2: Nsga2Params::default(),
+            router: RouterConfig::default(),
+            emulate_slowdown: true,
+            seed: 7,
+        }
+    }
+}
+
+/// Pick the split for the configured conditions using the analytical model
+/// (Eq. 2–17) — this is what runs on the phone before any bytes move.
+pub fn plan_split(cfg: &Config) -> Result<SplitDecision> {
+    plan_split_at_bandwidth(cfg, cfg.bandwidth_mbps)
+}
+
+pub fn plan_split_at_bandwidth(cfg: &Config, bandwidth_mbps: f64) -> Result<SplitDecision> {
+    let spec = zoo::by_name(&cfg.model)
+        .with_context(|| format!("unknown model {}", cfg.model))?;
+    let profile = spec.analyze(cfg.batch);
+    let radio = cfg
+        .device_profile
+        .wifi
+        .context("device profile has no radio")?
+        .radio_power();
+    let pm = PerfModel::new(
+        cfg.device_profile,
+        profiles::cloud_server(),
+        radio,
+        NetworkEnv::with_bandwidth(bandwidth_mbps),
+        &profile,
+    );
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    Ok(decide(cfg.algorithm, &pm, &cfg.nsga2, &mut rng))
+}
+
+/// Results of a served workload.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub model: String,
+    pub split_l1: usize,
+    pub completed: u64,
+    pub errors: u64,
+    pub elapsed: Duration,
+    pub latency: Histogram,
+    pub throughput_rps: f64,
+    pub client_energy_j: f64,
+    pub upload_energy_j: f64,
+    pub download_energy_j: f64,
+    pub head_memory_bytes: u64,
+    pub bytes_uploaded: u64,
+    /// Splits used over the run: (request index, l1) change points.
+    pub split_history: Vec<(u64, usize)>,
+}
+
+impl ServeReport {
+    pub fn total_energy_j(&self) -> f64 {
+        self.client_energy_j + self.upload_energy_j + self.download_energy_j
+    }
+
+    pub fn print(&self) {
+        println!("== serve report: {} (l1={}) ==", self.model, self.split_l1);
+        println!("  requests   : {} ok, {} errors in {:?}", self.completed, self.errors, self.elapsed);
+        println!("  throughput : {:.3} req/s", self.throughput_rps);
+        println!("  latency    : {}", self.latency.summary());
+        println!(
+            "  energy     : client {:.2} J + upload {:.2} J + download {:.2} J = {:.2} J",
+            self.client_energy_j, self.upload_energy_j, self.download_energy_j,
+            self.total_energy_j()
+        );
+        println!(
+            "  memory     : head M|l1 = {}",
+            crate::util::fmt_bytes(self.head_memory_bytes)
+        );
+        println!("  uploaded   : {}", crate::util::fmt_bytes(self.bytes_uploaded));
+        if self.split_history.len() > 1 {
+            println!("  splits     : {:?}", self.split_history);
+        }
+    }
+}
+
+/// A fully wired split-serving deployment (in-process cloud + device).
+pub struct Deployment {
+    pub cfg: Config,
+    pub cloud: Arc<CloudServer>,
+    pub device: Arc<DeviceClient>,
+    pub link: Arc<Link>,
+    pub split: SplitDecision,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Deployment {
+    /// Plan the split and stand up cloud + device + link.
+    pub fn start(cfg: Config) -> Result<Deployment> {
+        let split = plan_split(&cfg)?;
+        Self::start_with_split(cfg, split)
+    }
+
+    pub fn start_with_split(cfg: Config, split: SplitDecision) -> Result<Deployment> {
+        let cloud = CloudServer::bind("127.0.0.1:0", cfg.artifacts_dir.clone())?;
+        let accept_handle = cloud.spawn();
+        let link = Arc::new(Link::new(cfg.bandwidth_mbps));
+        let mut device = DeviceClient::connect(
+            &cloud.addr.to_string(),
+            &cfg.artifacts_dir,
+            &cfg.model,
+            cfg.batch,
+            split.l1,
+            cfg.device_profile,
+            Arc::clone(&link),
+        )?;
+        device.emulate_slowdown = cfg.emulate_slowdown;
+        Ok(Deployment {
+            cfg,
+            cloud,
+            device: Arc::new(device),
+            link,
+            split,
+            accept_handle: Some(accept_handle),
+        })
+    }
+
+    /// Serve a closed/open-loop workload through the router; blocks until
+    /// all requests complete.
+    pub fn serve(&self, requests: &[Request]) -> Result<ServeReport> {
+        self.serve_with_trace(requests, None)
+    }
+
+    /// Serve while following a bandwidth trace; the coordinator re-runs the
+    /// optimiser at every trace step and moves the split live.
+    pub fn serve_with_trace(
+        &self,
+        requests: &[Request],
+        trace: Option<&BandwidthTrace>,
+    ) -> Result<ServeReport> {
+        let router = Router::start(Arc::clone(&self.device), self.cfg.router.clone());
+        let latency = Histogram::new();
+        let meter = ThroughputMeter::new();
+        let start = Instant::now();
+        let mut errors = 0u64;
+        let shape = self.device.input_shape().to_vec();
+        let (c, hw) = (shape[1], shape[2]);
+        let mut split_history = vec![(0u64, self.device.split())];
+
+        // Submit respecting arrival offsets; receive in submission order.
+        let mut rxs = std::collections::VecDeque::new();
+        for req in requests {
+            // Adaptive step: retune the link + split per the trace.
+            if let Some(tr) = trace {
+                let now = start.elapsed();
+                let bw = tr.at(now);
+                if (bw - self.link.bandwidth_mbps()).abs() > 1e-9 {
+                    self.link.set_bandwidth_mbps(bw);
+                    let new_split = plan_split_at_bandwidth(&self.cfg, bw)?;
+                    if new_split.l1 != self.device.split() {
+                        log::info!(
+                            "coordinator: bandwidth {bw} Mbps → moving split to l1={}",
+                            new_split.l1
+                        );
+                        self.device.set_split(new_split.l1)?;
+                        split_history.push((req.id, new_split.l1));
+                    }
+                }
+            }
+            let now = start.elapsed();
+            if req.arrival > now {
+                std::thread::sleep(req.arrival - now);
+            }
+            let img = Tensor::new(
+                vec![1, c, hw, hw],
+                synth_images(1, c, hw, req.image_seed),
+            )?;
+            rxs.push_back(router.submit(req.id, img));
+
+            // Keep the pipe shallow: harvest finished completions.
+            while rxs.len() > 2 * self.cfg.router.max_batch {
+                match rxs.pop_front().unwrap().recv() {
+                    Ok(Ok(c)) => {
+                        latency.record_secs(c.timing.total_s);
+                        meter.record(1);
+                    }
+                    Ok(Err(e)) => {
+                        log::warn!("request failed: {e:#}");
+                        errors += 1;
+                    }
+                    Err(_) => errors += 1,
+                }
+            }
+        }
+        for rx in rxs {
+            match rx.recv() {
+                Ok(Ok(c)) => {
+                    latency.record_secs(c.timing.total_s);
+                    meter.record(1);
+                }
+                Ok(Err(e)) => {
+                    log::warn!("request failed: {e:#}");
+                    errors += 1;
+                }
+                Err(_) => errors += 1,
+            }
+        }
+        router.stop();
+
+        let (bytes_up, _) = self.link.bytes_transferred();
+        Ok(ServeReport {
+            model: self.cfg.model.clone(),
+            split_l1: self.device.split(),
+            completed: meter.completed(),
+            errors,
+            elapsed: start.elapsed(),
+            latency,
+            throughput_rps: meter.rps(),
+            client_energy_j: self.device.energy.client_j(),
+            upload_energy_j: self.device.energy.upload_j(),
+            download_energy_j: self.device.energy.download_j(),
+            head_memory_bytes: self.device.memory.used(),
+            bytes_uploaded: bytes_up,
+            split_history,
+        })
+    }
+
+    /// Tear down: device goodbye, stop cloud.
+    pub fn shutdown(mut self) {
+        let _ = self.device.shutdown();
+        self.device.stop();
+        self.cloud.stop();
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One-shot optimisation report for the CLI: Pareto set + per-algorithm
+/// decisions under the analytical model.
+pub fn optimize_report(cfg: &Config) -> Result<String> {
+    let spec = zoo::by_name(&cfg.model)
+        .with_context(|| format!("unknown model {}", cfg.model))?;
+    let profile = spec.analyze(cfg.batch);
+    let radio = cfg.device_profile.wifi.context("no radio")?.radio_power();
+    let pm = PerfModel::new(
+        cfg.device_profile,
+        profiles::cloud_server(),
+        radio,
+        NetworkEnv::with_bandwidth(cfg.bandwidth_mbps),
+        &profile,
+    );
+    let mut out = String::new();
+    let result = smartsplit(&pm, &cfg.nsga2);
+    out.push_str(&format!(
+        "model {} on {} @ {} Mbps — Pareto set ({} members, {} evals):\n",
+        cfg.model, cfg.device_profile.name, cfg.bandwidth_mbps,
+        result.pareto.len(), result.evaluations
+    ));
+    let mut t = crate::bench::Table::new(&["l1", "latency f1 (s)", "energy f2 (J)", "memory f3 (MB)", "chosen"]);
+    for (l1, o) in &result.pareto {
+        t.row(&[
+            l1.to_string(),
+            format!("{:.4}", o[0]),
+            format!("{:.4}", o[1]),
+            format!("{:.2}", o[2] / 1e6),
+            if *l1 == result.decision.l1 { "◀ TOPSIS".into() } else { String::new() },
+        ]);
+    }
+    out.push_str(&t.to_string());
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    out.push_str("\nper-algorithm decisions:\n");
+    for algo in Algorithm::ALL {
+        let d = decide(algo, &pm, &cfg.nsga2, &mut rng);
+        out.push_str(&format!(
+            "  {:<10} l1={:<3} f1={:.4}s f2={:.4}J f3={:.2}MB\n",
+            algo.name(), d.l1, pm.f1(d.l1), pm.f2(d.l1), pm.f3(d.l1) / 1e6
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_split_deterministic_and_feasible() {
+        let cfg = Config::default();
+        // Planning needs no artifacts — pure analytical model.
+        let a = plan_split(&cfg).unwrap();
+        let b = plan_split(&cfg).unwrap();
+        assert_eq!(a, b);
+        assert!(a.l1 >= 1 && a.l1 < 21);
+    }
+
+    #[test]
+    fn bandwidth_changes_move_the_split() {
+        let cfg = Config::default();
+        let slow = plan_split_at_bandwidth(&cfg, 0.5).unwrap();
+        let fast = plan_split_at_bandwidth(&cfg, 1000.0).unwrap();
+        // At 1 Gbps shipping early activations is ~free; at 0.5 Mbps the
+        // optimiser must avoid big uploads. The decisions must differ.
+        assert_ne!(slow.l1, fast.l1, "split should react to bandwidth");
+    }
+
+    #[test]
+    fn optimize_report_renders() {
+        let cfg = Config {
+            nsga2: Nsga2Params { pop_size: 30, generations: 30, ..Default::default() },
+            ..Config::default()
+        };
+        let r = optimize_report(&cfg).unwrap();
+        assert!(r.contains("Pareto set"));
+        assert!(r.contains("SmartSplit"));
+        assert!(r.contains("TOPSIS"));
+    }
+}

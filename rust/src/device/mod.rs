@@ -1,0 +1,319 @@
+//! Smartphone / cloud-server simulation substrate.
+//!
+//! The paper's testbed (Samsung Galaxy J6, Redmi Note 8, a Windows-10 i5
+//! cloud box) is modelled as [`ComputeProfile`]s carrying exactly the
+//! quantities Eq. 2–13 consume, plus an [`EnergyMeter`] that plays the role
+//! of Android BatteryStats (integrating P·dt from the §III power models)
+//! and a [`MemoryTracker`] enforcing the Eq. 17 capacity constraint.
+
+use std::sync::Mutex;
+
+use crate::perfmodel::RadioPower;
+
+/// WiFi standard of the device radio; selects the radio power constants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WifiStandard {
+    /// 802.11 b/g/n (Samsung J6) — the paper's Huang-et-al constants.
+    N80211,
+    /// 802.11 ac (Redmi Note 8) — energy-optimised radio.
+    Ac80211,
+}
+
+impl WifiStandard {
+    pub fn radio_power(self) -> RadioPower {
+        match self {
+            WifiStandard::N80211 => RadioPower::PAPER_80211N,
+            WifiStandard::Ac80211 => RadioPower::WIFI_80211AC,
+        }
+    }
+}
+
+/// Hardware profile consumed by the perf model (Eq. 2–13) and by the
+/// device-side executor (which scales real PJRT wall-time by
+/// `slowdown_vs_host` to emulate phone-class silicon).
+#[derive(Clone, Debug)]
+pub struct ComputeProfile {
+    pub name: &'static str,
+    pub cores: usize,
+    /// Processor speed `S` in Hz (Eq. 2/3 denominator).
+    pub clock_hz: f64,
+    /// Operating frequency `ν` in GHz (Eq. 6; = clock for our devices).
+    pub freq_ghz: f64,
+    /// RAM capacity `M` in bytes (Eq. 17 first constraint).
+    pub memory_bytes: u64,
+    /// Battery capacity in mAh (energy budget accounting; phones only).
+    pub battery_mah: Option<f64>,
+    /// WiFi radio (phones only; the cloud server is mains/ethernet).
+    pub wifi: Option<WifiStandard>,
+    /// Calibrated cycles-per-byte of CNN inference on this silicon
+    /// (DESIGN.md §4: the paper's Eq. 2 assumes 1 byte/cycle/core).
+    pub cycles_per_byte: f64,
+    /// Wall-clock multiplier applied to real PJRT execution when this
+    /// profile emulates the device side of the split runtime.
+    pub slowdown_vs_host: f64,
+}
+
+pub mod profiles {
+    use super::*;
+    use once_cell::sync::Lazy;
+
+    /// Samsung Galaxy J6: Exynos 7870, 8×1.6 GHz, 4 GB RAM, 3000 mAh,
+    /// WiFi 802.11 b/g/n (paper §III-A / §VI-A).
+    pub static SAMSUNG_J6: Lazy<ComputeProfile> = Lazy::new(|| ComputeProfile {
+        name: "samsung_j6",
+        cores: 8,
+        clock_hz: 1.6e9,
+        freq_ghz: 1.6,
+        memory_bytes: 4 * 1024 * 1024 * 1024,
+        battery_mah: Some(3000.0),
+        wifi: Some(WifiStandard::N80211),
+        cycles_per_byte: 25.0,
+        slowdown_vs_host: 4.0,
+    });
+
+    /// Redmi Note 8: Snapdragon 665, 8 cores (4×2.0 + 4×1.8 GHz; modelled
+    /// at 2.0), 4 GB RAM, 4000 mAh, WiFi 802.11 ac (paper §III-A).
+    pub static REDMI_NOTE8: Lazy<ComputeProfile> = Lazy::new(|| ComputeProfile {
+        name: "redmi_note8",
+        cores: 8,
+        clock_hz: 2.0e9,
+        freq_ghz: 2.0,
+        memory_bytes: 4 * 1024 * 1024 * 1024,
+        battery_mah: Some(4000.0),
+        wifi: Some(WifiStandard::Ac80211),
+        cycles_per_byte: 25.0,
+        slowdown_vs_host: 3.0,
+    });
+
+    /// Cloud server: Windows-10 box, 1.6 GHz quad-core i5, 8 GB RAM
+    /// (paper §VI-A). Lower cycles/byte: desktop-class vector units + BLAS.
+    pub static CLOUD_SERVER: Lazy<ComputeProfile> = Lazy::new(|| ComputeProfile {
+        name: "cloud_server",
+        cores: 4,
+        clock_hz: 1.6e9,
+        freq_ghz: 1.6,
+        memory_bytes: 8 * 1024 * 1024 * 1024,
+        battery_mah: None,
+        wifi: None,
+        cycles_per_byte: 2.0,
+        slowdown_vs_host: 1.0,
+    });
+
+    pub fn samsung_j6() -> &'static ComputeProfile {
+        &SAMSUNG_J6
+    }
+
+    pub fn redmi_note8() -> &'static ComputeProfile {
+        &REDMI_NOTE8
+    }
+
+    pub fn cloud_server() -> &'static ComputeProfile {
+        &CLOUD_SERVER
+    }
+
+    pub fn by_name(name: &str) -> Option<&'static ComputeProfile> {
+        match name {
+            "samsung_j6" | "j6" => Some(samsung_j6()),
+            "redmi_note8" | "redmi" => Some(redmi_note8()),
+            "cloud_server" | "cloud" => Some(cloud_server()),
+            _ => None,
+        }
+    }
+}
+
+/// BatteryStats stand-in: a ledger of (component, power_w, duration_s)
+/// samples integrated into Joules, with battery state-of-charge tracking.
+///
+/// The paper computes `E = V·Q` from BatteryStats dumps; we integrate the
+/// §III closed-form power models directly (DESIGN.md §4 substitution).
+#[derive(Debug)]
+pub struct EnergyMeter {
+    inner: Mutex<MeterState>,
+    /// Nominal battery voltage (V) for state-of-charge conversion.
+    pub nominal_voltage: f64,
+    pub battery_mah: f64,
+}
+
+#[derive(Debug, Default)]
+struct MeterState {
+    client_j: f64,
+    upload_j: f64,
+    download_j: f64,
+    samples: u64,
+}
+
+/// Which subsystem consumed the energy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnergyComponent {
+    ClientCompute,
+    Upload,
+    Download,
+}
+
+impl EnergyMeter {
+    pub fn new(profile: &ComputeProfile) -> Self {
+        EnergyMeter {
+            inner: Mutex::new(MeterState::default()),
+            nominal_voltage: 3.85,
+            battery_mah: profile.battery_mah.unwrap_or(f64::INFINITY),
+        }
+    }
+
+    /// Record `power_w` drawn for `duration_s` by `component`.
+    pub fn record(&self, component: EnergyComponent, power_w: f64, duration_s: f64) {
+        debug_assert!(power_w >= 0.0 && duration_s >= 0.0);
+        let mut st = self.inner.lock().unwrap();
+        let j = power_w * duration_s;
+        match component {
+            EnergyComponent::ClientCompute => st.client_j += j,
+            EnergyComponent::Upload => st.upload_j += j,
+            EnergyComponent::Download => st.download_j += j,
+        }
+        st.samples += 1;
+    }
+
+    pub fn client_j(&self) -> f64 {
+        self.inner.lock().unwrap().client_j
+    }
+
+    pub fn upload_j(&self) -> f64 {
+        self.inner.lock().unwrap().upload_j
+    }
+
+    pub fn download_j(&self) -> f64 {
+        self.inner.lock().unwrap().download_j
+    }
+
+    pub fn total_j(&self) -> f64 {
+        let st = self.inner.lock().unwrap();
+        st.client_j + st.upload_j + st.download_j
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.inner.lock().unwrap().samples
+    }
+
+    /// Fraction of the battery consumed so far (E = V·Q with Q in mAh·3.6 C).
+    pub fn battery_fraction_used(&self) -> f64 {
+        let capacity_j = self.battery_mah * 3.6 * self.nominal_voltage;
+        self.total_j() / capacity_j
+    }
+
+    pub fn reset(&self) {
+        *self.inner.lock().unwrap() = MeterState::default();
+    }
+}
+
+/// Tracks live allocation against the profile's capacity — the runtime
+/// enforcement of Eq. 17's `M_edge|l1 ≤ M`.
+#[derive(Debug)]
+pub struct MemoryTracker {
+    capacity: u64,
+    used: Mutex<u64>,
+    high_water: Mutex<u64>,
+}
+
+impl MemoryTracker {
+    pub fn new(capacity_bytes: u64) -> Self {
+        MemoryTracker { capacity: capacity_bytes, used: Mutex::new(0), high_water: Mutex::new(0) }
+    }
+
+    /// Try to reserve; `Err` when it would exceed capacity.
+    pub fn reserve(&self, bytes: u64) -> Result<(), u64> {
+        let mut used = self.used.lock().unwrap();
+        if *used + bytes > self.capacity {
+            return Err(self.capacity - *used);
+        }
+        *used += bytes;
+        let mut hw = self.high_water.lock().unwrap();
+        *hw = (*hw).max(*used);
+        Ok(())
+    }
+
+    pub fn release(&self, bytes: u64) {
+        let mut used = self.used.lock().unwrap();
+        *used = used.saturating_sub(bytes);
+    }
+
+    pub fn used(&self) -> u64 {
+        *self.used.lock().unwrap()
+    }
+
+    pub fn high_water(&self) -> u64 {
+        *self.high_water.lock().unwrap()
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_specs() {
+        let j6 = profiles::samsung_j6();
+        assert_eq!(j6.cores, 8);
+        assert_eq!(j6.clock_hz, 1.6e9);
+        assert_eq!(j6.battery_mah, Some(3000.0));
+        assert_eq!(j6.wifi, Some(WifiStandard::N80211));
+        let redmi = profiles::redmi_note8();
+        assert_eq!(redmi.wifi, Some(WifiStandard::Ac80211));
+        assert_eq!(redmi.battery_mah, Some(4000.0));
+        let cloud = profiles::cloud_server();
+        assert_eq!(cloud.cores, 4);
+        assert_eq!(cloud.memory_bytes, 8 * 1024 * 1024 * 1024);
+        assert!(cloud.wifi.is_none());
+    }
+
+    #[test]
+    fn wifi_selects_radio_constants() {
+        assert_eq!(WifiStandard::N80211.radio_power(), RadioPower::PAPER_80211N);
+        assert_eq!(WifiStandard::Ac80211.radio_power(), RadioPower::WIFI_80211AC);
+        // The paper's key contrast: ac uploads are much cheaper per Mbps.
+        assert!(
+            RadioPower::WIFI_80211AC.upload_power_w(10.0)
+                < 0.5 * RadioPower::PAPER_80211N.upload_power_w(10.0)
+        );
+    }
+
+    #[test]
+    fn energy_meter_accumulates_per_component() {
+        let m = EnergyMeter::new(profiles::samsung_j6());
+        m.record(EnergyComponent::ClientCompute, 2.0, 1.5);
+        m.record(EnergyComponent::Upload, 3.0, 0.5);
+        m.record(EnergyComponent::Upload, 3.0, 0.5);
+        m.record(EnergyComponent::Download, 1.0, 0.1);
+        assert!((m.client_j() - 3.0).abs() < 1e-12);
+        assert!((m.upload_j() - 3.0).abs() < 1e-12);
+        assert!((m.download_j() - 0.1).abs() < 1e-12);
+        assert!((m.total_j() - 6.1).abs() < 1e-12);
+        assert_eq!(m.samples(), 4);
+        m.reset();
+        assert_eq!(m.total_j(), 0.0);
+    }
+
+    #[test]
+    fn battery_fraction() {
+        let m = EnergyMeter::new(profiles::samsung_j6());
+        // 3000 mAh * 3.6 * 3.85 V = 41580 J capacity
+        m.record(EnergyComponent::ClientCompute, 41580.0, 0.5);
+        assert!((m.battery_fraction_used() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_tracker_enforces_capacity() {
+        let t = MemoryTracker::new(100);
+        assert!(t.reserve(60).is_ok());
+        assert_eq!(t.reserve(50), Err(40));
+        assert!(t.reserve(40).is_ok());
+        assert_eq!(t.used(), 100);
+        t.release(30);
+        assert_eq!(t.used(), 70);
+        assert_eq!(t.high_water(), 100);
+        t.release(1000); // saturating
+        assert_eq!(t.used(), 0);
+    }
+}

@@ -1,0 +1,425 @@
+//! Figure/table data generators: one function per paper exhibit
+//! (Figs. 1–10, Tables I–II). The `cargo bench` targets print these as
+//! aligned tables and dump JSON series under `target/figures/` for
+//! EXPERIMENTS.md. Keeping the computation here (library) lets the
+//! integration tests assert the *shape* claims the paper makes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::device::{profiles, ComputeProfile};
+use crate::models::zoo;
+use crate::optimizer::{
+    decide, smartsplit, Algorithm, Nsga2Params, SmartSplitResult,
+};
+use crate::perfmodel::{EnergyBreakdown, LatencyBreakdown, NetworkEnv, PerfModel};
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+
+/// The four split-target models of the evaluation.
+pub const MODELS: [&str; 4] = ["alexnet", "vgg11", "vgg13", "vgg16"];
+
+/// Build the perf model for (model, phone) at the paper's 10 Mbps testbed.
+pub fn perf_model<'a>(
+    profile: &'a crate::models::ModelProfile,
+    phone: &'a ComputeProfile,
+    bandwidth_mbps: f64,
+) -> PerfModel<'a> {
+    PerfModel::new(
+        phone,
+        profiles::cloud_server(),
+        phone.wifi.expect("phone has a radio").radio_power(),
+        NetworkEnv::with_bandwidth(bandwidth_mbps),
+        profile,
+    )
+}
+
+// ---------------------------------------------------------------- Fig 1/2
+
+/// Latency vs split index for one (model, phone): the paper's pilot sweep.
+pub fn latency_sweep(
+    model: &str,
+    phone: &ComputeProfile,
+    bandwidth_mbps: f64,
+) -> Result<Vec<(usize, LatencyBreakdown)>> {
+    let profile = zoo::by_name(model).context("unknown model")?.analyze(1);
+    let pm = perf_model(&profile, phone, bandwidth_mbps);
+    Ok((1..=profile.num_layers).map(|l1| (l1, pm.latency(l1))).collect())
+}
+
+// ---------------------------------------------------------------- Fig 3/4
+
+/// Energy vs split index for one (model, phone).
+pub fn energy_sweep(
+    model: &str,
+    phone: &ComputeProfile,
+    bandwidth_mbps: f64,
+) -> Result<Vec<(usize, EnergyBreakdown)>> {
+    let profile = zoo::by_name(model).context("unknown model")?.analyze(1);
+    let pm = perf_model(&profile, phone, bandwidth_mbps);
+    Ok((1..=profile.num_layers).map(|l1| (l1, pm.energy(l1))).collect())
+}
+
+// ------------------------------------------------------------------ Fig 5
+
+/// Client-energy-only comparison between the two phones (paper: "client
+/// energy consumption remains almost similar for both devices").
+pub fn client_energy_compare(
+    model: &str,
+    bandwidth_mbps: f64,
+) -> Result<Vec<(usize, f64, f64)>> {
+    let profile = zoo::by_name(model).context("unknown model")?.analyze(1);
+    let j6 = perf_model(&profile, profiles::samsung_j6(), bandwidth_mbps);
+    let redmi = perf_model(&profile, profiles::redmi_note8(), bandwidth_mbps);
+    Ok((1..=profile.num_layers)
+        .map(|l1| (l1, j6.energy(l1).client_j, redmi.energy(l1).client_j))
+        .collect())
+}
+
+// ----------------------------------------------------- Fig 6 + Table I
+
+/// Run Algorithm 1 for one model; the Pareto set feeds Fig. 6 and the
+/// TOPSIS choice is the Table I row.
+pub fn pareto_and_choice(
+    model: &str,
+    phone: &ComputeProfile,
+    bandwidth_mbps: f64,
+    params: &Nsga2Params,
+) -> Result<SmartSplitResult> {
+    let profile = zoo::by_name(model).context("unknown model")?.analyze(1);
+    let pm = perf_model(&profile, phone, bandwidth_mbps);
+    Ok(smartsplit(&pm, params))
+}
+
+/// Min-max normalise Fig. 6's three objective columns (the paper plots
+/// normalised values).
+pub fn normalise_columns(rows: &[[f64; 3]]) -> Vec<[f64; 3]> {
+    let mut lo = [f64::INFINITY; 3];
+    let mut hi = [f64::NEG_INFINITY; 3];
+    for r in rows {
+        for j in 0..3 {
+            lo[j] = lo[j].min(r[j]);
+            hi[j] = hi[j].max(r[j]);
+        }
+    }
+    rows.iter()
+        .map(|r| {
+            let mut out = [0.0; 3];
+            for j in 0..3 {
+                let span = hi[j] - lo[j];
+                out[j] = if span > 0.0 { (r[j] - lo[j]) / span } else { 0.0 };
+            }
+            out
+        })
+        .collect()
+}
+
+// ------------------------------------------- Table II + Figs 7/8/9
+
+/// One algorithm × model cell: the chosen split and its objective values,
+/// averaged over `runs` (only RS actually varies — the paper averages 100
+/// runs the same way).
+#[derive(Clone, Debug)]
+pub struct AlgoCell {
+    pub algorithm: Algorithm,
+    pub model: String,
+    pub mean_l1: f64,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub memory_bytes: f64,
+}
+
+pub fn algorithm_comparison(
+    phone: &ComputeProfile,
+    bandwidth_mbps: f64,
+    params: &Nsga2Params,
+    runs: usize,
+    seed: u64,
+) -> Result<Vec<AlgoCell>> {
+    let mut out = Vec::new();
+    for model in MODELS {
+        let profile = zoo::by_name(model).unwrap().analyze(1);
+        let pm = perf_model(&profile, phone, bandwidth_mbps);
+        for algo in Algorithm::ALL {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let (mut l1s, mut f1, mut f2, mut f3) = (0.0, 0.0, 0.0, 0.0);
+            // Deterministic algorithms: evaluate once, weight by runs.
+            let n = if algo == Algorithm::Rs { runs } else { 1 };
+            for _ in 0..n {
+                let d = decide(algo, &pm, params, &mut rng);
+                l1s += d.l1 as f64;
+                f1 += pm.f1(d.l1);
+                f2 += pm.f2(d.l1);
+                f3 += pm.f3(d.l1);
+            }
+            out.push(AlgoCell {
+                algorithm: algo,
+                model: model.to_string(),
+                mean_l1: l1s / n as f64,
+                latency_s: f1 / n as f64,
+                energy_j: f2 / n as f64,
+                memory_bytes: f3 / n as f64,
+            });
+        }
+    }
+    Ok(out)
+}
+
+// ----------------------------------------------------------------- Fig 10
+
+/// Fig. 10 row: a model under a strategy, with accuracy.
+#[derive(Clone, Debug)]
+pub struct Fig10Row {
+    pub label: String,
+    pub top1_accuracy: f64,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub memory_bytes: f64,
+}
+
+/// SmartSplit on the four CNNs vs MobileNetV2-on-phone (COS) vs
+/// VGG16-on-phone (COS).
+pub fn mobilenet_comparison(
+    phone: &ComputeProfile,
+    bandwidth_mbps: f64,
+    params: &Nsga2Params,
+) -> Result<Vec<Fig10Row>> {
+    let mut rows = Vec::new();
+    for model in MODELS {
+        let spec = zoo::by_name(model).unwrap();
+        let profile = spec.analyze(1);
+        let pm = perf_model(&profile, phone, bandwidth_mbps);
+        let d = smartsplit(&pm, params).decision;
+        rows.push(Fig10Row {
+            label: format!("{model}+SmartSplit(l1={})", d.l1),
+            top1_accuracy: spec.top1_accuracy,
+            latency_s: pm.f1(d.l1),
+            energy_j: pm.f2(d.l1),
+            memory_bytes: pm.f3(d.l1),
+        });
+    }
+    for model in ["mobilenet_v2", "vgg16"] {
+        let spec = zoo::by_name(model).unwrap();
+        let profile = spec.analyze(1);
+        let pm = perf_model(&profile, phone, bandwidth_mbps);
+        let l = profile.num_layers;
+        rows.push(Fig10Row {
+            label: format!("{model}+COS"),
+            top1_accuracy: spec.top1_accuracy,
+            latency_s: pm.f1(l),
+            energy_j: pm.f2(l),
+            memory_bytes: pm.f3(l),
+        });
+    }
+    Ok(rows)
+}
+
+// ------------------------------------------------------------- JSON dump
+
+/// Write a figure's series to `target/figures/<name>.json`.
+pub fn dump_json(name: &str, value: &Json) -> Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("target/figures");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, value.to_string_pretty())?;
+    Ok(path)
+}
+
+/// Series helper: BTreeMap<label, Vec<(x, y)>> → Json.
+pub fn series_json(series: &BTreeMap<String, Vec<(f64, f64)>>) -> Json {
+    Json::Obj(
+        series
+            .iter()
+            .map(|(k, pts)| {
+                (
+                    k.clone(),
+                    Json::Arr(
+                        pts.iter()
+                            .map(|(x, y)| Json::Arr(vec![Json::Num(*x), Json::Num(*y)]))
+                            .collect(),
+                    ),
+                )
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_params() -> Nsga2Params {
+        Nsga2Params { pop_size: 40, generations: 40, ..Default::default() }
+    }
+
+    #[test]
+    fn fig1_shape_upload_dominates_total_latency() {
+        // Paper: "the Upload Latency being the primary contributing factor
+        // to the total latency" on both phones at 10 Mbps. With ref-[39]
+        // memory accounting this holds for every conv-trunk split (the
+        // first half of the network, where the shipped activation is a
+        // conv feature map) and for the majority of all splits.
+        for phone in [profiles::samsung_j6(), profiles::redmi_note8()] {
+            for model in MODELS {
+                let sweep = latency_sweep(model, phone, 10.0).unwrap();
+                let n = sweep.len() - 1; // COS row has no upload
+                let dominant = |b: &LatencyBreakdown| {
+                    b.upload_s > b.client_s && b.upload_s > b.server_s
+                };
+                let first_half = sweep[..n / 2].iter().filter(|(_, b)| dominant(b)).count();
+                assert_eq!(
+                    first_half,
+                    n / 2,
+                    "{model}/{}: upload not dominant across the conv trunk",
+                    phone.name
+                );
+                let overall = sweep[..n].iter().filter(|(_, b)| dominant(b)).count();
+                assert!(
+                    overall * 2 > n,
+                    "{model}/{}: upload dominates only {overall}/{n} splits",
+                    phone.name,
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fig1_shape_client_latency_increases() {
+        let sweep = latency_sweep("vgg16", profiles::samsung_j6(), 10.0).unwrap();
+        for w in sweep.windows(2) {
+            assert!(w[1].1.client_s >= w[0].1.client_s);
+        }
+    }
+
+    #[test]
+    fn fig3_4_shape_wifi_contrast() {
+        // Paper key takeaway: upload energy is the primary factor on the
+        // J6 (802.11n radio) — true for the majority of conv-trunk splits —
+        // while client energy dominates on the Redmi Note 8 (802.11ac)
+        // across the majority of ALL splits.
+        for model in MODELS {
+            let j6 = energy_sweep(model, profiles::samsung_j6(), 10.0).unwrap();
+            let n = j6.len() - 1;
+            let j6_upload_dom = j6[..n / 2]
+                .iter()
+                .filter(|(_, e)| e.upload_j > e.client_j)
+                .count();
+            assert!(
+                j6_upload_dom * 2 > n / 2,
+                "{model}: J6 upload-dominant at only {j6_upload_dom}/{} conv splits",
+                n / 2
+            );
+            let redmi = energy_sweep(model, profiles::redmi_note8(), 10.0).unwrap();
+            let redmi_client_dom = redmi[..n]
+                .iter()
+                .filter(|(_, e)| e.client_j > e.upload_j)
+                .count();
+            assert!(
+                redmi_client_dom * 2 > n,
+                "{model}: Redmi client-dominant at only {redmi_client_dom}/{n}"
+            );
+            // Download energy negligible everywhere (< 2% of total).
+            for (l1, e) in &j6[..n] {
+                assert!(e.download_j < 0.02 * e.total(), "{model} l1={l1}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig5_shape_client_energy_similar_across_phones() {
+        // Paper: "the client energy consumption remains almost similar for
+        // both the devices" — within a small constant factor.
+        for (l1, j6, redmi) in client_energy_compare("alexnet", 10.0).unwrap() {
+            let ratio = redmi / j6.max(1e-12);
+            assert!(
+                (0.5..=3.0).contains(&ratio),
+                "l1={l1}: client energy ratio {ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn table1_choices_are_feasible_early_splits() {
+        // Paper Table I picks early/mid splits (3, 11, 10, 10) — memory-
+        // light choices. Ours must be feasible and in the early half.
+        for model in MODELS {
+            let r = pareto_and_choice(model, profiles::samsung_j6(), 10.0, &quick_params())
+                .unwrap();
+            let l = zoo::by_name(model).unwrap().num_layers();
+            assert!(r.decision.l1 >= 1 && r.decision.l1 < l);
+            assert!(
+                r.decision.l1 * 2 <= l + 2,
+                "{model}: TOPSIS chose late split {} of {l}",
+                r.decision.l1
+            );
+        }
+    }
+
+    #[test]
+    fn figs789_shape_claims() {
+        let cells =
+            algorithm_comparison(profiles::samsung_j6(), 10.0, &quick_params(), 20, 1).unwrap();
+        let get = |m: &str, a: Algorithm| {
+            cells
+                .iter()
+                .find(|c| c.model == m && c.algorithm == a)
+                .unwrap()
+                .clone()
+        };
+        for model in MODELS {
+            let ss = get(model, Algorithm::SmartSplit);
+            let lbo = get(model, Algorithm::Lbo);
+            let cos = get(model, Algorithm::Cos);
+            let coc = get(model, Algorithm::Coc);
+            // COC: minimum memory (zero on device).
+            assert_eq!(coc.memory_bytes, 0.0, "{model}");
+            // COS: maximum energy and memory of all algorithms.
+            for c in cells.iter().filter(|c| c.model == *model) {
+                assert!(cos.energy_j >= c.energy_j - 1e-9, "{model} {:?}", c.algorithm);
+                assert!(cos.memory_bytes >= c.memory_bytes - 1e-9, "{model}");
+            }
+            // SmartSplit vs LBO (paper §VI-C): strictly lower memory, and
+            // energy no worse than ~10% (lower for 3 of 4 models under our
+            // calibration — EXPERIMENTS.md records the per-model ratios).
+            assert!(ss.energy_j <= 1.10 * lbo.energy_j, "{model} energy vs LBO");
+            assert!(ss.memory_bytes < lbo.memory_bytes, "{model} memory vs LBO");
+            // LBO has the minimum latency by construction.
+            for c in cells.iter().filter(|c| c.model == *model) {
+                if c.algorithm != Algorithm::Coc {
+                    assert!(lbo.latency_s <= c.latency_s + 1e-9, "{model} {:?}", c.algorithm);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig10_shape_claims() {
+        let rows =
+            mobilenet_comparison(profiles::samsung_j6(), 10.0, &quick_params()).unwrap();
+        let vgg16_split = rows.iter().find(|r| r.label.starts_with("vgg16+Smart")).unwrap();
+        let mobilenet = rows.iter().find(|r| r.label.starts_with("mobilenet")).unwrap();
+        let vgg16_cos = rows.iter().find(|r| r.label == "vgg16+COS").unwrap();
+        // Split memory far below running the same VGG16 fully on-phone.
+        assert!(vgg16_split.memory_bytes < 0.25 * vgg16_cos.memory_bytes);
+        // Split energy below VGG16-COS energy.
+        assert!(vgg16_split.energy_j < vgg16_cos.energy_j);
+        // Divergence note (EXPERIMENTS.md §Fig10): under ref-[39] memory
+        // accounting MobileNetV2's 3.5M-param COS footprint is SMALLER
+        // than a mid-network VGG16 split, so the paper's "lower memory
+        // than MobileNetV2" claim only holds for l1 ≤ 2 splits; we record
+        // the measured values instead of forcing the claim.
+        // MobileNetV2 has lower latency (it's tiny) — the paper concedes
+        // this and argues the trade-off.
+        assert!(mobilenet.latency_s < vgg16_split.latency_s);
+    }
+
+    #[test]
+    fn normalise_columns_unit_range() {
+        let rows = vec![[1.0, 10.0, 5.0], [3.0, 20.0, 5.0], [2.0, 15.0, 5.0]];
+        let n = normalise_columns(&rows);
+        assert_eq!(n[0], [0.0, 0.0, 0.0]);
+        assert_eq!(n[1], [1.0, 1.0, 0.0]);
+        assert_eq!(n[2], [0.5, 0.5, 0.0]);
+    }
+}

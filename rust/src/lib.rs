@@ -1,0 +1,44 @@
+//! # SmartSplit
+//!
+//! Production-grade reproduction of *SmartSplit: Latency-Energy-Memory
+//! Optimisation for CNN Splitting on Smartphone Environment* (COMSNETS
+//! 2022) as a three-layer rust + JAX + Pallas system:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): conv-as-im2col
+//!   MXU matmul, depthwise conv, pooling; AOT-lowered, never on the
+//!   request path.
+//! * **L2** — JAX per-layer CNN zoo (`python/compile/model.py`): AlexNet,
+//!   VGG11/13/16, MobileNetV2, each layer exported as its own HLO module
+//!   so the split index is a runtime decision.
+//! * **L3** — this crate: the split-serving coordinator. The paper's
+//!   optimiser ([`optimizer`]: NSGA-II + TOPSIS + the five baselines), the
+//!   §III latency/energy models ([`perfmodel`]), the smartphone/cloud/
+//!   link simulation ([`device`], [`netsim`]), the PJRT runtime
+//!   ([`runtime`]) and the TCP split-serving stack ([`serve`],
+//!   [`coordinator`]).
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod coordinator;
+pub mod device;
+pub mod figures;
+pub mod metrics;
+pub mod models;
+pub mod netsim;
+pub mod optimizer;
+pub mod perfmodel;
+pub mod runtime;
+pub mod serve;
+pub mod util;
+pub mod workload;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$SMARTSPLIT_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("SMARTSPLIT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,234 @@
+//! SmartSplit CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   optimize   run Algorithm 1 (NSGA-II + TOPSIS) under the analytical
+//!              model and print the Pareto set + per-algorithm decisions
+//!   cloud      run the cloud-side daemon (tail layers)
+//!   device     run the device-side client against a cloud daemon
+//!   demo       in-process cloud + device + router serving a workload
+//!   fleet      heterogeneous multi-phone deployment sharing one cloud
+//!   models     list models available in the artifacts directory
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use smartsplit::coordinator::{optimize_report, Config, Deployment};
+use smartsplit::device::profiles;
+use smartsplit::models::Manifest;
+use smartsplit::netsim::Link;
+use smartsplit::optimizer::{Algorithm, Nsga2Params};
+use smartsplit::serve::{CloudServer, DeviceClient, RouterConfig};
+use smartsplit::util::cli::Cli;
+use smartsplit::workload::{generate, Arrival};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cli() -> Cli {
+    Cli::new(
+        "smartsplit — CNN split serving between a smartphone and a cloud server\n\
+         usage: smartsplit <optimize|cloud|device|demo|models> [flags]",
+    )
+    .opt("model", "alexnet", "CNN model (alexnet|vgg11|vgg13|vgg16|mobilenet_v2)")
+    .opt("batch", "1", "hardware batch size of the loaded artifacts")
+    .opt("device-profile", "samsung_j6", "samsung_j6 | redmi_note8")
+    .opt("bandwidth-mbps", "10", "link bandwidth B in Mbps")
+    .opt("algorithm", "SmartSplit", "SmartSplit|LBO|EBO|COS|COC|RS")
+    .opt("artifacts", "artifacts", "AOT artifacts directory")
+    .opt("requests", "16", "number of requests to serve (demo/device)")
+    .opt("rps", "0", "open-loop arrival rate; 0 = closed loop")
+    .opt("max-batch", "1", "router batching degree (requires matching artifacts)")
+    .opt("listen", "127.0.0.1:7700", "cloud listen address")
+    .opt("connect", "127.0.0.1:7700", "cloud address to connect to (device)")
+    .opt("split", "auto", "split index l1, or 'auto' to run the optimiser")
+    .opt("pop", "100", "NSGA-II population size")
+    .opt("gens", "250", "NSGA-II generations")
+    .opt("seed", "7", "PRNG seed")
+    .flag("no-slowdown", "disable phone-speed emulation")
+    .flag("verbose", "log at info level")
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let parsed = match cli().parse(args) {
+        Ok(p) => p,
+        Err(usage) => {
+            println!("{usage}");
+            return Ok(());
+        }
+    };
+    let cmd = parsed
+        .positionals
+        .first()
+        .map(String::as_str)
+        .unwrap_or("optimize");
+
+    let device_profile = profiles::by_name(parsed.get("device-profile"))
+        .context("unknown --device-profile")?;
+    let algorithm =
+        Algorithm::by_name(parsed.get("algorithm")).context("unknown --algorithm")?;
+    let cfg = Config {
+        artifacts_dir: PathBuf::from(parsed.get("artifacts")),
+        model: parsed.get("model").to_string(),
+        batch: parsed.get_usize("batch"),
+        device_profile,
+        bandwidth_mbps: parsed.get_f64("bandwidth-mbps"),
+        algorithm,
+        nsga2: Nsga2Params {
+            pop_size: parsed.get_usize("pop"),
+            generations: parsed.get_usize("gens"),
+            seed: parsed.get_u64("seed"),
+            ..Nsga2Params::default()
+        },
+        router: RouterConfig {
+            max_batch: parsed.get_usize("max-batch"),
+            ..RouterConfig::default()
+        },
+        emulate_slowdown: !parsed.get_bool("no-slowdown"),
+        seed: parsed.get_u64("seed"),
+    };
+
+    match cmd {
+        "optimize" => {
+            print!("{}", optimize_report(&cfg)?);
+        }
+        "models" => {
+            for m in Manifest::available_models(&cfg.artifacts_dir) {
+                let man = Manifest::load(&cfg.artifacts_dir, &m)?;
+                println!(
+                    "{:<14} {} layers, {} params, batches {:?}, top-1 {:.2}%",
+                    m, man.num_layers, man.total_params, man.batches,
+                    man.top1_accuracy * 100.0
+                );
+            }
+        }
+        "cloud" => {
+            let server = CloudServer::bind(parsed.get("listen"), cfg.artifacts_dir.clone())?;
+            println!("cloud daemon listening on {}", server.addr);
+            let h = server.spawn();
+            h.join().ok();
+        }
+        "device" => {
+            let split = resolve_split(&cfg, parsed.get("split"))?;
+            let link = Arc::new(Link::new(cfg.bandwidth_mbps));
+            let mut device = DeviceClient::connect(
+                parsed.get("connect"),
+                &cfg.artifacts_dir,
+                &cfg.model,
+                cfg.batch,
+                split,
+                cfg.device_profile,
+                link,
+            )?;
+            device.emulate_slowdown = cfg.emulate_slowdown;
+            serve_on_device(&cfg, Arc::new(device), parsed.get_usize("requests"),
+                            parsed.get_f64("rps"))?;
+        }
+        "fleet" => {
+            use smartsplit::coordinator::fleet::{Fleet, FleetConfig, FleetMember};
+            let cfg2 = FleetConfig {
+                artifacts_dir: cfg.artifacts_dir.clone(),
+                model: cfg.model.clone(),
+                batch: cfg.batch,
+                members: vec![
+                    FleetMember { profile: profiles::samsung_j6(), bandwidth_mbps: cfg.bandwidth_mbps },
+                    FleetMember { profile: profiles::redmi_note8(), bandwidth_mbps: cfg.bandwidth_mbps * 3.0 },
+                ],
+                nsga2: cfg.nsga2.clone(),
+                emulate_slowdown: cfg.emulate_slowdown,
+            };
+            let fleet = Fleet::start(cfg2)?;
+            println!("fleet splits: {:?}", fleet.splits());
+            let reqs = generate(parsed.get_usize("requests"),
+                                arrival_of(parsed.get_f64("rps")), cfg.seed);
+            let report = fleet.serve(&reqs)?;
+            report.print();
+            fleet.shutdown();
+        }
+        "demo" => {
+            let n = parsed.get_usize("requests");
+            let arrival = arrival_of(parsed.get_f64("rps"));
+            println!("planning split for {} on {} @ {} Mbps using {}...",
+                     cfg.model, cfg.device_profile.name, cfg.bandwidth_mbps,
+                     cfg.algorithm.name());
+            let dep = match parsed.get("split") {
+                "auto" => Deployment::start(cfg.clone())?,
+                s => Deployment::start_with_split(
+                    cfg.clone(),
+                    smartsplit::optimizer::SplitDecision { l1: s.parse()? },
+                )?,
+            };
+            println!("split: l1={} (device) / l2={} (cloud)", dep.split.l1,
+                     dep.device.num_layers() - dep.split.l1);
+            let reqs = generate(n, arrival, cfg.seed);
+            let report = dep.serve(&reqs)?;
+            report.print();
+            dep.shutdown();
+        }
+        other => bail!("unknown command {other:?} (try --help)"),
+    }
+    Ok(())
+}
+
+fn arrival_of(rps: f64) -> Arrival {
+    if rps > 0.0 {
+        Arrival::Poisson { rps }
+    } else {
+        Arrival::ClosedLoop
+    }
+}
+
+fn resolve_split(cfg: &Config, s: &str) -> Result<usize> {
+    if s == "auto" {
+        Ok(smartsplit::coordinator::plan_split(cfg)?.l1)
+    } else {
+        Ok(s.parse()?)
+    }
+}
+
+fn serve_on_device(
+    cfg: &Config,
+    device: Arc<DeviceClient>,
+    n: usize,
+    rps: f64,
+) -> Result<()> {
+    use smartsplit::metrics::Histogram;
+    use smartsplit::runtime::Tensor;
+    use smartsplit::serve::Router;
+    use smartsplit::workload::synth_images;
+
+    let router = Router::start(Arc::clone(&device), cfg.router.clone());
+    let latency = Histogram::new();
+    let reqs = generate(n, arrival_of(rps), cfg.seed);
+    let shape = device.input_shape().to_vec();
+    let start = std::time::Instant::now();
+    for req in &reqs {
+        let now = start.elapsed();
+        if req.arrival > now {
+            std::thread::sleep(req.arrival - now);
+        }
+        let img = Tensor::new(
+            vec![1, shape[1], shape[2], shape[3]],
+            synth_images(1, shape[1], shape[2], req.image_seed),
+        )?;
+        let c = router.infer_blocking(req.id, img)?;
+        latency.record_secs(c.timing.total_s);
+        println!("request {} → label {} in {:.3}s (batch {})",
+                 c.id, c.label, c.timing.total_s, c.batch_size);
+    }
+    router.stop();
+    println!("latency: {}", latency.summary());
+    println!(
+        "energy: client {:.2} J, upload {:.2} J, download {:.2} J",
+        device.energy.client_j(), device.energy.upload_j(), device.energy.download_j()
+    );
+    device.shutdown()?;
+    device.stop();
+    Ok(())
+}

@@ -1,0 +1,216 @@
+//! Serving metrics: latency histogram (HDR-style log-bucketed), throughput
+//! meter, and per-request split accounting.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Log-bucketed latency histogram: ~2.3% relative error per bucket,
+/// covering 1 µs .. ~1.2 hours in 512 buckets.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Mutex<HistState>,
+}
+
+#[derive(Debug)]
+struct HistState {
+    counts: Vec<u64>,
+    total: u64,
+    sum_s: f64,
+    min_s: f64,
+    max_s: f64,
+}
+
+const BUCKETS: usize = 512;
+const LOG_MIN: f64 = -6.0; // 1 µs
+const LOG_MAX: f64 = 3.65; // ~4470 s
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: Mutex::new(HistState {
+                counts: vec![0; BUCKETS],
+                total: 0,
+                sum_s: 0.0,
+                min_s: f64::INFINITY,
+                max_s: 0.0,
+            }),
+        }
+    }
+
+    fn bucket_of(seconds: f64) -> usize {
+        let l = seconds.max(1e-9).log10();
+        let idx = ((l - LOG_MIN) / (LOG_MAX - LOG_MIN) * BUCKETS as f64) as isize;
+        idx.clamp(0, BUCKETS as isize - 1) as usize
+    }
+
+    fn bucket_value(idx: usize) -> f64 {
+        let l = LOG_MIN + (idx as f64 + 0.5) / BUCKETS as f64 * (LOG_MAX - LOG_MIN);
+        10f64.powf(l)
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_secs(d.as_secs_f64());
+    }
+
+    pub fn record_secs(&self, s: f64) {
+        let mut st = self.buckets.lock().unwrap();
+        st.counts[Self::bucket_of(s)] += 1;
+        st.total += 1;
+        st.sum_s += s;
+        st.min_s = st.min_s.min(s);
+        st.max_s = st.max_s.max(s);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.lock().unwrap().total
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        let st = self.buckets.lock().unwrap();
+        if st.total == 0 {
+            return 0.0;
+        }
+        st.sum_s / st.total as f64
+    }
+
+    pub fn min_s(&self) -> f64 {
+        let st = self.buckets.lock().unwrap();
+        if st.total == 0 { 0.0 } else { st.min_s }
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.buckets.lock().unwrap().max_s
+    }
+
+    /// Quantile in [0,1] via bucket midpoint interpolation.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let st = self.buckets.lock().unwrap();
+        if st.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * st.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in st.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_value(i).clamp(st.min_s, st.max_s);
+            }
+        }
+        st.max_s
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={} p50={} p95={} p99={} max={}",
+            self.count(),
+            crate::util::fmt_secs(self.mean_s()),
+            crate::util::fmt_secs(self.quantile(0.50)),
+            crate::util::fmt_secs(self.quantile(0.95)),
+            crate::util::fmt_secs(self.quantile(0.99)),
+            crate::util::fmt_secs(self.max_s()),
+        )
+    }
+}
+
+/// Requests-per-second meter over the whole run.
+#[derive(Debug)]
+pub struct ThroughputMeter {
+    start: Instant,
+    completed: Mutex<u64>,
+}
+
+impl Default for ThroughputMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputMeter {
+    pub fn new() -> Self {
+        ThroughputMeter { start: Instant::now(), completed: Mutex::new(0) }
+    }
+
+    pub fn record(&self, n: u64) {
+        *self.completed.lock().unwrap() += n;
+    }
+
+    pub fn completed(&self) -> u64 {
+        *self.completed.lock().unwrap()
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn rps(&self) -> f64 {
+        let e = self.elapsed().as_secs_f64();
+        if e == 0.0 {
+            return 0.0;
+        }
+        self.completed() as f64 / e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basic_stats() {
+        let h = Histogram::new();
+        for ms in [1.0, 2.0, 3.0, 4.0, 100.0] {
+            h.record_secs(ms / 1000.0);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_s() - 0.022).abs() < 1e-9);
+        assert!((h.min_s() - 0.001).abs() < 1e-9);
+        assert!((h.max_s() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_ordered_and_within_range() {
+        let h = Histogram::new();
+        for i in 1..=1000 {
+            h.record_secs(i as f64 / 1000.0);
+        }
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!((p50 - 0.5).abs() / 0.5 < 0.05, "p50={p50}");
+        assert!((p99 - 0.99).abs() / 0.99 < 0.05, "p99={p99}");
+    }
+
+    #[test]
+    fn bucket_relative_error_bounded() {
+        // Round-trip value -> bucket -> midpoint stays within ~3%.
+        for v in [1e-5, 1e-3, 0.1, 1.0, 10.0, 100.0] {
+            let mid = Histogram::bucket_value(Histogram::bucket_of(v));
+            assert!((mid - v).abs() / v < 0.03, "v={v} mid={mid}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_s(), 0.0);
+        assert_eq!(h.quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn throughput_meter_counts() {
+        let t = ThroughputMeter::new();
+        t.record(10);
+        t.record(5);
+        assert_eq!(t.completed(), 15);
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(t.rps() > 0.0);
+    }
+}

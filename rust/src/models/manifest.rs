@@ -1,0 +1,247 @@
+//! Loader for the python-emitted `artifacts/<model>/manifest.json` — the
+//! wire contract between the AOT compile path (L1/L2) and the rust runtime
+//! (L3). See `python/compile/aot.py` for the writer.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One weight tensor: raw little-endian f32 on disk.
+#[derive(Clone, Debug)]
+pub struct WeightMeta {
+    pub name: String,
+    /// Path relative to the model directory.
+    pub file: String,
+    pub shape: Vec<usize>,
+}
+
+impl WeightMeta {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One layer's manifest entry.
+#[derive(Clone, Debug)]
+pub struct LayerManifest {
+    pub index: usize, // 1-based
+    pub kind: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub params: u64,
+    pub param_bytes: u64,
+    pub act_bytes: u64,
+    pub flops: u64,
+    pub weights: Vec<WeightMeta>,
+    /// batch size → HLO path relative to the model dir.
+    pub hlo: BTreeMap<usize, String>,
+}
+
+/// Whole-model manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub dir: PathBuf,
+    pub impl_name: String,
+    pub seed: u64,
+    pub num_layers: usize,
+    pub paper_layers: usize,
+    pub input_hw: usize,
+    pub input_ch: usize,
+    pub num_classes: usize,
+    pub top1_accuracy: f64,
+    pub total_params: u64,
+    pub batches: Vec<usize>,
+    pub layers: Vec<LayerManifest>,
+}
+
+impl Manifest {
+    /// Load `artifacts_dir/<model>/manifest.json`.
+    pub fn load(artifacts_dir: &Path, model: &str) -> Result<Manifest> {
+        let dir = artifacts_dir.join(model);
+        let path = dir.join("manifest.json");
+        let j = crate::util::json::parse_file(&path)
+            .with_context(|| format!("loading manifest {}", path.display()))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: PathBuf) -> Result<Manifest> {
+        let layers = j
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(|l| -> Result<LayerManifest> {
+                let weights = l
+                    .get("weights")?
+                    .as_arr()?
+                    .iter()
+                    .map(|w| -> Result<WeightMeta> {
+                        Ok(WeightMeta {
+                            name: w.get_str("name")?.to_string(),
+                            file: w.get_str("file")?.to_string(),
+                            shape: w.get_usize_vec("shape")?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let mut hlo = BTreeMap::new();
+                for (k, v) in l.get("hlo")?.as_obj()? {
+                    hlo.insert(
+                        k.parse::<usize>().context("hlo batch key")?,
+                        v.as_str()?.to_string(),
+                    );
+                }
+                Ok(LayerManifest {
+                    index: l.get_usize("index")?,
+                    kind: l.get_str("kind")?.to_string(),
+                    in_shape: l.get_usize_vec("in_shape")?,
+                    out_shape: l.get_usize_vec("out_shape")?,
+                    params: l.get_f64("params")? as u64,
+                    param_bytes: l.get_f64("param_bytes")? as u64,
+                    act_bytes: l.get_f64("act_bytes")? as u64,
+                    flops: l.get_f64("flops")? as u64,
+                    weights,
+                    hlo,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let m = Manifest {
+            model: j.get_str("model")?.to_string(),
+            dir,
+            impl_name: j.get_str("impl")?.to_string(),
+            seed: j.get_f64("seed")? as u64,
+            num_layers: j.get_usize("num_layers")?,
+            paper_layers: j.get_usize("paper_layers")?,
+            input_hw: j.get_usize("input_hw")?,
+            input_ch: j.get_usize("input_ch")?,
+            num_classes: j.get_usize("num_classes")?,
+            top1_accuracy: j.get_f64("top1_accuracy")?,
+            total_params: j.get_f64("total_params")? as u64,
+            batches: j
+                .get("batches")?
+                .as_arr()?
+                .iter()
+                .map(|b| b.as_usize())
+                .collect::<std::result::Result<Vec<_>, _>>()?,
+            layers,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural invariants every manifest must satisfy.
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.len() != self.num_layers {
+            bail!(
+                "manifest {}: {} layer entries but num_layers={}",
+                self.model,
+                self.layers.len(),
+                self.num_layers
+            );
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.index != i + 1 {
+                bail!("manifest {}: layer {} has index {}", self.model, i, l.index);
+            }
+            if i + 1 < self.layers.len() && l.out_shape != self.layers[i + 1].in_shape {
+                bail!(
+                    "manifest {}: layer {} out {:?} != layer {} in {:?}",
+                    self.model, l.index, l.out_shape, l.index + 1,
+                    self.layers[i + 1].in_shape
+                );
+            }
+            for b in &self.batches {
+                if !l.hlo.contains_key(b) {
+                    bail!("manifest {}: layer {} missing hlo for batch {b}", self.model, l.index);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Absolute path of a layer's HLO for a batch size.
+    pub fn hlo_path(&self, index: usize, batch: usize) -> Result<PathBuf> {
+        let l = &self.layers[index - 1];
+        let rel = l
+            .hlo
+            .get(&batch)
+            .with_context(|| format!("{} layer {index} has no batch-{batch} HLO", self.model))?;
+        Ok(self.dir.join(rel))
+    }
+
+    /// Absolute path of a weight file.
+    pub fn weight_path(&self, w: &WeightMeta) -> PathBuf {
+        self.dir.join(&w.file)
+    }
+
+    /// List models available under an artifacts dir.
+    pub fn available_models(artifacts_dir: &Path) -> Vec<String> {
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(artifacts_dir) {
+            for e in rd.flatten() {
+                if e.path().join("manifest.json").exists() {
+                    out.push(e.file_name().to_string_lossy().to_string());
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_json() -> String {
+        r#"{
+          "model": "tiny", "impl": "pallas", "seed": 0,
+          "num_layers": 2, "paper_layers": 2,
+          "input_hw": 8, "input_ch": 3, "num_classes": 4,
+          "top1_accuracy": 0.5, "total_params": 112, "batches": [1],
+          "layers": [
+            {"index": 1, "kind": "conv2d", "in_shape": [1,3,8,8],
+             "out_shape": [1,4,8,8], "params": 112, "param_bytes": 448,
+             "act_bytes": 1024, "flops": 55296,
+             "weights": [{"name": "w", "file": "weights/layer_001_w.bin", "shape": [4,3,3,3]}],
+             "hlo": {"1": "b1/layer_001.hlo.txt"}},
+            {"index": 2, "kind": "relu", "in_shape": [1,4,8,8],
+             "out_shape": [1,4,8,8], "params": 0, "param_bytes": 0,
+             "act_bytes": 1024, "flops": 256, "weights": [],
+             "hlo": {"1": "b1/layer_002.hlo.txt"}}
+          ]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_toy_manifest() {
+        let j = Json::parse(&toy_json()).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from("/tmp/x")).unwrap();
+        assert_eq!(m.model, "tiny");
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.layers[0].weights[0].num_elements(), 108);
+        assert_eq!(
+            m.hlo_path(2, 1).unwrap(),
+            PathBuf::from("/tmp/x/b1/layer_002.hlo.txt")
+        );
+        assert!(m.hlo_path(1, 8).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_shape_mismatch() {
+        let bad = toy_json().replace("\"in_shape\": [1,4,8,8]", "\"in_shape\": [1,5,8,8]");
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&j, PathBuf::from("/tmp/x")).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_wrong_index() {
+        let bad = toy_json().replace("\"index\": 2", "\"index\": 3");
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&j, PathBuf::from("/tmp/x")).is_err());
+    }
+}

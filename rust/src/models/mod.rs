@@ -1,0 +1,11 @@
+//! CNN model descriptors: the layer-spec algebra (shapes, params, FLOPs,
+//! the paper's memory quantities), the five-model zoo, and the
+//! `manifest.json` loader that binds the rust side to the python AOT
+//! artifacts.
+
+pub mod manifest;
+pub mod spec;
+pub mod zoo;
+
+pub use manifest::{LayerManifest, Manifest, WeightMeta};
+pub use spec::{Layer, LayerProfile, ModelProfile, ModelSpec, Shape, DTYPE_BYTES};

@@ -1,0 +1,344 @@
+//! CNN layer-spec algebra: shape propagation, parameter counts, FLOPs and
+//! the paper's memory quantities (`M|l1`, `I|l1`) — the rust mirror of
+//! `python/compile/specs.py`. The two implementations are cross-checked by
+//! the integration test that replays every `manifest.json` through this
+//! module (`rust/tests/manifest_crosscheck.rs`).
+//!
+//! Memory accounting follows the paper's reference [39]:
+//! `M_client|l1 = Σ_{i≤l1} (param_bytes_i + act_bytes_i)`,
+//! `I|l1 = act_bytes_{l1}` (what must be uploaded at the split).
+
+pub const DTYPE_BYTES: u64 = 4; // f32 end to end
+
+/// One paper "layer" (torchvision module granularity).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Layer {
+    Conv2d {
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        bias: bool,
+        folded_bn: bool,
+    },
+    ReLU,
+    ReLU6,
+    MaxPool2d { kernel: usize, stride: usize },
+    AdaptiveAvgPool2d { out_hw: usize },
+    Dropout,
+    Linear { in_features: usize, out_features: usize, bias: bool, global_pool: bool },
+    InvertedResidual { in_ch: usize, out_ch: usize, stride: usize, expand_ratio: usize },
+}
+
+/// Tensor shape: `[N, C, H, W]` through the conv trunk, `[N, F]` after a
+/// Linear.
+pub type Shape = Vec<usize>;
+
+impl Layer {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Layer::Conv2d { .. } => "conv2d",
+            Layer::ReLU => "relu",
+            Layer::ReLU6 => "relu6",
+            Layer::MaxPool2d { .. } => "maxpool2d",
+            Layer::AdaptiveAvgPool2d { .. } => "adaptiveavgpool2d",
+            Layer::Dropout => "dropout",
+            Layer::Linear { .. } => "linear",
+            Layer::InvertedResidual { .. } => "inverted_residual",
+        }
+    }
+
+    /// `(H + 2P - K) / S + 1`
+    pub fn conv_out_hw(h: usize, kernel: usize, stride: usize, padding: usize) -> usize {
+        (h + 2 * padding - kernel) / stride + 1
+    }
+
+    pub fn out_shape(&self, input: &Shape) -> Shape {
+        match self {
+            Layer::Conv2d { in_ch, out_ch, kernel, stride, padding, .. } => {
+                assert_eq!(input[1], *in_ch, "conv channel mismatch");
+                let oh = Self::conv_out_hw(input[2], *kernel, *stride, *padding);
+                let ow = Self::conv_out_hw(input[3], *kernel, *stride, *padding);
+                vec![input[0], *out_ch, oh, ow]
+            }
+            Layer::ReLU | Layer::ReLU6 | Layer::Dropout => input.clone(),
+            Layer::MaxPool2d { kernel, stride } => {
+                let oh = Self::conv_out_hw(input[2], *kernel, *stride, 0);
+                let ow = Self::conv_out_hw(input[3], *kernel, *stride, 0);
+                vec![input[0], input[1], oh, ow]
+            }
+            Layer::AdaptiveAvgPool2d { out_hw } => {
+                vec![input[0], input[1], *out_hw, *out_hw]
+            }
+            Layer::Linear { in_features, out_features, global_pool, .. } => {
+                let f = if input.len() == 4 && *global_pool {
+                    input[1]
+                } else {
+                    input[1..].iter().product()
+                };
+                assert_eq!(f, *in_features, "linear feature mismatch");
+                vec![input[0], *out_features]
+            }
+            Layer::InvertedResidual { in_ch, out_ch, stride, .. } => {
+                assert_eq!(input[1], *in_ch, "block channel mismatch");
+                let oh = Self::conv_out_hw(input[2], 3, *stride, 1);
+                let ow = Self::conv_out_hw(input[3], 3, *stride, 1);
+                vec![input[0], *out_ch, oh, ow]
+            }
+        }
+    }
+
+    pub fn param_count(&self) -> u64 {
+        match self {
+            Layer::Conv2d { in_ch, out_ch, kernel, bias, folded_bn, .. } => {
+                let mut n = (out_ch * in_ch * kernel * kernel) as u64;
+                if *bias {
+                    n += *out_ch as u64;
+                }
+                if *folded_bn {
+                    n += 2 * *out_ch as u64;
+                }
+                n
+            }
+            Layer::Linear { in_features, out_features, bias, .. } => {
+                let mut n = (in_features * out_features) as u64;
+                if *bias {
+                    n += *out_features as u64;
+                }
+                n
+            }
+            Layer::InvertedResidual { in_ch, out_ch, expand_ratio, .. } => {
+                let hid = in_ch * expand_ratio;
+                let mut n = 0u64;
+                if *expand_ratio != 1 {
+                    n += (in_ch * hid + 2 * hid) as u64;
+                }
+                n += (hid * 9 + 2 * hid) as u64;
+                n += (hid * out_ch + 2 * out_ch) as u64;
+                n
+            }
+            _ => 0,
+        }
+    }
+
+    /// 2·MAC FLOPs, mirroring `specs.flop_count`.
+    pub fn flops(&self, input: &Shape) -> u64 {
+        let out = self.out_shape(input);
+        let prod = |s: &Shape| s.iter().product::<usize>() as u64;
+        match self {
+            Layer::Conv2d { in_ch, kernel, .. } => {
+                let (n, oc, oh, ow) = (out[0], out[1], out[2], out[3]);
+                2 * (n * oc * oh * ow * in_ch * kernel * kernel) as u64
+            }
+            Layer::Linear { in_features, out_features, global_pool, .. } => {
+                let n = input[0] as u64;
+                let mut f = 2 * n * (*in_features as u64) * (*out_features as u64);
+                if input.len() == 4 && *global_pool {
+                    f += prod(input);
+                }
+                f
+            }
+            Layer::ReLU | Layer::ReLU6 | Layer::AdaptiveAvgPool2d { .. } => prod(input),
+            Layer::MaxPool2d { kernel, .. } => prod(&out) * (kernel * kernel) as u64,
+            Layer::InvertedResidual { in_ch, out_ch, expand_ratio, .. } => {
+                let (n, h, w) = (input[0] as u64, input[2] as u64, input[3] as u64);
+                let (oh, ow) = (out[2] as u64, out[3] as u64);
+                let hid = (in_ch * expand_ratio) as u64;
+                let mut macs = 0u64;
+                if *expand_ratio != 1 {
+                    macs += n * h * w * (*in_ch as u64) * hid;
+                }
+                macs += n * oh * ow * hid * 9;
+                macs += n * oh * ow * hid * (*out_ch as u64);
+                let mut f = 2 * macs;
+                if self.uses_residual() {
+                    f += prod(&out);
+                }
+                f
+            }
+            Layer::Dropout => 0,
+        }
+    }
+
+    pub fn uses_residual(&self) -> bool {
+        matches!(self, Layer::InvertedResidual { in_ch, out_ch, stride, .. }
+                 if *stride == 1 && in_ch == out_ch)
+    }
+}
+
+/// Whole-model spec plus derived per-layer profile.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    pub input_hw: usize,
+    pub input_ch: usize,
+    pub num_classes: usize,
+    /// Published ImageNet top-1 (Fig. 10's accuracy axis).
+    pub top1_accuracy: f64,
+}
+
+/// Per-layer derived quantities at a given batch size.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerProfile {
+    /// 1-based index matching the paper's split indices.
+    pub index: usize,
+    pub kind: &'static str,
+    pub in_shape: Shape,
+    pub out_shape: Shape,
+    pub params: u64,
+    pub param_bytes: u64,
+    /// Output activation bytes — `I|l` when the split is after this layer.
+    pub act_bytes: u64,
+    pub flops: u64,
+}
+
+/// A fully analysed model: the single source the perf model, optimiser and
+/// coordinator all consume.
+#[derive(Clone, Debug)]
+pub struct ModelProfile {
+    pub name: String,
+    pub num_layers: usize,
+    pub batch: usize,
+    pub top1_accuracy: f64,
+    pub layers: Vec<LayerProfile>,
+}
+
+impl ModelSpec {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn analyze(&self, batch: usize) -> ModelProfile {
+        let mut shape: Shape = vec![batch, self.input_ch, self.input_hw, self.input_hw];
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for (i, layer) in self.layers.iter().enumerate() {
+            let out = layer.out_shape(&shape);
+            let params = layer.param_count();
+            layers.push(LayerProfile {
+                index: i + 1,
+                kind: layer.kind(),
+                in_shape: shape.clone(),
+                out_shape: out.clone(),
+                params,
+                param_bytes: params * DTYPE_BYTES,
+                act_bytes: out.iter().product::<usize>() as u64 * DTYPE_BYTES,
+                flops: layer.flops(&shape),
+            });
+            shape = out;
+        }
+        ModelProfile {
+            name: self.name.clone(),
+            num_layers: self.layers.len(),
+            batch,
+            top1_accuracy: self.top1_accuracy,
+            layers,
+        }
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+}
+
+impl ModelProfile {
+    /// `M_client | l1` in bytes (Eq. 16 / f3).
+    pub fn client_memory_bytes(&self, l1: usize) -> u64 {
+        self.layers[..l1].iter().map(|l| l.param_bytes + l.act_bytes).sum()
+    }
+
+    /// `M_server | l2` in bytes where `l2 = L - l1`.
+    pub fn server_memory_bytes(&self, l1: usize) -> u64 {
+        self.layers[l1..].iter().map(|l| l.param_bytes + l.act_bytes).sum()
+    }
+
+    /// `I | l1` in bytes — the activation shipped at the split.
+    pub fn intermediate_bytes(&self, l1: usize) -> u64 {
+        assert!((1..=self.num_layers).contains(&l1), "split {l1} out of range");
+        self.layers[l1 - 1].act_bytes
+    }
+
+    /// FLOPs of layers `1..=l1`.
+    pub fn client_flops(&self, l1: usize) -> u64 {
+        self.layers[..l1].iter().map(|l| l.flops).sum()
+    }
+
+    /// FLOPs of layers `l1+1..=L`.
+    pub fn server_flops(&self, l1: usize) -> u64 {
+        self.layers[l1..].iter().map(|l| l.flops).sum()
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.layers.iter().map(|l| l.flops).sum()
+    }
+
+    pub fn total_param_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.param_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_out_hw_matches_paper_models() {
+        assert_eq!(Layer::conv_out_hw(224, 11, 4, 2), 55); // AlexNet conv1
+        assert_eq!(Layer::conv_out_hw(224, 3, 1, 1), 224); // VGG conv
+        assert_eq!(Layer::conv_out_hw(224, 3, 2, 1), 112); // MobileNet stem
+        assert_eq!(Layer::conv_out_hw(55, 3, 2, 0), 27); // AlexNet pool1
+    }
+
+    #[test]
+    fn conv_shape_and_params() {
+        let conv = Layer::Conv2d {
+            in_ch: 3, out_ch: 64, kernel: 11, stride: 4, padding: 2,
+            bias: true, folded_bn: false,
+        };
+        assert_eq!(conv.out_shape(&vec![1, 3, 224, 224]), vec![1, 64, 55, 55]);
+        assert_eq!(conv.param_count(), 64 * 3 * 11 * 11 + 64);
+        assert_eq!(conv.flops(&vec![1, 3, 224, 224]), 2 * 64 * 55 * 55 * 3 * 11 * 11);
+    }
+
+    #[test]
+    fn linear_implicit_flatten_and_global_pool() {
+        let lin = Layer::Linear { in_features: 9216, out_features: 4096, bias: true, global_pool: false };
+        assert_eq!(lin.out_shape(&vec![1, 256, 6, 6]), vec![1, 4096]);
+        let gp = Layer::Linear { in_features: 1280, out_features: 1000, bias: true, global_pool: true };
+        assert_eq!(gp.out_shape(&vec![1, 1280, 7, 7]), vec![1, 1000]);
+    }
+
+    #[test]
+    fn inverted_residual_rules() {
+        let res = Layer::InvertedResidual { in_ch: 16, out_ch: 16, stride: 1, expand_ratio: 6 };
+        assert!(res.uses_residual());
+        let strided = Layer::InvertedResidual { in_ch: 16, out_ch: 16, stride: 2, expand_ratio: 6 };
+        assert!(!strided.uses_residual());
+        assert_eq!(strided.out_shape(&vec![1, 16, 56, 56]), vec![1, 16, 28, 28]);
+    }
+
+    #[test]
+    #[should_panic(expected = "split 0 out of range")]
+    fn intermediate_bytes_rejects_zero() {
+        let spec = ModelSpec {
+            name: "t".into(),
+            layers: vec![Layer::ReLU],
+            input_hw: 4,
+            input_ch: 1,
+            num_classes: 2,
+            top1_accuracy: 0.0,
+        };
+        spec.analyze(1).intermediate_bytes(0);
+    }
+
+    #[test]
+    fn memory_partition_sums_to_total() {
+        let spec = crate::models::zoo::alexnet();
+        let p = spec.analyze(1);
+        let total = p.client_memory_bytes(p.num_layers);
+        for l1 in 1..=p.num_layers {
+            assert_eq!(p.client_memory_bytes(l1) + p.server_memory_bytes(l1), total);
+        }
+    }
+}

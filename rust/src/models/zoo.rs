@@ -1,0 +1,199 @@
+//! The paper's CNN zoo in rust — identical layer sequences to
+//! `python/compile/zoo.py` (the manifest cross-check test enforces this).
+
+use super::spec::{Layer, ModelSpec};
+
+fn conv(in_ch: usize, out_ch: usize, kernel: usize, stride: usize, padding: usize) -> Layer {
+    Layer::Conv2d { in_ch, out_ch, kernel, stride, padding, bias: true, folded_bn: false }
+}
+
+/// AlexNet — 21 layers (paper Table I/II split domain 1..=21).
+pub fn alexnet() -> ModelSpec {
+    let layers = vec![
+        conv(3, 64, 11, 4, 2),
+        Layer::ReLU,
+        Layer::MaxPool2d { kernel: 3, stride: 2 },
+        conv(64, 192, 5, 1, 2),
+        Layer::ReLU,
+        Layer::MaxPool2d { kernel: 3, stride: 2 },
+        conv(192, 384, 3, 1, 1),
+        Layer::ReLU,
+        conv(384, 256, 3, 1, 1),
+        Layer::ReLU,
+        conv(256, 256, 3, 1, 1),
+        Layer::ReLU,
+        Layer::MaxPool2d { kernel: 3, stride: 2 },
+        Layer::AdaptiveAvgPool2d { out_hw: 6 },
+        Layer::Dropout,
+        Layer::Linear { in_features: 256 * 6 * 6, out_features: 4096, bias: true, global_pool: false },
+        Layer::ReLU,
+        Layer::Dropout,
+        Layer::Linear { in_features: 4096, out_features: 4096, bias: true, global_pool: false },
+        Layer::ReLU,
+        Layer::Linear { in_features: 4096, out_features: 1000, bias: true, global_pool: false },
+    ];
+    ModelSpec {
+        name: "alexnet".into(),
+        layers,
+        input_hw: 224,
+        input_ch: 3,
+        num_classes: 1000,
+        top1_accuracy: 0.5652,
+    }
+}
+
+fn vgg(name: &str, cfg: &[i32], top1: f64) -> ModelSpec {
+    let mut layers = Vec::new();
+    let mut in_ch = 3usize;
+    for &v in cfg {
+        if v < 0 {
+            layers.push(Layer::MaxPool2d { kernel: 2, stride: 2 });
+        } else {
+            layers.push(conv(in_ch, v as usize, 3, 1, 1));
+            layers.push(Layer::ReLU);
+            in_ch = v as usize;
+        }
+    }
+    layers.push(Layer::AdaptiveAvgPool2d { out_hw: 7 });
+    layers.extend([
+        Layer::Dropout,
+        Layer::Linear { in_features: 512 * 7 * 7, out_features: 4096, bias: true, global_pool: false },
+        Layer::ReLU,
+        Layer::Dropout,
+        Layer::Linear { in_features: 4096, out_features: 4096, bias: true, global_pool: false },
+        Layer::ReLU,
+        Layer::Linear { in_features: 4096, out_features: 1000, bias: true, global_pool: false },
+    ]);
+    ModelSpec {
+        name: name.into(),
+        layers,
+        input_hw: 224,
+        input_ch: 3,
+        num_classes: 1000,
+        top1_accuracy: top1,
+    }
+}
+
+/// VGG11 — 29 layers.
+pub fn vgg11() -> ModelSpec {
+    vgg("vgg11", &[64, -1, 128, -1, 256, 256, -1, 512, 512, -1, 512, 512, -1], 0.6902)
+}
+
+/// VGG13 — 33 layers.
+pub fn vgg13() -> ModelSpec {
+    vgg("vgg13", &[64, 64, -1, 128, 128, -1, 256, 256, -1, 512, 512, -1, 512, 512, -1], 0.6992)
+}
+
+/// VGG16 — 39 layers.
+pub fn vgg16() -> ModelSpec {
+    vgg(
+        "vgg16",
+        &[64, 64, -1, 128, 128, -1, 256, 256, 256, -1, 512, 512, 512, -1, 512, 512, 512, -1],
+        0.7159,
+    )
+}
+
+/// MobileNetV2 — 21 layers (stem + 17 inverted residuals + head + dropout +
+/// global-pool linear).
+pub fn mobilenet_v2() -> ModelSpec {
+    let inverted_cfg: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut layers = vec![Layer::Conv2d {
+        in_ch: 3, out_ch: 32, kernel: 3, stride: 2, padding: 1, bias: false, folded_bn: true,
+    }];
+    let mut in_ch = 32usize;
+    for (t, c, n, s) in inverted_cfg {
+        for i in 0..n {
+            layers.push(Layer::InvertedResidual {
+                in_ch,
+                out_ch: c,
+                stride: if i == 0 { s } else { 1 },
+                expand_ratio: t,
+            });
+            in_ch = c;
+        }
+    }
+    layers.push(Layer::Conv2d {
+        in_ch, out_ch: 1280, kernel: 1, stride: 1, padding: 0, bias: false, folded_bn: true,
+    });
+    layers.push(Layer::Dropout);
+    layers.push(Layer::Linear { in_features: 1280, out_features: 1000, bias: true, global_pool: true });
+    ModelSpec {
+        name: "mobilenet_v2".into(),
+        layers,
+        input_hw: 224,
+        input_ch: 3,
+        num_classes: 1000,
+        top1_accuracy: 0.7188,
+    }
+}
+
+/// All paper models by name.
+pub fn by_name(name: &str) -> Option<ModelSpec> {
+    match name {
+        "alexnet" => Some(alexnet()),
+        "vgg11" => Some(vgg11()),
+        "vgg13" => Some(vgg13()),
+        "vgg16" => Some(vgg16()),
+        "mobilenet_v2" => Some(mobilenet_v2()),
+        _ => None,
+    }
+}
+
+/// The four split-target models of Tables I/II (MobileNetV2 is the Fig. 10
+/// comparison baseline, never split).
+pub const SPLIT_MODELS: [&str; 4] = ["alexnet", "vgg11", "vgg13", "vgg16"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_layer_counts() {
+        assert_eq!(alexnet().num_layers(), 21);
+        assert_eq!(vgg11().num_layers(), 29);
+        assert_eq!(vgg13().num_layers(), 33);
+        assert_eq!(vgg16().num_layers(), 39);
+        assert_eq!(mobilenet_v2().num_layers(), 21);
+    }
+
+    #[test]
+    fn published_param_counts() {
+        assert_eq!(alexnet().total_params(), 61_100_840);
+        assert_eq!(vgg11().total_params(), 132_863_336);
+        assert_eq!(vgg13().total_params(), 133_047_848);
+        assert_eq!(vgg16().total_params(), 138_357_544);
+        let m = mobilenet_v2().total_params() as f64;
+        assert!((m - 3_504_872.0).abs() / 3_504_872.0 < 0.01);
+    }
+
+    #[test]
+    fn shapes_chain_to_logits() {
+        for name in ["alexnet", "vgg11", "vgg13", "vgg16", "mobilenet_v2"] {
+            let p = by_name(name).unwrap().analyze(1);
+            assert_eq!(p.layers.last().unwrap().out_shape, vec![1, 1000], "{name}");
+            for w in p.layers.windows(2) {
+                assert_eq!(w[0].out_shape, w[1].in_shape, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_unknown_is_none() {
+        assert!(by_name("resnet50").is_none());
+    }
+
+    #[test]
+    fn vgg16_flops_magnitude() {
+        let p = vgg16().analyze(1);
+        let total = p.total_flops() as f64;
+        assert!(total > 29e9 && total < 33e9, "vgg16 flops {total}");
+    }
+}

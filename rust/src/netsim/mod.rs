@@ -1,0 +1,204 @@
+//! WiFi link simulator.
+//!
+//! The paper's testbed put both phones and the server on a 10 Mbps WiFi
+//! network. We reproduce that over TCP loopback with a token-bucket shaper:
+//! the serving path pushes real bytes through a real socket while
+//! [`Link::throttle`] paces them to the configured bandwidth, so upload
+//! latency/energy behave like Eq. 4/9 (DESIGN.md §4 substitution).
+//!
+//! [`BandwidthTrace`] provides time-varying bandwidth for the adaptive
+//! re-optimisation example (the condition the paper's conclusion flags as
+//! the reason bandwidth is "a crucial parameter").
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A shaped point-to-point link.
+#[derive(Debug)]
+pub struct Link {
+    state: Mutex<LinkState>,
+    /// Propagation delay added to every transfer.
+    pub base_latency: Duration,
+}
+
+#[derive(Debug)]
+struct LinkState {
+    bandwidth_mbps: f64,
+    /// Token bucket: available byte-budget and last refill instant.
+    tokens: f64,
+    last_refill: Instant,
+    burst_bytes: f64,
+    /// Totals for metrics.
+    bytes_up: u64,
+    bytes_down: u64,
+}
+
+impl Link {
+    pub fn new(bandwidth_mbps: f64) -> Self {
+        Link {
+            state: Mutex::new(LinkState {
+                bandwidth_mbps,
+                tokens: 0.0,
+                last_refill: Instant::now(),
+                burst_bytes: 64.0 * 1024.0,
+                bytes_up: 0,
+                bytes_down: 0,
+            }),
+            base_latency: Duration::from_millis(2),
+        }
+    }
+
+    pub fn bandwidth_mbps(&self) -> f64 {
+        self.state.lock().unwrap().bandwidth_mbps
+    }
+
+    /// Retune the link (adaptive-bandwidth scenarios).
+    pub fn set_bandwidth_mbps(&self, mbps: f64) {
+        assert!(mbps > 0.0);
+        self.state.lock().unwrap().bandwidth_mbps = mbps;
+    }
+
+    /// Ideal transfer time for `bytes` at the current bandwidth (Eq. 4).
+    pub fn transfer_time(&self, bytes: u64) -> Duration {
+        let mbps = self.bandwidth_mbps();
+        Duration::from_secs_f64(bytes as f64 * 8.0 / (mbps * 1e6))
+            + self.base_latency
+    }
+
+    /// Block until the token bucket admits `bytes` (called by the framing
+    /// layer per chunk). Returns the time actually waited.
+    pub fn throttle(&self, bytes: u64, upload: bool) -> Duration {
+        let start = Instant::now();
+        loop {
+            let wait = {
+                let mut st = self.state.lock().unwrap();
+                let now = Instant::now();
+                let rate = st.bandwidth_mbps * 1e6 / 8.0; // bytes/s
+                let elapsed = now.duration_since(st.last_refill).as_secs_f64();
+                st.tokens = (st.tokens + elapsed * rate).min(st.burst_bytes.max(bytes as f64));
+                st.last_refill = now;
+                if st.tokens >= bytes as f64 {
+                    st.tokens -= bytes as f64;
+                    if upload {
+                        st.bytes_up += bytes;
+                    } else {
+                        st.bytes_down += bytes;
+                    }
+                    None
+                } else {
+                    let deficit = bytes as f64 - st.tokens;
+                    Some(Duration::from_secs_f64(deficit / rate))
+                }
+            };
+            match wait {
+                None => return start.elapsed(),
+                Some(d) => std::thread::sleep(d.min(Duration::from_millis(50))),
+            }
+        }
+    }
+
+    pub fn bytes_transferred(&self) -> (u64, u64) {
+        let st = self.state.lock().unwrap();
+        (st.bytes_up, st.bytes_down)
+    }
+}
+
+/// Piecewise-constant bandwidth over time, for adaptive scenarios.
+#[derive(Clone, Debug)]
+pub struct BandwidthTrace {
+    /// (start offset, bandwidth in Mbps), sorted by offset; first must be 0.
+    pub points: Vec<(Duration, f64)>,
+}
+
+impl BandwidthTrace {
+    pub fn constant(mbps: f64) -> Self {
+        BandwidthTrace { points: vec![(Duration::ZERO, mbps)] }
+    }
+
+    /// A step trace: every `period` the bandwidth moves to the next value,
+    /// cycling.
+    pub fn steps(period: Duration, values: &[f64], total: Duration) -> Self {
+        assert!(!values.is_empty());
+        let mut points = Vec::new();
+        let mut t = Duration::ZERO;
+        let mut i = 0;
+        while t < total {
+            points.push((t, values[i % values.len()]));
+            i += 1;
+            t += period;
+        }
+        BandwidthTrace { points }
+    }
+
+    /// Bandwidth at `elapsed` since trace start.
+    pub fn at(&self, elapsed: Duration) -> f64 {
+        let mut current = self.points[0].1;
+        for &(t, v) in &self.points {
+            if elapsed >= t {
+                current = v;
+            } else {
+                break;
+            }
+        }
+        current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_matches_eq4() {
+        let link = Link::new(10.0);
+        // 774400 bytes (AlexNet layer-1 activation) at 10 Mbps ≈ 0.61952 s
+        let t = link.transfer_time(774_400);
+        let ideal = 774_400.0 * 8.0 / 10e6;
+        assert!((t.as_secs_f64() - ideal - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throttle_paces_to_bandwidth() {
+        let link = Link::new(80.0); // 10 MB/s
+        let start = Instant::now();
+        let mut sent = 0u64;
+        while sent < 1_000_000 {
+            link.throttle(64 * 1024, true);
+            sent += 64 * 1024;
+        }
+        let took = start.elapsed().as_secs_f64();
+        let ideal = sent as f64 / 10e6;
+        assert!(took >= ideal * 0.8, "sent too fast: {took}s vs ideal {ideal}s");
+        assert!(took < ideal * 2.0 + 0.2, "sent too slow: {took}s vs ideal {ideal}s");
+        assert_eq!(link.bytes_transferred().0, sent);
+    }
+
+    #[test]
+    fn set_bandwidth_applies() {
+        let link = Link::new(10.0);
+        link.set_bandwidth_mbps(40.0);
+        assert_eq!(link.bandwidth_mbps(), 40.0);
+        let t = link.transfer_time(1_000_000);
+        assert!((t.as_secs_f64() - (8e6 / 40e6) - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_steps_and_lookup() {
+        let tr = BandwidthTrace::steps(
+            Duration::from_secs(10),
+            &[10.0, 2.0, 40.0],
+            Duration::from_secs(30),
+        );
+        assert_eq!(tr.at(Duration::from_secs(0)), 10.0);
+        assert_eq!(tr.at(Duration::from_secs(9)), 10.0);
+        assert_eq!(tr.at(Duration::from_secs(10)), 2.0);
+        assert_eq!(tr.at(Duration::from_secs(25)), 40.0);
+        assert_eq!(tr.at(Duration::from_secs(300)), 40.0); // clamps to last
+    }
+
+    #[test]
+    fn constant_trace() {
+        let tr = BandwidthTrace::constant(10.0);
+        assert_eq!(tr.at(Duration::from_secs(1000)), 10.0);
+    }
+}

@@ -1,0 +1,237 @@
+//! The paper's competing algorithms (§VI-C): LBO, EBO, COS, COC, RS —
+//! plus SmartSplit itself behind the same [`Splitter`] interface so the
+//! comparison benches treat all six uniformly.
+
+use crate::perfmodel::PerfModel;
+use crate::util::rng::Xoshiro256;
+
+use super::nsga2::{optimize, Nsga2Params};
+use super::problem::SplitProblem;
+use super::topsis::topsis;
+
+/// A split decision: how many layers stay on the smartphone.
+/// `l1 == 0` means COC (everything on the cloud); `l1 == L` means COS.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SplitDecision {
+    pub l1: usize,
+}
+
+/// The six §VI-C algorithms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    SmartSplit,
+    /// Latency-based optimisation: argmin f1.
+    Lbo,
+    /// Energy-based optimisation: argmin f2.
+    Ebo,
+    /// CNN on smartphone: l1 = L.
+    Cos,
+    /// CNN on cloud: l1 = 0.
+    Coc,
+    /// Random split per run.
+    Rs,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 6] = [
+        Algorithm::SmartSplit,
+        Algorithm::Lbo,
+        Algorithm::Ebo,
+        Algorithm::Cos,
+        Algorithm::Coc,
+        Algorithm::Rs,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::SmartSplit => "SmartSplit",
+            Algorithm::Lbo => "LBO",
+            Algorithm::Ebo => "EBO",
+            Algorithm::Cos => "COS",
+            Algorithm::Coc => "COC",
+            Algorithm::Rs => "RS",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Algorithm> {
+        Self::ALL.iter().copied().find(|a| a.name().eq_ignore_ascii_case(name))
+    }
+}
+
+/// Feasible split domain for the single-variable baselines: 1..=L-1
+/// (Eq. 17 requires at least one layer on each side).
+fn feasible_splits(pm: &PerfModel<'_>) -> Vec<usize> {
+    (1..pm.profile.num_layers).filter(|&l1| pm.feasible(l1)).collect()
+}
+
+/// Latency-based optimisation: the best split under f1 alone (Tang et
+/// al. [14]-style).
+pub fn lbo(pm: &PerfModel<'_>) -> SplitDecision {
+    let l1 = feasible_splits(pm)
+        .into_iter()
+        .min_by(|&a, &b| pm.f1(a).partial_cmp(&pm.f1(b)).unwrap())
+        .expect("no feasible split");
+    SplitDecision { l1 }
+}
+
+/// Energy-based optimisation: the best split under f2 alone (the paper
+/// designs this baseline itself, §VI-C2).
+pub fn ebo(pm: &PerfModel<'_>) -> SplitDecision {
+    let l1 = feasible_splits(pm)
+        .into_iter()
+        .min_by(|&a, &b| pm.f2(a).partial_cmp(&pm.f2(b)).unwrap())
+        .expect("no feasible split");
+    SplitDecision { l1 }
+}
+
+/// Everything on the phone.
+pub fn cos(pm: &PerfModel<'_>) -> SplitDecision {
+    SplitDecision { l1: pm.profile.num_layers }
+}
+
+/// Everything on the cloud.
+pub fn coc(_pm: &PerfModel<'_>) -> SplitDecision {
+    SplitDecision { l1: 0 }
+}
+
+/// Random split, uniform over 1..=L-1 (paper: "a random number is selected
+/// for each run").
+pub fn rs(pm: &PerfModel<'_>, rng: &mut Xoshiro256) -> SplitDecision {
+    SplitDecision { l1: rng.gen_range(1, pm.profile.num_layers - 1) }
+}
+
+/// Output of a full SmartSplit run (Algorithm 1): the Pareto set and the
+/// TOPSIS choice.
+#[derive(Clone, Debug)]
+pub struct SmartSplitResult {
+    pub decision: SplitDecision,
+    /// Pareto-set split indices (sorted) with their objective vectors.
+    pub pareto: Vec<(usize, [f64; 3])>,
+    pub evaluations: u64,
+}
+
+/// Algorithm 1: NSGA-II → Pareto set → TOPSIS → optimal split.
+pub fn smartsplit(pm: &PerfModel<'_>, params: &Nsga2Params) -> SmartSplitResult {
+    let problem = SplitProblem::new(pm);
+    let set = optimize(&problem, params);
+    let pareto: Vec<(usize, [f64; 3])> = set
+        .members
+        .iter()
+        .map(|m| {
+            let l1 = m.genome[0] as usize;
+            (l1, problem.objectives_at(l1))
+        })
+        .collect();
+    let rows: Vec<Vec<f64>> = pareto.iter().map(|(_, o)| o.to_vec()).collect();
+    let feasible: Vec<bool> = pareto.iter().map(|(l1, _)| problem.feasible_at(*l1)).collect();
+    let choice = topsis(&rows, &feasible).expect("Pareto set has no feasible member");
+    SmartSplitResult {
+        decision: SplitDecision { l1: pareto[choice.chosen].0 },
+        pareto,
+        evaluations: set.evaluations,
+    }
+}
+
+/// Uniform interface for the comparison benches (Figs. 7–9).
+pub fn decide(
+    algo: Algorithm,
+    pm: &PerfModel<'_>,
+    params: &Nsga2Params,
+    rng: &mut Xoshiro256,
+) -> SplitDecision {
+    match algo {
+        Algorithm::SmartSplit => smartsplit(pm, params).decision,
+        Algorithm::Lbo => lbo(pm),
+        Algorithm::Ebo => ebo(pm),
+        Algorithm::Cos => cos(pm),
+        Algorithm::Coc => coc(pm),
+        Algorithm::Rs => rs(pm, rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::models::zoo;
+    use crate::perfmodel::{NetworkEnv, PerfModel, RadioPower};
+
+    fn pm(profile: &crate::models::ModelProfile) -> PerfModel<'_> {
+        PerfModel::new(
+            profiles::samsung_j6(),
+            profiles::cloud_server(),
+            RadioPower::PAPER_80211N,
+            NetworkEnv::paper_default(),
+            profile,
+        )
+    }
+
+    #[test]
+    fn lbo_minimises_latency_over_domain() {
+        let p = zoo::alexnet().analyze(1);
+        let m = pm(&p);
+        let d = lbo(&m);
+        for l1 in 1..21 {
+            assert!(m.f1(d.l1) <= m.f1(l1) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn ebo_minimises_energy_over_domain() {
+        let p = zoo::vgg11().analyze(1);
+        let m = pm(&p);
+        let d = ebo(&m);
+        for l1 in 1..29 {
+            assert!(m.f2(d.l1) <= m.f2(l1) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn cos_coc_extremes() {
+        let p = zoo::alexnet().analyze(1);
+        let m = pm(&p);
+        assert_eq!(cos(&m).l1, 21);
+        assert_eq!(coc(&m).l1, 0);
+    }
+
+    #[test]
+    fn rs_stays_in_split_domain() {
+        let p = zoo::alexnet().analyze(1);
+        let m = pm(&p);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for _ in 0..200 {
+            let d = rs(&m, &mut rng);
+            assert!((1..21).contains(&d.l1));
+        }
+    }
+
+    #[test]
+    fn smartsplit_decision_is_on_pareto_front_and_feasible() {
+        let p = zoo::alexnet().analyze(1);
+        let m = pm(&p);
+        let params = Nsga2Params { pop_size: 40, generations: 40, ..Default::default() };
+        let r = smartsplit(&m, &params);
+        assert!(m.feasible(r.decision.l1));
+        assert!(r.pareto.iter().any(|(l1, _)| *l1 == r.decision.l1));
+        // No Pareto member may dominate another (front invariant).
+        for (i, (_, a)) in r.pareto.iter().enumerate() {
+            for (j, (_, b)) in r.pareto.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let dominates =
+                    a.iter().zip(b).all(|(x, y)| x <= y) && a.iter().zip(b).any(|(x, y)| x < y);
+                assert!(!dominates, "pareto member {j} dominated by {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn algorithm_names_roundtrip() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::by_name(a.name()), Some(a));
+        }
+        assert_eq!(Algorithm::by_name("smartsplit"), Some(Algorithm::SmartSplit));
+        assert_eq!(Algorithm::by_name("nope"), None);
+    }
+}

@@ -1,0 +1,19 @@
+//! The SmartSplit optimisation algorithm (paper §V, Algorithm 1):
+//! NSGA-II over split indices → Pareto set → TOPSIS → one split decision;
+//! plus the §VI-C competing algorithms (LBO/EBO/COS/COC/RS).
+
+pub mod baselines;
+pub mod nsga2;
+pub mod problem;
+pub mod scalarization;
+pub mod topsis;
+
+pub use baselines::{
+    coc, cos, decide, ebo, lbo, rs, smartsplit, Algorithm, SmartSplitResult, SplitDecision,
+};
+pub use nsga2::{optimize, Nsga2Params, ParetoSet, Problem};
+pub use problem::SplitProblem;
+pub use scalarization::{
+    epsilon_constrained, exhaustive_pareto_front, weighted_metric, weighted_sum,
+};
+pub use topsis::{topsis, TopsisResult};

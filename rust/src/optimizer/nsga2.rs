@@ -1,0 +1,450 @@
+//! NSGA-II (Deb et al. [43]) over integer decision vectors — the first half
+//! of Algorithm 1.
+//!
+//! A faithful implementation of the canonical algorithm: fast non-dominated
+//! sorting, crowding distance, binary-tournament mating selection on
+//! (rank, crowding), elitist (μ+λ) environmental selection, blend crossover
+//! + creep/reset mutation for integer genomes, and Deb's
+//! constraint-domination rule for infeasible candidates.
+//!
+//! Generic over the genome dimension so tests can drive it with standard
+//! multi-objective benchmarks (SCH, KUR) while the SmartSplit problem uses
+//! a 1-D genome (`[l1]`).
+
+use crate::util::rng::Xoshiro256;
+
+/// Genome: integer decision vector within per-dimension inclusive bounds.
+pub type Genome = Vec<i64>;
+
+/// A problem definition for the solver.
+pub trait Problem {
+    /// Inclusive (lo, hi) bounds per decision variable.
+    fn bounds(&self) -> Vec<(i64, i64)>;
+    /// Objective vector (all minimised).
+    fn objectives(&self, g: &Genome) -> Vec<f64>;
+    /// Hard-constraint violation: 0.0 when feasible, larger = worse.
+    fn violation(&self, _g: &Genome) -> f64 {
+        0.0
+    }
+    fn num_objectives(&self) -> usize;
+}
+
+/// Solver parameters (paper does not report its settings; defaults follow
+/// Deb's canonical choices sized to our tiny decision space).
+#[derive(Clone, Debug)]
+pub struct Nsga2Params {
+    pub pop_size: usize,
+    pub generations: usize,
+    pub crossover_prob: f64,
+    pub mutation_prob: f64,
+    pub seed: u64,
+}
+
+impl Default for Nsga2Params {
+    fn default() -> Self {
+        Nsga2Params {
+            pop_size: 100,
+            generations: 250,
+            crossover_prob: 0.9,
+            mutation_prob: 0.2,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// One evaluated individual.
+#[derive(Clone, Debug)]
+pub struct Individual {
+    pub genome: Genome,
+    pub objectives: Vec<f64>,
+    pub violation: f64,
+    pub rank: usize,
+    pub crowding: f64,
+}
+
+/// `a` dominates `b` under Deb's constraint-domination rule.
+pub fn dominates(a: &Individual, b: &Individual) -> bool {
+    if a.violation == 0.0 && b.violation > 0.0 {
+        return true;
+    }
+    if a.violation > 0.0 && b.violation > 0.0 {
+        return a.violation < b.violation;
+    }
+    if a.violation > 0.0 && b.violation == 0.0 {
+        return false;
+    }
+    let mut strictly_better = false;
+    for (x, y) in a.objectives.iter().zip(&b.objectives) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly_better = true;
+        }
+    }
+    strictly_better
+}
+
+/// Fast non-dominated sort: returns fronts of indices (front 0 first) and
+/// writes ranks into the individuals.
+pub fn fast_non_dominated_sort(pop: &mut [Individual]) -> Vec<Vec<usize>> {
+    let n = pop.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
+    let mut dom_count = vec![0usize; n]; // #individuals dominating i
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&pop[i], &pop[j]) {
+                dominated_by[i].push(j);
+                dom_count[j] += 1;
+            } else if dominates(&pop[j], &pop[i]) {
+                dominated_by[j].push(i);
+                dom_count[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| dom_count[i] == 0).collect();
+    let mut rank = 0;
+    while !current.is_empty() {
+        for &i in &current {
+            pop[i].rank = rank;
+        }
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated_by[i] {
+                dom_count[j] -= 1;
+                if dom_count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+        rank += 1;
+    }
+    fronts
+}
+
+/// Crowding distance within one front (written into the individuals).
+pub fn crowding_distance(pop: &mut [Individual], front: &[usize]) {
+    for &i in front {
+        pop[i].crowding = 0.0;
+    }
+    if front.len() <= 2 {
+        for &i in front {
+            pop[i].crowding = f64::INFINITY;
+        }
+        return;
+    }
+    let m = pop[front[0]].objectives.len();
+    for obj in 0..m {
+        let mut order: Vec<usize> = front.to_vec();
+        order.sort_by(|&a, &b| {
+            pop[a].objectives[obj]
+                .partial_cmp(&pop[b].objectives[obj])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let lo = pop[order[0]].objectives[obj];
+        let hi = pop[*order.last().unwrap()].objectives[obj];
+        pop[order[0]].crowding = f64::INFINITY;
+        pop[*order.last().unwrap()].crowding = f64::INFINITY;
+        let span = hi - lo;
+        if span <= 0.0 {
+            continue;
+        }
+        for w in 1..order.len() - 1 {
+            let prev = pop[order[w - 1]].objectives[obj];
+            let next = pop[order[w + 1]].objectives[obj];
+            pop[order[w]].crowding += (next - prev) / span;
+        }
+    }
+}
+
+/// Binary tournament on (rank asc, crowding desc).
+fn tournament<'a>(pop: &'a [Individual], rng: &mut Xoshiro256) -> &'a Individual {
+    let a = &pop[rng.gen_range(0, pop.len() - 1)];
+    let b = &pop[rng.gen_range(0, pop.len() - 1)];
+    if a.rank != b.rank {
+        if a.rank < b.rank { a } else { b }
+    } else if a.crowding != b.crowding {
+        if a.crowding > b.crowding { a } else { b }
+    } else {
+        a
+    }
+}
+
+fn clamp(v: i64, (lo, hi): (i64, i64)) -> i64 {
+    v.clamp(lo, hi)
+}
+
+/// Blend crossover for integer genomes: children drawn around the parents'
+/// affine span, rounded and clamped.
+fn crossover(
+    a: &Genome,
+    b: &Genome,
+    bounds: &[(i64, i64)],
+    rng: &mut Xoshiro256,
+) -> (Genome, Genome) {
+    let mut c1 = a.clone();
+    let mut c2 = b.clone();
+    for d in 0..a.len() {
+        let (x, y) = (a[d] as f64, b[d] as f64);
+        let u = rng.next_f64();
+        let v1 = u * x + (1.0 - u) * y;
+        let v2 = (1.0 - u) * x + u * y;
+        c1[d] = clamp(v1.round() as i64, bounds[d]);
+        c2[d] = clamp(v2.round() as i64, bounds[d]);
+    }
+    (c1, c2)
+}
+
+/// Mutation: 50/50 creep (±1..3) or uniform reset within bounds.
+fn mutate(g: &mut Genome, bounds: &[(i64, i64)], prob: f64, rng: &mut Xoshiro256) {
+    for d in 0..g.len() {
+        if !rng.gen_bool(prob) {
+            continue;
+        }
+        let (lo, hi) = bounds[d];
+        if rng.gen_bool(0.5) {
+            let step = rng.gen_range_u64(1, 3) as i64;
+            let dir = if rng.gen_bool(0.5) { 1 } else { -1 };
+            g[d] = clamp(g[d] + dir * step, bounds[d]);
+        } else {
+            g[d] = rng.gen_range_u64(0, (hi - lo) as u64) as i64 + lo;
+        }
+    }
+}
+
+/// Result of a run: the final population's first front (deduplicated).
+#[derive(Clone, Debug)]
+pub struct ParetoSet {
+    pub members: Vec<Individual>,
+    pub generations_run: usize,
+    pub evaluations: u64,
+}
+
+/// Run NSGA-II on `problem`.
+pub fn optimize<P: Problem>(problem: &P, params: &Nsga2Params) -> ParetoSet {
+    let bounds = problem.bounds();
+    let mut rng = Xoshiro256::seed_from_u64(params.seed);
+    let mut evaluations = 0u64;
+
+    let eval = |g: Genome, evals: &mut u64| -> Individual {
+        *evals += 1;
+        Individual {
+            objectives: problem.objectives(&g),
+            violation: problem.violation(&g),
+            genome: g,
+            rank: 0,
+            crowding: 0.0,
+        }
+    };
+
+    // Initial population: uniform random within bounds.
+    let mut pop: Vec<Individual> = (0..params.pop_size)
+        .map(|_| {
+            let g: Genome = bounds
+                .iter()
+                .map(|&(lo, hi)| rng.gen_range_u64(0, (hi - lo) as u64) as i64 + lo)
+                .collect();
+            eval(g, &mut evaluations)
+        })
+        .collect();
+    let fronts = fast_non_dominated_sort(&mut pop);
+    for f in &fronts {
+        crowding_distance(&mut pop, f);
+    }
+
+    for _gen in 0..params.generations {
+        // Offspring via tournament + crossover + mutation.
+        let mut offspring = Vec::with_capacity(params.pop_size);
+        while offspring.len() < params.pop_size {
+            let p1 = tournament(&pop, &mut rng).genome.clone();
+            let p2 = tournament(&pop, &mut rng).genome.clone();
+            let (mut c1, mut c2) = if rng.gen_bool(params.crossover_prob) {
+                crossover(&p1, &p2, &bounds, &mut rng)
+            } else {
+                (p1, p2)
+            };
+            mutate(&mut c1, &bounds, params.mutation_prob, &mut rng);
+            mutate(&mut c2, &bounds, params.mutation_prob, &mut rng);
+            offspring.push(eval(c1, &mut evaluations));
+            if offspring.len() < params.pop_size {
+                offspring.push(eval(c2, &mut evaluations));
+            }
+        }
+
+        // Elitist (μ+λ) environmental selection.
+        pop.extend(offspring);
+        let fronts = fast_non_dominated_sort(&mut pop);
+        for f in &fronts {
+            crowding_distance(&mut pop, f);
+        }
+        let mut next: Vec<Individual> = Vec::with_capacity(params.pop_size);
+        for front in &fronts {
+            if next.len() + front.len() <= params.pop_size {
+                next.extend(front.iter().map(|&i| pop[i].clone()));
+            } else {
+                let mut rest: Vec<usize> = front.clone();
+                rest.sort_by(|&a, &b| {
+                    pop[b]
+                        .crowding
+                        .partial_cmp(&pop[a].crowding)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                });
+                for &i in rest.iter().take(params.pop_size - next.len()) {
+                    next.push(pop[i].clone());
+                }
+                break;
+            }
+        }
+        pop = next;
+    }
+
+    // Final front 0, feasible only, deduplicated by genome.
+    let fronts = fast_non_dominated_sort(&mut pop);
+    for f in &fronts {
+        crowding_distance(&mut pop, f);
+    }
+    let mut members: Vec<Individual> = fronts
+        .first()
+        .map(|f| f.iter().map(|&i| pop[i].clone()).collect())
+        .unwrap_or_default();
+    members.retain(|m| m.violation == 0.0);
+    members.sort_by(|a, b| a.genome.cmp(&b.genome));
+    members.dedup_by(|a, b| a.genome == b.genome);
+    ParetoSet { members, generations_run: params.generations, evaluations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Schaffer's SCH: f1 = x², f2 = (x-2)² — Pareto front is x ∈ [0, 2].
+    struct Sch;
+
+    impl Problem for Sch {
+        fn bounds(&self) -> Vec<(i64, i64)> {
+            vec![(-1000, 1000)]
+        }
+        fn objectives(&self, g: &Genome) -> Vec<f64> {
+            let x = g[0] as f64 / 100.0;
+            vec![x * x, (x - 2.0) * (x - 2.0)]
+        }
+        fn num_objectives(&self) -> usize {
+            2
+        }
+    }
+
+    fn ind(objs: Vec<f64>, violation: f64) -> Individual {
+        Individual { genome: vec![], objectives: objs, violation, rank: 0, crowding: 0.0 }
+    }
+
+    #[test]
+    fn domination_rules() {
+        let a = ind(vec![1.0, 1.0], 0.0);
+        let b = ind(vec![2.0, 1.0], 0.0);
+        let c = ind(vec![0.5, 2.0], 0.0);
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        assert!(!dominates(&a, &c) && !dominates(&c, &a)); // incomparable
+        assert!(!dominates(&a, &a)); // strictness
+        // constraint domination
+        let infeasible = ind(vec![0.0, 0.0], 1.0);
+        let worse_infeasible = ind(vec![0.0, 0.0], 2.0);
+        assert!(dominates(&a, &infeasible));
+        assert!(!dominates(&infeasible, &a));
+        assert!(dominates(&infeasible, &worse_infeasible));
+    }
+
+    #[test]
+    fn non_dominated_sort_fronts() {
+        let mut pop = vec![
+            ind(vec![1.0, 4.0], 0.0), // front 0
+            ind(vec![4.0, 1.0], 0.0), // front 0
+            ind(vec![2.0, 5.0], 0.0), // dominated by 0
+            ind(vec![5.0, 5.0], 0.0), // dominated by all above
+        ];
+        let fronts = fast_non_dominated_sort(&mut pop);
+        assert_eq!(fronts[0], vec![0, 1]);
+        assert_eq!(fronts[1], vec![2]);
+        assert_eq!(fronts[2], vec![3]);
+        assert_eq!(pop[3].rank, 2);
+    }
+
+    #[test]
+    fn crowding_extremes_infinite() {
+        let mut pop = vec![
+            ind(vec![0.0, 3.0], 0.0),
+            ind(vec![1.0, 2.0], 0.0),
+            ind(vec![2.0, 1.0], 0.0),
+            ind(vec![3.0, 0.0], 0.0),
+        ];
+        let front: Vec<usize> = (0..4).collect();
+        crowding_distance(&mut pop, &front);
+        assert!(pop[0].crowding.is_infinite());
+        assert!(pop[3].crowding.is_infinite());
+        assert!(pop[1].crowding.is_finite() && pop[1].crowding > 0.0);
+    }
+
+    #[test]
+    fn solves_sch() {
+        let set = optimize(&Sch, &Nsga2Params { pop_size: 60, generations: 60, ..Default::default() });
+        assert!(!set.members.is_empty());
+        // Every member of the front must be in [0, 2] (x scaled by 100).
+        for m in &set.members {
+            let x = m.genome[0] as f64 / 100.0;
+            assert!(
+                (-0.05..=2.05).contains(&x),
+                "non-Pareto member x={x} objs={:?}",
+                m.objectives
+            );
+        }
+        // The front should cover the range reasonably well.
+        let xs: Vec<f64> = set.members.iter().map(|m| m.genome[0] as f64 / 100.0).collect();
+        let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(min < 0.3, "front min {min}");
+        assert!(max > 1.7, "front max {max}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let p = Nsga2Params { pop_size: 30, generations: 20, ..Default::default() };
+        let a = optimize(&Sch, &p);
+        let b = optimize(&Sch, &p);
+        let g = |s: &ParetoSet| s.members.iter().map(|m| m.genome.clone()).collect::<Vec<_>>();
+        assert_eq!(g(&a), g(&b));
+    }
+
+    #[test]
+    fn infeasible_candidates_excluded_from_result() {
+        struct OnlyBig;
+        impl Problem for OnlyBig {
+            fn bounds(&self) -> Vec<(i64, i64)> {
+                vec![(0, 10)]
+            }
+            fn objectives(&self, g: &Genome) -> Vec<f64> {
+                vec![g[0] as f64, -(g[0] as f64)]
+            }
+            fn violation(&self, g: &Genome) -> f64 {
+                if g[0] >= 5 { 0.0 } else { (5 - g[0]) as f64 }
+            }
+            fn num_objectives(&self) -> usize {
+                2
+            }
+        }
+        let set = optimize(&OnlyBig, &Nsga2Params { pop_size: 20, generations: 30, ..Default::default() });
+        assert!(!set.members.is_empty());
+        for m in &set.members {
+            assert!(m.genome[0] >= 5, "infeasible member {:?}", m.genome);
+        }
+    }
+
+    #[test]
+    fn evaluation_count_reported() {
+        let p = Nsga2Params { pop_size: 10, generations: 5, ..Default::default() };
+        let set = optimize(&Sch, &p);
+        assert_eq!(set.evaluations, 10 + 5 * 10);
+    }
+}

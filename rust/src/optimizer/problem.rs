@@ -1,0 +1,135 @@
+//! The SmartSplit optimisation problem (§IV): genome `[l1]`, objectives
+//! `(f1, f2, f3)` from the perf model, Eq. 17 constraints as violations.
+//!
+//! §Perf note: the split-index space is tiny (≤ 38 candidates), so all
+//! objective vectors are memoised up front — NSGA-II's 25k evaluations then
+//! cost one table lookup each instead of re-walking the layer profile
+//! (the L3 objective-memoisation optimisation recorded in EXPERIMENTS.md).
+
+use crate::perfmodel::PerfModel;
+
+use super::nsga2::{Genome, Problem};
+
+/// NSGA-II view of one (model, device, network) configuration.
+pub struct SplitProblem {
+    num_layers: usize,
+    /// Memoised `[f1, f2, f3]` for l1 = 1..=L (index l1-1).
+    objectives: Vec<[f64; 3]>,
+    /// Memoised Eq. 17 violation magnitude for l1 = 1..=L.
+    violations: Vec<f64>,
+}
+
+impl SplitProblem {
+    pub fn new(pm: &PerfModel<'_>) -> Self {
+        let l = pm.profile.num_layers;
+        let mut objectives = Vec::with_capacity(l);
+        let mut violations = Vec::with_capacity(l);
+        for l1 in 1..=l {
+            objectives.push(pm.objectives(l1));
+            violations.push(Self::violation_of(pm, l1));
+        }
+        SplitProblem { num_layers: l, objectives, violations }
+    }
+
+    fn violation_of(pm: &PerfModel<'_>, l1: usize) -> f64 {
+        let mut v = 0.0;
+        let l = pm.profile.num_layers;
+        // l1 + l2 = L with l1, l2 ≥ 1  ⇒  1 ≤ l1 ≤ L-1 (bounds handle the
+        // lower end; the upper end must be a soft violation so COS-like
+        // genomes are comparable during evolution).
+        if l1 + 1 > l {
+            v += 1.0;
+        }
+        let mem = pm.profile.client_memory_bytes(l1);
+        let cap = pm.client.memory_bytes;
+        if mem > cap {
+            v += (mem - cap) as f64 / cap as f64;
+        }
+        if !pm.net.satisfies_constraints() {
+            v += 1.0;
+        }
+        v
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.num_layers
+    }
+
+    /// Memoised objective lookup for a concrete split index.
+    pub fn objectives_at(&self, l1: usize) -> [f64; 3] {
+        self.objectives[l1 - 1]
+    }
+
+    pub fn feasible_at(&self, l1: usize) -> bool {
+        self.violations[l1 - 1] == 0.0
+    }
+}
+
+impl Problem for SplitProblem {
+    fn bounds(&self) -> Vec<(i64, i64)> {
+        vec![(1, self.num_layers as i64)]
+    }
+
+    fn objectives(&self, g: &Genome) -> Vec<f64> {
+        self.objectives[(g[0] - 1) as usize].to_vec()
+    }
+
+    fn violation(&self, g: &Genome) -> f64 {
+        self.violations[(g[0] - 1) as usize]
+    }
+
+    fn num_objectives(&self) -> usize {
+        3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::models::zoo;
+    use crate::perfmodel::{NetworkEnv, PerfModel, RadioPower};
+
+    fn problem() -> SplitProblem {
+        let profile = zoo::alexnet().analyze(1);
+        let pm = PerfModel::new(
+            profiles::samsung_j6(),
+            profiles::cloud_server(),
+            RadioPower::PAPER_80211N,
+            NetworkEnv::paper_default(),
+            &profile,
+        );
+        SplitProblem::new(&pm)
+    }
+
+    #[test]
+    fn memoisation_matches_direct_evaluation() {
+        let profile = zoo::alexnet().analyze(1);
+        let pm = PerfModel::new(
+            profiles::samsung_j6(),
+            profiles::cloud_server(),
+            RadioPower::PAPER_80211N,
+            NetworkEnv::paper_default(),
+            &profile,
+        );
+        let p = SplitProblem::new(&pm);
+        for l1 in 1..=21 {
+            assert_eq!(p.objectives_at(l1), pm.objectives(l1));
+        }
+    }
+
+    #[test]
+    fn bounds_span_split_domain() {
+        let p = problem();
+        assert_eq!(p.bounds(), vec![(1, 21)]);
+    }
+
+    #[test]
+    fn last_layer_split_is_infeasible() {
+        // l1 = L leaves l2 = 0 which violates Eq. 17.
+        let p = problem();
+        assert!(!p.feasible_at(21));
+        assert!(p.feasible_at(20));
+        assert!(p.feasible_at(1));
+    }
+}

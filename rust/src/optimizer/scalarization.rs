@@ -1,0 +1,200 @@
+//! Classical scalarisation solvers the paper argues NSGA-II against
+//! (§V-A): weighted sum [50], weighted metric [51], and ε-constrained
+//! optimisation [49]. Implemented as first-class baselines so the
+//! `ablation_solver` bench can quantify the §V-A claim ("NSGA-II provides
+//! solutions much closer to the Pareto front than ... ε-constrained
+//! optimisation, weighted sum, or weighted metric methods") instead of
+//! taking it on faith.
+//!
+//! All three operate on the same memoised objective table as the GA
+//! ([`SplitProblem`]-style enumeration — the split domain is tiny) with
+//! min-max normalised objectives, so differences are purely about the
+//! selection rule, not the evaluation.
+
+use crate::perfmodel::PerfModel;
+
+/// Min-max normalised objective matrix over the feasible split domain.
+/// Returns (split indices, normalised rows).
+fn normalised_domain(pm: &PerfModel<'_>) -> (Vec<usize>, Vec<[f64; 3]>) {
+    let l = pm.profile.num_layers;
+    let splits: Vec<usize> = (1..l).filter(|&i| pm.feasible(i)).collect();
+    let raw: Vec<[f64; 3]> = splits.iter().map(|&i| pm.objectives(i)).collect();
+    let mut lo = [f64::INFINITY; 3];
+    let mut hi = [f64::NEG_INFINITY; 3];
+    for r in &raw {
+        for j in 0..3 {
+            lo[j] = lo[j].min(r[j]);
+            hi[j] = hi[j].max(r[j]);
+        }
+    }
+    let norm = raw
+        .iter()
+        .map(|r| {
+            let mut out = [0.0; 3];
+            for j in 0..3 {
+                let span = hi[j] - lo[j];
+                out[j] = if span > 0.0 { (r[j] - lo[j]) / span } else { 0.0 };
+            }
+            out
+        })
+        .collect();
+    (splits, norm)
+}
+
+/// Weighted-sum method (Marler & Arora [50]): argmin Σ w_j · f'_j.
+/// Provably blind to non-convex regions of the Pareto front.
+pub fn weighted_sum(pm: &PerfModel<'_>, weights: [f64; 3]) -> Option<usize> {
+    let (splits, norm) = normalised_domain(pm);
+    splits
+        .iter()
+        .zip(&norm)
+        .min_by(|(_, a), (_, b)| {
+            let sa: f64 = a.iter().zip(&weights).map(|(x, w)| x * w).sum();
+            let sb: f64 = b.iter().zip(&weights).map(|(x, w)| x * w).sum();
+            sa.partial_cmp(&sb).unwrap()
+        })
+        .map(|(&i, _)| i)
+}
+
+/// Weighted-metric (compromise programming, [51]): argmin ‖w ⊙ f'‖_p.
+/// `p = 2` is the common Euclidean variant; `p → ∞` approaches Chebyshev.
+pub fn weighted_metric(pm: &PerfModel<'_>, weights: [f64; 3], p: f64) -> Option<usize> {
+    assert!(p >= 1.0, "metric order must be ≥ 1");
+    let (splits, norm) = normalised_domain(pm);
+    splits
+        .iter()
+        .zip(&norm)
+        .min_by(|(_, a), (_, b)| {
+            let m = |r: &[f64; 3]| -> f64 {
+                r.iter()
+                    .zip(&weights)
+                    .map(|(x, w)| (w * x).powf(p))
+                    .sum::<f64>()
+                    .powf(1.0 / p)
+            };
+            m(a).partial_cmp(&m(b)).unwrap()
+        })
+        .map(|(&i, _)| i)
+}
+
+/// ε-constrained optimisation (Chankong & Haimes [49]): minimise the
+/// `primary` objective subject to the other two staying under the given
+/// normalised ceilings. Returns `None` when the ε box is infeasible —
+/// the practical weakness the paper alludes to (ceilings must be guessed).
+pub fn epsilon_constrained(
+    pm: &PerfModel<'_>,
+    primary: usize,
+    epsilon: [f64; 3],
+) -> Option<usize> {
+    assert!(primary < 3);
+    let (splits, norm) = normalised_domain(pm);
+    splits
+        .iter()
+        .zip(&norm)
+        .filter(|(_, r)| (0..3).all(|j| j == primary || r[j] <= epsilon[j]))
+        .min_by(|(_, a), (_, b)| a[primary].partial_cmp(&b[primary]).unwrap())
+        .map(|(&i, _)| i)
+}
+
+/// The exhaustive true Pareto front of the feasible split domain
+/// (ground truth for the solver ablation; tractable because |domain| < 40).
+pub fn exhaustive_pareto_front(pm: &PerfModel<'_>) -> Vec<usize> {
+    let l = pm.profile.num_layers;
+    let cands: Vec<(usize, [f64; 3])> =
+        (1..l).filter(|&i| pm.feasible(i)).map(|i| (i, pm.objectives(i))).collect();
+    cands
+        .iter()
+        .filter(|(_, a)| {
+            !cands.iter().any(|(_, b)| {
+                b.iter().zip(a).all(|(x, y)| x <= y) && b.iter().zip(a).any(|(x, y)| x < y)
+            })
+        })
+        .map(|(i, _)| *i)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::models::zoo;
+    use crate::perfmodel::{NetworkEnv, RadioPower};
+
+    fn pm(profile: &crate::models::ModelProfile) -> PerfModel<'_> {
+        PerfModel::new(
+            profiles::samsung_j6(),
+            profiles::cloud_server(),
+            RadioPower::PAPER_80211N,
+            NetworkEnv::paper_default(),
+            profile,
+        )
+    }
+
+    #[test]
+    fn scalarisation_picks_live_on_the_true_front() {
+        // Any scalarisation optimum must be Pareto-optimal (sanity for all
+        // three methods).
+        let profile = zoo::vgg16().analyze(1);
+        let m = pm(&profile);
+        let front = exhaustive_pareto_front(&m);
+        for w in [[1.0, 1.0, 1.0], [3.0, 1.0, 1.0], [1.0, 5.0, 1.0]] {
+            let ws = weighted_sum(&m, w).unwrap();
+            assert!(front.contains(&ws), "weighted_sum {w:?} chose off-front {ws}");
+            let wm = weighted_metric(&m, w, 2.0).unwrap();
+            assert!(front.contains(&wm), "weighted_metric {w:?} chose off-front {wm}");
+        }
+    }
+
+    #[test]
+    fn weighted_sum_extreme_weights_recover_single_objective_optima() {
+        let profile = zoo::alexnet().analyze(1);
+        let m = pm(&profile);
+        let latency_only = weighted_sum(&m, [1.0, 0.0, 0.0]).unwrap();
+        assert_eq!(latency_only, crate::optimizer::lbo(&m).l1);
+        let energy_only = weighted_sum(&m, [0.0, 1.0, 0.0]).unwrap();
+        assert_eq!(energy_only, crate::optimizer::ebo(&m).l1);
+    }
+
+    #[test]
+    fn epsilon_constrained_respects_ceilings() {
+        let profile = zoo::vgg11().analyze(1);
+        let m = pm(&profile);
+        let (splits, norm) = super::normalised_domain(&m);
+        let eps = [1.0, 0.3, 0.3];
+        if let Some(choice) = epsilon_constrained(&m, 0, eps) {
+            let idx = splits.iter().position(|&s| s == choice).unwrap();
+            assert!(norm[idx][1] <= 0.3 && norm[idx][2] <= 0.3);
+        }
+        // Impossible box → None, not a bogus answer.
+        assert_eq!(epsilon_constrained(&m, 0, [1.0, -0.1, -0.1]), None);
+    }
+
+    #[test]
+    fn weighted_metric_p1_equals_weighted_sum() {
+        let profile = zoo::vgg13().analyze(1);
+        let m = pm(&profile);
+        for w in [[1.0, 1.0, 1.0], [2.0, 1.0, 3.0]] {
+            assert_eq!(weighted_metric(&m, w, 1.0), weighted_sum(&m, w));
+        }
+    }
+
+    #[test]
+    fn exhaustive_front_is_mutually_nondominated() {
+        let profile = zoo::alexnet().analyze(1);
+        let m = pm(&profile);
+        let front = exhaustive_pareto_front(&m);
+        assert!(!front.is_empty());
+        for &a in &front {
+            for &b in &front {
+                if a == b {
+                    continue;
+                }
+                let oa = m.objectives(a);
+                let ob = m.objectives(b);
+                let dom = ob.iter().zip(&oa).all(|(x, y)| x <= y)
+                    && ob.iter().zip(&oa).any(|(x, y)| x < y);
+                assert!(!dom, "{b} dominates {a} inside the front");
+            }
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! TOPSIS decision analysis (Behzadian et al. [44]) — the second half of
+//! Algorithm 1: pick the single best compromise from the NSGA-II Pareto
+//! set.
+//!
+//! Steps exactly as the paper's Algorithm 1 lines 2–7:
+//! 1. decision matrix `F` (n solutions × m objectives);
+//! 2. column (vector) normalisation → `F'`;
+//! 3. drop constraint-violating rows → `F''`;
+//! 4. ideal point = column-wise minimum (all objectives minimised);
+//! 5. Euclidean distance of every row to the ideal;
+//! 6. select the row with minimum distance.
+
+/// Outcome of TOPSIS over a candidate matrix.
+#[derive(Clone, Debug)]
+pub struct TopsisResult {
+    /// Index (into the *input* rows) of the chosen solution.
+    pub chosen: usize,
+    /// Distance to the ideal point per retained row (input indexing;
+    /// `f64::INFINITY` for rows dropped by the constraint filter).
+    pub distances: Vec<f64>,
+    /// The normalised ideal point.
+    pub ideal: Vec<f64>,
+}
+
+/// Run TOPSIS. `rows[i]` is the objective vector of solution `i`;
+/// `feasible[i]` is the Eq. 17 constraint check (Algorithm 1's reduction
+/// from `F'` to `F''`). Returns `None` when no feasible row exists.
+pub fn topsis(rows: &[Vec<f64>], feasible: &[bool]) -> Option<TopsisResult> {
+    assert_eq!(rows.len(), feasible.len());
+    if rows.is_empty() {
+        return None;
+    }
+    let m = rows[0].len();
+    assert!(rows.iter().all(|r| r.len() == m), "ragged objective matrix");
+
+    // Column-wise vector normalisation: f'_ij = f_ij / sqrt(Σ_i f_ij²).
+    let mut norms = vec![0.0f64; m];
+    for r in rows {
+        for (j, v) in r.iter().enumerate() {
+            norms[j] += v * v;
+        }
+    }
+    for n in &mut norms {
+        *n = n.sqrt();
+        if *n == 0.0 {
+            *n = 1.0; // constant-zero column: normalised values stay 0
+        }
+    }
+    let normalised: Vec<Vec<f64>> = rows
+        .iter()
+        .map(|r| r.iter().enumerate().map(|(j, v)| v / norms[j]).collect())
+        .collect();
+
+    // Ideal point over feasible rows only.
+    let mut ideal = vec![f64::INFINITY; m];
+    for (i, r) in normalised.iter().enumerate() {
+        if !feasible[i] {
+            continue;
+        }
+        for (j, v) in r.iter().enumerate() {
+            ideal[j] = ideal[j].min(*v);
+        }
+    }
+    if ideal.iter().any(|v| v.is_infinite()) {
+        return None; // no feasible rows
+    }
+
+    // Euclidean distances; infeasible rows excluded.
+    let mut best = None;
+    let distances: Vec<f64> = normalised
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            if !feasible[i] {
+                return f64::INFINITY;
+            }
+            let d = r
+                .iter()
+                .zip(&ideal)
+                .map(|(v, id)| (v - id) * (v - id))
+                .sum::<f64>()
+                .sqrt();
+            match best {
+                None => best = Some((i, d)),
+                Some((_, bd)) if d < bd => best = Some((i, d)),
+                _ => {}
+            }
+            d
+        })
+        .collect();
+
+    best.map(|(chosen, _)| TopsisResult { chosen, distances, ideal })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::prop_assert;
+
+    #[test]
+    fn picks_dominating_row() {
+        let rows = vec![
+            vec![1.0, 1.0, 1.0], // dominates everything
+            vec![2.0, 3.0, 4.0],
+            vec![5.0, 1.5, 2.0],
+        ];
+        let r = topsis(&rows, &[true, true, true]).unwrap();
+        assert_eq!(r.chosen, 0);
+        assert_eq!(r.distances[0], 0.0); // the ideal itself
+    }
+
+    #[test]
+    fn trades_off_between_extremes() {
+        // Two extreme specialists and one balanced row: the balanced row is
+        // closest to the joint ideal.
+        let rows = vec![
+            vec![0.0, 10.0],
+            vec![10.0, 0.0],
+            vec![2.0, 2.0],
+        ];
+        let r = topsis(&rows, &[true, true, true]).unwrap();
+        assert_eq!(r.chosen, 2);
+    }
+
+    #[test]
+    fn constraint_filter_excludes_rows() {
+        let rows = vec![
+            vec![0.1, 0.1], // infeasible — would otherwise win
+            vec![5.0, 5.0],
+        ];
+        let r = topsis(&rows, &[false, true]).unwrap();
+        assert_eq!(r.chosen, 1);
+        assert!(r.distances[0].is_infinite());
+    }
+
+    #[test]
+    fn no_feasible_rows_is_none() {
+        assert!(topsis(&[vec![1.0]], &[false]).is_none());
+        assert!(topsis(&[], &[]).is_none());
+    }
+
+    #[test]
+    fn zero_column_handled() {
+        let rows = vec![vec![0.0, 1.0], vec![0.0, 2.0]];
+        let r = topsis(&rows, &[true, true]).unwrap();
+        assert_eq!(r.chosen, 0);
+    }
+
+    #[test]
+    fn scale_invariance_of_choice() {
+        // Vector normalisation makes the choice invariant to per-column
+        // positive rescaling.
+        let rows = vec![
+            vec![1.0, 8.0, 3.0],
+            vec![4.0, 2.0, 6.0],
+            vec![3.0, 3.0, 3.0],
+        ];
+        let a = topsis(&rows, &[true, true, true]).unwrap().chosen;
+        let scaled: Vec<Vec<f64>> = rows
+            .iter()
+            .map(|r| vec![r[0] * 1000.0, r[1] * 0.01, r[2] * 7.0])
+            .collect();
+        let b = topsis(&scaled, &[true, true, true]).unwrap().chosen;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prop_chosen_is_feasible_and_min_distance() {
+        run_prop("topsis picks feasible min-distance row", 200, |g| {
+            let n = g.usize_in(1, 30);
+            let m = g.usize_in(1, 5);
+            let rows: Vec<Vec<f64>> =
+                (0..n).map(|_| (0..m).map(|_| g.f64_in(0.0, 100.0)).collect()).collect();
+            let feasible: Vec<bool> = (0..n).map(|_| g.bool()).collect();
+            match topsis(&rows, &feasible) {
+                None => {
+                    prop_assert!(
+                        feasible.iter().all(|f| !f),
+                        "returned None with feasible rows present"
+                    );
+                }
+                Some(r) => {
+                    prop_assert!(feasible[r.chosen], "chose infeasible row");
+                    let min = r
+                        .distances
+                        .iter()
+                        .cloned()
+                        .fold(f64::INFINITY, f64::min);
+                    prop_assert!(
+                        (r.distances[r.chosen] - min).abs() < 1e-12,
+                        "chosen {} dist {} but min {}",
+                        r.chosen, r.distances[r.chosen], min
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

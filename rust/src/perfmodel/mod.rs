@@ -1,0 +1,422 @@
+//! The paper's latency and energy models (§III, Eq. 2–13) and the three
+//! objective functions (§IV, Eq. 14–16).
+//!
+//! Unit conventions (the paper leaves units implicit; we fix them and
+//! calibrate one constant, documented in DESIGN.md §4):
+//!
+//! * memory quantities `M|l1`, `I|l1` — **bytes** (ref [39] accounting,
+//!   computed by [`crate::models::ModelProfile`]);
+//! * processor speed `S` — **Hz**; operating frequency `ν` — **GHz**
+//!   (as in Eq. 6, where the paper's fitted `k = 1.172` assumes GHz);
+//! * bandwidth `B` and throughputs `τ_u`, `τ_d` — **Mbps**;
+//! * power — **Watts** internally (radio constants are mW in the paper and
+//!   converted here); energy — **Joules**; latency — **seconds**.
+//!
+//! The paper's `T_client = M|l1 / (C·S)` implicitly assumes one byte
+//! processed per core-cycle. Real PyTorch-Mobile inference costs tens of
+//! cycles per byte touched, so each compute profile carries a calibrated
+//! `cycles_per_byte` factor (J6/Redmi ≈ 25, cloud server ≈ 6); this is a
+//! pure time-scale calibration that cancels in every paper comparison.
+
+use crate::device::ComputeProfile;
+use crate::models::ModelProfile;
+
+/// Radio power model (Huang et al. [41]): `P = α·τ + β`, α in mW/Mbps and
+/// β in mW.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RadioPower {
+    pub alpha_up_mw_per_mbps: f64,
+    pub beta_up_mw: f64,
+    pub alpha_down_mw_per_mbps: f64,
+    pub beta_down_mw: f64,
+}
+
+impl RadioPower {
+    /// The paper's constants (§III-C), fitted for 802.11 b/g/n-class radios.
+    pub const PAPER_80211N: RadioPower = RadioPower {
+        alpha_up_mw_per_mbps: 283.17,
+        beta_up_mw: 132.86,
+        alpha_down_mw_per_mbps: 137.01,
+        beta_down_mw: 132.86,
+    };
+
+    /// 802.11ac-class radio: substantially more energy-efficient per Mbps
+    /// (Sun et al. [37], Noordbruis et al. [38]); calibrated so Fig. 4
+    /// reproduces the paper's client-energy-dominates shape on Redmi Note 8.
+    pub const WIFI_80211AC: RadioPower = RadioPower {
+        alpha_up_mw_per_mbps: 70.0,
+        beta_up_mw: 110.0,
+        alpha_down_mw_per_mbps: 50.0,
+        beta_down_mw: 110.0,
+    };
+
+    /// Upload power in **Watts** at throughput `tau_mbps` (Eq. 8).
+    pub fn upload_power_w(&self, tau_mbps: f64) -> f64 {
+        (self.alpha_up_mw_per_mbps * tau_mbps + self.beta_up_mw) / 1000.0
+    }
+
+    /// Download power in **Watts** at throughput `tau_mbps` (Eq. 10).
+    pub fn download_power_w(&self, tau_mbps: f64) -> f64 {
+        (self.alpha_down_mw_per_mbps * tau_mbps + self.beta_down_mw) / 1000.0
+    }
+}
+
+/// The paper's fitted dynamic-power constant (Eq. 6): `P = k·C·ν³`,
+/// ν in GHz, P in Watts.
+pub const K_CLIENT_POWER: f64 = 1.172;
+
+/// Network conditions for one evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkEnv {
+    /// Link bandwidth `B` in Mbps (paper testbed: 10).
+    pub bandwidth_mbps: f64,
+    /// Upload throughput `τ_u` in Mbps; constraint `τ_u ≤ B`.
+    pub tau_up_mbps: f64,
+    /// Download throughput `τ_d` in Mbps; constraint `τ_d ≤ B`.
+    pub tau_down_mbps: f64,
+}
+
+impl NetworkEnv {
+    /// Paper testbed: 10 Mbps WiFi, saturating transfers.
+    pub fn paper_default() -> Self {
+        NetworkEnv { bandwidth_mbps: 10.0, tau_up_mbps: 10.0, tau_down_mbps: 10.0 }
+    }
+
+    pub fn with_bandwidth(mbps: f64) -> Self {
+        NetworkEnv { bandwidth_mbps: mbps, tau_up_mbps: mbps, tau_down_mbps: mbps }
+    }
+
+    pub fn satisfies_constraints(&self) -> bool {
+        self.tau_up_mbps <= self.bandwidth_mbps && self.tau_down_mbps <= self.bandwidth_mbps
+    }
+}
+
+/// Full evaluation context: phone + cloud + network + model.
+#[derive(Clone, Debug)]
+pub struct PerfModel<'a> {
+    pub client: &'a ComputeProfile,
+    pub server: &'a ComputeProfile,
+    pub radio: RadioPower,
+    pub net: NetworkEnv,
+    pub profile: &'a ModelProfile,
+    /// Result download size `d` in bytes (logits; ~4 KB, negligible — as
+    /// the paper observes for download latency).
+    pub download_bytes: u64,
+}
+
+/// Component breakdown of Eq. 5 (seconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencyBreakdown {
+    pub client_s: f64,
+    pub upload_s: f64,
+    pub server_s: f64,
+    pub download_s: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn total(&self) -> f64 {
+        // Download latency is measured but excluded from the paper's totals
+        // ("we observe that the Download Latency is negligible and hence is
+        // not included in our results", §III-A1).
+        self.client_s + self.upload_s + self.server_s
+    }
+}
+
+/// Component breakdown of Eq. 13 (Joules).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub client_j: f64,
+    pub upload_j: f64,
+    pub download_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.client_j + self.upload_j + self.download_j
+    }
+}
+
+impl<'a> PerfModel<'a> {
+    pub fn new(
+        client: &'a ComputeProfile,
+        server: &'a ComputeProfile,
+        radio: RadioPower,
+        net: NetworkEnv,
+        profile: &'a ModelProfile,
+    ) -> Self {
+        let download_bytes =
+            profile.layers.last().map(|l| l.act_bytes).unwrap_or(4000);
+        PerfModel { client, server, radio, net, profile, download_bytes }
+    }
+
+    // ------------------------------------------------------------- latency
+
+    /// Eq. 2: `T_client = M_client|l1 · cpb / (C·S)`.
+    pub fn client_latency_s(&self, l1: usize) -> f64 {
+        let m = self.profile.client_memory_bytes(l1) as f64;
+        m * self.client.cycles_per_byte
+            / (self.client.cores as f64 * self.client.clock_hz)
+    }
+
+    /// Eq. 3: `T_server = M_server|l2 · cpb / (C·S)`.
+    pub fn server_latency_s(&self, l1: usize) -> f64 {
+        let m = self.profile.server_memory_bytes(l1) as f64;
+        m * self.server.cycles_per_byte
+            / (self.server.cores as f64 * self.server.clock_hz)
+    }
+
+    /// Eq. 4: `T_upload = I|l1 / B` (bits over Mbps).
+    pub fn upload_latency_s(&self, l1: usize) -> f64 {
+        if l1 >= self.profile.num_layers {
+            return 0.0; // COS: nothing shipped
+        }
+        let bits = self.profile.intermediate_bytes(l1) as f64 * 8.0;
+        bits / (self.net.bandwidth_mbps * 1e6)
+    }
+
+    /// Eq. 11: `T_download = d / B`.
+    pub fn download_latency_s(&self, l1: usize) -> f64 {
+        if l1 >= self.profile.num_layers {
+            return 0.0; // COS: result already on device
+        }
+        self.download_bytes as f64 * 8.0 / (self.net.bandwidth_mbps * 1e6)
+    }
+
+    /// Eq. 5 breakdown at split `l1` (layers 1..=l1 on the phone).
+    /// `l1 = 0` is COC (all cloud: the raw input is the "intermediate"),
+    /// `l1 = L` is COS (all phone).
+    pub fn latency(&self, l1: usize) -> LatencyBreakdown {
+        if l1 == 0 {
+            // COC: upload the input image instead of an activation.
+            let input_bytes = self
+                .profile
+                .layers
+                .first()
+                .map(|l| l.in_shape.iter().product::<usize>() as u64 * 4)
+                .unwrap_or(0);
+            return LatencyBreakdown {
+                client_s: 0.0,
+                upload_s: input_bytes as f64 * 8.0 / (self.net.bandwidth_mbps * 1e6),
+                server_s: self.server_latency_s(0),
+                download_s: self.download_bytes as f64 * 8.0
+                    / (self.net.bandwidth_mbps * 1e6),
+            };
+        }
+        LatencyBreakdown {
+            client_s: self.client_latency_s(l1),
+            upload_s: self.upload_latency_s(l1),
+            server_s: self.server_latency_s(l1),
+            download_s: self.download_latency_s(l1),
+        }
+    }
+
+    // -------------------------------------------------------------- energy
+
+    /// Eq. 6: client dynamic power in Watts.
+    pub fn client_power_w(&self) -> f64 {
+        K_CLIENT_POWER * self.client.cores as f64 * self.client.freq_ghz.powi(3)
+    }
+
+    /// Eq. 13 breakdown at split `l1`.
+    pub fn energy(&self, l1: usize) -> EnergyBreakdown {
+        let lat = self.latency(l1);
+        let client_j = self.client_power_w() * lat.client_s;
+        let upload_j = self.radio.upload_power_w(self.net.tau_up_mbps) * lat.upload_s;
+        let download_j =
+            self.radio.download_power_w(self.net.tau_down_mbps) * lat.download_s;
+        EnergyBreakdown { client_j, upload_j, download_j }
+    }
+
+    // ---------------------------------------------------------- objectives
+
+    /// Eq. 14: `f1(l1, l2)` — end-to-end latency (seconds).
+    pub fn f1(&self, l1: usize) -> f64 {
+        self.latency(l1).total()
+    }
+
+    /// Eq. 15: `f2(l1)` — smartphone energy (Joules).
+    pub fn f2(&self, l1: usize) -> f64 {
+        self.energy(l1).total()
+    }
+
+    /// Eq. 16: `f3(l1)` — smartphone memory (bytes).
+    pub fn f3(&self, l1: usize) -> f64 {
+        self.profile.client_memory_bytes(l1) as f64
+    }
+
+    /// All three objectives at once (the optimiser's evaluation).
+    pub fn objectives(&self, l1: usize) -> [f64; 3] {
+        [self.f1(l1), self.f2(l1), self.f3(l1)]
+    }
+
+    /// Eq. 17 constraints for a candidate split.
+    pub fn feasible(&self, l1: usize) -> bool {
+        let l = self.profile.num_layers;
+        // 1 ≤ l1, l2 ≤ L with l1 + l2 = L  ⇒  1 ≤ l1 ≤ L-1
+        if l1 < 1 || l1 + 1 > l {
+            return false;
+        }
+        // M_edge|l1 ≤ M (client memory capacity)
+        if self.profile.client_memory_bytes(l1) > self.client.memory_bytes {
+            return false;
+        }
+        // τ_u ≤ B, τ_d ≤ B
+        self.net.satisfies_constraints()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::models::zoo;
+
+    fn model() -> crate::models::ModelProfile {
+        zoo::alexnet().analyze(1)
+    }
+
+    fn pm(profile: &ModelProfile) -> PerfModel<'_> {
+        PerfModel::new(
+            profiles::samsung_j6(),
+            profiles::cloud_server(),
+            RadioPower::PAPER_80211N,
+            NetworkEnv::paper_default(),
+            profile,
+        )
+    }
+
+    #[test]
+    fn radio_power_matches_paper_constants() {
+        let r = RadioPower::PAPER_80211N;
+        // P_up at 10 Mbps = 283.17*10 + 132.86 = 2964.56 mW
+        assert!((r.upload_power_w(10.0) - 2.96456).abs() < 1e-9);
+        assert!((r.download_power_w(10.0) - 1.50296).abs() < 1e-9);
+    }
+
+    #[test]
+    fn client_power_eq6() {
+        let p = model();
+        let m = pm(&p);
+        // k*C*ν³ = 1.172 * 8 * 1.6³
+        let expect = 1.172 * 8.0 * 1.6f64.powi(3);
+        assert!((m.client_power_w() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn upload_latency_is_bits_over_bandwidth() {
+        let p = model();
+        let m = pm(&p);
+        // AlexNet layer 1 output: 64*55*55*4 bytes at 10 Mbps
+        let expect = (64.0 * 55.0 * 55.0 * 4.0 * 8.0) / 10e6;
+        assert!((m.upload_latency_s(1) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn client_latency_monotone_in_l1() {
+        let p = model();
+        let m = pm(&p);
+        let mut prev = 0.0;
+        for l1 in 1..=21 {
+            let t = m.client_latency_s(l1);
+            assert!(t >= prev, "client latency must grow with l1");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn server_latency_decreases_in_l1() {
+        let p = model();
+        let m = pm(&p);
+        for l1 in 1..21 {
+            assert!(m.server_latency_s(l1) >= m.server_latency_s(l1 + 1));
+        }
+        assert_eq!(m.server_latency_s(21), 0.0);
+    }
+
+    #[test]
+    fn cos_has_no_network_terms() {
+        let p = model();
+        let m = pm(&p);
+        let lat = m.latency(21);
+        assert_eq!(lat.upload_s, 0.0);
+        assert_eq!(lat.download_s, 0.0);
+        let e = m.energy(21);
+        assert_eq!(e.upload_j, 0.0);
+        assert_eq!(e.download_j, 0.0);
+    }
+
+    #[test]
+    fn coc_uploads_input_image() {
+        let p = model();
+        let m = pm(&p);
+        let lat = m.latency(0);
+        assert_eq!(lat.client_s, 0.0);
+        let expect = (3.0 * 224.0 * 224.0 * 4.0 * 8.0) / 10e6;
+        assert!((lat.upload_s - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn feasibility_bounds() {
+        let p = model();
+        let m = pm(&p);
+        assert!(!m.feasible(0)); // l1 ≥ 1
+        assert!(m.feasible(1));
+        assert!(m.feasible(20));
+        assert!(!m.feasible(21)); // l2 ≥ 1
+    }
+
+    #[test]
+    fn memory_constraint_enforced() {
+        let p = model();
+        let mut client = profiles::samsung_j6().clone();
+        client.memory_bytes = 1024; // 1 KiB phone
+        let m = PerfModel::new(
+            &client,
+            profiles::cloud_server(),
+            RadioPower::PAPER_80211N,
+            NetworkEnv::paper_default(),
+            &p,
+        );
+        assert!(!m.feasible(1));
+    }
+
+    #[test]
+    fn throughput_constraint_enforced() {
+        let p = model();
+        let net = NetworkEnv { bandwidth_mbps: 10.0, tau_up_mbps: 12.0, tau_down_mbps: 10.0 };
+        let m = PerfModel {
+            net,
+            ..pm(&p)
+        };
+        assert!(!m.feasible(3));
+    }
+
+    #[test]
+    fn objectives_consistent_with_breakdowns() {
+        let p = model();
+        let m = pm(&p);
+        for l1 in 1..21 {
+            assert_eq!(m.f1(l1), m.latency(l1).total());
+            assert_eq!(m.f2(l1), m.energy(l1).total());
+            assert_eq!(m.f3(l1), p.client_memory_bytes(l1) as f64);
+        }
+    }
+
+    #[test]
+    fn download_terms_negligible_vs_upload() {
+        // The paper drops download latency as negligible; our constants
+        // must reproduce that (logits ≪ activations).
+        let p = model();
+        let m = pm(&p);
+        for l1 in 1..21 {
+            let lat = m.latency(l1);
+            // logits (4 KB) take < 5 ms at 10 Mbps — negligible in absolute
+            // terms, and ≪ upload wherever upload carries a conv activation.
+            assert!(lat.download_s < 5e-3, "l1={l1} download {}", lat.download_s);
+            if l1 <= 12 {
+                // conv-trunk activations are ≥ 290 KB: upload dwarfs download
+                assert!(lat.download_s < 0.05 * lat.upload_s, "l1={l1}");
+            }
+        }
+    }
+}

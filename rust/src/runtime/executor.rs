@@ -1,0 +1,162 @@
+//! Thread-confined PJRT executor.
+//!
+//! The `xla` crate's handles (`PjRtClient`, `PjRtLoadedExecutable`,
+//! `PjRtBuffer`) hold `Rc`s and raw pointers and are neither `Send` nor
+//! `Sync`. Rather than `unsafe impl`-ing our way around that, every PJRT
+//! object lives on ONE dedicated executor thread; the [`Executor`] handle
+//! is a cheap, cloneable `Send` command channel. This also models the
+//! paper's testbed faithfully: the phone and the cloud box are each a
+//! single compute domain with their own serial inference queue.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::{ModelRuntime, Tensor};
+
+/// Metadata returned by [`Executor::load`].
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub model: String,
+    pub batch: usize,
+    pub num_layers: usize,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub weight_bytes: u64,
+    pub load_time: Duration,
+}
+
+enum Cmd {
+    Load {
+        model: String,
+        batch: usize,
+        reply: Sender<Result<ModelInfo>>,
+    },
+    RunSegment {
+        model: String,
+        batch: usize,
+        from: usize,
+        to: usize,
+        tensor: Tensor,
+        reply: Sender<Result<Tensor>>,
+    },
+    Stop,
+}
+
+/// Cloneable, `Send` handle to the PJRT thread.
+#[derive(Clone)]
+pub struct Executor {
+    tx: Sender<Cmd>,
+}
+
+impl Executor {
+    /// Spawn the executor thread (creates the PJRT CPU client inside it).
+    pub fn spawn(artifacts_dir: PathBuf, name: &str) -> Result<Executor> {
+        let (tx, rx) = channel::<Cmd>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name(format!("smartsplit-exec-{name}"))
+            .spawn(move || {
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => {
+                        let _ = ready_tx.send(Ok(()));
+                        c
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(anyhow!("PJRT client: {e}")));
+                        return;
+                    }
+                };
+                let mut models: Vec<(String, usize, ModelRuntime)> = Vec::new();
+                for cmd in rx {
+                    match cmd {
+                        Cmd::Load { model, batch, reply } => {
+                            let result = if let Some((_, _, rt)) = models
+                                .iter()
+                                .find(|(m, b, _)| *m == model && *b == batch)
+                            {
+                                Ok(info_of(&model, batch, rt))
+                            } else {
+                                match ModelRuntime::load(&client, &artifacts_dir, &model, batch)
+                                {
+                                    Ok(rt) => {
+                                        let info = info_of(&model, batch, &rt);
+                                        models.push((model.clone(), batch, rt));
+                                        Ok(info)
+                                    }
+                                    Err(e) => Err(e),
+                                }
+                            };
+                            let _ = reply.send(result);
+                        }
+                        Cmd::RunSegment { model, batch, from, to, tensor, reply } => {
+                            let result = models
+                                .iter()
+                                .find(|(m, b, _)| *m == model && *b == batch)
+                                .ok_or_else(|| anyhow!("{model}:{batch} not loaded"))
+                                .and_then(|(_, _, rt)| {
+                                    rt.run_segment(&client, from, to, &tensor)
+                                });
+                            let _ = reply.send(result);
+                        }
+                        Cmd::Stop => break,
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawning executor: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during startup"))??;
+        Ok(Executor { tx })
+    }
+
+    /// Load (idempotently) a model at a batch size.
+    pub fn load(&self, model: &str, batch: usize) -> Result<ModelInfo> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Cmd::Load { model: model.into(), batch, reply })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    /// Run layers `from..=to` of a loaded model.
+    pub fn run_segment(
+        &self,
+        model: &str,
+        batch: usize,
+        from: usize,
+        to: usize,
+        tensor: Tensor,
+    ) -> Result<Tensor> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Cmd::RunSegment { model: model.into(), batch, from, to, tensor, reply })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    /// Full forward.
+    pub fn run_all(&self, model: &str, batch: usize, tensor: Tensor) -> Result<Tensor> {
+        let info = self.load(model, batch)?;
+        self.run_segment(model, batch, 1, info.num_layers, tensor)
+    }
+
+    /// Stop the executor thread (queued work completes first).
+    pub fn stop(&self) {
+        let _ = self.tx.send(Cmd::Stop);
+    }
+}
+
+fn info_of(model: &str, batch: usize, rt: &ModelRuntime) -> ModelInfo {
+    ModelInfo {
+        model: model.to_string(),
+        batch,
+        num_layers: rt.num_layers(),
+        input_shape: rt.input_shape().to_vec(),
+        output_shape: rt.output_shape().to_vec(),
+        weight_bytes: rt.weight_bytes,
+        load_time: rt.load_time,
+    }
+}

@@ -1,0 +1,264 @@
+//! PJRT runtime: loads the python-AOT per-layer HLO artifacts and executes
+//! model segments on the CPU PJRT client (`xla` crate).
+//!
+//! Design (DESIGN.md §2):
+//! * one [`LayerExecutable`] per (layer, batch) — HLO text parsed and
+//!   compiled once at load, cached for the process lifetime;
+//! * weights are HLO *parameters*: loaded from the manifest's `.bin` files
+//!   and **uploaded to device buffers once per model**, then reused by
+//!   every request (embedding VGG16's 552 MB as HLO constants would make
+//!   multi-GB artifacts and re-upload per compile);
+//! * [`ModelRuntime::run_segment`] chains layers `a..=b` entirely in
+//!   device buffers (`execute_b`) — activations never round-trip through
+//!   host literals between layers. This is what makes the split index a
+//!   pure runtime decision (§Perf records literal-path vs buffer-path).
+
+pub mod executor;
+pub mod tensor;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::models::{LayerManifest, Manifest};
+pub use tensor::Tensor;
+
+/// One compiled layer (fixed batch size).
+pub struct LayerExecutable {
+    pub index: usize,
+    pub kind: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    exe: xla::PjRtLoadedExecutable,
+    /// Device-resident weight buffers in manifest order (uploaded at load).
+    weights: Vec<xla::PjRtBuffer>,
+}
+
+impl LayerExecutable {
+    /// Execute on a device-buffer activation, returning a device buffer.
+    /// The hot path: no host copies.
+    pub fn execute_buf(&self, input: &xla::PjRtBuffer) -> Result<xla::PjRtBuffer> {
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weights.len());
+        args.push(input);
+        args.extend(self.weights.iter());
+        let mut outs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("executing layer {}: {e}", self.index))?;
+        Ok(outs.remove(0).remove(0))
+    }
+
+    /// Host-tensor convenience wrapper (upload → execute → download).
+    pub fn execute(&self, client: &xla::PjRtClient, input: &Tensor) -> Result<Tensor> {
+        if input.shape != self.in_shape {
+            bail!(
+                "layer {}: input shape {:?} != expected {:?}",
+                self.index, input.shape, self.in_shape
+            );
+        }
+        let buf = input.to_buffer(client)?;
+        let out = self.execute_buf(&buf)?;
+        Tensor::from_buffer(&out, &self.out_shape)
+    }
+}
+
+/// All layers of one model at one batch size.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub batch: usize,
+    layers: Vec<LayerExecutable>,
+    /// Cumulative HLO parse + compile + weight upload time.
+    pub load_time: Duration,
+    /// Total weight bytes uploaded to the device.
+    pub weight_bytes: u64,
+}
+
+impl ModelRuntime {
+    /// Load and compile layers `[from..=to]` of `model` at `batch`; pass
+    /// `1..=num_layers` for the whole model. Loading a sub-range is what a
+    /// memory-constrained device does after the split decision.
+    pub fn load_range(
+        client: &xla::PjRtClient,
+        artifacts_dir: &Path,
+        model: &str,
+        batch: usize,
+        from: usize,
+        to: usize,
+    ) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(artifacts_dir, model)?;
+        if !manifest.batches.contains(&batch) {
+            bail!(
+                "model {model} has no batch-{batch} artifacts (available: {:?})",
+                manifest.batches
+            );
+        }
+        if from < 1 || to > manifest.num_layers || from > to {
+            bail!("bad layer range {from}..={to} for {model} ({} layers)", manifest.num_layers);
+        }
+        let t0 = Instant::now();
+        let mut layers = Vec::with_capacity(to - from + 1);
+        let mut weight_bytes = 0u64;
+        for lm in &manifest.layers[from - 1..to] {
+            let (exe, wb) = Self::load_layer(client, &manifest, lm, batch)?;
+            weight_bytes += wb;
+            layers.push(exe);
+        }
+        Ok(ModelRuntime { manifest, batch, layers, load_time: t0.elapsed(), weight_bytes })
+    }
+
+    pub fn load(
+        client: &xla::PjRtClient,
+        artifacts_dir: &Path,
+        model: &str,
+        batch: usize,
+    ) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(artifacts_dir, model)?;
+        let n = manifest.num_layers;
+        Self::load_range(client, artifacts_dir, model, batch, 1, n)
+    }
+
+    fn load_layer(
+        client: &xla::PjRtClient,
+        manifest: &Manifest,
+        lm: &LayerManifest,
+        batch: usize,
+    ) -> Result<(LayerExecutable, u64)> {
+        let hlo_path = manifest.hlo_path(lm.index, batch)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {}", hlo_path.display()))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling layer {} of {}: {e}", lm.index, manifest.model))?;
+
+        let mut weights = Vec::with_capacity(lm.weights.len());
+        let mut weight_bytes = 0u64;
+        for wm in &lm.weights {
+            let t = Tensor::from_bin_file(&manifest.weight_path(wm), &wm.shape)?;
+            weight_bytes += t.num_bytes() as u64;
+            weights.push(t.to_buffer(client)?);
+        }
+
+        // Manifest shapes are batch-1; rescale dim 0.
+        let rescale = |s: &[usize]| {
+            let mut v = s.to_vec();
+            if !v.is_empty() {
+                v[0] = batch;
+            }
+            v
+        };
+        Ok((
+            LayerExecutable {
+                index: lm.index,
+                kind: lm.kind.clone(),
+                in_shape: rescale(&lm.in_shape),
+                out_shape: rescale(&lm.out_shape),
+                exe,
+                weights,
+            },
+            weight_bytes,
+        ))
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// First and last loaded layer indices (1-based, inclusive).
+    pub fn loaded_range(&self) -> (usize, usize) {
+        (self.layers[0].index, self.layers.last().unwrap().index)
+    }
+
+    pub fn layer(&self, index: usize) -> &LayerExecutable {
+        let (from, _) = self.loaded_range();
+        &self.layers[index - from]
+    }
+
+    /// Run layers `from..=to` (1-based, inclusive) on a host tensor; all
+    /// intermediate activations stay in device buffers.
+    pub fn run_segment(
+        &self,
+        client: &xla::PjRtClient,
+        from: usize,
+        to: usize,
+        input: &Tensor,
+    ) -> Result<Tensor> {
+        let (lo, hi) = self.loaded_range();
+        if from < lo || to > hi || from > to {
+            bail!("bad segment {from}..={to} (loaded {lo}..={hi})");
+        }
+        let first = self.layer(from);
+        if input.shape != first.in_shape {
+            bail!(
+                "segment {from}..={to}: input {:?} != expected {:?}",
+                input.shape, first.in_shape
+            );
+        }
+        let mut buf = input.to_buffer(client)?;
+        for i in from..=to {
+            buf = self.layer(i).execute_buf(&buf)?;
+        }
+        Tensor::from_buffer(&buf, &self.layer(to).out_shape)
+    }
+
+    /// Full forward pass over the loaded range.
+    pub fn run_all(&self, client: &xla::PjRtClient, input: &Tensor) -> Result<Tensor> {
+        let (lo, hi) = self.loaded_range();
+        self.run_segment(client, lo, hi, input)
+    }
+
+    /// Input shape expected by the first loaded layer.
+    pub fn input_shape(&self) -> &[usize] {
+        &self.layers[0].in_shape
+    }
+
+    pub fn output_shape(&self) -> &[usize] {
+        &self.layers.last().unwrap().out_shape
+    }
+}
+
+/// Shared PJRT CPU client + loaded-model cache (keyed by model:batch:range).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    models: BTreeMap<String, ModelRuntime>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e}"))?;
+        Ok(Runtime { client, models: BTreeMap::new() })
+    }
+
+    /// Load (or fetch cached) full model.
+    pub fn load_model(
+        &mut self,
+        artifacts_dir: &Path,
+        model: &str,
+        batch: usize,
+    ) -> Result<&ModelRuntime> {
+        let key = format!("{model}:{batch}:all");
+        if !self.models.contains_key(&key) {
+            let rt = ModelRuntime::load(&self.client, artifacts_dir, model, batch)
+                .with_context(|| format!("loading {model} b{batch}"))?;
+            log::info!(
+                "loaded {model} b{batch}: {} layers, {} weights, {:?}",
+                rt.num_layers(),
+                crate::util::fmt_bytes(rt.weight_bytes),
+                rt.load_time
+            );
+            self.models.insert(key.clone(), rt);
+        }
+        Ok(self.models.get(&key).unwrap())
+    }
+
+    pub fn get(&self, model: &str, batch: usize) -> Option<&ModelRuntime> {
+        self.models.get(&format!("{model}:{batch}:all"))
+    }
+}

@@ -1,0 +1,170 @@
+//! Host-side f32 tensor + conversions to/from PJRT literals and device
+//! buffers.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let expect: usize = shape.iter().product();
+        if data.len() != expect {
+            bail!("tensor shape {shape:?} needs {expect} elements, got {}", data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn num_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Load a raw little-endian f32 `.bin` weight file (the AOT format).
+    pub fn from_bin_file(path: &Path, shape: &[usize]) -> Result<Tensor> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading weight file {}", path.display()))?;
+        let expect: usize = shape.iter().product::<usize>() * 4;
+        if bytes.len() != expect {
+            bail!(
+                "weight file {} is {} bytes, shape {shape:?} needs {expect}",
+                path.display(),
+                bytes.len()
+            );
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    /// Convert to a PJRT literal (host).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        // Safety of representation: f32 little-endian byte view.
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.shape,
+            bytes,
+        )
+        .map_err(|e| anyhow::anyhow!("literal from tensor: {e}"))
+    }
+
+    /// Read back from a PJRT literal; `expect_shape` guards the contract.
+    pub fn from_literal(lit: &xla::Literal, expect_shape: &[usize]) -> Result<Tensor> {
+        let n: usize = expect_shape.iter().product();
+        if lit.element_count() != n {
+            bail!(
+                "literal has {} elements, expected shape {expect_shape:?} ({n})",
+                lit.element_count()
+            );
+        }
+        let data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))?;
+        Ok(Tensor { shape: expect_shape.to_vec(), data })
+    }
+
+    /// Upload to a device buffer (zero extra host copies beyond PJRT's own).
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        client
+            .buffer_from_host_buffer(&self.data, &self.shape, None)
+            .map_err(|e| anyhow::anyhow!("uploading tensor: {e}"))
+    }
+
+    /// Download a device buffer.
+    pub fn from_buffer(buf: &xla::PjRtBuffer, expect_shape: &[usize]) -> Result<Tensor> {
+        let lit = buf.to_literal_sync().map_err(|e| anyhow::anyhow!("buffer sync: {e}"))?;
+        Self::from_literal(&lit, expect_shape)
+    }
+
+    /// Serialise to little-endian bytes (the wire format of `serve::`).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_le_bytes(shape: Vec<usize>, bytes: &[u8]) -> Result<Tensor> {
+        let expect: usize = shape.iter().product::<usize>() * 4;
+        if bytes.len() != expect {
+            bail!("payload is {} bytes, shape {shape:?} needs {expect}", bytes.len());
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Tensor { shape, data })
+    }
+
+    /// Argmax over the last axis for each row — classification labels.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        let cols = *self.shape.last().unwrap_or(&1);
+        self.data
+            .chunks(cols)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_element_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn le_bytes_roundtrip() {
+        let t = Tensor::new(vec![2, 2], vec![1.5, -2.0, 0.0, 3.25]).unwrap();
+        let b = t.to_le_bytes();
+        assert_eq!(b.len(), 16);
+        let t2 = Tensor::from_le_bytes(vec![2, 2], &b).unwrap();
+        assert_eq!(t, t2);
+        assert!(Tensor::from_le_bytes(vec![3], &b).is_err());
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.5, 2.0, -1.0, 1.0]).unwrap();
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn bin_file_roundtrip() {
+        let dir = std::env::temp_dir().join("smartsplit_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let t = Tensor::new(vec![3], vec![1.0, 2.5, -7.0]).unwrap();
+        std::fs::write(&path, t.to_le_bytes()).unwrap();
+        let t2 = Tensor::from_bin_file(&path, &[3]).unwrap();
+        assert_eq!(t, t2);
+        assert!(Tensor::from_bin_file(&path, &[4]).is_err());
+    }
+}

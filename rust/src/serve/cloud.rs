@@ -1,0 +1,142 @@
+//! Cloud-side daemon: accepts device connections, runs the tail layers of
+//! the announced model on the PJRT executor thread, and streams logits
+//! back. One handler thread per connection (smartphone clients are few and
+//! long-lived); all PJRT state lives on the executor thread.
+
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::executor::Executor;
+use crate::serve::protocol::{read_msg, write_msg, Msg};
+
+/// Shared server state.
+pub struct CloudServer {
+    pub addr: std::net::SocketAddr,
+    executor: Executor,
+    shutdown: AtomicBool,
+    pub requests_served: AtomicU64,
+    listener: TcpListener,
+}
+
+impl CloudServer {
+    /// Bind to `addr` (use port 0 for an ephemeral port) without starting
+    /// the accept loop.
+    pub fn bind(addr: &str, artifacts_dir: PathBuf) -> Result<Arc<CloudServer>> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let addr = listener.local_addr()?;
+        let executor = Executor::spawn(artifacts_dir, "cloud")?;
+        Ok(Arc::new(CloudServer {
+            addr,
+            executor,
+            shutdown: AtomicBool::new(false),
+            requests_served: AtomicU64::new(0),
+            listener,
+        }))
+    }
+
+    /// Run the accept loop on a background thread; returns the join handle.
+    pub fn spawn(self: &Arc<Self>) -> std::thread::JoinHandle<()> {
+        let this = Arc::clone(self);
+        std::thread::Builder::new()
+            .name("smartsplit-cloud-accept".into())
+            .spawn(move || this.accept_loop())
+            .expect("spawn cloud accept loop")
+    }
+
+    fn accept_loop(self: Arc<Self>) {
+        // Short-poll accept so shutdown is observed promptly.
+        self.listener.set_nonblocking(true).expect("listener nonblocking");
+        while !self.shutdown.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    log::info!("cloud: connection from {peer}");
+                    stream.set_nodelay(true).ok();
+                    let this = Arc::clone(&self);
+                    std::thread::Builder::new()
+                        .name("smartsplit-cloud-conn".into())
+                        .spawn(move || {
+                            if let Err(e) = this.handle_conn(stream) {
+                                log::warn!("cloud: connection ended: {e:#}");
+                            }
+                        })
+                        .expect("spawn conn handler");
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(e) => {
+                    log::warn!("cloud: accept error: {e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Stop accepting and mark shutdown (existing connections drain on
+    /// their own Shutdown messages).
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.executor.stop();
+    }
+
+    fn handle_conn(&self, stream: TcpStream) -> Result<()> {
+        stream.set_nonblocking(false)?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = stream;
+        let mut session: Option<(String, usize, usize)> = None; // model, batch, L
+
+        loop {
+            let msg = match read_msg(&mut reader) {
+                Ok(m) => m,
+                Err(_) if self.shutdown.load(Ordering::SeqCst) => return Ok(()),
+                Err(e) => return Err(e).context("reading from device"),
+            };
+            match msg {
+                Msg::Hello { model, batch } => {
+                    let info = self.executor.load(&model, batch as usize)?;
+                    write_msg(
+                        &mut writer,
+                        &Msg::HelloAck { num_layers: info.num_layers as u32 },
+                    )?;
+                    session = Some((model, batch as usize, info.num_layers));
+                }
+                Msg::Infer { request_id, from_layer, tensor } => {
+                    let Some((model, batch, num_layers)) = session.as_ref() else {
+                        write_msg(
+                            &mut writer,
+                            &Msg::Error { request_id, reason: "no Hello".into() },
+                        )?;
+                        continue;
+                    };
+                    let reply = match self.executor.run_segment(
+                        model,
+                        *batch,
+                        from_layer as usize,
+                        *num_layers,
+                        tensor,
+                    ) {
+                        Ok(out) => Msg::InferResult { request_id, tensor: out },
+                        Err(e) => Msg::Error { request_id, reason: format!("{e:#}") },
+                    };
+                    self.requests_served.fetch_add(1, Ordering::SeqCst);
+                    write_msg(&mut writer, &reply)?;
+                }
+                Msg::SetSplit { l1 } => {
+                    log::info!("cloud: device re-optimised split to l1={l1}");
+                }
+                Msg::Shutdown => {
+                    log::info!("cloud: device said goodbye");
+                    return Ok(());
+                }
+                other => {
+                    log::warn!("cloud: unexpected message {other:?}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! Device-side client: emulates the smartphone half of the split runtime.
+//!
+//! For each request it (1) executes layers `1..=l1` on the PJRT runtime,
+//! scaling wall-time by the phone profile's `slowdown_vs_host`; (2) ships
+//! the intermediate activation to the cloud over the token-bucket-shaped
+//! TCP link; (3) waits for logits. The [`EnergyMeter`] integrates the §III
+//! power models over the *measured* phase durations — the runtime analogue
+//! of the paper's BatteryStats methodology — and the [`MemoryTracker`]
+//! enforces `M|l1 ≤ M` (Eq. 17) at load time.
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::device::{ComputeProfile, EnergyComponent, EnergyMeter, MemoryTracker};
+use crate::models::Manifest;
+use crate::netsim::Link;
+use crate::perfmodel::K_CLIENT_POWER;
+use crate::runtime::executor::Executor;
+use crate::runtime::Tensor;
+use crate::serve::protocol::{read_msg, wire_size, write_msg, Msg};
+
+/// Shaped-socket chunk size: small enough that the token bucket paces
+/// smoothly, large enough to keep syscall overhead negligible.
+const CHUNK: usize = 64 * 1024;
+
+/// Per-request phase timings observed by the device.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestTiming {
+    pub client_s: f64,
+    pub upload_s: f64,
+    pub cloud_and_download_s: f64,
+    pub total_s: f64,
+}
+
+/// The smartphone client.
+pub struct DeviceClient {
+    pub profile: &'static ComputeProfile,
+    pub energy: EnergyMeter,
+    pub memory: MemoryTracker,
+    pub link: Arc<Link>,
+    executor: Executor,
+    manifest: Manifest,
+    batch: usize,
+    num_layers: usize,
+    input_shape: Vec<usize>,
+    split_l1: AtomicUsize,
+    conn: Mutex<Conn>,
+    model: String,
+    /// Emulate phone-speed compute by stretching measured PJRT time.
+    pub emulate_slowdown: bool,
+}
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl DeviceClient {
+    /// Connect to the cloud at `addr`, announce `model`/`batch`, and load
+    /// the device-side layers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn connect(
+        addr: &str,
+        artifacts_dir: &Path,
+        model: &str,
+        batch: usize,
+        l1: usize,
+        profile: &'static ComputeProfile,
+        link: Arc<Link>,
+    ) -> Result<DeviceClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true)?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+
+        write_msg(&mut writer, &Msg::Hello { model: model.into(), batch: batch as u32 })?;
+        let ack = read_msg(&mut reader)?;
+        let num_layers = match ack {
+            Msg::HelloAck { num_layers } => num_layers as usize,
+            other => bail!("expected HelloAck, got {other:?}"),
+        };
+
+        // Device-side PJRT lives on its own executor thread ("the phone
+        // SoC"); load the whole model so the split can move at runtime —
+        // the memory *accounting* below only charges the head (Eq. 17).
+        let executor = Executor::spawn(artifacts_dir.to_path_buf(), "device")?;
+        let info = executor.load(model, batch)?;
+        if info.num_layers != num_layers {
+            bail!("device/cloud layer-count mismatch: {} vs {num_layers}", info.num_layers);
+        }
+        if l1 > num_layers {
+            bail!("split l1={l1} exceeds {num_layers} layers");
+        }
+        let manifest = Manifest::load(artifacts_dir, model)?;
+
+        let memory = MemoryTracker::new(profile.memory_bytes);
+        let head_bytes = Self::head_bytes(&manifest, l1);
+        memory
+            .reserve(head_bytes)
+            .map_err(|free| anyhow::anyhow!("Eq.17 violated: head needs {head_bytes} B, {free} B free"))?;
+
+        Ok(DeviceClient {
+            profile,
+            energy: EnergyMeter::new(profile),
+            memory,
+            link,
+            executor,
+            batch,
+            num_layers: info.num_layers,
+            input_shape: info.input_shape,
+            manifest,
+            split_l1: AtomicUsize::new(l1),
+            conn: Mutex::new(Conn { reader, writer, next_id: 0 }),
+            model: model.to_string(),
+            emulate_slowdown: true,
+        })
+    }
+
+    /// `M|l1`: parameter + activation bytes of the head (ref [39]).
+    fn head_bytes(manifest: &Manifest, l1: usize) -> u64 {
+        manifest.layers[..l1]
+            .iter()
+            .map(|l| l.param_bytes + l.act_bytes)
+            .sum()
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn split(&self) -> usize {
+        self.split_l1.load(Ordering::SeqCst)
+    }
+
+    /// Move the split point (adaptive re-optimisation). Re-does the Eq. 17
+    /// memory accounting and informs the cloud.
+    pub fn set_split(&self, l1: usize) -> Result<()> {
+        if l1 > self.num_layers {
+            bail!("split l1={l1} out of range");
+        }
+        let old = self.split_l1.swap(l1, Ordering::SeqCst);
+        let old_bytes = Self::head_bytes(&self.manifest, old);
+        let new_bytes = Self::head_bytes(&self.manifest, l1);
+        self.memory.release(old_bytes);
+        self.memory
+            .reserve(new_bytes)
+            .map_err(|free| anyhow::anyhow!("Eq.17 violated at l1={l1}: {free} B free"))?;
+        let mut conn = self.conn.lock().unwrap();
+        write_msg(&mut conn.writer, &Msg::SetSplit { l1: l1 as u32 })?;
+        Ok(())
+    }
+
+    /// Client power (Eq. 6) in Watts.
+    fn client_power_w(&self) -> f64 {
+        K_CLIENT_POWER * self.profile.cores as f64 * self.profile.freq_ghz.powi(3)
+    }
+
+    /// Serve one request end-to-end; returns (logits, timing).
+    pub fn infer(&self, image: &Tensor) -> Result<(Tensor, RequestTiming)> {
+        let l1 = self.split();
+        let t_start = Instant::now();
+
+        // ---- phase 1: device compute (layers 1..=l1) -------------------
+        let t0 = Instant::now();
+        let (intermediate, from_layer) = if l1 == 0 {
+            (image.clone(), 1u32) // COC: ship the raw input
+        } else {
+            let out = self
+                .executor
+                .run_segment(&self.model, self.batch, 1, l1, image.clone())?;
+            (out, (l1 + 1) as u32)
+        };
+        let mut client_s = t0.elapsed().as_secs_f64();
+        if self.emulate_slowdown && self.profile.slowdown_vs_host > 1.0 {
+            let extra = client_s * (self.profile.slowdown_vs_host - 1.0);
+            std::thread::sleep(Duration::from_secs_f64(extra.min(5.0)));
+            client_s = t0.elapsed().as_secs_f64();
+        }
+        self.energy
+            .record(EnergyComponent::ClientCompute, self.client_power_w(), client_s);
+
+        // Full model on device: no cloud interaction at all (COS).
+        if l1 == self.num_layers {
+            let total = t_start.elapsed().as_secs_f64();
+            return Ok((
+                intermediate,
+                RequestTiming { client_s, upload_s: 0.0, cloud_and_download_s: 0.0, total_s: total },
+            ));
+        }
+
+        // ---- phase 2: shaped upload ------------------------------------
+        let t1 = Instant::now();
+        let reply = {
+            let mut conn = self.conn.lock().unwrap();
+            conn.next_id += 1;
+            let id = conn.next_id;
+            let msg = Msg::Infer { request_id: id, from_layer, tensor: intermediate };
+            self.send_shaped(&mut conn.writer, &msg)?;
+            let upload_s = t1.elapsed().as_secs_f64();
+            self.energy.record(
+                EnergyComponent::Upload,
+                self.link_upload_power_w(),
+                upload_s,
+            );
+
+            // ---- phase 3: cloud compute + download ---------------------
+            let t2 = Instant::now();
+            let reply = read_msg(&mut conn.reader)?;
+            let down_s = t2.elapsed().as_secs_f64();
+            self.energy.record(
+                EnergyComponent::Download,
+                self.link_download_power_w(),
+                // Only the transfer fraction draws radio power; the cloud
+                // compute wait is idle. Approximate transfer time from size.
+                self.link
+                    .transfer_time(wire_size(&reply))
+                    .as_secs_f64()
+                    .min(down_s),
+            );
+            drop(conn);
+            (reply, upload_s, down_s)
+        };
+        let (reply, upload_s, down_s) = reply;
+
+        match reply {
+            Msg::InferResult { tensor, .. } => {
+                let total = t_start.elapsed().as_secs_f64();
+                Ok((
+                    tensor,
+                    RequestTiming {
+                        client_s,
+                        upload_s,
+                        cloud_and_download_s: down_s,
+                        total_s: total,
+                    },
+                ))
+            }
+            Msg::Error { reason, .. } => bail!("cloud error: {reason}"),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    fn link_upload_power_w(&self) -> f64 {
+        let radio = self.profile.wifi.expect("device profile has a radio").radio_power();
+        radio.upload_power_w(self.link.bandwidth_mbps())
+    }
+
+    fn link_download_power_w(&self) -> f64 {
+        let radio = self.profile.wifi.expect("device profile has a radio").radio_power();
+        radio.download_power_w(self.link.bandwidth_mbps())
+    }
+
+    /// Write `msg` through the token-bucket shaper in CHUNK pieces.
+    fn send_shaped(&self, w: &mut TcpStream, msg: &Msg) -> Result<()> {
+        let mut buf = Vec::with_capacity(wire_size(msg) as usize);
+        write_msg(&mut buf, msg)?;
+        for chunk in buf.chunks(CHUNK) {
+            self.link.throttle(chunk.len() as u64, true);
+            w.write_all(chunk)?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Orderly goodbye.
+    pub fn shutdown(&self) -> Result<()> {
+        let mut conn = self.conn.lock().unwrap();
+        write_msg(&mut conn.writer, &Msg::Shutdown)?;
+        Ok(())
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.num_layers
+    }
+
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    /// Stop the device executor thread.
+    pub fn stop(&self) {
+        self.executor.stop();
+    }
+}

@@ -1,0 +1,21 @@
+//! The split-serving stack: framed TCP protocol, cloud daemon, device
+//! client, and the request router + dynamic batcher.
+//!
+//! Topology (matching the paper's Android-app + Windows-server testbed):
+//!
+//! ```text
+//!   workload ─▶ Router/Batcher ─▶ DeviceClient (layers 1..=l1, PJRT,
+//!                 phone-emulated)   │ shaped TCP (netsim::Link)
+//!                                   ▼
+//!                               CloudServer (layers l1+1..=L, PJRT)
+//! ```
+
+pub mod cloud;
+pub mod device;
+pub mod protocol;
+pub mod router;
+
+pub use cloud::CloudServer;
+pub use device::{DeviceClient, RequestTiming};
+pub use protocol::{read_msg, wire_size, write_msg, Msg};
+pub use router::{Completion, Router, RouterConfig};

@@ -1,0 +1,222 @@
+//! Wire protocol of the split-serving stack: length-framed binary messages
+//! over TCP.
+//!
+//! Layout of every frame (all integers little-endian):
+//!
+//! ```text
+//!     [ u8  msg_type ]
+//!     [ u64 request_id ]
+//!     [ u32 aux        ]   // batch / layer index / split by type
+//!     [ u8  ndim       ]
+//!     [ u32 dim        ] * ndim
+//!     [ u64 payload_len]
+//!     [ payload bytes  ]   // f32 tensor data or UTF-8 text
+//! ```
+//!
+//! The header is fixed-size binary (no JSON on the hot path); `Hello`
+//! carries its model name as the UTF-8 payload.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Tensor;
+
+/// Maximum accepted payload (guards the server against garbage frames):
+/// the largest legitimate tensor is VGG16's b8 conv1 activation ≈ 103 MB.
+pub const MAX_PAYLOAD: u64 = 1 << 30;
+
+/// Protocol messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Device → cloud: announce model + batch; cloud loads/pins artifacts.
+    Hello { model: String, batch: u32 },
+    /// Cloud → device: ready; `num_layers` of the loaded model.
+    HelloAck { num_layers: u32 },
+    /// Device → cloud: run layers `from_layer..=L` on the tensor.
+    Infer { request_id: u64, from_layer: u32, tensor: Tensor },
+    /// Cloud → device: logits for `request_id`.
+    InferResult { request_id: u64, tensor: Tensor },
+    /// Device → cloud: the coordinator re-optimised; informational.
+    SetSplit { l1: u32 },
+    /// Either direction: orderly shutdown.
+    Shutdown,
+    /// Cloud → device: failure, UTF-8 reason in payload.
+    Error { request_id: u64, reason: String },
+}
+
+impl Msg {
+    fn type_byte(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 1,
+            Msg::HelloAck { .. } => 2,
+            Msg::Infer { .. } => 3,
+            Msg::InferResult { .. } => 4,
+            Msg::SetSplit { .. } => 5,
+            Msg::Shutdown => 6,
+            Msg::Error { .. } => 7,
+        }
+    }
+}
+
+/// Serialise a message into `w`. Returns bytes written.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<u64> {
+    let empty: &[usize] = &[];
+    let (request_id, aux, shape, payload): (u64, u32, &[usize], Vec<u8>) = match msg {
+        Msg::Hello { model, batch } => (0, *batch, empty, model.as_bytes().to_vec()),
+        Msg::HelloAck { num_layers } => (0, *num_layers, empty, Vec::new()),
+        Msg::Infer { request_id, from_layer, tensor } => {
+            (*request_id, *from_layer, &tensor.shape, tensor.to_le_bytes())
+        }
+        Msg::InferResult { request_id, tensor } => {
+            (*request_id, 0, &tensor.shape, tensor.to_le_bytes())
+        }
+        Msg::SetSplit { l1 } => (0, *l1, empty, Vec::new()),
+        Msg::Shutdown => (0, 0, empty, Vec::new()),
+        Msg::Error { request_id, reason } => {
+            (*request_id, 0, empty, reason.as_bytes().to_vec())
+        }
+    };
+    let mut head = Vec::with_capacity(32 + shape.len() * 4);
+    head.push(msg.type_byte());
+    head.extend_from_slice(&request_id.to_le_bytes());
+    head.extend_from_slice(&aux.to_le_bytes());
+    head.push(shape.len() as u8);
+    for &d in shape {
+        head.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    head.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    w.write_all(&head).context("writing frame header")?;
+    w.write_all(&payload).context("writing frame payload")?;
+    Ok(head.len() as u64 + payload.len() as u64)
+}
+
+fn read_arr<R: Read, const N: usize>(r: &mut R) -> Result<[u8; N]> {
+    let mut buf = [0u8; N];
+    r.read_exact(&mut buf).context("reading frame bytes")?;
+    Ok(buf)
+}
+
+/// Read one message from `r`.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg> {
+    let ty = read_arr::<R, 1>(r)?[0];
+    let request_id = u64::from_le_bytes(read_arr::<R, 8>(r)?);
+    let aux = u32::from_le_bytes(read_arr::<R, 4>(r)?);
+    let ndim = read_arr::<R, 1>(r)?[0] as usize;
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(u32::from_le_bytes(read_arr::<R, 4>(r)?) as usize);
+    }
+    let payload_len = u64::from_le_bytes(read_arr::<R, 8>(r)?);
+    if payload_len > MAX_PAYLOAD {
+        bail!("frame payload {payload_len} exceeds MAX_PAYLOAD");
+    }
+    let mut payload = vec![0u8; payload_len as usize];
+    r.read_exact(&mut payload).context("reading payload")?;
+
+    Ok(match ty {
+        1 => Msg::Hello {
+            model: String::from_utf8(payload).context("hello model name")?,
+            batch: aux,
+        },
+        2 => Msg::HelloAck { num_layers: aux },
+        3 => Msg::Infer {
+            request_id,
+            from_layer: aux,
+            tensor: Tensor::from_le_bytes(shape, &payload)?,
+        },
+        4 => Msg::InferResult { request_id, tensor: Tensor::from_le_bytes(shape, &payload)? },
+        5 => Msg::SetSplit { l1: aux },
+        6 => Msg::Shutdown,
+        7 => Msg::Error {
+            request_id,
+            reason: String::from_utf8(payload).context("error reason")?,
+        },
+        other => bail!("unknown message type {other}"),
+    })
+}
+
+/// Size in bytes a message occupies on the wire (for shaping/energy
+/// accounting without double-serialising).
+pub fn wire_size(msg: &Msg) -> u64 {
+    let (ndim, payload) = match msg {
+        Msg::Hello { model, .. } => (0, model.len() as u64),
+        Msg::HelloAck { .. } | Msg::SetSplit { .. } | Msg::Shutdown => (0, 0),
+        Msg::Infer { tensor, .. } => (tensor.shape.len(), tensor.num_bytes() as u64),
+        Msg::InferResult { tensor, .. } => (tensor.shape.len(), tensor.num_bytes() as u64),
+        Msg::Error { reason, .. } => (0, reason.len() as u64),
+    };
+    1 + 8 + 4 + 1 + 4 * ndim as u64 + 8 + payload
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(msg: Msg) -> Msg {
+        let mut buf = Vec::new();
+        let written = write_msg(&mut buf, &msg).unwrap();
+        assert_eq!(written, buf.len() as u64);
+        assert_eq!(written, wire_size(&msg), "wire_size mismatch for {msg:?}");
+        let mut cur = Cursor::new(buf);
+        let out = read_msg(&mut cur).unwrap();
+        assert_eq!(cur.position(), written); // consumed exactly
+        out
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        let t = Tensor::new(vec![1, 2, 2], vec![1.0, -2.0, 3.5, 0.0]).unwrap();
+        for msg in [
+            Msg::Hello { model: "alexnet".into(), batch: 8 },
+            Msg::HelloAck { num_layers: 21 },
+            Msg::Infer { request_id: 42, from_layer: 4, tensor: t.clone() },
+            Msg::InferResult { request_id: 42, tensor: t.clone() },
+            Msg::SetSplit { l1: 11 },
+            Msg::Shutdown,
+            Msg::Error { request_id: 7, reason: "boom".into() },
+        ] {
+            assert_eq!(roundtrip(msg.clone()), msg);
+        }
+    }
+
+    #[test]
+    fn multiple_messages_stream() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::SetSplit { l1: 3 }).unwrap();
+        write_msg(&mut buf, &Msg::Shutdown).unwrap();
+        let mut cur = Cursor::new(buf);
+        assert_eq!(read_msg(&mut cur).unwrap(), Msg::SetSplit { l1: 3 });
+        assert_eq!(read_msg(&mut cur).unwrap(), Msg::Shutdown);
+        assert!(read_msg(&mut cur).is_err()); // EOF
+    }
+
+    #[test]
+    fn rejects_oversize_payload() {
+        let mut buf = Vec::new();
+        buf.push(3u8);
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.push(0);
+        buf.extend_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(read_msg(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_type() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Shutdown).unwrap();
+        buf[0] = 99;
+        assert!(read_msg(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn truncated_frame_is_error_not_panic() {
+        let t = Tensor::new(vec![4], vec![1.0; 4]).unwrap();
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::InferResult { request_id: 1, tensor: t }).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read_msg(&mut Cursor::new(buf)).is_err());
+    }
+}

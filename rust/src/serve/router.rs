@@ -1,0 +1,234 @@
+//! Request router + dynamic batcher (the vLLM-router-shaped L3 feature).
+//!
+//! Callers submit single images; the batcher coalesces up to `max_batch`
+//! requests that arrive within `max_wait` of the first queued one, stacks
+//! them along dim 0, executes once through the [`DeviceClient`], and
+//! scatters logits back to the per-request completions. When fewer than
+//! `max_batch` requests are waiting the batch is padded (padding rows are
+//! computed-but-dropped — the batch-ablation bench quantifies the trade).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::runtime::Tensor;
+use crate::serve::device::{DeviceClient, RequestTiming};
+
+/// A completed inference.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub label: usize,
+    pub timing: RequestTiming,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+}
+
+struct Pending {
+    id: u64,
+    image: Tensor,
+    tx: std::sync::mpsc::Sender<Result<Completion>>,
+}
+
+struct Queue {
+    items: VecDeque<Pending>,
+    closed: bool,
+}
+
+/// Router configuration.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Hardware batch of the loaded executables (1 = no batching).
+    pub max_batch: usize,
+    /// How long to hold the first request while waiting for peers.
+    pub max_wait: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { max_batch: 1, max_wait: Duration::from_millis(50) }
+    }
+}
+
+/// The router: one dispatcher thread drains the queue into the device
+/// client.
+pub struct Router {
+    queue: Arc<(Mutex<Queue>, Condvar)>,
+    cfg: RouterConfig,
+    stopped: Arc<AtomicBool>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Router {
+    pub fn start(device: Arc<DeviceClient>, cfg: RouterConfig) -> Router {
+        assert!(cfg.max_batch >= 1);
+        let queue = Arc::new((
+            Mutex::new(Queue { items: VecDeque::new(), closed: false }),
+            Condvar::new(),
+        ));
+        let stopped = Arc::new(AtomicBool::new(false));
+        let dispatcher = {
+            let queue = Arc::clone(&queue);
+            let stopped = Arc::clone(&stopped);
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("smartsplit-router".into())
+                .spawn(move || dispatcher_loop(device, queue, cfg, stopped))
+                .expect("spawn router dispatcher")
+        };
+        Router { queue, cfg, stopped, dispatcher: Some(dispatcher) }
+    }
+
+    /// Submit an image; returns a receiver for the completion.
+    pub fn submit(
+        &self,
+        id: u64,
+        image: Tensor,
+    ) -> std::sync::mpsc::Receiver<Result<Completion>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let (lock, cv) = &*self.queue;
+        let mut q = lock.lock().unwrap();
+        q.items.push_back(Pending { id, image, tx });
+        cv.notify_one();
+        rx
+    }
+
+    /// Convenience: submit and block for the result.
+    pub fn infer_blocking(&self, id: u64, image: Tensor) -> Result<Completion> {
+        self.submit(id, image)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("router dropped request {id}"))?
+    }
+
+    pub fn config(&self) -> &RouterConfig {
+        &self.cfg
+    }
+
+    /// Drain and stop the dispatcher.
+    pub fn stop(mut self) {
+        {
+            let (lock, cv) = &*self.queue;
+            lock.lock().unwrap().closed = true;
+            cv.notify_all();
+        }
+        self.stopped.store(true, Ordering::SeqCst);
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatcher_loop(
+    device: Arc<DeviceClient>,
+    queue: Arc<(Mutex<Queue>, Condvar)>,
+    cfg: RouterConfig,
+    stopped: Arc<AtomicBool>,
+) {
+    let (lock, cv) = &*queue;
+    loop {
+        // Wait for at least one request (or close).
+        let mut batch: Vec<Pending> = Vec::new();
+        {
+            let mut q = lock.lock().unwrap();
+            loop {
+                if !q.items.is_empty() {
+                    break;
+                }
+                if q.closed || stopped.load(Ordering::SeqCst) {
+                    return;
+                }
+                let (guard, _) = cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                q = guard;
+            }
+            batch.push(q.items.pop_front().unwrap());
+            // Batching window: wait up to max_wait for peers.
+            if cfg.max_batch > 1 {
+                let deadline = Instant::now() + cfg.max_wait;
+                while batch.len() < cfg.max_batch {
+                    if let Some(p) = q.items.pop_front() {
+                        batch.push(p);
+                        continue;
+                    }
+                    let now = Instant::now();
+                    if now >= deadline || q.closed {
+                        break;
+                    }
+                    let (guard, _) = cv.wait_timeout(q, deadline - now).unwrap();
+                    q = guard;
+                }
+            }
+        }
+
+        let n = batch.len();
+        let result = run_batch(&device, &batch, cfg.max_batch);
+        match result {
+            Ok(completions) => {
+                for (p, c) in batch.into_iter().zip(completions) {
+                    let _ = p.tx.send(Ok(c));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for p in batch {
+                    let _ = p.tx.send(Err(anyhow::anyhow!("batch of {n} failed: {msg}")));
+                }
+            }
+        }
+    }
+}
+
+/// Stack the batch (padding to the hardware batch), run, scatter.
+fn run_batch(
+    device: &DeviceClient,
+    batch: &[Pending],
+    hw_batch: usize,
+) -> Result<Vec<Completion>> {
+    let per_shape = &batch[0].image.shape;
+    let per_elems: usize = per_shape.iter().product();
+    for p in batch {
+        if p.image.shape != *per_shape {
+            anyhow::bail!("heterogeneous shapes in batch");
+        }
+        if p.image.shape[0] != 1 {
+            anyhow::bail!("submit() expects batch-1 images");
+        }
+    }
+    let mut shape = per_shape.clone();
+    shape[0] = hw_batch;
+    let mut data = vec![0.0f32; per_elems * hw_batch];
+    for (i, p) in batch.iter().enumerate() {
+        data[i * per_elems..(i + 1) * per_elems].copy_from_slice(&p.image.data);
+    }
+    let stacked = Tensor::new(shape, data)?;
+    let (logits, timing) = device.infer(&stacked)?;
+
+    let classes = *logits.shape.last().unwrap();
+    let labels = logits.argmax_rows();
+    Ok(batch
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Completion {
+            id: p.id,
+            logits: logits.data[i * classes..(i + 1) * classes].to_vec(),
+            label: labels[i],
+            timing,
+            batch_size: batch.len(),
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_sane() {
+        let c = RouterConfig::default();
+        assert_eq!(c.max_batch, 1);
+        assert!(c.max_wait > Duration::ZERO);
+    }
+}

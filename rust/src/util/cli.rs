@@ -1,0 +1,227 @@
+//! Declarative CLI flag parser (`clap` is unavailable offline — DESIGN.md §4).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! subcommands, defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_bool: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Cli {
+    pub bin: String,
+    pub about: &'static str,
+    opts: Vec<Opt>,
+}
+
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<&'static str, String>,
+    bools: BTreeMap<&'static str, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(about: &'static str) -> Self {
+        Self { bin: String::new(), about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: Some(default), is_bool: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_bool: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_bool: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{}\n\nOptions:\n", self.about);
+        for o in &self.opts {
+            let d = match (&o.default, o.is_bool) {
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, true) => String::new(),
+                (None, false) => " (required)".into(),
+            };
+            s.push_str(&format!("  --{:<22} {}{}\n", o.name, o.help, d));
+        }
+        s.push_str("  --help                   show this message\n");
+        s
+    }
+
+    /// Parse argv (without the binary name). Returns Err(usage) on `--help`
+    /// or bad input so callers can print and exit.
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
+        let mut p = Parsed {
+            values: BTreeMap::new(),
+            bools: BTreeMap::new(),
+            positionals: Vec::new(),
+        };
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                p.values.insert(o.name, d.to_string());
+            }
+            if o.is_bool {
+                p.bools.insert(o.name, false);
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?;
+                if opt.is_bool {
+                    p.bools.insert(opt.name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    p.values.insert(opt.name, v);
+                }
+            } else {
+                p.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if !o.is_bool && !p.values.contains_key(o.name) {
+                return Err(format!("missing required --{}\n\n{}", o.name, self.usage()));
+            }
+        }
+        Ok(p)
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .iter()
+            .find(|(k, _)| **k == name)
+            .map(|(_, v)| v.as_str())
+            .unwrap_or_else(|| panic!("flag {name} not declared"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        *self
+            .bools
+            .iter()
+            .find(|(k, _)| **k == name)
+            .map(|(_, v)| v)
+            .unwrap_or_else(|| panic!("bool flag {name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer, got {:?}", self.get(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a number, got {:?}", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer, got {:?}", self.get(name)))
+    }
+
+    /// Comma-separated list.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        let v = self.get(name);
+        if v.is_empty() {
+            return Vec::new();
+        }
+        v.split(',').map(|s| s.trim().to_string()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("test")
+            .opt("model", "alexnet", "model name")
+            .opt("bandwidth-mbps", "10", "link bandwidth")
+            .flag("verbose", "chatty")
+            .req("port", "tcp port")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let p = cli().parse(&argv(&["--port", "9000"])).unwrap();
+        assert_eq!(p.get("model"), "alexnet");
+        assert_eq!(p.get_usize("port"), 9000);
+        assert!(!p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let p = cli()
+            .parse(&argv(&["--model=vgg16", "--verbose", "--port=1", "serve"]))
+            .unwrap();
+        assert_eq!(p.get("model"), "vgg16");
+        assert!(p.get_bool("verbose"));
+        assert_eq!(p.positionals, vec!["serve"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(cli().parse(&argv(&["--nope", "1", "--port", "2"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = cli().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("--model"));
+        assert!(err.contains("--port"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let c = Cli::new("t").opt("models", "a,b , c", "list");
+        let p = c.parse(&[]).unwrap();
+        assert_eq!(p.get_list("models"), vec!["a", "b", "c"]);
+    }
+}

@@ -1,0 +1,525 @@
+//! Minimal-but-complete JSON substrate (`serde_json` is unavailable offline
+//! — DESIGN.md §4). Parses the python-emitted `manifest.json` files and
+//! serialises bench/figure outputs.
+//!
+//! Full RFC 8259 value model: null / bool / number (f64) / string (with
+//! escapes incl. `\uXXXX` surrogate pairs) / array / object. Objects keep
+//! insertion order (Vec of pairs) so serialised output is stable.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use thiserror::Error;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+#[derive(Error, Debug)]
+pub enum JsonError {
+    #[error("unexpected end of input at byte {0}")]
+    Eof(usize),
+    #[error("unexpected character {0:?} at byte {1}")]
+    Unexpected(char, usize),
+    #[error("invalid number at byte {0}")]
+    BadNumber(usize),
+    #[error("invalid \\u escape at byte {0}")]
+    BadUnicode(usize),
+    #[error("trailing garbage at byte {0}")]
+    Trailing(usize),
+    #[error("type error: expected {expected}, found {found}")]
+    Type { expected: &'static str, found: &'static str },
+    #[error("missing key {0:?}")]
+    MissingKey(String),
+    #[error("index {0} out of bounds (len {1})")]
+    OutOfBounds(usize, usize),
+}
+
+pub type Result<T> = std::result::Result<T, JsonError>;
+
+impl Json {
+    // ---------------------------------------------------------------- parse
+
+    pub fn parse(s: &str) -> Result<Json> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(JsonError::Trailing(p.i));
+        }
+        Ok(v)
+    }
+
+    // ------------------------------------------------------------ accessors
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            other => Err(JsonError::Type { expected: "number", found: other.kind() }),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        Ok(self.as_f64()? as u64)
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_f64()? as usize)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => Err(JsonError::Type { expected: "string", found: other.kind() }),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => Err(JsonError::Type { expected: "bool", found: other.kind() }),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            other => Err(JsonError::Type { expected: "array", found: other.kind() }),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&[(String, Json)]> {
+        match self {
+            Json::Obj(o) => Ok(o),
+            other => Err(JsonError::Type { expected: "object", found: other.kind() }),
+        }
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        self.as_obj()?
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+            .ok_or_else(|| JsonError::MissingKey(key.to_string()))
+    }
+
+    /// Array index lookup.
+    pub fn at(&self, idx: usize) -> Result<&Json> {
+        let a = self.as_arr()?;
+        a.get(idx).ok_or(JsonError::OutOfBounds(idx, a.len()))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        self.get(key)?.as_f64()
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?.as_usize()
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<&str> {
+        self.get(key)?.as_str()
+    }
+
+    /// `[1,2,3]` → `vec![1usize, 2, 3]` (shape lists in the manifest).
+    pub fn get_usize_vec(&self, key: &str) -> Result<Vec<usize>> {
+        self.get(key)?.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+
+    // --------------------------------------------------------------- build
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr_f64(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    pub fn str(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+
+    // ---------------------------------------------------------- serialise
+
+    pub fn to_string_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(0));
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    v.write(out, indent);
+                }
+                out.push(']');
+            }
+            Json::Obj(o) => {
+                let ind = indent.map(|d| d + 1);
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    if let Some(d) = ind {
+                        out.push('\n');
+                        out.push_str(&" ".repeat(d));
+                    }
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write(out, ind);
+                }
+                if let (Some(d), false) = (indent, o.is_empty()) {
+                    out.push('\n');
+                    out.push_str(&" ".repeat(d));
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s, None);
+        f.write_str(&s)
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b.get(self.i).copied().ok_or(JsonError::Eof(self.i))
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek()? == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(JsonError::Unexpected(self.b[self.i] as char, self.i))
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            Err(JsonError::Unexpected(self.b[self.i] as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'n' => self.lit("null", Json::Null),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b'[' => self.array(),
+            b'{' => self.object(),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => Err(JsonError::Unexpected(c as char, self.i)),
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            self.ws();
+            out.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                c => return Err(JsonError::Unexpected(c as char, self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            let v = self.value()?;
+            out.push((k, v));
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                c => return Err(JsonError::Unexpected(c as char, self.i)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                // surrogate pair
+                                if self.peek()? != b'\\' {
+                                    return Err(JsonError::BadUnicode(self.i));
+                                }
+                                self.i += 1;
+                                if self.peek()? != b'u' {
+                                    return Err(JsonError::BadUnicode(self.i));
+                                }
+                                self.i += 1;
+                                let lo = self.hex4()?;
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                hi
+                            };
+                            s.push(
+                                char::from_u32(cp).ok_or(JsonError::BadUnicode(self.i))?,
+                            );
+                        }
+                        _ => return Err(JsonError::Unexpected(e as char, self.i - 1)),
+                    }
+                }
+                c => {
+                    // Re-decode UTF-8 multibyte sequences.
+                    if c < 0x80 {
+                        s.push(c as char);
+                    } else {
+                        let start = self.i - 1;
+                        let len = if c >= 0xF0 {
+                            4
+                        } else if c >= 0xE0 {
+                            3
+                        } else {
+                            2
+                        };
+                        if start + len > self.b.len() {
+                            return Err(JsonError::Eof(self.i));
+                        }
+                        let chunk = std::str::from_utf8(&self.b[start..start + len])
+                            .map_err(|_| JsonError::BadUnicode(start))?;
+                        s.push_str(chunk);
+                        self.i = start + len;
+                    }
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.i + 4 > self.b.len() {
+            return Err(JsonError::Eof(self.i));
+        }
+        let s = std::str::from_utf8(&self.b[self.i..self.i + 4])
+            .map_err(|_| JsonError::BadUnicode(self.i))?;
+        let v = u32::from_str_radix(s, 16).map_err(|_| JsonError::BadUnicode(self.i))?;
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        if self.peek()? == b'-' {
+            self.i += 1;
+        }
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| JsonError::BadNumber(start))
+    }
+}
+
+/// Convenience: parse a file.
+pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    Ok(Json::parse(&text)?)
+}
+
+/// Group helper used by figure emitters: ordered map of series name → rows.
+pub type Series = BTreeMap<String, Vec<(f64, f64)>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("-1.5e3").unwrap(), Json::Num(-1500.0));
+        assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+        assert_eq!(j.get("c").unwrap().as_str().unwrap(), "x");
+        assert_eq!(j.get("a").unwrap().at(1).unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(*j.get("a").unwrap().at(2).unwrap().get("b").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn parses_escapes() {
+        let j = Json::parse(r#""a\n\t\"\\Aé""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "a\n\t\"\\Aé");
+    }
+
+    #[test]
+    fn parses_surrogate_pair() {
+        let j = Json::parse(r#""😀""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "😀");
+    }
+
+    #[test]
+    fn parses_utf8_passthrough() {
+        let j = Json::parse("\"héllo — ok\"").unwrap();
+        assert_eq!(j.as_str().unwrap(), "héllo — ok");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("nul").is_err());
+        assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"model": "alexnet", "layers": [{"index": 1, "flops": 140553600}], "acc": 0.5652, "flag": true, "none": null}"#;
+        let j = Json::parse(src).unwrap();
+        let j2 = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(j, j2);
+        let j3 = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(j, j3);
+    }
+
+    #[test]
+    fn whole_numbers_serialise_without_fraction() {
+        assert_eq!(Json::Num(140553600.0).to_string(), "140553600");
+        assert_eq!(Json::Num(0.5652).to_string(), "0.5652");
+    }
+
+    #[test]
+    fn typed_getters_error_cleanly() {
+        let j = Json::parse(r#"{"a": 1}"#).unwrap();
+        assert!(j.get("missing").is_err());
+        assert!(j.get("a").unwrap().as_str().is_err());
+        assert!(j.at(0).is_err());
+    }
+
+    #[test]
+    fn usize_vec() {
+        let j = Json::parse(r#"{"shape": [1, 64, 55, 55]}"#).unwrap();
+        assert_eq!(j.get_usize_vec("shape").unwrap(), vec![1, 64, 55, 55]);
+    }
+}

@@ -1,0 +1,182 @@
+//! Thread-pool substrate (`tokio` is unavailable offline — DESIGN.md §4).
+//!
+//! A fixed-size worker pool over an MPMC channel built from
+//! `std::sync::{Mutex, Condvar}`. The serving path (`serve::`) uses it for
+//! connection handling; `scope`-style joining is provided through
+//! [`ThreadPool::run_all`] for fan-out/fan-in work.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<State>,
+    cv: Condvar,
+}
+
+struct State {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// Fixed worker pool; drops shut it down gracefully (workers finish queued
+/// jobs first).
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(State { jobs: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                let inflight = Arc::clone(&inflight);
+                std::thread::Builder::new()
+                    .name(format!("smartsplit-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let mut st = shared.queue.lock().unwrap();
+                            loop {
+                                if let Some(j) = st.jobs.pop_front() {
+                                    break j;
+                                }
+                                if st.shutdown {
+                                    return;
+                                }
+                                st = shared.cv.wait(st).unwrap();
+                            }
+                        };
+                        job();
+                        inflight.fetch_sub(1, Ordering::SeqCst);
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, workers, inflight }
+    }
+
+    /// Queue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        let mut st = self.shared.queue.lock().unwrap();
+        st.jobs.push_back(Box::new(f));
+        drop(st);
+        self.shared.cv.notify_one();
+    }
+
+    /// Number of jobs queued or running.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Busy-wait (with parking) until the queue drains.
+    pub fn wait_idle(&self) {
+        while self.inflight() > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+    }
+
+    /// Run a batch of closures returning `T`, collecting results in input
+    /// order (fan-out / fan-in).
+    pub fn run_all<T, F>(&self, tasks: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = tasks.len();
+        let slots: Arc<Mutex<Vec<Option<T>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        for (i, t) in tasks.into_iter().enumerate() {
+            let slots = Arc::clone(&slots);
+            self.execute(move || {
+                let out = t();
+                slots.lock().unwrap()[i] = Some(out);
+            });
+        }
+        self.wait_idle();
+        Arc::try_unwrap(slots)
+            .unwrap_or_else(|_| panic!("slots still shared after wait_idle"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("job completed"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.queue.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn run_all_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let tasks: Vec<_> = (0..50)
+            .map(|i| move || i * i)
+            .collect();
+        let out = pool.run_all(tasks);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_finishes_queued_jobs() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..20 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop joins
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    fn zero_threads_clamped_to_one() {
+        let pool = ThreadPool::new(0);
+        let out = pool.run_all(vec![|| 1, || 2]);
+        assert_eq!(out, vec![1, 2]);
+    }
+}

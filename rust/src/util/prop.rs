@@ -1,0 +1,166 @@
+//! Seeded property-testing substrate (`proptest` is unavailable offline —
+//! DESIGN.md §4).
+//!
+//! [`run_prop`] drives a property over `n` random cases from a deterministic
+//! seed; on failure it *shrinks* the failing case by asking the generator
+//! for progressively "smaller" inputs (halving the size budget) and reports
+//! the smallest reproduction together with the case seed, so failures are
+//! replayable.
+//!
+//! ```ignore
+//! run_prop("sort is idempotent", 200, |g| {
+//!     let mut v = g.vec_usize(0, 100, 0..50);
+//!     sort(&mut v);
+//!     let w = v.clone();
+//!     sort(&mut v);
+//!     prop_assert!(v == w, "double sort changed output: {v:?} vs {w:?}");
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Xoshiro256;
+
+/// Generator handle passed to properties; wraps the case RNG plus a size
+/// budget that the shrinker lowers on failure.
+pub struct Gen {
+    pub rng: Xoshiro256,
+    /// 0.0..=1.0 multiplier on requested sizes; shrinking lowers this.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_scaled = lo + (((hi - lo) as f64) * self.size).round() as usize;
+        self.rng.gen_range(lo, hi_scaled.max(lo))
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.size * self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.gen_bool(0.5)
+    }
+
+    pub fn vec_f64(&mut self, len_lo: usize, len_hi: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.usize_in(len_lo, len_hi);
+        (0..n).map(|_| lo + (hi - lo) * self.rng.next_f64()).collect()
+    }
+
+    pub fn vec_usize(&mut self, len_lo: usize, len_hi: usize, lo: usize, hi: usize) -> Vec<usize> {
+        let n = self.usize_in(len_lo, len_hi);
+        (0..n).map(|_| self.rng.gen_range(lo, hi)).collect()
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+}
+
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property; returns a `PropResult` error with context.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Run `prop` over `cases` random cases. Panics (with shrunk repro info) on
+/// the first failure. Seed defaults derived from the name for stability.
+pub fn run_prop<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let base_seed = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen { rng: Xoshiro256::seed_from_u64(seed), size: 1.0 };
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: same seed, smaller size budget.
+            let mut best = (1.0f64, msg);
+            let mut size = 0.5;
+            for _ in 0..16 {
+                let mut g = Gen { rng: Xoshiro256::seed_from_u64(seed), size };
+                match prop(&mut g) {
+                    Err(m) => {
+                        best = (size, m);
+                        size *= 0.5;
+                    }
+                    Ok(()) => {
+                        size = (size + best.0) / 2.0;
+                    }
+                }
+                if best.0 - size < 1e-3 {
+                    break;
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed:#x}, \
+                 shrunk size {:.3}):\n  {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        run_prop("always true", 50, |g| {
+            let _ = g.usize_in(0, 10);
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_context() {
+        run_prop("xs len < 5", 100, |g| {
+            let xs = g.vec_f64(0, 20, 0.0, 1.0);
+            prop_assert!(xs.len() < 5, "len was {}", xs.len());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generator_is_deterministic_per_name() {
+        let mut a = Vec::new();
+        run_prop("det", 5, |g| {
+            a.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        let mut b = Vec::new();
+        run_prop("det", 5, |g| {
+            b.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn size_budget_bounds_generation() {
+        let mut g = Gen { rng: Xoshiro256::seed_from_u64(1), size: 0.0 };
+        for _ in 0..100 {
+            assert_eq!(g.usize_in(3, 100), 3);
+        }
+    }
+}

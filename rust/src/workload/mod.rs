@@ -1,0 +1,118 @@
+//! Workload generation: synthetic image tensors and request arrival
+//! processes for the serving benches and the end-to-end example.
+//!
+//! The paper's workload is "a set of images" classified one by one (100
+//! runs averaged). Image *content* does not affect any measured quantity
+//! (DESIGN.md §4), so inputs are deterministic pseudo-random NCHW tensors.
+
+use std::time::Duration;
+
+use crate::util::rng::Xoshiro256;
+
+/// Deterministic synthetic image batch: values ~ N(0, 0.25) like a
+/// normalised ImageNet crop.
+pub fn synth_images(batch: usize, channels: usize, hw: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..batch * channels * hw * hw)
+        .map(|_| (rng.next_normal() * 0.5) as f32)
+        .collect()
+}
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival offset from workload start.
+    pub arrival: Duration,
+    /// Seed for the synthetic image payload.
+    pub image_seed: u64,
+}
+
+/// Arrival process shapes.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrival {
+    /// Closed loop: next request issued immediately (back-to-back).
+    ClosedLoop,
+    /// Open loop, Poisson arrivals at `rps`.
+    Poisson { rps: f64 },
+    /// Open loop, uniform spacing at `rps`.
+    Uniform { rps: f64 },
+}
+
+/// Generate `n` requests under the arrival process.
+pub fn generate(n: usize, arrival: Arrival, seed: u64) -> Vec<Request> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|i| {
+            let dt = match arrival {
+                Arrival::ClosedLoop => 0.0,
+                Arrival::Poisson { rps } => rng.next_exp(rps),
+                Arrival::Uniform { rps } => 1.0 / rps,
+            };
+            t += dt;
+            Request {
+                id: i as u64,
+                arrival: Duration::from_secs_f64(t),
+                image_seed: seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_images_deterministic_and_sized() {
+        let a = synth_images(2, 3, 8, 42);
+        let b = synth_images(2, 3, 8, 42);
+        assert_eq!(a.len(), 2 * 3 * 8 * 8);
+        assert_eq!(a, b);
+        let c = synth_images(2, 3, 8, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn synth_images_distribution_sane() {
+        let xs = synth_images(1, 3, 64, 0);
+        let mean: f32 = xs.iter().sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!(xs.iter().any(|&x| x > 0.5) && xs.iter().any(|&x| x < -0.5));
+    }
+
+    #[test]
+    fn closed_loop_all_arrive_at_zero() {
+        let reqs = generate(10, Arrival::ClosedLoop, 1);
+        assert!(reqs.iter().all(|r| r.arrival == Duration::ZERO));
+        assert_eq!(reqs.len(), 10);
+        assert_eq!(reqs[9].id, 9);
+    }
+
+    #[test]
+    fn poisson_mean_rate_close() {
+        let reqs = generate(5000, Arrival::Poisson { rps: 100.0 }, 2);
+        let total = reqs.last().unwrap().arrival.as_secs_f64();
+        let rate = 5000.0 / total;
+        assert!((rate - 100.0).abs() / 100.0 < 0.1, "rate {rate}");
+    }
+
+    #[test]
+    fn uniform_spacing_exact() {
+        let reqs = generate(5, Arrival::Uniform { rps: 10.0 }, 3);
+        for (i, r) in reqs.iter().enumerate() {
+            let expect = 0.1 * (i + 1) as f64;
+            assert!((r.arrival.as_secs_f64() - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn image_seeds_unique_per_request() {
+        let reqs = generate(100, Arrival::ClosedLoop, 7);
+        let mut seeds: Vec<u64> = reqs.iter().map(|r| r.image_seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 100);
+    }
+}

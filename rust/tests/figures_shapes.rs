@@ -1,0 +1,101 @@
+//! Cross-exhibit consistency: the figures must agree with each other and
+//! with the optimiser — e.g. Table I's split must appear in Fig. 6's
+//! Pareto set, and Fig. 7/8/9 cell values must equal the perf model
+//! evaluated at Table II's splits. Catches drift between the generators.
+
+use smartsplit::device::profiles;
+use smartsplit::figures::*;
+use smartsplit::models::zoo;
+use smartsplit::optimizer::{exhaustive_pareto_front, Algorithm, Nsga2Params};
+
+fn params() -> Nsga2Params {
+    Nsga2Params { pop_size: 60, generations: 60, ..Default::default() }
+}
+
+#[test]
+fn table1_choice_is_a_fig6_pareto_member() {
+    for model in MODELS {
+        let r = pareto_and_choice(model, profiles::samsung_j6(), 10.0, &params()).unwrap();
+        assert!(
+            r.pareto.iter().any(|(l1, _)| *l1 == r.decision.l1),
+            "{model}: TOPSIS choice {} not in its own Pareto set",
+            r.decision.l1
+        );
+    }
+}
+
+#[test]
+fn fig6_front_equals_exhaustive_front() {
+    for model in MODELS {
+        let profile = zoo::by_name(model).unwrap().analyze(1);
+        let pm = perf_model(&profile, profiles::samsung_j6(), 10.0);
+        let truth = exhaustive_pareto_front(&pm);
+        let r = pareto_and_choice(model, profiles::samsung_j6(), 10.0, &params()).unwrap();
+        let ga: Vec<usize> = r.pareto.iter().map(|(l1, _)| *l1).collect();
+        assert_eq!(truth, ga, "{model}: GA front != exhaustive front");
+    }
+}
+
+#[test]
+fn figs789_cells_equal_perfmodel_at_table2_splits() {
+    let cells = algorithm_comparison(profiles::samsung_j6(), 10.0, &params(), 10, 1).unwrap();
+    for cell in &cells {
+        if cell.algorithm == Algorithm::Rs {
+            continue; // averaged over random splits
+        }
+        let profile = zoo::by_name(&cell.model).unwrap().analyze(1);
+        let pm = perf_model(&profile, profiles::samsung_j6(), 10.0);
+        let l1 = cell.mean_l1 as usize;
+        assert!((pm.f1(l1) - cell.latency_s).abs() < 1e-9, "{:?}/{}", cell.algorithm, cell.model);
+        assert!((pm.f2(l1) - cell.energy_j).abs() < 1e-9);
+        assert!((pm.f3(l1) - cell.memory_bytes).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn fig10_smartsplit_rows_match_table1_decisions() {
+    let rows = mobilenet_comparison(profiles::samsung_j6(), 10.0, &params()).unwrap();
+    for model in MODELS {
+        let r = pareto_and_choice(model, profiles::samsung_j6(), 10.0, &params()).unwrap();
+        let label = format!("{model}+SmartSplit(l1={})", r.decision.l1);
+        assert!(
+            rows.iter().any(|row| row.label == label),
+            "fig10 missing row {label}; have {:?}",
+            rows.iter().map(|r| r.label.clone()).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn latency_and_energy_sweeps_are_self_consistent() {
+    // total == sum of components at every split, on both phones.
+    for phone in [profiles::samsung_j6(), profiles::redmi_note8()] {
+        for model in MODELS {
+            for (l1, b) in latency_sweep(model, phone, 10.0).unwrap() {
+                assert!(
+                    (b.total() - (b.client_s + b.upload_s + b.server_s)).abs() < 1e-12,
+                    "{model} l1={l1}"
+                );
+            }
+            for (l1, e) in energy_sweep(model, phone, 10.0).unwrap() {
+                assert!(
+                    (e.total() - (e.client_j + e.upload_j + e.download_j)).abs() < 1e-12,
+                    "{model} l1={l1}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sweeps_scale_correctly_with_bandwidth() {
+    // Doubling B must halve upload latency exactly and leave client/server
+    // latency unchanged (Eq. 4 linearity).
+    let a = latency_sweep("vgg16", profiles::samsung_j6(), 10.0).unwrap();
+    let b = latency_sweep("vgg16", profiles::samsung_j6(), 20.0).unwrap();
+    for ((l1, x), (_, y)) in a.iter().zip(&b).take(38) {
+        assert!((x.upload_s - 2.0 * y.upload_s).abs() < 1e-12, "l1={l1}");
+        assert_eq!(x.client_s, y.client_s);
+        assert_eq!(x.server_s, y.server_s);
+    }
+}

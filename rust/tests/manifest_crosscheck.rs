@@ -1,0 +1,104 @@
+//! Cross-checks the python-emitted manifests against the rust layer-spec
+//! algebra: the two implementations of shapes / params / FLOPs / memory
+//! (python `specs.py`, rust `models::spec`) must agree exactly on every
+//! layer of every model. Skips when `make artifacts` has not run.
+
+use std::path::Path;
+
+use smartsplit::models::{zoo, Manifest};
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("alexnet/manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ not built");
+        None
+    }
+}
+
+#[test]
+fn manifests_match_rust_spec_algebra() {
+    let Some(dir) = artifacts() else { return };
+    for name in ["alexnet", "vgg11", "vgg13", "vgg16", "mobilenet_v2"] {
+        let Ok(man) = Manifest::load(dir, name) else {
+            eprintln!("skipping {name}: no manifest");
+            continue;
+        };
+        let spec = zoo::by_name(name).unwrap();
+        let profile = spec.analyze(1);
+        assert_eq!(man.num_layers, profile.num_layers, "{name} layer count");
+        assert_eq!(man.total_params, spec.total_params(), "{name} total params");
+        assert!((man.top1_accuracy - spec.top1_accuracy).abs() < 1e-9);
+        for (lm, lp) in man.layers.iter().zip(&profile.layers) {
+            let ctx = format!("{name} layer {}", lm.index);
+            assert_eq!(lm.kind, lp.kind, "{ctx} kind");
+            assert_eq!(lm.in_shape, lp.in_shape, "{ctx} in_shape");
+            assert_eq!(lm.out_shape, lp.out_shape, "{ctx} out_shape");
+            assert_eq!(lm.params, lp.params, "{ctx} params");
+            assert_eq!(lm.param_bytes, lp.param_bytes, "{ctx} param_bytes");
+            assert_eq!(lm.act_bytes, lp.act_bytes, "{ctx} act_bytes");
+            assert_eq!(lm.flops, lp.flops, "{ctx} flops");
+        }
+    }
+}
+
+#[test]
+fn weight_files_exist_with_exact_sizes() {
+    let Some(dir) = artifacts() else { return };
+    let man = Manifest::load(dir, "alexnet").unwrap();
+    for lm in &man.layers {
+        for w in &lm.weights {
+            let path = man.weight_path(w);
+            let meta = std::fs::metadata(&path)
+                .unwrap_or_else(|e| panic!("missing weight {}: {e}", path.display()));
+            assert_eq!(
+                meta.len(),
+                w.num_elements() as u64 * 4,
+                "size of {}",
+                path.display()
+            );
+        }
+    }
+}
+
+#[test]
+fn hlo_files_exist_and_declare_layouts() {
+    let Some(dir) = artifacts() else { return };
+    let man = Manifest::load(dir, "alexnet").unwrap();
+    for lm in &man.layers {
+        for b in &man.batches {
+            let path = man.hlo_path(lm.index, *b).unwrap();
+            let head = std::fs::read_to_string(&path)
+                .unwrap_or_else(|e| panic!("missing {}: {e}", path.display()));
+            let first = head.lines().next().unwrap();
+            assert!(first.starts_with("HloModule"), "{}", path.display());
+            // batch-scaled input shape must appear in the entry layout
+            let mut in_shape = lm.in_shape.clone();
+            in_shape[0] = *b;
+            let dims: Vec<String> = in_shape.iter().map(|d| d.to_string()).collect();
+            let expect = format!("f32[{}]", dims.join(","));
+            assert!(
+                first.contains(&expect),
+                "{} entry layout missing {expect}: {first}",
+                path.display()
+            );
+        }
+    }
+}
+
+#[test]
+fn paper_memory_quantities_from_manifest() {
+    // Replays Eq. 16 / I|l1 accounting directly off the manifest and checks
+    // it against the rust profile used by the optimiser — guarding against
+    // drift between the serving path (manifest) and planning path (spec).
+    let Some(dir) = artifacts() else { return };
+    let man = Manifest::load(dir, "vgg16").unwrap();
+    let profile = zoo::vgg16().analyze(1);
+    for l1 in 1..=man.num_layers {
+        let m_client: u64 = man.layers[..l1].iter().map(|l| l.param_bytes + l.act_bytes).sum();
+        assert_eq!(m_client, profile.client_memory_bytes(l1), "M|{l1}");
+        let i_l1 = man.layers[l1 - 1].act_bytes;
+        assert_eq!(i_l1, profile.intermediate_bytes(l1), "I|{l1}");
+    }
+}

@@ -1,0 +1,186 @@
+//! Property-based tests on the optimiser invariants (the in-repo `prop`
+//! substrate stands in for proptest — DESIGN.md §4).
+
+use smartsplit::device::profiles;
+use smartsplit::models::zoo;
+use smartsplit::optimizer::nsga2::{
+    crowding_distance, dominates, fast_non_dominated_sort, Individual,
+};
+use smartsplit::optimizer::{
+    lbo, ebo, optimize, smartsplit, Nsga2Params, Problem, SplitProblem,
+};
+use smartsplit::perfmodel::{NetworkEnv, PerfModel, RadioPower};
+use smartsplit::prop_assert;
+use smartsplit::util::prop::run_prop;
+
+fn ind(objs: Vec<f64>) -> Individual {
+    Individual { genome: vec![], objectives: objs, violation: 0.0, rank: 0, crowding: 0.0 }
+}
+
+#[test]
+fn prop_domination_is_strict_partial_order() {
+    run_prop("domination strict partial order", 300, |g| {
+        let m = g.usize_in(1, 4);
+        let mk = |g: &mut smartsplit::util::prop::Gen| {
+            ind((0..m).map(|_| g.f64_in(0.0, 10.0)).collect())
+        };
+        let a = mk(g);
+        let b = mk(g);
+        let c = mk(g);
+        // irreflexive
+        prop_assert!(!dominates(&a, &a), "a dominates itself");
+        // antisymmetric
+        prop_assert!(
+            !(dominates(&a, &b) && dominates(&b, &a)),
+            "mutual domination: {:?} {:?}",
+            a.objectives,
+            b.objectives
+        );
+        // transitive
+        if dominates(&a, &b) && dominates(&b, &c) {
+            prop_assert!(dominates(&a, &c), "transitivity failed");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_front0_is_mutually_nondominated_and_complete() {
+    run_prop("front 0 correctness", 150, |g| {
+        let n = g.usize_in(1, 40);
+        let m = g.usize_in(1, 3);
+        let mut pop: Vec<Individual> = (0..n)
+            .map(|_| ind((0..m).map(|_| g.f64_in(0.0, 5.0)).collect()))
+            .collect();
+        let fronts = fast_non_dominated_sort(&mut pop);
+        // partition check
+        let total: usize = fronts.iter().map(|f| f.len()).sum();
+        prop_assert!(total == n, "fronts lost members: {total} != {n}");
+        // front 0: nothing dominates its members
+        for &i in &fronts[0] {
+            for j in 0..n {
+                prop_assert!(
+                    !dominates(&pop[j], &pop[i]),
+                    "front-0 member {i} dominated by {j}"
+                );
+            }
+        }
+        // later fronts: every member dominated by someone in an earlier front
+        for (fi, front) in fronts.iter().enumerate().skip(1) {
+            for &i in front {
+                let dominated = fronts[..fi]
+                    .iter()
+                    .flatten()
+                    .any(|&j| dominates(&pop[j], &pop[i]));
+                prop_assert!(dominated, "front-{fi} member {i} not dominated by earlier fronts");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_crowding_boundary_members_infinite() {
+    run_prop("crowding boundaries infinite", 150, |g| {
+        let n = g.usize_in(3, 30);
+        let mut pop: Vec<Individual> = (0..n)
+            .map(|_| ind(vec![g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0)]))
+            .collect();
+        let front: Vec<usize> = (0..n).collect();
+        crowding_distance(&mut pop, &front);
+        for obj in 0..2 {
+            let min_i = (0..n)
+                .min_by(|&a, &b| pop[a].objectives[obj].partial_cmp(&pop[b].objectives[obj]).unwrap())
+                .unwrap();
+            let max_i = (0..n)
+                .max_by(|&a, &b| pop[a].objectives[obj].partial_cmp(&pop[b].objectives[obj]).unwrap())
+                .unwrap();
+            prop_assert!(pop[min_i].crowding.is_infinite(), "min of obj {obj} not infinite");
+            prop_assert!(pop[max_i].crowding.is_infinite(), "max of obj {obj} not infinite");
+        }
+        for i in 0..n {
+            prop_assert!(pop[i].crowding >= 0.0, "negative crowding");
+        }
+        Ok(())
+    });
+}
+
+fn pm_for<'a>(
+    profile: &'a smartsplit::models::ModelProfile,
+    bandwidth: f64,
+) -> PerfModel<'a> {
+    PerfModel::new(
+        profiles::samsung_j6(),
+        profiles::cloud_server(),
+        RadioPower::PAPER_80211N,
+        NetworkEnv::with_bandwidth(bandwidth),
+        profile,
+    )
+}
+
+#[test]
+fn prop_smartsplit_result_never_dominated_by_any_split() {
+    // For every model and random bandwidth, the TOPSIS choice must lie on
+    // the true Pareto front of the exhaustive split domain: no concrete
+    // split may dominate it in (f1, f2, f3).
+    run_prop("smartsplit on true front", 12, |g| {
+        let name = *g.choice(&["alexnet", "vgg11", "vgg13", "vgg16"]);
+        let bw = g.f64_in(1.0, 100.0).max(0.5);
+        let profile = zoo::by_name(name).unwrap().analyze(1);
+        let pm = pm_for(&profile, bw);
+        let params = Nsga2Params { pop_size: 40, generations: 40, ..Default::default() };
+        let result = smartsplit(&pm, &params);
+        let chosen = result.decision.l1;
+        let co = pm.objectives(chosen);
+        for l1 in 1..profile.num_layers {
+            let o = pm.objectives(l1);
+            let dominates_choice =
+                o.iter().zip(&co).all(|(a, b)| a <= b) && o.iter().zip(&co).any(|(a, b)| a < b);
+            prop_assert!(
+                !dominates_choice,
+                "{name}@{bw:.1}Mbps: l1={l1} {o:?} dominates chosen {chosen} {co:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_objective_baselines_are_true_minima() {
+    run_prop("lbo/ebo minimality", 15, |g| {
+        let name = *g.choice(&["alexnet", "vgg11", "vgg16"]);
+        let bw = g.f64_in(1.0, 50.0).max(0.5);
+        let profile = zoo::by_name(name).unwrap().analyze(1);
+        let pm = pm_for(&profile, bw);
+        let l = lbo(&pm).l1;
+        let e = ebo(&pm).l1;
+        for l1 in 1..profile.num_layers {
+            prop_assert!(pm.f1(l) <= pm.f1(l1) + 1e-12, "LBO not minimal at {l1}");
+            prop_assert!(pm.f2(e) <= pm.f2(l1) + 1e-12, "EBO not minimal at {l1}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nsga2_front_members_feasible_and_in_bounds() {
+    run_prop("nsga2 members valid", 10, |g| {
+        let name = *g.choice(&["alexnet", "vgg13"]);
+        let bw = g.f64_in(0.5, 200.0).max(0.25);
+        let profile = zoo::by_name(name).unwrap().analyze(1);
+        let pm = pm_for(&profile, bw);
+        let problem = SplitProblem::new(&pm);
+        let set = optimize(
+            &problem,
+            &Nsga2Params { pop_size: 30, generations: 25, ..Default::default() },
+        );
+        prop_assert!(!set.members.is_empty(), "empty Pareto set");
+        let (lo, hi) = problem.bounds()[0];
+        for mem in &set.members {
+            let l1 = mem.genome[0];
+            prop_assert!((lo..=hi).contains(&l1), "out of bounds {l1}");
+            prop_assert!(mem.violation == 0.0, "infeasible member l1={l1}");
+        }
+        Ok(())
+    });
+}

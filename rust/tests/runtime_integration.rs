@@ -1,0 +1,140 @@
+//! PJRT runtime integration: real artifacts, real execution.
+//! All tests skip when `make artifacts` has not run.
+
+use std::path::{Path, PathBuf};
+
+use smartsplit::runtime::executor::Executor;
+use smartsplit::runtime::{ModelRuntime, Tensor};
+use smartsplit::workload::synth_images;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = Path::new("artifacts");
+    if p.join("alexnet/manifest.json").exists() {
+        Some(p.to_path_buf())
+    } else {
+        eprintln!("skipping: artifacts/ not built");
+        None
+    }
+}
+
+fn image(batch: usize, seed: u64) -> Tensor {
+    Tensor::new(vec![batch, 3, 224, 224], synth_images(batch, 3, 224, seed)).unwrap()
+}
+
+#[test]
+fn split_equals_unsplit_everywhere_it_matters() {
+    // The core serving invariant: running 1..=l1 then l1+1..=k must equal
+    // running 1..=k, for several split points across the conv trunk and
+    // classifier boundary.
+    let Some(dir) = artifacts() else { return };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let rt = ModelRuntime::load(&client, &dir, "alexnet", 1).unwrap();
+    let img = image(1, 11);
+    let reference = rt.run_all(&client, &img).unwrap();
+    assert_eq!(reference.shape, vec![1, 1000]);
+    for l1 in [1usize, 3, 6, 13, 15, 16, 20] {
+        let head = rt.run_segment(&client, 1, l1, &img).unwrap();
+        let tail = rt.run_segment(&client, l1 + 1, 21, &head).unwrap();
+        let max_diff = tail
+            .data
+            .iter()
+            .zip(&reference.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "split at {l1}: max diff {max_diff}");
+        assert_eq!(tail.argmax_rows(), reference.argmax_rows(), "split at {l1}");
+    }
+}
+
+#[test]
+fn batch8_matches_batch1_rows() {
+    let Some(dir) = artifacts() else { return };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let rt1 = ModelRuntime::load(&client, &dir, "alexnet", 1).unwrap();
+    let rt8 = ModelRuntime::load(&client, &dir, "alexnet", 8).unwrap();
+    // One batch-8 tensor whose row 0 equals the batch-1 image.
+    let single = image(1, 5);
+    let mut data8 = Vec::with_capacity(single.data.len() * 8);
+    for i in 0..8 {
+        if i == 0 {
+            data8.extend_from_slice(&single.data);
+        } else {
+            data8.extend_from_slice(&image(1, 100 + i as u64).data);
+        }
+    }
+    let batch = Tensor::new(vec![8, 3, 224, 224], data8).unwrap();
+    let out1 = rt1.run_all(&client, &single).unwrap();
+    let out8 = rt8.run_all(&client, &batch).unwrap();
+    assert_eq!(out8.shape, vec![8, 1000]);
+    let row0 = &out8.data[..1000];
+    let max_diff = row0
+        .iter()
+        .zip(&out1.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "b8 row0 vs b1: {max_diff}");
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let Some(dir) = artifacts() else { return };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let rt = ModelRuntime::load(&client, &dir, "mobilenet_v2", 1).unwrap();
+    let img = image(1, 3);
+    let a = rt.run_all(&client, &img).unwrap();
+    let b = rt.run_all(&client, &img).unwrap();
+    assert_eq!(a.data, b.data);
+}
+
+#[test]
+fn rejects_wrong_shapes_and_ranges() {
+    let Some(dir) = artifacts() else { return };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let rt = ModelRuntime::load(&client, &dir, "alexnet", 1).unwrap();
+    let bad = Tensor::zeros(vec![1, 3, 32, 32]);
+    assert!(rt.run_segment(&client, 1, 3, &bad).is_err());
+    let img = image(1, 0);
+    assert!(rt.run_segment(&client, 0, 3, &img).is_err());
+    assert!(rt.run_segment(&client, 5, 3, &img).is_err());
+    assert!(rt.run_segment(&client, 1, 99, &img).is_err());
+}
+
+#[test]
+fn load_range_loads_partial_model() {
+    let Some(dir) = artifacts() else { return };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let head = ModelRuntime::load_range(&client, &dir, "alexnet", 1, 1, 3).unwrap();
+    assert_eq!(head.num_layers(), 3);
+    assert_eq!(head.loaded_range(), (1, 3));
+    let out = head.run_all(&client, &image(1, 2)).unwrap();
+    assert_eq!(out.shape, vec![1, 64, 27, 27]);
+    // Out-of-range segment on a partial load errors.
+    assert!(head.run_segment(&client, 1, 4, &image(1, 2)).is_err());
+}
+
+#[test]
+fn executor_thread_confinement_works() {
+    let Some(dir) = artifacts() else { return };
+    let exec = Executor::spawn(dir, "test").unwrap();
+    let info = exec.load("alexnet", 1).unwrap();
+    assert_eq!(info.num_layers, 21);
+    assert_eq!(info.input_shape, vec![1, 3, 224, 224]);
+
+    // Drive it from multiple threads (the handle is Send + Clone).
+    let mut handles = Vec::new();
+    for seed in 0..3u64 {
+        let exec = exec.clone();
+        handles.push(std::thread::spawn(move || {
+            let out = exec
+                .run_segment("alexnet", 1, 1, 6, image(1, seed))
+                .unwrap();
+            assert_eq!(out.shape, vec![1, 192, 13, 13]);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Unknown model errors cleanly.
+    assert!(exec.run_segment("nope", 1, 1, 2, image(1, 0)).is_err());
+    exec.stop();
+}

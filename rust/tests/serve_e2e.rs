@@ -1,0 +1,202 @@
+//! End-to-end split serving over real TCP + real PJRT execution on both
+//! sides: cloud daemon, device client, router/batcher, shaped link, energy
+//! accounting, and live split movement. Skips without artifacts.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use smartsplit::coordinator::{Config, Deployment};
+use smartsplit::device::profiles;
+use smartsplit::netsim::BandwidthTrace;
+use smartsplit::optimizer::{Nsga2Params, SplitDecision};
+use smartsplit::serve::RouterConfig;
+use smartsplit::workload::{generate, Arrival};
+
+fn have_artifacts() -> bool {
+    let ok = Path::new("artifacts/alexnet/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts/ not built");
+    }
+    ok
+}
+
+fn test_config() -> Config {
+    Config {
+        model: "alexnet".into(),
+        batch: 1,
+        bandwidth_mbps: 200.0, // fast test link
+        emulate_slowdown: false,
+        nsga2: Nsga2Params { pop_size: 30, generations: 30, ..Default::default() },
+        ..Config::default()
+    }
+}
+
+#[test]
+fn serves_closed_loop_workload() {
+    if !have_artifacts() {
+        return;
+    }
+    let dep = Deployment::start_with_split(test_config(), SplitDecision { l1: 3 }).unwrap();
+    let reqs = generate(6, Arrival::ClosedLoop, 1);
+    let report = dep.serve(&reqs).unwrap();
+    assert_eq!(report.completed, 6);
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.split_l1, 3);
+    assert!(report.throughput_rps > 0.0);
+    assert_eq!(report.latency.count(), 6);
+    // Energy ledger must have all three components (client, upload,
+    // download) populated — the BatteryStats analogue.
+    assert!(report.client_energy_j > 0.0);
+    assert!(report.upload_energy_j > 0.0);
+    assert!(report.download_energy_j > 0.0);
+    // M|3 for AlexNet = 1,828,608 B (conv1 params+act, relu act, pool act)
+    assert_eq!(report.head_memory_bytes, 1_828_608);
+    // Upload volume ≈ 6 × I|3 (64*27*27*4 B) + framing.
+    let expect = 6 * 64 * 27 * 27 * 4;
+    assert!(
+        report.bytes_uploaded as i64 - expect as i64 >= 0
+            && report.bytes_uploaded < expect as u64 + 4096,
+        "uploaded {} expect ≈ {expect}",
+        report.bytes_uploaded
+    );
+    dep.shutdown();
+}
+
+#[test]
+fn cos_split_never_touches_network() {
+    if !have_artifacts() {
+        return;
+    }
+    let dep = Deployment::start_with_split(test_config(), SplitDecision { l1: 21 }).unwrap();
+    let reqs = generate(2, Arrival::ClosedLoop, 2);
+    let report = dep.serve(&reqs).unwrap();
+    assert_eq!(report.completed, 2);
+    assert_eq!(report.bytes_uploaded, 0);
+    assert_eq!(report.upload_energy_j, 0.0);
+    dep.shutdown();
+}
+
+#[test]
+fn coc_ships_raw_images() {
+    if !have_artifacts() {
+        return;
+    }
+    let dep = Deployment::start_with_split(test_config(), SplitDecision { l1: 0 }).unwrap();
+    let reqs = generate(2, Arrival::ClosedLoop, 3);
+    let report = dep.serve(&reqs).unwrap();
+    assert_eq!(report.completed, 2);
+    let expect = 2 * 3 * 224 * 224 * 4; // two raw NCHW images
+    assert!(report.bytes_uploaded >= expect as u64, "uploaded {}", report.bytes_uploaded);
+    // No on-device inference → no head memory, no client compute energy.
+    assert_eq!(report.head_memory_bytes, 0);
+    dep.shutdown();
+}
+
+#[test]
+fn dynamic_batcher_coalesces() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = test_config();
+    cfg.batch = 8;
+    cfg.router = RouterConfig { max_batch: 8, max_wait: Duration::from_millis(300) };
+    let dep = Deployment::start_with_split(cfg, SplitDecision { l1: 3 }).unwrap();
+    // Burst of 8 requests arriving together: should ride one batch.
+    let reqs = generate(8, Arrival::ClosedLoop, 4);
+    let report = dep.serve(&reqs).unwrap();
+    assert_eq!(report.completed, 8);
+    assert_eq!(report.errors, 0);
+    // Batched upload: ~1 batch-8 activation (8 × I|3), not 8 separate ones
+    // padded to 8 each.
+    let one_batch = 8 * 64 * 27 * 27 * 4;
+    assert!(
+        report.bytes_uploaded < 2 * one_batch as u64,
+        "batching failed: uploaded {}",
+        report.bytes_uploaded
+    );
+    dep.shutdown();
+}
+
+#[test]
+fn adaptive_split_moves_with_bandwidth_trace() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = test_config();
+    // Trace: generous link then a starved one — the optimiser must move
+    // the split when the trace steps down.
+    let trace = BandwidthTrace {
+        points: vec![
+            (Duration::ZERO, 200.0),
+            (Duration::from_millis(900), 0.5),
+        ],
+    };
+    cfg.bandwidth_mbps = 200.0;
+    let dep = Deployment::start(cfg).unwrap();
+    let initial = dep.split.l1;
+    // Slow trickle so the run spans the trace step.
+    let reqs = generate(7, Arrival::Uniform { rps: 3.0 }, 5);
+    let report = dep.serve_with_trace(&reqs, Some(&trace)).unwrap();
+    assert_eq!(report.completed, 7);
+    assert!(
+        report.split_history.len() >= 2,
+        "split never moved: {:?} (initial {initial})",
+        report.split_history
+    );
+    let final_split = report.split_history.last().unwrap().1;
+    assert_ne!(final_split, initial, "split unchanged after bandwidth collapse");
+    dep.shutdown();
+}
+
+#[test]
+fn error_paths_surface_cleanly() {
+    if !have_artifacts() {
+        return;
+    }
+    // Unknown model: the cloud Hello fails and connect returns an error.
+    let cfg = Config { model: "resnet50".into(), ..test_config() };
+    assert!(Deployment::start_with_split(cfg, SplitDecision { l1: 1 }).is_err());
+    // Unavailable batch variant.
+    let cfg = Config { batch: 64, ..test_config() };
+    assert!(Deployment::start_with_split(cfg, SplitDecision { l1: 1 }).is_err());
+}
+
+#[test]
+fn fleet_shares_one_cloud_across_heterogeneous_devices() {
+    use smartsplit::coordinator::fleet::{Fleet, FleetConfig, FleetMember};
+
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = FleetConfig {
+        artifacts_dir: std::path::PathBuf::from("artifacts"),
+        model: "alexnet".into(),
+        batch: 1,
+        members: vec![
+            FleetMember { profile: profiles::samsung_j6(), bandwidth_mbps: 150.0 },
+            FleetMember { profile: profiles::redmi_note8(), bandwidth_mbps: 150.0 },
+        ],
+        nsga2: Nsga2Params { pop_size: 30, generations: 30, ..Default::default() },
+        emulate_slowdown: false,
+    };
+    let fleet = Fleet::start(cfg).unwrap();
+    assert_eq!(fleet.splits().len(), 2);
+    let reqs = generate(8, Arrival::ClosedLoop, 11);
+    let report = fleet.serve(&reqs).unwrap();
+    assert_eq!(report.completed, 8);
+    assert_eq!(report.errors, 0);
+    // Equal conditions → the SED dispatcher must use both devices.
+    assert!(
+        report.members.iter().all(|m| m.served > 0),
+        "one device starved: {:?}",
+        report.members.iter().map(|m| m.served).collect::<Vec<_>>()
+    );
+    // Served counts add up and energy was metered on every active device.
+    let total: u64 = report.members.iter().map(|m| m.served).sum();
+    assert_eq!(total, 8);
+    for m in &report.members {
+        assert!(m.client_energy_j > 0.0, "{} no energy metered", m.name);
+    }
+    fleet.shutdown();
+}

@@ -1,0 +1,178 @@
+//! Property tests over the substrates: protocol robustness, JSON
+//! round-tripping, histogram quantile sanity, shaped-link arithmetic, and
+//! the model-spec memory algebra — driven by the in-repo `util::prop`
+//! engine (DESIGN.md §4).
+
+use std::io::Cursor;
+
+use smartsplit::metrics::Histogram;
+use smartsplit::models::zoo;
+use smartsplit::netsim::Link;
+use smartsplit::prop_assert;
+use smartsplit::runtime::Tensor;
+use smartsplit::serve::{read_msg, wire_size, write_msg, Msg};
+use smartsplit::util::json::Json;
+use smartsplit::util::prop::run_prop;
+
+#[test]
+fn prop_protocol_roundtrips_arbitrary_tensors() {
+    run_prop("protocol tensor roundtrip", 200, |g| {
+        let ndim = g.usize_in(1, 4);
+        let shape: Vec<usize> = (0..ndim).map(|_| g.usize_in(1, 8)).collect();
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| g.f64_in(-1e6, 1e6) as f32).collect();
+        let t = Tensor::new(shape, data).unwrap();
+        let msg = Msg::Infer {
+            request_id: g.usize_in(0, usize::MAX / 2) as u64,
+            from_layer: g.usize_in(1, 40) as u32,
+            tensor: t,
+        };
+        let mut buf = Vec::new();
+        let written = write_msg(&mut buf, &msg).unwrap();
+        prop_assert!(written == wire_size(&msg), "wire_size mismatch");
+        let got = read_msg(&mut Cursor::new(buf)).unwrap();
+        prop_assert!(got == msg, "roundtrip mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_protocol_never_panics_on_random_bytes() {
+    run_prop("protocol garbage safety", 300, |g| {
+        let len = g.usize_in(0, 256);
+        let bytes: Vec<u8> = (0..len).map(|_| g.usize_in(0, 255) as u8).collect();
+        // Must return (Ok or Err), never panic / never allocate absurdly.
+        let _ = read_msg(&mut Cursor::new(bytes));
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrips_generated_values() {
+    fn gen_value(g: &mut smartsplit::util::prop::Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f64_in(-1e9, 1e9) * 100.0).round() / 100.0),
+            3 => Json::Str(format!("s{}", g.usize_in(0, 9999))),
+            4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| gen_value(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize_in(0, 4))
+                    .map(|i| (format!("k{i}"), gen_value(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    run_prop("json roundtrip", 200, |g| {
+        let v = gen_value(g, 3);
+        let parsed = Json::parse(&v.to_string()).map_err(|e| e.to_string())?;
+        prop_assert!(parsed == v, "compact roundtrip: {v}");
+        let pretty = Json::parse(&v.to_string_pretty()).map_err(|e| e.to_string())?;
+        prop_assert!(pretty == v, "pretty roundtrip: {v}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_quantiles_bounded_and_monotone() {
+    run_prop("histogram quantiles", 100, |g| {
+        let h = Histogram::new();
+        let n = g.usize_in(1, 500);
+        let mut max = 0.0f64;
+        let mut min = f64::INFINITY;
+        for _ in 0..n {
+            let v = g.f64_in(1e-6, 100.0);
+            max = max.max(v);
+            min = min.min(v);
+            h.record_secs(v);
+        }
+        let q: Vec<f64> = [0.0, 0.25, 0.5, 0.75, 0.95, 1.0]
+            .iter()
+            .map(|&p| h.quantile(p))
+            .collect();
+        for w in q.windows(2) {
+            prop_assert!(w[0] <= w[1] + 1e-12, "quantiles not monotone: {q:?}");
+        }
+        prop_assert!(q[0] >= min - 1e-12 && q[5] <= max + 1e-12, "out of range");
+        prop_assert!(h.mean_s() >= min - 1e-9 && h.mean_s() <= max + 1e-9, "mean outside");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_link_transfer_time_linear_in_bytes_and_inverse_in_bandwidth() {
+    run_prop("link arithmetic", 100, |g| {
+        let mbps = g.f64_in(0.1, 1000.0).max(0.05);
+        let bytes = g.usize_in(1, 10_000_000) as u64;
+        let link = Link::new(mbps);
+        let base = link.base_latency.as_secs_f64();
+        let t = link.transfer_time(bytes).as_secs_f64() - base;
+        let expect = bytes as f64 * 8.0 / (mbps * 1e6);
+        // Duration rounds to whole nanoseconds, so allow 4 ns of absolute
+        // slack plus relative error for minute-scale transfers.
+        let tol = |x: f64| 4e-9 + 1e-9 * x.abs();
+        prop_assert!((t - expect).abs() < tol(expect), "t={t} expect={expect}");
+        // doubling bandwidth halves transfer time
+        link.set_bandwidth_mbps(mbps * 2.0);
+        let t2 = link.transfer_time(bytes).as_secs_f64() - base;
+        prop_assert!(
+            (t - 2.0 * t2).abs() < tol(t),
+            "not inverse-linear: t={t} t2={t2}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_model_memory_algebra() {
+    run_prop("memory algebra", 60, |g| {
+        let name = *g.choice(&["alexnet", "vgg11", "vgg13", "vgg16", "mobilenet_v2"]);
+        let batch = *g.choice(&[1usize, 2, 8]);
+        let p = zoo::by_name(name).unwrap().analyze(batch);
+        let total = p.client_memory_bytes(p.num_layers);
+        let l1 = g.usize_in(1, p.num_layers);
+        // partition
+        prop_assert!(
+            p.client_memory_bytes(l1) + p.server_memory_bytes(l1) == total,
+            "{name} b{batch} l1={l1} partition"
+        );
+        // monotone
+        if l1 > 1 {
+            prop_assert!(
+                p.client_memory_bytes(l1) >= p.client_memory_bytes(l1 - 1),
+                "client memory not monotone"
+            );
+        }
+        // I|l1 == following layer's input bytes
+        if l1 < p.num_layers {
+            let next_in: usize = p.layers[l1].in_shape.iter().product();
+            prop_assert!(
+                p.intermediate_bytes(l1) == next_in as u64 * 4,
+                "I|{l1} mismatch"
+            );
+        }
+        // flops partition
+        prop_assert!(
+            p.client_flops(l1) + p.server_flops(l1) == p.total_flops(),
+            "flops partition"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tensor_le_bytes_roundtrip() {
+    run_prop("tensor wire roundtrip", 150, |g| {
+        let n = g.usize_in(1, 2000);
+        let data: Vec<f32> = (0..n)
+            .map(|_| {
+                let v = g.f64_in(-3.4e37, 3.4e37) as f32;
+                if g.bool() { v } else { -v }
+            })
+            .collect();
+        let t = Tensor::new(vec![n], data).unwrap();
+        let rt = Tensor::from_le_bytes(vec![n], &t.to_le_bytes()).unwrap();
+        prop_assert!(rt == t, "roundtrip mismatch");
+        Ok(())
+    });
+}
