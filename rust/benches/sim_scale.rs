@@ -1,0 +1,38 @@
+//! §Scale: discrete-event simulator throughput — events/sec at 1k, 10k
+//! and 100k devices (city scenario, diurnal load, churn on). The whole
+//! point of `sim/` is that fleet size costs events, not wall-clock
+//! sockets; this bench pins the events/sec the engine sustains so
+//! regressions in the hot loop (heap ops, planning, histogram records)
+//! show up as numbers, not vibes.
+
+use smartsplit::bench::{black_box, Bench};
+use smartsplit::sim;
+
+fn main() -> anyhow::Result<()> {
+    println!("== sim_scale: city scenario, alexnet, seed 7 ==");
+    // (devices, virtual seconds, bench iters, warmup)
+    let sizes: [(usize, f64, usize, usize); 3] =
+        [(1_000, 120.0, 5, 1), (10_000, 60.0, 3, 1), (100_000, 30.0, 2, 0)];
+
+    for (devices, duration_s, iters, warmup) in sizes {
+        let cfg = sim::city_scale("alexnet", devices, duration_s, 7);
+        Bench::new(&format!("simulate {devices} devices / {duration_s:.0}s virtual"))
+            .iters(iters)
+            .warmup(warmup)
+            .run(|| {
+                black_box(sim::run(&cfg).expect("sim run"));
+            });
+        let report = sim::run(&cfg)?;
+        println!(
+            "    {:>7} devices: {:>9} events in {:?} → {:>12.0} events/s, \
+             {} completed, {} re-splits",
+            devices,
+            report.events,
+            report.wall,
+            report.events_per_wall_second(),
+            report.completed,
+            report.resplits,
+        );
+    }
+    Ok(())
+}

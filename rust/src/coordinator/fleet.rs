@@ -50,6 +50,9 @@ struct FleetDevice {
     expected_s: f64,
     inflight: AtomicU64,
     served: AtomicU64,
+    /// Per-device latency; merged into the fleet-wide histogram at report
+    /// time (same sharding scheme as `sim::SimReport`).
+    latency: Histogram,
 }
 
 /// Per-device slice of the fleet report.
@@ -62,6 +65,8 @@ pub struct MemberReport {
     pub client_energy_j: f64,
     pub upload_energy_j: f64,
     pub head_memory_bytes: u64,
+    /// This member's own latency distribution.
+    pub latency: Histogram,
 }
 
 /// Whole-fleet serving report.
@@ -88,6 +93,7 @@ impl FleetReport {
                 m.client_energy_j, m.upload_energy_j,
                 crate::util::fmt_bytes(m.head_memory_bytes)
             );
+            println!("  {:<14} {}", "", m.latency.summary());
         }
     }
 }
@@ -137,6 +143,7 @@ impl Fleet {
                     * if cfg.emulate_slowdown { 1.0 } else { 0.25 },
                 inflight: AtomicU64::new(0),
                 served: AtomicU64::new(0),
+                latency: Histogram::new(),
             }));
             log::info!(
                 "fleet: {} @ {} Mbps → l1={}",
@@ -192,6 +199,7 @@ impl Fleet {
                 match dev.device.infer(&img) {
                     Ok((_, timing)) => {
                         latency.record_secs(timing.total_s);
+                        dev.latency.record_secs(timing.total_s);
                         meter.record(1);
                         dev.served.fetch_add(1, Ordering::SeqCst);
                     }
@@ -209,14 +217,21 @@ impl Fleet {
             .devices
             .iter()
             .zip(&self.cfg.members)
-            .map(|(d, m)| MemberReport {
-                name: m.profile.name,
-                bandwidth_mbps: m.bandwidth_mbps,
-                split_l1: d.device.split(),
-                served: d.served.load(Ordering::SeqCst),
-                client_energy_j: d.device.energy.client_j(),
-                upload_energy_j: d.device.energy.upload_j(),
-                head_memory_bytes: d.device.memory.used(),
+            .map(|(d, m)| {
+                // Snapshot the member's running histogram (serve() can be
+                // called repeatedly; the member keeps accumulating).
+                let member_latency = Histogram::new();
+                member_latency.merge(&d.latency);
+                MemberReport {
+                    name: m.profile.name,
+                    bandwidth_mbps: m.bandwidth_mbps,
+                    split_l1: d.device.split(),
+                    served: d.served.load(Ordering::SeqCst),
+                    client_energy_j: d.device.energy.client_j(),
+                    upload_energy_j: d.device.energy.upload_j(),
+                    head_memory_bytes: d.device.memory.used(),
+                    latency: member_latency,
+                }
             })
             .collect();
         let latency = Arc::try_unwrap(latency).unwrap_or_else(|_| panic!("latency still shared"));

@@ -14,11 +14,12 @@
 //!   optimiser ([`optimizer`]: NSGA-II + TOPSIS + the five baselines), the
 //!   §III latency/energy models ([`perfmodel`]), the smartphone/cloud/
 //!   link simulation ([`device`], [`netsim`]), the PJRT runtime
-//!   ([`runtime`]) and the TCP split-serving stack ([`serve`],
-//!   [`coordinator`]).
+//!   ([`runtime`]), the TCP split-serving stack ([`serve`],
+//!   [`coordinator`]) and the discrete-event fleet simulator ([`sim`])
+//!   that scales scenarios past what sockets can host.
 //!
-//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
-//! paper-vs-measured results.
+//! See [DESIGN.md](../DESIGN.md) for the architecture, the offline
+//! substrate policy (§4), and the paper-vs-model validation story.
 
 pub mod bench;
 pub mod coordinator;
@@ -31,6 +32,7 @@ pub mod optimizer;
 pub mod perfmodel;
 pub mod runtime;
 pub mod serve;
+pub mod sim;
 pub mod util;
 pub mod workload;
 

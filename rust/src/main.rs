@@ -7,6 +7,8 @@
 //!   device     run the device-side client against a cloud daemon
 //!   demo       in-process cloud + device + router serving a workload
 //!   fleet      heterogeneous multi-phone deployment sharing one cloud
+//!   simulate   discrete-event fleet simulation (thousands of virtual
+//!              devices, diurnal load, churn — no sockets, no wall time)
 //!   models     list models available in the artifacts directory
 
 use std::path::PathBuf;
@@ -34,7 +36,7 @@ fn main() {
 fn cli() -> Cli {
     Cli::new(
         "smartsplit — CNN split serving between a smartphone and a cloud server\n\
-         usage: smartsplit <optimize|cloud|device|demo|models> [flags]",
+         usage: smartsplit <optimize|cloud|device|demo|fleet|simulate|models> [flags]",
     )
     .opt("model", "alexnet", "CNN model (alexnet|vgg11|vgg13|vgg16|mobilenet_v2)")
     .opt("batch", "1", "hardware batch size of the loaded artifacts")
@@ -51,6 +53,12 @@ fn cli() -> Cli {
     .opt("pop", "100", "NSGA-II population size")
     .opt("gens", "250", "NSGA-II generations")
     .opt("seed", "7", "PRNG seed")
+    .opt("scenario", "city", "simulate: city | two-phone")
+    .opt("devices", "10000", "simulate: fleet size (city scenario)")
+    .opt("sim-duration", "10m", "simulate: virtual horizon (90, 90s, 10m, 2h)")
+    .opt("clouds", "0", "simulate: cloud count override (0 = scenario default)")
+    .opt("cloud-servers", "0", "simulate: servers per cloud override (0 = scenario default)")
+    .flag("no-churn", "simulate: disable device churn")
     .flag("no-slowdown", "disable phone-speed emulation")
     .flag("verbose", "log at info level")
 }
@@ -170,6 +178,47 @@ fn run(args: &[String]) -> Result<()> {
             let report = dep.serve(&reqs)?;
             report.print();
             dep.shutdown();
+        }
+        "simulate" => {
+            use smartsplit::sim;
+            let duration = parsed.get_duration_s("sim-duration");
+            let mut sim_cfg = match parsed.get("scenario") {
+                "city" => sim::city_scale(
+                    &cfg.model,
+                    parsed.get_usize("devices"),
+                    duration,
+                    cfg.seed,
+                ),
+                "two-phone" => {
+                    let mut c = sim::two_phone_fleet(
+                        &cfg.model,
+                        cfg.bandwidth_mbps,
+                        cfg.nsga2.clone(),
+                        cfg.seed,
+                    );
+                    c.duration_s = duration;
+                    c
+                }
+                other => bail!("unknown --scenario {other:?} (city | two-phone)"),
+            };
+            if parsed.get_usize("clouds") > 0 {
+                sim_cfg.clouds = parsed.get_usize("clouds");
+            }
+            if parsed.get_usize("cloud-servers") > 0 {
+                sim_cfg.cloud_servers = parsed.get_usize("cloud-servers");
+            }
+            if parsed.get_bool("no-churn") {
+                sim_cfg.churn = None;
+            }
+            println!(
+                "simulating {} device(s) of {} for {:.0}s virtual (seed {})...",
+                sim_cfg.fleet.initial_count(),
+                sim_cfg.model,
+                sim_cfg.duration_s,
+                sim_cfg.seed
+            );
+            let report = sim::run(&sim_cfg)?;
+            report.print();
         }
         other => bail!("unknown command {other:?} (try --help)"),
     }

@@ -67,6 +67,32 @@ impl Histogram {
         st.max_s = st.max_s.max(s);
     }
 
+    /// Fold `other` into `self` without re-recording samples: bucket counts
+    /// add exactly (both histograms share the fixed log-bucket layout), so
+    /// quantiles of the merged histogram equal those of a histogram that
+    /// had recorded every sample directly. Used to aggregate per-device
+    /// histograms into fleet-wide reports (`sim::`, `coordinator::fleet`).
+    ///
+    /// `other` is snapshotted before `self` is locked, so concurrent merges
+    /// in either direction (and self-merge, which doubles) cannot deadlock.
+    pub fn merge(&self, other: &Histogram) {
+        let (counts, total, sum_s, min_s, max_s) = {
+            let o = other.buckets.lock().unwrap();
+            (o.counts.clone(), o.total, o.sum_s, o.min_s, o.max_s)
+        };
+        if total == 0 {
+            return;
+        }
+        let mut st = self.buckets.lock().unwrap();
+        for (mine, theirs) in st.counts.iter_mut().zip(&counts) {
+            *mine += theirs;
+        }
+        st.total += total;
+        st.sum_s += sum_s;
+        st.min_s = st.min_s.min(min_s);
+        st.max_s = st.max_s.max(max_s);
+    }
+
     pub fn count(&self) -> u64 {
         self.buckets.lock().unwrap().total
     }
@@ -202,6 +228,64 @@ mod tests {
         assert_eq!(h.count(), 0);
         assert_eq!(h.mean_s(), 0.0);
         assert_eq!(h.quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn merge_preserves_count_sum_min_max() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for ms in [1.0, 5.0, 20.0] {
+            a.record_secs(ms / 1000.0);
+        }
+        for ms in [0.5, 300.0] {
+            b.record_secs(ms / 1000.0);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert!((a.mean_s() - (1.0 + 5.0 + 20.0 + 0.5 + 300.0) / 5000.0).abs() < 1e-12);
+        assert!((a.min_s() - 0.0005).abs() < 1e-12);
+        assert!((a.max_s() - 0.3).abs() < 1e-12);
+        // b is untouched.
+        assert_eq!(b.count(), 2);
+    }
+
+    #[test]
+    fn merge_equals_direct_recording() {
+        // Bucket-count invariant: merging shards must yield exactly the
+        // quantiles of one histogram that saw every sample.
+        let direct = Histogram::new();
+        let shard_a = Histogram::new();
+        let shard_b = Histogram::new();
+        for i in 1..=1000u32 {
+            let s = i as f64 / 250.0;
+            direct.record_secs(s);
+            let shard = if i % 2 == 0 { &shard_a } else { &shard_b };
+            shard.record_secs(s);
+        }
+        let merged = Histogram::new();
+        merged.merge(&shard_a);
+        merged.merge(&shard_b);
+        assert_eq!(merged.count(), direct.count());
+        assert_eq!(merged.min_s(), direct.min_s());
+        assert_eq!(merged.max_s(), direct.max_s());
+        assert!((merged.mean_s() - direct.mean_s()).abs() < 1e-12);
+        for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(merged.quantile(q), direct.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let a = Histogram::new();
+        a.record_secs(0.25);
+        a.merge(&Histogram::new());
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.min_s(), 0.25);
+        let empty = Histogram::new();
+        empty.merge(&a);
+        assert_eq!(empty.count(), 1);
+        assert_eq!(empty.min_s(), 0.25);
+        assert_eq!(empty.max_s(), 0.25);
     }
 
     #[test]

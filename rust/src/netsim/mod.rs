@@ -53,9 +53,24 @@ impl Link {
     }
 
     /// Retune the link (adaptive-bandwidth scenarios).
+    ///
+    /// Token-bucket behaviour on retune: refills are lazy (computed in
+    /// [`Link::throttle`] from `last_refill`), so without intervention any
+    /// idle time spanning the retune would be credited at the *new* rate —
+    /// retuning 1 → 1000 Mbps after a 1 s gap would mint a ~125 MB stale
+    /// burst that never crossed the link at either rate. To keep history
+    /// honest, the bucket is settled at the **old** rate up to the retune
+    /// instant, clamped to the normal burst allowance, and re-based so
+    /// subsequent refills accrue purely at the new rate.
     pub fn set_bandwidth_mbps(&self, mbps: f64) {
         assert!(mbps > 0.0);
-        self.state.lock().unwrap().bandwidth_mbps = mbps;
+        let mut st = self.state.lock().unwrap();
+        let now = Instant::now();
+        let old_rate = st.bandwidth_mbps * 1e6 / 8.0; // bytes/s
+        let elapsed = now.duration_since(st.last_refill).as_secs_f64();
+        st.tokens = (st.tokens + elapsed * old_rate).min(st.burst_bytes);
+        st.last_refill = now;
+        st.bandwidth_mbps = mbps;
     }
 
     /// Ideal transfer time for `bytes` at the current bandwidth (Eq. 4).
@@ -180,6 +195,40 @@ mod tests {
         assert_eq!(link.bandwidth_mbps(), 40.0);
         let t = link.transfer_time(1_000_000);
         assert!((t.as_secs_f64() - (8e6 / 40e6) - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn retune_rebases_tokens_at_old_rate() {
+        // Regression: an idle window spanning a retune must be credited at
+        // the rate that actually applied, not the new one. Idle ~200 ms on
+        // a 1 Mbps link (earns ≤ 25 KB, clamped to the 64 KiB burst), then
+        // retune to 80 Mbps (10 MB/s) and push 1 MB. With the re-base the
+        // bucket holds ≲ 64 KiB, so the transfer must wait ≈ 94 ms for
+        // refill at the new rate. Before the fix, the stale `last_refill`
+        // let throttle() credit the whole idle window at 10 MB/s — a 1 MB
+        // (bytes-capped) stale burst that sailed through with no wait.
+        let link = Link::new(1.0);
+        std::thread::sleep(Duration::from_millis(200));
+        link.set_bandwidth_mbps(80.0);
+        {
+            let st = link.state.lock().unwrap();
+            assert_eq!(st.bandwidth_mbps, 80.0);
+            // Settled at the old rate and re-based at the retune instant.
+            assert!(
+                st.tokens <= 64.0 * 1024.0,
+                "retune minted a stale burst: {} tokens",
+                st.tokens
+            );
+            assert!(st.last_refill.elapsed() < Duration::from_millis(150));
+        }
+        let waited = link.throttle(1_000_000, true);
+        // ≥ (1 MB − 64 KiB) / 10 MB/s ≈ 93 ms of honest pacing (sleep can
+        // only overshoot, so this lower bound is robust on slow CI).
+        assert!(
+            waited >= Duration::from_millis(50),
+            "throttle passed a stale burst through in {waited:?}"
+        );
+        assert_eq!(link.bytes_transferred().0, 1_000_000);
     }
 
     #[test]

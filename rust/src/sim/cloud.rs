@@ -1,0 +1,172 @@
+//! Virtual cloud: an M/G/c-style queue whose service time is the §III
+//! tail-layer latency ([`crate::perfmodel::PerfModel::server_latency_s`])
+//! of the requesting device's split, captured when the request was issued
+//! (a re-split mid-flight must not retroactively change in-flight work).
+//!
+//! The live testbed never sees cloud contention — two phones cannot
+//! saturate the server — but ten thousand virtual phones can, and the
+//! queueing delay measured here is exactly the term Eq. 5 omits.
+
+use std::collections::VecDeque;
+
+use crate::metrics::Histogram;
+use crate::sim::engine::SimTime;
+
+/// One queued request.
+#[derive(Clone, Copy, Debug)]
+struct Queued {
+    device: usize,
+    issued: SimTime,
+    enqueued: SimTime,
+    service_s: f64,
+}
+
+/// A request popped off the queue when a server frees up.
+#[derive(Clone, Copy, Debug)]
+pub struct Dequeued {
+    pub device: usize,
+    pub issued: SimTime,
+    pub service_s: f64,
+}
+
+/// A virtual cloud server pool.
+#[derive(Debug)]
+pub struct SimCloud {
+    /// Parallel servers (`c` in M/G/c). The live cloud daemon runs one
+    /// serial PJRT executor, so 1 mirrors the testbed; raise it to model
+    /// a scaled-out deployment.
+    pub servers: usize,
+    busy: usize,
+    queue: VecDeque<Queued>,
+    /// Time requests spent waiting for a free server.
+    pub queue_delay: Histogram,
+    pub served: u64,
+    busy_time_s: f64,
+    peak_queue: usize,
+}
+
+impl SimCloud {
+    pub fn new(servers: usize) -> SimCloud {
+        assert!(servers > 0, "a cloud needs at least one server");
+        SimCloud {
+            servers,
+            busy: 0,
+            queue: VecDeque::new(),
+            queue_delay: Histogram::new(),
+            served: 0,
+            busy_time_s: 0.0,
+            peak_queue: 0,
+        }
+    }
+
+    /// A request arrives. Returns `Some(service_s)` if a server is free
+    /// (caller schedules `CloudDone` at `now + service_s`); otherwise the
+    /// request queues FIFO.
+    pub fn offer(
+        &mut self,
+        device: usize,
+        issued: SimTime,
+        now: SimTime,
+        service_s: f64,
+    ) -> Option<f64> {
+        if self.busy < self.servers {
+            self.busy += 1;
+            self.busy_time_s += service_s;
+            self.queue_delay.record_secs(0.0);
+            Some(service_s)
+        } else {
+            self.queue.push_back(Queued { device, issued, enqueued: now, service_s });
+            self.peak_queue = self.peak_queue.max(self.queue.len());
+            None
+        }
+    }
+
+    /// A server finished. Pops the next queued request, if any — the
+    /// caller schedules its `CloudDone` at `now + service_s`.
+    pub fn finish(&mut self, now: SimTime) -> Option<Dequeued> {
+        self.served += 1;
+        match self.queue.pop_front() {
+            Some(q) => {
+                self.queue_delay.record_secs(now - q.enqueued);
+                self.busy_time_s += q.service_s;
+                Some(Dequeued { device: q.device, issued: q.issued, service_s: q.service_s })
+            }
+            None => {
+                self.busy -= 1;
+                None
+            }
+        }
+    }
+
+    pub fn busy(&self) -> usize {
+        self.busy
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn peak_queue(&self) -> usize {
+        self.peak_queue
+    }
+
+    /// Offered utilisation: busy-seconds accrued per server-second of the
+    /// `horizon_s` window. Deliberately NOT clamped at 1.0 — a value of
+    /// 3.0 means three horizons' worth of work was offered and the drain
+    /// spilled past the horizon, which a clamp would hide.
+    pub fn utilization(&self, horizon_s: f64) -> f64 {
+        if horizon_s <= 0.0 {
+            return 0.0;
+        }
+        self.busy_time_s / (horizon_s * self.servers as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_immediately_when_free() {
+        let mut c = SimCloud::new(2);
+        assert_eq!(c.offer(0, 0.0, 0.0, 0.5), Some(0.5));
+        assert_eq!(c.offer(1, 0.0, 0.0, 0.5), Some(0.5));
+        assert_eq!(c.busy(), 2);
+        assert_eq!(c.offer(2, 0.1, 0.1, 0.5), None);
+        assert_eq!(c.queue_len(), 1);
+    }
+
+    #[test]
+    fn finish_dequeues_fifo_with_captured_service_time() {
+        let mut c = SimCloud::new(1);
+        assert!(c.offer(0, 0.0, 0.0, 1.0).is_some());
+        assert!(c.offer(1, 0.2, 0.2, 0.7).is_none());
+        assert!(c.offer(2, 0.3, 0.3, 0.9).is_none());
+        // Server frees at t=1.0: device 1 (queued first) starts with the
+        // service time captured at issue.
+        let d = c.finish(1.0).unwrap();
+        assert_eq!(d.device, 1);
+        assert_eq!(d.issued, 0.2);
+        assert_eq!(d.service_s, 0.7);
+        // Its queue delay was 1.0 - 0.2 = 0.8 s.
+        assert!((c.queue_delay.max_s() - 0.8).abs() < 1e-12);
+        let d = c.finish(1.7).unwrap();
+        assert_eq!(d.device, 2);
+        assert!(c.finish(2.6).is_none());
+        assert_eq!(c.busy(), 0);
+        assert_eq!(c.served, 3);
+        assert_eq!(c.peak_queue(), 2);
+    }
+
+    #[test]
+    fn utilization_is_busy_time_over_capacity() {
+        let mut c = SimCloud::new(2);
+        c.offer(0, 0.0, 0.0, 3.0);
+        c.offer(1, 0.0, 0.0, 1.0);
+        c.finish(1.0);
+        c.finish(3.0);
+        // 4 busy-seconds over 2 servers × 4 s horizon = 0.5.
+        assert!((c.utilization(4.0) - 0.5).abs() < 1e-12);
+        assert_eq!(c.utilization(0.0), 0.0);
+    }
+}

@@ -1,0 +1,364 @@
+//! Virtual smartphone: a [`ComputeProfile`] plus battery, time-varying
+//! link, and a SmartSplit decision that adapts as conditions drift.
+//!
+//! Latency and energy come straight from the §III analytical models
+//! ([`PerfModel`]), so a simulated device behaves exactly like the
+//! modelled cost of the live serving path — that equivalence is asserted
+//! by `tests/sim_determinism.rs` against the 2-phone fleet.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::battery::{battery_aware_split, BatteryBand};
+use crate::device::ComputeProfile;
+use crate::models::ModelProfile;
+use crate::netsim::BandwidthTrace;
+use crate::optimizer::{smartsplit, Nsga2Params};
+use crate::perfmodel::{NetworkEnv, PerfModel};
+use crate::sim::engine::SimTime;
+
+/// How a device picks (and re-picks) its split.
+#[derive(Clone, Debug)]
+pub enum Planner {
+    /// Full Algorithm 1 (NSGA-II + TOPSIS) — what the live `fleet` path
+    /// runs. Costly; right for small fleets and the live-parity tests.
+    SmartSplit(Nsga2Params),
+    /// TOPSIS over the exhaustive true Pareto front, battery-band
+    /// weighted. O(L) per decision — the city-scale default, and exactly
+    /// what every battery/bandwidth *re*-plan uses in either mode.
+    Topsis,
+    /// Pin every device to this split (clamped to `1..=L-1`) and never
+    /// re-plan — controlled experiments (e.g. forcing cloud contention).
+    Fixed(usize),
+}
+
+/// One virtual device.
+#[derive(Debug)]
+pub struct SimDevice {
+    pub profile: &'static ComputeProfile,
+    /// Link bandwidth over virtual time (Mbps).
+    pub trace: BandwidthTrace,
+    /// Index of the cloud this device offloads to.
+    pub cloud: usize,
+    /// Current split (layers `1..=l1` on the device).
+    pub l1: usize,
+    /// Battery band the current split was planned in.
+    pub band: BatteryBand,
+    /// Bandwidth (Mbps) the current split was planned at.
+    pub planned_bw_mbps: f64,
+
+    // Cached per-split §III quantities, refreshed by `replan`.
+    head_s: f64,
+    service_s: f64,
+    upload_bits: f64,
+    /// Eq. 6 dynamic compute power (split-independent; cached from
+    /// [`PerfModel::client_power_w`] so the formula lives in one place).
+    client_power_w: f64,
+
+    // Battery state.
+    capacity_j: f64,
+    initial_soc: f64,
+    drained_j: f64,
+    /// Virtual time up to which background (idle) drain has been applied.
+    last_drain_t: SimTime,
+
+    /// `Planner::Fixed` devices never re-plan.
+    pinned: bool,
+
+    // Serial execution: one request at a time on the phone.
+    pub busy: bool,
+    pub backlog: VecDeque<SimTime>,
+    pub active: bool,
+
+    // Accounting.
+    pub served: u64,
+    pub resplits: u64,
+    pub client_energy_j: f64,
+    pub upload_energy_j: f64,
+}
+
+/// Cost of running one request's device half, captured at issue time.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceCost {
+    pub head_s: f64,
+    pub upload_s: f64,
+    /// Tail service time at the cloud for the split this request used.
+    pub service_s: f64,
+    pub energy_j: f64,
+}
+
+impl SimDevice {
+    /// Create a device at virtual time `spawned_at` (0 for the initial
+    /// fleet, the join time under churn — idle drain must not be charged
+    /// for time before the device existed) and plan its initial split for
+    /// `soc` state of charge and the trace's bandwidth at that instant.
+    pub fn new(
+        profile: &'static ComputeProfile,
+        trace: BandwidthTrace,
+        cloud: usize,
+        initial_soc: f64,
+        spawned_at: SimTime,
+        model: &ModelProfile,
+        planner: &Planner,
+    ) -> SimDevice {
+        let capacity_j = profile.battery_mah.unwrap_or(f64::INFINITY) * 3.6 * 3.85;
+        let bw = trace.at(std::time::Duration::from_secs_f64(spawned_at.max(0.0)));
+        let mut d = SimDevice {
+            profile,
+            trace,
+            cloud,
+            l1: 1,
+            band: BatteryBand::of_fraction(initial_soc),
+            planned_bw_mbps: bw,
+            head_s: 0.0,
+            service_s: 0.0,
+            upload_bits: 0.0,
+            client_power_w: 0.0,
+            capacity_j,
+            initial_soc: initial_soc.clamp(0.0, 1.0),
+            drained_j: 0.0,
+            last_drain_t: spawned_at,
+            pinned: matches!(planner, Planner::Fixed(_)),
+            busy: false,
+            backlog: VecDeque::new(),
+            active: true,
+            served: 0,
+            resplits: 0,
+            client_energy_j: 0.0,
+            upload_energy_j: 0.0,
+        };
+        let l1 = match planner {
+            Planner::SmartSplit(params) => smartsplit(&d.perf_model(model, bw), params).decision.l1,
+            Planner::Topsis => battery_aware_split(&d.perf_model(model, bw), d.soc())
+                .expect("no feasible split for device"),
+            Planner::Fixed(l1) => (*l1).clamp(1, model.num_layers.saturating_sub(1).max(1)),
+        };
+        d.adopt_split(l1, model, bw);
+        d
+    }
+
+    /// The §III evaluation context at bandwidth `bw_mbps`.
+    pub fn perf_model<'a>(&self, model: &'a ModelProfile, bw_mbps: f64) -> PerfModel<'a> {
+        PerfModel::new(
+            self.profile,
+            crate::device::profiles::cloud_server(),
+            self.profile.wifi.expect("sim device needs a radio").radio_power(),
+            NetworkEnv::with_bandwidth(bw_mbps),
+            model,
+        )
+    }
+
+    fn adopt_split(&mut self, l1: usize, model: &ModelProfile, bw_mbps: f64) {
+        let pm = self.perf_model(model, bw_mbps);
+        self.l1 = l1;
+        self.client_power_w = pm.client_power_w();
+        self.head_s = pm.client_latency_s(l1);
+        self.service_s = pm.server_latency_s(l1);
+        self.upload_bits = if l1 >= model.num_layers {
+            0.0
+        } else {
+            model.intermediate_bytes(l1) as f64 * 8.0
+        };
+        self.planned_bw_mbps = bw_mbps;
+        self.band = BatteryBand::of_fraction(self.soc());
+    }
+
+    /// Battery state of charge in [0, 1].
+    pub fn soc(&self) -> f64 {
+        (self.initial_soc - self.drained_j / self.capacity_j).max(0.0)
+    }
+
+    /// Battery empty?
+    pub fn exhausted(&self) -> bool {
+        self.soc() <= 0.0
+    }
+
+    /// Integrate background draw (`idle_w` Watts) since the last drain
+    /// checkpoint — the standby/app load BatteryStats would attribute to
+    /// everything that isn't this workload.
+    pub fn apply_idle_drain(&mut self, now: SimTime, idle_w: f64) {
+        if now > self.last_drain_t {
+            self.drained_j += idle_w * (now - self.last_drain_t);
+            self.last_drain_t = now;
+        }
+    }
+
+    /// Bandwidth of this device's link at virtual time `t`.
+    pub fn bandwidth_at(&self, t: SimTime) -> f64 {
+        self.trace.at(std::time::Duration::from_secs_f64(t.max(0.0)))
+    }
+
+    /// Modelled tail-layer service time at the cloud for this split.
+    pub fn service_s(&self) -> f64 {
+        self.service_s
+    }
+
+    /// Modelled end-to-end latency (Eq. 14) of one uncontended request at
+    /// bandwidth `bw_mbps` — head + upload + tail, download excluded as in
+    /// the paper.
+    pub fn expected_latency_s(&self, bw_mbps: f64) -> f64 {
+        self.head_s + self.upload_bits / (bw_mbps * 1e6) + self.service_s
+    }
+
+    /// Start one request at time `t`: compute the device-side cost, drain
+    /// the battery, and return the cost so the engine can schedule the
+    /// uplink-complete event. Returns `None` (and deactivates) if the
+    /// battery is already flat.
+    pub fn start_request(&mut self, t: SimTime) -> Option<DeviceCost> {
+        if self.exhausted() {
+            self.active = false;
+            return None;
+        }
+        let bw = self.bandwidth_at(t);
+        let head_s = self.head_s;
+        let upload_s = self.upload_bits / (bw * 1e6);
+        // Eq. 6 dynamic compute power + Eq. 8 radio power at τ_u = bw.
+        let radio = self.profile.wifi.expect("sim device needs a radio").radio_power();
+        let client_j = self.client_power_w * head_s;
+        let upload_j = radio.upload_power_w(bw) * upload_s;
+        self.client_energy_j += client_j;
+        self.upload_energy_j += upload_j;
+        self.drained_j += client_j + upload_j;
+        self.busy = true;
+        Some(DeviceCost {
+            head_s,
+            upload_s,
+            service_s: self.service_s,
+            energy_j: client_j + upload_j,
+        })
+    }
+
+    /// Re-run the split decision if battery band or bandwidth drifted
+    /// beyond `drift`. Returns true when the split moved.
+    pub fn maybe_replan(&mut self, t: SimTime, model: &ModelProfile, drift: f64) -> bool {
+        if !self.active || self.pinned {
+            return false;
+        }
+        let bw = self.bandwidth_at(t);
+        let band = BatteryBand::of_fraction(self.soc());
+        let bw_moved = (bw - self.planned_bw_mbps).abs() / self.planned_bw_mbps > drift;
+        if band == self.band && !bw_moved {
+            return false;
+        }
+        self.replan(t, model)
+    }
+
+    /// Unconditional re-plan at current conditions (battery-band weighted
+    /// TOPSIS over the exhaustive front). Returns true if the split moved.
+    pub fn replan(&mut self, t: SimTime, model: &ModelProfile) -> bool {
+        if self.pinned {
+            return false;
+        }
+        let bw = self.bandwidth_at(t);
+        let Some(l1) = battery_aware_split(&self.perf_model(model, bw), self.soc()) else {
+            return false;
+        };
+        let moved = l1 != self.l1;
+        self.adopt_split(l1, model, bw);
+        if moved {
+            self.resplits += 1;
+        }
+        moved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::models::zoo;
+
+    fn model() -> ModelProfile {
+        zoo::alexnet().analyze(1)
+    }
+
+    fn device(model: &ModelProfile) -> SimDevice {
+        SimDevice::new(
+            profiles::redmi_note8(),
+            BandwidthTrace::constant(30.0),
+            0,
+            1.0,
+            0.0,
+            model,
+            &Planner::Topsis,
+        )
+    }
+
+    #[test]
+    fn late_join_pays_no_retroactive_idle_drain() {
+        let m = model();
+        let mut d = SimDevice::new(
+            profiles::samsung_j6(),
+            BandwidthTrace::constant(30.0),
+            0,
+            1.0,
+            500.0, // joined at t = 500 s
+            &m,
+            &Planner::Topsis,
+        );
+        d.apply_idle_drain(500.0, 100.0);
+        assert_eq!(d.soc(), 1.0, "drain charged for time before the join");
+        d.apply_idle_drain(510.0, 100.0);
+        assert!((d.soc() - (1.0 - 1000.0 / d.capacity_j)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_costs_match_perf_model() {
+        let m = model();
+        let d = device(&m);
+        let pm = d.perf_model(&m, 30.0);
+        assert!((d.head_s - pm.client_latency_s(d.l1)).abs() < 1e-15);
+        assert!((d.service_s() - pm.server_latency_s(d.l1)).abs() < 1e-15);
+        assert!((d.expected_latency_s(30.0) - pm.f1(d.l1)).abs() < 1e-12);
+        assert_eq!(d.client_power_w, pm.client_power_w());
+    }
+
+    #[test]
+    fn start_request_drains_battery() {
+        let m = model();
+        let mut d = device(&m);
+        let soc0 = d.soc();
+        let cost = d.start_request(0.0).unwrap();
+        assert!(cost.energy_j > 0.0);
+        assert!(d.soc() < soc0);
+        assert!(d.busy);
+        assert!((d.client_energy_j + d.upload_energy_j - cost.energy_j).abs() < 1e-12);
+    }
+
+    #[test]
+    fn band_crossing_triggers_replan() {
+        let m = model();
+        let mut d = device(&m);
+        assert_eq!(d.band, BatteryBand::Comfort);
+        // Force the battery down into the critical band.
+        d.drained_j = d.capacity_j * 0.85;
+        assert!(d.soc() < 0.2);
+        d.maybe_replan(0.0, &m, 0.2);
+        assert_eq!(d.band, BatteryBand::Critical);
+        // The critical split must not cost more energy than the comfort one
+        // (same invariant the coordinator::battery tests pin).
+        let pm = d.perf_model(&m, 30.0);
+        let comfort = battery_aware_split(&pm, 1.0).unwrap();
+        assert!(pm.f2(d.l1) <= pm.f2(comfort) + 1e-12);
+    }
+
+    #[test]
+    fn bandwidth_drift_triggers_replan_and_steady_state_does_not() {
+        let m = model();
+        let mut d = device(&m);
+        assert!(!d.maybe_replan(0.0, &m, 0.2), "no drift must mean no replan");
+        // A 10× bandwidth collapse moves the planned point.
+        d.trace = BandwidthTrace::constant(3.0);
+        assert!(d.maybe_replan(0.0, &m, 0.2) || d.planned_bw_mbps == 3.0);
+        assert_eq!(d.planned_bw_mbps, 3.0);
+    }
+
+    #[test]
+    fn exhausted_battery_deactivates() {
+        let m = model();
+        let mut d = device(&m);
+        d.drained_j = d.capacity_j * 2.0;
+        assert!(d.exhausted());
+        assert!(d.start_request(0.0).is_none());
+        assert!(!d.active);
+    }
+}

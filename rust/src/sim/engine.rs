@@ -1,0 +1,188 @@
+//! Deterministic discrete-event core: a virtual clock and a binary-heap
+//! event queue with FIFO tie-breaking.
+//!
+//! Everything the simulator does is an [`Event`] popped off this queue in
+//! (time, insertion-order) order. No wall clock, no threads, no sockets —
+//! given one seed, two runs pop the identical event sequence, which is the
+//! property `tests/sim_determinism.rs` pins down.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual timestamp: seconds since simulation start.
+pub type SimTime = f64;
+
+/// The simulator's event vocabulary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// Fleet-level workload tick: dispatch one request to a device.
+    Arrival,
+    /// A device finished head compute + activation upload; the request
+    /// reaches its cloud's queue. `issued` is the original arrival time;
+    /// `service_s` is the tail service time captured at issue (a re-split
+    /// mid-flight must not change in-flight work).
+    Uplinked { device: usize, issued: SimTime, service_s: f64 },
+    /// A cloud server finished the tail layers of this device's request.
+    CloudDone { cloud: usize, device: usize, issued: SimTime },
+    /// Periodic fleet sweep: re-run the split optimiser for devices whose
+    /// bandwidth or battery band drifted.
+    Reoptimize,
+    /// Churn: a new device joins the fleet.
+    Join,
+    /// Churn: a device leaves the fleet.
+    Leave { device: usize },
+    /// End of the simulated horizon: stop issuing new work.
+    Horizon,
+}
+
+struct Entry {
+    time: SimTime,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    /// Reversed (time, seq) so `BinaryHeap`'s max-heap pops the earliest
+    /// event first, FIFO among equal timestamps.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap event queue owning the virtual clock.
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+    now: SimTime,
+    popped: u64,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0, popped: 0 }
+    }
+
+    /// Current virtual time — the timestamp of the last popped event.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Events popped so far (the `events/sec` numerator in `sim_scale`).
+    pub fn processed(&self) -> u64 {
+        self.popped
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `event` at absolute time `at` (clamped to the present —
+    /// the past is immutable in this establishment).
+    pub fn schedule(&mut self, at: SimTime, event: Event) {
+        debug_assert!(at.is_finite(), "non-finite event time");
+        let entry = Entry { time: at.max(self.now), seq: self.seq, event };
+        self.seq += 1;
+        self.heap.push(entry);
+    }
+
+    /// Schedule `event` at `dt` seconds from now.
+    pub fn schedule_in(&mut self, dt: SimTime, event: Event) {
+        debug_assert!(dt >= 0.0, "negative delay {dt}");
+        self.schedule(self.now + dt.max(0.0), event);
+    }
+
+    /// Pop the earliest event, advancing the virtual clock to it.
+    pub fn pop(&mut self) -> Option<(SimTime, Event)> {
+        let entry = self.heap.pop()?;
+        self.now = entry.time;
+        self.popped += 1;
+        Some((entry.time, entry.event))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_and_advances_clock() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, Event::Arrival);
+        q.schedule(1.0, Event::Horizon);
+        q.schedule(2.0, Event::Join);
+        assert_eq!(q.pop(), Some((1.0, Event::Horizon)));
+        assert_eq!(q.now(), 1.0);
+        assert_eq!(q.pop(), Some((2.0, Event::Join)));
+        assert_eq!(q.pop(), Some((3.0, Event::Arrival)));
+        assert_eq!(q.now(), 3.0);
+        assert!(q.pop().is_none());
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn equal_timestamps_pop_fifo() {
+        let mut q = EventQueue::new();
+        for d in 0..100 {
+            q.schedule(5.0, Event::Leave { device: d });
+        }
+        for d in 0..100 {
+            assert_eq!(q.pop(), Some((5.0, Event::Leave { device: d })));
+        }
+    }
+
+    #[test]
+    fn schedule_in_is_relative_to_virtual_now() {
+        let mut q = EventQueue::new();
+        q.schedule(10.0, Event::Arrival);
+        q.pop();
+        q.schedule_in(2.5, Event::Horizon);
+        assert_eq!(q.pop(), Some((12.5, Event::Horizon)));
+    }
+
+    #[test]
+    fn past_schedules_clamp_to_now() {
+        let mut q = EventQueue::new();
+        q.schedule(10.0, Event::Arrival);
+        q.pop();
+        q.schedule(4.0, Event::Horizon); // "4.0" is in the past
+        assert_eq!(q.pop(), Some((10.0, Event::Horizon)));
+    }
+
+    #[test]
+    fn interleaved_same_time_ordering_is_stable() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, Event::Arrival);
+        q.schedule(1.0, Event::Reoptimize);
+        q.schedule(0.5, Event::Join);
+        assert_eq!(q.pop().unwrap().1, Event::Join);
+        assert_eq!(q.pop().unwrap().1, Event::Arrival);
+        assert_eq!(q.pop().unwrap().1, Event::Reoptimize);
+    }
+}

@@ -1,0 +1,561 @@
+//! Discrete-event fleet simulator — city-scale SmartSplit without sockets.
+//!
+//! The live stack (`serve/`, `coordinator/fleet.rs`) pushes real bytes
+//! through real TCP in real time, which caps experiments at a handful of
+//! devices. This module runs thousands-to-millions of *virtual* devices
+//! against virtual cloud servers on a single thread by replacing wall
+//! time with an event queue and measured costs with the §III analytical
+//! models ([`crate::perfmodel`]) — the same per-request cost functions the
+//! optimiser already trusts:
+//!
+//! * [`engine`] — virtual clock + binary-heap event queue (deterministic
+//!   under a fixed seed, FIFO tie-breaking);
+//! * [`device`] — virtual smartphones: a [`crate::device::ComputeProfile`],
+//!   a battery integrating the §III power draw (driving
+//!   [`crate::coordinator::battery::BatteryBand`] re-splits as charge
+//!   falls), and a time-varying link ([`crate::netsim::BandwidthTrace`]);
+//! * [`cloud`] — M/G/c cloud queues whose service time comes from
+//!   [`crate::perfmodel::PerfModel`], so cloud contention — invisible on
+//!   the paper's two-phone testbed — becomes measurable;
+//! * [`scenario`] — presets: the paper's two-phone fleet (live-parity
+//!   testing) and a diurnal city of 10k+ devices with churn.
+//!
+//! Reports reuse [`crate::metrics::Histogram`], so simulated and
+//! socket-measured runs read the same.
+
+pub mod cloud;
+pub mod device;
+pub mod engine;
+pub mod scenario;
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::battery::BatteryBand;
+use crate::metrics::Histogram;
+use crate::models::{zoo, ModelProfile};
+use crate::util::rng::Xoshiro256;
+use crate::workload::next_interarrival;
+
+pub use cloud::SimCloud;
+pub use device::{Planner, SimDevice};
+pub use engine::{Event, EventQueue, SimTime};
+pub use scenario::{city_scale, two_phone_fleet, ChurnConfig, ExplicitMember, FleetSpec, SimConfig};
+
+/// Per-profile slice of the fleet report (devices sharing a
+/// [`crate::device::ComputeProfile`]).
+#[derive(Debug)]
+pub struct ProfileSlice {
+    pub name: &'static str,
+    pub devices: usize,
+    pub served: u64,
+    pub latency: Histogram,
+}
+
+/// Per-cloud slice of the fleet report.
+#[derive(Debug)]
+pub struct CloudSlice {
+    pub servers: usize,
+    pub served: u64,
+    pub utilization: f64,
+    pub peak_queue: usize,
+}
+
+/// Everything a simulation run measured.
+#[derive(Debug)]
+pub struct SimReport {
+    pub model: String,
+    pub seed: u64,
+    /// Configured horizon (no new work is issued after this virtual time).
+    pub duration_s: f64,
+    /// Virtual time at which the last event drained.
+    pub sim_end_s: f64,
+    pub wall: Duration,
+    pub events: u64,
+    pub devices_created: usize,
+    pub devices_active_end: usize,
+    pub joined: u64,
+    pub left: u64,
+    pub batteries_exhausted: u64,
+    pub generated: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    /// Fleet-wide end-to-end latency (merged from the per-profile shards).
+    pub latency: Histogram,
+    /// Cloud queueing delay (merged across clouds).
+    pub queue_delay: Histogram,
+    pub per_profile: Vec<ProfileSlice>,
+    pub clouds: Vec<CloudSlice>,
+    pub resplits: u64,
+    pub client_energy_j: f64,
+    pub upload_energy_j: f64,
+    /// Final split distribution: (l1, active devices running it).
+    pub split_distribution: Vec<(usize, u64)>,
+}
+
+impl SimReport {
+    /// Completed requests per second of *virtual* time.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.duration_s
+    }
+
+    /// Events processed per second of *wall* time (the `sim_scale` metric).
+    pub fn events_per_wall_second(&self) -> f64 {
+        let w = self.wall.as_secs_f64();
+        if w <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.events as f64 / w
+    }
+
+    /// Deterministic one-line digest: everything seed-reproducible, nothing
+    /// wall-clock. Two runs at the same seed must produce identical
+    /// strings (`tests/sim_determinism.rs`).
+    pub fn summary(&self) -> String {
+        let util: Vec<String> =
+            self.clouds.iter().map(|c| format!("{:.4}", c.utilization)).collect();
+        format!(
+            "model={} seed={} completed={} dropped={} joined={} left={} dead={} \
+             resplits={} latency[{}] queue[{}] E_client={:.6}J E_up={:.6}J util=[{}]",
+            self.model,
+            self.seed,
+            self.completed,
+            self.dropped,
+            self.joined,
+            self.left,
+            self.batteries_exhausted,
+            self.resplits,
+            self.latency.summary(),
+            self.queue_delay.summary(),
+            self.client_energy_j,
+            self.upload_energy_j,
+            util.join(","),
+        )
+    }
+
+    pub fn print(&self) {
+        println!("== sim report: {} ({} devices) ==", self.model, self.devices_created);
+        println!(
+            "  virtual    : {:.1}s horizon, drained at {:.1}s",
+            self.duration_s, self.sim_end_s
+        );
+        println!(
+            "  wall       : {:?} for {} events ({:.0} events/s)",
+            self.wall,
+            self.events,
+            self.events_per_wall_second()
+        );
+        println!(
+            "  fleet      : {} created, {} active at end, {} joined, {} left, {} dead batteries",
+            self.devices_created,
+            self.devices_active_end,
+            self.joined,
+            self.left,
+            self.batteries_exhausted
+        );
+        println!(
+            "  requests   : {} generated, {} completed, {} dropped ({:.3} req/s virtual)",
+            self.generated,
+            self.completed,
+            self.dropped,
+            self.throughput_rps()
+        );
+        println!("  latency    : {}", self.latency.summary());
+        println!("  cloudq     : {}", self.queue_delay.summary());
+        for (i, c) in self.clouds.iter().enumerate() {
+            println!(
+                "  cloud {:<4} : {} servers, served={}, util={:.1}%, peak queue={}",
+                i,
+                c.servers,
+                c.served,
+                c.utilization * 100.0,
+                c.peak_queue
+            );
+        }
+        for p in &self.per_profile {
+            println!(
+                "  {:<12} : {} devices, served={}, {}",
+                p.name, p.devices, p.served,
+                p.latency.summary()
+            );
+        }
+        println!(
+            "  energy     : client {:.2} J, upload {:.2} J ({} re-splits)",
+            self.client_energy_j, self.upload_energy_j, self.resplits
+        );
+        let splits: Vec<String> = self
+            .split_distribution
+            .iter()
+            .map(|(l1, n)| format!("l1={l1}:{n}"))
+            .collect();
+        println!("  splits     : {}", splits.join(" "));
+    }
+}
+
+/// Active-device index with O(1) insert/remove and deterministic uniform
+/// sampling.
+#[derive(Debug, Default)]
+struct ActiveSet {
+    members: Vec<usize>,
+    /// `pos[d]` = index of device `d` in `members`, or `usize::MAX`.
+    pos: Vec<usize>,
+}
+
+impl ActiveSet {
+    fn insert(&mut self, d: usize) {
+        if self.pos.len() <= d {
+            self.pos.resize(d + 1, usize::MAX);
+        }
+        if self.pos[d] == usize::MAX {
+            self.pos[d] = self.members.len();
+            self.members.push(d);
+        }
+    }
+
+    fn remove(&mut self, d: usize) {
+        let Some(&p) = self.pos.get(d) else { return };
+        if p == usize::MAX {
+            return;
+        }
+        let last = *self.members.last().unwrap();
+        self.members.swap_remove(p);
+        self.pos[d] = usize::MAX;
+        if p < self.members.len() {
+            self.pos[last] = p;
+        }
+    }
+
+    fn sample(&self, rng: &mut Xoshiro256) -> Option<usize> {
+        if self.members.is_empty() {
+            return None;
+        }
+        Some(self.members[rng.gen_range(0, self.members.len() - 1)])
+    }
+
+    fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    fn snapshot(&self) -> Vec<usize> {
+        self.members.clone()
+    }
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    generated: u64,
+    completed: u64,
+    dropped: u64,
+    joined: u64,
+    left: u64,
+    exhausted: u64,
+}
+
+/// The event-loop state. Lives for one [`run`] call.
+struct Sim<'a> {
+    cfg: &'a SimConfig,
+    model: ModelProfile,
+    rng: Xoshiro256,
+    q: EventQueue,
+    devices: Vec<SimDevice>,
+    active: ActiveSet,
+    clouds: Vec<SimCloud>,
+    latency_by_profile: BTreeMap<&'static str, Histogram>,
+    devices_by_profile: BTreeMap<&'static str, usize>,
+    counters: Counters,
+    horizon_reached: bool,
+}
+
+impl<'a> Sim<'a> {
+    fn new(cfg: &'a SimConfig) -> Result<Sim<'a>> {
+        let spec = zoo::by_name(&cfg.model)
+            .with_context(|| format!("unknown model {}", cfg.model))?;
+        match cfg.arrival {
+            crate::workload::Arrival::ClosedLoop => {
+                bail!("sim needs an open-loop arrival process (ClosedLoop would generate unboundedly at t=0)")
+            }
+            crate::workload::Arrival::Poisson { rps } | crate::workload::Arrival::Uniform { rps } => {
+                if !(rps > 0.0) || !rps.is_finite() {
+                    bail!("sim arrival rate must be positive and finite, got {rps} rps");
+                }
+            }
+            crate::workload::Arrival::Diurnal { base_rps, peak_rps, .. } => {
+                let envelope = base_rps.max(peak_rps);
+                if !(envelope > 0.0) || !envelope.is_finite() {
+                    bail!("sim diurnal arrival needs a positive finite peak rate, got base {base_rps} / peak {peak_rps} rps");
+                }
+            }
+        }
+        if !(cfg.duration_s > 0.0) || !cfg.duration_s.is_finite() {
+            bail!("sim duration must be positive and finite, got {}", cfg.duration_s);
+        }
+        if cfg.fleet.initial_count() == 0 {
+            bail!("sim needs at least one initial device");
+        }
+        Ok(Sim {
+            cfg,
+            model: spec.analyze(1),
+            rng: Xoshiro256::seed_from_u64(cfg.seed),
+            q: EventQueue::new(),
+            devices: Vec::new(),
+            active: ActiveSet::default(),
+            clouds: (0..cfg.clouds.max(1))
+                .map(|_| SimCloud::new(cfg.cloud_servers.max(1)))
+                .collect(),
+            latency_by_profile: BTreeMap::new(),
+            devices_by_profile: BTreeMap::new(),
+            counters: Counters::default(),
+            horizon_reached: false,
+        })
+    }
+
+    /// Create one device (fleet member `member`), register it as active,
+    /// and — under churn — schedule its departure.
+    fn spawn_device(&mut self, at: SimTime, member: usize) {
+        let (profile, trace, soc) = self.cfg.fleet.instantiate(member, &mut self.rng);
+        let id = self.devices.len();
+        let cloud = id % self.clouds.len();
+        let d = SimDevice::new(profile, trace, cloud, soc, at, &self.model, &self.cfg.planner);
+        *self.devices_by_profile.entry(profile.name).or_insert(0) += 1;
+        self.devices.push(d);
+        self.active.insert(id);
+        if let Some(churn) = &self.cfg.churn {
+            let lifetime = self.rng.next_exp(1.0 / churn.mean_lifetime_s.max(1e-9));
+            self.q.schedule(at + lifetime, Event::Leave { device: id });
+        }
+    }
+
+    /// Deactivate a device, dropping whatever it had queued locally.
+    fn deactivate(&mut self, d: usize) {
+        self.devices[d].active = false;
+        self.counters.dropped += self.devices[d].backlog.len() as u64;
+        self.devices[d].backlog.clear();
+        self.active.remove(d);
+    }
+
+    /// Start a request (issued at `issued`) on an idle device `d` at `now`;
+    /// schedules its uplink-complete event.
+    fn start_on(&mut self, d: usize, issued: SimTime, now: SimTime) {
+        self.devices[d].apply_idle_drain(now, self.cfg.idle_drain_w);
+        match self.devices[d].start_request(now) {
+            Some(cost) => {
+                self.q.schedule_in(
+                    cost.head_s + cost.upload_s,
+                    Event::Uplinked { device: d, issued, service_s: cost.service_s },
+                );
+            }
+            None => {
+                self.counters.dropped += 1;
+                self.counters.exhausted += 1;
+                self.deactivate(d);
+            }
+        }
+    }
+
+    fn on_arrival(&mut self, now: SimTime) {
+        if self.horizon_reached {
+            return;
+        }
+        let gap = next_interarrival(self.cfg.arrival, now, &mut self.rng);
+        self.q.schedule(now + gap, Event::Arrival);
+        self.counters.generated += 1;
+        let pick = self.active.sample(&mut self.rng);
+        match pick {
+            None => self.counters.dropped += 1,
+            Some(d) => {
+                if self.devices[d].busy {
+                    self.devices[d].backlog.push_back(now);
+                } else {
+                    self.start_on(d, now, now);
+                }
+            }
+        }
+    }
+
+    fn on_uplinked(&mut self, device: usize, issued: SimTime, service_s: f64, now: SimTime) {
+        self.devices[device].busy = false;
+        let c = self.devices[device].cloud;
+        if let Some(svc) = self.clouds[c].offer(device, issued, now, service_s) {
+            self.q.schedule_in(svc, Event::CloudDone { cloud: c, device, issued });
+        }
+        // The drain from this request may have crossed a battery band
+        // boundary — the event-driven re-split trigger.
+        if self.devices[device].active {
+            if self.devices[device].exhausted() {
+                self.counters.exhausted += 1;
+                self.deactivate(device);
+            } else {
+                let band = BatteryBand::of_fraction(self.devices[device].soc());
+                if band != self.devices[device].band {
+                    self.devices[device].replan(now, &self.model);
+                }
+            }
+        }
+        // Serial device: pick up the next locally queued request.
+        if self.devices[device].active {
+            if let Some(issued2) = self.devices[device].backlog.pop_front() {
+                self.start_on(device, issued2, now);
+            }
+        }
+    }
+
+    fn on_cloud_done(&mut self, cloud: usize, device: usize, issued: SimTime, now: SimTime) {
+        self.counters.completed += 1;
+        self.devices[device].served += 1;
+        self.latency_by_profile
+            .entry(self.devices[device].profile.name)
+            .or_insert_with(Histogram::new)
+            .record_secs(now - issued);
+        if let Some(next) = self.clouds[cloud].finish(now) {
+            self.q.schedule_in(
+                next.service_s,
+                Event::CloudDone { cloud, device: next.device, issued: next.issued },
+            );
+        }
+    }
+
+    fn on_reoptimize(&mut self, now: SimTime) {
+        if self.horizon_reached {
+            return;
+        }
+        for d in self.active.snapshot() {
+            self.devices[d].apply_idle_drain(now, self.cfg.idle_drain_w);
+            if self.devices[d].exhausted() {
+                self.counters.exhausted += 1;
+                self.deactivate(d);
+            } else {
+                self.devices[d].maybe_replan(now, &self.model, self.cfg.drift_threshold);
+            }
+        }
+        self.q.schedule_in(self.cfg.reopt_period_s, Event::Reoptimize);
+    }
+
+    fn on_join(&mut self, now: SimTime) {
+        if self.horizon_reached {
+            return;
+        }
+        if let Some(churn) = self.cfg.churn.clone() {
+            let member = self.devices.len();
+            self.spawn_device(now, member);
+            self.counters.joined += 1;
+            self.q.schedule_in(self.rng.next_exp(churn.joins_per_s), Event::Join);
+        }
+    }
+
+    fn on_leave(&mut self, device: usize) {
+        if self.devices[device].active {
+            self.counters.left += 1;
+            self.deactivate(device);
+        }
+    }
+
+    fn run_loop(&mut self) {
+        for member in 0..self.cfg.fleet.initial_count() {
+            self.spawn_device(0.0, member);
+        }
+        let first = next_interarrival(self.cfg.arrival, 0.0, &mut self.rng);
+        self.q.schedule(first, Event::Arrival);
+        if let Some(churn) = &self.cfg.churn {
+            if churn.joins_per_s > 0.0 {
+                let gap = self.rng.next_exp(churn.joins_per_s);
+                self.q.schedule(gap, Event::Join);
+            }
+        }
+        if self.cfg.reopt_period_s > 0.0 {
+            self.q.schedule(self.cfg.reopt_period_s, Event::Reoptimize);
+        }
+        self.q.schedule(self.cfg.duration_s, Event::Horizon);
+
+        while let Some((now, event)) = self.q.pop() {
+            match event {
+                Event::Horizon => self.horizon_reached = true,
+                Event::Arrival => self.on_arrival(now),
+                Event::Uplinked { device, issued, service_s } => {
+                    self.on_uplinked(device, issued, service_s, now)
+                }
+                Event::CloudDone { cloud, device, issued } => {
+                    self.on_cloud_done(cloud, device, issued, now)
+                }
+                Event::Reoptimize => self.on_reoptimize(now),
+                Event::Join => self.on_join(now),
+                Event::Leave { device } => self.on_leave(device),
+            }
+        }
+    }
+
+    fn report(self, wall: Duration) -> SimReport {
+        let latency = Histogram::new();
+        let mut per_profile = Vec::new();
+        for (name, hist) in self.latency_by_profile {
+            latency.merge(&hist);
+            let served = self
+                .devices
+                .iter()
+                .filter(|d| d.profile.name == name)
+                .map(|d| d.served)
+                .sum();
+            per_profile.push(ProfileSlice {
+                name,
+                devices: self.devices_by_profile.get(name).copied().unwrap_or(0),
+                served,
+                latency: hist,
+            });
+        }
+        let queue_delay = Histogram::new();
+        let clouds: Vec<CloudSlice> = self
+            .clouds
+            .iter()
+            .map(|c| {
+                queue_delay.merge(&c.queue_delay);
+                CloudSlice {
+                    servers: c.servers,
+                    served: c.served,
+                    utilization: c.utilization(self.cfg.duration_s),
+                    peak_queue: c.peak_queue(),
+                }
+            })
+            .collect();
+        let mut split_counts: BTreeMap<usize, u64> = BTreeMap::new();
+        for d in self.devices.iter().filter(|d| d.active) {
+            *split_counts.entry(d.l1).or_insert(0) += 1;
+        }
+        SimReport {
+            model: self.cfg.model.clone(),
+            seed: self.cfg.seed,
+            duration_s: self.cfg.duration_s,
+            sim_end_s: self.q.now(),
+            wall,
+            events: self.q.processed(),
+            devices_created: self.devices.len(),
+            devices_active_end: self.active.len(),
+            joined: self.counters.joined,
+            left: self.counters.left,
+            batteries_exhausted: self.counters.exhausted,
+            generated: self.counters.generated,
+            completed: self.counters.completed,
+            dropped: self.counters.dropped,
+            latency,
+            queue_delay,
+            per_profile,
+            clouds,
+            resplits: self.devices.iter().map(|d| d.resplits).sum(),
+            client_energy_j: self.devices.iter().map(|d| d.client_energy_j).sum(),
+            upload_energy_j: self.devices.iter().map(|d| d.upload_energy_j).sum(),
+            split_distribution: split_counts.into_iter().collect(),
+        }
+    }
+}
+
+/// Run a scenario to completion (all in-flight work drained past the
+/// horizon) and report.
+pub fn run(cfg: &SimConfig) -> Result<SimReport> {
+    let wall_start = Instant::now();
+    let mut sim = Sim::new(cfg)?;
+    sim.run_loop();
+    Ok(sim.report(wall_start.elapsed()))
+}

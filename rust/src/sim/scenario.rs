@@ -1,0 +1,275 @@
+//! Scenario definitions and presets for the fleet simulator.
+//!
+//! A [`SimConfig`] fully determines a run (together with its seed): the
+//! fleet composition, workload shape, cloud capacity, adaptation policy
+//! and churn. Two presets cover the interesting extremes:
+//!
+//! * [`two_phone_fleet`] — the paper's §VI testbed as the live
+//!   `coordinator::fleet` path builds it (Samsung J6 at the base
+//!   bandwidth, Redmi Note 8 at 3×), used by the live-parity tests;
+//! * [`city_scale`] — 10k+ heterogeneous devices under a diurnal load
+//!   swing with churn, per-device bandwidth wobble and battery drain —
+//!   the scale the ROADMAP aims at and the testbed cannot reach.
+
+use std::time::Duration;
+
+use crate::device::{profiles, ComputeProfile};
+use crate::netsim::BandwidthTrace;
+use crate::optimizer::Nsga2Params;
+use crate::sim::device::Planner;
+use crate::util::rng::Xoshiro256;
+use crate::workload::Arrival;
+
+/// Device churn: Poisson joins, exponential lifetimes.
+#[derive(Clone, Debug)]
+pub struct ChurnConfig {
+    pub joins_per_s: f64,
+    pub mean_lifetime_s: f64,
+}
+
+/// One explicitly configured fleet member.
+#[derive(Clone, Debug)]
+pub struct ExplicitMember {
+    pub profile: &'static ComputeProfile,
+    pub bandwidth_mbps: f64,
+    pub initial_soc: f64,
+}
+
+/// How the fleet is populated.
+#[derive(Clone, Debug)]
+pub enum FleetSpec {
+    /// Exactly these members, in order (churn joins cycle the list).
+    Explicit(Vec<ExplicitMember>),
+    /// `devices` members sampled from the template.
+    Sampled {
+        devices: usize,
+        profiles: Vec<&'static ComputeProfile>,
+        /// Per-device constant bandwidth drawn uniformly from this range.
+        bandwidth_mbps: (f64, f64),
+        /// Initial state of charge drawn uniformly from this range.
+        initial_soc: (f64, f64),
+        /// `Some(p)`: give each device a cyclic 3-step bandwidth trace
+        /// (nominal → congested → good) with period `p`, so drift-driven
+        /// re-optimisation has something to chase.
+        wobble_period_s: Option<f64>,
+    },
+}
+
+impl FleetSpec {
+    /// Devices present at t = 0.
+    pub fn initial_count(&self) -> usize {
+        match self {
+            FleetSpec::Explicit(members) => members.len(),
+            FleetSpec::Sampled { devices, .. } => *devices,
+        }
+    }
+
+    /// Materialise fleet member `member` (deterministic given the RNG
+    /// state): its profile, link trace, and initial state of charge.
+    pub fn instantiate(
+        &self,
+        member: usize,
+        rng: &mut Xoshiro256,
+    ) -> (&'static ComputeProfile, BandwidthTrace, f64) {
+        match self {
+            FleetSpec::Explicit(members) => {
+                let m = &members[member % members.len()];
+                (m.profile, BandwidthTrace::constant(m.bandwidth_mbps), m.initial_soc)
+            }
+            FleetSpec::Sampled {
+                profiles,
+                bandwidth_mbps: (bw_lo, bw_hi),
+                initial_soc: (soc_lo, soc_hi),
+                wobble_period_s,
+                ..
+            } => {
+                let profile = profiles[rng.gen_range(0, profiles.len() - 1)];
+                let bw = bw_lo + (bw_hi - bw_lo) * rng.next_f64();
+                let soc = soc_lo + (soc_hi - soc_lo) * rng.next_f64();
+                let trace = match wobble_period_s {
+                    None => BandwidthTrace::constant(bw),
+                    Some(p) => BandwidthTrace::steps(
+                        Duration::from_secs_f64(*p),
+                        &[bw, bw * 0.45, bw * 1.4],
+                        Duration::from_secs_f64(p * 12.0),
+                    ),
+                };
+                (profile, trace, soc)
+            }
+        }
+    }
+}
+
+/// Full description of one simulation run.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub model: String,
+    /// Virtual horizon: no new work is issued after this time; in-flight
+    /// work drains.
+    pub duration_s: f64,
+    pub seed: u64,
+    /// Fleet-level request arrival process.
+    pub arrival: Arrival,
+    pub clouds: usize,
+    /// Parallel servers per cloud (`c` of the M/G/c queue).
+    pub cloud_servers: usize,
+    pub planner: Planner,
+    /// Period of the fleet-wide re-optimisation sweep; 0 disables it.
+    pub reopt_period_s: f64,
+    /// Relative bandwidth drift that triggers a re-plan during the sweep.
+    pub drift_threshold: f64,
+    /// Background battery draw per device, Watts (screen, radios, other
+    /// apps). Compressed-day scenarios scale this up — see [`city_scale`].
+    pub idle_drain_w: f64,
+    pub fleet: FleetSpec,
+    pub churn: Option<ChurnConfig>,
+}
+
+/// The paper's two-phone testbed, matching `main.rs`'s live `fleet`
+/// subcommand: a Samsung J6 at `bandwidth_mbps` and a Redmi Note 8 at 3×,
+/// splits planned by full Algorithm 1. Light open-loop load, no churn, no
+/// drift — the configuration `tests/sim_determinism.rs` compares against
+/// the analytical fleet latency.
+pub fn two_phone_fleet(
+    model: &str,
+    bandwidth_mbps: f64,
+    nsga2: Nsga2Params,
+    seed: u64,
+) -> SimConfig {
+    SimConfig {
+        model: model.to_string(),
+        duration_s: 120.0,
+        seed,
+        arrival: Arrival::Poisson { rps: 0.4 },
+        clouds: 1,
+        cloud_servers: 1,
+        planner: Planner::SmartSplit(nsga2),
+        reopt_period_s: 0.0,
+        drift_threshold: 0.25,
+        idle_drain_w: 0.0,
+        fleet: FleetSpec::Explicit(vec![
+            ExplicitMember {
+                profile: profiles::samsung_j6(),
+                bandwidth_mbps,
+                initial_soc: 1.0,
+            },
+            ExplicitMember {
+                profile: profiles::redmi_note8(),
+                bandwidth_mbps: bandwidth_mbps * 3.0,
+                initial_soc: 1.0,
+            },
+        ]),
+        churn: None,
+    }
+}
+
+/// A city block of `devices` heterogeneous phones over one compressed day:
+/// sinusoidal diurnal load (trough 0.02·N rps, peak 0.1·N rps), per-device
+/// bandwidth wobble, battery bands engaged from a spread of initial
+/// charge, and slow churn. `idle_drain_w` is scaled as if `duration_s` of
+/// virtual time stood for 24 h of phone standby, so state-of-charge moves
+/// visibly within the run.
+pub fn city_scale(model: &str, devices: usize, duration_s: f64, seed: u64) -> SimConfig {
+    let n = devices as f64;
+    // ~0.2 W of real standby draw, compressed into the shortened day.
+    let compression = (86_400.0 / duration_s.max(1.0)).clamp(1.0, 1000.0);
+    SimConfig {
+        model: model.to_string(),
+        duration_s,
+        seed,
+        arrival: Arrival::Diurnal {
+            base_rps: 0.02 * n,
+            peak_rps: 0.1 * n,
+            period: Duration::from_secs_f64(duration_s),
+        },
+        clouds: (devices / 500).max(1),
+        cloud_servers: 8,
+        planner: Planner::Topsis,
+        reopt_period_s: duration_s / 10.0,
+        drift_threshold: 0.25,
+        idle_drain_w: 0.2 * compression,
+        fleet: FleetSpec::Sampled {
+            devices,
+            profiles: vec![profiles::samsung_j6(), profiles::redmi_note8()],
+            bandwidth_mbps: (2.0, 60.0),
+            initial_soc: (0.15, 1.0),
+            wobble_period_s: Some(duration_s / 6.0),
+        },
+        churn: Some(ChurnConfig {
+            joins_per_s: 0.05 * n / duration_s,
+            mean_lifetime_s: duration_s * 2.0,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_members_cycle() {
+        let spec = FleetSpec::Explicit(vec![
+            ExplicitMember {
+                profile: profiles::samsung_j6(),
+                bandwidth_mbps: 10.0,
+                initial_soc: 1.0,
+            },
+            ExplicitMember {
+                profile: profiles::redmi_note8(),
+                bandwidth_mbps: 30.0,
+                initial_soc: 0.8,
+            },
+        ]);
+        assert_eq!(spec.initial_count(), 2);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let (p0, t0, s0) = spec.instantiate(0, &mut rng);
+        assert_eq!(p0.name, "samsung_j6");
+        assert_eq!(t0.at(Duration::ZERO), 10.0);
+        assert_eq!(s0, 1.0);
+        // member 2 cycles back to member 0's template.
+        let (p2, _, _) = spec.instantiate(2, &mut rng);
+        assert_eq!(p2.name, "samsung_j6");
+    }
+
+    #[test]
+    fn sampled_members_deterministic_and_in_range() {
+        let spec = FleetSpec::Sampled {
+            devices: 100,
+            profiles: vec![profiles::samsung_j6(), profiles::redmi_note8()],
+            bandwidth_mbps: (2.0, 60.0),
+            initial_soc: (0.15, 1.0),
+            wobble_period_s: Some(100.0),
+        };
+        let mut a = Xoshiro256::seed_from_u64(9);
+        let mut b = Xoshiro256::seed_from_u64(9);
+        for m in 0..100 {
+            let (pa, ta, sa) = spec.instantiate(m, &mut a);
+            let (pb, tb, sb) = spec.instantiate(m, &mut b);
+            assert_eq!(pa.name, pb.name);
+            assert_eq!(sa, sb);
+            let bw = ta.at(Duration::ZERO);
+            assert_eq!(bw, tb.at(Duration::ZERO));
+            assert!((2.0..=60.0).contains(&bw), "bw {bw}");
+            assert!((0.15..=1.0).contains(&sa), "soc {sa}");
+            // Wobble: the trace actually moves.
+            assert_ne!(ta.at(Duration::from_secs(100)), bw);
+        }
+    }
+
+    #[test]
+    fn city_scale_config_is_coherent() {
+        let cfg = city_scale("alexnet", 10_000, 600.0, 7);
+        assert_eq!(cfg.fleet.initial_count(), 10_000);
+        assert!(cfg.clouds >= 1 && cfg.cloud_servers >= 1);
+        match cfg.arrival {
+            Arrival::Diurnal { base_rps, peak_rps, .. } => {
+                assert!(base_rps > 0.0 && peak_rps > base_rps);
+            }
+            other => panic!("city scale should be diurnal, got {other:?}"),
+        }
+        assert!(cfg.churn.is_some());
+        assert!(cfg.idle_drain_w > 0.0);
+        // Small fleets still get at least one cloud.
+        assert_eq!(city_scale("alexnet", 10, 60.0, 7).clouds, 1);
+    }
+}

@@ -157,6 +157,24 @@ impl Parsed {
             .unwrap_or_else(|_| panic!("--{name} expects an integer, got {:?}", self.get(name)))
     }
 
+    /// Duration in seconds, accepting a bare number or an `s`/`m`/`h`
+    /// suffix: `90`, `90s`, `10m`, `2h` (simulation horizons are most
+    /// naturally written in minutes/hours).
+    pub fn get_duration_s(&self, name: &str) -> f64 {
+        let v = self.get(name).trim();
+        let (num, mult) = match v.as_bytes().last().copied() {
+            Some(b's') => (&v[..v.len() - 1], 1.0),
+            Some(b'm') => (&v[..v.len() - 1], 60.0),
+            Some(b'h') => (&v[..v.len() - 1], 3600.0),
+            _ => (v, 1.0),
+        };
+        let n: f64 = num
+            .trim()
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a duration like 90, 90s, 10m or 2h, got {v:?}"));
+        n * mult
+    }
+
     /// Comma-separated list.
     pub fn get_list(&self, name: &str) -> Vec<String> {
         let v = self.get(name);
@@ -223,5 +241,31 @@ mod tests {
         let c = Cli::new("t").opt("models", "a,b , c", "list");
         let p = c.parse(&[]).unwrap();
         assert_eq!(p.get_list("models"), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn duration_parsing() {
+        let c = Cli::new("t").opt("dur", "90", "duration");
+        for (arg, expect) in [
+            ("90", 90.0),
+            ("45s", 45.0),
+            ("10m", 600.0),
+            ("1.5h", 5400.0),
+            ("0.25m", 15.0),
+        ] {
+            let p = c.parse(&[format!("--dur={arg}")]).unwrap();
+            assert_eq!(p.get_duration_s("dur"), expect, "arg {arg}");
+        }
+        // Default path too.
+        let p = c.parse(&[]).unwrap();
+        assert_eq!(p.get_duration_s("dur"), 90.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects a duration")]
+    fn duration_rejects_garbage() {
+        let c = Cli::new("t").opt("dur", "90", "duration");
+        let p = c.parse(&["--dur=soon".to_string()]).unwrap();
+        p.get_duration_s("dur");
     }
 }

@@ -9,8 +9,6 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use thiserror::Error;
-
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
     Null,
@@ -21,25 +19,38 @@ pub enum Json {
     Obj(Vec<(String, Json)>),
 }
 
-#[derive(Error, Debug)]
+/// Parse/access errors (`thiserror` is unavailable offline — DESIGN.md §4,
+/// so `Display`/`Error` are hand-rolled).
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character {0:?} at byte {1}")]
     Unexpected(char, usize),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid \\u escape at byte {0}")]
     BadUnicode(usize),
-    #[error("trailing garbage at byte {0}")]
     Trailing(usize),
-    #[error("type error: expected {expected}, found {found}")]
     Type { expected: &'static str, found: &'static str },
-    #[error("missing key {0:?}")]
     MissingKey(String),
-    #[error("index {0} out of bounds (len {1})")]
     OutOfBounds(usize, usize),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Eof(i) => write!(f, "unexpected end of input at byte {i}"),
+            JsonError::Unexpected(c, i) => write!(f, "unexpected character {c:?} at byte {i}"),
+            JsonError::BadNumber(i) => write!(f, "invalid number at byte {i}"),
+            JsonError::BadUnicode(i) => write!(f, "invalid \\u escape at byte {i}"),
+            JsonError::Trailing(i) => write!(f, "trailing garbage at byte {i}"),
+            JsonError::Type { expected, found } => {
+                write!(f, "type error: expected {expected}, found {found}")
+            }
+            JsonError::MissingKey(k) => write!(f, "missing key {k:?}"),
+            JsonError::OutOfBounds(i, len) => write!(f, "index {i} out of bounds (len {len})"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 pub type Result<T> = std::result::Result<T, JsonError>;
 

@@ -37,6 +37,53 @@ pub enum Arrival {
     Poisson { rps: f64 },
     /// Open loop, uniform spacing at `rps`.
     Uniform { rps: f64 },
+    /// Open loop, nonhomogeneous Poisson with sinusoidal daily modulation:
+    /// the rate starts at `base_rps` (night trough), peaks at `peak_rps`
+    /// half a `period` in, and returns to `base_rps` at the full period —
+    /// the diurnal load swing the city-scale simulator and live benches
+    /// model.
+    Diurnal { base_rps: f64, peak_rps: f64, period: Duration },
+}
+
+impl Arrival {
+    /// Instantaneous arrival rate at `t_s` seconds from workload start
+    /// (requests/second). `ClosedLoop` has no meaningful open-loop rate
+    /// and reports `f64::INFINITY`.
+    pub fn rate_at(&self, t_s: f64) -> f64 {
+        match *self {
+            Arrival::ClosedLoop => f64::INFINITY,
+            Arrival::Poisson { rps } | Arrival::Uniform { rps } => rps,
+            Arrival::Diurnal { base_rps, peak_rps, period } => {
+                let p = period.as_secs_f64().max(f64::MIN_POSITIVE);
+                let phase = std::f64::consts::TAU * t_s / p;
+                base_rps + (peak_rps - base_rps) * 0.5 * (1.0 - phase.cos())
+            }
+        }
+    }
+}
+
+/// Draw the next inter-arrival gap for a process observed at `now_s`.
+/// `Diurnal` uses Lewis–Shedler thinning against the envelope rate
+/// `max(base_rps, peak_rps)`, so generated gaps respect the instantaneous
+/// rate at every point of the cycle. Shared by [`generate`] and the
+/// event-driven `sim::` workload source.
+pub fn next_interarrival(arrival: Arrival, now_s: f64, rng: &mut Xoshiro256) -> f64 {
+    match arrival {
+        Arrival::ClosedLoop => 0.0,
+        Arrival::Poisson { rps } => rng.next_exp(rps),
+        Arrival::Uniform { rps } => 1.0 / rps,
+        Arrival::Diurnal { base_rps, peak_rps, .. } => {
+            let envelope = base_rps.max(peak_rps);
+            assert!(envelope > 0.0, "diurnal arrival needs a positive rate");
+            let mut t = now_s;
+            loop {
+                t += rng.next_exp(envelope);
+                if rng.next_f64() * envelope < arrival.rate_at(t) {
+                    return t - now_s;
+                }
+            }
+        }
+    }
 }
 
 /// Generate `n` requests under the arrival process.
@@ -45,12 +92,7 @@ pub fn generate(n: usize, arrival: Arrival, seed: u64) -> Vec<Request> {
     let mut t = 0.0f64;
     (0..n)
         .map(|i| {
-            let dt = match arrival {
-                Arrival::ClosedLoop => 0.0,
-                Arrival::Poisson { rps } => rng.next_exp(rps),
-                Arrival::Uniform { rps } => 1.0 / rps,
-            };
-            t += dt;
+            t += next_interarrival(arrival, t, &mut rng);
             Request {
                 id: i as u64,
                 arrival: Duration::from_secs_f64(t),
@@ -105,6 +147,78 @@ mod tests {
             let expect = 0.1 * (i + 1) as f64;
             assert!((r.arrival.as_secs_f64() - expect).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn diurnal_rate_endpoints() {
+        let a = Arrival::Diurnal {
+            base_rps: 5.0,
+            peak_rps: 50.0,
+            period: Duration::from_secs(200),
+        };
+        assert!((a.rate_at(0.0) - 5.0).abs() < 1e-9);
+        assert!((a.rate_at(100.0) - 50.0).abs() < 1e-9);
+        assert!((a.rate_at(200.0) - 5.0).abs() < 1e-9);
+        // Rate never leaves [base, peak].
+        for i in 0..400 {
+            let r = a.rate_at(i as f64);
+            assert!((5.0 - 1e-9..=50.0 + 1e-9).contains(&r), "t={i} r={r}");
+        }
+    }
+
+    #[test]
+    fn diurnal_interarrivals_track_instantaneous_rate() {
+        let arrival = Arrival::Diurnal {
+            base_rps: 5.0,
+            peak_rps: 50.0,
+            period: Duration::from_secs(200),
+        };
+        // ~one full period at the average rate of 27.5 rps.
+        let reqs = generate(5500, arrival, 42);
+        let count_in = |lo: f64, hi: f64| {
+            reqs.iter()
+                .filter(|r| {
+                    let t = r.arrival.as_secs_f64();
+                    t >= lo && t < hi
+                })
+                .count() as f64
+        };
+        let expected_in = |lo: f64, hi: f64| {
+            // Numeric ∫ rate dt over the window.
+            let steps = 1000;
+            let dt = (hi - lo) / steps as f64;
+            (0..steps).map(|i| arrival.rate_at(lo + (i as f64 + 0.5) * dt) * dt).sum::<f64>()
+        };
+        // Trough window (rate ≈ 5–9 rps) vs peak window (rate ≈ 50 rps).
+        let trough = count_in(0.0, 20.0);
+        let trough_exp = expected_in(0.0, 20.0);
+        assert!(
+            (trough - trough_exp).abs() / trough_exp < 0.30,
+            "trough: saw {trough}, expected {trough_exp}"
+        );
+        let peak = count_in(90.0, 110.0);
+        let peak_exp = expected_in(90.0, 110.0);
+        assert!(
+            (peak - peak_exp).abs() / peak_exp < 0.15,
+            "peak: saw {peak}, expected {peak_exp}"
+        );
+        // The swing itself: the peak window must be several times busier.
+        assert!(peak > 3.0 * trough, "peak {peak} vs trough {trough}");
+    }
+
+    #[test]
+    fn diurnal_generation_is_deterministic() {
+        let a = Arrival::Diurnal {
+            base_rps: 1.0,
+            peak_rps: 10.0,
+            period: Duration::from_secs(60),
+        };
+        let x = generate(200, a, 7);
+        let y = generate(200, a, 7);
+        assert_eq!(
+            x.iter().map(|r| r.arrival).collect::<Vec<_>>(),
+            y.iter().map(|r| r.arrival).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -1,0 +1,72 @@
+//! Property tests for the battery-band policy boundaries
+//! (`coordinator::battery::BatteryBand`), driven by the in-repo
+//! `util::prop` engine.
+
+use smartsplit::coordinator::battery::BatteryBand;
+use smartsplit::prop_assert;
+use smartsplit::util::prop::run_prop;
+
+#[test]
+fn band_edges_are_exact() {
+    // The 0.2 / 0.5 edges belong to the *lower* band: bands are defined by
+    // strict `>` comparisons, so exactly-at-threshold charge already gets
+    // the more aggressive energy policy.
+    assert_eq!(BatteryBand::of_fraction(0.5), BatteryBand::Saver);
+    assert_eq!(BatteryBand::of_fraction(0.5 + 1e-12), BatteryBand::Comfort);
+    assert_eq!(BatteryBand::of_fraction(0.2), BatteryBand::Critical);
+    assert_eq!(BatteryBand::of_fraction(0.2 + 1e-12), BatteryBand::Saver);
+    assert_eq!(BatteryBand::of_fraction(0.0), BatteryBand::Critical);
+    assert_eq!(BatteryBand::of_fraction(1.0), BatteryBand::Comfort);
+}
+
+#[test]
+fn prop_energy_weight_monotone_nonincreasing_in_soc() {
+    run_prop("energy weight monotone in SoC", 500, |g| {
+        let a = g.f64_in(0.0, 1.0);
+        let b = g.f64_in(0.0, 1.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let w_lo = BatteryBand::of_fraction(lo).energy_weight();
+        let w_hi = BatteryBand::of_fraction(hi).energy_weight();
+        prop_assert!(
+            w_lo >= w_hi,
+            "soc {lo} weight {w_lo} < soc {hi} weight {w_hi}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_band_of_fraction_total_and_consistent() {
+    // Every SoC (including out-of-range garbage a buggy meter could
+    // report) maps to a band, and the band agrees with the interval
+    // definition.
+    run_prop("band total + interval-consistent", 500, |g| {
+        let soc = g.f64_in(-0.5, 1.5);
+        let band = BatteryBand::of_fraction(soc);
+        let expect = if soc > 0.5 {
+            BatteryBand::Comfort
+        } else if soc > 0.2 {
+            BatteryBand::Saver
+        } else {
+            BatteryBand::Critical
+        };
+        prop_assert!(band == expect, "soc {soc}: got {band:?}, expected {expect:?}");
+        prop_assert!(
+            band.energy_weight() >= 1.0,
+            "weight below neutral at soc {soc}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weights_cover_expected_values() {
+    // The three bands map onto exactly {1, 2, 4} — a re-tuned policy must
+    // update the battery tests knowingly.
+    run_prop("weights in {1,2,4}", 100, |g| {
+        let soc = g.f64_in(0.0, 1.0);
+        let w = BatteryBand::of_fraction(soc).energy_weight();
+        prop_assert!(w == 1.0 || w == 2.0 || w == 4.0, "weight {w} at soc {soc}");
+        Ok(())
+    });
+}

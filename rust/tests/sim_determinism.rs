@@ -1,0 +1,149 @@
+//! Fleet-simulator integration: (a) bit-for-bit determinism under a fixed
+//! seed, (b) live-path parity — a simulated two-phone fleet must agree
+//! with the analytical (`PerfModel`) end-to-end latency that the live
+//! `coordinator::fleet` path plans with, within 5%.
+
+use smartsplit::device::profiles;
+use smartsplit::models::zoo;
+use smartsplit::optimizer::{smartsplit, Nsga2Params};
+use smartsplit::perfmodel::{NetworkEnv, PerfModel};
+use smartsplit::sim::{self, Planner};
+use smartsplit::workload::Arrival;
+
+fn fast_nsga2(seed: u64) -> Nsga2Params {
+    Nsga2Params { pop_size: 40, generations: 40, seed, ..Default::default() }
+}
+
+#[test]
+fn city_scale_runs_are_bit_identical_under_one_seed() {
+    let cfg = sim::city_scale("alexnet", 1500, 120.0, 42);
+    let a = sim::run(&cfg).expect("sim run a");
+    let b = sim::run(&cfg).expect("sim run b");
+    assert_eq!(a.summary(), b.summary());
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.generated, b.generated);
+    assert_eq!(a.devices_created, b.devices_created);
+    assert_eq!(a.split_distribution, b.split_distribution);
+    // And the run actually did city-scale things.
+    assert!(a.completed > 1000, "only {} completed", a.completed);
+    assert!(a.devices_created >= 1500);
+    assert!(a.latency.count() == a.completed);
+}
+
+#[test]
+fn different_seeds_diverge() {
+    let mut cfg = sim::city_scale("alexnet", 300, 60.0, 1);
+    let a = sim::run(&cfg).expect("sim run");
+    cfg.seed = 2;
+    let b = sim::run(&cfg).expect("sim run");
+    assert_ne!(a.summary(), b.summary());
+}
+
+#[test]
+fn request_conservation_holds() {
+    let cfg = sim::city_scale("alexnet", 400, 90.0, 11);
+    let r = sim::run(&cfg).expect("sim run");
+    // Every generated request either completed or was dropped by the time
+    // the queue drained.
+    assert_eq!(r.generated, r.completed + r.dropped);
+    assert_eq!(r.devices_created as u64, 400 + r.joined);
+    assert_eq!(
+        r.completed,
+        r.clouds.iter().map(|c| c.served).sum::<u64>(),
+        "cloud accounting disagrees with completions"
+    );
+}
+
+#[test]
+fn two_device_fleet_matches_perfmodel_latency_within_5pct() {
+    // Same planning inputs as the live `fleet` subcommand: J6 at the base
+    // bandwidth, Redmi Note 8 at 3x, splits from full Algorithm 1.
+    let base_bw = 10.0;
+    let mut cfg = sim::two_phone_fleet("alexnet", base_bw, fast_nsga2(7), 7);
+    // Light open-loop load so queueing noise stays far below the 5% gate
+    // (per-device utilisation ~3%), long enough for a meaningful sample.
+    cfg.arrival = Arrival::Poisson { rps: 0.05 };
+    cfg.duration_s = 1200.0;
+    let report = sim::run(&cfg).expect("sim run");
+    assert!(report.completed > 20, "too few samples: {}", report.completed);
+
+    let profile = zoo::alexnet().analyze(1);
+    for (device_profile, bw) in
+        [(profiles::samsung_j6(), base_bw), (profiles::redmi_note8(), base_bw * 3.0)]
+    {
+        let pm = PerfModel::new(
+            device_profile,
+            profiles::cloud_server(),
+            device_profile.wifi.unwrap().radio_power(),
+            NetworkEnv::with_bandwidth(bw),
+            &profile,
+        );
+        let decision = smartsplit(&pm, &fast_nsga2(7)).decision;
+        let expected = pm.f1(decision.l1);
+        let slice = report
+            .per_profile
+            .iter()
+            .find(|p| p.name == device_profile.name)
+            .unwrap_or_else(|| panic!("no slice for {}", device_profile.name));
+        assert!(slice.served > 5, "{} served only {}", slice.name, slice.served);
+        let mean = slice.latency.mean_s();
+        let err = (mean - expected).abs() / expected;
+        assert!(
+            err < 0.05,
+            "{}: simulated mean {mean:.4}s vs modelled {expected:.4}s ({:.1}% off)",
+            slice.name,
+            err * 100.0
+        );
+    }
+}
+
+#[test]
+fn two_phone_steady_state_never_resplits() {
+    // Full batteries, constant links, re-optimisation off: the fleet must
+    // keep its planned splits for the whole run.
+    let cfg = sim::two_phone_fleet("alexnet", 10.0, fast_nsga2(3), 3);
+    let r = sim::run(&cfg).expect("sim run");
+    assert_eq!(r.resplits, 0);
+    assert_eq!(r.devices_active_end, 2);
+    assert_eq!(r.batteries_exhausted, 0);
+    assert_eq!(r.generated, r.completed);
+}
+
+#[test]
+fn undersized_cloud_shows_queueing_delay() {
+    // Starve the cloud: one server for 200 devices, every split pinned at
+    // l1=5 so the heavy fc tail lands cloud-side. The M/G/c queue must
+    // register real waiting — the contention term the 2-phone testbed can
+    // never see.
+    let mut cfg = sim::city_scale("alexnet", 200, 60.0, 5);
+    cfg.clouds = 1;
+    cfg.cloud_servers = 1;
+    cfg.churn = None;
+    cfg.planner = Planner::Fixed(5);
+    cfg.arrival = Arrival::Poisson { rps: 40.0 };
+    let r = sim::run(&cfg).expect("sim run");
+    assert!(r.completed > 0);
+    assert!(
+        r.queue_delay.max_s() > 0.0,
+        "no queueing delay despite a starved cloud"
+    );
+    assert!(r.resplits == 0, "pinned fleet must never re-split");
+    assert!(r.clouds[0].utilization > 0.5, "cloud barely used: {}", r.clouds[0].utilization);
+}
+
+#[test]
+fn battery_bands_drive_resplits_under_drain() {
+    // Heavy background drain forces devices across band boundaries; the
+    // event-driven trigger must produce re-splits (or dead batteries)
+    // during the run.
+    let mut cfg = sim::city_scale("alexnet", 100, 120.0, 9);
+    cfg.churn = None;
+    cfg.idle_drain_w = 200.0; // drains ~58% of a J6 battery over the run
+    let r = sim::run(&cfg).expect("sim run");
+    assert!(
+        r.resplits > 0 || r.batteries_exhausted > 0,
+        "no battery response: resplits={} dead={}",
+        r.resplits,
+        r.batteries_exhausted
+    );
+}

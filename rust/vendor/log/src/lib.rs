@@ -1,0 +1,65 @@
+//! Minimal offline stand-in for the `log` facade. Records are written to
+//! stderr whenever `RUST_LOG` is set (any value); otherwise every macro is
+//! a no-op that still type-checks its format arguments.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+static STATE: AtomicU8 = AtomicU8::new(STATE_UNKNOWN);
+const STATE_UNKNOWN: u8 = 0;
+const STATE_OFF: u8 = 1;
+const STATE_ON: u8 = 2;
+
+/// Whether records should be emitted (cached `RUST_LOG` presence check).
+pub fn enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        STATE_ON => true,
+        STATE_OFF => false,
+        _ => {
+            let on = std::env::var_os("RUST_LOG").is_some_and(|v| !v.is_empty());
+            STATE.store(if on { STATE_ON } else { STATE_OFF }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Emit one record (used by the level macros).
+pub fn emit(level: &str, args: std::fmt::Arguments<'_>) {
+    eprintln!("[{level:<5}] {args}");
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { if $crate::enabled() { $crate::emit("ERROR", format_args!($($arg)+)); } };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { if $crate::enabled() { $crate::emit("WARN", format_args!($($arg)+)); } };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { if $crate::enabled() { $crate::emit("INFO", format_args!($($arg)+)); } };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { if $crate::enabled() { $crate::emit("DEBUG", format_args!($($arg)+)); } };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { if $crate::enabled() { $crate::emit("TRACE", format_args!($($arg)+)); } };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_typecheck_and_do_not_panic() {
+        crate::info!("loaded {} layers in {:?}", 21, std::time::Duration::from_millis(3));
+        crate::warn!("request failed: {}", "boom");
+        crate::error!("e");
+        crate::debug!("d {}", 1);
+        crate::trace!("t");
+    }
+}

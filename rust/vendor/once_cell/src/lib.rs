@@ -1,0 +1,54 @@
+//! Minimal offline stand-in for `once_cell`, built on `std::sync::OnceLock`.
+//! Only `sync::Lazy` is provided — the single construct `smartsplit` uses
+//! (static device profiles).
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// Lazily-initialised static value. `F` must be `Fn` (not `FnOnce`)
+    /// so the initialiser can live in a `static`; non-capturing closures
+    /// coerce to the default `fn() -> T`.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy { cell: OnceLock::new(), init }
+        }
+
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(|| (this.init)())
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+
+    impl<T: std::fmt::Debug, F: Fn() -> T> std::fmt::Debug for Lazy<T, F> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_tuple("Lazy").field(Lazy::force(self)).finish()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+
+    static N: Lazy<Vec<u32>> = Lazy::new(|| vec![1, 2, 3]);
+
+    #[test]
+    fn static_lazy_initialises_once_and_derefs() {
+        assert_eq!(N.len(), 3);
+        assert_eq!(N[2], 3);
+        assert_eq!(*N, vec![1, 2, 3]);
+    }
+}

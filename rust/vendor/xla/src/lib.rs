@@ -1,0 +1,222 @@
+//! Offline stand-in for the `xla` PJRT bindings (xla-rs style API).
+//!
+//! The real crate links libxla and executes compiled HLO on a CPU PJRT
+//! client; that toolchain is unavailable in this build environment, and the
+//! AOT artifacts it would load are produced by the python pipeline anyway.
+//! This stub keeps the whole L3 crate compiling and every artifact-free
+//! code path (optimiser, perf model, netsim, sim/, protocol, figures)
+//! fully functional. [`PjRtClient::cpu`] returns an error, which surfaces
+//! through `runtime::Runtime::cpu` exactly where the artifact-gated tests
+//! and benches already skip.
+//!
+//! Like the real bindings, the handle types are intentionally neither
+//! `Send` nor `Sync` (`runtime::executor` documents and relies on this).
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::rc::Rc;
+
+/// Error type: a message, `Display`-formatted at every call site.
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!("xla stub: {what} unavailable offline (build the real xla-rs bindings to execute artifacts; see DESIGN.md §4)"))
+}
+
+/// Marker making a type `!Send + !Sync`, mirroring the Rc-backed handles
+/// of the real bindings.
+type NotThreadsafe = PhantomData<Rc<()>>;
+
+/// Element types this crate exchanges with PJRT (f32 only in smartsplit).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+/// Host-native scalar types accepted by buffer/literal transfers.
+pub trait NativeType: Copy {
+    fn from_f32(v: f32) -> Self;
+    fn to_f32(self) -> f32;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+/// Host-side literal: shape + row-major f32 data.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        bytes: &[u8],
+    ) -> Result<Literal> {
+        let ElementType::F32 = ty;
+        let expect = shape.iter().product::<usize>() * 4;
+        if bytes.len() != expect {
+            return Err(Error(format!(
+                "literal shape {shape:?} needs {expect} bytes, got {}",
+                bytes.len()
+            )));
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Literal { shape: shape.to_vec(), data })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+}
+
+/// Parsed HLO module text (the AOT artifact format).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation awaiting compilation.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+
+    pub fn proto(&self) -> &HloModuleProto {
+        &self.proto
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] fails in the stub — callers
+/// (`runtime::Runtime::cpu`, `runtime::executor::Executor::spawn`) already
+/// propagate the error, and every artifact-dependent test/bench skips
+/// before reaching it.
+pub struct PjRtClient {
+    _marker: NotThreadsafe,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PJRT CPU client"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("HLO compilation"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let expect: usize = dims.iter().product();
+        if data.len() != expect {
+            return Err(Error(format!(
+                "buffer dims {dims:?} need {expect} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(PjRtBuffer {
+            shape: dims.to_vec(),
+            data: data.iter().map(|v| v.to_f32()).collect(),
+            _marker: PhantomData,
+        })
+    }
+}
+
+/// Device-resident buffer (host-backed in the stub).
+pub struct PjRtBuffer {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+    _marker: NotThreadsafe,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(Literal { shape: self.shape.clone(), data: self.data.clone() })
+    }
+}
+
+/// Compiled executable handle — unreachable in the stub because
+/// [`PjRtClient::compile`] always errors first.
+pub struct PjRtLoadedExecutable {
+    _marker: NotThreadsafe,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("HLO execution"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_offline() {
+        let e = PjRtClient::cpu().err().expect("stub must not create clients");
+        assert!(e.to_string().contains("unavailable offline"));
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals.to_vec());
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[4], &bytes).is_err()
+        );
+    }
+}
