@@ -36,6 +36,14 @@ fn main() -> anyhow::Result<()> {
          {} batteries died, {} devices churned out",
         report.resplits, report.batteries_exhausted, report.left
     );
+    println!(
+        "planner cache   : {} optimiser solves served {} split decisions \
+         ({:.1}% hit rate over {} sweeps)",
+        report.planner.solves,
+        report.decision_count,
+        report.planner.hit_rate() * 100.0,
+        report.reopt_sweeps
+    );
     assert!(report.completed > 0, "a city that serves nothing is a ghost town");
     Ok(())
 }

@@ -1,0 +1,295 @@
+//! Fleet-planner throughput: the numbers behind this PR's perf claim.
+//!
+//! Measures a 10k-device re-optimisation tick three ways —
+//!
+//! * **baseline** — the pre-PR path: one sequential, uncached NSGA-II
+//!   solve per device at the canonical 100×250 budget (measured on a
+//!   subsample, extrapolated to the fleet);
+//! * **tiny-uncached** — sequential and uncached, but with the
+//!   [`Nsga2Params::for_tiny_genome`] preset (isolates the solver-budget
+//!   win from the cache win);
+//! * **optimized** — the shipped path: 25%-bucket plan-key quantisation,
+//!   sharded [`SplitPlanCache`], distinct cache misses fanned out over a
+//!   [`ThreadPool`] (cold tick), then the all-hit steady state (warm
+//!   tick);
+//!
+//! plus an allocation profile of the NSGA-II hot path (a reused
+//! [`Nsga2Solver`] must not allocate per generation). Results go to
+//! stdout and `BENCH_planner.json`. `--smoke` shrinks the fleet for CI;
+//! the ≥10× speedup gate is asserted in both modes.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use smartsplit::bench::black_box;
+use smartsplit::coordinator::battery::BatteryBand;
+use smartsplit::device::{profiles, ComputeProfile};
+use smartsplit::models::{zoo, ModelProfile};
+use smartsplit::optimizer::{
+    member_perf_model, model_cache_id, quantize_bandwidth, solve_plan, Nsga2Params, Nsga2Solver,
+    PlanKey, PlannerKind, SplitPlanCache, SplitProblem,
+};
+use smartsplit::util::json::Json;
+use smartsplit::util::pool::ThreadPool;
+use smartsplit::util::rng::Xoshiro256;
+
+/// Counting wrapper around the system allocator: the cheapest honest way
+/// to assert "allocation-free per generation".
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// One synthetic device's quantisable planner inputs.
+type DeviceState = (&'static ComputeProfile, f64, BatteryBand);
+
+fn synth_fleet(n: usize, seed: u64) -> Vec<DeviceState> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let profs = [profiles::samsung_j6(), profiles::redmi_note8()];
+    let bands = [BatteryBand::Comfort, BatteryBand::Saver, BatteryBand::Critical];
+    (0..n)
+        .map(|i| {
+            let bw = 2.0 + 58.0 * rng.next_f64();
+            (profs[i % 2], bw, bands[rng.gen_range(0, 2)])
+        })
+        .collect()
+}
+
+/// Sequential uncached pass over `states` (the pre-PR planner shape).
+fn sequential_tick(
+    states: &[DeviceState],
+    model: &ModelProfile,
+    model_id: u64,
+    params: &Nsga2Params,
+) -> Duration {
+    let t0 = Instant::now();
+    for &(p, bw, band) in states {
+        let key = PlanKey::new(model_id, p, band, bw, PlannerKind::SmartSplit);
+        let pm = member_perf_model(p, model, bw);
+        black_box(solve_plan(
+            PlannerKind::SmartSplit,
+            &pm,
+            band,
+            params,
+            key.derived_seed(params.seed),
+        ));
+    }
+    t0.elapsed()
+}
+
+/// The shipped re-optimisation tick, exactly as `sim::on_reoptimize`
+/// runs it: quantise → `presolve_batch` the distinct cache misses over
+/// the pool → serve every device through the counted cache path.
+/// Returns (wall, solves actually run this tick).
+fn cached_parallel_tick(
+    states: &[DeviceState],
+    model: &Arc<ModelProfile>,
+    model_id: u64,
+    params: &Nsga2Params,
+    cache: &SplitPlanCache,
+    pool: &ThreadPool,
+    ratio: f64,
+) -> (Duration, u64) {
+    let solves_before = cache.stats().solves;
+    let t0 = Instant::now();
+    let requests = states
+        .iter()
+        .map(|&(p, bw, band)| {
+            let bw_q = quantize_bandwidth(bw, ratio);
+            let key = PlanKey::new(model_id, p, band, bw_q, PlannerKind::SmartSplit);
+            let model = Arc::clone(model);
+            let params = params.clone();
+            let seed = key.derived_seed(params.seed);
+            (key, move || {
+                let pm = member_perf_model(p, &model, bw_q);
+                solve_plan(PlannerKind::SmartSplit, &pm, band, &params, seed)
+            })
+        })
+        .collect();
+    let mut presolved = cache.presolve_batch(pool, requests);
+    // Apply phase: every device is served through the counted cache path
+    // (pass-2 results feed the solve closure, so accounting matches a
+    // sequential pass).
+    for &(p, bw, band) in states {
+        let bw_q = quantize_bandwidth(bw, ratio);
+        let key = PlanKey::new(model_id, p, band, bw_q, PlannerKind::SmartSplit);
+        let pre = presolved.remove(&key);
+        black_box(cache.plan(true, &key, || pre.expect("presolve covered every cold key")));
+    }
+    (t0.elapsed(), cache.stats().solves - solves_before)
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let devices: usize = if smoke { 2_000 } else { 10_000 };
+    let baseline_sample: usize = if smoke { 8 } else { 64 };
+
+    let model = Arc::new(zoo::vgg16().analyze(1));
+    let model_id = model_cache_id(&model);
+    let canonical = Nsga2Params::default();
+    let tiny = Nsga2Params::for_tiny_genome();
+
+    // ---- NSGA-II hot-path allocation profile (single-threaded, before
+    // any pool exists so the counter sees only the solver).
+    println!("== planner_throughput: NSGA-II allocation profile (vgg16) ==");
+    let pm = member_perf_model(profiles::samsung_j6(), &model, 10.0);
+    let problem = SplitProblem::new(&pm);
+    let mut solver = Nsga2Solver::new();
+    let gens = |g: usize| Nsga2Params {
+        pop_size: 40,
+        generations: g,
+        stagnation_patience: 0,
+        ..Default::default()
+    };
+    // Warm the solver's buffers at the larger shape first.
+    black_box(solver.solve(&problem, &gens(1_000)));
+    black_box(solver.solve(&problem, &gens(100)));
+    let a0 = allocs();
+    black_box(solver.solve(&problem, &gens(100)));
+    let short = allocs() - a0;
+    let a1 = allocs();
+    black_box(solver.solve(&problem, &gens(1_000)));
+    let long = allocs() - a1;
+    // 900 extra generations; any per-generation allocation would show up
+    // 900-fold. The residual difference is result-assembly noise.
+    let per_gen = (long as f64 - short as f64) / 900.0;
+    let alloc_free = per_gen < 0.5;
+    println!(
+        "  allocs: {short} @ 100 gens, {long} @ 1000 gens → {per_gen:.4}/generation \
+         (alloc-free hot path: {alloc_free})"
+    );
+    assert!(
+        alloc_free,
+        "NSGA-II generation loop allocates ({per_gen:.3} allocations/generation)"
+    );
+
+    // ---- Fleet tick.
+    println!("\n== planner_throughput: {devices}-device reoptimize tick ==");
+    let states = synth_fleet(devices, 7);
+
+    // Pre-PR baseline: sequential, uncached, canonical budget (subsample,
+    // extrapolated — the full fleet would take minutes by construction).
+    let sample = &states[..baseline_sample.min(states.len())];
+    let base_wall = sequential_tick(sample, &model, model_id, &canonical);
+    let base_per_solve = base_wall.as_secs_f64() / sample.len() as f64;
+    let base_tick_s = base_per_solve * devices as f64;
+    println!(
+        "  baseline   : {:.2} ms/solve sequential ×{} devices → {:.1} s/tick (extrapolated from {})",
+        base_per_solve * 1e3, devices, base_tick_s, sample.len()
+    );
+
+    // Solver-budget win alone (still sequential + uncached).
+    let tiny_sample = &states[..(baseline_sample * 4).min(states.len())];
+    let tiny_wall = sequential_tick(tiny_sample, &model, model_id, &tiny);
+    let tiny_per_solve = tiny_wall.as_secs_f64() / tiny_sample.len() as f64;
+    let tiny_tick_s = tiny_per_solve * devices as f64;
+    println!(
+        "  tiny-uncach: {:.3} ms/solve sequential → {:.2} s/tick (extrapolated from {})",
+        tiny_per_solve * 1e3, tiny_tick_s, tiny_sample.len()
+    );
+
+    // The shipped path: cold tick (parallel cache fill) then warm tick.
+    let cache = SplitPlanCache::new();
+    let pool = ThreadPool::new(ThreadPool::default_threads(16));
+    let (cold, cold_solves) =
+        cached_parallel_tick(&states, &model, model_id, &tiny, &cache, &pool, 1.25);
+    let (warm, warm_solves) =
+        cached_parallel_tick(&states, &model, model_id, &tiny, &cache, &pool, 1.25);
+    let stats = cache.stats();
+    let hit_rate = stats.hit_rate();
+    println!(
+        "  optimized  : cold tick {:?} ({} parallel solves for {} devices), warm tick {:?} ({} solves)",
+        cold, cold_solves, devices, warm, warm_solves
+    );
+    println!(
+        "  cache      : {} distinct planner states, {:.1}% hit rate over both ticks",
+        cold_solves, hit_rate * 100.0
+    );
+
+    let cold_s = cold.as_secs_f64().max(1e-9);
+    let warm_s = warm.as_secs_f64().max(1e-9);
+    let speedup_cold = base_tick_s / cold_s;
+    let speedup_warm = base_tick_s / warm_s;
+    let decisions_per_sec = devices as f64 / cold_s;
+    println!(
+        "  speedup    : {speedup_cold:.0}× cold, {speedup_warm:.0}× warm vs pre-PR sequential/uncached \
+         ({decisions_per_sec:.0} decisions/s cold)"
+    );
+    assert!(warm_solves == 0, "warm tick must be all cache hits");
+    assert!(
+        speedup_cold >= 10.0,
+        "acceptance gate: cold-tick speedup {speedup_cold:.1}× < 10× vs uncached sequential"
+    );
+
+    // ---- BENCH_planner.json for the CI perf trajectory.
+    let json = Json::obj(vec![
+        ("bench", Json::str("planner_throughput")),
+        ("smoke", Json::Bool(smoke)),
+        ("devices", Json::Num(devices as f64)),
+        (
+            "baseline",
+            Json::obj(vec![
+                ("mode", Json::str("sequential_uncached_canonical_100x250")),
+                ("sampled_devices", Json::Num(sample.len() as f64)),
+                ("per_solve_s", Json::Num(base_per_solve)),
+                ("extrapolated_tick_s", Json::Num(base_tick_s)),
+                ("solves_per_sec", Json::Num(1.0 / base_per_solve.max(1e-12))),
+            ]),
+        ),
+        (
+            "tiny_uncached",
+            Json::obj(vec![
+                ("mode", Json::str("sequential_uncached_tiny_genome")),
+                ("per_solve_s", Json::Num(tiny_per_solve)),
+                ("extrapolated_tick_s", Json::Num(tiny_tick_s)),
+            ]),
+        ),
+        (
+            "optimized",
+            Json::obj(vec![
+                ("mode", Json::str("quantized_cached_parallel")),
+                ("cold_tick_s", Json::Num(cold_s)),
+                ("warm_tick_s", Json::Num(warm_s)),
+                ("distinct_solves", Json::Num(cold_solves as f64)),
+                ("cache_hit_rate", Json::Num(hit_rate)),
+                ("decisions_per_sec_cold", Json::Num(decisions_per_sec)),
+                ("decisions_per_sec_warm", Json::Num(devices as f64 / warm_s)),
+            ]),
+        ),
+        ("speedup_cold", Json::Num(speedup_cold)),
+        ("speedup_warm", Json::Num(speedup_warm)),
+        (
+            "alloc",
+            Json::obj(vec![
+                ("allocs_per_generation", Json::Num(per_gen)),
+                ("alloc_free_hot_path", Json::Bool(alloc_free)),
+            ]),
+        ),
+    ]);
+    let out = "BENCH_planner.json";
+    std::fs::write(out, json.to_string_pretty())?;
+    println!("\nwrote {}", std::fs::canonicalize(out)?.display());
+    Ok(())
+}

@@ -11,7 +11,7 @@ use crate::optimizer::{exhaustive_pareto_front, topsis};
 use crate::perfmodel::PerfModel;
 
 /// Battery-state bands and the f2 emphasis they apply.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum BatteryBand {
     /// > 50% charge: paper-standard TOPSIS (equal emphasis).
     Comfort,
@@ -46,7 +46,13 @@ impl BatteryBand {
 /// column before vector normalisation changes the ideal-distance geometry
 /// exactly like a TOPSIS attribute weight.)
 pub fn battery_aware_split(pm: &PerfModel<'_>, state_of_charge: f64) -> Option<usize> {
-    let band = BatteryBand::of_fraction(state_of_charge);
+    battery_aware_split_banded(pm, BatteryBand::of_fraction(state_of_charge))
+}
+
+/// Band-level entry point: the quantised form the split-plan cache keys
+/// on ([`crate::optimizer::cache`]) — two devices in the same band (and
+/// bandwidth bucket) share this decision by construction.
+pub fn battery_aware_split_banded(pm: &PerfModel<'_>, band: BatteryBand) -> Option<usize> {
     let w = band.energy_weight();
     let front = exhaustive_pareto_front(pm);
     if front.is_empty() {

@@ -15,12 +15,15 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::battery::BatteryBand;
 use crate::device::ComputeProfile;
 use crate::metrics::{Histogram, ThroughputMeter};
 use crate::models::zoo;
 use crate::netsim::Link;
-use crate::optimizer::{smartsplit, Nsga2Params};
-use crate::perfmodel::{NetworkEnv, PerfModel};
+use crate::optimizer::{
+    member_perf_model, model_cache_id, solve_plan, Nsga2Params, PlanKey, PlannerKind,
+    SplitPlanCache,
+};
 use crate::runtime::Tensor;
 use crate::serve::{CloudServer, DeviceClient};
 use crate::util::pool::ThreadPool;
@@ -114,40 +117,90 @@ impl Fleet {
         let cloud = CloudServer::bind("127.0.0.1:0", cfg.artifacts_dir.clone())?;
         let accept_handle = cloud.spawn();
         let spec = zoo::by_name(&cfg.model).context("unknown model")?;
-        let profile = spec.analyze(cfg.batch);
+        let profile = Arc::new(spec.analyze(cfg.batch));
+        for m in &cfg.members {
+            anyhow::ensure!(m.profile.wifi.is_some(), "member {} has no radio", m.profile.name);
+        }
+
+        // Plan every member's split up front: distinct (profile,
+        // bandwidth) states are deduplicated and solved once, fanned out
+        // over a worker pool, then served to each member through the
+        // counted cache path. Each solve seeds from its key, so fan-out
+        // order cannot change a decision (optimizer::cache).
+        let model_id = model_cache_id(&profile);
+        let cache = SplitPlanCache::new();
+        let plan_pool = ThreadPool::new(ThreadPool::default_threads(cfg.members.len().max(1)));
+        let member_key = |m: &FleetMember| {
+            PlanKey::new(
+                model_id,
+                m.profile,
+                BatteryBand::Comfort,
+                m.bandwidth_mbps,
+                PlannerKind::SmartSplit,
+            )
+        };
+        let requests = cfg
+            .members
+            .iter()
+            .map(|m| {
+                let key = member_key(m);
+                let model = Arc::clone(&profile);
+                let params = cfg.nsga2.clone();
+                let seed = key.derived_seed(params.seed);
+                let member_profile = m.profile;
+                let bw = m.bandwidth_mbps;
+                (key, move || {
+                    let pm = member_perf_model(member_profile, &model, bw);
+                    solve_plan(PlannerKind::SmartSplit, &pm, BatteryBand::Comfort, &params, seed)
+                })
+            })
+            .collect();
+        let mut presolved = cache.presolve_batch(&plan_pool, requests);
+        let planned: Vec<Option<usize>> = cfg
+            .members
+            .iter()
+            .map(|m| {
+                let key = member_key(m);
+                let pre = presolved.remove(&key);
+                // presolve_batch solved every distinct key of this fresh
+                // cache; duplicates hit the cache before `pre` is read.
+                cache.plan(true, &key, || pre.expect("presolve covered every cold key"))
+            })
+            .collect();
+        let stats = cache.stats();
+        log::info!(
+            "fleet planner: {} members, {} solves, {:.0}% cache hit rate",
+            cfg.members.len(),
+            stats.solves,
+            stats.hit_rate() * 100.0
+        );
 
         let mut devices = Vec::new();
-        for member in &cfg.members {
-            let pm = PerfModel::new(
-                member.profile,
-                crate::device::profiles::cloud_server(),
-                member.profile.wifi.context("member has no radio")?.radio_power(),
-                NetworkEnv::with_bandwidth(member.bandwidth_mbps),
-                &profile,
-            );
-            let decision = smartsplit(&pm, &cfg.nsga2);
+        for (member, planned_l1) in cfg.members.iter().zip(planned) {
+            // Same §III context the split was planned under.
+            let pm = member_perf_model(member.profile, &profile, member.bandwidth_mbps);
+            let l1 = planned_l1.context("no feasible split for fleet member")?;
             let link = Arc::new(Link::new(member.bandwidth_mbps));
             let mut device = DeviceClient::connect(
                 &cloud.addr.to_string(),
                 &cfg.artifacts_dir,
                 &cfg.model,
                 cfg.batch,
-                decision.decision.l1,
+                l1,
                 member.profile,
                 link,
             )?;
             device.emulate_slowdown = cfg.emulate_slowdown;
             devices.push(Arc::new(FleetDevice {
                 device: Arc::new(device),
-                expected_s: pm.f1(decision.decision.l1)
-                    * if cfg.emulate_slowdown { 1.0 } else { 0.25 },
+                expected_s: pm.f1(l1) * if cfg.emulate_slowdown { 1.0 } else { 0.25 },
                 inflight: AtomicU64::new(0),
                 served: AtomicU64::new(0),
                 latency: Histogram::new(),
             }));
             log::info!(
                 "fleet: {} @ {} Mbps → l1={}",
-                member.profile.name, member.bandwidth_mbps, decision.decision.l1
+                member.profile.name, member.bandwidth_mbps, l1
             );
         }
         let pool = ThreadPool::new(devices.len());
@@ -261,6 +314,8 @@ impl Fleet {
 mod tests {
     use super::*;
     use crate::device::profiles;
+    use crate::optimizer::smartsplit;
+    use crate::perfmodel::{NetworkEnv, PerfModel};
 
     #[test]
     fn per_member_splits_differ_with_conditions() {
@@ -286,5 +341,69 @@ mod tests {
         let a = smartsplit(&starved, &params).decision.l1;
         let b = smartsplit(&fast, &params).decision.l1;
         assert_ne!(a, b, "identical splits under opposite network conditions");
+    }
+
+    #[test]
+    fn parallel_cached_planning_matches_direct_solves() {
+        // The exact planning pipeline Fleet::start runs (presolve_batch
+        // fan-out, then counted cache serving) must reproduce the
+        // per-member direct solve bit-for-bit, members sharing a
+        // (profile, bandwidth) state must share one cache entry, and the
+        // solve count must equal the number of distinct states — not the
+        // member count, and never scheduling-dependent.
+        let model = Arc::new(zoo::alexnet().analyze(1));
+        let model_id = model_cache_id(&model);
+        let params = Nsga2Params::for_tiny_genome();
+        let members: Vec<(&'static ComputeProfile, f64)> = vec![
+            (profiles::samsung_j6(), 10.0),
+            (profiles::redmi_note8(), 30.0),
+            (profiles::samsung_j6(), 10.0), // duplicate state
+        ];
+        let key_of = |p: &'static ComputeProfile, bw: f64| {
+            PlanKey::new(model_id, p, BatteryBand::Comfort, bw, PlannerKind::SmartSplit)
+        };
+        let cache = SplitPlanCache::new();
+        let pool = ThreadPool::new(2);
+        let requests = members
+            .iter()
+            .map(|&(p, bw)| {
+                let key = key_of(p, bw);
+                let model = Arc::clone(&model);
+                let params = params.clone();
+                let seed = key.derived_seed(params.seed);
+                (key, move || {
+                    let pm = member_perf_model(p, &model, bw);
+                    solve_plan(PlannerKind::SmartSplit, &pm, BatteryBand::Comfort, &params, seed)
+                })
+            })
+            .collect();
+        let mut presolved = cache.presolve_batch(&pool, requests);
+        let planned: Vec<Option<usize>> = members
+            .iter()
+            .map(|&(p, bw)| {
+                let key = key_of(p, bw);
+                let pre = presolved.remove(&key);
+                cache.plan(true, &key, || pre.expect("presolve covered every cold key"))
+            })
+            .collect();
+        for (&(p, bw), got) in members.iter().zip(&planned) {
+            let pm = member_perf_model(p, &model, bw);
+            let direct = solve_plan(
+                PlannerKind::SmartSplit,
+                &pm,
+                BatteryBand::Comfort,
+                &params,
+                key_of(p, bw).derived_seed(params.seed),
+            );
+            assert_eq!(*got, direct, "{} @ {bw} Mbps", p.name);
+        }
+        assert_eq!(planned[0], planned[2], "duplicate member states must agree");
+        assert_eq!(cache.len(), 2, "two distinct planner states expected");
+        let stats = cache.stats();
+        assert_eq!(
+            (stats.solves, stats.cache_misses, stats.cache_hits),
+            (2, 2, 1),
+            "accounting must be deterministic: one solve+miss per state, one hit for the dupe"
+        );
     }
 }

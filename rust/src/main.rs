@@ -190,10 +190,19 @@ fn run(args: &[String]) -> Result<()> {
                     cfg.seed,
                 ),
                 "two-phone" => {
+                    // Fleet-simulation default: the 1-D split genome needs
+                    // nowhere near the canonical 100×250 budget, so unless
+                    // the user explicitly passed --pop/--gens (even at the
+                    // canonical values), plan with the tiny-genome preset.
+                    let nsga2 = if parsed.provided("pop") || parsed.provided("gens") {
+                        cfg.nsga2.clone()
+                    } else {
+                        Nsga2Params { seed: cfg.seed, ..Nsga2Params::for_tiny_genome() }
+                    };
                     let mut c = sim::two_phone_fleet(
                         &cfg.model,
                         cfg.bandwidth_mbps,
-                        cfg.nsga2.clone(),
+                        nsga2,
                         cfg.seed,
                     );
                     c.duration_s = duration;

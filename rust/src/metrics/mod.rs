@@ -1,6 +1,8 @@
 //! Serving metrics: latency histogram (HDR-style log-bucketed), throughput
-//! meter, and per-request split accounting.
+//! meter, per-request split accounting, and split-planner counters
+//! (solves / cache hits / cache misses for the fleet planner layer).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -141,6 +143,63 @@ impl Histogram {
             crate::util::fmt_secs(self.quantile(0.99)),
             crate::util::fmt_secs(self.max_s()),
         )
+    }
+}
+
+/// Split-planner accounting: how many full optimiser solves actually ran
+/// versus how many decisions the plan cache served. Atomic so the
+/// parallel re-solve fan-out ([`crate::optimizer::cache`],
+/// `sim::on_reoptimize`) can record from worker threads.
+#[derive(Debug, Default)]
+pub struct PlannerCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    solves: AtomicU64,
+}
+
+/// One consistent snapshot of [`PlannerCounters`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlannerStats {
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub solves: u64,
+}
+
+impl PlannerStats {
+    /// Fraction of decisions served from cache, in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / total as f64
+    }
+}
+
+impl PlannerCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A full optimiser run actually executed (cached or not).
+    pub fn record_solve(&self) {
+        self.solves.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> PlannerStats {
+        PlannerStats {
+            cache_hits: self.hits.load(Ordering::Relaxed),
+            cache_misses: self.misses.load(Ordering::Relaxed),
+            solves: self.solves.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -286,6 +345,20 @@ mod tests {
         assert_eq!(empty.count(), 1);
         assert_eq!(empty.min_s(), 0.25);
         assert_eq!(empty.max_s(), 0.25);
+    }
+
+    #[test]
+    fn planner_counters_snapshot_and_hit_rate() {
+        let c = PlannerCounters::new();
+        assert_eq!(c.snapshot().hit_rate(), 0.0);
+        for _ in 0..3 {
+            c.record_hit();
+        }
+        c.record_miss();
+        c.record_solve();
+        let s = c.snapshot();
+        assert_eq!((s.cache_hits, s.cache_misses, s.solves), (3, 1, 1));
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! plus the §VI-C competing algorithms (LBO/EBO/COS/COC/RS).
 
 pub mod baselines;
+pub mod cache;
 pub mod nsga2;
 pub mod problem;
 pub mod scalarization;
@@ -11,7 +12,11 @@ pub mod topsis;
 pub use baselines::{
     coc, cos, decide, ebo, lbo, rs, smartsplit, Algorithm, SmartSplitResult, SplitDecision,
 };
-pub use nsga2::{optimize, Nsga2Params, ParetoSet, Problem};
+pub use cache::{
+    member_perf_model, model_cache_id, quantize_bandwidth, smartsplit_banded, solve_plan,
+    PlanKey, PlannerKind, SplitPlanCache,
+};
+pub use nsga2::{optimize, Nsga2Params, Nsga2Solver, ParetoSet, Problem};
 pub use problem::SplitProblem;
 pub use scalarization::{
     epsilon_constrained, exhaustive_pareto_front, weighted_metric, weighted_sum,

@@ -81,6 +81,15 @@ impl Problem for SplitProblem {
     fn num_objectives(&self) -> usize {
         3
     }
+
+    /// Zero-alloc hot path: one memo-table row copy per evaluation.
+    fn objectives_into(&self, g: &[i64], out: &mut [f64]) {
+        out.copy_from_slice(&self.objectives[(g[0] - 1) as usize]);
+    }
+
+    fn violation_of(&self, g: &[i64]) -> f64 {
+        self.violations[(g[0] - 1) as usize]
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +124,18 @@ mod tests {
         let p = SplitProblem::new(&pm);
         for l1 in 1..=21 {
             assert_eq!(p.objectives_at(l1), pm.objectives(l1));
+        }
+    }
+
+    #[test]
+    fn fast_paths_match_trait_defaults() {
+        let p = problem();
+        for l1 in 1..=21i64 {
+            let g = vec![l1];
+            let mut out = [0.0; 3];
+            p.objectives_into(&g, &mut out);
+            assert_eq!(out.to_vec(), p.objectives(&g));
+            assert_eq!(p.violation_of(&g), p.violation(&g));
         }
     }
 

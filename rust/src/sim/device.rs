@@ -16,15 +16,18 @@ use crate::optimizer::{smartsplit, Nsga2Params};
 use crate::perfmodel::{NetworkEnv, PerfModel};
 use crate::sim::engine::SimTime;
 
-/// How a device picks (and re-picks) its split.
+/// How a device picks (and re-picks) its split. Spawns and re-plans
+/// both honour the configured planner; every decision flows through the
+/// sim's split-plan cache ([`crate::optimizer::cache`]) with the battery
+/// band folded into the TOPSIS stage.
 #[derive(Clone, Debug)]
 pub enum Planner {
     /// Full Algorithm 1 (NSGA-II + TOPSIS) — what the live `fleet` path
-    /// runs. Costly; right for small fleets and the live-parity tests.
+    /// runs. Right for live-parity tests; fleet-scale runs should pair
+    /// it with [`Nsga2Params::for_tiny_genome`].
     SmartSplit(Nsga2Params),
     /// TOPSIS over the exhaustive true Pareto front, battery-band
-    /// weighted. O(L) per decision — the city-scale default, and exactly
-    /// what every battery/bandwidth *re*-plan uses in either mode.
+    /// weighted. O(L) per decision — the city-scale default.
     Topsis,
     /// Pin every device to this split (clamped to `1..=L-1`) and never
     /// re-plan — controlled experiments (e.g. forcing cloud contention).
@@ -91,6 +94,12 @@ impl SimDevice {
     /// fleet, the join time under churn — idle drain must not be charged
     /// for time before the device existed) and plan its initial split for
     /// `soc` state of charge and the trace's bandwidth at that instant.
+    ///
+    /// Uncached *reference* constructor (plain un-banded `smartsplit` /
+    /// exact-bandwidth TOPSIS, like [`SimDevice::replan`]) — used by unit
+    /// tests. The sim event loop plans through the split-plan cache with
+    /// band weighting and quantisation and builds devices via
+    /// [`SimDevice::with_split`]; decisions can differ from this path.
     pub fn new(
         profile: &'static ComputeProfile,
         trace: BandwidthTrace,
@@ -100,9 +109,56 @@ impl SimDevice {
         model: &ModelProfile,
         planner: &Planner,
     ) -> SimDevice {
+        let bw = trace.at(std::time::Duration::from_secs_f64(spawned_at.max(0.0)));
+        let mut d = SimDevice::unplanned(
+            profile,
+            trace,
+            cloud,
+            initial_soc,
+            spawned_at,
+            matches!(planner, Planner::Fixed(_)),
+        );
+        let l1 = match planner {
+            Planner::SmartSplit(params) => smartsplit(&d.perf_model(model, bw), params).decision.l1,
+            Planner::Topsis => battery_aware_split(&d.perf_model(model, bw), d.soc())
+                .expect("no feasible split for device"),
+            Planner::Fixed(l1) => (*l1).clamp(1, model.num_layers.saturating_sub(1).max(1)),
+        };
+        d.adopt_split(l1, model, bw);
+        d
+    }
+
+    /// Create a device whose split was decided externally — the
+    /// cache-aware planner path in [`crate::sim`] (the split-plan cache
+    /// plus parallel re-solve fan-out own the decision; the device only
+    /// adopts it).
+    pub fn with_split(
+        profile: &'static ComputeProfile,
+        trace: BandwidthTrace,
+        cloud: usize,
+        initial_soc: f64,
+        spawned_at: SimTime,
+        model: &ModelProfile,
+        l1: usize,
+        pinned: bool,
+    ) -> SimDevice {
+        let bw = trace.at(std::time::Duration::from_secs_f64(spawned_at.max(0.0)));
+        let mut d = SimDevice::unplanned(profile, trace, cloud, initial_soc, spawned_at, pinned);
+        d.adopt_split(l1, model, bw);
+        d
+    }
+
+    fn unplanned(
+        profile: &'static ComputeProfile,
+        trace: BandwidthTrace,
+        cloud: usize,
+        initial_soc: f64,
+        spawned_at: SimTime,
+        pinned: bool,
+    ) -> SimDevice {
         let capacity_j = profile.battery_mah.unwrap_or(f64::INFINITY) * 3.6 * 3.85;
         let bw = trace.at(std::time::Duration::from_secs_f64(spawned_at.max(0.0)));
-        let mut d = SimDevice {
+        SimDevice {
             profile,
             trace,
             cloud,
@@ -117,7 +173,7 @@ impl SimDevice {
             initial_soc: initial_soc.clamp(0.0, 1.0),
             drained_j: 0.0,
             last_drain_t: spawned_at,
-            pinned: matches!(planner, Planner::Fixed(_)),
+            pinned,
             busy: false,
             backlog: VecDeque::new(),
             active: true,
@@ -125,15 +181,12 @@ impl SimDevice {
             resplits: 0,
             client_energy_j: 0.0,
             upload_energy_j: 0.0,
-        };
-        let l1 = match planner {
-            Planner::SmartSplit(params) => smartsplit(&d.perf_model(model, bw), params).decision.l1,
-            Planner::Topsis => battery_aware_split(&d.perf_model(model, bw), d.soc())
-                .expect("no feasible split for device"),
-            Planner::Fixed(l1) => (*l1).clamp(1, model.num_layers.saturating_sub(1).max(1)),
-        };
-        d.adopt_split(l1, model, bw);
-        d
+        }
+    }
+
+    /// `Planner::Fixed` devices never re-plan.
+    pub fn pinned(&self) -> bool {
+        self.pinned
     }
 
     /// The §III evaluation context at bandwidth `bw_mbps`.
@@ -227,23 +280,50 @@ impl SimDevice {
         })
     }
 
-    /// Re-run the split decision if battery band or bandwidth drifted
-    /// beyond `drift`. Returns true when the split moved.
-    pub fn maybe_replan(&mut self, t: SimTime, model: &ModelProfile, drift: f64) -> bool {
+    /// Has this device drifted out of the state its split was planned in?
+    /// Returns the (bandwidth, battery band) to re-plan at when the band
+    /// changed or the link moved more than `drift` (relative); `None`
+    /// when the current plan still stands (or the device is inactive /
+    /// pinned). Read-only: the decision itself is made by the sim's
+    /// cache-aware planner layer and applied via [`SimDevice::apply_split`].
+    pub fn drift_state(&self, t: SimTime, drift: f64) -> Option<(f64, BatteryBand)> {
         if !self.active || self.pinned {
-            return false;
+            return None;
         }
         let bw = self.bandwidth_at(t);
         let band = BatteryBand::of_fraction(self.soc());
         let bw_moved = (bw - self.planned_bw_mbps).abs() / self.planned_bw_mbps > drift;
         if band == self.band && !bw_moved {
+            return None;
+        }
+        Some((bw, band))
+    }
+
+    /// Adopt an externally decided split at link bandwidth `bw` (refreshes
+    /// the cached §III costs and the planned-state markers). Returns true
+    /// — and counts a re-split — when the split actually moved.
+    pub fn apply_split(&mut self, l1: usize, model: &ModelProfile, bw: f64) -> bool {
+        let moved = l1 != self.l1;
+        self.adopt_split(l1, model, bw);
+        if moved {
+            self.resplits += 1;
+        }
+        moved
+    }
+
+    /// Re-run the split decision if battery band or bandwidth drifted
+    /// beyond `drift`. Returns true when the split moved.
+    pub fn maybe_replan(&mut self, t: SimTime, model: &ModelProfile, drift: f64) -> bool {
+        if self.drift_state(t, drift).is_none() {
             return false;
         }
         self.replan(t, model)
     }
 
     /// Unconditional re-plan at current conditions (battery-band weighted
-    /// TOPSIS over the exhaustive front). Returns true if the split moved.
+    /// TOPSIS over the exhaustive front) — the uncached reference path;
+    /// the sim's event loop goes through the split-plan cache instead.
+    /// Returns true if the split moved.
     pub fn replan(&mut self, t: SimTime, model: &ModelProfile) -> bool {
         if self.pinned {
             return false;
@@ -252,12 +332,7 @@ impl SimDevice {
         let Some(l1) = battery_aware_split(&self.perf_model(model, bw), self.soc()) else {
             return false;
         };
-        let moved = l1 != self.l1;
-        self.adopt_split(l1, model, bw);
-        if moved {
-            self.resplits += 1;
-        }
-        moved
+        self.apply_split(l1, model, bw)
     }
 }
 

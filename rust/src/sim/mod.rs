@@ -28,21 +28,31 @@ pub mod device;
 pub mod engine;
 pub mod scenario;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::battery::BatteryBand;
-use crate::metrics::Histogram;
+use crate::device::ComputeProfile;
+use crate::metrics::{Histogram, PlannerStats};
 use crate::models::{zoo, ModelProfile};
+use crate::optimizer::{
+    member_perf_model, model_cache_id, quantize_bandwidth, solve_plan, Nsga2Params, PlanKey,
+    PlannerKind, SplitPlanCache,
+};
+use crate::util::pool::ThreadPool;
 use crate::util::rng::Xoshiro256;
 use crate::workload::next_interarrival;
 
 pub use cloud::SimCloud;
 pub use device::{Planner, SimDevice};
 pub use engine::{Event, EventQueue, SimTime};
-pub use scenario::{city_scale, two_phone_fleet, ChurnConfig, ExplicitMember, FleetSpec, SimConfig};
+pub use scenario::{
+    city_scale, two_phone_fleet, ChurnConfig, ExplicitMember, FleetSpec, PlannerPerfConfig,
+    SimConfig,
+};
 
 /// Per-profile slice of the fleet report (devices sharing a
 /// [`crate::device::ComputeProfile`]).
@@ -93,6 +103,19 @@ pub struct SimReport {
     pub upload_energy_j: f64,
     /// Final split distribution: (l1, active devices running it).
     pub split_distribution: Vec<(usize, u64)>,
+    /// Re-optimisation sweeps actually performed (one per tick of the
+    /// canonical absolute-time re-arm grid).
+    pub reopt_sweeps: u64,
+    /// Split-planner accounting: optimiser solves vs plan-cache traffic.
+    pub planner: PlannerStats,
+    /// Split decisions adopted over the run (spawns + re-plans).
+    pub decision_count: u64,
+    /// The full per-decision stream, in event order: `(device, l1)` for
+    /// spawns and re-plans alike. Only populated when
+    /// [`PlannerPerfConfig::record_decisions`] is set (the cached and
+    /// uncached planner paths must produce byte-identical streams —
+    /// `tests/planner_cache.rs`); empty otherwise.
+    pub decisions: Vec<(u32, u32)>,
 }
 
 impl SimReport {
@@ -188,6 +211,15 @@ impl SimReport {
             "  energy     : client {:.2} J, upload {:.2} J ({} re-splits)",
             self.client_energy_j, self.upload_energy_j, self.resplits
         );
+        println!(
+            "  planner    : {} solves for {} decisions, cache {} hits / {} misses ({:.1}% hit rate), {} sweeps",
+            self.planner.solves,
+            self.decision_count,
+            self.planner.cache_hits,
+            self.planner.cache_misses,
+            self.planner.hit_rate() * 100.0,
+            self.reopt_sweeps,
+        );
         let splits: Vec<String> = self
             .split_distribution
             .iter()
@@ -259,7 +291,10 @@ struct Counters {
 /// The event-loop state. Lives for one [`run`] call.
 struct Sim<'a> {
     cfg: &'a SimConfig,
-    model: ModelProfile,
+    /// Shared with the parallel re-solve workers (the plan solves are
+    /// pure functions of `(model, profile, bandwidth bucket, band)`).
+    model: Arc<ModelProfile>,
+    model_id: u64,
     rng: Xoshiro256,
     q: EventQueue,
     devices: Vec<SimDevice>,
@@ -269,6 +304,17 @@ struct Sim<'a> {
     devices_by_profile: BTreeMap<&'static str, usize>,
     counters: Counters,
     horizon_reached: bool,
+    /// Split-plan memo table (see [`crate::optimizer::cache`]).
+    cache: SplitPlanCache,
+    /// Lazily spawned worker pool for cache-miss fan-out.
+    pool: Option<ThreadPool>,
+    /// Index of the *next* scheduled re-optimisation tick: sweep k fires
+    /// at exactly `k · reopt_period_s` on the absolute grid.
+    reopt_tick: u64,
+    sweeps: u64,
+    decision_count: u64,
+    /// Full decision trace; only fed when `planner_perf.record_decisions`.
+    decisions: Vec<(u32, u32)>,
 }
 
 impl<'a> Sim<'a> {
@@ -297,9 +343,12 @@ impl<'a> Sim<'a> {
         if cfg.fleet.initial_count() == 0 {
             bail!("sim needs at least one initial device");
         }
+        let model = Arc::new(spec.analyze(1));
+        let model_id = model_cache_id(&model);
         Ok(Sim {
             cfg,
-            model: spec.analyze(1),
+            model,
+            model_id,
             rng: Xoshiro256::seed_from_u64(cfg.seed),
             q: EventQueue::new(),
             devices: Vec::new(),
@@ -311,16 +360,170 @@ impl<'a> Sim<'a> {
             devices_by_profile: BTreeMap::new(),
             counters: Counters::default(),
             horizon_reached: false,
+            cache: SplitPlanCache::new(),
+            pool: None,
+            reopt_tick: 0,
+            sweeps: 0,
+            decision_count: 0,
+            decisions: Vec::new(),
         })
     }
 
+    /// Account one adopted split decision (and retain it in the trace
+    /// when the scenario asked for the full stream).
+    fn note_decision(&mut self, d: usize, l1: usize) {
+        self.decision_count += 1;
+        if self.cfg.planner_perf.record_decisions {
+            self.decisions.push((d as u32, l1 as u32));
+        }
+    }
+
+    // ---------------------------------------------------- planner layer
+
+    /// Base seed the per-key solve seeds are derived from.
+    fn plan_base_seed(&self) -> u64 {
+        match &self.cfg.planner {
+            Planner::SmartSplit(p) => p.seed,
+            _ => self.cfg.seed,
+        }
+    }
+
+    /// NSGA-II budget for solves (ignored by the exhaustive planner).
+    fn plan_params(&self) -> Nsga2Params {
+        match &self.cfg.planner {
+            Planner::SmartSplit(p) => p.clone(),
+            _ => Nsga2Params::for_tiny_genome(),
+        }
+    }
+
+    /// Quantised planner state for a device's current conditions; returns
+    /// the cache key and the (bucketed) bandwidth the solve must use.
+    fn plan_key(
+        &self,
+        profile: &'static ComputeProfile,
+        bw_exact: f64,
+        band: BatteryBand,
+    ) -> (PlanKey, f64) {
+        let bw_q = quantize_bandwidth(bw_exact, self.cfg.planner_perf.bw_bucket_ratio);
+        let kind = match self.cfg.planner {
+            Planner::SmartSplit(_) => PlannerKind::SmartSplit,
+            _ => PlannerKind::Topsis,
+        };
+        (PlanKey::new(self.model_id, profile, band, bw_q, kind), bw_q)
+    }
+
+    /// One cache-aware split decision. Identical inputs give identical
+    /// decisions whether served from cache, solved inline, or solved on a
+    /// pool worker — the seed comes from the key.
+    fn plan_split(
+        &self,
+        profile: &'static ComputeProfile,
+        bw_exact: f64,
+        band: BatteryBand,
+    ) -> Option<usize> {
+        self.plan_split_with(profile, bw_exact, band, &mut HashMap::new())
+    }
+
+    /// As [`Sim::plan_split`], but a cache miss is served from `presolved`
+    /// when a batch fan-out already solved this key (falling back to an
+    /// inline solve). Counting runs through [`SplitPlanCache::plan`]
+    /// either way, so the parallel path's `PlannerStats` are identical to
+    /// a sequential pass.
+    fn plan_split_with(
+        &self,
+        profile: &'static ComputeProfile,
+        bw_exact: f64,
+        band: BatteryBand,
+        presolved: &mut HashMap<PlanKey, Option<usize>>,
+    ) -> Option<usize> {
+        let (key, bw_q) = self.plan_key(profile, bw_exact, band);
+        let kind = key.kind;
+        let seed = key.derived_seed(self.plan_base_seed());
+        let params = self.plan_params();
+        let model = &self.model;
+        let pre = presolved.remove(&key);
+        self.cache.plan(self.cfg.planner_perf.cache, &key, || {
+            pre.unwrap_or_else(|| {
+                let pm = member_perf_model(profile, model, bw_q);
+                solve_plan(kind, &pm, band, &params, seed)
+            })
+        })
+    }
+
+    /// Cache-aware unconditional re-plan of device `d` at `now` (the
+    /// event-driven battery-band trigger).
+    fn replan_device(&mut self, d: usize, now: SimTime) {
+        if self.devices[d].pinned() {
+            return;
+        }
+        let profile = self.devices[d].profile;
+        let bw = self.devices[d].bandwidth_at(now);
+        let band = BatteryBand::of_fraction(self.devices[d].soc());
+        let Some(l1) = self.plan_split(profile, bw, band) else {
+            return;
+        };
+        self.devices[d].apply_split(l1, &self.model, bw);
+        self.note_decision(d, l1);
+    }
+
+    /// Solve the distinct not-yet-cached planner states behind a sweep's
+    /// pending re-plans, fanned out over the worker pool, and return the
+    /// presolved plans for the apply phase. Each job is a pure function
+    /// of its key (key-derived seed), so scheduling order and thread
+    /// interleaving cannot change any decision — and since neither cache
+    /// contents nor counters are touched here, the apply phase's
+    /// accounting is byte-identical to a sequential pass.
+    fn solve_pending_parallel(
+        &mut self,
+        pending: &[(usize, f64, BatteryBand)],
+    ) -> HashMap<PlanKey, Option<usize>> {
+        if !self.cfg.planner_perf.cache || !self.cfg.planner_perf.parallel || pending.len() < 2 {
+            return HashMap::new();
+        }
+        let base_seed = self.plan_base_seed();
+        let params = self.plan_params();
+        let mut requests = Vec::with_capacity(pending.len());
+        for &(d, bw, band) in pending {
+            let profile = self.devices[d].profile;
+            let (key, bw_q) = self.plan_key(profile, bw, band);
+            let model = Arc::clone(&self.model);
+            let params = params.clone();
+            let seed = key.derived_seed(base_seed);
+            let kind = key.kind;
+            requests.push((key, move || {
+                let pm = member_perf_model(profile, &model, bw_q);
+                solve_plan(kind, &pm, band, &params, seed)
+            }));
+        }
+        let pool = self
+            .pool
+            .get_or_insert_with(|| ThreadPool::new(ThreadPool::default_threads(16)));
+        self.cache.presolve_batch(pool, requests)
+    }
+
     /// Create one device (fleet member `member`), register it as active,
-    /// and — under churn — schedule its departure.
+    /// and — under churn — schedule its departure. The initial split goes
+    /// through the plan cache like every later re-plan, so a homogeneous
+    /// 10k-device spawn costs a handful of solves, not 10k.
     fn spawn_device(&mut self, at: SimTime, member: usize) {
         let (profile, trace, soc) = self.cfg.fleet.instantiate(member, &mut self.rng);
         let id = self.devices.len();
         let cloud = id % self.clouds.len();
-        let d = SimDevice::new(profile, trace, cloud, soc, at, &self.model, &self.cfg.planner);
+        let bw = trace.at(Duration::from_secs_f64(at.max(0.0)));
+        let (l1, pinned) = match &self.cfg.planner {
+            Planner::Fixed(l1) => {
+                ((*l1).clamp(1, self.model.num_layers.saturating_sub(1).max(1)), true)
+            }
+            _ => {
+                let band = BatteryBand::of_fraction(soc.clamp(0.0, 1.0));
+                let l1 = self
+                    .plan_split(profile, bw, band)
+                    .expect("no feasible split for device");
+                (l1, false)
+            }
+        };
+        let d = SimDevice::with_split(profile, trace, cloud, soc, at, &self.model, l1, pinned);
+        self.note_decision(id, l1);
         *self.devices_by_profile.entry(profile.name).or_insert(0) += 1;
         self.devices.push(d);
         self.active.insert(id);
@@ -392,7 +595,7 @@ impl<'a> Sim<'a> {
             } else {
                 let band = BatteryBand::of_fraction(self.devices[device].soc());
                 if band != self.devices[device].band {
-                    self.devices[device].replan(now, &self.model);
+                    self.replan_device(device, now);
                 }
             }
         }
@@ -423,16 +626,41 @@ impl<'a> Sim<'a> {
         if self.horizon_reached {
             return;
         }
+        self.sweeps += 1;
+        // Pass 1: integrate idle drain, retire dead batteries, and collect
+        // the devices whose planned state (battery band / link bandwidth)
+        // drifted past the threshold.
+        let mut pending: Vec<(usize, f64, BatteryBand)> = Vec::new();
         for d in self.active.snapshot() {
             self.devices[d].apply_idle_drain(now, self.cfg.idle_drain_w);
             if self.devices[d].exhausted() {
                 self.counters.exhausted += 1;
                 self.deactivate(d);
-            } else {
-                self.devices[d].maybe_replan(now, &self.model, self.cfg.drift_threshold);
+            } else if let Some((bw, band)) =
+                self.devices[d].drift_state(now, self.cfg.drift_threshold)
+            {
+                pending.push((d, bw, band));
             }
         }
-        self.q.schedule_in(self.cfg.reopt_period_s, Event::Reoptimize);
+        // Pass 2: fan the distinct cache-miss solves out over the pool.
+        let mut presolved = self.solve_pending_parallel(&pending);
+        // Pass 3: adopt decisions in deterministic device order, serving
+        // pass-2 results through the normal (counted) cache path.
+        for (d, bw, band) in pending {
+            let profile = self.devices[d].profile;
+            let Some(l1) = self.plan_split_with(profile, bw, band, &mut presolved) else {
+                continue;
+            };
+            self.devices[d].apply_split(l1, &self.model, bw);
+            self.note_decision(d, l1);
+        }
+        // Canonical re-arm: sweep k fires at exactly k·period on the
+        // absolute grid. A relative `schedule_in(period)` re-arm would
+        // accumulate floating-point error and drift off the grid —
+        // regression-pinned by tests/planner_cache.rs.
+        self.reopt_tick += 1;
+        self.q
+            .schedule(self.cfg.reopt_period_s * self.reopt_tick as f64, Event::Reoptimize);
     }
 
     fn on_join(&mut self, now: SimTime) {
@@ -455,6 +683,11 @@ impl<'a> Sim<'a> {
     }
 
     fn run_loop(&mut self) {
+        // Horizon is scheduled before any other event so that it wins the
+        // FIFO tie against anything landing at exactly `duration_s` —
+        // in particular a re-optimisation tick whose grid point coincides
+        // with the horizon (sweep k fires iff k·period < duration).
+        self.q.schedule(self.cfg.duration_s, Event::Horizon);
         for member in 0..self.cfg.fleet.initial_count() {
             self.spawn_device(0.0, member);
         }
@@ -467,9 +700,10 @@ impl<'a> Sim<'a> {
             }
         }
         if self.cfg.reopt_period_s > 0.0 {
+            // Tick 1 of the absolute re-arm grid (see on_reoptimize).
+            self.reopt_tick = 1;
             self.q.schedule(self.cfg.reopt_period_s, Event::Reoptimize);
         }
-        self.q.schedule(self.cfg.duration_s, Event::Horizon);
 
         while let Some((now, event)) = self.q.pop() {
             match event {
@@ -547,6 +781,10 @@ impl<'a> Sim<'a> {
             client_energy_j: self.devices.iter().map(|d| d.client_energy_j).sum(),
             upload_energy_j: self.devices.iter().map(|d| d.upload_energy_j).sum(),
             split_distribution: split_counts.into_iter().collect(),
+            reopt_sweeps: self.sweeps,
+            planner: self.cache.stats(),
+            decision_count: self.decision_count,
+            decisions: self.decisions,
         }
     }
 }

@@ -100,6 +100,61 @@ impl FleetSpec {
     }
 }
 
+/// Planner performance layer knobs (split-plan cache + parallel
+/// re-solve fan-out; see `optimizer::cache` and `rust/DESIGN.md`
+/// §"Planner performance").
+///
+/// Invariant: none of these change decisions except `bw_bucket_ratio`,
+/// which quantises the bandwidth *fed to the solver* identically in the
+/// cached and uncached paths. `cache`/`parallel` are pure wall-clock
+/// toggles (pinned by `tests/planner_cache.rs`).
+#[derive(Clone, Debug)]
+pub struct PlannerPerfConfig {
+    /// Memoise split solves in a [`crate::optimizer::SplitPlanCache`].
+    pub cache: bool,
+    /// Fan cache-miss re-solves of a re-optimisation sweep out over a
+    /// [`crate::util::pool::ThreadPool`] (requires `cache`).
+    pub parallel: bool,
+    /// Geometric bandwidth bucket ratio for plan keys; ≤ 1.0 plans at
+    /// exact bandwidth (every distinct link is its own planner state).
+    pub bw_bucket_ratio: f64,
+    /// Retain the full per-decision `(device, l1)` stream in
+    /// `SimReport::decisions`. Off by default: at city scale the stream
+    /// grows with every spawn and re-plan for the whole run, and only
+    /// the cached-vs-uncached parity tests read it
+    /// (`SimReport::decision_count` is always maintained).
+    pub record_decisions: bool,
+}
+
+impl Default for PlannerPerfConfig {
+    /// Exact-bandwidth planning with memoisation: identical decisions to
+    /// the uncached sequential path, cheaper whenever states repeat.
+    fn default() -> Self {
+        PlannerPerfConfig {
+            cache: true,
+            parallel: true,
+            bw_bucket_ratio: 1.0,
+            record_decisions: false,
+        }
+    }
+}
+
+impl PlannerPerfConfig {
+    /// City-scale preset: bucket links at the same 25% granularity the
+    /// drift trigger uses, so a 10k-device fleet collapses onto a handful
+    /// of planner states.
+    pub fn fleet_scale() -> Self {
+        PlannerPerfConfig { bw_bucket_ratio: 1.25, ..Default::default() }
+    }
+
+    /// The pre-cache reference path: every decision is a fresh sequential
+    /// solve (the `planner_throughput` bench baseline and the parity
+    /// test's control arm).
+    pub fn uncached_sequential() -> Self {
+        PlannerPerfConfig { cache: false, parallel: false, ..Default::default() }
+    }
+}
+
 /// Full description of one simulation run.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -123,6 +178,8 @@ pub struct SimConfig {
     pub idle_drain_w: f64,
     pub fleet: FleetSpec,
     pub churn: Option<ChurnConfig>,
+    /// Split-plan cache / parallel re-solve configuration.
+    pub planner_perf: PlannerPerfConfig,
 }
 
 /// The paper's two-phone testbed, matching `main.rs`'s live `fleet`
@@ -160,6 +217,9 @@ pub fn two_phone_fleet(
             },
         ]),
         churn: None,
+        // Live-parity configuration: exact-bandwidth planning (cache on,
+        // but every decision equals the uncached solve bit-for-bit).
+        planner_perf: PlannerPerfConfig::default(),
     }
 }
 
@@ -199,6 +259,7 @@ pub fn city_scale(model: &str, devices: usize, duration_s: f64, seed: u64) -> Si
             joins_per_s: 0.05 * n / duration_s,
             mean_lifetime_s: duration_s * 2.0,
         }),
+        planner_perf: PlannerPerfConfig::fleet_scale(),
     }
 }
 
@@ -271,5 +332,24 @@ mod tests {
         assert!(cfg.idle_drain_w > 0.0);
         // Small fleets still get at least one cloud.
         assert_eq!(city_scale("alexnet", 10, 60.0, 7).clouds, 1);
+    }
+
+    #[test]
+    fn planner_perf_presets() {
+        // City scale buckets links at the drift granularity; the default
+        // (and two-phone live-parity) configuration plans at exact
+        // bandwidth so memoisation cannot change decisions.
+        let city = city_scale("alexnet", 100, 60.0, 7);
+        assert!(city.planner_perf.cache && city.planner_perf.parallel);
+        assert!((city.planner_perf.bw_bucket_ratio - 1.25).abs() < 1e-12);
+        let two = two_phone_fleet("alexnet", 10.0, Nsga2Params::for_tiny_genome(), 7);
+        assert!(two.planner_perf.cache);
+        assert!(two.planner_perf.bw_bucket_ratio <= 1.0);
+        let base = PlannerPerfConfig::uncached_sequential();
+        assert!(!base.cache && !base.parallel);
+        // The full decision trace is test-only opt-in everywhere.
+        assert!(!city.planner_perf.record_decisions);
+        assert!(!two.planner_perf.record_decisions);
+        assert!(!base.record_decisions);
     }
 }

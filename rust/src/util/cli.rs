@@ -24,6 +24,10 @@ pub struct Cli {
 pub struct Parsed {
     values: BTreeMap<&'static str, String>,
     bools: BTreeMap<&'static str, bool>,
+    /// Flags the user actually typed (as opposed to declared defaults) —
+    /// lets callers distinguish "explicitly asked for the default value"
+    /// from "said nothing".
+    provided: std::collections::BTreeSet<&'static str>,
     pub positionals: Vec<String>,
 }
 
@@ -67,6 +71,7 @@ impl Cli {
         let mut p = Parsed {
             values: BTreeMap::new(),
             bools: BTreeMap::new(),
+            provided: std::collections::BTreeSet::new(),
             positionals: Vec::new(),
         };
         for o in &self.opts {
@@ -93,6 +98,7 @@ impl Cli {
                     .iter()
                     .find(|o| o.name == name)
                     .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?;
+                p.provided.insert(opt.name);
                 if opt.is_bool {
                     p.bools.insert(opt.name, true);
                 } else {
@@ -122,6 +128,12 @@ impl Cli {
 }
 
 impl Parsed {
+    /// Did the user explicitly pass this flag (rather than inherit its
+    /// declared default)?
+    pub fn provided(&self, name: &str) -> bool {
+        self.provided.contains(name)
+    }
+
     pub fn get(&self, name: &str) -> &str {
         self.values
             .iter()
@@ -207,6 +219,19 @@ mod tests {
         assert_eq!(p.get("model"), "alexnet");
         assert_eq!(p.get_usize("port"), 9000);
         assert!(!p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn provided_distinguishes_explicit_from_default() {
+        // Explicitly passing a flag's default value still counts as
+        // provided — callers use this to respect deliberate choices.
+        let p = cli().parse(&argv(&["--model", "alexnet", "--port", "1"])).unwrap();
+        assert!(p.provided("model"));
+        assert!(p.provided("port"));
+        assert!(!p.provided("bandwidth-mbps"));
+        assert!(!p.provided("verbose"));
+        let q = cli().parse(&argv(&["--verbose", "--port=1"])).unwrap();
+        assert!(q.provided("verbose"));
     }
 
     #[test]

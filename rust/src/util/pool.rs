@@ -22,6 +22,13 @@ struct State {
     shutdown: bool,
 }
 
+/// Per-batch fan-in state for [`ThreadPool::run_all`]: result slots plus
+/// a completion count, signalled once the batch's own tasks are done.
+struct Batch<T> {
+    slots: Mutex<(Vec<Option<T>>, usize)>,
+    done: Condvar,
+}
+
 /// Fixed worker pool; drops shut it down gracefully (workers finish queued
 /// jobs first).
 pub struct ThreadPool {
@@ -87,31 +94,58 @@ impl ThreadPool {
         }
     }
 
+    /// A sensible worker count for CPU-bound fan-out: the machine's
+    /// available parallelism, clamped to `max`.
+    pub fn default_threads(max: usize) -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(1, max.max(1))
+    }
+
     /// Run a batch of closures returning `T`, collecting results in input
     /// order (fan-out / fan-in).
+    ///
+    /// Joining is per-batch (a dedicated completion count + condvar), not
+    /// pool-wide: concurrent `run_all` batches — or unrelated `execute`
+    /// jobs in flight — never delay this call beyond its own tasks, and
+    /// each caller observes exactly its own results in input order
+    /// (determinism under contention is pinned by
+    /// `run_all_deterministic_under_contention`). Must not be called from
+    /// inside a pool worker (the batch could deadlock waiting for its own
+    /// thread).
     pub fn run_all<T, F>(&self, tasks: Vec<F>) -> Vec<T>
     where
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
     {
         let n = tasks.len();
-        let slots: Arc<Mutex<Vec<Option<T>>>> =
-            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        if n == 0 {
+            return Vec::new();
+        }
+        let batch: Arc<Batch<T>> = Arc::new(Batch {
+            slots: Mutex::new(((0..n).map(|_| None).collect(), 0)),
+            done: Condvar::new(),
+        });
         for (i, t) in tasks.into_iter().enumerate() {
-            let slots = Arc::clone(&slots);
+            let batch = Arc::clone(&batch);
             self.execute(move || {
                 let out = t();
-                slots.lock().unwrap()[i] = Some(out);
+                let mut st = batch.slots.lock().unwrap();
+                st.0[i] = Some(out);
+                st.1 += 1;
+                if st.1 == n {
+                    batch.done.notify_all();
+                }
             });
         }
-        self.wait_idle();
-        Arc::try_unwrap(slots)
-            .unwrap_or_else(|_| panic!("slots still shared after wait_idle"))
-            .into_inner()
-            .unwrap()
-            .into_iter()
-            .map(|o| o.expect("job completed"))
-            .collect()
+        let mut st = batch.slots.lock().unwrap();
+        while st.1 < n {
+            st = batch.done.wait(st).unwrap();
+        }
+        let slots = std::mem::take(&mut st.0);
+        drop(st);
+        slots.into_iter().map(|o| o.expect("job completed")).collect()
     }
 }
 
@@ -178,5 +212,54 @@ mod tests {
         let pool = ThreadPool::new(0);
         let out = pool.run_all(vec![|| 1, || 2]);
         assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn run_all_empty_batch() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<u32> = pool.run_all(Vec::<fn() -> u32>::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn run_all_deterministic_under_contention() {
+        // Several callers hammer one pool with interleaved batches whose
+        // tasks finish out of order (staggered sleeps). Every caller must
+        // get exactly its own results, in input order, every round — the
+        // property the parallel re-solve fan-out in `sim::on_reoptimize`
+        // leans on.
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut callers = Vec::new();
+        for c in 0u64..3 {
+            let pool = Arc::clone(&pool);
+            callers.push(std::thread::spawn(move || {
+                for round in 0u64..5 {
+                    let tasks: Vec<_> = (0u64..8)
+                        .map(|i| {
+                            move || {
+                                // Reverse-staggered so completion order is
+                                // the opposite of submission order.
+                                std::thread::sleep(std::time::Duration::from_micros((8 - i) * 300));
+                                c * 10_000 + round * 100 + i
+                            }
+                        })
+                        .collect();
+                    let out = pool.run_all(tasks);
+                    let want: Vec<u64> =
+                        (0u64..8).map(|i| c * 10_000 + round * 100 + i).collect();
+                    assert_eq!(out, want, "caller {c} round {round}");
+                }
+            }));
+        }
+        for h in callers {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn default_threads_clamped() {
+        assert!(ThreadPool::default_threads(8) >= 1);
+        assert!(ThreadPool::default_threads(8) <= 8);
+        assert_eq!(ThreadPool::default_threads(0), 1);
     }
 }

@@ -1,0 +1,170 @@
+//! Planner performance layer: (a) the split-plan cache and the parallel
+//! re-solve fan-out are pure wall-clock optimisations — same scenario
+//! seed ⇒ byte-identical `SplitDecision` stream and sim counters with the
+//! cache on and off; (b) the re-optimisation sweep re-arms on the
+//! canonical absolute tick grid (`k · reopt_period_s`), not by relative
+//! `now + period` scheduling.
+
+use smartsplit::optimizer::Nsga2Params;
+use smartsplit::sim::{self, Planner, PlannerPerfConfig};
+
+/// A fleet that exercises every planning path: SmartSplit planner (full
+/// Algorithm 1 per decision), battery bands engaged, bandwidth wobble
+/// feeding the drift trigger, churn feeding spawn-time planning.
+fn smartsplit_city(seed: u64) -> sim::SimConfig {
+    let mut cfg = sim::city_scale("alexnet", 300, 120.0, seed);
+    cfg.planner = Planner::SmartSplit(Nsga2Params {
+        seed,
+        ..Nsga2Params::for_tiny_genome()
+    });
+    // These tests compare the full per-decision stream, which scenarios
+    // don't retain by default.
+    cfg.planner_perf.record_decisions = true;
+    cfg
+}
+
+#[test]
+fn cached_vs_uncached_parity() {
+    let mut cached = smartsplit_city(21);
+    cached.planner_perf = PlannerPerfConfig {
+        cache: true,
+        parallel: true,
+        bw_bucket_ratio: 1.25,
+        record_decisions: true,
+    };
+    let mut uncached = smartsplit_city(21);
+    uncached.planner_perf = PlannerPerfConfig {
+        cache: false,
+        parallel: false,
+        // Quantisation is part of the planner, not the cache: both arms
+        // must bucket identically for the comparison to be decision-level.
+        bw_bucket_ratio: 1.25,
+        record_decisions: true,
+    };
+
+    let a = sim::run(&cached).expect("cached run");
+    let b = sim::run(&uncached).expect("uncached run");
+
+    // Byte-identical decision stream (spawns + re-plans, in event order).
+    assert!(!a.decisions.is_empty(), "scenario exercised no planning");
+    assert_eq!(a.decisions, b.decisions, "cache changed a split decision");
+    // ... and identical everything downstream of the decisions.
+    assert_eq!(a.summary(), b.summary());
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.generated, b.generated);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.resplits, b.resplits);
+    assert_eq!(a.reopt_sweeps, b.reopt_sweeps);
+    assert_eq!(a.split_distribution, b.split_distribution);
+    assert_eq!(a.devices_created, b.devices_created);
+
+    // The whole point: the cached arm solved orders of magnitude less.
+    assert_eq!(
+        b.planner.solves,
+        b.decisions.len() as u64,
+        "uncached arm must solve once per decision"
+    );
+    assert!(
+        a.planner.solves * 3 <= b.planner.solves,
+        "cache barely helped: {} solves cached vs {} uncached",
+        a.planner.solves,
+        b.planner.solves
+    );
+    // Cached solves are bounded by the quantised key lattice (2 profiles ×
+    // 3 bands × ~22 bandwidth buckets), not by fleet size or sweep count.
+    assert!(
+        a.planner.solves <= 150,
+        "{} cached solves exceed the planner-state lattice",
+        a.planner.solves
+    );
+    assert!(
+        a.planner.hit_rate() > 0.5,
+        "hit rate {:.2} too low for a quantised 300-device fleet",
+        a.planner.hit_rate()
+    );
+}
+
+#[test]
+fn cached_runs_are_deterministic() {
+    // Parallel cache-miss fan-out must not introduce any run-to-run
+    // nondeterminism (solves are pure functions of the key).
+    let cfg = smartsplit_city(5);
+    let a = sim::run(&cfg).expect("run a");
+    let b = sim::run(&cfg).expect("run b");
+    assert_eq!(a.decisions, b.decisions);
+    assert_eq!(a.summary(), b.summary());
+    assert_eq!(a.planner, b.planner, "cache accounting must be deterministic");
+}
+
+#[test]
+fn every_spawn_records_a_decision() {
+    let cfg = smartsplit_city(11);
+    let r = sim::run(&cfg).expect("run");
+    assert_eq!(r.decisions.len() as u64, r.decision_count);
+    assert!(
+        r.decisions.len() >= r.devices_created,
+        "{} decisions for {} devices",
+        r.decisions.len(),
+        r.devices_created
+    );
+    // Without opt-in, the trace stays empty but the count remains.
+    let mut quiet = smartsplit_city(11);
+    quiet.planner_perf.record_decisions = false;
+    let q = sim::run(&quiet).expect("quiet run");
+    assert!(q.decisions.is_empty());
+    assert_eq!(q.decision_count, r.decision_count);
+    // Non-pinned planning always lands inside the feasible split domain.
+    for &(_, l1) in &r.decisions {
+        assert!((1..21).contains(&(l1 as usize)), "decision l1={l1} out of domain");
+    }
+}
+
+/// Sweep counts on the canonical absolute grid: sweep k happens iff
+/// `k · period < duration` (at `k · period == duration` the horizon event,
+/// scheduled earlier, wins the FIFO tie and the sweep is a no-op).
+fn expected_sweeps(period: f64, duration: f64) -> u64 {
+    (1u64..)
+        .take_while(|&k| k as f64 * period < duration)
+        .count() as u64
+}
+
+#[test]
+fn reopt_rearm_stays_on_absolute_tick_grid() {
+    // Adversarial periods: not exactly representable in binary floating
+    // point, so a relative `now + period` re-arm accumulates error and
+    // drifts off the grid over hundreds of ticks. The canonical re-arm
+    // schedules tick k at exactly `k · period` and must hit the expected
+    // sweep count dead on.
+    // (30, 90) pins the exact-multiple edge: tick 3 lands precisely on
+    // the horizon and must lose the FIFO tie (no sweep at t == duration).
+    for (period, duration, seed) in [
+        (0.3f64, 90.0f64, 1u64),
+        (100.0 / 3.0, 100.0, 2),
+        (0.7, 63.0, 3),
+        (30.0, 90.0, 4),
+    ] {
+        let mut cfg = sim::city_scale("alexnet", 8, duration, seed);
+        cfg.planner = Planner::Fixed(5); // isolate scheduling from planning
+        cfg.churn = None;
+        cfg.reopt_period_s = period;
+        let r = sim::run(&cfg).expect("sim run");
+        assert_eq!(
+            r.reopt_sweeps,
+            expected_sweeps(period, duration),
+            "period={period} duration={duration}"
+        );
+        // Pinned fleet: sweeps must never re-plan anything.
+        assert_eq!(r.resplits, 0);
+        let r2 = sim::run(&cfg).expect("sim rerun");
+        assert_eq!(r.reopt_sweeps, r2.reopt_sweeps);
+    }
+}
+
+#[test]
+fn disabling_reopt_disables_sweeps() {
+    let mut cfg = sim::city_scale("alexnet", 8, 30.0, 4);
+    cfg.reopt_period_s = 0.0;
+    cfg.churn = None;
+    let r = sim::run(&cfg).expect("sim run");
+    assert_eq!(r.reopt_sweeps, 0);
+}
