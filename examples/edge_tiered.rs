@@ -1,0 +1,104 @@
+//! Three-tier city: 2,000 phones → 3 metro edge sites → the core cloud.
+//!
+//! The planner solves the 2-D `(l1, l2)` genome per quantised device
+//! state: head layers stay on the phone, torso layers contend at the
+//! assigned edge site's M/G/c queue, tail layers (if any) cross the
+//! wired backhaul into the cloud. Run for a deep conv net (VGG16 — the
+//! ResNet-class heavyweight of this zoo) and a mobile-first net
+//! (MobileNetV2), printing per-tier utilisation and the `(l1, l2)`
+//! split-plan heat table.
+//!
+//!     cargo run --release --example edge_tiered
+//!
+//! The run is deterministic: same seed, same report, every time.
+
+use std::collections::BTreeMap;
+
+use smartsplit::sim;
+
+fn heat_table(dist: &[(smartsplit::edge::SplitPlan, u64)]) {
+    // Rows: l1 (head depth). Columns: observed l2 values (torso end).
+    let mut l2s: Vec<usize> = dist.iter().map(|(p, _)| p.l2).collect();
+    l2s.sort_unstable();
+    l2s.dedup();
+    let mut rows: BTreeMap<usize, BTreeMap<usize, u64>> = BTreeMap::new();
+    for (p, n) in dist {
+        *rows.entry(p.l1).or_default().entry(p.l2).or_insert(0) += n;
+    }
+    print!("    l1\\l2 |");
+    for l2 in &l2s {
+        print!(" {l2:>5}");
+    }
+    println!();
+    print!("    ------+");
+    for _ in &l2s {
+        print!("------");
+    }
+    println!();
+    for (l1, cols) in rows {
+        print!("    {l1:>5} |");
+        for l2 in &l2s {
+            match cols.get(l2) {
+                Some(n) => print!(" {n:>5}"),
+                None => print!("     ·"),
+            }
+        }
+        println!();
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let devices = 2_000;
+    let sites = 3;
+    let duration_s = 300.0;
+
+    for model in ["vgg16", "mobilenet_v2"] {
+        let cfg = sim::city_scale_tiered(model, devices, sites, duration_s, 7);
+        let spec = cfg.edge.as_ref().unwrap();
+        println!(
+            "== {model}: {devices} devices → {sites} edge sites × {} servers \
+             ({} Mbps backhaul) → {} clouds × {} servers ==",
+            spec.servers_per_site,
+            spec.backhaul.bandwidth_mbps,
+            cfg.clouds,
+            cfg.cloud_servers
+        );
+        let report = sim::run(&cfg)?;
+        report.print();
+
+        println!();
+        println!("-- per-tier view --");
+        let edge_served: u64 = report.edges.iter().map(|e| e.served).sum();
+        let cloud_served: u64 = report.clouds.iter().map(|c| c.served).sum();
+        for (i, e) in report.edges.iter().enumerate() {
+            println!(
+                "edge site {i}  : util {:>5.1}%  served {:>7}  peak queue {:>4}",
+                e.utilization * 100.0,
+                e.served,
+                e.peak_queue
+            );
+        }
+        println!(
+            "edge tier    : torso-q p95 {:.2} ms (merged across sites)",
+            report.edge_queue_delay.p95() * 1e3
+        );
+        let cloud_util = report.clouds.iter().map(|c| c.utilization).sum::<f64>()
+            / report.clouds.len().max(1) as f64;
+        println!(
+            "cloud tier   : util {:>5.1}%  served {:>7}  tail-q p95 {:.2} ms",
+            cloud_util * 100.0,
+            cloud_served,
+            report.queue_delay.p95() * 1e3
+        );
+        println!(
+            "torso share  : {edge_served} of {} completed requests crossed the edge tier",
+            report.completed
+        );
+        println!();
+        println!("-- (l1, l2) split-plan heat table (active devices) --");
+        heat_table(&report.split_distribution);
+        println!();
+        assert!(report.completed > 0, "a tiered city that serves nothing is a ghost town");
+    }
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! §Scale: tiered-simulator throughput and the edge/cloud balance.
+//!
+//! Runs the `city_scale_tiered` scenario (devices → metro edge sites →
+//! core cloud, 2-D `(l1, l2)` planning through the split-plan cache)
+//! and records the numbers the CI perf trajectory tracks in
+//! `BENCH_edge.json`: events/sec, decisions/sec, edge vs cloud
+//! utilisation, plan-cache hit rate, and the torso share. `--smoke`
+//! shrinks the fleet for CI.
+
+use smartsplit::bench::{black_box, Bench};
+use smartsplit::sim;
+use smartsplit::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // (devices, sites, virtual seconds, bench iters, warmup)
+    let sizes: Vec<(usize, usize, f64, usize, usize)> = if smoke {
+        vec![(2_000, 3, 120.0, 2, 1)]
+    } else {
+        vec![(2_000, 3, 120.0, 3, 1), (10_000, 8, 60.0, 3, 1), (50_000, 16, 30.0, 2, 0)]
+    };
+    println!("== edge_scale: city-tiered scenario, alexnet, seed 7 ==");
+
+    let mut runs = Vec::new();
+    for (devices, sites, duration_s, iters, warmup) in sizes {
+        let cfg = sim::city_scale_tiered("alexnet", devices, sites, duration_s, 7);
+        Bench::new(&format!(
+            "simulate {devices} devices / {sites} edge sites / {duration_s:.0}s virtual"
+        ))
+        .iters(iters)
+        .warmup(warmup)
+        .run(|| {
+            black_box(sim::run(&cfg).expect("sim run"));
+        });
+        let report = sim::run(&cfg)?;
+        let wall_s = report.wall.as_secs_f64().max(1e-9);
+        let edge_util = report.edges.iter().map(|e| e.utilization).sum::<f64>()
+            / report.edges.len().max(1) as f64;
+        let cloud_util = report.clouds.iter().map(|c| c.utilization).sum::<f64>()
+            / report.clouds.len().max(1) as f64;
+        let edge_served: u64 = report.edges.iter().map(|e| e.served).sum();
+        let decisions_per_sec = report.decision_count as f64 / wall_s;
+        println!(
+            "    {:>6} devices: {:>9} events in {:?} → {:>12.0} events/s, \
+             {:.0} decisions/s, edge util {:.1}% vs cloud util {:.1}%, \
+             cache hit rate {:.1}%",
+            devices,
+            report.events,
+            report.wall,
+            report.events_per_wall_second(),
+            decisions_per_sec,
+            edge_util * 100.0,
+            cloud_util * 100.0,
+            report.planner.hit_rate() * 100.0,
+        );
+        // A tiered run that never uses its edge tier is a silent
+        // misconfiguration, not a perf number.
+        assert!(edge_served > 0, "no torso work reached the edge tier");
+        runs.push(Json::obj(vec![
+            ("devices", Json::Num(devices as f64)),
+            ("edge_sites", Json::Num(sites as f64)),
+            ("virtual_s", Json::Num(duration_s)),
+            ("events", Json::Num(report.events as f64)),
+            ("events_per_sec", Json::Num(report.events_per_wall_second())),
+            ("decisions", Json::Num(report.decision_count as f64)),
+            ("decisions_per_sec", Json::Num(decisions_per_sec)),
+            ("completed", Json::Num(report.completed as f64)),
+            ("edge_utilization", Json::Num(edge_util)),
+            ("cloud_utilization", Json::Num(cloud_util)),
+            ("edge_served", Json::Num(edge_served as f64)),
+            ("cache_hit_rate", Json::Num(report.planner.hit_rate())),
+            ("planner_solves", Json::Num(report.planner.solves as f64)),
+            ("edge_queue_p95_s", Json::Num(report.edge_queue_delay.p95())),
+            ("cloud_queue_p95_s", Json::Num(report.queue_delay.p95())),
+        ]));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("edge_scale")),
+        ("smoke", Json::Bool(smoke)),
+        ("scenario", Json::str("city_scale_tiered")),
+        ("model", Json::str("alexnet")),
+        ("runs", Json::Arr(runs)),
+    ]);
+    // Tracked at the repo root (next to BENCH_planner.json) so the perf
+    // trajectory is versioned; CARGO_MANIFEST_DIR keeps the location
+    // stable however cargo was invoked.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_edge.json");
+    std::fs::write(&out, json.to_string_pretty())?;
+    println!("\nwrote {}", std::fs::canonicalize(&out)?.display());
+    Ok(())
+}

@@ -288,8 +288,11 @@ fn main() -> anyhow::Result<()> {
             ]),
         ),
     ]);
-    let out = "BENCH_planner.json";
-    std::fs::write(out, json.to_string_pretty())?;
-    println!("\nwrote {}", std::fs::canonicalize(out)?.display());
+    // Tracked at the repo root (next to BENCH_edge.json) so the perf
+    // trajectory is versioned; CARGO_MANIFEST_DIR keeps the location
+    // stable however cargo was invoked.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_planner.json");
+    std::fs::write(&out, json.to_string_pretty())?;
+    println!("\nwrote {}", std::fs::canonicalize(&out)?.display());
     Ok(())
 }

@@ -17,6 +17,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::battery::BatteryBand;
 use crate::device::ComputeProfile;
+use crate::edge::SplitPlan;
 use crate::metrics::{Histogram, ThroughputMeter};
 use crate::models::zoo;
 use crate::netsim::Link;
@@ -156,7 +157,7 @@ impl Fleet {
             })
             .collect();
         let mut presolved = cache.presolve_batch(&plan_pool, requests);
-        let planned: Vec<Option<usize>> = cfg
+        let planned: Vec<Option<SplitPlan>> = cfg
             .members
             .iter()
             .map(|m| {
@@ -176,10 +177,12 @@ impl Fleet {
         );
 
         let mut devices = Vec::new();
-        for (member, planned_l1) in cfg.members.iter().zip(planned) {
+        for (member, planned_split) in cfg.members.iter().zip(planned) {
             // Same §III context the split was planned under.
             let pm = member_perf_model(member.profile, &profile, member.bandwidth_mbps);
-            let l1 = planned_l1.context("no feasible split for fleet member")?;
+            // The live serving stack is two-tier: planned plans are
+            // two-tier embeddings (l2 == l1), so l1 is the whole story.
+            let l1 = planned_split.context("no feasible split for fleet member")?.l1;
             let link = Arc::new(Link::new(member.bandwidth_mbps));
             let mut device = DeviceClient::connect(
                 &cloud.addr.to_string(),
@@ -378,7 +381,7 @@ mod tests {
             })
             .collect();
         let mut presolved = cache.presolve_batch(&pool, requests);
-        let planned: Vec<Option<usize>> = members
+        let planned: Vec<Option<SplitPlan>> = members
             .iter()
             .map(|&(p, bw)| {
                 let key = key_of(p, bw);

@@ -99,6 +99,29 @@ pub mod profiles {
         slowdown_vs_host: 1.0,
     });
 
+    /// Metro edge server: a small aggregation-site box of the class
+    /// SplitPlace-style deployments colocate near the access network —
+    /// one wired hop closer than the core cloud but slower per byte
+    /// (4×2.0 GHz, general-purpose serving stack ⇒ higher cycles/byte
+    /// than the cloud's tuned BLAS path). That deliberate per-byte
+    /// deficit is what makes the tiered trade-off real: torso layers
+    /// are worth placing at the edge exactly while shrinking the
+    /// activation saves more backhaul time than the slower compute
+    /// costs, so conv trunks land at the edge and the parameter-heavy
+    /// fc tail stays in the cloud instead of one tier degenerately
+    /// absorbing everything.
+    pub static EDGE_SERVER: Lazy<ComputeProfile> = Lazy::new(|| ComputeProfile {
+        name: "edge_server",
+        cores: 4,
+        clock_hz: 2.0e9,
+        freq_ghz: 2.0,
+        memory_bytes: 16 * 1024 * 1024 * 1024,
+        battery_mah: None,
+        wifi: None,
+        cycles_per_byte: 3.0,
+        slowdown_vs_host: 1.0,
+    });
+
     pub fn samsung_j6() -> &'static ComputeProfile {
         &SAMSUNG_J6
     }
@@ -111,11 +134,16 @@ pub mod profiles {
         &CLOUD_SERVER
     }
 
+    pub fn edge_server() -> &'static ComputeProfile {
+        &EDGE_SERVER
+    }
+
     pub fn by_name(name: &str) -> Option<&'static ComputeProfile> {
         match name {
             "samsung_j6" | "j6" => Some(samsung_j6()),
             "redmi_note8" | "redmi" => Some(redmi_note8()),
             "cloud_server" | "cloud" => Some(cloud_server()),
+            "edge_server" | "edge" => Some(edge_server()),
             _ => None,
         }
     }

@@ -1,0 +1,78 @@
+//! Three-tier hierarchical splitting: device → metro edge → core cloud.
+//!
+//! SmartSplit's formulation assumes one split point between a phone and
+//! one cloud. Realistic deployments put a metro edge tier in between
+//! (SplitPlace, Tuli 2021; Tassi et al.'s head/torso/tail partition):
+//! the phone runs the *head*, its assigned edge site the *torso*, and
+//! the core cloud the *tail*. This module owns everything that
+//! generalisation needs:
+//!
+//! * [`topology`] — [`EdgeTopology`]: edge sites with per-site server
+//!   pools, a device→site [`AssignmentPolicy`], and wired
+//!   [`BackhaulLink`]s up to the core (no radio-power term — backhaul
+//!   costs time, never device energy);
+//! * [`perfmodel`] — [`TieredPerfModel`]: the §III tables evaluated at a
+//!   `(l1, l2)` partition, charging two transfers (device→edge over the
+//!   radio, edge→cloud over the backhaul);
+//! * [`problem`] — [`TieredSplitProblem`]: the 2-D genome over the same
+//!   allocation-free NSGA-II engine, plus the exhaustive tiered front
+//!   and the band-weighted TOPSIS picks.
+//!
+//! The degeneracy contract (DESIGN.md §7): a topology with zero edge
+//! servers and a [`BackhaulLink::FREE`] backhaul makes every objective,
+//! the Pareto front, and the TOPSIS pick collapse to the paper's
+//! two-tier values bit-for-bit — pinned by `tests/edge_parity.rs` and
+//! `tests/edge_props.rs`.
+
+pub mod perfmodel;
+pub mod problem;
+pub mod topology;
+
+pub use perfmodel::{TieredLatencyBreakdown, TieredPerfModel};
+pub use problem::{
+    exhaustive_tiered_front, tiered_smartsplit_banded, tiered_split_banded, TieredSplitProblem,
+};
+pub use topology::{AssignmentPolicy, BackhaulLink, EdgeSite, EdgeTopology};
+
+/// A two-point split decision: layers `1..=l1` on the device (head),
+/// `l1+1..=l2` at the edge (torso), `l2+1..=L` in the cloud (tail).
+/// `l1 == l2` is the paper's two-tier split (empty torso); `l2 == L`
+/// runs the whole tail at the edge (nothing crosses the backhaul).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SplitPlan {
+    pub l1: usize,
+    pub l2: usize,
+}
+
+impl SplitPlan {
+    /// The paper's single-split decision embedded in the tiered space.
+    pub fn two_tier(l1: usize) -> SplitPlan {
+        SplitPlan { l1, l2: l1 }
+    }
+
+    /// Torso depth in layers; `0` means no edge compute.
+    pub fn torso_layers(&self) -> usize {
+        self.l2.saturating_sub(self.l1)
+    }
+
+    /// Does this plan skip the edge compute tier entirely?
+    pub fn is_two_tier(&self) -> bool {
+        self.l1 == self.l2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_tier_embedding() {
+        let p = SplitPlan::two_tier(5);
+        assert_eq!(p, SplitPlan { l1: 5, l2: 5 });
+        assert!(p.is_two_tier());
+        assert_eq!(p.torso_layers(), 0);
+        let t = SplitPlan { l1: 3, l2: 9 };
+        assert!(!t.is_two_tier());
+        assert_eq!(t.torso_layers(), 6);
+    }
+}

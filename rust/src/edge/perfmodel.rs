@@ -1,0 +1,275 @@
+//! §III generalised to a three-tier hierarchy: a `(l1, l2)` partition
+//! runs layers `1..=l1` on the phone (head), `l1+1..=l2` on the
+//! assigned edge site (torso) and `l2+1..=L` in the core cloud (tail).
+//!
+//! The first hop (device→edge) is the paper's radio link unchanged —
+//! Eq. 4 transfer time, Eq. 8 upload power — so the device-side energy
+//! and memory objectives are *identical* to the two-tier model at the
+//! same `l1`. The second hop (edge→cloud) rides the site's wired
+//! [`BackhaulLink`]: it costs latency only, never device energy.
+//!
+//! Degeneracy contract (pinned by `tests/edge_parity.rs` and the
+//! property tests): with an empty torso (`l1 == l2`) and a free
+//! backhaul, every objective equals [`PerfModel`]'s value at `l1`
+//! bit-for-bit, so a zero-edge-server topology with
+//! [`BackhaulLink::FREE`] reproduces the paper's two-tier decisions
+//! exactly.
+
+use crate::device::ComputeProfile;
+use crate::perfmodel::PerfModel;
+
+use super::topology::BackhaulLink;
+use super::SplitPlan;
+
+/// Component breakdown of the tiered end-to-end latency (seconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TieredLatencyBreakdown {
+    /// Head compute on the phone (Eq. 2).
+    pub head_s: f64,
+    /// Device→edge activation upload over the radio link (Eq. 4).
+    pub hop1_s: f64,
+    /// Torso compute at the edge site (Eq. 3 with the edge profile).
+    pub torso_s: f64,
+    /// Edge→cloud activation transfer over the wired backhaul.
+    pub backhaul_s: f64,
+    /// Tail compute in the core cloud (Eq. 3).
+    pub tail_s: f64,
+}
+
+impl TieredLatencyBreakdown {
+    /// End-to-end latency; the result download is excluded exactly as
+    /// the paper excludes it from Eq. 5 totals.
+    pub fn total(&self) -> f64 {
+        self.head_s + self.hop1_s + self.torso_s + self.backhaul_s + self.tail_s
+    }
+}
+
+/// Evaluation context for one device under a three-tier hierarchy.
+#[derive(Clone, Debug)]
+pub struct TieredPerfModel<'a> {
+    /// The paper's two-tier model for this device: client profile,
+    /// radio, device link, model profile, and the *cloud* server profile
+    /// (the tail still runs there).
+    pub device: PerfModel<'a>,
+    /// Compute profile of one server at the assigned edge site.
+    pub edge: &'static ComputeProfile,
+    /// Torso servers at the site; `0` disables the compute tier (only
+    /// empty-torso plans are feasible — the site is a pure relay).
+    pub edge_servers: usize,
+    pub backhaul: BackhaulLink,
+}
+
+impl<'a> TieredPerfModel<'a> {
+    pub fn new(
+        device: PerfModel<'a>,
+        edge: &'static ComputeProfile,
+        edge_servers: usize,
+        backhaul: BackhaulLink,
+    ) -> Self {
+        TieredPerfModel { device, edge, edge_servers, backhaul }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.device.profile.num_layers
+    }
+
+    /// Torso working set in bytes: layers `l1+1..=l2` (params + activations).
+    pub fn torso_memory_bytes(&self, plan: SplitPlan) -> u64 {
+        assert!(plan.l1 <= plan.l2, "unordered plan {plan:?}");
+        self.device.profile.client_memory_bytes(plan.l2)
+            - self.device.profile.client_memory_bytes(plan.l1)
+    }
+
+    /// Torso compute time at the edge (Eq. 3 with the edge profile).
+    pub fn torso_latency_s(&self, plan: SplitPlan) -> f64 {
+        let m = self.torso_memory_bytes(plan) as f64;
+        m * self.edge.cycles_per_byte / (self.edge.cores as f64 * self.edge.clock_hz)
+    }
+
+    /// Edge→cloud transfer time of the activation at `l2`; zero when the
+    /// tail is empty (`l2 == L`: nothing crosses the backhaul).
+    pub fn backhaul_latency_s(&self, plan: SplitPlan) -> f64 {
+        if plan.l2 >= self.num_layers() {
+            return 0.0;
+        }
+        self.backhaul.transfer_s(self.device.profile.intermediate_bytes(plan.l2))
+    }
+
+    /// Full latency breakdown at `plan`.
+    pub fn latency(&self, plan: SplitPlan) -> TieredLatencyBreakdown {
+        TieredLatencyBreakdown {
+            head_s: self.device.client_latency_s(plan.l1),
+            hop1_s: self.device.upload_latency_s(plan.l1),
+            torso_s: self.torso_latency_s(plan),
+            backhaul_s: self.backhaul_latency_s(plan),
+            tail_s: self.device.server_latency_s(plan.l2),
+        }
+    }
+
+    /// Eq. 14 generalised: end-to-end latency (seconds).
+    pub fn f1(&self, plan: SplitPlan) -> f64 {
+        self.latency(plan).total()
+    }
+
+    /// Eq. 15: device energy. Depends on `l1` only — the head compute
+    /// and the radio upload are the phone's entire bill; torso, backhaul
+    /// and tail never touch its battery.
+    pub fn f2(&self, plan: SplitPlan) -> f64 {
+        self.device.f2(plan.l1)
+    }
+
+    /// Eq. 16: device memory — `l1` only, as in the two-tier model.
+    pub fn f3(&self, plan: SplitPlan) -> f64 {
+        self.device.f3(plan.l1)
+    }
+
+    pub fn objectives(&self, plan: SplitPlan) -> [f64; 3] {
+        [self.f1(plan), self.f2(plan), self.f3(plan)]
+    }
+
+    /// Eq. 17 generalised. Graded (for constraint domination during
+    /// evolution); `0.0` iff the plan is feasible:
+    /// * `1 ≤ l1 ≤ l2 ≤ L` (ordering violations graded by the gap);
+    /// * `l1 == L` (COS — every layer on the phone) stays infeasible,
+    ///   mirroring [`crate::optimizer::SplitProblem`];
+    /// * a non-empty torso needs at least one edge server;
+    /// * the head working set must fit the phone (graded);
+    /// * throughput constraints `τ ≤ B` on the radio link.
+    pub fn violation(&self, plan: SplitPlan) -> f64 {
+        let l = self.num_layers();
+        let mut v = 0.0;
+        if plan.l1 > plan.l2 {
+            v += 1.0 + (plan.l1 - plan.l2) as f64 / l as f64;
+        }
+        if plan.l1 + 1 > l {
+            v += 1.0;
+        }
+        if plan.l2 > plan.l1 && self.edge_servers == 0 {
+            // Graded by torso depth so constraint domination has a
+            // gradient toward the (feasible) diagonal on relay-only
+            // sites — a flat penalty would leave the GA searching for
+            // `l1 == l2` by blind luck.
+            v += 1.0 + (plan.l2 - plan.l1) as f64 / l as f64;
+        }
+        let mem = self.device.profile.client_memory_bytes(plan.l1.min(l));
+        let cap = self.device.client.memory_bytes;
+        if mem > cap {
+            v += (mem - cap) as f64 / cap as f64;
+        }
+        if !self.device.net.satisfies_constraints() {
+            v += 1.0;
+        }
+        v
+    }
+
+    pub fn feasible(&self, plan: SplitPlan) -> bool {
+        self.violation(plan) == 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::models::zoo;
+    use crate::perfmodel::{NetworkEnv, RadioPower};
+
+    fn device_pm(profile: &crate::models::ModelProfile) -> PerfModel<'_> {
+        PerfModel::new(
+            profiles::samsung_j6(),
+            profiles::cloud_server(),
+            RadioPower::PAPER_80211N,
+            NetworkEnv::paper_default(),
+            profile,
+        )
+    }
+
+    fn tiered(profile: &crate::models::ModelProfile) -> TieredPerfModel<'_> {
+        TieredPerfModel::new(
+            device_pm(profile),
+            profiles::edge_server(),
+            2,
+            BackhaulLink::METRO_1GBE,
+        )
+    }
+
+    #[test]
+    fn empty_torso_free_backhaul_equals_two_tier_exactly() {
+        let profile = zoo::alexnet().analyze(1);
+        let mut t = tiered(&profile);
+        t.backhaul = BackhaulLink::FREE;
+        for l1 in 1..=21 {
+            let plan = SplitPlan::two_tier(l1);
+            assert_eq!(t.f1(plan), t.device.f1(l1), "f1 at l1={l1}");
+            assert_eq!(t.f2(plan), t.device.f2(l1), "f2 at l1={l1}");
+            assert_eq!(t.f3(plan), t.device.f3(l1), "f3 at l1={l1}");
+        }
+    }
+
+    #[test]
+    fn torso_offload_shortens_cloud_tail() {
+        let profile = zoo::alexnet().analyze(1);
+        let t = tiered(&profile);
+        let two = SplitPlan { l1: 3, l2: 3 };
+        let three = SplitPlan { l1: 3, l2: 10 };
+        let b2 = t.latency(two);
+        let b3 = t.latency(three);
+        assert_eq!(b2.torso_s, 0.0);
+        assert!(b3.torso_s > 0.0);
+        assert!(b3.tail_s < b2.tail_s, "torso must shrink the tail");
+        // Head-side terms are untouched by l2.
+        assert_eq!(b2.head_s, b3.head_s);
+        assert_eq!(b2.hop1_s, b3.hop1_s);
+    }
+
+    #[test]
+    fn torso_memory_partitions_the_model() {
+        let profile = zoo::alexnet().analyze(1);
+        let t = tiered(&profile);
+        let total = profile.client_memory_bytes(profile.num_layers);
+        for (l1, l2) in [(1, 5), (3, 3), (5, 21)] {
+            let plan = SplitPlan { l1, l2 };
+            let head = profile.client_memory_bytes(l1);
+            let tail = profile.server_memory_bytes(l2);
+            assert_eq!(head + t.torso_memory_bytes(plan) + tail, total);
+        }
+    }
+
+    #[test]
+    fn backhaul_charged_only_when_tail_nonempty() {
+        let profile = zoo::alexnet().analyze(1);
+        let t = tiered(&profile);
+        assert!(t.backhaul_latency_s(SplitPlan { l1: 3, l2: 10 }) > 0.0);
+        // Tail empty: nothing crosses the backhaul.
+        assert_eq!(t.backhaul_latency_s(SplitPlan { l1: 3, l2: 21 }), 0.0);
+    }
+
+    #[test]
+    fn device_energy_is_independent_of_l2() {
+        let profile = zoo::alexnet().analyze(1);
+        let t = tiered(&profile);
+        for l2 in 5..=21 {
+            assert_eq!(t.f2(SplitPlan { l1: 5, l2 }), t.f2(SplitPlan { l1: 5, l2: 5 }));
+        }
+    }
+
+    #[test]
+    fn violation_rules() {
+        let profile = zoo::alexnet().analyze(1);
+        let t = tiered(&profile);
+        // Ordering: l1 > l2 always infeasible.
+        assert!(t.violation(SplitPlan { l1: 10, l2: 3 }) > 0.0);
+        // COS stays infeasible (mirrors SplitProblem).
+        assert!(t.violation(SplitPlan { l1: 21, l2: 21 }) > 0.0);
+        // Edge-only tail (l2 == L, torso at the edge) is legal.
+        assert!(t.feasible(SplitPlan { l1: 3, l2: 21 }));
+        // Plain plans are feasible.
+        assert!(t.feasible(SplitPlan { l1: 3, l2: 10 }));
+        assert!(t.feasible(SplitPlan::two_tier(5)));
+        // Zero servers: torso plans infeasible, relays stay legal.
+        let mut relay = tiered(&profile);
+        relay.edge_servers = 0;
+        assert!(relay.violation(SplitPlan { l1: 3, l2: 10 }) > 0.0);
+        assert!(relay.feasible(SplitPlan::two_tier(3)));
+    }
+}

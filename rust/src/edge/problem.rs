@@ -1,0 +1,313 @@
+//! The tiered optimisation problem: a 2-D genome `[l1, l2]` over the
+//! same NSGA-II engine, plus the exhaustive tiered Pareto front and the
+//! band-weighted TOPSIS pick — Algorithm 1 generalised to two split
+//! points.
+//!
+//! §Perf note: the 2-D split domain is still tiny (`L² ≤ 1444`
+//! candidates), so both objective vectors and violations are memoised
+//! up front exactly like [`crate::optimizer::SplitProblem`]; the
+//! solver's ~10⁴ evaluations are table reads. Candidates with
+//! `l1 > l2` keep a graded violation so Deb's constraint-domination
+//! rule breeds them out — every member of the returned front satisfies
+//! `l1 ≤ l2` by construction (`tests/edge_props.rs`).
+
+use crate::coordinator::battery::BatteryBand;
+use crate::optimizer::nsga2::{Genome, Nsga2Params, Problem};
+use crate::optimizer::topsis::topsis;
+
+use super::perfmodel::TieredPerfModel;
+use super::SplitPlan;
+
+/// NSGA-II view of one tiered (model, device, edge site, network)
+/// configuration.
+pub struct TieredSplitProblem {
+    num_layers: usize,
+    /// Memoised `[f1, f2, f3]` for every `(l1, l2)` pair (row-major,
+    /// index `(l1-1)·L + (l2-1)`). Unordered pairs store the sorted
+    /// pair's objectives so values stay finite; their violation marks
+    /// them infeasible regardless.
+    objectives: Vec<[f64; 3]>,
+    violations: Vec<f64>,
+}
+
+impl TieredSplitProblem {
+    pub fn new(tpm: &TieredPerfModel<'_>) -> Self {
+        let l = tpm.num_layers();
+        let mut objectives: Vec<[f64; 3]> = Vec::with_capacity(l * l);
+        let mut violations = Vec::with_capacity(l * l);
+        for l1 in 1..=l {
+            for l2 in 1..=l {
+                // Unordered pairs mirror the sorted pair's (already
+                // computed — it lives in an earlier row) objectives, so
+                // only the feasible triangle walks the layer tables.
+                let obj = if l2 >= l1 {
+                    tpm.objectives(SplitPlan { l1, l2 })
+                } else {
+                    objectives[(l2 - 1) * l + (l1 - 1)]
+                };
+                objectives.push(obj);
+                violations.push(tpm.violation(SplitPlan { l1, l2 }));
+            }
+        }
+        TieredSplitProblem { num_layers: l, objectives, violations }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.num_layers
+    }
+
+    fn idx(&self, plan: SplitPlan) -> usize {
+        (plan.l1 - 1) * self.num_layers + (plan.l2 - 1)
+    }
+
+    /// Memoised objective lookup for a concrete plan.
+    pub fn objectives_at(&self, plan: SplitPlan) -> [f64; 3] {
+        self.objectives[self.idx(plan)]
+    }
+
+    pub fn feasible_at(&self, plan: SplitPlan) -> bool {
+        self.violations[self.idx(plan)] == 0.0
+    }
+}
+
+impl Problem for TieredSplitProblem {
+    fn bounds(&self) -> Vec<(i64, i64)> {
+        vec![(1, self.num_layers as i64), (1, self.num_layers as i64)]
+    }
+
+    fn objectives(&self, g: &Genome) -> Vec<f64> {
+        let i = (g[0] - 1) as usize * self.num_layers + (g[1] - 1) as usize;
+        self.objectives[i].to_vec()
+    }
+
+    fn violation(&self, g: &Genome) -> f64 {
+        let i = (g[0] - 1) as usize * self.num_layers + (g[1] - 1) as usize;
+        self.violations[i]
+    }
+
+    fn num_objectives(&self) -> usize {
+        3
+    }
+
+    /// Zero-alloc hot path: one memo-table row copy per evaluation.
+    fn objectives_into(&self, g: &[i64], out: &mut [f64]) {
+        let i = (g[0] - 1) as usize * self.num_layers + (g[1] - 1) as usize;
+        out.copy_from_slice(&self.objectives[i]);
+    }
+
+    fn violation_of(&self, g: &[i64]) -> f64 {
+        let i = (g[0] - 1) as usize * self.num_layers + (g[1] - 1) as usize;
+        self.violations[i]
+    }
+}
+
+/// The true Pareto front of the tiered problem with its objective
+/// vectors, by exhaustive enumeration of the feasible `(l1, l2)`
+/// triangle, in lexicographic order.
+fn tiered_front_with_objectives(tpm: &TieredPerfModel<'_>) -> Vec<(SplitPlan, [f64; 3])> {
+    let l = tpm.num_layers();
+    let mut cands: Vec<(SplitPlan, [f64; 3])> = Vec::new();
+    for l1 in 1..=l {
+        for l2 in l1..=l {
+            let plan = SplitPlan { l1, l2 };
+            if tpm.feasible(plan) {
+                cands.push((plan, tpm.objectives(plan)));
+            }
+        }
+    }
+    cands
+        .iter()
+        .filter(|(_, a)| {
+            !cands.iter().any(|(_, b)| {
+                b.iter().zip(a).all(|(x, y)| x <= y) && b.iter().zip(a).any(|(x, y)| x < y)
+            })
+        })
+        .copied()
+        .collect()
+}
+
+/// The true Pareto front of the tiered problem, by exhaustive
+/// enumeration of the feasible `(l1, l2)` triangle. Returned in
+/// lexicographic `(l1, l2)` order — with a disabled edge tier this is
+/// exactly [`crate::optimizer::exhaustive_pareto_front`]'s order, which
+/// is what makes the degenerate TOPSIS pick byte-comparable.
+pub fn exhaustive_tiered_front(tpm: &TieredPerfModel<'_>) -> Vec<SplitPlan> {
+    tiered_front_with_objectives(tpm).into_iter().map(|(p, _)| p).collect()
+}
+
+/// Battery-band-weighted TOPSIS over the exhaustive tiered front — the
+/// tiered analogue of
+/// [`crate::coordinator::battery::battery_aware_split_banded`] (the
+/// `Topsis` planner kind). Deterministic by construction.
+pub fn tiered_split_banded(tpm: &TieredPerfModel<'_>, band: BatteryBand) -> Option<SplitPlan> {
+    let front = tiered_front_with_objectives(tpm);
+    if front.is_empty() {
+        return None;
+    }
+    let w = band.energy_weight();
+    let rows: Vec<Vec<f64>> = front
+        .iter()
+        .map(|(_, o)| vec![o[0], o[1] * w, o[2]])
+        .collect();
+    let feasible = vec![true; rows.len()];
+    topsis(&rows, &feasible).map(|r| front[r.chosen].0)
+}
+
+/// Full Algorithm 1 on the 2-D genome: NSGA-II Pareto set (through the
+/// shared per-thread fleet solver), f2 column scaled by the battery
+/// band, TOPSIS choice — the tiered analogue of
+/// [`crate::optimizer::smartsplit_banded`].
+pub fn tiered_smartsplit_banded(
+    tpm: &TieredPerfModel<'_>,
+    params: &Nsga2Params,
+    band: BatteryBand,
+) -> Option<SplitPlan> {
+    let problem = TieredSplitProblem::new(tpm);
+    let set = crate::optimizer::cache::with_fleet_solver(|s| s.solve(&problem, params));
+    let plans: Vec<SplitPlan> = set
+        .members
+        .iter()
+        .map(|m| SplitPlan { l1: m.genome[0] as usize, l2: m.genome[1] as usize })
+        .collect();
+    if plans.is_empty() {
+        return None;
+    }
+    let w = band.energy_weight();
+    let rows: Vec<Vec<f64>> = plans
+        .iter()
+        .map(|&p| {
+            let o = problem.objectives_at(p);
+            vec![o[0], o[1] * w, o[2]]
+        })
+        .collect();
+    let feasible: Vec<bool> = plans.iter().map(|&p| problem.feasible_at(p)).collect();
+    topsis(&rows, &feasible).map(|r| plans[r.chosen])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::edge::BackhaulLink;
+    use crate::models::zoo;
+    use crate::optimizer::exhaustive_pareto_front;
+    use crate::perfmodel::{NetworkEnv, PerfModel, RadioPower};
+
+    fn tiered(profile: &crate::models::ModelProfile, servers: usize) -> TieredPerfModel<'_> {
+        TieredPerfModel::new(
+            PerfModel::new(
+                profiles::samsung_j6(),
+                profiles::cloud_server(),
+                RadioPower::PAPER_80211N,
+                NetworkEnv::paper_default(),
+                profile,
+            ),
+            profiles::edge_server(),
+            servers,
+            BackhaulLink::METRO_1GBE,
+        )
+    }
+
+    #[test]
+    fn memoisation_matches_direct_evaluation() {
+        let profile = zoo::alexnet().analyze(1);
+        let tpm = tiered(&profile, 2);
+        let p = TieredSplitProblem::new(&tpm);
+        for l1 in 1..=21 {
+            for l2 in l1..=21 {
+                let plan = SplitPlan { l1, l2 };
+                assert_eq!(p.objectives_at(plan), tpm.objectives(plan));
+                assert_eq!(p.feasible_at(plan), tpm.feasible(plan));
+            }
+        }
+    }
+
+    #[test]
+    fn fast_paths_match_trait_defaults() {
+        let profile = zoo::alexnet().analyze(1);
+        let tpm = tiered(&profile, 2);
+        let p = TieredSplitProblem::new(&tpm);
+        for l1 in 1..=21i64 {
+            for l2 in 1..=21i64 {
+                let g = vec![l1, l2];
+                let mut out = [0.0; 3];
+                p.objectives_into(&g, &mut out);
+                assert_eq!(out.to_vec(), p.objectives(&g));
+                assert_eq!(p.violation_of(&g), p.violation(&g));
+            }
+        }
+    }
+
+    #[test]
+    fn bounds_span_both_split_points() {
+        let profile = zoo::alexnet().analyze(1);
+        let tpm = tiered(&profile, 2);
+        assert_eq!(TieredSplitProblem::new(&tpm).bounds(), vec![(1, 21), (1, 21)]);
+    }
+
+    #[test]
+    fn unordered_genomes_are_infeasible() {
+        let profile = zoo::alexnet().analyze(1);
+        let tpm = tiered(&profile, 2);
+        let p = TieredSplitProblem::new(&tpm);
+        for l1 in 2..=21i64 {
+            for l2 in 1..l1 {
+                assert!(p.violation_of(&[l1, l2]) > 0.0, "({l1},{l2}) must violate");
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_edge_front_equals_two_tier_front() {
+        // Zero servers + free backhaul: the tiered front must be the
+        // two-tier front embedded on the diagonal, in the same order.
+        let profile = zoo::alexnet().analyze(1);
+        let mut tpm = tiered(&profile, 0);
+        tpm.backhaul = BackhaulLink::FREE;
+        let front = exhaustive_tiered_front(&tpm);
+        let two_tier = exhaustive_pareto_front(&tpm.device);
+        assert_eq!(
+            front.iter().map(|p| p.l1).collect::<Vec<_>>(),
+            two_tier,
+            "tiered front diverged from the two-tier front"
+        );
+        assert!(front.iter().all(|p| p.l1 == p.l2), "non-diagonal plan in a relay topology");
+    }
+
+    #[test]
+    fn nsga2_members_respect_ordering() {
+        let profile = zoo::vgg16().analyze(1);
+        let tpm = tiered(&profile, 4);
+        let problem = TieredSplitProblem::new(&tpm);
+        let params = Nsga2Params::for_small_genome(2);
+        let set = crate::optimizer::optimize(&problem, &params);
+        assert!(!set.members.is_empty());
+        for m in &set.members {
+            assert!(
+                m.genome[0] <= m.genome[1],
+                "solver returned unordered plan {:?}",
+                m.genome
+            );
+            assert_eq!(m.violation, 0.0);
+        }
+    }
+
+    #[test]
+    fn slow_backhaul_pulls_torso_to_the_edge() {
+        // The edge is slower per byte than the cloud, so torso placement
+        // is only worth it while shrinking the activation saves more
+        // backhaul time than the slower compute costs. On a congested
+        // backhaul that trade is strongly positive for the conv trunk:
+        // the TOPSIS pick must carry a real torso — and with the edge
+        // disabled (relay sites) it never can.
+        let profile = zoo::vgg16().analyze(1);
+        let mut tpm = tiered(&profile, 8);
+        tpm.backhaul = BackhaulLink { bandwidth_mbps: 20.0, latency_s: 5e-3 };
+        let plan = tiered_split_banded(&tpm, BatteryBand::Comfort).unwrap();
+        assert!(plan.l2 > plan.l1, "slow backhaul should favour edge torso, got {plan:?}");
+        let mut relay = tiered(&profile, 0);
+        relay.backhaul = BackhaulLink { bandwidth_mbps: 20.0, latency_s: 5e-3 };
+        let plan = tiered_split_banded(&relay, BatteryBand::Comfort).unwrap();
+        assert_eq!(plan.l1, plan.l2);
+    }
+}

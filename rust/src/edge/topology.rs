@@ -1,0 +1,138 @@
+//! Edge topology: metro sites between the phones and the core cloud.
+//!
+//! An [`EdgeTopology`] is the static description the planner and the
+//! fleet simulator share: a set of [`EdgeSite`]s (each a small server
+//! pool with a wired backhaul up to the core cloud) plus the
+//! device→site [`AssignmentPolicy`]. Devices talk to their assigned
+//! site over their own radio link (the §III device model, unchanged);
+//! the site talks to the cloud over its [`BackhaulLink`] — wired, so
+//! no [`crate::perfmodel::RadioPower`] term and no device energy is
+//! charged for the second hop.
+
+use crate::device::ComputeProfile;
+
+/// Wired edge→cloud link: fixed bandwidth plus a propagation latency.
+/// No radio power model — backhaul transfers cost time, never device
+/// energy (the phone's radio finished its part at the first hop).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BackhaulLink {
+    pub bandwidth_mbps: f64,
+    /// One-way propagation delay added to every transfer.
+    pub latency_s: f64,
+}
+
+impl BackhaulLink {
+    /// Metro-Ethernet-class default: 1 Gbps, 2 ms one way.
+    pub const METRO_1GBE: BackhaulLink =
+        BackhaulLink { bandwidth_mbps: 1000.0, latency_s: 2e-3 };
+
+    /// A cost-free backhaul (infinite bandwidth, zero latency): the
+    /// degenerate configuration under which the tiered planner must
+    /// collapse to the paper's two-tier split (DESIGN.md §7).
+    pub const FREE: BackhaulLink =
+        BackhaulLink { bandwidth_mbps: f64::INFINITY, latency_s: 0.0 };
+
+    /// Transfer time for `bytes` over this link (Eq. 4 with the wired
+    /// bandwidth, plus propagation). An infinite-bandwidth link costs
+    /// exactly `latency_s`.
+    pub fn transfer_s(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let serialize = if self.bandwidth_mbps.is_finite() {
+            bytes as f64 * 8.0 / (self.bandwidth_mbps * 1e6)
+        } else {
+            0.0
+        };
+        serialize + self.latency_s
+    }
+
+    /// A backhaul that never costs anything — neither serialisation nor
+    /// propagation.
+    pub fn is_free(&self) -> bool {
+        !self.bandwidth_mbps.is_finite() && self.latency_s == 0.0
+    }
+}
+
+/// One metro edge site: a server pool and its uplink to the core cloud.
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeSite {
+    /// Parallel torso servers at this site (`c` of the site's M/G/c
+    /// queue). `0` disables the compute tier: the site degrades to a
+    /// pure relay and only empty-torso plans (`l1 == l2`) are feasible.
+    pub servers: usize,
+    /// Compute profile of one edge server.
+    pub profile: &'static ComputeProfile,
+    pub backhaul: BackhaulLink,
+}
+
+/// How devices map onto edge sites.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AssignmentPolicy {
+    /// `device_id % sites` — the deterministic default (a city where
+    /// homes are spread uniformly over the metro footprint).
+    RoundRobin,
+}
+
+/// The full edge tier: sites plus the device→site assignment.
+#[derive(Clone, Debug)]
+pub struct EdgeTopology {
+    pub sites: Vec<EdgeSite>,
+    pub assignment: AssignmentPolicy,
+}
+
+impl EdgeTopology {
+    /// A uniform topology: `sites` identical sites.
+    pub fn uniform(sites: usize, site: EdgeSite) -> EdgeTopology {
+        assert!(sites > 0, "an edge topology needs at least one site");
+        EdgeTopology { sites: vec![site; sites], assignment: AssignmentPolicy::RoundRobin }
+    }
+
+    /// Site index serving device `device_id`.
+    pub fn site_of(&self, device_id: usize) -> usize {
+        match self.assignment {
+            AssignmentPolicy::RoundRobin => device_id % self.sites.len(),
+        }
+    }
+
+    pub fn num_sites(&self) -> usize {
+        self.sites.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+
+    #[test]
+    fn backhaul_transfer_time() {
+        let b = BackhaulLink { bandwidth_mbps: 100.0, latency_s: 0.001 };
+        // 1 MB at 100 Mbps = 80 ms + 1 ms propagation.
+        assert!((b.transfer_s(1_000_000) - 0.081).abs() < 1e-12);
+        assert_eq!(b.transfer_s(0), 0.0);
+    }
+
+    #[test]
+    fn free_backhaul_costs_nothing() {
+        assert!(BackhaulLink::FREE.is_free());
+        assert_eq!(BackhaulLink::FREE.transfer_s(10_000_000), 0.0);
+        assert!(!BackhaulLink::METRO_1GBE.is_free());
+    }
+
+    #[test]
+    fn round_robin_assignment_cycles() {
+        let topo = EdgeTopology::uniform(
+            3,
+            EdgeSite {
+                servers: 2,
+                profile: profiles::edge_server(),
+                backhaul: BackhaulLink::METRO_1GBE,
+            },
+        );
+        assert_eq!(topo.num_sites(), 3);
+        for d in 0..9 {
+            assert_eq!(topo.site_of(d), d % 3);
+        }
+    }
+}

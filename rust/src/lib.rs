@@ -15,8 +15,10 @@
 //!   §III latency/energy models ([`perfmodel`]), the smartphone/cloud/
 //!   link simulation ([`device`], [`netsim`]), the PJRT runtime
 //!   ([`runtime`]), the TCP split-serving stack ([`serve`],
-//!   [`coordinator`]) and the discrete-event fleet simulator ([`sim`])
-//!   that scales scenarios past what sockets can host.
+//!   [`coordinator`]), the discrete-event fleet simulator ([`sim`])
+//!   that scales scenarios past what sockets can host, and the
+//!   hierarchical edge tier ([`edge`]) that generalises the single
+//!   split point to a device→edge→cloud `(l1, l2)` partition.
 //!
 //! See [DESIGN.md](../DESIGN.md) for the architecture, the offline
 //! substrate policy (§4), and the paper-vs-model validation story.
@@ -24,6 +26,7 @@
 pub mod bench;
 pub mod coordinator;
 pub mod device;
+pub mod edge;
 pub mod figures;
 pub mod metrics;
 pub mod models;

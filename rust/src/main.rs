@@ -53,11 +53,14 @@ fn cli() -> Cli {
     .opt("pop", "100", "NSGA-II population size")
     .opt("gens", "250", "NSGA-II generations")
     .opt("seed", "7", "PRNG seed")
-    .opt("scenario", "city", "simulate: city | two-phone")
+    .opt("scenario", "city", "simulate: city | city-tiered | two-phone")
     .opt("devices", "10000", "simulate: fleet size (city scenario)")
     .opt("sim-duration", "10m", "simulate: virtual horizon (90, 90s, 10m, 2h)")
     .opt("clouds", "0", "simulate: cloud count override (0 = scenario default)")
     .opt("cloud-servers", "0", "simulate: servers per cloud override (0 = scenario default)")
+    .opt("edge-sites", "0", "simulate: metro edge sites (0 = scenario default: none, or 3 for city-tiered)")
+    .opt("edge-servers", "4", "simulate: torso servers per edge site")
+    .opt("backhaul", "1000", "simulate: edge→cloud backhaul bandwidth in Mbps")
     .flag("no-churn", "simulate: disable device churn")
     .flag("no-slowdown", "disable phone-speed emulation")
     .flag("verbose", "log at info level")
@@ -182,6 +185,7 @@ fn run(args: &[String]) -> Result<()> {
         "simulate" => {
             use smartsplit::sim;
             let duration = parsed.get_duration_s("sim-duration");
+            let edge_sites = parsed.get_usize("edge-sites");
             let mut sim_cfg = match parsed.get("scenario") {
                 "city" => sim::city_scale(
                     &cfg.model,
@@ -189,15 +193,24 @@ fn run(args: &[String]) -> Result<()> {
                     duration,
                     cfg.seed,
                 ),
+                "city-tiered" => sim::city_scale_tiered(
+                    &cfg.model,
+                    parsed.get_usize("devices"),
+                    if edge_sites > 0 { edge_sites } else { 3 },
+                    duration,
+                    cfg.seed,
+                ),
                 "two-phone" => {
-                    // Fleet-simulation default: the 1-D split genome needs
-                    // nowhere near the canonical 100×250 budget, so unless
-                    // the user explicitly passed --pop/--gens (even at the
-                    // canonical values), plan with the tiny-genome preset.
+                    // Fleet-simulation default: the small split genome
+                    // needs nowhere near the canonical 100×250 budget, so
+                    // unless the user explicitly passed --pop/--gens (even
+                    // at the canonical values), plan with the small-genome
+                    // preset sized for the genome the run actually solves.
                     let nsga2 = if parsed.provided("pop") || parsed.provided("gens") {
                         cfg.nsga2.clone()
                     } else {
-                        Nsga2Params { seed: cfg.seed, ..Nsga2Params::for_tiny_genome() }
+                        let dim = if edge_sites > 0 { 2 } else { 1 };
+                        Nsga2Params { seed: cfg.seed, ..Nsga2Params::for_small_genome(dim) }
                     };
                     let mut c = sim::two_phone_fleet(
                         &cfg.model,
@@ -208,7 +221,7 @@ fn run(args: &[String]) -> Result<()> {
                     c.duration_s = duration;
                     c
                 }
-                other => bail!("unknown --scenario {other:?} (city | two-phone)"),
+                other => bail!("unknown --scenario {other:?} (city | city-tiered | two-phone)"),
             };
             if parsed.get_usize("clouds") > 0 {
                 sim_cfg.clouds = parsed.get_usize("clouds");
@@ -216,15 +229,41 @@ fn run(args: &[String]) -> Result<()> {
             if parsed.get_usize("cloud-servers") > 0 {
                 sim_cfg.cloud_servers = parsed.get_usize("cloud-servers");
             }
+            // --edge-sites attaches the metro edge tier on any scenario
+            // without one (city-tiered already resolved its site count
+            // above); --edge-servers / --backhaul override the matching
+            // field of a preset-attached tier without discarding the
+            // preset's other choices.
+            if let Some(spec) = sim_cfg.edge.as_mut() {
+                if parsed.provided("edge-servers") {
+                    spec.servers_per_site = parsed.get_usize("edge-servers");
+                }
+                if parsed.provided("backhaul") {
+                    spec.backhaul.bandwidth_mbps = parsed.get_f64("backhaul");
+                }
+            } else if edge_sites > 0 {
+                sim_cfg.edge = Some(sim::EdgeSpec::uniform(
+                    edge_sites,
+                    parsed.get_usize("edge-servers"),
+                    parsed.get_f64("backhaul"),
+                ));
+            }
             if parsed.get_bool("no-churn") {
                 sim_cfg.churn = None;
             }
             println!(
-                "simulating {} device(s) of {} for {:.0}s virtual (seed {})...",
+                "simulating {} device(s) of {} for {:.0}s virtual (seed {}{})...",
                 sim_cfg.fleet.initial_count(),
                 sim_cfg.model,
                 sim_cfg.duration_s,
-                sim_cfg.seed
+                sim_cfg.seed,
+                match &sim_cfg.edge {
+                    Some(e) => format!(
+                        ", {} edge sites × {} servers @ {} Mbps backhaul",
+                        e.sites, e.servers_per_site, e.backhaul.bandwidth_mbps
+                    ),
+                    None => String::new(),
+                },
             );
             let report = sim::run(&sim_cfg)?;
             report.print();

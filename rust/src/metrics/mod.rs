@@ -133,14 +133,29 @@ impl Histogram {
         st.max_s
     }
 
+    /// Median latency in seconds.
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    /// 95th-percentile latency in seconds.
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    /// 99th-percentile latency in seconds.
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "n={} mean={} p50={} p95={} p99={} max={}",
             self.count(),
             crate::util::fmt_secs(self.mean_s()),
-            crate::util::fmt_secs(self.quantile(0.50)),
-            crate::util::fmt_secs(self.quantile(0.95)),
-            crate::util::fmt_secs(self.quantile(0.99)),
+            crate::util::fmt_secs(self.p50()),
+            crate::util::fmt_secs(self.p95()),
+            crate::util::fmt_secs(self.p99()),
             crate::util::fmt_secs(self.max_s()),
         )
     }
@@ -270,6 +285,10 @@ mod tests {
         assert!(p50 <= p95 && p95 <= p99);
         assert!((p50 - 0.5).abs() / 0.5 < 0.05, "p50={p50}");
         assert!((p99 - 0.99).abs() / 0.99 < 0.05, "p99={p99}");
+        // The named helpers are exactly the quantiles.
+        assert_eq!(h.p50(), p50);
+        assert_eq!(h.p95(), p95);
+        assert_eq!(h.p99(), p99);
     }
 
     #[test]

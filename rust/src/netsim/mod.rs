@@ -131,12 +131,16 @@ impl BandwidthTrace {
     }
 
     /// A step trace: every `period` the bandwidth moves to the next value,
-    /// cycling.
+    /// cycling. A step begins exactly *at* its boundary: `at(k·period)`
+    /// already reads step `k`'s value. Traces hold their last value past
+    /// `total`, and a `total` shorter than one period still yields a
+    /// (constant) one-point trace rather than an empty one.
     pub fn steps(period: Duration, values: &[f64], total: Duration) -> Self {
         assert!(!values.is_empty());
-        let mut points = Vec::new();
-        let mut t = Duration::ZERO;
-        let mut i = 0;
+        assert!(period > Duration::ZERO, "step period must be positive");
+        let mut points = vec![(Duration::ZERO, values[0])];
+        let mut t = period;
+        let mut i = 1;
         while t < total {
             points.push((t, values[i % values.len()]));
             i += 1;
@@ -145,7 +149,9 @@ impl BandwidthTrace {
         BandwidthTrace { points }
     }
 
-    /// Bandwidth at `elapsed` since trace start.
+    /// Bandwidth at `elapsed` since trace start. Clamps: before the first
+    /// point (offsets must start at 0 anyway) the first value applies,
+    /// past the last point the last value holds forever.
     pub fn at(&self, elapsed: Duration) -> f64 {
         let mut current = self.points[0].1;
         for &(t, v) in &self.points {
@@ -249,5 +255,71 @@ mod tests {
     fn constant_trace() {
         let tr = BandwidthTrace::constant(10.0);
         assert_eq!(tr.at(Duration::from_secs(1000)), 10.0);
+    }
+
+    #[test]
+    fn step_boundary_is_inclusive_on_the_new_step() {
+        // Regression: `elapsed` landing *exactly* on a step boundary must
+        // read the new step's value, one nanosecond earlier the old one.
+        let p = Duration::from_secs(10);
+        let tr = BandwidthTrace::steps(p, &[10.0, 2.0, 40.0], Duration::from_secs(40));
+        for (k, expect) in [(0u32, 10.0), (1, 2.0), (2, 40.0), (3, 10.0)] {
+            let boundary = p * k;
+            assert_eq!(tr.at(boundary), expect, "boundary k={k}");
+            if k > 0 {
+                let just_before = boundary - Duration::from_nanos(1);
+                let prev = [10.0, 2.0, 40.0][(k as usize - 1) % 3];
+                assert_eq!(tr.at(just_before), prev, "just before boundary k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn trace_longer_than_total_truncates_and_clamps() {
+        // More cycle values than fit under `total`: construction stops at
+        // the last step that *starts* before `total` (no phantom step at
+        // or past it), and queries beyond hold the final value.
+        let tr = BandwidthTrace::steps(
+            Duration::from_secs(10),
+            &[1.0, 2.0, 3.0, 4.0, 5.0],
+            Duration::from_secs(30),
+        );
+        assert_eq!(tr.points.len(), 3, "steps must stop strictly before total");
+        assert_eq!(tr.points.last().unwrap().0, Duration::from_secs(20));
+        assert_eq!(tr.at(Duration::from_secs(29)), 3.0);
+        // `total` is not a step: the value from the last real step holds.
+        assert_eq!(tr.at(Duration::from_secs(30)), 3.0);
+        assert_eq!(tr.at(Duration::from_secs(1_000_000)), 3.0);
+        // An exact-multiple total never emits a step at t == total.
+        let exact = BandwidthTrace::steps(
+            Duration::from_secs(10),
+            &[1.0, 2.0],
+            Duration::from_secs(20),
+        );
+        assert_eq!(exact.points.len(), 2);
+        assert_eq!(exact.at(Duration::from_secs(20)), 2.0);
+    }
+
+    #[test]
+    fn degenerate_totals_yield_a_usable_trace() {
+        // Regression: `total` shorter than one period used to produce an
+        // empty point list, and `at()` panicked on first use.
+        let tr = BandwidthTrace::steps(
+            Duration::from_secs(10),
+            &[7.0, 9.0],
+            Duration::from_secs(3),
+        );
+        assert_eq!(tr.points.len(), 1);
+        assert_eq!(tr.at(Duration::ZERO), 7.0);
+        assert_eq!(tr.at(Duration::from_secs(100)), 7.0);
+        let zero = BandwidthTrace::steps(Duration::from_secs(10), &[5.0], Duration::ZERO);
+        assert_eq!(zero.at(Duration::from_secs(1)), 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "period must be positive")]
+    fn zero_period_rejected() {
+        // Regression: a zero period used to spin `steps` forever.
+        let _ = BandwidthTrace::steps(Duration::ZERO, &[1.0], Duration::from_secs(1));
     }
 }

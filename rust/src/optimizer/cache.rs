@@ -21,6 +21,7 @@ use std::sync::Mutex;
 
 use crate::coordinator::battery::{battery_aware_split_banded, BatteryBand};
 use crate::device::ComputeProfile;
+use crate::edge::{tiered_smartsplit_banded, tiered_split_banded, SplitPlan, TieredPerfModel};
 use crate::metrics::{PlannerCounters, PlannerStats};
 use crate::models::ModelProfile;
 use crate::perfmodel::{NetworkEnv, PerfModel};
@@ -41,6 +42,49 @@ pub enum PlannerKind {
     Topsis,
 }
 
+/// The edge-tier component of a [`PlanKey`]: which site the device is
+/// assigned to and everything about that site a tiered solve depends
+/// on. Absent (`PlanKey::tier == None`) for the paper's two-tier
+/// planning — two-tier and tiered plans can never collide.
+///
+/// The site *index* is part of the state on purpose: sites are
+/// independently reconfigurable (pool size, backhaul), so two devices
+/// behind different sites are different planner states even when the
+/// sites currently look identical. On a uniform N-site topology this
+/// trades up to N× more distinct solves for that isolation — bounded
+/// by the (small) site count, and each site's state is still shared by
+/// its whole device population.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TierKey {
+    /// Index of the assigned site in the run's [`crate::edge::EdgeTopology`].
+    pub site: u32,
+    /// Edge server compute profile name.
+    pub edge_profile: &'static str,
+    /// Torso servers at the site (`0` = relay-only, torso infeasible).
+    pub edge_servers: u32,
+    /// Bit pattern of the (already bucketed) backhaul bandwidth in Mbps.
+    pub backhaul_mbps_bits: u64,
+    /// Bit pattern of the backhaul propagation latency in seconds.
+    pub backhaul_latency_bits: u64,
+}
+
+impl TierKey {
+    pub fn new(site: usize, edge: &crate::edge::EdgeSite, backhaul_mbps_q: f64) -> TierKey {
+        TierKey {
+            site: site as u32,
+            edge_profile: edge.profile.name,
+            edge_servers: edge.servers as u32,
+            backhaul_mbps_bits: backhaul_mbps_q.to_bits(),
+            backhaul_latency_bits: edge.backhaul.latency_s.to_bits(),
+        }
+    }
+
+    /// Quantised backhaul bandwidth this key was built from.
+    pub fn backhaul_mbps(&self) -> f64 {
+        f64::from_bits(self.backhaul_mbps_bits)
+    }
+}
+
 /// Quantised device state — everything a split solve depends on.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct PlanKey {
@@ -52,6 +96,8 @@ pub struct PlanKey {
     /// Bit pattern of the (already bucketed) bandwidth in Mbps.
     pub bw_mbps_bits: u64,
     pub kind: PlannerKind,
+    /// Edge-tier component; `None` plans the paper's two-tier split.
+    pub tier: Option<TierKey>,
 }
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
@@ -80,7 +126,14 @@ impl PlanKey {
             band,
             bw_mbps_bits: bw_mbps.to_bits(),
             kind,
+            tier: None,
         }
+    }
+
+    /// This key with an edge-tier component attached (tiered planning).
+    pub fn with_tier(mut self, tier: TierKey) -> PlanKey {
+        self.tier = Some(tier);
+        self
     }
 
     /// Quantised bandwidth this key was built from.
@@ -96,6 +149,17 @@ impl PlanKey {
         h = fnv1a(h, &[self.band.energy_weight() as u8]);
         h = fnv1a(h, &self.bw_mbps_bits.to_le_bytes());
         h = fnv1a(h, &[matches!(self.kind, PlannerKind::SmartSplit) as u8]);
+        match &self.tier {
+            None => h = fnv1a(h, &[0u8]),
+            Some(t) => {
+                h = fnv1a(h, &[1u8]);
+                h = fnv1a(h, &t.site.to_le_bytes());
+                h = fnv1a(h, t.edge_profile.as_bytes());
+                h = fnv1a(h, &t.edge_servers.to_le_bytes());
+                h = fnv1a(h, &t.backhaul_mbps_bits.to_le_bytes());
+                h = fnv1a(h, &t.backhaul_latency_bits.to_le_bytes());
+            }
+        }
         h
     }
 
@@ -157,6 +221,13 @@ thread_local! {
         std::cell::RefCell::new(super::nsga2::Nsga2Solver::new());
 }
 
+/// Run `f` with this thread's reusable fleet solver (shared by the
+/// two-tier and tiered SmartSplit paths — genome width is per-solve, and
+/// solver reuse is stateless between solves).
+pub(crate) fn with_fleet_solver<R>(f: impl FnOnce(&mut super::nsga2::Nsga2Solver) -> R) -> R {
+    FLEET_SOLVER.with(|s| f(&mut *s.borrow_mut()))
+}
+
 /// Algorithm 1 with the battery band's energy emphasis folded into the
 /// TOPSIS stage: NSGA-II Pareto set, f2 column scaled by
 /// [`BatteryBand::energy_weight`], TOPSIS choice. The Comfort band
@@ -167,7 +238,7 @@ pub fn smartsplit_banded(
     band: BatteryBand,
 ) -> Option<usize> {
     let problem = SplitProblem::new(pm);
-    let set = FLEET_SOLVER.with(|s| s.borrow_mut().solve(&problem, params));
+    let set = with_fleet_solver(|s| s.solve(&problem, params));
     let w = band.energy_weight();
     let rows: Vec<Vec<f64>> = set
         .members
@@ -185,32 +256,53 @@ pub fn smartsplit_banded(
     topsis(&rows, &feasible).map(|r| set.members[r.chosen].genome[0] as usize)
 }
 
-/// Run the decision procedure `kind` for one quantised planner state.
-/// `seed` is the key-derived NSGA-II seed (ignored by the exhaustive
-/// planner, which is deterministic by construction).
+/// Run the decision procedure `kind` for one quantised two-tier planner
+/// state. `seed` is the key-derived NSGA-II seed (ignored by the
+/// exhaustive planner, which is deterministic by construction). The
+/// returned plan is the paper's single split embedded in the tiered
+/// space (`l2 == l1`, empty torso).
 pub fn solve_plan(
     kind: PlannerKind,
     pm: &PerfModel<'_>,
     band: BatteryBand,
     params: &Nsga2Params,
     seed: u64,
-) -> Option<usize> {
+) -> Option<SplitPlan> {
     match kind {
-        PlannerKind::Topsis => battery_aware_split_banded(pm, band),
+        PlannerKind::Topsis => battery_aware_split_banded(pm, band).map(SplitPlan::two_tier),
         PlannerKind::SmartSplit => {
             smartsplit_banded(pm, &Nsga2Params { seed, ..params.clone() }, band)
+                .map(SplitPlan::two_tier)
+        }
+    }
+}
+
+/// Tiered counterpart of [`solve_plan`]: the same decision procedures
+/// over the 2-D `(l1, l2)` genome of [`crate::edge::TieredSplitProblem`].
+pub fn solve_plan_tiered(
+    kind: PlannerKind,
+    tpm: &TieredPerfModel<'_>,
+    band: BatteryBand,
+    params: &Nsga2Params,
+    seed: u64,
+) -> Option<SplitPlan> {
+    match kind {
+        PlannerKind::Topsis => tiered_split_banded(tpm, band),
+        PlannerKind::SmartSplit => {
+            tiered_smartsplit_banded(tpm, &Nsga2Params { seed, ..params.clone() }, band)
         }
     }
 }
 
 const SHARDS: usize = 16;
 
-/// Sharded concurrent memo table `PlanKey → Option<l1>` (a `None` value
-/// caches "no feasible split" so hopeless states aren't re-solved).
-/// Shard selection comes off the stable key digest, so contention between
-/// pool workers filling different keys is negligible.
+/// Sharded concurrent memo table `PlanKey → Option<SplitPlan>` (a
+/// `None` value caches "no feasible split" so hopeless states aren't
+/// re-solved; two-tier plans are stored as `l2 == l1`). Shard selection
+/// comes off the stable key digest, so contention between pool workers
+/// filling different keys is negligible.
 pub struct SplitPlanCache {
-    shards: Vec<Mutex<HashMap<PlanKey, Option<usize>>>>,
+    shards: Vec<Mutex<HashMap<PlanKey, Option<SplitPlan>>>>,
     counters: PlannerCounters,
 }
 
@@ -228,13 +320,13 @@ impl SplitPlanCache {
         }
     }
 
-    fn shard(&self, key: &PlanKey) -> &Mutex<HashMap<PlanKey, Option<usize>>> {
+    fn shard(&self, key: &PlanKey) -> &Mutex<HashMap<PlanKey, Option<SplitPlan>>> {
         &self.shards[(key.stable_hash() >> 40) as usize % SHARDS]
     }
 
     /// Counted lookup: one hit or miss per call — the per-decision
     /// accounting surfaced in `SimReport`/`metrics`.
-    pub fn lookup(&self, key: &PlanKey) -> Option<Option<usize>> {
+    pub fn lookup(&self, key: &PlanKey) -> Option<Option<SplitPlan>> {
         let got = self.shard(key).lock().unwrap().get(key).copied();
         match got {
             Some(v) => {
@@ -252,7 +344,7 @@ impl SplitPlanCache {
     /// find missing keys without perturbing the per-decision hit/miss
     /// accounting (which happens when the decision is actually served,
     /// via [`SplitPlanCache::plan`] / [`SplitPlanCache::lookup`]).
-    pub fn get(&self, key: &PlanKey) -> Option<Option<usize>> {
+    pub fn get(&self, key: &PlanKey) -> Option<Option<SplitPlan>> {
         self.shard(key).lock().unwrap().get(key).copied()
     }
 
@@ -269,9 +361,9 @@ impl SplitPlanCache {
         &self,
         pool: &ThreadPool,
         requests: Vec<(PlanKey, F)>,
-    ) -> HashMap<PlanKey, Option<usize>>
+    ) -> HashMap<PlanKey, Option<SplitPlan>>
     where
-        F: FnOnce() -> Option<usize> + Send + 'static,
+        F: FnOnce() -> Option<SplitPlan> + Send + 'static,
     {
         let mut seen: HashSet<PlanKey> = HashSet::new();
         let mut keys: Vec<PlanKey> = Vec::new();
@@ -289,7 +381,7 @@ impl SplitPlanCache {
         keys.into_iter().zip(results).collect()
     }
 
-    pub fn insert(&self, key: PlanKey, plan: Option<usize>) {
+    pub fn insert(&self, key: PlanKey, plan: Option<SplitPlan>) {
         self.shard(&key).lock().unwrap().insert(key, plan);
     }
 
@@ -318,8 +410,8 @@ impl SplitPlanCache {
         &self,
         enabled: bool,
         key: &PlanKey,
-        solve: impl FnOnce() -> Option<usize>,
-    ) -> Option<usize> {
+        solve: impl FnOnce() -> Option<SplitPlan>,
+    ) -> Option<SplitPlan> {
         if enabled {
             if let Some(hit) = self.lookup(key) {
                 return hit;
@@ -391,13 +483,13 @@ mod tests {
         let mut solves = 0;
         let v1 = cache.plan(true, &k, || {
             solves += 1;
-            Some(5)
+            Some(SplitPlan::two_tier(5))
         });
         let v2 = cache.plan(true, &k, || {
             solves += 1;
-            Some(99) // must never run
+            Some(SplitPlan { l1: 9, l2: 9 }) // must never run
         });
-        assert_eq!((v1, v2, solves), (Some(5), Some(5), 1));
+        assert_eq!((v1, v2, solves), (Some(SplitPlan::two_tier(5)), Some(SplitPlan::two_tier(5)), 1));
         let s = cache.stats();
         assert_eq!((s.cache_hits, s.cache_misses, s.solves), (1, 1, 1));
         assert_eq!(cache.len(), 1);
@@ -411,9 +503,9 @@ mod tests {
         for _ in 0..3 {
             let v = cache.plan(false, &k, || {
                 solves += 1;
-                Some(4)
+                Some(SplitPlan::two_tier(4))
             });
-            assert_eq!(v, Some(4));
+            assert_eq!(v, Some(SplitPlan::two_tier(4)));
         }
         assert_eq!(solves, 3);
         assert!(cache.is_empty());
@@ -493,7 +585,52 @@ mod tests {
         assert_eq!(
             t,
             crate::coordinator::battery::battery_aware_split_banded(&pm, BatteryBand::Saver)
+                .map(SplitPlan::two_tier)
         );
+    }
+
+    #[test]
+    fn tier_component_separates_planner_states() {
+        let site = crate::edge::EdgeSite {
+            servers: 2,
+            profile: profiles::edge_server(),
+            backhaul: crate::edge::BackhaulLink::METRO_1GBE,
+        };
+        let flat = key(10.0, BatteryBand::Comfort);
+        let tiered = key(10.0, BatteryBand::Comfort).with_tier(TierKey::new(0, &site, 1000.0));
+        assert_ne!(flat, tiered);
+        assert_ne!(flat.stable_hash(), tiered.stable_hash());
+        assert_ne!(flat.derived_seed(42), tiered.derived_seed(42));
+        // Site identity and backhaul bucket are both part of the state.
+        let other_site = key(10.0, BatteryBand::Comfort).with_tier(TierKey::new(1, &site, 1000.0));
+        assert_ne!(tiered, other_site);
+        let other_backhaul =
+            key(10.0, BatteryBand::Comfort).with_tier(TierKey::new(0, &site, 500.0));
+        assert_ne!(tiered, other_backhaul);
+        // Same inputs reproduce the same key and seed.
+        let again = key(10.0, BatteryBand::Comfort).with_tier(TierKey::new(0, &site, 1000.0));
+        assert_eq!(tiered, again);
+        assert_eq!(tiered.derived_seed(42), again.derived_seed(42));
+    }
+
+    #[test]
+    fn solve_plan_tiered_is_deterministic_and_ordered() {
+        let profile = zoo::alexnet().analyze(1);
+        let pm = member_perf_model(profiles::samsung_j6(), &profile, 10.0);
+        let tpm = TieredPerfModel::new(
+            pm,
+            profiles::edge_server(),
+            2,
+            crate::edge::BackhaulLink::METRO_1GBE,
+        );
+        let params = Nsga2Params::for_small_genome(2);
+        for kind in [PlannerKind::SmartSplit, PlannerKind::Topsis] {
+            let a = solve_plan_tiered(kind, &tpm, BatteryBand::Comfort, &params, 99);
+            let b = solve_plan_tiered(kind, &tpm, BatteryBand::Comfort, &params, 99);
+            assert_eq!(a, b, "{kind:?} must be deterministic");
+            let plan = a.expect("feasible tiered plan");
+            assert!(plan.l1 >= 1 && plan.l1 <= plan.l2 && plan.l2 <= profile.num_layers);
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@ pub use baselines::{
 };
 pub use cache::{
     member_perf_model, model_cache_id, quantize_bandwidth, smartsplit_banded, solve_plan,
-    PlanKey, PlannerKind, SplitPlanCache,
+    solve_plan_tiered, PlanKey, PlannerKind, SplitPlanCache, TierKey,
 };
 pub use nsga2::{optimize, Nsga2Params, Nsga2Solver, ParetoSet, Problem};
 pub use problem::SplitProblem;

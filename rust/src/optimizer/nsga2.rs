@@ -91,10 +91,21 @@ impl Nsga2Params {
     /// models — the fleet-simulation default. Paper-figure benches keep
     /// [`Nsga2Params::default`].
     pub fn for_tiny_genome() -> Self {
+        Nsga2Params::for_small_genome(1)
+    }
+
+    /// Preset sized to a small integer genome of `dim` decision
+    /// variables over a ≤ 38-value-per-dimension domain. `dim = 1` is
+    /// [`Nsga2Params::for_tiny_genome`]; `dim = 2` (the tiered
+    /// `(l1, l2)` split of [`crate::edge`], domain ≤ 38²) doubles the
+    /// population and raises the patience so the front of the larger
+    /// lattice still saturates before the stagnation check fires.
+    pub fn for_small_genome(dim: usize) -> Self {
+        let d = dim.max(1);
         Nsga2Params {
-            pop_size: 24,
-            generations: 64,
-            stagnation_patience: 6,
+            pop_size: 24 * d,
+            generations: 64 * d,
+            stagnation_patience: 4 + 2 * d,
             ..Default::default()
         }
     }
@@ -844,6 +855,19 @@ mod tests {
         // Canonical defaults stay canonical for the paper benches.
         let d = Nsga2Params::default();
         assert_eq!((d.pop_size, d.generations, d.stagnation_patience), (100, 250, 0));
+    }
+
+    #[test]
+    fn small_genome_preset_scales_with_dim() {
+        let one = Nsga2Params::for_small_genome(1);
+        let tiny = Nsga2Params::for_tiny_genome();
+        assert_eq!((one.pop_size, one.generations), (tiny.pop_size, tiny.generations));
+        assert_eq!(one.stagnation_patience, tiny.stagnation_patience);
+        let two = Nsga2Params::for_small_genome(2);
+        assert!(two.pop_size > one.pop_size && two.generations > one.generations);
+        assert!(two.stagnation_patience > one.stagnation_patience);
+        // Degenerate dim clamps to 1.
+        assert_eq!(Nsga2Params::for_small_genome(0).pop_size, one.pop_size);
     }
 
     #[test]

@@ -2,14 +2,21 @@
 //! link, and a SmartSplit decision that adapts as conditions drift.
 //!
 //! Latency and energy come straight from the §III analytical models
-//! ([`PerfModel`]), so a simulated device behaves exactly like the
-//! modelled cost of the live serving path — that equivalence is asserted
-//! by `tests/sim_determinism.rs` against the 2-phone fleet.
+//! ([`PerfModel`], tiered via [`TieredPerfModel`]), so a simulated device
+//! behaves exactly like the modelled cost of the live serving path — that
+//! equivalence is asserted by `tests/sim_determinism.rs` against the
+//! 2-phone fleet.
+//!
+//! A device under an edge topology carries its static
+//! [`EdgeAttachment`] (assigned site, site profile, backhaul), and its
+//! [`SplitPlan`] may put torso layers there; with no attachment every
+//! plan is the paper's two-tier split (`l1 == l2`).
 
 use std::collections::VecDeque;
 
 use crate::coordinator::battery::{battery_aware_split, BatteryBand};
 use crate::device::ComputeProfile;
+use crate::edge::{BackhaulLink, SplitPlan, TieredPerfModel};
 use crate::models::ModelProfile;
 use crate::netsim::BandwidthTrace;
 use crate::optimizer::{smartsplit, Nsga2Params};
@@ -24,14 +31,27 @@ use crate::sim::engine::SimTime;
 pub enum Planner {
     /// Full Algorithm 1 (NSGA-II + TOPSIS) — what the live `fleet` path
     /// runs. Right for live-parity tests; fleet-scale runs should pair
-    /// it with [`Nsga2Params::for_tiny_genome`].
+    /// it with [`Nsga2Params::for_tiny_genome`], and tiered (edge)
+    /// scenarios with [`Nsga2Params::for_small_genome`]`(2)` — the
+    /// configured params are used as-is for every solve.
     SmartSplit(Nsga2Params),
     /// TOPSIS over the exhaustive true Pareto front, battery-band
-    /// weighted. O(L) per decision — the city-scale default.
+    /// weighted. O(L) per decision (O(L²) tiered) — the city-scale
+    /// default.
     Topsis,
-    /// Pin every device to this split (clamped to `1..=L-1`) and never
-    /// re-plan — controlled experiments (e.g. forcing cloud contention).
+    /// Pin every device to this two-tier split (clamped to `1..=L-1`)
+    /// and never re-plan — controlled experiments (e.g. forcing cloud
+    /// contention).
     Fixed(usize),
+}
+
+/// A device's static place in the edge topology: which site serves it
+/// and what that site looks like (for the §III-tiered cost tables).
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeAttachment {
+    pub site: usize,
+    pub profile: &'static ComputeProfile,
+    pub backhaul: BackhaulLink,
 }
 
 /// One virtual device.
@@ -40,19 +60,26 @@ pub struct SimDevice {
     pub profile: &'static ComputeProfile,
     /// Link bandwidth over virtual time (Mbps).
     pub trace: BandwidthTrace,
-    /// Index of the cloud this device offloads to.
+    /// Index of the cloud this device offloads its tail to.
     pub cloud: usize,
-    /// Current split (layers `1..=l1` on the device).
+    /// Assigned edge site, if the scenario has an edge tier.
+    pub edge: Option<EdgeAttachment>,
+    /// Head depth: layers `1..=l1` run on the device.
     pub l1: usize,
+    /// Torso end: layers `l1+1..=l2` run at the edge site (`l2 == l1`
+    /// means no torso — the paper's two-tier split).
+    pub l2: usize,
     /// Battery band the current split was planned in.
     pub band: BatteryBand,
     /// Bandwidth (Mbps) the current split was planned at.
     pub planned_bw_mbps: f64,
 
-    // Cached per-split §III quantities, refreshed by `replan`.
+    // Cached per-split §III quantities, refreshed on every adopted plan.
     head_s: f64,
-    service_s: f64,
+    torso_s: f64,
+    tail_s: f64,
     upload_bits: f64,
+    backhaul_s: f64,
     /// Eq. 6 dynamic compute power (split-independent; cached from
     /// [`PerfModel::client_power_w`] so the formula lives in one place).
     client_power_w: f64,
@@ -79,13 +106,19 @@ pub struct SimDevice {
     pub upload_energy_j: f64,
 }
 
-/// Cost of running one request's device half, captured at issue time.
+/// Cost of running one request's device half, captured at issue time —
+/// together with the downstream hop costs the engine will need once the
+/// uplink completes (in-flight work must not see later re-splits).
 #[derive(Clone, Copy, Debug)]
 pub struct DeviceCost {
     pub head_s: f64,
     pub upload_s: f64,
-    /// Tail service time at the cloud for the split this request used.
-    pub service_s: f64,
+    /// Torso service time at the edge site (0 for two-tier plans).
+    pub torso_s: f64,
+    /// Edge→cloud backhaul transfer time (0 for two-tier plans).
+    pub backhaul_s: f64,
+    /// Tail service time at the cloud for the plan this request used.
+    pub tail_s: f64,
     pub energy_j: f64,
 }
 
@@ -95,11 +128,12 @@ impl SimDevice {
     /// for time before the device existed) and plan its initial split for
     /// `soc` state of charge and the trace's bandwidth at that instant.
     ///
-    /// Uncached *reference* constructor (plain un-banded `smartsplit` /
-    /// exact-bandwidth TOPSIS, like [`SimDevice::replan`]) — used by unit
-    /// tests. The sim event loop plans through the split-plan cache with
-    /// band weighting and quantisation and builds devices via
-    /// [`SimDevice::with_split`]; decisions can differ from this path.
+    /// Uncached two-tier *reference* constructor (plain un-banded
+    /// `smartsplit` / exact-bandwidth TOPSIS, like [`SimDevice::replan`];
+    /// no edge attachment) — used by unit tests. The sim event loop plans
+    /// through the split-plan cache with band weighting and quantisation
+    /// and builds devices via [`SimDevice::with_split`]; decisions can
+    /// differ from this path.
     pub fn new(
         profile: &'static ComputeProfile,
         trace: BandwidthTrace,
@@ -114,6 +148,7 @@ impl SimDevice {
             profile,
             trace,
             cloud,
+            None,
             initial_soc,
             spawned_at,
             matches!(planner, Planner::Fixed(_)),
@@ -124,7 +159,7 @@ impl SimDevice {
                 .expect("no feasible split for device"),
             Planner::Fixed(l1) => (*l1).clamp(1, model.num_layers.saturating_sub(1).max(1)),
         };
-        d.adopt_split(l1, model, bw);
+        d.adopt_split(SplitPlan::two_tier(l1), model, bw);
         d
     }
 
@@ -132,19 +167,22 @@ impl SimDevice {
     /// cache-aware planner path in [`crate::sim`] (the split-plan cache
     /// plus parallel re-solve fan-out own the decision; the device only
     /// adopts it).
+    #[allow(clippy::too_many_arguments)]
     pub fn with_split(
         profile: &'static ComputeProfile,
         trace: BandwidthTrace,
         cloud: usize,
+        edge: Option<EdgeAttachment>,
         initial_soc: f64,
         spawned_at: SimTime,
         model: &ModelProfile,
-        l1: usize,
+        plan: SplitPlan,
         pinned: bool,
     ) -> SimDevice {
         let bw = trace.at(std::time::Duration::from_secs_f64(spawned_at.max(0.0)));
-        let mut d = SimDevice::unplanned(profile, trace, cloud, initial_soc, spawned_at, pinned);
-        d.adopt_split(l1, model, bw);
+        let mut d =
+            SimDevice::unplanned(profile, trace, cloud, edge, initial_soc, spawned_at, pinned);
+        d.adopt_split(plan, model, bw);
         d
     }
 
@@ -152,6 +190,7 @@ impl SimDevice {
         profile: &'static ComputeProfile,
         trace: BandwidthTrace,
         cloud: usize,
+        edge: Option<EdgeAttachment>,
         initial_soc: f64,
         spawned_at: SimTime,
         pinned: bool,
@@ -162,12 +201,16 @@ impl SimDevice {
             profile,
             trace,
             cloud,
+            edge,
             l1: 1,
+            l2: 1,
             band: BatteryBand::of_fraction(initial_soc),
             planned_bw_mbps: bw,
             head_s: 0.0,
-            service_s: 0.0,
+            torso_s: 0.0,
+            tail_s: 0.0,
             upload_bits: 0.0,
+            backhaul_s: 0.0,
             client_power_w: 0.0,
             capacity_j,
             initial_soc: initial_soc.clamp(0.0, 1.0),
@@ -200,17 +243,46 @@ impl SimDevice {
         )
     }
 
-    fn adopt_split(&mut self, l1: usize, model: &ModelProfile, bw_mbps: f64) {
+    /// The tiered evaluation context at bandwidth `bw_mbps` — only
+    /// meaningful for devices with an edge attachment.
+    pub fn tiered_perf_model<'a>(
+        &self,
+        model: &'a ModelProfile,
+        bw_mbps: f64,
+    ) -> Option<TieredPerfModel<'a>> {
+        let e = self.edge.as_ref()?;
+        // The server count does not affect per-request cost tables; 1
+        // keeps torso plans evaluable (feasibility is the planner's job).
+        Some(TieredPerfModel::new(self.perf_model(model, bw_mbps), e.profile, 1, e.backhaul))
+    }
+
+    fn adopt_split(&mut self, plan: SplitPlan, model: &ModelProfile, bw_mbps: f64) {
+        debug_assert!(plan.l1 <= plan.l2, "unordered plan {plan:?}");
+        debug_assert!(
+            self.edge.is_some() || plan.is_two_tier(),
+            "torso plan {plan:?} without an edge attachment"
+        );
         let pm = self.perf_model(model, bw_mbps);
-        self.l1 = l1;
+        self.l1 = plan.l1;
+        self.l2 = plan.l2;
         self.client_power_w = pm.client_power_w();
-        self.head_s = pm.client_latency_s(l1);
-        self.service_s = pm.server_latency_s(l1);
-        self.upload_bits = if l1 >= model.num_layers {
+        self.head_s = pm.client_latency_s(plan.l1);
+        self.tail_s = pm.server_latency_s(plan.l2);
+        self.upload_bits = if plan.l1 >= model.num_layers {
             0.0
         } else {
-            model.intermediate_bytes(l1) as f64 * 8.0
+            model.intermediate_bytes(plan.l1) as f64 * 8.0
         };
+        match self.tiered_perf_model(model, bw_mbps) {
+            Some(tpm) => {
+                self.torso_s = tpm.torso_latency_s(plan);
+                self.backhaul_s = tpm.backhaul_latency_s(plan);
+            }
+            None => {
+                self.torso_s = 0.0;
+                self.backhaul_s = 0.0;
+            }
+        }
         self.planned_bw_mbps = bw_mbps;
         self.band = BatteryBand::of_fraction(self.soc());
     }
@@ -240,16 +312,27 @@ impl SimDevice {
         self.trace.at(std::time::Duration::from_secs_f64(t.max(0.0)))
     }
 
-    /// Modelled tail-layer service time at the cloud for this split.
+    /// Modelled tail-layer service time at the cloud for this plan.
     pub fn service_s(&self) -> f64 {
-        self.service_s
+        self.tail_s
     }
 
-    /// Modelled end-to-end latency (Eq. 14) of one uncontended request at
-    /// bandwidth `bw_mbps` — head + upload + tail, download excluded as in
-    /// the paper.
+    /// Modelled torso service time at the edge site for this plan.
+    pub fn torso_s(&self) -> f64 {
+        self.torso_s
+    }
+
+    /// The plan currently adopted.
+    pub fn plan(&self) -> SplitPlan {
+        SplitPlan { l1: self.l1, l2: self.l2 }
+    }
+
+    /// Modelled end-to-end latency of one uncontended request at
+    /// bandwidth `bw_mbps` — head + upload + torso + backhaul + tail,
+    /// download excluded as in the paper (Eq. 14 generalised).
     pub fn expected_latency_s(&self, bw_mbps: f64) -> f64 {
-        self.head_s + self.upload_bits / (bw_mbps * 1e6) + self.service_s
+        self.head_s + self.upload_bits / (bw_mbps * 1e6) + self.torso_s + self.backhaul_s
+            + self.tail_s
     }
 
     /// Start one request at time `t`: compute the device-side cost, drain
@@ -265,6 +348,8 @@ impl SimDevice {
         let head_s = self.head_s;
         let upload_s = self.upload_bits / (bw * 1e6);
         // Eq. 6 dynamic compute power + Eq. 8 radio power at τ_u = bw.
+        // Only the head and the first hop touch the battery: torso,
+        // backhaul and tail run on mains power.
         let radio = self.profile.wifi.expect("sim device needs a radio").radio_power();
         let client_j = self.client_power_w * head_s;
         let upload_j = radio.upload_power_w(bw) * upload_s;
@@ -275,7 +360,9 @@ impl SimDevice {
         Some(DeviceCost {
             head_s,
             upload_s,
-            service_s: self.service_s,
+            torso_s: self.torso_s,
+            backhaul_s: self.backhaul_s,
+            tail_s: self.tail_s,
             energy_j: client_j + upload_j,
         })
     }
@@ -299,12 +386,12 @@ impl SimDevice {
         Some((bw, band))
     }
 
-    /// Adopt an externally decided split at link bandwidth `bw` (refreshes
+    /// Adopt an externally decided plan at link bandwidth `bw` (refreshes
     /// the cached §III costs and the planned-state markers). Returns true
-    /// — and counts a re-split — when the split actually moved.
-    pub fn apply_split(&mut self, l1: usize, model: &ModelProfile, bw: f64) -> bool {
-        let moved = l1 != self.l1;
-        self.adopt_split(l1, model, bw);
+    /// — and counts a re-split — when the plan actually moved.
+    pub fn apply_split(&mut self, plan: SplitPlan, model: &ModelProfile, bw: f64) -> bool {
+        let moved = plan.l1 != self.l1 || plan.l2 != self.l2;
+        self.adopt_split(plan, model, bw);
         if moved {
             self.resplits += 1;
         }
@@ -320,9 +407,10 @@ impl SimDevice {
         self.replan(t, model)
     }
 
-    /// Unconditional re-plan at current conditions (battery-band weighted
-    /// TOPSIS over the exhaustive front) — the uncached reference path;
-    /// the sim's event loop goes through the split-plan cache instead.
+    /// Unconditional two-tier re-plan at current conditions
+    /// (battery-band weighted TOPSIS over the exhaustive front) — the
+    /// uncached reference path; the sim's event loop goes through the
+    /// split-plan cache instead (tiered when an edge tier exists).
     /// Returns true if the split moved.
     pub fn replan(&mut self, t: SimTime, model: &ModelProfile) -> bool {
         if self.pinned {
@@ -332,7 +420,7 @@ impl SimDevice {
         let Some(l1) = battery_aware_split(&self.perf_model(model, bw), self.soc()) else {
             return false;
         };
-        self.apply_split(l1, model, bw)
+        self.apply_split(SplitPlan::two_tier(l1), model, bw)
     }
 }
 
@@ -358,6 +446,14 @@ mod tests {
         )
     }
 
+    fn attachment() -> EdgeAttachment {
+        EdgeAttachment {
+            site: 0,
+            profile: profiles::edge_server(),
+            backhaul: BackhaulLink::METRO_1GBE,
+        }
+    }
+
     #[test]
     fn late_join_pays_no_retroactive_idle_drain() {
         let m = model();
@@ -380,11 +476,44 @@ mod tests {
     fn cached_costs_match_perf_model() {
         let m = model();
         let d = device(&m);
+        assert!(d.plan().is_two_tier());
         let pm = d.perf_model(&m, 30.0);
         assert!((d.head_s - pm.client_latency_s(d.l1)).abs() < 1e-15);
         assert!((d.service_s() - pm.server_latency_s(d.l1)).abs() < 1e-15);
         assert!((d.expected_latency_s(30.0) - pm.f1(d.l1)).abs() < 1e-12);
         assert_eq!(d.client_power_w, pm.client_power_w());
+        assert_eq!(d.torso_s(), 0.0);
+        assert_eq!(d.backhaul_s, 0.0);
+    }
+
+    #[test]
+    fn tiered_plan_caches_all_five_hop_costs() {
+        let m = model();
+        let plan = SplitPlan { l1: 3, l2: 10 };
+        let d = SimDevice::with_split(
+            profiles::redmi_note8(),
+            BandwidthTrace::constant(30.0),
+            0,
+            Some(attachment()),
+            1.0,
+            0.0,
+            &m,
+            plan,
+            false,
+        );
+        let tpm = d.tiered_perf_model(&m, 30.0).unwrap();
+        let lat = tpm.latency(plan);
+        assert!((d.head_s - lat.head_s).abs() < 1e-15);
+        assert!((d.torso_s() - lat.torso_s).abs() < 1e-15);
+        assert!((d.backhaul_s - lat.backhaul_s).abs() < 1e-15);
+        assert!((d.service_s() - lat.tail_s).abs() < 1e-15);
+        assert!((d.expected_latency_s(30.0) - tpm.f1(plan)).abs() < 1e-12);
+        // Hop costs ride into the captured request cost.
+        let mut d = d;
+        let cost = d.start_request(0.0).unwrap();
+        assert_eq!(cost.torso_s, d.torso_s());
+        assert_eq!(cost.backhaul_s, d.backhaul_s);
+        assert_eq!(cost.tail_s, d.service_s());
     }
 
     #[test]
@@ -397,6 +526,39 @@ mod tests {
         assert!(d.soc() < soc0);
         assert!(d.busy);
         assert!((d.client_energy_j + d.upload_energy_j - cost.energy_j).abs() < 1e-12);
+    }
+
+    #[test]
+    fn torso_never_touches_the_battery() {
+        // Two devices, same head, one with a deep torso: identical
+        // device-side energy per request (mains power does the rest).
+        let m = model();
+        let mut flat = SimDevice::with_split(
+            profiles::redmi_note8(),
+            BandwidthTrace::constant(30.0),
+            0,
+            None,
+            1.0,
+            0.0,
+            &m,
+            SplitPlan::two_tier(3),
+            false,
+        );
+        let mut tiered = SimDevice::with_split(
+            profiles::redmi_note8(),
+            BandwidthTrace::constant(30.0),
+            0,
+            Some(attachment()),
+            1.0,
+            0.0,
+            &m,
+            SplitPlan { l1: 3, l2: 15 },
+            false,
+        );
+        let a = flat.start_request(0.0).unwrap();
+        let b = tiered.start_request(0.0).unwrap();
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(flat.soc(), tiered.soc());
     }
 
     #[test]

@@ -1,0 +1,195 @@
+//! Virtual edge site: an M/G/c queue mirroring [`crate::sim::SimCloud`],
+//! whose service time is the torso latency
+//! ([`crate::edge::TieredPerfModel::torso_latency_s`]) of the requesting
+//! device's plan, captured at issue time (a re-split mid-flight must not
+//! retroactively change in-flight work).
+//!
+//! Unlike the cloud queue, a dequeued edge request still has two hops
+//! left — the backhaul transfer and the cloud tail — so the queue
+//! carries those captured costs alongside each request.
+
+use std::collections::VecDeque;
+
+use crate::metrics::Histogram;
+use crate::sim::engine::SimTime;
+
+/// One queued torso request.
+#[derive(Clone, Copy, Debug)]
+struct Queued {
+    device: usize,
+    issued: SimTime,
+    enqueued: SimTime,
+    service_s: f64,
+    backhaul_s: f64,
+    tail_s: f64,
+}
+
+/// A torso request popped off the queue when an edge server frees up.
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeDequeued {
+    pub device: usize,
+    pub issued: SimTime,
+    pub service_s: f64,
+    pub backhaul_s: f64,
+    pub tail_s: f64,
+}
+
+/// A virtual edge-site server pool.
+#[derive(Debug)]
+pub struct SimEdge {
+    /// Parallel torso servers (`c` in M/G/c). `0` marks a relay-only
+    /// site: the planner never produces torso work for it, and offering
+    /// work to it is a logic error.
+    pub servers: usize,
+    busy: usize,
+    queue: VecDeque<Queued>,
+    /// Time torso requests spent waiting for a free edge server.
+    pub queue_delay: Histogram,
+    pub served: u64,
+    busy_time_s: f64,
+    peak_queue: usize,
+}
+
+impl SimEdge {
+    pub fn new(servers: usize) -> SimEdge {
+        SimEdge {
+            servers,
+            busy: 0,
+            queue: VecDeque::new(),
+            queue_delay: Histogram::new(),
+            served: 0,
+            busy_time_s: 0.0,
+            peak_queue: 0,
+        }
+    }
+
+    /// A torso request arrives. Returns `Some(service_s)` if a server is
+    /// free (caller schedules `EdgeDone` at `now + service_s`); otherwise
+    /// the request queues FIFO.
+    #[allow(clippy::too_many_arguments)]
+    pub fn offer(
+        &mut self,
+        device: usize,
+        issued: SimTime,
+        now: SimTime,
+        service_s: f64,
+        backhaul_s: f64,
+        tail_s: f64,
+    ) -> Option<f64> {
+        assert!(self.servers > 0, "torso work offered to a relay-only edge site");
+        if self.busy < self.servers {
+            self.busy += 1;
+            self.busy_time_s += service_s;
+            self.queue_delay.record_secs(0.0);
+            Some(service_s)
+        } else {
+            self.queue.push_back(Queued {
+                device,
+                issued,
+                enqueued: now,
+                service_s,
+                backhaul_s,
+                tail_s,
+            });
+            self.peak_queue = self.peak_queue.max(self.queue.len());
+            None
+        }
+    }
+
+    /// An edge server finished. Pops the next queued torso, if any — the
+    /// caller schedules its `EdgeDone` at `now + service_s`.
+    pub fn finish(&mut self, now: SimTime) -> Option<EdgeDequeued> {
+        self.served += 1;
+        match self.queue.pop_front() {
+            Some(q) => {
+                self.queue_delay.record_secs(now - q.enqueued);
+                self.busy_time_s += q.service_s;
+                Some(EdgeDequeued {
+                    device: q.device,
+                    issued: q.issued,
+                    service_s: q.service_s,
+                    backhaul_s: q.backhaul_s,
+                    tail_s: q.tail_s,
+                })
+            }
+            None => {
+                self.busy -= 1;
+                None
+            }
+        }
+    }
+
+    pub fn busy(&self) -> usize {
+        self.busy
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn peak_queue(&self) -> usize {
+        self.peak_queue
+    }
+
+    /// Offered utilisation — same convention as
+    /// [`crate::sim::SimCloud::utilization`] (deliberately unclamped).
+    /// Relay-only sites report 0.
+    pub fn utilization(&self, horizon_s: f64) -> f64 {
+        if horizon_s <= 0.0 || self.servers == 0 {
+            return 0.0;
+        }
+        self.busy_time_s / (horizon_s * self.servers as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_immediately_when_free() {
+        let mut e = SimEdge::new(2);
+        assert_eq!(e.offer(0, 0.0, 0.0, 0.5, 0.1, 0.2), Some(0.5));
+        assert_eq!(e.offer(1, 0.0, 0.0, 0.5, 0.1, 0.2), Some(0.5));
+        assert_eq!(e.busy(), 2);
+        assert_eq!(e.offer(2, 0.1, 0.1, 0.5, 0.1, 0.2), None);
+        assert_eq!(e.queue_len(), 1);
+    }
+
+    #[test]
+    fn finish_dequeues_fifo_with_captured_hop_costs() {
+        let mut e = SimEdge::new(1);
+        assert!(e.offer(0, 0.0, 0.0, 1.0, 0.01, 0.3).is_some());
+        assert!(e.offer(1, 0.2, 0.2, 0.7, 0.02, 0.4).is_none());
+        let d = e.finish(1.0).unwrap();
+        assert_eq!(d.device, 1);
+        assert_eq!(d.issued, 0.2);
+        assert_eq!(d.service_s, 0.7);
+        // The downstream hop costs ride through the queue untouched.
+        assert_eq!(d.backhaul_s, 0.02);
+        assert_eq!(d.tail_s, 0.4);
+        assert!((e.queue_delay.max_s() - 0.8).abs() < 1e-12);
+        assert!(e.finish(1.7).is_none());
+        assert_eq!(e.busy(), 0);
+        assert_eq!(e.served, 2);
+    }
+
+    #[test]
+    fn utilization_mirrors_cloud_convention() {
+        let mut e = SimEdge::new(2);
+        e.offer(0, 0.0, 0.0, 3.0, 0.0, 0.0);
+        e.offer(1, 0.0, 0.0, 1.0, 0.0, 0.0);
+        e.finish(1.0);
+        e.finish(3.0);
+        assert!((e.utilization(4.0) - 0.5).abs() < 1e-12);
+        assert_eq!(e.utilization(0.0), 0.0);
+        assert_eq!(SimEdge::new(0).utilization(10.0), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "relay-only")]
+    fn relay_site_rejects_torso_work() {
+        let mut e = SimEdge::new(0);
+        e.offer(0, 0.0, 0.0, 1.0, 0.0, 0.0);
+    }
+}

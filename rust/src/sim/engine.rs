@@ -18,10 +18,33 @@ pub enum Event {
     /// Fleet-level workload tick: dispatch one request to a device.
     Arrival,
     /// A device finished head compute + activation upload; the request
-    /// reaches its cloud's queue. `issued` is the original arrival time;
-    /// `service_s` is the tail service time captured at issue (a re-split
-    /// mid-flight must not change in-flight work).
-    Uplinked { device: usize, issued: SimTime, service_s: f64 },
+    /// reaches the next tier (its edge site's torso queue, or directly
+    /// the cloud when the plan has no torso). `issued` is the original
+    /// arrival time; the per-hop costs are captured at issue (a re-split
+    /// mid-flight must not change in-flight work): `torso_s` edge
+    /// service, `backhaul_s` edge→cloud transfer, `tail_s` cloud
+    /// service. Two-tier plans carry `torso_s == 0` — but an
+    /// edge-attached device still relays through its site, so its
+    /// `backhaul_s` is 0 only when the backhaul itself is free (the
+    /// degenerate-parity condition) or the tail is empty.
+    Uplinked {
+        device: usize,
+        issued: SimTime,
+        torso_s: f64,
+        backhaul_s: f64,
+        tail_s: f64,
+    },
+    /// An edge-site server finished the torso layers of this device's
+    /// request; next stop is the backhaul (then the cloud).
+    EdgeDone {
+        site: usize,
+        device: usize,
+        issued: SimTime,
+        backhaul_s: f64,
+        tail_s: f64,
+    },
+    /// A request crossed the backhaul and reaches its cloud's queue.
+    CloudArrive { device: usize, issued: SimTime, tail_s: f64 },
     /// A cloud server finished the tail layers of this device's request.
     CloudDone { cloud: usize, device: usize, issued: SimTime },
     /// Periodic fleet sweep: re-run the split optimiser for devices whose

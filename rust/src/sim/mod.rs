@@ -17,14 +17,19 @@
 //! * [`cloud`] — M/G/c cloud queues whose service time comes from
 //!   [`crate::perfmodel::PerfModel`], so cloud contention — invisible on
 //!   the paper's two-phone testbed — becomes measurable;
+//! * [`edge`] — per-site M/G/c torso queues mirroring the cloud, so
+//!   tiered plans ([`crate::edge`]) contend at their metro site while
+//!   tails contend in the cloud;
 //! * [`scenario`] — presets: the paper's two-phone fleet (live-parity
-//!   testing) and a diurnal city of 10k+ devices with churn.
+//!   testing), a diurnal city of 10k+ devices with churn, and the same
+//!   city behind a metro edge tier ([`scenario::city_scale_tiered`]).
 //!
 //! Reports reuse [`crate::metrics::Histogram`], so simulated and
 //! socket-measured runs read the same.
 
 pub mod cloud;
 pub mod device;
+pub mod edge;
 pub mod engine;
 pub mod scenario;
 
@@ -36,22 +41,24 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::battery::BatteryBand;
 use crate::device::ComputeProfile;
+use crate::edge::{BackhaulLink, EdgeSite, EdgeTopology, SplitPlan, TieredPerfModel};
 use crate::metrics::{Histogram, PlannerStats};
 use crate::models::{zoo, ModelProfile};
 use crate::optimizer::{
-    member_perf_model, model_cache_id, quantize_bandwidth, solve_plan, Nsga2Params, PlanKey,
-    PlannerKind, SplitPlanCache,
+    member_perf_model, model_cache_id, quantize_bandwidth, solve_plan, solve_plan_tiered,
+    Nsga2Params, PlanKey, PlannerKind, SplitPlanCache, TierKey,
 };
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Xoshiro256;
 use crate::workload::next_interarrival;
 
 pub use cloud::SimCloud;
-pub use device::{Planner, SimDevice};
+pub use device::{EdgeAttachment, Planner, SimDevice};
+pub use edge::SimEdge;
 pub use engine::{Event, EventQueue, SimTime};
 pub use scenario::{
-    city_scale, two_phone_fleet, ChurnConfig, ExplicitMember, FleetSpec, PlannerPerfConfig,
-    SimConfig,
+    city_scale, city_scale_tiered, two_phone_fleet, ChurnConfig, EdgeSpec, ExplicitMember,
+    FleetSpec, PlannerPerfConfig, SimConfig,
 };
 
 /// Per-profile slice of the fleet report (devices sharing a
@@ -96,13 +103,23 @@ pub struct SimReport {
     pub latency: Histogram,
     /// Cloud queueing delay (merged across clouds).
     pub queue_delay: Histogram,
+    /// Time requests spent queued on their (serial) device before its
+    /// head compute could start — the device-tier queue delay.
+    pub device_queue_delay: Histogram,
+    /// Edge-site torso queueing delay (merged across sites; empty when
+    /// the scenario has no edge tier or no plan grew a torso).
+    pub edge_queue_delay: Histogram,
     pub per_profile: Vec<ProfileSlice>,
     pub clouds: Vec<CloudSlice>,
+    /// Per-edge-site slices (same shape as the cloud slices); empty
+    /// without an edge tier.
+    pub edges: Vec<CloudSlice>,
     pub resplits: u64,
     pub client_energy_j: f64,
     pub upload_energy_j: f64,
-    /// Final split distribution: (l1, active devices running it).
-    pub split_distribution: Vec<(usize, u64)>,
+    /// Final split distribution: (plan, active devices running it).
+    /// Two-tier plans have `l1 == l2`.
+    pub split_distribution: Vec<(SplitPlan, u64)>,
     /// Re-optimisation sweeps actually performed (one per tick of the
     /// canonical absolute-time re-arm grid).
     pub reopt_sweeps: u64,
@@ -110,12 +127,13 @@ pub struct SimReport {
     pub planner: PlannerStats,
     /// Split decisions adopted over the run (spawns + re-plans).
     pub decision_count: u64,
-    /// The full per-decision stream, in event order: `(device, l1)` for
-    /// spawns and re-plans alike. Only populated when
-    /// [`PlannerPerfConfig::record_decisions`] is set (the cached and
-    /// uncached planner paths must produce byte-identical streams —
-    /// `tests/planner_cache.rs`); empty otherwise.
-    pub decisions: Vec<(u32, u32)>,
+    /// The full per-decision stream, in event order: `(device, l1, l2)`
+    /// for spawns and re-plans alike (`l2 == l1` for two-tier plans).
+    /// Only populated when [`PlannerPerfConfig::record_decisions`] is
+    /// set (the cached and uncached planner paths must produce
+    /// byte-identical streams — `tests/planner_cache.rs`); empty
+    /// otherwise.
+    pub decisions: Vec<(u32, u32, u32)>,
 }
 
 impl SimReport {
@@ -142,9 +160,12 @@ impl SimReport {
     pub fn summary(&self) -> String {
         let util: Vec<String> =
             self.clouds.iter().map(|c| format!("{:.4}", c.utilization)).collect();
+        let eutil: Vec<String> =
+            self.edges.iter().map(|e| format!("{:.4}", e.utilization)).collect();
         format!(
             "model={} seed={} completed={} dropped={} joined={} left={} dead={} \
-             resplits={} latency[{}] queue[{}] E_client={:.6}J E_up={:.6}J util=[{}]",
+             resplits={} latency[{}] deviceq[{}] edgeq[{}] cloudq[{}] \
+             E_client={:.6}J E_up={:.6}J util=[{}] eutil=[{}]",
             self.model,
             self.seed,
             self.completed,
@@ -154,10 +175,13 @@ impl SimReport {
             self.batteries_exhausted,
             self.resplits,
             self.latency.summary(),
+            self.device_queue_delay.summary(),
+            self.edge_queue_delay.summary(),
             self.queue_delay.summary(),
             self.client_energy_j,
             self.upload_energy_j,
             util.join(","),
+            eutil.join(","),
         )
     }
 
@@ -189,7 +213,21 @@ impl SimReport {
             self.throughput_rps()
         );
         println!("  latency    : {}", self.latency.summary());
-        println!("  cloudq     : {}", self.queue_delay.summary());
+        // Per-tier queue delay: where requests actually waited.
+        for (tier, h) in [
+            ("deviceq", &self.device_queue_delay),
+            ("edgeq", &self.edge_queue_delay),
+            ("cloudq", &self.queue_delay),
+        ] {
+            println!(
+                "  {:<10} : n={} p50={} p95={} p99={}",
+                tier,
+                h.count(),
+                crate::util::fmt_secs(h.p50()),
+                crate::util::fmt_secs(h.p95()),
+                crate::util::fmt_secs(h.p99()),
+            );
+        }
         for (i, c) in self.clouds.iter().enumerate() {
             println!(
                 "  cloud {:<4} : {} servers, served={}, util={:.1}%, peak queue={}",
@@ -198,6 +236,16 @@ impl SimReport {
                 c.served,
                 c.utilization * 100.0,
                 c.peak_queue
+            );
+        }
+        for (i, e) in self.edges.iter().enumerate() {
+            println!(
+                "  edge {:<5} : {} servers, served={}, util={:.1}%, peak queue={}",
+                i,
+                e.servers,
+                e.served,
+                e.utilization * 100.0,
+                e.peak_queue
             );
         }
         for p in &self.per_profile {
@@ -223,7 +271,13 @@ impl SimReport {
         let splits: Vec<String> = self
             .split_distribution
             .iter()
-            .map(|(l1, n)| format!("l1={l1}:{n}"))
+            .map(|(p, n)| {
+                if p.is_two_tier() {
+                    format!("l1={}:{n}", p.l1)
+                } else {
+                    format!("l1={}/l2={}:{n}", p.l1, p.l2)
+                }
+            })
             .collect();
         println!("  splits     : {}", splits.join(" "));
     }
@@ -300,8 +354,15 @@ struct Sim<'a> {
     devices: Vec<SimDevice>,
     active: ActiveSet,
     clouds: Vec<SimCloud>,
+    /// Per-site torso queues; empty without an edge tier.
+    edges: Vec<SimEdge>,
+    /// Expanded edge tier, shared by the planner (tiered keys/solves)
+    /// and the engine (site routing).
+    topology: Option<EdgeTopology>,
     latency_by_profile: BTreeMap<&'static str, Histogram>,
     devices_by_profile: BTreeMap<&'static str, usize>,
+    /// Device-tier queue delay (backlog wait before head compute).
+    device_wait: Histogram,
     counters: Counters,
     horizon_reached: bool,
     /// Split-plan memo table (see [`crate::optimizer::cache`]).
@@ -314,7 +375,37 @@ struct Sim<'a> {
     sweeps: u64,
     decision_count: u64,
     /// Full decision trace; only fed when `planner_perf.record_decisions`.
-    decisions: Vec<(u32, u32)>,
+    decisions: Vec<(u32, u32, u32)>,
+}
+
+/// Run the decision procedure for one quantised planner state — flat
+/// (`site == None`) or tiered (`Some((site params, bucketed backhaul
+/// bandwidth))`, exactly what the key's [`TierKey`] recorded). A pure
+/// function of its arguments (the seed is key-derived), shared by the
+/// inline and pool-worker paths so scheduling cannot change any
+/// decision; quantisation runs before the solver in cached and
+/// uncached paths alike.
+#[allow(clippy::too_many_arguments)]
+fn solve_state(
+    kind: PlannerKind,
+    profile: &'static ComputeProfile,
+    model: &ModelProfile,
+    bw_q: f64,
+    band: BatteryBand,
+    site: Option<(EdgeSite, f64)>,
+    params: &Nsga2Params,
+    seed: u64,
+) -> Option<SplitPlan> {
+    let pm = member_perf_model(profile, model, bw_q);
+    match site {
+        None => solve_plan(kind, &pm, band, params, seed),
+        Some((s, backhaul_q)) => {
+            let backhaul =
+                BackhaulLink { bandwidth_mbps: backhaul_q, latency_s: s.backhaul.latency_s };
+            let tpm = TieredPerfModel::new(pm, s.profile, s.servers, backhaul);
+            solve_plan_tiered(kind, &tpm, band, params, seed)
+        }
+    }
 }
 
 impl<'a> Sim<'a> {
@@ -345,6 +436,11 @@ impl<'a> Sim<'a> {
         }
         let model = Arc::new(spec.analyze(1));
         let model_id = model_cache_id(&model);
+        let topology = cfg.edge.as_ref().map(|spec| spec.topology());
+        let edges = topology
+            .as_ref()
+            .map(|t| t.sites.iter().map(|s| SimEdge::new(s.servers)).collect())
+            .unwrap_or_default();
         Ok(Sim {
             cfg,
             model,
@@ -356,8 +452,11 @@ impl<'a> Sim<'a> {
             clouds: (0..cfg.clouds.max(1))
                 .map(|_| SimCloud::new(cfg.cloud_servers.max(1)))
                 .collect(),
+            edges,
+            topology,
             latency_by_profile: BTreeMap::new(),
             devices_by_profile: BTreeMap::new(),
+            device_wait: Histogram::new(),
             counters: Counters::default(),
             horizon_reached: false,
             cache: SplitPlanCache::new(),
@@ -369,12 +468,24 @@ impl<'a> Sim<'a> {
         })
     }
 
+    /// This device's static edge attachment (assigned site), if the
+    /// scenario has an edge tier.
+    fn attachment(&self, device: usize) -> Option<EdgeAttachment> {
+        let t = self.topology.as_ref()?;
+        let site = t.site_of(device);
+        Some(EdgeAttachment {
+            site,
+            profile: t.sites[site].profile,
+            backhaul: t.sites[site].backhaul,
+        })
+    }
+
     /// Account one adopted split decision (and retain it in the trace
     /// when the scenario asked for the full stream).
-    fn note_decision(&mut self, d: usize, l1: usize) {
+    fn note_decision(&mut self, d: usize, plan: SplitPlan) {
         self.decision_count += 1;
         if self.cfg.planner_perf.record_decisions {
-            self.decisions.push((d as u32, l1 as u32));
+            self.decisions.push((d as u32, plan.l1 as u32, plan.l2 as u32));
         }
     }
 
@@ -388,7 +499,11 @@ impl<'a> Sim<'a> {
         }
     }
 
-    /// NSGA-II budget for solves (ignored by the exhaustive planner).
+    /// NSGA-II budget for solves. Only [`Planner::SmartSplit`] actually
+    /// consumes these (the exhaustive planners are parameter-free), and
+    /// the configured params are authoritative — tiered SmartSplit
+    /// scenarios should carry [`Nsga2Params::for_small_genome`]`(2)`
+    /// (the CLI's two-phone tiered path does).
     fn plan_params(&self) -> Nsga2Params {
         match &self.cfg.planner {
             Planner::SmartSplit(p) => p.clone(),
@@ -396,20 +511,43 @@ impl<'a> Sim<'a> {
         }
     }
 
-    /// Quantised planner state for a device's current conditions; returns
-    /// the cache key and the (bucketed) bandwidth the solve must use.
-    fn plan_key(
+    /// The edge site (index + parameters) device `member` plans against,
+    /// with its key-ready bucketed backhaul bandwidth.
+    fn plan_site(&self, member: usize) -> Option<(usize, EdgeSite, f64)> {
+        let t = self.topology.as_ref()?;
+        let site = t.site_of(member);
+        let s = t.sites[site];
+        let backhaul_q = quantize_bandwidth(
+            s.backhaul.bandwidth_mbps,
+            self.cfg.planner_perf.bw_bucket_ratio,
+        );
+        Some((site, s, backhaul_q))
+    }
+
+    /// Quantised planner state for a device's current conditions: the
+    /// cache key, the (bucketed) device bandwidth the solve must use,
+    /// and — for tiered planning — the assigned site's parameters with
+    /// their bucketed backhaul bandwidth (computed once here; the solve
+    /// paths pass it straight to [`solve_state`]).
+    fn plan_state(
         &self,
+        member: usize,
         profile: &'static ComputeProfile,
         bw_exact: f64,
         band: BatteryBand,
-    ) -> (PlanKey, f64) {
+    ) -> (PlanKey, f64, Option<(EdgeSite, f64)>) {
         let bw_q = quantize_bandwidth(bw_exact, self.cfg.planner_perf.bw_bucket_ratio);
         let kind = match self.cfg.planner {
             Planner::SmartSplit(_) => PlannerKind::SmartSplit,
             _ => PlannerKind::Topsis,
         };
-        (PlanKey::new(self.model_id, profile, band, bw_q, kind), bw_q)
+        let mut key = PlanKey::new(self.model_id, profile, band, bw_q, kind);
+        let mut site = None;
+        if let Some((idx, s, backhaul_q)) = self.plan_site(member) {
+            key = key.with_tier(TierKey::new(idx, &s, backhaul_q));
+            site = Some((s, backhaul_q));
+        }
+        (key, bw_q, site)
     }
 
     /// One cache-aware split decision. Identical inputs give identical
@@ -417,11 +555,12 @@ impl<'a> Sim<'a> {
     /// pool worker — the seed comes from the key.
     fn plan_split(
         &self,
+        member: usize,
         profile: &'static ComputeProfile,
         bw_exact: f64,
         band: BatteryBand,
-    ) -> Option<usize> {
-        self.plan_split_with(profile, bw_exact, band, &mut HashMap::new())
+    ) -> Option<SplitPlan> {
+        self.plan_split_with(member, profile, bw_exact, band, &mut HashMap::new())
     }
 
     /// As [`Sim::plan_split`], but a cache miss is served from `presolved`
@@ -431,12 +570,13 @@ impl<'a> Sim<'a> {
     /// a sequential pass.
     fn plan_split_with(
         &self,
+        member: usize,
         profile: &'static ComputeProfile,
         bw_exact: f64,
         band: BatteryBand,
-        presolved: &mut HashMap<PlanKey, Option<usize>>,
-    ) -> Option<usize> {
-        let (key, bw_q) = self.plan_key(profile, bw_exact, band);
+        presolved: &mut HashMap<PlanKey, Option<SplitPlan>>,
+    ) -> Option<SplitPlan> {
+        let (key, bw_q, site) = self.plan_state(member, profile, bw_exact, band);
         let kind = key.kind;
         let seed = key.derived_seed(self.plan_base_seed());
         let params = self.plan_params();
@@ -444,8 +584,7 @@ impl<'a> Sim<'a> {
         let pre = presolved.remove(&key);
         self.cache.plan(self.cfg.planner_perf.cache, &key, || {
             pre.unwrap_or_else(|| {
-                let pm = member_perf_model(profile, model, bw_q);
-                solve_plan(kind, &pm, band, &params, seed)
+                solve_state(kind, profile, model, bw_q, band, site, &params, seed)
             })
         })
     }
@@ -459,11 +598,11 @@ impl<'a> Sim<'a> {
         let profile = self.devices[d].profile;
         let bw = self.devices[d].bandwidth_at(now);
         let band = BatteryBand::of_fraction(self.devices[d].soc());
-        let Some(l1) = self.plan_split(profile, bw, band) else {
+        let Some(plan) = self.plan_split(d, profile, bw, band) else {
             return;
         };
-        self.devices[d].apply_split(l1, &self.model, bw);
-        self.note_decision(d, l1);
+        self.devices[d].apply_split(plan, &self.model, bw);
+        self.note_decision(d, plan);
     }
 
     /// Solve the distinct not-yet-cached planner states behind a sweep's
@@ -476,7 +615,7 @@ impl<'a> Sim<'a> {
     fn solve_pending_parallel(
         &mut self,
         pending: &[(usize, f64, BatteryBand)],
-    ) -> HashMap<PlanKey, Option<usize>> {
+    ) -> HashMap<PlanKey, Option<SplitPlan>> {
         if !self.cfg.planner_perf.cache || !self.cfg.planner_perf.parallel || pending.len() < 2 {
             return HashMap::new();
         }
@@ -485,14 +624,13 @@ impl<'a> Sim<'a> {
         let mut requests = Vec::with_capacity(pending.len());
         for &(d, bw, band) in pending {
             let profile = self.devices[d].profile;
-            let (key, bw_q) = self.plan_key(profile, bw, band);
+            let (key, bw_q, site) = self.plan_state(d, profile, bw, band);
             let model = Arc::clone(&self.model);
             let params = params.clone();
             let seed = key.derived_seed(base_seed);
             let kind = key.kind;
             requests.push((key, move || {
-                let pm = member_perf_model(profile, &model, bw_q);
-                solve_plan(kind, &pm, band, &params, seed)
+                solve_state(kind, profile, &model, bw_q, band, site, &params, seed)
             }));
         }
         let pool = self
@@ -510,20 +648,32 @@ impl<'a> Sim<'a> {
         let id = self.devices.len();
         let cloud = id % self.clouds.len();
         let bw = trace.at(Duration::from_secs_f64(at.max(0.0)));
-        let (l1, pinned) = match &self.cfg.planner {
+        let (plan, pinned) = match &self.cfg.planner {
             Planner::Fixed(l1) => {
-                ((*l1).clamp(1, self.model.num_layers.saturating_sub(1).max(1)), true)
+                let l1 = (*l1).clamp(1, self.model.num_layers.saturating_sub(1).max(1));
+                (SplitPlan::two_tier(l1), true)
             }
             _ => {
                 let band = BatteryBand::of_fraction(soc.clamp(0.0, 1.0));
-                let l1 = self
-                    .plan_split(profile, bw, band)
+                let plan = self
+                    .plan_split(id, profile, bw, band)
                     .expect("no feasible split for device");
-                (l1, false)
+                (plan, false)
             }
         };
-        let d = SimDevice::with_split(profile, trace, cloud, soc, at, &self.model, l1, pinned);
-        self.note_decision(id, l1);
+        let edge = self.attachment(id);
+        let d = SimDevice::with_split(
+            profile,
+            trace,
+            cloud,
+            edge,
+            soc,
+            at,
+            &self.model,
+            plan,
+            pinned,
+        );
+        self.note_decision(id, plan);
         *self.devices_by_profile.entry(profile.name).or_insert(0) += 1;
         self.devices.push(d);
         self.active.insert(id);
@@ -542,14 +692,24 @@ impl<'a> Sim<'a> {
     }
 
     /// Start a request (issued at `issued`) on an idle device `d` at `now`;
-    /// schedules its uplink-complete event.
+    /// schedules its uplink-complete event carrying the captured per-hop
+    /// costs.
     fn start_on(&mut self, d: usize, issued: SimTime, now: SimTime) {
         self.devices[d].apply_idle_drain(now, self.cfg.idle_drain_w);
         match self.devices[d].start_request(now) {
             Some(cost) => {
+                // Device-tier queue delay: the serial phone made this
+                // request wait `now - issued` (0 when started at once).
+                self.device_wait.record_secs(now - issued);
                 self.q.schedule_in(
                     cost.head_s + cost.upload_s,
-                    Event::Uplinked { device: d, issued, service_s: cost.service_s },
+                    Event::Uplinked {
+                        device: d,
+                        issued,
+                        torso_s: cost.torso_s,
+                        backhaul_s: cost.backhaul_s,
+                        tail_s: cost.tail_s,
+                    },
                 );
             }
             None => {
@@ -557,6 +717,34 @@ impl<'a> Sim<'a> {
                 self.counters.exhausted += 1;
                 self.deactivate(d);
             }
+        }
+    }
+
+    /// Request fully served: completion accounting shared by the cloud
+    /// tail and the edge-terminal path.
+    fn complete_request(&mut self, device: usize, issued: SimTime, now: SimTime) {
+        self.counters.completed += 1;
+        self.devices[device].served += 1;
+        self.latency_by_profile
+            .entry(self.devices[device].profile.name)
+            .or_insert_with(Histogram::new)
+            .record_secs(now - issued);
+    }
+
+    /// Hand a request to its device's cloud queue (tail layers). An
+    /// edge-terminal plan (`l2 == L`, `tail_s == 0`) completes here
+    /// directly: the tiered model charges it zero cloud cost, so it
+    /// must not occupy a cloud server or queue behind real tail work.
+    /// (Two-tier plans always have a non-empty tail — `l1 ≤ L-1` is
+    /// enforced — so this path cannot fire for them.)
+    fn offer_cloud(&mut self, device: usize, issued: SimTime, tail_s: f64, now: SimTime) {
+        if tail_s <= 0.0 {
+            self.complete_request(device, issued, now);
+            return;
+        }
+        let c = self.devices[device].cloud;
+        if let Some(svc) = self.clouds[c].offer(device, issued, now, tail_s) {
+            self.q.schedule_in(svc, Event::CloudDone { cloud: c, device, issued });
         }
     }
 
@@ -580,11 +768,39 @@ impl<'a> Sim<'a> {
         }
     }
 
-    fn on_uplinked(&mut self, device: usize, issued: SimTime, service_s: f64, now: SimTime) {
+    fn on_uplinked(
+        &mut self,
+        device: usize,
+        issued: SimTime,
+        torso_s: f64,
+        backhaul_s: f64,
+        tail_s: f64,
+        now: SimTime,
+    ) {
         self.devices[device].busy = false;
-        let c = self.devices[device].cloud;
-        if let Some(svc) = self.clouds[c].offer(device, issued, now, service_s) {
-            self.q.schedule_in(svc, Event::CloudDone { cloud: c, device, issued });
+        // Route by the costs captured at issue: torso work contends at
+        // the assigned edge site, then crosses the backhaul; empty hops
+        // are skipped entirely, so a two-tier plan (torso == backhaul ==
+        // 0) takes exactly the classic device→cloud path — the zero-edge
+        // degeneracy `tests/edge_parity.rs` pins.
+        if torso_s > 0.0 {
+            let site = self.devices[device]
+                .edge
+                .as_ref()
+                .map(|e| e.site)
+                .expect("torso work without an edge attachment");
+            if let Some(svc) =
+                self.edges[site].offer(device, issued, now, torso_s, backhaul_s, tail_s)
+            {
+                self.q.schedule_in(
+                    svc,
+                    Event::EdgeDone { site, device, issued, backhaul_s, tail_s },
+                );
+            }
+        } else if backhaul_s > 0.0 {
+            self.q.schedule_in(backhaul_s, Event::CloudArrive { device, issued, tail_s });
+        } else {
+            self.offer_cloud(device, issued, tail_s, now);
         }
         // The drain from this request may have crossed a battery band
         // boundary — the event-driven re-split trigger.
@@ -607,13 +823,39 @@ impl<'a> Sim<'a> {
         }
     }
 
+    /// An edge server finished this request's torso: send it over the
+    /// backhaul (or straight to the cloud when the backhaul is free) and
+    /// start the next queued torso, if any.
+    fn on_edge_done(
+        &mut self,
+        site: usize,
+        device: usize,
+        issued: SimTime,
+        backhaul_s: f64,
+        tail_s: f64,
+        now: SimTime,
+    ) {
+        if backhaul_s > 0.0 {
+            self.q.schedule_in(backhaul_s, Event::CloudArrive { device, issued, tail_s });
+        } else {
+            self.offer_cloud(device, issued, tail_s, now);
+        }
+        if let Some(next) = self.edges[site].finish(now) {
+            self.q.schedule_in(
+                next.service_s,
+                Event::EdgeDone {
+                    site,
+                    device: next.device,
+                    issued: next.issued,
+                    backhaul_s: next.backhaul_s,
+                    tail_s: next.tail_s,
+                },
+            );
+        }
+    }
+
     fn on_cloud_done(&mut self, cloud: usize, device: usize, issued: SimTime, now: SimTime) {
-        self.counters.completed += 1;
-        self.devices[device].served += 1;
-        self.latency_by_profile
-            .entry(self.devices[device].profile.name)
-            .or_insert_with(Histogram::new)
-            .record_secs(now - issued);
+        self.complete_request(device, issued, now);
         if let Some(next) = self.clouds[cloud].finish(now) {
             self.q.schedule_in(
                 next.service_s,
@@ -648,11 +890,11 @@ impl<'a> Sim<'a> {
         // pass-2 results through the normal (counted) cache path.
         for (d, bw, band) in pending {
             let profile = self.devices[d].profile;
-            let Some(l1) = self.plan_split_with(profile, bw, band, &mut presolved) else {
+            let Some(plan) = self.plan_split_with(d, profile, bw, band, &mut presolved) else {
                 continue;
             };
-            self.devices[d].apply_split(l1, &self.model, bw);
-            self.note_decision(d, l1);
+            self.devices[d].apply_split(plan, &self.model, bw);
+            self.note_decision(d, plan);
         }
         // Canonical re-arm: sweep k fires at exactly k·period on the
         // absolute grid. A relative `schedule_in(period)` re-arm would
@@ -709,8 +951,14 @@ impl<'a> Sim<'a> {
             match event {
                 Event::Horizon => self.horizon_reached = true,
                 Event::Arrival => self.on_arrival(now),
-                Event::Uplinked { device, issued, service_s } => {
-                    self.on_uplinked(device, issued, service_s, now)
+                Event::Uplinked { device, issued, torso_s, backhaul_s, tail_s } => {
+                    self.on_uplinked(device, issued, torso_s, backhaul_s, tail_s, now)
+                }
+                Event::EdgeDone { site, device, issued, backhaul_s, tail_s } => {
+                    self.on_edge_done(site, device, issued, backhaul_s, tail_s, now)
+                }
+                Event::CloudArrive { device, issued, tail_s } => {
+                    self.offer_cloud(device, issued, tail_s, now)
                 }
                 Event::CloudDone { cloud, device, issued } => {
                     self.on_cloud_done(cloud, device, issued, now)
@@ -754,9 +1002,23 @@ impl<'a> Sim<'a> {
                 }
             })
             .collect();
-        let mut split_counts: BTreeMap<usize, u64> = BTreeMap::new();
+        let edge_queue_delay = Histogram::new();
+        let edges: Vec<CloudSlice> = self
+            .edges
+            .iter()
+            .map(|e| {
+                edge_queue_delay.merge(&e.queue_delay);
+                CloudSlice {
+                    servers: e.servers,
+                    served: e.served,
+                    utilization: e.utilization(self.cfg.duration_s),
+                    peak_queue: e.peak_queue(),
+                }
+            })
+            .collect();
+        let mut split_counts: BTreeMap<SplitPlan, u64> = BTreeMap::new();
         for d in self.devices.iter().filter(|d| d.active) {
-            *split_counts.entry(d.l1).or_insert(0) += 1;
+            *split_counts.entry(d.plan()).or_insert(0) += 1;
         }
         SimReport {
             model: self.cfg.model.clone(),
@@ -775,8 +1037,11 @@ impl<'a> Sim<'a> {
             dropped: self.counters.dropped,
             latency,
             queue_delay,
+            device_queue_delay: self.device_wait,
+            edge_queue_delay,
             per_profile,
             clouds,
+            edges,
             resplits: self.devices.iter().map(|d| d.resplits).sum(),
             client_energy_j: self.devices.iter().map(|d| d.client_energy_j).sum(),
             upload_energy_j: self.devices.iter().map(|d| d.upload_energy_j).sum(),

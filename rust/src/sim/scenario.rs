@@ -14,6 +14,7 @@
 use std::time::Duration;
 
 use crate::device::{profiles, ComputeProfile};
+use crate::edge::{AssignmentPolicy, BackhaulLink, EdgeSite, EdgeTopology};
 use crate::netsim::BandwidthTrace;
 use crate::optimizer::Nsga2Params;
 use crate::sim::device::Planner;
@@ -100,6 +101,72 @@ impl FleetSpec {
     }
 }
 
+/// The scenario-level description of an edge tier: a uniform set of
+/// metro sites between the fleet and the core cloud(s). Expanded into
+/// an [`EdgeTopology`] (and per-site M/G/c torso queues) by the sim.
+#[derive(Clone, Debug)]
+pub struct EdgeSpec {
+    /// Number of metro sites.
+    pub sites: usize,
+    /// Torso servers per site; `0` makes every site a pure relay (the
+    /// planner can then only choose two-tier plans — the degenerate
+    /// configuration `tests/edge_parity.rs` pins against PR-2 behaviour
+    /// when the backhaul is also [`BackhaulLink::FREE`]).
+    pub servers_per_site: usize,
+    /// Compute profile of one edge server.
+    pub profile: &'static ComputeProfile,
+    /// Edge→cloud backhaul shared by all sites.
+    pub backhaul: BackhaulLink,
+    /// Device→site assignment.
+    pub assignment: AssignmentPolicy,
+}
+
+impl EdgeSpec {
+    /// A uniform metro tier: `sites` sites of `servers_per_site` edge
+    /// servers each, `backhaul_mbps` of wired uplink (2 ms one way).
+    pub fn uniform(sites: usize, servers_per_site: usize, backhaul_mbps: f64) -> EdgeSpec {
+        EdgeSpec {
+            sites,
+            servers_per_site,
+            profile: profiles::edge_server(),
+            backhaul: BackhaulLink { bandwidth_mbps: backhaul_mbps, latency_s: 2e-3 },
+            assignment: AssignmentPolicy::RoundRobin,
+        }
+    }
+
+    /// The degenerate tier: relay-only sites over a free backhaul. The
+    /// planner must reproduce two-tier decisions exactly under it.
+    pub fn degenerate_relay(sites: usize) -> EdgeSpec {
+        EdgeSpec {
+            sites,
+            servers_per_site: 0,
+            profile: profiles::edge_server(),
+            backhaul: BackhaulLink::FREE,
+            assignment: AssignmentPolicy::RoundRobin,
+        }
+    }
+
+    /// Expand into the topology the planner and engine share. A
+    /// zero-site spec is a contradiction (disable the tier with
+    /// `SimConfig::edge = None` instead), so it is rejected loudly —
+    /// mirroring [`EdgeTopology::uniform`] — rather than silently
+    /// clamped to a phantom single site.
+    pub fn topology(&self) -> EdgeTopology {
+        assert!(self.sites > 0, "an edge tier needs at least one site (use edge: None to disable)");
+        EdgeTopology {
+            sites: vec![
+                EdgeSite {
+                    servers: self.servers_per_site,
+                    profile: self.profile,
+                    backhaul: self.backhaul,
+                };
+                self.sites
+            ],
+            assignment: self.assignment,
+        }
+    }
+}
+
 /// Planner performance layer knobs (split-plan cache + parallel
 /// re-solve fan-out; see `optimizer::cache` and `rust/DESIGN.md`
 /// §"Planner performance").
@@ -180,6 +247,9 @@ pub struct SimConfig {
     pub churn: Option<ChurnConfig>,
     /// Split-plan cache / parallel re-solve configuration.
     pub planner_perf: PlannerPerfConfig,
+    /// Metro edge tier between the fleet and the cloud(s); `None` is the
+    /// paper's two-tier world (every plan has an empty torso).
+    pub edge: Option<EdgeSpec>,
 }
 
 /// The paper's two-phone testbed, matching `main.rs`'s live `fleet`
@@ -220,6 +290,7 @@ pub fn two_phone_fleet(
         // Live-parity configuration: exact-bandwidth planning (cache on,
         // but every decision equals the uncached solve bit-for-bit).
         planner_perf: PlannerPerfConfig::default(),
+        edge: None,
     }
 }
 
@@ -260,7 +331,31 @@ pub fn city_scale(model: &str, devices: usize, duration_s: f64, seed: u64) -> Si
             mean_lifetime_s: duration_s * 2.0,
         }),
         planner_perf: PlannerPerfConfig::fleet_scale(),
+        edge: None,
     }
+}
+
+/// [`city_scale`] with a metro edge tier: `sites` sites of 4 edge
+/// servers each behind a metro-Ethernet backhaul, devices assigned
+/// round-robin. The planner solves the 2-D `(l1, l2)` genome per
+/// quantised state; torso work contends at the sites while tails
+/// contend in the cloud.
+pub fn city_scale_tiered(
+    model: &str,
+    devices: usize,
+    sites: usize,
+    duration_s: f64,
+    seed: u64,
+) -> SimConfig {
+    let mut cfg = city_scale(model, devices, duration_s, seed);
+    cfg.edge = Some(EdgeSpec {
+        sites: sites.max(1),
+        servers_per_site: 4,
+        profile: profiles::edge_server(),
+        backhaul: BackhaulLink::METRO_1GBE,
+        assignment: AssignmentPolicy::RoundRobin,
+    });
+    cfg
 }
 
 #[cfg(test)]
@@ -332,6 +427,26 @@ mod tests {
         assert!(cfg.idle_drain_w > 0.0);
         // Small fleets still get at least one cloud.
         assert_eq!(city_scale("alexnet", 10, 60.0, 7).clouds, 1);
+    }
+
+    #[test]
+    fn tiered_preset_attaches_an_edge_tier() {
+        let cfg = city_scale_tiered("alexnet", 1000, 3, 120.0, 7);
+        let spec = cfg.edge.as_ref().expect("tiered preset must carry an edge tier");
+        assert_eq!(spec.sites, 3);
+        assert!(spec.servers_per_site > 0);
+        let topo = spec.topology();
+        assert_eq!(topo.num_sites(), 3);
+        assert!(topo.sites.iter().all(|s| s.servers == spec.servers_per_site));
+        // Everything else matches the flat city (same fleet, same load).
+        let flat = city_scale("alexnet", 1000, 120.0, 7);
+        assert_eq!(cfg.fleet.initial_count(), flat.fleet.initial_count());
+        assert_eq!(cfg.clouds, flat.clouds);
+        // The degenerate relay spec really is degenerate.
+        let relay = EdgeSpec::degenerate_relay(3);
+        assert_eq!(relay.servers_per_site, 0);
+        assert!(relay.backhaul.is_free());
+        assert_eq!(relay.topology().num_sites(), 3);
     }
 
     #[test]

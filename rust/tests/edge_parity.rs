@@ -1,0 +1,120 @@
+//! Edge-tier integration: (a) the zero-edge degenerate configuration
+//! (relay-only sites over a free backhaul) reproduces the two-tier
+//! decision stream and downstream metrics exactly; (b) a real tiered
+//! scenario is bit-identical under one seed (per-tier queue histograms
+//! included) and actually places torso work at the edge.
+
+use smartsplit::sim::{self, EdgeSpec};
+use smartsplit::workload::Arrival;
+
+#[test]
+fn degenerate_edge_reproduces_two_tier_decision_stream() {
+    let mut flat = sim::city_scale("alexnet", 300, 120.0, 21);
+    flat.planner_perf.record_decisions = true;
+    let mut relay = flat.clone();
+    relay.edge = Some(EdgeSpec::degenerate_relay(3));
+
+    let a = sim::run(&flat).expect("two-tier run");
+    let b = sim::run(&relay).expect("degenerate tiered run");
+
+    // Byte-identical decision stream: same devices, same l1, and the
+    // relay run must never grow a torso.
+    assert!(!a.decisions.is_empty(), "scenario exercised no planning");
+    assert_eq!(a.decisions.len(), b.decisions.len());
+    for (x, y) in a.decisions.iter().zip(&b.decisions) {
+        assert_eq!((x.0, x.1), (y.0, y.1), "relay tier changed a split decision");
+        assert_eq!(x.1, x.2, "flat run produced a torso plan");
+        assert_eq!(y.1, y.2, "relay run produced a torso plan");
+    }
+    // ... and identical everything downstream of the decisions: the
+    // empty-hop fast path must keep the event stream itself unchanged.
+    assert_eq!(a.events, b.events, "degenerate tier changed the event stream");
+    assert_eq!(a.generated, b.generated);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.dropped, b.dropped);
+    assert_eq!(a.resplits, b.resplits);
+    assert_eq!(a.reopt_sweeps, b.reopt_sweeps);
+    assert_eq!(a.devices_created, b.devices_created);
+    assert_eq!(a.batteries_exhausted, b.batteries_exhausted);
+    assert_eq!(a.latency.summary(), b.latency.summary());
+    assert_eq!(a.queue_delay.summary(), b.queue_delay.summary());
+    assert_eq!(a.device_queue_delay.summary(), b.device_queue_delay.summary());
+    assert_eq!(a.split_distribution, b.split_distribution);
+    assert!(
+        (a.client_energy_j - b.client_energy_j).abs() == 0.0
+            && (a.upload_energy_j - b.upload_energy_j).abs() == 0.0,
+        "device energy must be untouched by a free relay tier"
+    );
+    // The relay tier itself must have stayed perfectly idle.
+    assert_eq!(b.edge_queue_delay.count(), 0);
+    assert!(b.edges.iter().all(|e| e.served == 0), "torso work on a relay-only site");
+}
+
+#[test]
+fn tiered_city_runs_are_bit_identical_under_one_seed() {
+    let cfg = sim::city_scale_tiered("alexnet", 800, 3, 120.0, 42);
+    let a = sim::run(&cfg).expect("tiered run a");
+    let b = sim::run(&cfg).expect("tiered run b");
+    assert_eq!(a.summary(), b.summary());
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.generated, b.generated);
+    assert_eq!(a.devices_created, b.devices_created);
+    assert_eq!(a.split_distribution, b.split_distribution);
+    // Per-tier queue histograms are part of the reproducible surface.
+    assert_eq!(a.edge_queue_delay.summary(), b.edge_queue_delay.summary());
+    assert_eq!(a.device_queue_delay.summary(), b.device_queue_delay.summary());
+    assert_eq!(a.queue_delay.summary(), b.queue_delay.summary());
+    // The run did tiered things: torso plans exist and edge sites served.
+    assert!(a.completed > 500, "only {} completed", a.completed);
+    assert!(
+        a.split_distribution.iter().any(|(p, _)| !p.is_two_tier()),
+        "no tiered plan adopted: {:?}",
+        a.split_distribution
+    );
+    assert!(
+        a.edges.iter().map(|e| e.served).sum::<u64>() > 0,
+        "no torso work reached the edge tier"
+    );
+    assert_eq!(a.edges.len(), 3);
+}
+
+#[test]
+fn tiered_request_conservation_holds() {
+    let cfg = sim::city_scale_tiered("alexnet", 400, 3, 90.0, 11);
+    let r = sim::run(&cfg).expect("tiered run");
+    // Every generated request either completed or was dropped — nothing
+    // may get lost crossing the extra tier.
+    assert_eq!(r.generated, r.completed + r.dropped);
+    // Cloud serves the tail-bearing subset (edge-terminal plans with
+    // `l2 == L` complete at the edge and never occupy a cloud server);
+    // edge sites serve the torso-bearing subset.
+    let cloud_served: u64 = r.clouds.iter().map(|c| c.served).sum();
+    let edge_served: u64 = r.edges.iter().map(|e| e.served).sum();
+    assert!(cloud_served <= r.completed, "cloud served more than completed");
+    assert!(edge_served <= r.completed, "edge served more than completed");
+    // The edge-slower-than-cloud profile keeps real tails in the cloud:
+    // both tiers must actually serve work in the tiered city.
+    assert!(cloud_served > 0, "no tail work reached the cloud");
+    assert!(edge_served > 0, "no torso work reached the edge");
+}
+
+#[test]
+fn starved_edge_site_shows_torso_queueing() {
+    // One edge server per site for a heavy open-loop load: the per-site
+    // M/G/c queues must register real torso waiting — the contention
+    // term neither the two-tier sim nor Eq. 5 can see.
+    let mut cfg = sim::city_scale_tiered("alexnet", 200, 3, 60.0, 5);
+    if let Some(edge) = cfg.edge.as_mut() {
+        edge.servers_per_site = 1;
+    }
+    cfg.churn = None;
+    cfg.arrival = Arrival::Poisson { rps: 40.0 };
+    let r = sim::run(&cfg).expect("tiered run");
+    assert!(r.completed > 0);
+    let edge_served: u64 = r.edges.iter().map(|e| e.served).sum();
+    assert!(edge_served > 0, "no torso work at the edge");
+    assert!(
+        r.edge_queue_delay.max_s() > 0.0,
+        "no torso queueing despite starved edge sites"
+    );
+}

@@ -1,0 +1,151 @@
+//! Property tests for the 2-D split genome (`util::prop` substrate):
+//!
+//! * feasibility monotonicity — `l1 ≤ l2` is enforced through
+//!   crossover/mutation (unordered genomes always carry a violation, and
+//!   no unordered plan ever survives into a returned Pareto set);
+//! * degeneracy — with zero edge servers and a free backhaul the tiered
+//!   problem collapses onto the paper's two-tier problem: same Pareto
+//!   front, byte-identical TOPSIS picks in every battery band.
+
+use smartsplit::coordinator::battery::{battery_aware_split_banded, BatteryBand};
+use smartsplit::device::{profiles, ComputeProfile};
+use smartsplit::edge::{
+    exhaustive_tiered_front, tiered_split_banded, BackhaulLink, SplitPlan, TieredPerfModel,
+    TieredSplitProblem,
+};
+use smartsplit::models::zoo;
+use smartsplit::optimizer::{exhaustive_pareto_front, optimize, Nsga2Params, Problem};
+use smartsplit::perfmodel::{NetworkEnv, PerfModel, RadioPower};
+use smartsplit::prop_assert;
+use smartsplit::util::prop::{run_prop, Gen};
+
+fn device_pm<'a>(
+    profile: &'a smartsplit::models::ModelProfile,
+    bw: f64,
+    dev: &'static ComputeProfile,
+) -> PerfModel<'a> {
+    PerfModel::new(
+        dev,
+        profiles::cloud_server(),
+        dev.wifi.map(|w| w.radio_power()).unwrap_or(RadioPower::PAPER_80211N),
+        NetworkEnv::with_bandwidth(bw),
+        profile,
+    )
+}
+
+fn gen_device(g: &mut Gen) -> &'static ComputeProfile {
+    if g.bool() {
+        profiles::samsung_j6()
+    } else {
+        profiles::redmi_note8()
+    }
+}
+
+fn gen_model(g: &mut Gen) -> smartsplit::models::ModelSpec {
+    let names = ["alexnet", "vgg11", "mobilenet_v2"];
+    zoo::by_name(names[g.usize_in(0, 2)]).unwrap()
+}
+
+#[test]
+fn prop_unordered_genomes_always_violate() {
+    run_prop("tiered unordered genomes violate", 40, |g| {
+        let model = gen_model(g).analyze(1);
+        let bw = g.f64_in(1.0, 60.0).max(0.5);
+        let tpm = TieredPerfModel::new(
+            device_pm(&model, bw, gen_device(g)),
+            profiles::edge_server(),
+            g.usize_in(0, 8),
+            BackhaulLink {
+                bandwidth_mbps: g.f64_in(10.0, 2000.0).max(1.0),
+                latency_s: g.f64_in(0.0, 0.01),
+            },
+        );
+        let problem = TieredSplitProblem::new(&tpm);
+        let l = model.num_layers as i64;
+        let a = 1 + g.usize_in(0, (l - 1) as usize) as i64;
+        let b = 1 + g.usize_in(0, (l - 1) as usize) as i64;
+        let (lo, hi) = (a.min(b), a.max(b));
+        if hi > lo {
+            prop_assert!(
+                problem.violation_of(&[hi, lo]) > 0.0,
+                "unordered genome [{hi},{lo}] feasible"
+            );
+        }
+        // Violation grading: a wider inversion never scores lower.
+        if hi - lo >= 2 {
+            prop_assert!(
+                problem.violation_of(&[hi, lo]) >= problem.violation_of(&[lo + 1, lo]),
+                "violation not monotone in the inversion gap"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solver_members_are_ordered_and_feasible() {
+    run_prop("tiered NSGA-II members ordered", 12, |g| {
+        let model = gen_model(g).analyze(1);
+        let bw = g.f64_in(1.0, 60.0).max(0.5);
+        let servers = g.usize_in(0, 8);
+        let tpm = TieredPerfModel::new(
+            device_pm(&model, bw, gen_device(g)),
+            profiles::edge_server(),
+            servers,
+            BackhaulLink {
+                bandwidth_mbps: g.f64_in(10.0, 2000.0).max(1.0),
+                latency_s: g.f64_in(0.0, 0.01),
+            },
+        );
+        let problem = TieredSplitProblem::new(&tpm);
+        let params = Nsga2Params {
+            seed: g.rng.next_u64(),
+            ..Nsga2Params::for_small_genome(2)
+        };
+        let set = optimize(&problem, &params);
+        prop_assert!(!set.members.is_empty(), "empty Pareto set");
+        for m in &set.members {
+            let (l1, l2) = (m.genome[0], m.genome[1]);
+            prop_assert!(l1 <= l2, "unordered member ({l1},{l2}) survived");
+            prop_assert!(m.violation == 0.0, "infeasible member ({l1},{l2}) survived");
+            if servers == 0 {
+                prop_assert!(l1 == l2, "torso plan ({l1},{l2}) with zero edge servers");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_degenerate_tier_collapses_to_two_tier() {
+    run_prop("degenerate tier == two-tier", 60, |g| {
+        let model = gen_model(g).analyze(1);
+        let bw = g.f64_in(1.0, 60.0).max(0.5);
+        let dev = gen_device(g);
+        let pm = device_pm(&model, bw, dev);
+        let tpm = TieredPerfModel::new(pm.clone(), profiles::edge_server(), 0, BackhaulLink::FREE);
+
+        // Identical Pareto fronts (the tiered one lives on the diagonal).
+        let tiered_front = exhaustive_tiered_front(&tpm);
+        let flat_front = exhaustive_pareto_front(&pm);
+        prop_assert!(
+            tiered_front.iter().map(|p| p.l1).collect::<Vec<_>>() == flat_front,
+            "fronts diverged: tiered {tiered_front:?} vs flat {flat_front:?}"
+        );
+        prop_assert!(
+            tiered_front.iter().all(|p| p.is_two_tier()),
+            "non-diagonal member in a degenerate front"
+        );
+
+        // Byte-identical TOPSIS picks in every battery band.
+        for band in [BatteryBand::Comfort, BatteryBand::Saver, BatteryBand::Critical] {
+            let tiered = tiered_split_banded(&tpm, band);
+            let flat = battery_aware_split_banded(&pm, band).map(SplitPlan::two_tier);
+            prop_assert!(
+                tiered == flat,
+                "band {band:?}: tiered pick {tiered:?} != two-tier pick {flat:?}"
+            );
+        }
+        Ok(())
+    });
+}

@@ -113,9 +113,11 @@ fn every_spawn_records_a_decision() {
     let q = sim::run(&quiet).expect("quiet run");
     assert!(q.decisions.is_empty());
     assert_eq!(q.decision_count, r.decision_count);
-    // Non-pinned planning always lands inside the feasible split domain.
-    for &(_, l1) in &r.decisions {
+    // Non-pinned planning always lands inside the feasible split domain;
+    // without an edge tier every plan is two-tier (l2 == l1).
+    for &(_, l1, l2) in &r.decisions {
         assert!((1..21).contains(&(l1 as usize)), "decision l1={l1} out of domain");
+        assert_eq!(l1, l2, "two-tier scenario produced a torso plan");
     }
 }
 
