@@ -19,6 +19,7 @@ fn main() -> anyhow::Result<()> {
             FleetMember { profile: profiles::samsung_j6(), bandwidth_mbps: 8.0 },
             FleetMember { profile: profiles::redmi_note8(), bandwidth_mbps: 30.0 },
         ],
+        strategy: smartsplit::planner::Strategy::SmartSplit,
         nsga2: Nsga2Params { pop_size: 60, generations: 60, ..Default::default() },
         emulate_slowdown: false,
     };

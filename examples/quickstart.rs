@@ -5,39 +5,55 @@
 //!
 //!     cargo run --release --example quickstart
 
+use std::sync::Arc;
+
+use smartsplit::coordinator::battery::BatteryBand;
 use smartsplit::coordinator::{optimize_report, Config};
 use smartsplit::device::profiles;
-use smartsplit::figures::perf_model;
 use smartsplit::models::zoo;
-use smartsplit::optimizer::{smartsplit, Nsga2Params};
+use smartsplit::optimizer::Nsga2Params;
+use smartsplit::planner::{PlanRequest, Planner, PlannerConfig, Strategy};
 
 fn main() -> anyhow::Result<()> {
-    // 1. High-level report: Pareto set + decisions of all six algorithms.
+    // 1. High-level report: Pareto set + every strategy's decision.
     let cfg = Config::default();
     print!("{}", optimize_report(&cfg)?);
 
-    // 2. The same decision through the library API.
-    let spec = zoo::alexnet();
-    let profile = spec.analyze(1);
-    let pm = perf_model(&profile, profiles::samsung_j6(), 10.0);
-    let result = smartsplit(&pm, &Nsga2Params::default());
-    let l1 = result.decision.l1;
-    println!("\nchosen split: layers 1..={l1} on the phone, {}..={} on the cloud",
-             l1 + 1, profile.num_layers);
-    println!("  end-to-end latency (Eq. 14): {:.3} s", pm.f1(l1));
-    println!("  smartphone energy  (Eq. 15): {:.3} J", pm.f2(l1));
+    // 2. The same decision through the planning façade — the one
+    //    supported API for every splitting decision.
+    let profile = Arc::new(zoo::alexnet().analyze(1));
+    let planner = Planner::new(PlannerConfig::paper(Nsga2Params::default()));
+    let req = PlanRequest::two_tier(
+        Arc::clone(&profile),
+        profiles::samsung_j6(),
+        BatteryBand::Comfort,
+        10.0,
+        Strategy::SmartSplit,
+    );
+    let outcome = planner.plan(&req);
+    let plan = outcome.plan.expect("feasible split");
+    let o = outcome.objectives.expect("objectives");
+    println!("\nchosen split: layers 1..={} on the phone, {}..={} on the cloud",
+             plan.l1, plan.l1 + 1, profile.num_layers);
+    println!("  end-to-end latency (Eq. 14): {:.3} s", o[0]);
+    println!("  smartphone energy  (Eq. 15): {:.3} J", o[1]);
     println!("  smartphone memory  (Eq. 16): {}",
-             smartsplit::util::fmt_bytes(pm.f3(l1) as u64));
+             smartsplit::util::fmt_bytes(o[2] as u64));
     println!("  intermediate upload I|l1   : {}",
-             smartsplit::util::fmt_bytes(profile.intermediate_bytes(l1)));
+             smartsplit::util::fmt_bytes(profile.intermediate_bytes(plan.l1)));
+    println!("  provenance: {:?} via {:?}, seed {:#x}, {} GA evaluations",
+             outcome.provenance.strategy, outcome.provenance.cache,
+             outcome.provenance.derived_seed, outcome.provenance.evaluations);
 
     // 3. How the decision reacts to network conditions.
     println!("\nsplit vs bandwidth:");
     for bw in [0.5, 2.0, 10.0, 50.0, 200.0] {
-        let pm = perf_model(&profile, profiles::samsung_j6(), bw);
-        let d = smartsplit(&pm, &Nsga2Params::default()).decision;
+        let mut req = req.clone();
+        req.bandwidth_mbps = bw;
+        let out = planner.plan(&req);
+        let (plan, o) = (out.plan.expect("split"), out.objectives.expect("objectives"));
         println!("  {bw:>6.1} Mbps → l1 = {:<2} (latency {:.3} s, energy {:.3} J)",
-                 d.l1, pm.f1(d.l1), pm.f2(d.l1));
+                 plan.l1, o[0], o[1]);
     }
     Ok(())
 }

@@ -6,13 +6,13 @@
 //!     make artifacts && cargo run --release --example split_serving
 //!
 //! Flags: --requests N --model M --batch B --max-batch K --bandwidth-mbps B
-//!        --algorithm A --no-slowdown
+//!        --planner S --no-slowdown
 
 use std::time::Duration;
 
 use smartsplit::coordinator::{Config, Deployment};
 use smartsplit::device::profiles;
-use smartsplit::optimizer::{Algorithm, Nsga2Params};
+use smartsplit::optimizer::Nsga2Params;
 use smartsplit::serve::RouterConfig;
 use smartsplit::util::cli::Cli;
 use smartsplit::workload::{generate, Arrival};
@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
         .opt("requests", "24", "number of requests")
         .opt("rps", "0", "open-loop Poisson rate (0 = closed loop)")
         .opt("bandwidth-mbps", "10", "shaped link bandwidth")
-        .opt("algorithm", "SmartSplit", "split policy")
+        .planner_opt()
         .opt("device-profile", "samsung_j6", "phone profile")
         .flag("no-slowdown", "run device at host speed");
     let p = match cli.parse(&args) {
@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
         model: p.get("model").into(),
         batch: p.get_usize("batch"),
         bandwidth_mbps: p.get_f64("bandwidth-mbps"),
-        algorithm: Algorithm::by_name(p.get("algorithm")).expect("algorithm"),
+        strategy: p.planner().expect("strategy"),
         device_profile: profiles::by_name(p.get("device-profile")).expect("profile"),
         router: RouterConfig {
             max_batch: p.get_usize("max-batch"),
@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "== split serving: {} b{} on {} over {} Mbps, policy {} ==",
         cfg.model, cfg.batch, cfg.device_profile.name, cfg.bandwidth_mbps,
-        cfg.algorithm.name()
+        cfg.strategy.name()
     );
     let t0 = std::time::Instant::now();
     let dep = Deployment::start(cfg.clone())?;

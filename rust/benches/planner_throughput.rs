@@ -1,17 +1,19 @@
-//! Fleet-planner throughput: the numbers behind this PR's perf claim.
+//! Fleet-planner throughput: the numbers behind the planner-layer perf
+//! claim, measured through the planning façade (`planner::Planner`) —
+//! the API every consumer now plans with.
 //!
 //! Measures a 10k-device re-optimisation tick three ways —
 //!
-//! * **baseline** — the pre-PR path: one sequential, uncached NSGA-II
-//!   solve per device at the canonical 100×250 budget (measured on a
-//!   subsample, extrapolated to the fleet);
+//! * **baseline** — the pre-cache path: one sequential, uncached
+//!   NSGA-II solve per device at the canonical 100×250 budget (measured
+//!   on a subsample, extrapolated to the fleet);
 //! * **tiny-uncached** — sequential and uncached, but with the
 //!   [`Nsga2Params::for_tiny_genome`] preset (isolates the solver-budget
 //!   win from the cache win);
 //! * **optimized** — the shipped path: 25%-bucket plan-key quantisation,
-//!   sharded [`SplitPlanCache`], distinct cache misses fanned out over a
-//!   [`ThreadPool`] (cold tick), then the all-hit steady state (warm
-//!   tick);
+//!   the façade's sharded plan cache, distinct cache misses fanned out
+//!   over a [`ThreadPool`] (cold tick), then the all-hit steady state
+//!   (warm tick);
 //!
 //! plus an allocation profile of the NSGA-II hot path (a reused
 //! [`Nsga2Solver`] must not allocate per generation). Results go to
@@ -27,10 +29,8 @@ use smartsplit::bench::black_box;
 use smartsplit::coordinator::battery::BatteryBand;
 use smartsplit::device::{profiles, ComputeProfile};
 use smartsplit::models::{zoo, ModelProfile};
-use smartsplit::optimizer::{
-    member_perf_model, model_cache_id, quantize_bandwidth, solve_plan, Nsga2Params, Nsga2Solver,
-    PlanKey, PlannerKind, SplitPlanCache, SplitProblem,
-};
+use smartsplit::optimizer::{member_perf_model, Nsga2Params, Nsga2Solver, SplitProblem};
+use smartsplit::planner::{PlanRequest, Planner, PlannerConfig, Strategy};
 use smartsplit::util::json::Json;
 use smartsplit::util::pool::ThreadPool;
 use smartsplit::util::rng::Xoshiro256;
@@ -77,68 +77,46 @@ fn synth_fleet(n: usize, seed: u64) -> Vec<DeviceState> {
         .collect()
 }
 
-/// Sequential uncached pass over `states` (the pre-PR planner shape).
-fn sequential_tick(
-    states: &[DeviceState],
-    model: &ModelProfile,
-    model_id: u64,
-    params: &Nsga2Params,
-) -> Duration {
+/// The façade requests for a fleet of device states.
+fn requests_of(states: &[DeviceState], model: &Arc<ModelProfile>) -> Vec<PlanRequest> {
+    states
+        .iter()
+        .map(|&(p, bw, band)| {
+            PlanRequest::two_tier(Arc::clone(model), p, band, bw, Strategy::SmartSplit)
+        })
+        .collect()
+}
+
+/// Sequential pass through an uncached planner (the pre-cache shape).
+/// Uses the decision-only fast path — the fleet hot paths never pay
+/// for outcome assembly, so neither do the measurements.
+fn sequential_tick(planner: &Planner, requests: &[PlanRequest]) -> Duration {
     let t0 = Instant::now();
-    for &(p, bw, band) in states {
-        let key = PlanKey::new(model_id, p, band, bw, PlannerKind::SmartSplit);
-        let pm = member_perf_model(p, model, bw);
-        black_box(solve_plan(
-            PlannerKind::SmartSplit,
-            &pm,
-            band,
-            params,
-            key.derived_seed(params.seed),
-        ));
+    for r in requests {
+        black_box(planner.split(r));
     }
     t0.elapsed()
 }
 
 /// The shipped re-optimisation tick, exactly as `sim::on_reoptimize`
-/// runs it: quantise → `presolve_batch` the distinct cache misses over
-/// the pool → serve every device through the counted cache path.
+/// runs it: quantise → presolve the distinct cache misses over the
+/// pool → serve every device through the counted cache path.
 /// Returns (wall, solves actually run this tick).
 fn cached_parallel_tick(
-    states: &[DeviceState],
-    model: &Arc<ModelProfile>,
-    model_id: u64,
-    params: &Nsga2Params,
-    cache: &SplitPlanCache,
+    planner: &Planner,
+    requests: &[PlanRequest],
     pool: &ThreadPool,
-    ratio: f64,
 ) -> (Duration, u64) {
-    let solves_before = cache.stats().solves;
+    let solves_before = planner.stats().solves;
     let t0 = Instant::now();
-    let requests = states
-        .iter()
-        .map(|&(p, bw, band)| {
-            let bw_q = quantize_bandwidth(bw, ratio);
-            let key = PlanKey::new(model_id, p, band, bw_q, PlannerKind::SmartSplit);
-            let model = Arc::clone(model);
-            let params = params.clone();
-            let seed = key.derived_seed(params.seed);
-            (key, move || {
-                let pm = member_perf_model(p, &model, bw_q);
-                solve_plan(PlannerKind::SmartSplit, &pm, band, &params, seed)
-            })
-        })
-        .collect();
-    let mut presolved = cache.presolve_batch(pool, requests);
+    let mut presolved = planner.presolve_batch(pool, requests);
     // Apply phase: every device is served through the counted cache path
-    // (pass-2 results feed the solve closure, so accounting matches a
+    // (presolve results feed the solve closure, so accounting matches a
     // sequential pass).
-    for &(p, bw, band) in states {
-        let bw_q = quantize_bandwidth(bw, ratio);
-        let key = PlanKey::new(model_id, p, band, bw_q, PlannerKind::SmartSplit);
-        let pre = presolved.remove(&key);
-        black_box(cache.plan(true, &key, || pre.expect("presolve covered every cold key")));
+    for r in requests {
+        black_box(planner.split_with(r, &mut presolved));
     }
-    (t0.elapsed(), cache.stats().solves - solves_before)
+    (t0.elapsed(), planner.stats().solves - solves_before)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -147,7 +125,6 @@ fn main() -> anyhow::Result<()> {
     let baseline_sample: usize = if smoke { 8 } else { 64 };
 
     let model = Arc::new(zoo::vgg16().analyze(1));
-    let model_id = model_cache_id(&model);
     let canonical = Nsga2Params::default();
     let tiny = Nsga2Params::for_tiny_genome();
 
@@ -188,11 +165,16 @@ fn main() -> anyhow::Result<()> {
     // ---- Fleet tick.
     println!("\n== planner_throughput: {devices}-device reoptimize tick ==");
     let states = synth_fleet(devices, 7);
+    let requests = requests_of(&states, &model);
 
-    // Pre-PR baseline: sequential, uncached, canonical budget (subsample,
-    // extrapolated — the full fleet would take minutes by construction).
-    let sample = &states[..baseline_sample.min(states.len())];
-    let base_wall = sequential_tick(sample, &model, model_id, &canonical);
+    // Pre-cache baseline: sequential, uncached, canonical budget
+    // (subsample, extrapolated — the full fleet would take minutes by
+    // construction).
+    let baseline_planner = Planner::new(
+        PlannerConfig::fleet(canonical.clone(), canonical.seed).with_cache(false),
+    );
+    let sample = &requests[..baseline_sample.min(requests.len())];
+    let base_wall = sequential_tick(&baseline_planner, sample);
     let base_per_solve = base_wall.as_secs_f64() / sample.len() as f64;
     let base_tick_s = base_per_solve * devices as f64;
     println!(
@@ -201,8 +183,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Solver-budget win alone (still sequential + uncached).
-    let tiny_sample = &states[..(baseline_sample * 4).min(states.len())];
-    let tiny_wall = sequential_tick(tiny_sample, &model, model_id, &tiny);
+    let tiny_planner =
+        Planner::new(PlannerConfig::fleet(tiny.clone(), tiny.seed).with_cache(false));
+    let tiny_sample = &requests[..(baseline_sample * 4).min(requests.len())];
+    let tiny_wall = sequential_tick(&tiny_planner, tiny_sample);
     let tiny_per_solve = tiny_wall.as_secs_f64() / tiny_sample.len() as f64;
     let tiny_tick_s = tiny_per_solve * devices as f64;
     println!(
@@ -211,13 +195,13 @@ fn main() -> anyhow::Result<()> {
     );
 
     // The shipped path: cold tick (parallel cache fill) then warm tick.
-    let cache = SplitPlanCache::new();
+    let planner = Planner::new(
+        PlannerConfig::fleet(tiny.clone(), tiny.seed).with_bucket_ratio(1.25),
+    );
     let pool = ThreadPool::new(ThreadPool::default_threads(16));
-    let (cold, cold_solves) =
-        cached_parallel_tick(&states, &model, model_id, &tiny, &cache, &pool, 1.25);
-    let (warm, warm_solves) =
-        cached_parallel_tick(&states, &model, model_id, &tiny, &cache, &pool, 1.25);
-    let stats = cache.stats();
+    let (cold, cold_solves) = cached_parallel_tick(&planner, &requests, &pool);
+    let (warm, warm_solves) = cached_parallel_tick(&planner, &requests, &pool);
+    let stats = planner.stats();
     let hit_rate = stats.hit_rate();
     println!(
         "  optimized  : cold tick {:?} ({} parallel solves for {} devices), warm tick {:?} ({} solves)",

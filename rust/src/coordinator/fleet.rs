@@ -21,10 +21,8 @@ use crate::edge::SplitPlan;
 use crate::metrics::{Histogram, ThroughputMeter};
 use crate::models::zoo;
 use crate::netsim::Link;
-use crate::optimizer::{
-    member_perf_model, model_cache_id, solve_plan, Nsga2Params, PlanKey, PlannerKind,
-    SplitPlanCache,
-};
+use crate::optimizer::{member_perf_model, Nsga2Params};
+use crate::planner::{PlanRequest, Planner, PlannerConfig, Strategy};
 use crate::runtime::Tensor;
 use crate::serve::{CloudServer, DeviceClient};
 use crate::util::pool::ThreadPool;
@@ -44,6 +42,9 @@ pub struct FleetConfig {
     pub model: String,
     pub batch: usize,
     pub members: Vec<FleetMember>,
+    /// Planning strategy every member's split is decided with (the
+    /// shared `--planner` flag).
+    pub strategy: Strategy,
     pub nsga2: Nsga2Params,
     pub emulate_slowdown: bool,
 }
@@ -123,52 +124,32 @@ impl Fleet {
             anyhow::ensure!(m.profile.wifi.is_some(), "member {} has no radio", m.profile.name);
         }
 
-        // Plan every member's split up front: distinct (profile,
-        // bandwidth) states are deduplicated and solved once, fanned out
-        // over a worker pool, then served to each member through the
-        // counted cache path. Each solve seeds from its key, so fan-out
-        // order cannot change a decision (optimizer::cache).
-        let model_id = model_cache_id(&profile);
-        let cache = SplitPlanCache::new();
+        // Plan every member's split up front through the façade:
+        // distinct (profile, bandwidth) states are deduplicated and
+        // solved once, fanned out over a worker pool, then served to
+        // each member through the counted cache path. Each solve seeds
+        // from its key, so fan-out order cannot change a decision.
+        let planner = Planner::new(PlannerConfig::fleet(cfg.nsga2.clone(), cfg.nsga2.seed));
         let plan_pool = ThreadPool::new(ThreadPool::default_threads(cfg.members.len().max(1)));
-        let member_key = |m: &FleetMember| {
-            PlanKey::new(
-                model_id,
-                m.profile,
-                BatteryBand::Comfort,
-                m.bandwidth_mbps,
-                PlannerKind::SmartSplit,
-            )
-        };
-        let requests = cfg
+        let requests: Vec<PlanRequest> = cfg
             .members
             .iter()
             .map(|m| {
-                let key = member_key(m);
-                let model = Arc::clone(&profile);
-                let params = cfg.nsga2.clone();
-                let seed = key.derived_seed(params.seed);
-                let member_profile = m.profile;
-                let bw = m.bandwidth_mbps;
-                (key, move || {
-                    let pm = member_perf_model(member_profile, &model, bw);
-                    solve_plan(PlannerKind::SmartSplit, &pm, BatteryBand::Comfort, &params, seed)
-                })
+                PlanRequest::two_tier(
+                    Arc::clone(&profile),
+                    m.profile,
+                    BatteryBand::Comfort,
+                    m.bandwidth_mbps,
+                    cfg.strategy,
+                )
             })
             .collect();
-        let mut presolved = cache.presolve_batch(&plan_pool, requests);
-        let planned: Vec<Option<SplitPlan>> = cfg
-            .members
+        let mut presolved = planner.presolve_batch(&plan_pool, &requests);
+        let planned: Vec<Option<SplitPlan>> = requests
             .iter()
-            .map(|m| {
-                let key = member_key(m);
-                let pre = presolved.remove(&key);
-                // presolve_batch solved every distinct key of this fresh
-                // cache; duplicates hit the cache before `pre` is read.
-                cache.plan(true, &key, || pre.expect("presolve covered every cold key"))
-            })
+            .map(|r| planner.split_with(r, &mut presolved))
             .collect();
-        let stats = cache.stats();
+        let stats = planner.stats();
         log::info!(
             "fleet planner: {} members, {} solves, {:.0}% cache hit rate",
             cfg.members.len(),
@@ -347,13 +328,16 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // the frozen pre-façade entry point is the parity reference
     fn parallel_cached_planning_matches_direct_solves() {
-        // The exact planning pipeline Fleet::start runs (presolve_batch
-        // fan-out, then counted cache serving) must reproduce the
-        // per-member direct solve bit-for-bit, members sharing a
-        // (profile, bandwidth) state must share one cache entry, and the
-        // solve count must equal the number of distinct states — not the
-        // member count, and never scheduling-dependent.
+        // The exact planning pipeline Fleet::start runs (façade
+        // presolve fan-out, then counted cache serving) must reproduce
+        // the pre-façade per-member direct solve bit-for-bit, members
+        // sharing a (profile, bandwidth) state must share one cache
+        // entry, and the solve count must equal the number of distinct
+        // states — not the member count, and never scheduling-dependent.
+        use crate::optimizer::{model_cache_id, solve_plan, PlanKey, PlannerKind};
+
         let model = Arc::new(zoo::alexnet().analyze(1));
         let model_id = model_cache_id(&model);
         let params = Nsga2Params::for_tiny_genome();
@@ -362,47 +346,40 @@ mod tests {
             (profiles::redmi_note8(), 30.0),
             (profiles::samsung_j6(), 10.0), // duplicate state
         ];
-        let key_of = |p: &'static ComputeProfile, bw: f64| {
-            PlanKey::new(model_id, p, BatteryBand::Comfort, bw, PlannerKind::SmartSplit)
-        };
-        let cache = SplitPlanCache::new();
+        let planner = Planner::new(PlannerConfig::fleet(params.clone(), params.seed));
         let pool = ThreadPool::new(2);
-        let requests = members
+        let requests: Vec<PlanRequest> = members
             .iter()
             .map(|&(p, bw)| {
-                let key = key_of(p, bw);
-                let model = Arc::clone(&model);
-                let params = params.clone();
-                let seed = key.derived_seed(params.seed);
-                (key, move || {
-                    let pm = member_perf_model(p, &model, bw);
-                    solve_plan(PlannerKind::SmartSplit, &pm, BatteryBand::Comfort, &params, seed)
-                })
+                PlanRequest::two_tier(
+                    Arc::clone(&model),
+                    p,
+                    BatteryBand::Comfort,
+                    bw,
+                    Strategy::SmartSplit,
+                )
             })
             .collect();
-        let mut presolved = cache.presolve_batch(&pool, requests);
-        let planned: Vec<Option<SplitPlan>> = members
+        let mut presolved = planner.presolve_batch(&pool, &requests);
+        let planned: Vec<Option<SplitPlan>> = requests
             .iter()
-            .map(|&(p, bw)| {
-                let key = key_of(p, bw);
-                let pre = presolved.remove(&key);
-                cache.plan(true, &key, || pre.expect("presolve covered every cold key"))
-            })
+            .map(|r| planner.plan_with(r, &mut presolved).plan)
             .collect();
         for (&(p, bw), got) in members.iter().zip(&planned) {
+            let key = PlanKey::new(model_id, p, BatteryBand::Comfort, bw, PlannerKind::SmartSplit);
             let pm = member_perf_model(p, &model, bw);
             let direct = solve_plan(
                 PlannerKind::SmartSplit,
                 &pm,
                 BatteryBand::Comfort,
                 &params,
-                key_of(p, bw).derived_seed(params.seed),
+                key.derived_seed(params.seed),
             );
             assert_eq!(*got, direct, "{} @ {bw} Mbps", p.name);
         }
         assert_eq!(planned[0], planned[2], "duplicate member states must agree");
-        assert_eq!(cache.len(), 2, "two distinct planner states expected");
-        let stats = cache.stats();
+        assert_eq!(planner.cache_len(), 2, "two distinct planner states expected");
+        let stats = planner.stats();
         assert_eq!(
             (stats.solves, stats.cache_misses, stats.cache_hits),
             (2, 2, 1),

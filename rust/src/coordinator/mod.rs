@@ -18,15 +18,15 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::battery::BatteryBand;
 use crate::device::{profiles, ComputeProfile};
 use crate::metrics::{Histogram, ThroughputMeter};
 use crate::models::zoo;
 use crate::netsim::{BandwidthTrace, Link};
-use crate::optimizer::{decide, smartsplit, Algorithm, Nsga2Params, SplitDecision};
-use crate::perfmodel::{NetworkEnv, PerfModel};
+use crate::optimizer::{Nsga2Params, SplitDecision};
+use crate::planner::{PlanOutcome, PlanRequest, Planner, PlannerConfig, Strategy};
 use crate::runtime::Tensor;
 use crate::serve::{CloudServer, DeviceClient, Router, RouterConfig};
-use crate::util::rng::Xoshiro256;
 use crate::workload::{synth_images, Request};
 
 /// Coordinator configuration (CLI-mappable).
@@ -37,7 +37,9 @@ pub struct Config {
     pub batch: usize,
     pub device_profile: &'static ComputeProfile,
     pub bandwidth_mbps: f64,
-    pub algorithm: Algorithm,
+    /// Planning strategy ([`crate::planner::Strategy`]) the deployment
+    /// splits with.
+    pub strategy: Strategy,
     pub nsga2: Nsga2Params,
     pub router: RouterConfig,
     /// Emulate phone-speed compute (stretch PJRT wall time).
@@ -53,13 +55,37 @@ impl Default for Config {
             batch: 1,
             device_profile: profiles::samsung_j6(),
             bandwidth_mbps: 10.0,
-            algorithm: Algorithm::SmartSplit,
+            strategy: Strategy::SmartSplit,
             nsga2: Nsga2Params::default(),
             router: RouterConfig::default(),
             emulate_slowdown: true,
             seed: 7,
         }
     }
+}
+
+/// The façade request for this config at bandwidth `bandwidth_mbps`
+/// (full battery — the live coordinator serves mains-adjacent demos;
+/// band-aware planning lives in the fleet/sim paths).
+fn plan_request_at(cfg: &Config, bandwidth_mbps: f64) -> Result<PlanRequest> {
+    let spec = zoo::by_name(&cfg.model)
+        .with_context(|| format!("unknown model {}", cfg.model))?;
+    anyhow::ensure!(cfg.device_profile.wifi.is_some(), "device profile has no radio");
+    Ok(PlanRequest::two_tier(
+        Arc::new(spec.analyze(cfg.batch)),
+        cfg.device_profile,
+        BatteryBand::Comfort,
+        bandwidth_mbps,
+        cfg.strategy,
+    ))
+}
+
+/// One paper-mode planner for this config: the configured NSGA-II seed
+/// used as-is, no memoisation — byte-compatible with the pre-façade
+/// `smartsplit`/`decide` calls this module used to make (the CLI sets
+/// both seeds from `--seed`).
+fn paper_planner(cfg: &Config) -> Planner {
+    Planner::new(PlannerConfig::paper(cfg.nsga2.clone()))
 }
 
 /// Pick the split for the configured conditions using the analytical model
@@ -69,23 +95,18 @@ pub fn plan_split(cfg: &Config) -> Result<SplitDecision> {
 }
 
 pub fn plan_split_at_bandwidth(cfg: &Config, bandwidth_mbps: f64) -> Result<SplitDecision> {
-    let spec = zoo::by_name(&cfg.model)
-        .with_context(|| format!("unknown model {}", cfg.model))?;
-    let profile = spec.analyze(cfg.batch);
-    let radio = cfg
-        .device_profile
-        .wifi
-        .context("device profile has no radio")?
-        .radio_power();
-    let pm = PerfModel::new(
-        cfg.device_profile,
-        profiles::cloud_server(),
-        radio,
-        NetworkEnv::with_bandwidth(bandwidth_mbps),
-        &profile,
-    );
-    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
-    Ok(decide(cfg.algorithm, &pm, &cfg.nsga2, &mut rng))
+    let outcome = plan_outcome_at_bandwidth(cfg, bandwidth_mbps)?;
+    let plan = outcome
+        .plan
+        .with_context(|| format!("{} found no feasible split", cfg.strategy.name()))?;
+    Ok(SplitDecision { l1: plan.l1 })
+}
+
+/// The full façade answer (plan, predicted objectives, Pareto summary,
+/// provenance) for this config at the given bandwidth.
+pub fn plan_outcome_at_bandwidth(cfg: &Config, bandwidth_mbps: f64) -> Result<PlanOutcome> {
+    let req = plan_request_at(cfg, bandwidth_mbps)?;
+    Ok(paper_planner(cfg).plan(&req))
 }
 
 /// Results of a served workload.
@@ -285,46 +306,66 @@ impl Deployment {
     }
 }
 
-/// One-shot optimisation report for the CLI: Pareto set + per-algorithm
-/// decisions under the analytical model.
+/// One-shot optimisation report for the CLI: the configured strategy's
+/// decision, the SmartSplit Pareto set, and every strategy's decision
+/// under the analytical model — all through the planning façade.
 pub fn optimize_report(cfg: &Config) -> Result<String> {
-    let spec = zoo::by_name(&cfg.model)
-        .with_context(|| format!("unknown model {}", cfg.model))?;
-    let profile = spec.analyze(cfg.batch);
-    let radio = cfg.device_profile.wifi.context("no radio")?.radio_power();
-    let pm = PerfModel::new(
-        cfg.device_profile,
-        profiles::cloud_server(),
-        radio,
-        NetworkEnv::with_bandwidth(cfg.bandwidth_mbps),
-        &profile,
-    );
+    let planner = paper_planner(cfg);
     let mut out = String::new();
-    let result = smartsplit(&pm, &cfg.nsga2);
+    // One analyzed model profile (Arc'd) shared by every request below.
+    let base_req = plan_request_at(cfg, cfg.bandwidth_mbps)?;
+
+    // The strategy the user asked for (--planner).
+    let chosen = planner.plan(&base_req);
+    if let (Some(plan), Some(o)) = (chosen.plan, chosen.objectives) {
+        out.push_str(&format!(
+            "strategy {}: l1={} f1={:.4}s f2={:.4}J f3={:.2}MB\n\n",
+            cfg.strategy.name(), plan.l1, o[0], o[1], o[2] / 1e6
+        ));
+    } else {
+        out.push_str(&format!("strategy {}: no feasible split\n\n", cfg.strategy.name()));
+    }
+
+    // Algorithm 1's Pareto set (the paper's Fig. 6 / Table I view).
+    let mut req = base_req.clone();
+    req.strategy = Strategy::SmartSplit;
+    let result = if cfg.strategy == Strategy::SmartSplit {
+        chosen.clone()
+    } else {
+        planner.plan(&req)
+    };
+    let pareto = result.pareto.clone().unwrap_or_default();
     out.push_str(&format!(
         "model {} on {} @ {} Mbps — Pareto set ({} members, {} evals):\n",
         cfg.model, cfg.device_profile.name, cfg.bandwidth_mbps,
-        result.pareto.len(), result.evaluations
+        pareto.len(), result.provenance.evaluations
     ));
     let mut t = crate::bench::Table::new(&["l1", "latency f1 (s)", "energy f2 (J)", "memory f3 (MB)", "chosen"]);
-    for (l1, o) in &result.pareto {
+    for (p, o) in &pareto {
         t.row(&[
-            l1.to_string(),
+            p.l1.to_string(),
             format!("{:.4}", o[0]),
             format!("{:.4}", o[1]),
             format!("{:.2}", o[2] / 1e6),
-            if *l1 == result.decision.l1 { "◀ TOPSIS".into() } else { String::new() },
+            if Some(*p) == result.plan { "◀ TOPSIS".into() } else { String::new() },
         ]);
     }
     out.push_str(&t.to_string());
-    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
-    out.push_str("\nper-algorithm decisions:\n");
-    for algo in Algorithm::ALL {
-        let d = decide(algo, &pm, &cfg.nsga2, &mut rng);
-        out.push_str(&format!(
-            "  {:<10} l1={:<3} f1={:.4}s f2={:.4}J f3={:.2}MB\n",
-            algo.name(), d.l1, pm.f1(d.l1), pm.f2(d.l1), pm.f3(d.l1) / 1e6
-        ));
+    out.push_str("\nper-strategy decisions:\n");
+    for strategy in Strategy::ALL {
+        let mut req = base_req.clone();
+        req.strategy = strategy;
+        let outcome = planner.plan(&req);
+        match (outcome.plan, outcome.objectives) {
+            (Some(p), Some(o)) => out.push_str(&format!(
+                "  {:<18} l1={:<3} f1={:.4}s f2={:.4}J f3={:.2}MB\n",
+                strategy.name(), p.l1, o[0], o[1], o[2] / 1e6
+            )),
+            _ => out.push_str(&format!(
+                "  {:<18} no feasible split (e.g. infeasible ε box)\n",
+                strategy.name()
+            )),
+        }
     }
     Ok(out)
 }

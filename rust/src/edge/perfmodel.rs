@@ -87,19 +87,29 @@ impl<'a> TieredPerfModel<'a> {
     }
 
     /// Edge→cloud transfer time of the activation at `l2`; zero when the
-    /// tail is empty (`l2 == L`: nothing crosses the backhaul).
+    /// tail is empty (`l2 == L`: nothing crosses the backhaul). The COC
+    /// embedding (`l2 == 0`) relays the raw input, mirroring
+    /// [`crate::perfmodel::PerfModel::latency`] at `l1 == 0`.
     pub fn backhaul_latency_s(&self, plan: SplitPlan) -> f64 {
         if plan.l2 >= self.num_layers() {
             return 0.0;
         }
-        self.backhaul.transfer_s(self.device.profile.intermediate_bytes(plan.l2))
+        let bytes = if plan.l2 == 0 {
+            self.device.profile.input_bytes()
+        } else {
+            self.device.profile.intermediate_bytes(plan.l2)
+        };
+        self.backhaul.transfer_s(bytes)
     }
 
-    /// Full latency breakdown at `plan`.
+    /// Full latency breakdown at `plan`. The first two hops come from
+    /// the two-tier breakdown so the COC embedding (`l1 == 0`, raw
+    /// input uploaded) is handled in exactly one place.
     pub fn latency(&self, plan: SplitPlan) -> TieredLatencyBreakdown {
+        let two_tier = self.device.latency(plan.l1);
         TieredLatencyBreakdown {
-            head_s: self.device.client_latency_s(plan.l1),
-            hop1_s: self.device.upload_latency_s(plan.l1),
+            head_s: two_tier.client_s,
+            hop1_s: two_tier.upload_s,
             torso_s: self.torso_latency_s(plan),
             backhaul_s: self.backhaul_latency_s(plan),
             tail_s: self.device.server_latency_s(plan.l2),

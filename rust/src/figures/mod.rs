@@ -5,17 +5,16 @@
 //! integration tests assert the *shape* claims the paper makes.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::device::{profiles, ComputeProfile};
 use crate::models::zoo;
-use crate::optimizer::{
-    decide, smartsplit, Algorithm, Nsga2Params, SmartSplitResult,
-};
+use crate::optimizer::{Algorithm, Nsga2Params, SmartSplitResult, SplitDecision};
 use crate::perfmodel::{EnergyBreakdown, LatencyBreakdown, NetworkEnv, PerfModel};
+use crate::planner::{PlanRequest, Planner, PlannerConfig, Strategy};
 use crate::util::json::Json;
-use crate::util::rng::Xoshiro256;
 
 /// The four split-target models of the evaluation.
 pub const MODELS: [&str; 4] = ["alexnet", "vgg11", "vgg13", "vgg16"];
@@ -79,17 +78,48 @@ pub fn client_energy_compare(
 
 // ----------------------------------------------------- Fig 6 + Table I
 
+/// One paper-mode façade request for an already-analyzed model — every
+/// figure plans through [`crate::planner::Planner`] with the configured
+/// seed used as-is (byte-compatible with the pre-façade `smartsplit`
+/// calls).
+fn paper_request(
+    profile: Arc<crate::models::ModelProfile>,
+    phone: &'static ComputeProfile,
+    bandwidth_mbps: f64,
+    strategy: Strategy,
+) -> PlanRequest {
+    PlanRequest::two_tier(
+        profile,
+        phone,
+        crate::coordinator::battery::BatteryBand::Comfort,
+        bandwidth_mbps,
+        strategy,
+    )
+}
+
 /// Run Algorithm 1 for one model; the Pareto set feeds Fig. 6 and the
 /// TOPSIS choice is the Table I row.
 pub fn pareto_and_choice(
     model: &str,
-    phone: &ComputeProfile,
+    phone: &'static ComputeProfile,
     bandwidth_mbps: f64,
     params: &Nsga2Params,
 ) -> Result<SmartSplitResult> {
-    let profile = zoo::by_name(model).context("unknown model")?.analyze(1);
-    let pm = perf_model(&profile, phone, bandwidth_mbps);
-    Ok(smartsplit(&pm, params))
+    let planner = Planner::new(PlannerConfig::paper(params.clone()));
+    let profile = Arc::new(zoo::by_name(model).context("unknown model")?.analyze(1));
+    let req = paper_request(profile, phone, bandwidth_mbps, Strategy::SmartSplit);
+    let outcome = planner.plan(&req);
+    let decision = outcome.plan.context("no feasible split")?;
+    Ok(SmartSplitResult {
+        decision: SplitDecision { l1: decision.l1 },
+        pareto: outcome
+            .pareto
+            .unwrap_or_default()
+            .into_iter()
+            .map(|(p, o)| (p.l1, o))
+            .collect(),
+        evaluations: outcome.provenance.evaluations,
+    })
 }
 
 /// Min-max normalise Fig. 6's three objective columns (the paper plots
@@ -131,23 +161,40 @@ pub struct AlgoCell {
 }
 
 pub fn algorithm_comparison(
-    phone: &ComputeProfile,
+    phone: &'static ComputeProfile,
     bandwidth_mbps: f64,
     params: &Nsga2Params,
     runs: usize,
     seed: u64,
 ) -> Result<Vec<AlgoCell>> {
+    let planner = Planner::new(PlannerConfig::paper(params.clone()));
     let mut out = Vec::new();
     for model in MODELS {
-        let profile = zoo::by_name(model).unwrap().analyze(1);
+        // One analyzed profile per model, shared between the evaluation
+        // context and every request (which only vary by strategy).
+        let profile = Arc::new(zoo::by_name(model).unwrap().analyze(1));
         let pm = perf_model(&profile, phone, bandwidth_mbps);
+        let base_req =
+            paper_request(Arc::clone(&profile), phone, bandwidth_mbps, Strategy::SmartSplit);
         for algo in Algorithm::ALL {
-            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let mut req = base_req.clone();
+            req.strategy = Strategy::from(algo);
             let (mut l1s, mut f1, mut f2, mut f3) = (0.0, 0.0, 0.0, 0.0);
             // Deterministic algorithms: evaluate once, weight by runs.
             let n = if algo == Algorithm::Rs { runs } else { 1 };
-            for _ in 0..n {
-                let d = decide(algo, &pm, params, &mut rng);
+            for i in 0..n {
+                // Independent-run requests give RS a fresh draw per run
+                // (salted by the caller's seed); run 0 would be the
+                // canonical decision for every i.
+                let run = if algo == Algorithm::Rs {
+                    seed.wrapping_mul(1009).wrapping_add(i as u64 + 1)
+                } else {
+                    0
+                };
+                let d = planner
+                    .plan(&req.clone().with_run(run))
+                    .plan
+                    .context("no feasible split")?;
                 l1s += d.l1 as f64;
                 f1 += pm.f1(d.l1);
                 f2 += pm.f2(d.l1);
@@ -181,16 +228,18 @@ pub struct Fig10Row {
 /// SmartSplit on the four CNNs vs MobileNetV2-on-phone (COS) vs
 /// VGG16-on-phone (COS).
 pub fn mobilenet_comparison(
-    phone: &ComputeProfile,
+    phone: &'static ComputeProfile,
     bandwidth_mbps: f64,
     params: &Nsga2Params,
 ) -> Result<Vec<Fig10Row>> {
+    let planner = Planner::new(PlannerConfig::paper(params.clone()));
     let mut rows = Vec::new();
     for model in MODELS {
         let spec = zoo::by_name(model).unwrap();
-        let profile = spec.analyze(1);
+        let profile = Arc::new(spec.analyze(1));
         let pm = perf_model(&profile, phone, bandwidth_mbps);
-        let d = smartsplit(&pm, params).decision;
+        let req = paper_request(Arc::clone(&profile), phone, bandwidth_mbps, Strategy::SmartSplit);
+        let d = planner.plan(&req).plan.context("no feasible split")?;
         rows.push(Fig10Row {
             label: format!("{model}+SmartSplit(l1={})", d.l1),
             top1_accuracy: spec.top1_accuracy,

@@ -20,6 +20,13 @@
 //!   hierarchical edge tier ([`edge`]) that generalises the single
 //!   split point to a device→edge→cloud `(l1, l2)` partition.
 //!
+//! **Planning entry point:** every splitting decision goes through the
+//! [`planner`] façade — one `PlanRequest → PlanOutcome` API over every
+//! strategy (Algorithm 1, the exhaustive-front planner, the §VI-C
+//! baselines, the §V-A scalarisations), flat or tiered. The free
+//! functions it superseded are deprecated shims kept for the parity
+//! tests.
+//!
 //! See [DESIGN.md](../DESIGN.md) for the architecture, the offline
 //! substrate policy (§4), and the paper-vs-model validation story.
 
@@ -33,6 +40,7 @@ pub mod models;
 pub mod netsim;
 pub mod optimizer;
 pub mod perfmodel;
+pub mod planner;
 pub mod runtime;
 pub mod serve;
 pub mod sim;

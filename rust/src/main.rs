@@ -1,15 +1,20 @@
 //! SmartSplit CLI — leader entrypoint.
 //!
 //! Subcommands:
-//!   optimize   run Algorithm 1 (NSGA-II + TOPSIS) under the analytical
-//!              model and print the Pareto set + per-algorithm decisions
+//!   optimize   plan under the analytical model via the planner façade and
+//!              print the Pareto set + per-strategy decisions
 //!   cloud      run the cloud-side daemon (tail layers)
 //!   device     run the device-side client against a cloud daemon
-//!   demo       in-process cloud + device + router serving a workload
+//!   serve      in-process cloud + device + router serving a workload
+//!              (alias: demo)
 //!   fleet      heterogeneous multi-phone deployment sharing one cloud
 //!   simulate   discrete-event fleet simulation (thousands of virtual
 //!              devices, diurnal load, churn — no sockets, no wall time)
 //!   models     list models available in the artifacts directory
+//!
+//! Every planning subcommand shares the one `--planner <strategy>` flag
+//! (declared once, in `util::cli`) and plans exclusively through
+//! `planner::Planner`.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -20,7 +25,8 @@ use smartsplit::coordinator::{optimize_report, Config, Deployment};
 use smartsplit::device::profiles;
 use smartsplit::models::Manifest;
 use smartsplit::netsim::Link;
-use smartsplit::optimizer::{Algorithm, Nsga2Params};
+use smartsplit::optimizer::Nsga2Params;
+use smartsplit::planner::Strategy;
 use smartsplit::serve::{CloudServer, DeviceClient, RouterConfig};
 use smartsplit::util::cli::Cli;
 use smartsplit::workload::{generate, Arrival};
@@ -36,13 +42,13 @@ fn main() {
 fn cli() -> Cli {
     Cli::new(
         "smartsplit — CNN split serving between a smartphone and a cloud server\n\
-         usage: smartsplit <optimize|cloud|device|demo|fleet|simulate|models> [flags]",
+         usage: smartsplit <optimize|cloud|device|serve|fleet|simulate|models> [flags]",
     )
     .opt("model", "alexnet", "CNN model (alexnet|vgg11|vgg13|vgg16|mobilenet_v2)")
     .opt("batch", "1", "hardware batch size of the loaded artifacts")
     .opt("device-profile", "samsung_j6", "samsung_j6 | redmi_note8")
     .opt("bandwidth-mbps", "10", "link bandwidth B in Mbps")
-    .opt("algorithm", "SmartSplit", "SmartSplit|LBO|EBO|COS|COC|RS")
+    .planner_opt()
     .opt("artifacts", "artifacts", "AOT artifacts directory")
     .opt("requests", "16", "number of requests to serve (demo/device)")
     .opt("rps", "0", "open-loop arrival rate; 0 = closed loop")
@@ -82,15 +88,15 @@ fn run(args: &[String]) -> Result<()> {
 
     let device_profile = profiles::by_name(parsed.get("device-profile"))
         .context("unknown --device-profile")?;
-    let algorithm =
-        Algorithm::by_name(parsed.get("algorithm")).context("unknown --algorithm")?;
+    // The one strategy parse every subcommand shares (util::cli).
+    let strategy = parsed.planner().map_err(|e| anyhow::anyhow!("{e}"))?;
     let cfg = Config {
         artifacts_dir: PathBuf::from(parsed.get("artifacts")),
         model: parsed.get("model").to_string(),
         batch: parsed.get_usize("batch"),
         device_profile,
         bandwidth_mbps: parsed.get_f64("bandwidth-mbps"),
-        algorithm,
+        strategy,
         nsga2: Nsga2Params {
             pop_size: parsed.get_usize("pop"),
             generations: parsed.get_usize("gens"),
@@ -151,6 +157,7 @@ fn run(args: &[String]) -> Result<()> {
                     FleetMember { profile: profiles::samsung_j6(), bandwidth_mbps: cfg.bandwidth_mbps },
                     FleetMember { profile: profiles::redmi_note8(), bandwidth_mbps: cfg.bandwidth_mbps * 3.0 },
                 ],
+                strategy: cfg.strategy,
                 nsga2: cfg.nsga2.clone(),
                 emulate_slowdown: cfg.emulate_slowdown,
             };
@@ -162,12 +169,12 @@ fn run(args: &[String]) -> Result<()> {
             report.print();
             fleet.shutdown();
         }
-        "demo" => {
+        "serve" | "demo" => {
             let n = parsed.get_usize("requests");
             let arrival = arrival_of(parsed.get_f64("rps"));
             println!("planning split for {} on {} @ {} Mbps using {}...",
                      cfg.model, cfg.device_profile.name, cfg.bandwidth_mbps,
-                     cfg.algorithm.name());
+                     cfg.strategy.name());
             let dep = match parsed.get("split") {
                 "auto" => Deployment::start(cfg.clone())?,
                 s => Deployment::start_with_split(
@@ -247,6 +254,35 @@ fn run(args: &[String]) -> Result<()> {
                     parsed.get_usize("edge-servers"),
                     parsed.get_f64("backhaul"),
                 ));
+            }
+            // --planner overrides the scenario's default strategy
+            // (city presets default to Topsis, two-phone to SmartSplit);
+            // the sim maps it onto its planner with a genome-sized
+            // NSGA-II budget when Algorithm 1 is asked for.
+            if parsed.provided("planner") {
+                sim_cfg.planner = match strategy {
+                    Strategy::SmartSplit => {
+                        let dim = if sim_cfg.edge.is_some() { 2 } else { 1 };
+                        sim::Planner::SmartSplit(Nsga2Params {
+                            seed: cfg.seed,
+                            ..Nsga2Params::for_small_genome(dim)
+                        })
+                    }
+                    Strategy::Topsis => sim::Planner::Topsis,
+                    s => {
+                        // Simulated devices must always get a plan;
+                        // the ε box can legitimately be infeasible and
+                        // would abort the run mid-flight.
+                        anyhow::ensure!(
+                            s != Strategy::EpsilonConstrained,
+                            "--planner EpsilonConstrained can find no feasible split under its \
+                             fixed ε ceilings and would abort the simulation; use a total \
+                             strategy here (see `optimize --planner epsilonconstrained` for the \
+                             analytical view)"
+                        );
+                        sim::Planner::Custom(s)
+                    }
+                };
             }
             if parsed.get_bool("no-churn") {
                 sim_cfg.churn = None;

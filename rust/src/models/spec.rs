@@ -259,6 +259,15 @@ impl ModelProfile {
         self.layers[l1 - 1].act_bytes
     }
 
+    /// Raw input tensor size in bytes — the "intermediate" a COC split
+    /// (`l1 = 0`) ships instead of an activation.
+    pub fn input_bytes(&self) -> u64 {
+        self.layers
+            .first()
+            .map(|l| l.in_shape.iter().product::<usize>() as u64 * DTYPE_BYTES)
+            .unwrap_or(0)
+    }
+
     /// FLOPs of layers `1..=l1`.
     pub fn client_flops(&self, l1: usize) -> u64 {
         self.layers[..l1].iter().map(|l| l.flops).sum()

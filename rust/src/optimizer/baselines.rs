@@ -53,8 +53,19 @@ impl Algorithm {
         }
     }
 
-    pub fn by_name(name: &str) -> Option<Algorithm> {
-        Self::ALL.iter().copied().find(|a| a.name().eq_ignore_ascii_case(name))
+    /// Case-insensitive lookup; the error lists every valid name.
+    /// (The full strategy space — these six plus Topsis and the
+    /// scalarisation methods — parses via
+    /// [`crate::planner::Strategy::by_name`].)
+    pub fn by_name(name: &str) -> Result<Algorithm, String> {
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|a| a.name().eq_ignore_ascii_case(name))
+            .ok_or_else(|| {
+                let names: Vec<&str> = Self::ALL.iter().map(|a| a.name()).collect();
+                format!("unknown algorithm {name:?} (valid: {})", names.join(", "))
+            })
     }
 }
 
@@ -132,7 +143,12 @@ pub fn smartsplit(pm: &PerfModel<'_>, params: &Nsga2Params) -> SmartSplitResult 
     }
 }
 
-/// Uniform interface for the comparison benches (Figs. 7–9).
+/// Uniform interface over the six §VI-C algorithms.
+///
+/// Pre-façade entry point, frozen as the parity reference for
+/// `tests/planner_parity.rs` — plan through
+/// [`crate::planner::Planner`] instead.
+#[deprecated(note = "plan through planner::Planner (one PlanRequest → PlanOutcome API)")]
 pub fn decide(
     algo: Algorithm,
     pm: &PerfModel<'_>,
@@ -229,9 +245,13 @@ mod tests {
     #[test]
     fn algorithm_names_roundtrip() {
         for a in Algorithm::ALL {
-            assert_eq!(Algorithm::by_name(a.name()), Some(a));
+            assert_eq!(Algorithm::by_name(a.name()), Ok(a));
         }
-        assert_eq!(Algorithm::by_name("smartsplit"), Some(Algorithm::SmartSplit));
-        assert_eq!(Algorithm::by_name("nope"), None);
+        assert_eq!(Algorithm::by_name("smartsplit"), Ok(Algorithm::SmartSplit));
+        assert_eq!(Algorithm::by_name("LBO"), Ok(Algorithm::Lbo));
+        let err = Algorithm::by_name("nope").unwrap_err();
+        for a in Algorithm::ALL {
+            assert!(err.contains(a.name()), "error {err:?} misses {}", a.name());
+        }
     }
 }

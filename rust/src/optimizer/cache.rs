@@ -33,13 +33,52 @@ use super::problem::SplitProblem;
 use super::topsis::topsis;
 
 /// Which decision procedure a cached plan came from (part of the key:
-/// the two planners disagree on purpose).
+/// distinct strategies disagree on purpose and must never share an
+/// entry). One variant per [`crate::planner::Strategy`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PlannerKind {
     /// Full Algorithm 1: NSGA-II Pareto set → band-weighted TOPSIS.
     SmartSplit,
     /// Exhaustive true Pareto front → band-weighted TOPSIS.
     Topsis,
+    /// §VI-C latency-based optimisation (argmin f1).
+    Lbo,
+    /// §VI-C energy-based optimisation (argmin f2).
+    Ebo,
+    /// §VI-C CNN-on-smartphone (`l1 = L`).
+    Cos,
+    /// §VI-C CNN-on-cloud (`l1 = 0`).
+    Coc,
+    /// §VI-C random split (seeded from the key like every solve).
+    Rs,
+    /// §V-A weighted-sum scalarisation.
+    WeightedSum,
+    /// §V-A weighted-metric scalarisation.
+    WeightedMetric,
+    /// §V-A ε-constrained optimisation.
+    EpsilonConstrained,
+}
+
+impl PlannerKind {
+    /// Stable one-byte tag for key hashing and seed derivation.
+    /// `Topsis = 0` and `SmartSplit = 1` are frozen — pre-façade keys
+    /// hashed exactly these bytes, and derived solve seeds (and
+    /// therefore decision streams) must not move; new kinds extend the
+    /// byte space.
+    pub fn tag(self) -> u8 {
+        match self {
+            PlannerKind::Topsis => 0,
+            PlannerKind::SmartSplit => 1,
+            PlannerKind::Lbo => 2,
+            PlannerKind::Ebo => 3,
+            PlannerKind::Cos => 4,
+            PlannerKind::Coc => 5,
+            PlannerKind::Rs => 6,
+            PlannerKind::WeightedSum => 7,
+            PlannerKind::WeightedMetric => 8,
+            PlannerKind::EpsilonConstrained => 9,
+        }
+    }
 }
 
 /// The edge-tier component of a [`PlanKey`]: which site the device is
@@ -148,7 +187,7 @@ impl PlanKey {
         h = fnv1a(h, self.profile.as_bytes());
         h = fnv1a(h, &[self.band.energy_weight() as u8]);
         h = fnv1a(h, &self.bw_mbps_bits.to_le_bytes());
-        h = fnv1a(h, &[matches!(self.kind, PlannerKind::SmartSplit) as u8]);
+        h = fnv1a(h, &[self.kind.tag()]);
         match &self.tier {
             None => h = fnv1a(h, &[0u8]),
             Some(t) => {
@@ -186,6 +225,17 @@ pub fn model_cache_id(model: &ModelProfile) -> u64 {
 /// `ratio` ≤ 1 is the identity (exact-bandwidth planning, the live-parity
 /// configuration). Quantisation runs *before* the solver in cached and
 /// uncached paths alike — it shapes decisions, the cache never does.
+///
+/// Edge-case contract (regression-pinned by the `quantize_degenerate_*`
+/// tests below): inputs outside the geometric domain are passed through
+/// unchanged rather than clamped to a bucket — `0`, negative values,
+/// `±inf` and `NaN` all return themselves. A dead link (`0 Mbps`) is
+/// therefore its own planner state and can never collide with the
+/// smallest positive bucket; sub-`1 Mbps` links land in negative-`k`
+/// buckets (the midpoint formula is exact there, no underflow for any
+/// realistic bandwidth); non-finite values key on their own bit pattern
+/// (keys are bit-compared, so `NaN` states are equal to themselves and
+/// distinct from everything else). The function never panics.
 pub fn quantize_bandwidth(bw_mbps: f64, ratio: f64) -> f64 {
     if ratio <= 1.0 || !bw_mbps.is_finite() || bw_mbps <= 0.0 {
         return bw_mbps;
@@ -261,6 +311,12 @@ pub fn smartsplit_banded(
 /// exhaustive planner, which is deterministic by construction). The
 /// returned plan is the paper's single split embedded in the tiered
 /// space (`l2 == l1`, empty torso).
+///
+/// Pre-façade entry point, frozen as the parity reference for
+/// `tests/planner_parity.rs`. Only the classic kinds are implemented
+/// (`SmartSplit`, `Topsis`); every other kind returns `None` here —
+/// plan through [`crate::planner::Planner`] instead.
+#[deprecated(note = "plan through planner::Planner (one PlanRequest → PlanOutcome API)")]
 pub fn solve_plan(
     kind: PlannerKind,
     pm: &PerfModel<'_>,
@@ -274,11 +330,16 @@ pub fn solve_plan(
             smartsplit_banded(pm, &Nsga2Params { seed, ..params.clone() }, band)
                 .map(SplitPlan::two_tier)
         }
+        _ => None,
     }
 }
 
 /// Tiered counterpart of [`solve_plan`]: the same decision procedures
 /// over the 2-D `(l1, l2)` genome of [`crate::edge::TieredSplitProblem`].
+///
+/// Pre-façade entry point, frozen as the parity reference for
+/// `tests/planner_parity.rs`; classic kinds only (see [`solve_plan`]).
+#[deprecated(note = "plan through planner::Planner (one PlanRequest → PlanOutcome API)")]
 pub fn solve_plan_tiered(
     kind: PlannerKind,
     tpm: &TieredPerfModel<'_>,
@@ -291,6 +352,7 @@ pub fn solve_plan_tiered(
         PlannerKind::SmartSplit => {
             tiered_smartsplit_banded(tpm, &Nsga2Params { seed, ..params.clone() }, band)
         }
+        _ => None,
     }
 }
 
@@ -429,6 +491,9 @@ impl SplitPlanCache {
 }
 
 #[cfg(test)]
+// The frozen pre-façade entry points are exercised on purpose: they are
+// the parity references.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::device::profiles;
@@ -458,6 +523,91 @@ mod tests {
         for bw in [0.7, 3.0, 10.0, 57.0, 200.0] {
             let q = quantize_bandwidth(bw, r);
             assert!(q / bw < r && bw / q < r, "bw={bw} q={q}");
+        }
+    }
+
+    #[test]
+    fn quantize_degenerate_inputs_pass_through_without_panicking() {
+        // 0 Mbps, negative, and non-finite inputs are identity (the
+        // documented clamping contract) for every ratio.
+        for ratio in [0.0, 1.0, 1.25, 2.0] {
+            assert_eq!(quantize_bandwidth(0.0, ratio), 0.0);
+            assert_eq!(quantize_bandwidth(-3.0, ratio), -3.0);
+            assert_eq!(quantize_bandwidth(f64::INFINITY, ratio), f64::INFINITY);
+            assert_eq!(
+                quantize_bandwidth(f64::NEG_INFINITY, ratio),
+                f64::NEG_INFINITY
+            );
+            assert!(quantize_bandwidth(f64::NAN, ratio).is_nan());
+        }
+    }
+
+    #[test]
+    fn quantize_degenerate_zero_never_collides_with_a_real_bucket() {
+        // A dead link must stay its own planner state: no positive
+        // bandwidth — however small — may bucket onto 0.
+        for bw in [1e-9, 1e-6, 1e-3, 0.1, 0.5] {
+            let q = quantize_bandwidth(bw, 1.25);
+            assert!(q > 0.0 && q.is_finite(), "bw={bw} quantised to {q}");
+            assert_ne!(key(q, BatteryBand::Comfort), key(0.0, BatteryBand::Comfort));
+        }
+    }
+
+    #[test]
+    fn quantize_degenerate_sub_unit_buckets_stay_within_one_ratio_step() {
+        // Sub-1 Mbps links land in negative-k buckets; the midpoint
+        // bound |q/bw| < ratio must hold there exactly as above 1 Mbps.
+        let r = 1.25;
+        for bw in [0.001, 0.04, 0.3, 0.9] {
+            let q = quantize_bandwidth(bw, r);
+            assert!(q / bw < r && bw / q < r, "bw={bw} q={q}");
+        }
+    }
+
+    #[test]
+    fn degenerate_bandwidth_keys_are_stable_and_distinct() {
+        // Non-finite states key on their own bit pattern: equal to
+        // themselves (the memo table can serve them), distinct from
+        // every finite state, and seed derivation never panics.
+        let nan_a = key(f64::NAN, BatteryBand::Comfort);
+        let nan_b = key(f64::NAN, BatteryBand::Comfort);
+        let inf = key(f64::INFINITY, BatteryBand::Comfort);
+        let zero = key(0.0, BatteryBand::Comfort);
+        assert_eq!(nan_a, nan_b);
+        assert_eq!(nan_a.derived_seed(7), nan_b.derived_seed(7));
+        assert_ne!(nan_a, inf);
+        assert_ne!(inf, zero);
+        let cache = SplitPlanCache::new();
+        cache.insert(nan_a.clone(), Some(SplitPlan::two_tier(3)));
+        assert_eq!(cache.get(&nan_b), Some(Some(SplitPlan::two_tier(3))));
+    }
+
+    #[test]
+    fn kind_tags_are_frozen_and_unique() {
+        // Topsis = 0 / SmartSplit = 1 are load-bearing: pre-façade keys
+        // hashed exactly these bytes and derived seeds must not move.
+        assert_eq!(PlannerKind::Topsis.tag(), 0);
+        assert_eq!(PlannerKind::SmartSplit.tag(), 1);
+        let kinds = [
+            PlannerKind::SmartSplit,
+            PlannerKind::Topsis,
+            PlannerKind::Lbo,
+            PlannerKind::Ebo,
+            PlannerKind::Cos,
+            PlannerKind::Coc,
+            PlannerKind::Rs,
+            PlannerKind::WeightedSum,
+            PlannerKind::WeightedMetric,
+            PlannerKind::EpsilonConstrained,
+        ];
+        let tags: HashSet<u8> = kinds.iter().map(|k| k.tag()).collect();
+        assert_eq!(tags.len(), kinds.len());
+        // Distinct kinds ⇒ distinct keys and seeds for the same state.
+        let mut keys = HashSet::new();
+        for k in kinds {
+            let mut key = key(10.0, BatteryBand::Comfort);
+            key.kind = k;
+            assert!(keys.insert(key.stable_hash()));
         }
     }
 

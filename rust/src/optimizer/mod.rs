@@ -1,6 +1,12 @@
 //! The SmartSplit optimisation algorithm (paper §V, Algorithm 1):
 //! NSGA-II over split indices → Pareto set → TOPSIS → one split decision;
 //! plus the §VI-C competing algorithms (LBO/EBO/COS/COC/RS).
+//!
+//! These are the planning *primitives*. The supported way to ask for a
+//! split decision is [`crate::planner`]'s `PlanRequest → PlanOutcome`
+//! façade; the deprecated dispatch entry points re-exported here
+//! (`decide`, `solve_plan`, `solve_plan_tiered`) are frozen parity
+//! references for `tests/planner_parity.rs`.
 
 pub mod baselines;
 pub mod cache;
@@ -10,12 +16,16 @@ pub mod scalarization;
 pub mod topsis;
 
 pub use baselines::{
-    coc, cos, decide, ebo, lbo, rs, smartsplit, Algorithm, SmartSplitResult, SplitDecision,
+    coc, cos, ebo, lbo, rs, smartsplit, Algorithm, SmartSplitResult, SplitDecision,
 };
+#[allow(deprecated)]
+pub use baselines::decide;
 pub use cache::{
-    member_perf_model, model_cache_id, quantize_bandwidth, smartsplit_banded, solve_plan,
-    solve_plan_tiered, PlanKey, PlannerKind, SplitPlanCache, TierKey,
+    member_perf_model, model_cache_id, quantize_bandwidth, smartsplit_banded, PlanKey,
+    PlannerKind, SplitPlanCache, TierKey,
 };
+#[allow(deprecated)]
+pub use cache::{solve_plan, solve_plan_tiered};
 pub use nsga2::{optimize, Nsga2Params, Nsga2Solver, ParetoSet, Problem};
 pub use problem::SplitProblem;
 pub use scalarization::{

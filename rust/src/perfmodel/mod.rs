@@ -188,12 +188,7 @@ impl<'a> PerfModel<'a> {
     pub fn latency(&self, l1: usize) -> LatencyBreakdown {
         if l1 == 0 {
             // COC: upload the input image instead of an activation.
-            let input_bytes = self
-                .profile
-                .layers
-                .first()
-                .map(|l| l.in_shape.iter().product::<usize>() as u64 * 4)
-                .unwrap_or(0);
+            let input_bytes = self.profile.input_bytes();
             return LatencyBreakdown {
                 client_s: 0.0,
                 upload_s: input_bytes as f64 * 8.0 / (self.net.bandwidth_mbps * 1e6),

@@ -1,0 +1,458 @@
+//! The planning façade — **the one supported way to ask "where do I
+//! split?"**.
+//!
+//! Three PRs grew four parallel planning paths (the paper path, the
+//! cached fleet path, the tiered path, and the baseline free
+//! functions), each with its own signature, and every consumer wired
+//! its own combination. This module collapses them: a [`PlanRequest`]
+//! (model, device/battery state, link, optional edge-tier context,
+//! [`Strategy`]) goes in, a [`PlanOutcome`] (universal
+//! [`SplitPlan`] `{l1, l2}`, predicted `[latency, energy, memory]`,
+//! Pareto-front summary, provenance) comes out, and every backend —
+//! NSGA-II+TOPSIS, the exhaustive-front planner, the §VI-C baselines,
+//! the §V-A scalarisation methods — plugs in behind
+//! [`Planner::plan`]. Two-tier planning is just the degenerate request
+//! with no tier context.
+//!
+//! The [`Planner`] owns the quantisation → key → seed → cache pipeline
+//! that `optimizer::cache` introduced: requests are bucketed per the
+//! configured bandwidth ratio, the solve seed is derived from the
+//! quantised [`PlanKey`], and decisions are memoised in a
+//! [`SplitPlanCache`] — so equal states share one solve on any thread,
+//! in any order, and turning the cache off changes wall-clock only.
+//! `tests/planner_parity.rs` pins the migration invariant: the façade
+//! reproduces the pre-redesign entry points' decision streams
+//! byte-for-byte.
+//!
+//! All in-repo consumers (`sim`, `coordinator::fleet`, the live
+//! `coordinator`, `figures`, the CLI subcommands, the planner benches)
+//! plan exclusively through this module; the old free functions are
+//! deprecated shims kept for the parity tests.
+
+mod outcome;
+mod request;
+mod solve;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::edge::SplitPlan;
+use crate::metrics::PlannerStats;
+use crate::optimizer::{model_cache_id, quantize_bandwidth, Nsga2Params, PlanKey, SplitPlanCache, TierKey};
+use crate::util::pool::ThreadPool;
+use crate::util::rng::SplitMix64;
+
+pub use outcome::{CacheOutcome, PlanOutcome, Provenance};
+pub use request::{PlanRequest, Strategy, TierContext};
+
+/// How the solve seed is derived for a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeedMode {
+    /// Seed = `PlanKey::derived_seed(base)` — equal quantised states run
+    /// the identical solve on any thread, in any order. The fleet/sim
+    /// configuration (required for caching to be decision-transparent).
+    PerKey,
+    /// Seed = the configured base seed, used as-is — what the paper
+    /// exhibits ran (`smartsplit(&pm, &params)` with `params.seed`).
+    /// Pair with a disabled cache: equal keys would otherwise replay
+    /// one seed's decision for every state.
+    Fixed,
+}
+
+/// Planner configuration: solver budget, seed policy, bandwidth
+/// bucketing, and whether decisions are memoised.
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    /// NSGA-II budget for [`Strategy::SmartSplit`] solves (every other
+    /// strategy is parameter-free). The `seed` field inside is
+    /// overridden per solve according to [`PlannerConfig::seed_mode`].
+    pub nsga2: Nsga2Params,
+    /// Base seed the per-request solve seeds are derived from.
+    pub base_seed: u64,
+    /// Geometric bandwidth bucket ratio for plan keys; ≤ 1.0 plans at
+    /// exact bandwidth (see [`quantize_bandwidth`]). Quantisation runs
+    /// before the solver in cached and uncached paths alike — it shapes
+    /// decisions, the cache never does.
+    pub bw_bucket_ratio: f64,
+    /// Memoise decisions in the planner's [`SplitPlanCache`].
+    pub cache: bool,
+    pub seed_mode: SeedMode,
+}
+
+impl PlannerConfig {
+    /// Fleet/sim configuration: key-derived seeds, cache on, exact
+    /// bandwidth (callers that bucket pass their ratio explicitly).
+    pub fn fleet(nsga2: Nsga2Params, base_seed: u64) -> PlannerConfig {
+        PlannerConfig {
+            nsga2,
+            base_seed,
+            bw_bucket_ratio: 1.0,
+            cache: true,
+            seed_mode: SeedMode::PerKey,
+        }
+    }
+
+    /// Paper-exhibit configuration: the configured seed used as-is,
+    /// no memoisation, exact bandwidth — byte-compatible with the
+    /// pre-façade `smartsplit`/`decide` calls the figures ran.
+    pub fn paper(nsga2: Nsga2Params) -> PlannerConfig {
+        PlannerConfig {
+            base_seed: nsga2.seed,
+            nsga2,
+            bw_bucket_ratio: 1.0,
+            cache: false,
+            seed_mode: SeedMode::Fixed,
+        }
+    }
+
+    /// This config with the given bandwidth bucket ratio.
+    pub fn with_bucket_ratio(mut self, ratio: f64) -> PlannerConfig {
+        self.bw_bucket_ratio = ratio;
+        self
+    }
+
+    /// This config with the cache toggled.
+    pub fn with_cache(mut self, cache: bool) -> PlannerConfig {
+        self.cache = cache;
+        self
+    }
+}
+
+/// The planning façade: one [`Planner::plan`] call for every splitting
+/// decision in the repo. Cheap to construct; fleet paths hold one for
+/// the run so the cache accumulates.
+pub struct Planner {
+    cfg: PlannerConfig,
+    cache: SplitPlanCache,
+}
+
+impl Planner {
+    pub fn new(cfg: PlannerConfig) -> Planner {
+        Planner { cfg, cache: SplitPlanCache::new() }
+    }
+
+    pub fn config(&self) -> &PlannerConfig {
+        &self.cfg
+    }
+
+    /// Split-planner accounting: solves vs cache traffic so far.
+    pub fn stats(&self) -> PlannerStats {
+        self.cache.stats()
+    }
+
+    /// Distinct planner states cached so far.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// The quantised planner state of a request: its cache key and —
+    /// for tiered requests — the site parameters with their bucketed
+    /// backhaul bandwidth (exactly what the key's [`TierKey`] records).
+    fn state(&self, req: &PlanRequest) -> (PlanKey, Option<(crate::edge::EdgeSite, f64)>) {
+        let bw_q = quantize_bandwidth(req.bandwidth_mbps, self.cfg.bw_bucket_ratio);
+        let mut key = PlanKey::new(
+            model_cache_id(&req.model),
+            req.profile,
+            req.band,
+            bw_q,
+            req.strategy.kind(),
+        );
+        let mut site = None;
+        if let Some(t) = &req.tier {
+            let backhaul_q =
+                quantize_bandwidth(t.edge.backhaul.bandwidth_mbps, self.cfg.bw_bucket_ratio);
+            key = key.with_tier(TierKey::new(t.site, &t.edge, backhaul_q));
+            site = Some((t.edge, backhaul_q));
+        }
+        (key, site)
+    }
+
+    /// The cache key a request quantises to (exposed for tests and
+    /// debugging; [`Planner::plan`] computes it internally).
+    pub fn key(&self, req: &PlanRequest) -> PlanKey {
+        self.state(req).0
+    }
+
+    /// The solve seed for a key: key-derived or fixed per the config,
+    /// then mixed with the request's independent-run index.
+    fn seed_for(&self, key: &PlanKey, run: u64) -> u64 {
+        let base = match self.cfg.seed_mode {
+            SeedMode::PerKey => key.derived_seed(self.cfg.base_seed),
+            SeedMode::Fixed => self.cfg.base_seed,
+        };
+        if run == 0 {
+            base
+        } else {
+            SplitMix64::new(base ^ run).next_u64()
+        }
+    }
+
+    /// One split decision. Equal requests give equal decisions whether
+    /// served from cache, solved inline, or presolved on a pool worker
+    /// — the seed comes from the quantised key.
+    pub fn plan(&self, req: &PlanRequest) -> PlanOutcome {
+        self.plan_with(req, &mut HashMap::new())
+    }
+
+    /// Decision-only fast path: the plan of [`Planner::plan`] without
+    /// assembling a [`PlanOutcome`]. A cache hit costs one map lookup —
+    /// no [`crate::perfmodel::PerfModel`] build, no objective
+    /// evaluation — which is what the 10k-device sweep hot paths (sim
+    /// re-optimisation, fleet start) read. Cache accounting is
+    /// identical to [`Planner::plan_with`].
+    pub fn split(&self, req: &PlanRequest) -> Option<SplitPlan> {
+        self.split_with(req, &mut HashMap::new())
+    }
+
+    /// As [`Planner::split`], serving cache misses from a
+    /// [`Planner::presolve_batch`] result first (the sweep apply
+    /// phase).
+    pub fn split_with(
+        &self,
+        req: &PlanRequest,
+        presolved: &mut HashMap<PlanKey, Option<SplitPlan>>,
+    ) -> Option<SplitPlan> {
+        let (key, site) = self.state(req);
+        let bw_q = key.bw_mbps();
+        let seed = self.seed_for(&key, req.run);
+        let cache_enabled = self.cfg.cache && req.run == 0;
+        let pre = if req.run == 0 { presolved.remove(&key) } else { None };
+        self.cache.plan(cache_enabled, &key, || {
+            pre.unwrap_or_else(|| {
+                solve::solve_quantised(
+                    req.strategy,
+                    req.profile,
+                    &req.model,
+                    bw_q,
+                    req.band,
+                    site,
+                    &self.cfg.nsga2,
+                    seed,
+                )
+                .plan
+            })
+        })
+    }
+
+    /// As [`Planner::plan`], but a cache miss is served from
+    /// `presolved` when a [`Planner::presolve_batch`] fan-out already
+    /// solved this key (falling back to an inline solve). Counting runs
+    /// through the cache's counted path either way, so a parallel
+    /// pass's [`PlannerStats`] are identical to a sequential one.
+    ///
+    /// Outcome assembly re-evaluates the §III objectives even on cache
+    /// hits (cheap table reads, but not free at 10k-device sweep
+    /// scale); hot paths that only need the decision should use
+    /// [`Planner::split_with`].
+    pub fn plan_with(
+        &self,
+        req: &PlanRequest,
+        presolved: &mut HashMap<PlanKey, Option<SplitPlan>>,
+    ) -> PlanOutcome {
+        let (key, site) = self.state(req);
+        let bw_q = key.bw_mbps();
+        let seed = self.seed_for(&key, req.run);
+        // Independent-run requests are deliberately distinct solves —
+        // memoising them (or serving them from a presolved run-0 batch,
+        // whose keys don't encode the run index) would collapse every
+        // run onto run 0.
+        let cache_enabled = self.cfg.cache && req.run == 0;
+        let pre = if req.run == 0 { presolved.remove(&key) } else { None };
+        let mut solved = false;
+        let mut solved_inline: Option<solve::Solved> = None;
+        let plan = self.cache.plan(cache_enabled, &key, || {
+            solved = true;
+            match pre {
+                Some(v) => v,
+                None => {
+                    let s = solve::solve_quantised(
+                        req.strategy,
+                        req.profile,
+                        &req.model,
+                        bw_q,
+                        req.band,
+                        site,
+                        &self.cfg.nsga2,
+                        seed,
+                    );
+                    let plan = s.plan;
+                    solved_inline = Some(s);
+                    plan
+                }
+            }
+        });
+        let cache = if !cache_enabled {
+            CacheOutcome::Bypassed
+        } else if solved {
+            CacheOutcome::Miss
+        } else {
+            CacheOutcome::Hit
+        };
+        let objectives =
+            plan.map(|p| solve::objectives_of(req.profile, &req.model, bw_q, site, p));
+        let (pareto, evaluations) = match solved_inline {
+            Some(s) => (s.front, s.evaluations),
+            None => (None, 0),
+        };
+        PlanOutcome {
+            plan,
+            objectives,
+            pareto,
+            provenance: Provenance {
+                strategy: req.strategy,
+                kind: key.kind,
+                cache,
+                derived_seed: seed,
+                quantized_bw_mbps: bw_q,
+                evaluations,
+                key,
+            },
+        }
+    }
+
+    /// Fan the distinct, not-yet-cached states behind `requests` out
+    /// over `pool` and return their solved plans, keyed for
+    /// [`Planner::plan_with`]'s apply phase. Neither the cache contents
+    /// nor the counters are touched here, so accounting stays
+    /// byte-identical to a sequential pass — parallelism is a pure
+    /// wall-clock toggle. No-op when the cache is disabled (every
+    /// request then solves inline anyway); independent-run requests are
+    /// skipped (they bypass the cache by design).
+    pub fn presolve_batch(
+        &self,
+        pool: &ThreadPool,
+        requests: &[PlanRequest],
+    ) -> HashMap<PlanKey, Option<SplitPlan>> {
+        if !self.cfg.cache {
+            return HashMap::new();
+        }
+        let mut jobs = Vec::with_capacity(requests.len());
+        for req in requests {
+            if req.run != 0 {
+                continue;
+            }
+            let (key, site) = self.state(req);
+            let bw_q = key.bw_mbps();
+            let seed = self.seed_for(&key, 0);
+            let strategy = req.strategy;
+            let profile = req.profile;
+            let band = req.band;
+            let model = Arc::clone(&req.model);
+            let params = self.cfg.nsga2.clone();
+            jobs.push((key, move || {
+                solve::solve_quantised(strategy, profile, &model, bw_q, band, site, &params, seed)
+                    .plan
+            }));
+        }
+        self.cache.presolve_batch(pool, jobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::battery::BatteryBand;
+    use crate::device::profiles;
+    use crate::models::zoo;
+
+    fn req(strategy: Strategy, bw: f64) -> PlanRequest {
+        PlanRequest::two_tier(
+            Arc::new(zoo::alexnet().analyze(1)),
+            profiles::samsung_j6(),
+            BatteryBand::Comfort,
+            bw,
+            strategy,
+        )
+    }
+
+    #[test]
+    fn cache_provenance_hit_miss_bypass() {
+        let planner = Planner::new(PlannerConfig::fleet(Nsga2Params::for_tiny_genome(), 7));
+        let r = req(Strategy::Topsis, 10.0);
+        let first = planner.plan(&r);
+        assert_eq!(first.provenance.cache, CacheOutcome::Miss);
+        let second = planner.plan(&r);
+        assert_eq!(second.provenance.cache, CacheOutcome::Hit);
+        assert_eq!(first.plan, second.plan);
+        // Hits re-evaluate objectives but not fronts.
+        assert!(first.pareto.is_some());
+        assert!(second.pareto.is_none());
+        assert_eq!(first.objectives, second.objectives);
+
+        let uncached =
+            Planner::new(PlannerConfig::fleet(Nsga2Params::for_tiny_genome(), 7).with_cache(false));
+        assert_eq!(uncached.plan(&r).provenance.cache, CacheOutcome::Bypassed);
+        assert_eq!(uncached.plan(&r).plan, first.plan);
+    }
+
+    #[test]
+    fn independent_runs_bypass_the_cache_and_vary_rs() {
+        let planner = Planner::new(PlannerConfig::fleet(Nsga2Params::for_tiny_genome(), 7));
+        let base = req(Strategy::Rs, 10.0);
+        let canonical = planner.plan(&base);
+        assert_eq!(canonical.provenance.cache, CacheOutcome::Miss);
+        let mut distinct = std::collections::HashSet::new();
+        for run in 1..=20u64 {
+            let out = planner.plan(&base.clone().with_run(run));
+            assert_eq!(out.provenance.cache, CacheOutcome::Bypassed);
+            distinct.insert(out.plan.unwrap().l1);
+        }
+        assert!(distinct.len() > 1, "independent RS runs never varied");
+        // Run 0 stays the canonical cached decision.
+        assert_eq!(planner.plan(&base).plan, canonical.plan);
+    }
+
+    #[test]
+    fn quantisation_collapses_nearby_links_onto_one_state() {
+        let planner = Planner::new(
+            PlannerConfig::fleet(Nsga2Params::for_tiny_genome(), 7).with_bucket_ratio(1.25),
+        );
+        let a = planner.plan(&req(Strategy::Topsis, 10.0));
+        let b = planner.plan(&req(Strategy::Topsis, 10.5));
+        assert_eq!(a.provenance.key, b.provenance.key);
+        assert_eq!(b.provenance.cache, CacheOutcome::Hit);
+        assert_eq!(
+            a.provenance.quantized_bw_mbps,
+            b.provenance.quantized_bw_mbps
+        );
+    }
+
+    #[test]
+    fn strategies_never_share_cache_entries() {
+        let planner = Planner::new(PlannerConfig::fleet(Nsga2Params::for_tiny_genome(), 7));
+        let a = planner.plan(&req(Strategy::Lbo, 10.0));
+        let b = planner.plan(&req(Strategy::Ebo, 10.0));
+        assert_eq!(a.provenance.cache, CacheOutcome::Miss);
+        assert_eq!(b.provenance.cache, CacheOutcome::Miss);
+        assert_ne!(a.provenance.key, b.provenance.key);
+        assert_eq!(planner.cache_len(), 2);
+    }
+
+    #[test]
+    fn split_fast_path_matches_plan_and_counts_identically() {
+        // The decision-only fast path must be indistinguishable from
+        // the full outcome path in decisions, cache contents, and
+        // counters — it only skips outcome assembly.
+        let full = Planner::new(PlannerConfig::fleet(Nsga2Params::for_tiny_genome(), 7));
+        let fast = Planner::new(PlannerConfig::fleet(Nsga2Params::for_tiny_genome(), 7));
+        for bw in [5.0, 10.0, 30.0] {
+            for strategy in [Strategy::Topsis, Strategy::Lbo, Strategy::Rs] {
+                let r = req(strategy, bw);
+                assert_eq!(full.plan(&r).plan, fast.split(&r));
+                assert_eq!(full.plan(&r).plan, fast.split(&r)); // hit path too
+            }
+        }
+        assert_eq!(full.stats(), fast.stats());
+        assert_eq!(full.cache_len(), fast.cache_len());
+    }
+
+    #[test]
+    fn objectives_match_the_perf_model() {
+        let planner = Planner::new(PlannerConfig::fleet(Nsga2Params::for_tiny_genome(), 7));
+        let r = req(Strategy::Lbo, 10.0);
+        let out = planner.plan(&r);
+        let l1 = out.plan.unwrap().l1;
+        let pm = crate::optimizer::member_perf_model(r.profile, &r.model, 10.0);
+        assert_eq!(out.objectives.unwrap(), pm.objectives(l1));
+    }
+}

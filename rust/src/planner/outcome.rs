@@ -1,0 +1,75 @@
+//! The answer side of the planning façade: [`PlanOutcome`] — the
+//! universal decision value plus everything a consumer might want to
+//! know about how it was reached.
+
+use crate::edge::SplitPlan;
+use crate::optimizer::{PlanKey, PlannerKind};
+
+use super::request::Strategy;
+
+/// How the plan was served relative to the planner's memo table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Served from the split-plan cache (no solve ran).
+    Hit,
+    /// Solved (inline or presolved) and cached for the next request.
+    Miss,
+    /// Cache disabled for this request (planner config, or an
+    /// independent-run request) — every call solves.
+    Bypassed,
+}
+
+/// Where a decision came from: the strategy and cache-key kind it was
+/// planned under, whether the cache served it, and the derived solve
+/// seed — enough to reproduce the exact solve offline.
+#[derive(Clone, Debug)]
+pub struct Provenance {
+    pub strategy: Strategy,
+    /// Cache-key tag ([`PlanKey::kind`]) the decision was stored under.
+    pub kind: PlannerKind,
+    pub cache: CacheOutcome,
+    /// The full quantised planner state this decision keys on.
+    pub key: PlanKey,
+    /// The seed the solve ran with (key-derived in fleet configs, the
+    /// configured seed in paper-exhibit configs; mixed per
+    /// [`crate::planner::PlanRequest::run`]).
+    pub derived_seed: u64,
+    /// Bandwidth actually fed to the §III models, after bucketing.
+    pub quantized_bw_mbps: f64,
+    /// NSGA-II objective evaluations, when this call ran the solver
+    /// inline (0 for cache hits, presolved misses, and non-GA
+    /// strategies).
+    pub evaluations: u64,
+}
+
+/// The universal planning answer: one `(l1, l2)` plan (two-tier plans
+/// have `l2 == l1`), its predicted objectives, the Pareto-front
+/// summary when this call computed one, and full provenance.
+#[derive(Clone, Debug)]
+pub struct PlanOutcome {
+    /// The chosen split; `None` when the strategy found no feasible
+    /// split (e.g. an infeasible ε box, or a hopeless device state).
+    pub plan: Option<SplitPlan>,
+    /// Predicted §III objectives `[f1 latency s, f2 energy J, f3
+    /// memory bytes]` of `plan`, evaluated at the quantised bandwidth
+    /// (`None` iff `plan` is `None`).
+    pub objectives: Option<[f64; 3]>,
+    /// Pareto-front summary (plan, raw objectives). `Some` only when
+    /// this call ran a front-producing solve inline — SmartSplit /
+    /// Topsis on a cache miss or bypass. Cache hits and point
+    /// strategies return `None`; the provenance says which happened.
+    pub pareto: Option<Vec<(SplitPlan, [f64; 3])>>,
+    pub provenance: Provenance,
+}
+
+impl PlanOutcome {
+    /// The chosen split (shorthand for `.plan`).
+    pub fn split(&self) -> Option<SplitPlan> {
+        self.plan
+    }
+
+    /// The device-side depth of the chosen split, if any.
+    pub fn l1(&self) -> Option<usize> {
+        self.plan.map(|p| p.l1)
+    }
+}

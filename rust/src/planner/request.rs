@@ -1,0 +1,252 @@
+//! The request side of the planning façade: [`Strategy`] — every
+//! decision procedure the repo knows behind one name — and
+//! [`PlanRequest`], the single shape every consumer asks in.
+
+use std::sync::Arc;
+
+use crate::coordinator::battery::BatteryBand;
+use crate::device::ComputeProfile;
+use crate::edge::EdgeSite;
+use crate::models::ModelProfile;
+use crate::optimizer::{Algorithm, PlannerKind};
+
+/// Every splitting decision procedure in the repo, behind one name:
+/// the paper's Algorithm 1, the exhaustive-front variant the fleet
+/// runs at city scale, the five §VI-C baselines, and the §V-A
+/// scalarisation methods the paper argues NSGA-II against.
+///
+/// `Strategy` is deliberately a *parameter-free* enum (`Copy + Eq +
+/// Hash`): each variant names a fully specified procedure, so a
+/// strategy can sit inside a [`crate::optimizer::PlanKey`] and two
+/// requests that quantise to the same key are guaranteed to mean the
+/// same solve. The scalarisation variants therefore fix their knobs to
+/// documented defaults ([`Strategy::SCALAR_WEIGHTS`],
+/// [`Strategy::METRIC_ORDER`], [`Strategy::EPSILON_CEILINGS`]); callers
+/// who need custom weights use [`crate::optimizer::scalarization`]
+/// directly — those are evaluation primitives, not fleet strategies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Full Algorithm 1: NSGA-II Pareto set → battery-band-weighted
+    /// TOPSIS. 2-D `(l1, l2)` genome under an edge tier.
+    SmartSplit,
+    /// Exhaustive true Pareto front → battery-band-weighted TOPSIS.
+    /// O(L) per decision (O(L²) tiered) — the city-scale default.
+    Topsis,
+    /// Latency-based optimisation: argmin f1 (§VI-C).
+    Lbo,
+    /// Energy-based optimisation: argmin f2 (§VI-C).
+    Ebo,
+    /// CNN on smartphone: every layer on the device (§VI-C).
+    Cos,
+    /// CNN on cloud: `l1 = 0`, the raw input is uploaded (§VI-C).
+    Coc,
+    /// Random split, uniform over `1..=L-1`, seeded like every other
+    /// strategy (same request ⇒ same "random" split; vary
+    /// [`PlanRequest::run`] to draw independent samples).
+    Rs,
+    /// Weighted-sum scalarisation (§V-A, [50]) at
+    /// [`Strategy::SCALAR_WEIGHTS`].
+    WeightedSum,
+    /// Weighted-metric / compromise programming (§V-A, [51]) at
+    /// [`Strategy::SCALAR_WEIGHTS`], order [`Strategy::METRIC_ORDER`].
+    WeightedMetric,
+    /// ε-constrained optimisation (§V-A, [49]): minimise latency
+    /// subject to [`Strategy::EPSILON_CEILINGS`] on normalised energy
+    /// and memory. The ε box can be infeasible — the practical weakness
+    /// the paper alludes to — in which case the outcome carries no plan.
+    EpsilonConstrained,
+}
+
+impl Strategy {
+    /// Normalised-objective weights used by [`Strategy::WeightedSum`]
+    /// and [`Strategy::WeightedMetric`] (equal emphasis, the paper's
+    /// Eq. 15 stance).
+    pub const SCALAR_WEIGHTS: [f64; 3] = [1.0, 1.0, 1.0];
+    /// Metric order `p` of [`Strategy::WeightedMetric`] (Euclidean).
+    pub const METRIC_ORDER: f64 = 2.0;
+    /// Primary objective of [`Strategy::EpsilonConstrained`] (f1).
+    pub const EPSILON_PRIMARY: usize = 0;
+    /// Normalised ceilings of [`Strategy::EpsilonConstrained`]:
+    /// latency free, energy and memory each capped at 0.75.
+    pub const EPSILON_CEILINGS: [f64; 3] = [1.0, 0.75, 0.75];
+
+    pub const ALL: [Strategy; 10] = [
+        Strategy::SmartSplit,
+        Strategy::Topsis,
+        Strategy::Lbo,
+        Strategy::Ebo,
+        Strategy::Cos,
+        Strategy::Coc,
+        Strategy::Rs,
+        Strategy::WeightedSum,
+        Strategy::WeightedMetric,
+        Strategy::EpsilonConstrained,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::SmartSplit => "SmartSplit",
+            Strategy::Topsis => "Topsis",
+            Strategy::Lbo => "LBO",
+            Strategy::Ebo => "EBO",
+            Strategy::Cos => "COS",
+            Strategy::Coc => "COC",
+            Strategy::Rs => "RS",
+            Strategy::WeightedSum => "WeightedSum",
+            Strategy::WeightedMetric => "WeightedMetric",
+            Strategy::EpsilonConstrained => "EpsilonConstrained",
+        }
+    }
+
+    /// Case-insensitive lookup; the error lists every valid name (the
+    /// single `--planner` parse in [`crate::util::cli`] surfaces it
+    /// verbatim).
+    pub fn by_name(name: &str) -> Result<Strategy, String> {
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|s| s.name().eq_ignore_ascii_case(name))
+            .ok_or_else(|| {
+                let names: Vec<&str> = Self::ALL.iter().map(|s| s.name()).collect();
+                format!("unknown strategy {name:?} (valid: {})", names.join(", "))
+            })
+    }
+
+    /// The cache-key tag this strategy plans under (part of
+    /// [`crate::optimizer::PlanKey`]; distinct strategies never share a
+    /// cached plan).
+    pub fn kind(&self) -> PlannerKind {
+        match self {
+            Strategy::SmartSplit => PlannerKind::SmartSplit,
+            Strategy::Topsis => PlannerKind::Topsis,
+            Strategy::Lbo => PlannerKind::Lbo,
+            Strategy::Ebo => PlannerKind::Ebo,
+            Strategy::Cos => PlannerKind::Cos,
+            Strategy::Coc => PlannerKind::Coc,
+            Strategy::Rs => PlannerKind::Rs,
+            Strategy::WeightedSum => PlannerKind::WeightedSum,
+            Strategy::WeightedMetric => PlannerKind::WeightedMetric,
+            Strategy::EpsilonConstrained => PlannerKind::EpsilonConstrained,
+        }
+    }
+}
+
+impl From<Algorithm> for Strategy {
+    /// The §VI-C comparison set embeds in the strategy space.
+    fn from(a: Algorithm) -> Strategy {
+        match a {
+            Algorithm::SmartSplit => Strategy::SmartSplit,
+            Algorithm::Lbo => Strategy::Lbo,
+            Algorithm::Ebo => Strategy::Ebo,
+            Algorithm::Cos => Strategy::Cos,
+            Algorithm::Coc => Strategy::Coc,
+            Algorithm::Rs => Strategy::Rs,
+        }
+    }
+}
+
+/// The edge-tier context of a request: which site the device is
+/// assigned to and everything about that site a tiered solve depends
+/// on. `None` in the request plans the paper's two-tier split — the
+/// degenerate case of the same request shape.
+#[derive(Clone, Copy, Debug)]
+pub struct TierContext {
+    /// Index of the assigned site in the run's
+    /// [`crate::edge::EdgeTopology`] (part of the planner state: sites
+    /// are independently reconfigurable).
+    pub site: usize,
+    /// The site itself: torso pool size, server profile, backhaul.
+    pub edge: EdgeSite,
+}
+
+/// Everything a split decision depends on — the one request shape
+/// every consumer (sim, fleet, coordinator, figures, CLI, benches)
+/// asks in.
+///
+/// The [`crate::planner::Planner`] quantises this to a
+/// [`crate::optimizer::PlanKey`] (bandwidth bucketing per its config),
+/// derives the solve seed from that key, and serves the decision
+/// through its plan cache — so two requests that quantise identically
+/// share one solve, on any thread, in any order.
+#[derive(Clone, Debug)]
+pub struct PlanRequest {
+    /// The model being split (shared with pool workers during batch
+    /// presolves, hence `Arc`).
+    pub model: Arc<ModelProfile>,
+    /// Device compute profile (must carry a radio).
+    pub profile: &'static ComputeProfile,
+    /// Battery band the decision should weight energy for.
+    pub band: BatteryBand,
+    /// Exact device↔cloud link bandwidth in Mbps (the planner buckets
+    /// it per its configured ratio before solving).
+    pub bandwidth_mbps: f64,
+    /// Edge-tier context; `None` is the paper's two-tier split.
+    pub tier: Option<TierContext>,
+    pub strategy: Strategy,
+    /// Independent-run index: `0` (the default) is the canonical
+    /// cached decision; any other value derives an independent solve
+    /// seed and bypasses the cache — how the paper exhibits average
+    /// [`Strategy::Rs`] over N runs.
+    pub run: u64,
+}
+
+impl PlanRequest {
+    /// Canonical two-tier request (run 0, no edge context).
+    pub fn two_tier(
+        model: Arc<ModelProfile>,
+        profile: &'static ComputeProfile,
+        band: BatteryBand,
+        bandwidth_mbps: f64,
+        strategy: Strategy,
+    ) -> PlanRequest {
+        PlanRequest { model, profile, band, bandwidth_mbps, tier: None, strategy, run: 0 }
+    }
+
+    /// This request planned against an edge site.
+    pub fn with_tier(mut self, site: usize, edge: EdgeSite) -> PlanRequest {
+        self.tier = Some(TierContext { site, edge });
+        self
+    }
+
+    /// This request as independent run `run` (see [`PlanRequest::run`]).
+    pub fn with_run(mut self, run: u64) -> PlanRequest {
+        self.run = run;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip_case_insensitively() {
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::by_name(s.name()), Ok(s));
+            assert_eq!(Strategy::by_name(&s.name().to_lowercase()), Ok(s));
+            assert_eq!(Strategy::by_name(&s.name().to_uppercase()), Ok(s));
+        }
+    }
+
+    #[test]
+    fn unknown_name_lists_every_strategy() {
+        let err = Strategy::by_name("nope").unwrap_err();
+        for s in Strategy::ALL {
+            assert!(err.contains(s.name()), "error {err:?} misses {}", s.name());
+        }
+    }
+
+    #[test]
+    fn kinds_are_distinct_per_strategy() {
+        let kinds: std::collections::HashSet<PlannerKind> =
+            Strategy::ALL.iter().map(|s| s.kind()).collect();
+        assert_eq!(kinds.len(), Strategy::ALL.len());
+    }
+
+    #[test]
+    fn algorithm_embedding_preserves_names() {
+        for a in Algorithm::ALL {
+            assert_eq!(Strategy::from(a).name(), a.name());
+        }
+    }
+}

@@ -1,0 +1,331 @@
+//! The one solve code path behind [`crate::planner::Planner`]: every
+//! strategy, flat or tiered, funnels through [`solve_quantised`] — the
+//! two-tier request is just the degenerate case with no site context.
+//!
+//! Migration invariant (pinned by `tests/planner_parity.rs`): for the
+//! pre-façade strategies the decisions here are byte-identical to the
+//! frozen entry points they replace — `SmartSplit` reproduces
+//! [`crate::optimizer::smartsplit_banded`] /
+//! [`crate::edge::tiered_smartsplit_banded`], `Topsis` reproduces
+//! [`crate::coordinator::battery::battery_aware_split_banded`] /
+//! [`crate::edge::tiered_split_banded`], and the §VI-C / §V-A
+//! strategies reproduce their [`crate::optimizer`] free functions on
+//! the flat domain. The same selection rules run over the tiered
+//! `(l1, l2)` triangle, which the old free functions never supported.
+
+use crate::coordinator::battery::BatteryBand;
+use crate::device::ComputeProfile;
+use crate::edge::{BackhaulLink, EdgeSite, SplitPlan, TieredPerfModel, TieredSplitProblem};
+use crate::models::ModelProfile;
+use crate::optimizer::cache::with_fleet_solver;
+use crate::optimizer::{
+    exhaustive_pareto_front, member_perf_model, rs, topsis, Nsga2Params, SplitProblem,
+};
+use crate::perfmodel::PerfModel;
+use crate::util::rng::Xoshiro256;
+
+use super::request::Strategy;
+
+/// Result of one solve: the plan, the Pareto front when the strategy
+/// computed one, and the NSGA-II evaluation count when the GA ran.
+pub(crate) struct Solved {
+    pub plan: Option<SplitPlan>,
+    pub front: Option<Vec<(SplitPlan, [f64; 3])>>,
+    pub evaluations: u64,
+}
+
+impl Solved {
+    fn none() -> Solved {
+        Solved { plan: None, front: None, evaluations: 0 }
+    }
+
+    fn point(plan: SplitPlan) -> Solved {
+        Solved { plan: Some(plan), front: None, evaluations: 0 }
+    }
+}
+
+/// Run `strategy` for one quantised planner state. A pure function of
+/// its arguments (the seed is key-derived by the caller), shared by the
+/// inline and pool-worker paths so scheduling cannot change any
+/// decision; quantisation happened before this call, in cached and
+/// uncached paths alike. `site` carries the assigned edge site with its
+/// already-bucketed backhaul bandwidth; `None` plans the two-tier
+/// split.
+pub(crate) fn solve_quantised(
+    strategy: Strategy,
+    profile: &'static ComputeProfile,
+    model: &ModelProfile,
+    bw_q: f64,
+    band: BatteryBand,
+    site: Option<(EdgeSite, f64)>,
+    params: &Nsga2Params,
+    seed: u64,
+) -> Solved {
+    let pm = member_perf_model(profile, model, bw_q);
+    match site {
+        None => solve_flat(strategy, &pm, band, params, seed),
+        Some((s, backhaul_q)) => {
+            let backhaul =
+                BackhaulLink { bandwidth_mbps: backhaul_q, latency_s: s.backhaul.latency_s };
+            let tpm = TieredPerfModel::new(pm, s.profile, s.servers, backhaul);
+            solve_tiered(strategy, &tpm, band, params, seed)
+        }
+    }
+}
+
+/// Predicted objectives of an adopted plan under the same quantised
+/// state it was solved in (what [`crate::planner::PlanOutcome`]
+/// reports). Total over the whole embedded plan space, COC (`l1 == 0`)
+/// included — the tiered tables charge its input relay across the
+/// backhaul exactly as the simulator does.
+pub(crate) fn objectives_of(
+    profile: &'static ComputeProfile,
+    model: &ModelProfile,
+    bw_q: f64,
+    site: Option<(EdgeSite, f64)>,
+    plan: SplitPlan,
+) -> [f64; 3] {
+    let pm = member_perf_model(profile, model, bw_q);
+    match site {
+        None => pm.objectives(plan.l1),
+        Some((s, backhaul_q)) => {
+            let backhaul =
+                BackhaulLink { bandwidth_mbps: backhaul_q, latency_s: s.backhaul.latency_s };
+            TieredPerfModel::new(pm, s.profile, s.servers, backhaul).objectives(plan)
+        }
+    }
+}
+
+/// Band-weighted TOPSIS over `(plan, raw objectives)` rows — the shared
+/// choice stage of every Pareto strategy. Scaling the f2 column before
+/// vector normalisation acts exactly like a TOPSIS attribute weight.
+fn banded_topsis(
+    front: &[(SplitPlan, [f64; 3])],
+    feasible: &[bool],
+    band: BatteryBand,
+) -> Option<SplitPlan> {
+    if front.is_empty() {
+        return None;
+    }
+    let w = band.energy_weight();
+    let rows: Vec<Vec<f64>> =
+        front.iter().map(|(_, o)| vec![o[0], o[1] * w, o[2]]).collect();
+    topsis(&rows, feasible).map(|r| front[r.chosen].0)
+}
+
+fn solve_flat(
+    strategy: Strategy,
+    pm: &PerfModel<'_>,
+    band: BatteryBand,
+    params: &Nsga2Params,
+    seed: u64,
+) -> Solved {
+    let l = pm.profile.num_layers;
+    match strategy {
+        Strategy::SmartSplit => {
+            let problem = SplitProblem::new(pm);
+            let set = with_fleet_solver(|s| {
+                s.solve(&problem, &Nsga2Params { seed, ..params.clone() })
+            });
+            let front: Vec<(SplitPlan, [f64; 3])> = set
+                .members
+                .iter()
+                .map(|m| {
+                    let l1 = m.genome[0] as usize;
+                    (SplitPlan::two_tier(l1), problem.objectives_at(l1))
+                })
+                .collect();
+            let feasible: Vec<bool> =
+                front.iter().map(|(p, _)| problem.feasible_at(p.l1)).collect();
+            let plan = banded_topsis(&front, &feasible, band);
+            Solved { plan, front: Some(front), evaluations: set.evaluations }
+        }
+        Strategy::Topsis => {
+            let front: Vec<(SplitPlan, [f64; 3])> = exhaustive_pareto_front(pm)
+                .into_iter()
+                .map(|l1| (SplitPlan::two_tier(l1), pm.objectives(l1)))
+                .collect();
+            let feasible = vec![true; front.len()];
+            let plan = banded_topsis(&front, &feasible, band);
+            Solved { plan, front: Some(front), evaluations: 0 }
+        }
+        Strategy::Cos => Solved::point(SplitPlan::two_tier(l)),
+        Strategy::Coc => Solved::point(SplitPlan::two_tier(0)),
+        Strategy::Rs => {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            Solved::point(SplitPlan::two_tier(rs(pm, &mut rng).l1))
+        }
+        // The selection-rule strategies share one enumerated domain.
+        _ => Candidates::flat(pm).select(strategy),
+    }
+}
+
+fn solve_tiered(
+    strategy: Strategy,
+    tpm: &TieredPerfModel<'_>,
+    band: BatteryBand,
+    params: &Nsga2Params,
+    seed: u64,
+) -> Solved {
+    let l = tpm.num_layers();
+    match strategy {
+        Strategy::SmartSplit => {
+            let problem = TieredSplitProblem::new(tpm);
+            let set = with_fleet_solver(|s| {
+                s.solve(&problem, &Nsga2Params { seed, ..params.clone() })
+            });
+            let front: Vec<(SplitPlan, [f64; 3])> = set
+                .members
+                .iter()
+                .map(|m| {
+                    let p = SplitPlan { l1: m.genome[0] as usize, l2: m.genome[1] as usize };
+                    (p, problem.objectives_at(p))
+                })
+                .collect();
+            let feasible: Vec<bool> =
+                front.iter().map(|(p, _)| problem.feasible_at(*p)).collect();
+            let plan = banded_topsis(&front, &feasible, band);
+            Solved { plan, front: Some(front), evaluations: set.evaluations }
+        }
+        Strategy::Topsis => {
+            let front: Vec<(SplitPlan, [f64; 3])> = crate::edge::exhaustive_tiered_front(tpm)
+                .into_iter()
+                .map(|p| (p, tpm.objectives(p)))
+                .collect();
+            let feasible = vec![true; front.len()];
+            let plan = banded_topsis(&front, &feasible, band);
+            Solved { plan, front: Some(front), evaluations: 0 }
+        }
+        // The paper's extremes embed unchanged: COS keeps everything on
+        // the device, COC ships the raw input through to the cloud
+        // (empty torso either way).
+        Strategy::Cos => Solved::point(SplitPlan { l1: l, l2: l }),
+        Strategy::Coc => Solved::point(SplitPlan { l1: 0, l2: 0 }),
+        Strategy::Rs => {
+            // The paper defines RS on the single split point; under a
+            // tier it stays a two-tier draw (no random torso).
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            Solved::point(SplitPlan::two_tier(rs(&tpm.device, &mut rng).l1))
+        }
+        _ => Candidates::tiered(tpm).select(strategy),
+    }
+}
+
+/// The enumerated feasible decision domain with its raw objectives —
+/// `(1..L)` two-tier splits for a flat request (exactly the domain of
+/// [`crate::optimizer::scalarization`]), the feasible `(l1, l2)`
+/// triangle of [`TieredSplitProblem`] for a tiered one. The selection
+/// rules below are domain-agnostic, which is what lets LBO/EBO and the
+/// scalarisation methods run under an edge tier at all.
+struct Candidates {
+    plans: Vec<SplitPlan>,
+    objs: Vec<[f64; 3]>,
+}
+
+impl Candidates {
+    fn flat(pm: &PerfModel<'_>) -> Candidates {
+        let l = pm.profile.num_layers;
+        let plans: Vec<SplitPlan> =
+            (1..l).filter(|&i| pm.feasible(i)).map(SplitPlan::two_tier).collect();
+        let objs = plans.iter().map(|p| pm.objectives(p.l1)).collect();
+        Candidates { plans, objs }
+    }
+
+    fn tiered(tpm: &TieredPerfModel<'_>) -> Candidates {
+        let l = tpm.num_layers();
+        let mut plans = Vec::new();
+        for l1 in 1..=l {
+            for l2 in l1..=l {
+                let p = SplitPlan { l1, l2 };
+                if tpm.feasible(p) {
+                    plans.push(p);
+                }
+            }
+        }
+        let objs = plans.iter().map(|&p| tpm.objectives(p)).collect();
+        Candidates { plans, objs }
+    }
+
+    /// Min-max normalised objective rows (the §V-A methods operate on
+    /// normalised columns; same formula as
+    /// [`crate::optimizer::scalarization`]).
+    fn normalised(&self) -> Vec<[f64; 3]> {
+        let mut lo = [f64::INFINITY; 3];
+        let mut hi = [f64::NEG_INFINITY; 3];
+        for r in &self.objs {
+            for j in 0..3 {
+                lo[j] = lo[j].min(r[j]);
+                hi[j] = hi[j].max(r[j]);
+            }
+        }
+        self.objs
+            .iter()
+            .map(|r| {
+                let mut out = [0.0; 3];
+                for j in 0..3 {
+                    let span = hi[j] - lo[j];
+                    out[j] = if span > 0.0 { (r[j] - lo[j]) / span } else { 0.0 };
+                }
+                out
+            })
+            .collect()
+    }
+
+    fn argmin(&self, col: usize) -> Option<SplitPlan> {
+        self.plans
+            .iter()
+            .zip(&self.objs)
+            .min_by(|(_, a), (_, b)| a[col].partial_cmp(&b[col]).unwrap())
+            .map(|(&p, _)| p)
+    }
+
+    fn select(self, strategy: Strategy) -> Solved {
+        let plan = match strategy {
+            Strategy::Lbo => self.argmin(0),
+            Strategy::Ebo => self.argmin(1),
+            Strategy::WeightedSum => {
+                let w = Strategy::SCALAR_WEIGHTS;
+                self.plans
+                    .iter()
+                    .zip(self.normalised().iter())
+                    .min_by(|(_, a), (_, b)| {
+                        let sa: f64 = a.iter().zip(&w).map(|(x, wj)| x * wj).sum();
+                        let sb: f64 = b.iter().zip(&w).map(|(x, wj)| x * wj).sum();
+                        sa.partial_cmp(&sb).unwrap()
+                    })
+                    .map(|(&p, _)| p)
+            }
+            Strategy::WeightedMetric => {
+                let w = Strategy::SCALAR_WEIGHTS;
+                let p_ord = Strategy::METRIC_ORDER;
+                let m = |r: &[f64; 3]| -> f64 {
+                    r.iter()
+                        .zip(&w)
+                        .map(|(x, wj)| (wj * x).powf(p_ord))
+                        .sum::<f64>()
+                        .powf(1.0 / p_ord)
+                };
+                self.plans
+                    .iter()
+                    .zip(self.normalised().iter())
+                    .min_by(|(_, a), (_, b)| m(a).partial_cmp(&m(b)).unwrap())
+                    .map(|(&p, _)| p)
+            }
+            Strategy::EpsilonConstrained => {
+                let primary = Strategy::EPSILON_PRIMARY;
+                let eps = Strategy::EPSILON_CEILINGS;
+                self.plans
+                    .iter()
+                    .zip(self.normalised().iter())
+                    .filter(|(_, r)| (0..3).all(|j| j == primary || r[j] <= eps[j]))
+                    .min_by(|(_, a), (_, b)| a[primary].partial_cmp(&b[primary]).unwrap())
+                    .map(|(&p, _)| p)
+            }
+            other => unreachable!("{other:?} is not a selection-rule strategy"),
+        };
+        match plan {
+            Some(p) => Solved::point(p),
+            None => Solved::none(),
+        }
+    }
+}

@@ -25,7 +25,7 @@ use crate::sim::engine::SimTime;
 
 /// How a device picks (and re-picks) its split. Spawns and re-plans
 /// both honour the configured planner; every decision flows through the
-/// sim's split-plan cache ([`crate::optimizer::cache`]) with the battery
+/// sim's planning façade ([`crate::planner::Planner`]) with the battery
 /// band folded into the TOPSIS stage.
 #[derive(Clone, Debug)]
 pub enum Planner {
@@ -39,10 +39,30 @@ pub enum Planner {
     /// weighted. O(L) per decision (O(L²) tiered) — the city-scale
     /// default.
     Topsis,
+    /// Any other façade strategy (the §VI-C baselines and §V-A
+    /// scalarisation methods) — what `simulate --planner lbo` maps to.
+    /// The strategy must be *total* (find a plan for every device
+    /// state): one that returns no plan panics the run, which is why
+    /// the simulate CLI rejects `EpsilonConstrained` (its ε box can be
+    /// legitimately infeasible).
+    Custom(crate::planner::Strategy),
     /// Pin every device to this two-tier split (clamped to `1..=L-1`)
     /// and never re-plan — controlled experiments (e.g. forcing cloud
     /// contention).
     Fixed(usize),
+}
+
+impl Planner {
+    /// The façade strategy this planner solves with; `None` for
+    /// [`Planner::Fixed`] (pinned devices never solve).
+    pub fn strategy(&self) -> Option<crate::planner::Strategy> {
+        match self {
+            Planner::SmartSplit(_) => Some(crate::planner::Strategy::SmartSplit),
+            Planner::Topsis => Some(crate::planner::Strategy::Topsis),
+            Planner::Custom(s) => Some(*s),
+            Planner::Fixed(_) => None,
+        }
+    }
 }
 
 /// A device's static place in the edge topology: which site serves it
@@ -157,6 +177,9 @@ impl SimDevice {
             Planner::SmartSplit(params) => smartsplit(&d.perf_model(model, bw), params).decision.l1,
             Planner::Topsis => battery_aware_split(&d.perf_model(model, bw), d.soc())
                 .expect("no feasible split for device"),
+            Planner::Custom(_) => {
+                panic!("custom strategies plan through planner::Planner; use SimDevice::with_split")
+            }
             Planner::Fixed(l1) => (*l1).clamp(1, model.num_layers.saturating_sub(1).max(1)),
         };
         d.adopt_split(SplitPlan::two_tier(l1), model, bw);
@@ -270,6 +293,9 @@ impl SimDevice {
         self.tail_s = pm.server_latency_s(plan.l2);
         self.upload_bits = if plan.l1 >= model.num_layers {
             0.0
+        } else if plan.l1 == 0 {
+            // COC embedding: the raw input is the "intermediate".
+            model.input_bytes() as f64 * 8.0
         } else {
             model.intermediate_bytes(plan.l1) as f64 * 8.0
         };

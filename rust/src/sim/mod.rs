@@ -41,13 +41,11 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::battery::BatteryBand;
 use crate::device::ComputeProfile;
-use crate::edge::{BackhaulLink, EdgeSite, EdgeTopology, SplitPlan, TieredPerfModel};
+use crate::edge::{EdgeTopology, SplitPlan};
 use crate::metrics::{Histogram, PlannerStats};
 use crate::models::{zoo, ModelProfile};
-use crate::optimizer::{
-    member_perf_model, model_cache_id, quantize_bandwidth, solve_plan, solve_plan_tiered,
-    Nsga2Params, PlanKey, PlannerKind, SplitPlanCache, TierKey,
-};
+use crate::optimizer::{Nsga2Params, PlanKey};
+use crate::planner::{PlanRequest, PlannerConfig, TierContext};
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Xoshiro256;
 use crate::workload::next_interarrival;
@@ -348,7 +346,6 @@ struct Sim<'a> {
     /// Shared with the parallel re-solve workers (the plan solves are
     /// pure functions of `(model, profile, bandwidth bucket, band)`).
     model: Arc<ModelProfile>,
-    model_id: u64,
     rng: Xoshiro256,
     q: EventQueue,
     devices: Vec<SimDevice>,
@@ -365,8 +362,9 @@ struct Sim<'a> {
     device_wait: Histogram,
     counters: Counters,
     horizon_reached: bool,
-    /// Split-plan memo table (see [`crate::optimizer::cache`]).
-    cache: SplitPlanCache,
+    /// The planning façade: quantisation → key → seed → cache, one
+    /// [`crate::planner::PlanRequest`] per decision.
+    facade: crate::planner::Planner,
     /// Lazily spawned worker pool for cache-miss fan-out.
     pool: Option<ThreadPool>,
     /// Index of the *next* scheduled re-optimisation tick: sweep k fires
@@ -376,36 +374,6 @@ struct Sim<'a> {
     decision_count: u64,
     /// Full decision trace; only fed when `planner_perf.record_decisions`.
     decisions: Vec<(u32, u32, u32)>,
-}
-
-/// Run the decision procedure for one quantised planner state — flat
-/// (`site == None`) or tiered (`Some((site params, bucketed backhaul
-/// bandwidth))`, exactly what the key's [`TierKey`] recorded). A pure
-/// function of its arguments (the seed is key-derived), shared by the
-/// inline and pool-worker paths so scheduling cannot change any
-/// decision; quantisation runs before the solver in cached and
-/// uncached paths alike.
-#[allow(clippy::too_many_arguments)]
-fn solve_state(
-    kind: PlannerKind,
-    profile: &'static ComputeProfile,
-    model: &ModelProfile,
-    bw_q: f64,
-    band: BatteryBand,
-    site: Option<(EdgeSite, f64)>,
-    params: &Nsga2Params,
-    seed: u64,
-) -> Option<SplitPlan> {
-    let pm = member_perf_model(profile, model, bw_q);
-    match site {
-        None => solve_plan(kind, &pm, band, params, seed),
-        Some((s, backhaul_q)) => {
-            let backhaul =
-                BackhaulLink { bandwidth_mbps: backhaul_q, latency_s: s.backhaul.latency_s };
-            let tpm = TieredPerfModel::new(pm, s.profile, s.servers, backhaul);
-            solve_plan_tiered(kind, &tpm, band, params, seed)
-        }
-    }
 }
 
 impl<'a> Sim<'a> {
@@ -435,16 +403,29 @@ impl<'a> Sim<'a> {
             bail!("sim needs at least one initial device");
         }
         let model = Arc::new(spec.analyze(1));
-        let model_id = model_cache_id(&model);
         let topology = cfg.edge.as_ref().map(|spec| spec.topology());
         let edges = topology
             .as_ref()
             .map(|t| t.sites.iter().map(|s| SimEdge::new(s.servers)).collect())
             .unwrap_or_default();
+        // The façade owns quantisation → key → derived seed → cache.
+        // Base seed and NSGA-II budget follow the configured planner:
+        // only [`Planner::SmartSplit`] consumes the budget (the other
+        // strategies are parameter-free), and its params are
+        // authoritative — tiered SmartSplit scenarios should carry
+        // [`Nsga2Params::for_small_genome`]`(2)`.
+        let (params, base_seed) = match &cfg.planner {
+            Planner::SmartSplit(p) => (p.clone(), p.seed),
+            _ => (Nsga2Params::for_tiny_genome(), cfg.seed),
+        };
+        let facade = crate::planner::Planner::new(
+            PlannerConfig::fleet(params, base_seed)
+                .with_bucket_ratio(cfg.planner_perf.bw_bucket_ratio)
+                .with_cache(cfg.planner_perf.cache),
+        );
         Ok(Sim {
             cfg,
             model,
-            model_id,
             rng: Xoshiro256::seed_from_u64(cfg.seed),
             q: EventQueue::new(),
             devices: Vec::new(),
@@ -459,7 +440,7 @@ impl<'a> Sim<'a> {
             device_wait: Histogram::new(),
             counters: Counters::default(),
             horizon_reached: false,
-            cache: SplitPlanCache::new(),
+            facade,
             pool: None,
             reopt_tick: 0,
             sweeps: 0,
@@ -491,63 +472,33 @@ impl<'a> Sim<'a> {
 
     // ---------------------------------------------------- planner layer
 
-    /// Base seed the per-key solve seeds are derived from.
-    fn plan_base_seed(&self) -> u64 {
-        match &self.cfg.planner {
-            Planner::SmartSplit(p) => p.seed,
-            _ => self.cfg.seed,
-        }
-    }
-
-    /// NSGA-II budget for solves. Only [`Planner::SmartSplit`] actually
-    /// consumes these (the exhaustive planners are parameter-free), and
-    /// the configured params are authoritative — tiered SmartSplit
-    /// scenarios should carry [`Nsga2Params::for_small_genome`]`(2)`
-    /// (the CLI's two-phone tiered path does).
-    fn plan_params(&self) -> Nsga2Params {
-        match &self.cfg.planner {
-            Planner::SmartSplit(p) => p.clone(),
-            _ => Nsga2Params::for_tiny_genome(),
-        }
-    }
-
-    /// The edge site (index + parameters) device `member` plans against,
-    /// with its key-ready bucketed backhaul bandwidth.
-    fn plan_site(&self, member: usize) -> Option<(usize, EdgeSite, f64)> {
-        let t = self.topology.as_ref()?;
-        let site = t.site_of(member);
-        let s = t.sites[site];
-        let backhaul_q = quantize_bandwidth(
-            s.backhaul.bandwidth_mbps,
-            self.cfg.planner_perf.bw_bucket_ratio,
-        );
-        Some((site, s, backhaul_q))
-    }
-
-    /// Quantised planner state for a device's current conditions: the
-    /// cache key, the (bucketed) device bandwidth the solve must use,
-    /// and — for tiered planning — the assigned site's parameters with
-    /// their bucketed backhaul bandwidth (computed once here; the solve
-    /// paths pass it straight to [`solve_state`]).
-    fn plan_state(
+    /// The façade request for device `member`'s current conditions —
+    /// exact bandwidth in (the façade buckets it), assigned edge site
+    /// attached when the scenario has a tier.
+    fn plan_request(
         &self,
         member: usize,
         profile: &'static ComputeProfile,
         bw_exact: f64,
         band: BatteryBand,
-    ) -> (PlanKey, f64, Option<(EdgeSite, f64)>) {
-        let bw_q = quantize_bandwidth(bw_exact, self.cfg.planner_perf.bw_bucket_ratio);
-        let kind = match self.cfg.planner {
-            Planner::SmartSplit(_) => PlannerKind::SmartSplit,
-            _ => PlannerKind::Topsis,
-        };
-        let mut key = PlanKey::new(self.model_id, profile, band, bw_q, kind);
-        let mut site = None;
-        if let Some((idx, s, backhaul_q)) = self.plan_site(member) {
-            key = key.with_tier(TierKey::new(idx, &s, backhaul_q));
-            site = Some((s, backhaul_q));
+    ) -> PlanRequest {
+        let strategy = self
+            .cfg
+            .planner
+            .strategy()
+            .expect("pinned (Fixed) devices never reach the planner");
+        let mut req = PlanRequest::two_tier(
+            Arc::clone(&self.model),
+            profile,
+            band,
+            bw_exact,
+            strategy,
+        );
+        if let Some(t) = self.topology.as_ref() {
+            let site = t.site_of(member);
+            req.tier = Some(TierContext { site, edge: t.sites[site] });
         }
-        (key, bw_q, site)
+        req
     }
 
     /// One cache-aware split decision. Identical inputs give identical
@@ -565,9 +516,10 @@ impl<'a> Sim<'a> {
 
     /// As [`Sim::plan_split`], but a cache miss is served from `presolved`
     /// when a batch fan-out already solved this key (falling back to an
-    /// inline solve). Counting runs through [`SplitPlanCache::plan`]
-    /// either way, so the parallel path's `PlannerStats` are identical to
-    /// a sequential pass.
+    /// inline solve). Counting runs through the façade's counted cache
+    /// path either way, so the parallel path's `PlannerStats` are
+    /// identical to a sequential pass. Uses the façade's decision-only
+    /// fast path: a cache hit stays one map lookup.
     fn plan_split_with(
         &self,
         member: usize,
@@ -576,17 +528,8 @@ impl<'a> Sim<'a> {
         band: BatteryBand,
         presolved: &mut HashMap<PlanKey, Option<SplitPlan>>,
     ) -> Option<SplitPlan> {
-        let (key, bw_q, site) = self.plan_state(member, profile, bw_exact, band);
-        let kind = key.kind;
-        let seed = key.derived_seed(self.plan_base_seed());
-        let params = self.plan_params();
-        let model = &self.model;
-        let pre = presolved.remove(&key);
-        self.cache.plan(self.cfg.planner_perf.cache, &key, || {
-            pre.unwrap_or_else(|| {
-                solve_state(kind, profile, model, bw_q, band, site, &params, seed)
-            })
-        })
+        let req = self.plan_request(member, profile, bw_exact, band);
+        self.facade.split_with(&req, presolved)
     }
 
     /// Cache-aware unconditional re-plan of device `d` at `now` (the
@@ -619,24 +562,14 @@ impl<'a> Sim<'a> {
         if !self.cfg.planner_perf.cache || !self.cfg.planner_perf.parallel || pending.len() < 2 {
             return HashMap::new();
         }
-        let base_seed = self.plan_base_seed();
-        let params = self.plan_params();
-        let mut requests = Vec::with_capacity(pending.len());
-        for &(d, bw, band) in pending {
-            let profile = self.devices[d].profile;
-            let (key, bw_q, site) = self.plan_state(d, profile, bw, band);
-            let model = Arc::clone(&self.model);
-            let params = params.clone();
-            let seed = key.derived_seed(base_seed);
-            let kind = key.kind;
-            requests.push((key, move || {
-                solve_state(kind, profile, &model, bw_q, band, site, &params, seed)
-            }));
-        }
+        let requests: Vec<PlanRequest> = pending
+            .iter()
+            .map(|&(d, bw, band)| self.plan_request(d, self.devices[d].profile, bw, band))
+            .collect();
         let pool = self
             .pool
             .get_or_insert_with(|| ThreadPool::new(ThreadPool::default_threads(16)));
-        self.cache.presolve_batch(pool, requests)
+        self.facade.presolve_batch(pool, &requests)
     }
 
     /// Create one device (fleet member `member`), register it as active,
@@ -1047,7 +980,7 @@ impl<'a> Sim<'a> {
             upload_energy_j: self.devices.iter().map(|d| d.upload_energy_j).sum(),
             split_distribution: split_counts.into_iter().collect(),
             reopt_sweeps: self.sweeps,
-            planner: self.cache.stats(),
+            planner: self.facade.stats(),
             decision_count: self.decision_count,
             decisions: self.decisions,
         }

@@ -51,6 +51,18 @@ impl Cli {
         self
     }
 
+    /// The shared `--planner <strategy>` flag. Declared here — and only
+    /// here — so every planning subcommand (`optimize`, `simulate`,
+    /// `serve`/`demo`, `fleet`) exposes the identical flag and parses it
+    /// through [`Parsed::planner`].
+    pub fn planner_opt(self) -> Self {
+        self.opt(
+            "planner",
+            "SmartSplit",
+            "planning strategy: SmartSplit|Topsis|LBO|EBO|COS|COC|RS|WeightedSum|WeightedMetric|EpsilonConstrained (case-insensitive)",
+        )
+    }
+
     pub fn usage(&self) -> String {
         let mut s = format!("{}\n\nOptions:\n", self.about);
         for o in &self.opts {
@@ -132,6 +144,13 @@ impl Parsed {
     /// declared default)?
     pub fn provided(&self, name: &str) -> bool {
         self.provided.contains(name)
+    }
+
+    /// The `--planner` strategy (see [`Cli::planner_opt`]) —
+    /// case-insensitive, with an error listing every valid name. This is
+    /// the one place a strategy name is parsed.
+    pub fn planner(&self) -> Result<crate::planner::Strategy, String> {
+        crate::planner::Strategy::by_name(self.get("planner"))
     }
 
     pub fn get(&self, name: &str) -> &str {
@@ -259,6 +278,19 @@ mod tests {
         let err = cli().parse(&argv(&["--help"])).unwrap_err();
         assert!(err.contains("--model"));
         assert!(err.contains("--port"));
+    }
+
+    #[test]
+    fn planner_flag_parses_in_one_place() {
+        let c = Cli::new("t").planner_opt();
+        let p = c.parse(&[]).unwrap();
+        assert_eq!(p.planner(), Ok(crate::planner::Strategy::SmartSplit));
+        let p = c.parse(&argv(&["--planner", "lbo"])).unwrap();
+        assert_eq!(p.planner(), Ok(crate::planner::Strategy::Lbo));
+        let p = c.parse(&argv(&["--planner=topsis"])).unwrap();
+        assert_eq!(p.planner(), Ok(crate::planner::Strategy::Topsis));
+        let err = c.parse(&argv(&["--planner", "nope"])).unwrap().planner().unwrap_err();
+        assert!(err.contains("SmartSplit") && err.contains("EpsilonConstrained"));
     }
 
     #[test]

@@ -1,0 +1,376 @@
+//! Migration parity: the planning façade reproduces the pre-redesign
+//! entry points byte-for-byte.
+//!
+//! Two layers of pinning:
+//! * direct — `planner::Planner` vs the frozen deprecated free
+//!   functions (`solve_plan`, `solve_plan_tiered`, `decide`) and the
+//!   scalarisation primitives, across the full (profile × band ×
+//!   bandwidth × strategy) lattice, flat and tiered;
+//! * end-to-end — `SimReport::decisions` streams of flat and tiered
+//!   `city_scale`-style runs equal the decision stream the pre-redesign
+//!   sim produced (replicated here from the frozen entry points with
+//!   the same quantisation, keys, and key-derived seeds).
+#![allow(deprecated)] // the frozen entry points are the parity references
+
+use std::sync::Arc;
+
+use smartsplit::coordinator::battery::BatteryBand;
+use smartsplit::device::profiles;
+use smartsplit::edge::{BackhaulLink, EdgeSite, SplitPlan, TieredPerfModel};
+use smartsplit::models::zoo;
+use smartsplit::models::ModelProfile;
+use smartsplit::optimizer::{
+    decide, epsilon_constrained, member_perf_model, model_cache_id, quantize_bandwidth,
+    solve_plan, solve_plan_tiered, weighted_metric, weighted_sum, Nsga2Params, PlanKey,
+    PlannerKind, TierKey,
+};
+use smartsplit::planner::{PlanRequest, Planner, PlannerConfig, Strategy};
+use smartsplit::sim::{self, ExplicitMember, FleetSpec, PlannerPerfConfig};
+use smartsplit::util::rng::Xoshiro256;
+use smartsplit::workload::Arrival;
+
+const BANDS: [BatteryBand; 3] =
+    [BatteryBand::Comfort, BatteryBand::Saver, BatteryBand::Critical];
+
+fn model() -> Arc<ModelProfile> {
+    Arc::new(zoo::alexnet().analyze(1))
+}
+
+#[test]
+fn facade_matches_frozen_flat_entry_points() {
+    // Every (profile × band × bandwidth) state, both classic kinds:
+    // the façade's decision equals the deprecated solve_plan's with the
+    // identical key-derived seed.
+    let model = model();
+    let model_id = model_cache_id(&model);
+    let params = Nsga2Params::for_tiny_genome();
+    let planner = Planner::new(PlannerConfig::fleet(params.clone(), params.seed));
+    for profile in [profiles::samsung_j6(), profiles::redmi_note8()] {
+        for band in BANDS {
+            for bw in [2.0, 10.0, 30.0, 60.0] {
+                for (strategy, kind) in [
+                    (Strategy::SmartSplit, PlannerKind::SmartSplit),
+                    (Strategy::Topsis, PlannerKind::Topsis),
+                ] {
+                    let req = PlanRequest::two_tier(
+                        Arc::clone(&model),
+                        profile,
+                        band,
+                        bw,
+                        strategy,
+                    );
+                    // The façade's key must equal the hand-built one the
+                    // pre-redesign consumers constructed.
+                    let key = PlanKey::new(model_id, profile, band, bw, kind);
+                    assert_eq!(planner.key(&req), key);
+                    let pm = member_perf_model(profile, &model, bw);
+                    let frozen =
+                        solve_plan(kind, &pm, band, &params, key.derived_seed(params.seed));
+                    let got = planner.plan(&req);
+                    assert_eq!(
+                        got.plan, frozen,
+                        "{} {:?} @ {bw} Mbps diverged from solve_plan",
+                        profile.name, band
+                    );
+                    assert_eq!(got.provenance.derived_seed, key.derived_seed(params.seed));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn facade_matches_frozen_tiered_entry_points() {
+    // Same lattice under an edge site, with the city-scale 25% bucket
+    // ratio applied to device and backhaul links exactly as the
+    // pre-redesign sim did.
+    let model = model();
+    let model_id = model_cache_id(&model);
+    let params = Nsga2Params::for_small_genome(2);
+    let ratio = 1.25;
+    let planner = Planner::new(
+        PlannerConfig::fleet(params.clone(), params.seed).with_bucket_ratio(ratio),
+    );
+    let site = EdgeSite {
+        servers: 2,
+        profile: profiles::edge_server(),
+        backhaul: BackhaulLink::METRO_1GBE,
+    };
+    for profile in [profiles::samsung_j6(), profiles::redmi_note8()] {
+        for band in BANDS {
+            for bw in [5.0, 30.0] {
+                for (strategy, kind) in [
+                    (Strategy::SmartSplit, PlannerKind::SmartSplit),
+                    (Strategy::Topsis, PlannerKind::Topsis),
+                ] {
+                    let req = PlanRequest::two_tier(
+                        Arc::clone(&model),
+                        profile,
+                        band,
+                        bw,
+                        strategy,
+                    )
+                    .with_tier(1, site);
+                    let bw_q = quantize_bandwidth(bw, ratio);
+                    let backhaul_q = quantize_bandwidth(site.backhaul.bandwidth_mbps, ratio);
+                    let key = PlanKey::new(model_id, profile, band, bw_q, kind)
+                        .with_tier(TierKey::new(1, &site, backhaul_q));
+                    assert_eq!(planner.key(&req), key);
+                    let pm = member_perf_model(profile, &model, bw_q);
+                    let tpm = TieredPerfModel::new(
+                        pm,
+                        site.profile,
+                        site.servers,
+                        BackhaulLink {
+                            bandwidth_mbps: backhaul_q,
+                            latency_s: site.backhaul.latency_s,
+                        },
+                    );
+                    let frozen = solve_plan_tiered(
+                        kind,
+                        &tpm,
+                        band,
+                        &params,
+                        key.derived_seed(params.seed),
+                    );
+                    let got = planner.plan(&req);
+                    assert_eq!(
+                        got.plan, frozen,
+                        "{} {:?} @ {bw} Mbps diverged from solve_plan_tiered",
+                        profile.name, band
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn facade_matches_frozen_baselines_and_scalarisations() {
+    // Paper-mode planner (configured seed as-is, no cache) vs the
+    // frozen §VI-C dispatch and the §V-A scalarisation primitives.
+    let model = model();
+    let params = Nsga2Params { pop_size: 40, generations: 40, ..Default::default() };
+    let planner = Planner::new(PlannerConfig::paper(params.clone()));
+    for profile in [profiles::samsung_j6(), profiles::redmi_note8()] {
+        for bw in [2.0, 10.0, 60.0] {
+            let pm = member_perf_model(profile, &model, bw);
+            let req = |s| {
+                PlanRequest::two_tier(
+                    Arc::clone(&model),
+                    profile,
+                    BatteryBand::Comfort,
+                    bw,
+                    s,
+                )
+            };
+            for algo in smartsplit::optimizer::Algorithm::ALL {
+                // decide() draws RS from the passed rng; a fresh rng per
+                // algorithm reproduces the façade's seed-from-base draw.
+                let mut rng = Xoshiro256::seed_from_u64(params.seed);
+                let frozen = decide(algo, &pm, &params, &mut rng);
+                let got = planner.plan(&req(Strategy::from(algo)));
+                assert_eq!(
+                    got.plan,
+                    Some(SplitPlan::two_tier(frozen.l1)),
+                    "{} {:?} @ {bw} Mbps diverged from decide()",
+                    profile.name,
+                    algo
+                );
+            }
+            assert_eq!(
+                planner.plan(&req(Strategy::WeightedSum)).plan,
+                weighted_sum(&pm, Strategy::SCALAR_WEIGHTS).map(SplitPlan::two_tier),
+            );
+            assert_eq!(
+                planner.plan(&req(Strategy::WeightedMetric)).plan,
+                weighted_metric(&pm, Strategy::SCALAR_WEIGHTS, Strategy::METRIC_ORDER)
+                    .map(SplitPlan::two_tier),
+            );
+            assert_eq!(
+                planner.plan(&req(Strategy::EpsilonConstrained)).plan,
+                epsilon_constrained(
+                    &pm,
+                    Strategy::EPSILON_PRIMARY,
+                    Strategy::EPSILON_CEILINGS
+                )
+                .map(SplitPlan::two_tier),
+            );
+        }
+    }
+}
+
+/// An explicit fleet hitting every battery band on two profiles at
+/// three bandwidths — the deterministic "all bands" lattice the sim
+/// stream tests replay (Explicit members consume no RNG at spawn, so
+/// the expected stream is exactly computable).
+fn band_lattice_members() -> Vec<ExplicitMember> {
+    let mut members = Vec::new();
+    for &(profile, bw) in &[
+        (profiles::samsung_j6(), 10.0),
+        (profiles::redmi_note8(), 30.0),
+        (profiles::samsung_j6(), 3.0),
+    ] {
+        for soc in [1.0, 0.4, 0.1] {
+            members.push(ExplicitMember {
+                profile,
+                bandwidth_mbps: bw,
+                initial_soc: soc,
+            });
+        }
+    }
+    members
+}
+
+fn stream_config(planner: sim::Planner, seed: u64) -> sim::SimConfig {
+    sim::SimConfig {
+        model: "alexnet".into(),
+        duration_s: 30.0,
+        seed,
+        arrival: Arrival::Poisson { rps: 2.0 },
+        clouds: 1,
+        cloud_servers: 4,
+        planner,
+        // Spawn decisions only: no sweeps, no churn — the expected
+        // stream is the per-member frozen solve in member order.
+        reopt_period_s: 0.0,
+        drift_threshold: 0.25,
+        idle_drain_w: 0.0,
+        fleet: FleetSpec::Explicit(band_lattice_members()),
+        churn: None,
+        planner_perf: PlannerPerfConfig {
+            cache: true,
+            parallel: true,
+            bw_bucket_ratio: 1.25,
+            record_decisions: true,
+        },
+        edge: None,
+    }
+}
+
+fn spawn_stream(cfg: &sim::SimConfig) -> Vec<(u32, u32, u32)> {
+    let report = sim::run(cfg).expect("sim run");
+    let n = band_lattice_members().len();
+    assert!(report.decisions.len() >= n, "missing spawn decisions");
+    // Re-plans can only *append* after the n spawn entries (battery
+    // drain during the run); the first n are the spawns in member order.
+    report.decisions[..n].to_vec()
+}
+
+#[test]
+fn sim_flat_spawn_stream_matches_pre_redesign_path() {
+    // Both classic sim planners, every battery band: the façade-driven
+    // sim's decision stream equals the frozen solve_plan pipeline
+    // (quantise → key → derived seed → solve) the pre-redesign sim ran.
+    let model = model();
+    let model_id = model_cache_id(&model);
+    let tiny = Nsga2Params { seed: 9, ..Nsga2Params::for_tiny_genome() };
+    for (planner_cfg, kind, params, base_seed) in [
+        (sim::Planner::Topsis, PlannerKind::Topsis, Nsga2Params::for_tiny_genome(), 9u64),
+        (sim::Planner::SmartSplit(tiny.clone()), PlannerKind::SmartSplit, tiny.clone(), 9u64),
+    ] {
+        let cfg = stream_config(planner_cfg, 9);
+        let stream = spawn_stream(&cfg);
+        for (i, m) in band_lattice_members().iter().enumerate() {
+            let band = BatteryBand::of_fraction(m.initial_soc);
+            let bw_q = quantize_bandwidth(m.bandwidth_mbps, 1.25);
+            let key = PlanKey::new(model_id, m.profile, band, bw_q, kind);
+            let pm = member_perf_model(m.profile, &model, bw_q);
+            let expected =
+                solve_plan(kind, &pm, band, &params, key.derived_seed(base_seed))
+                    .expect("frozen path found no split");
+            assert_eq!(
+                stream[i],
+                (i as u32, expected.l1 as u32, expected.l2 as u32),
+                "{kind:?}: member {i} diverged from the pre-redesign stream"
+            );
+        }
+    }
+}
+
+#[test]
+fn sim_tiered_spawn_stream_matches_pre_redesign_path() {
+    // The tiered city path: same lattice behind two relay sites, 2-D
+    // solves against the assigned site with bucketed backhaul.
+    let model = model();
+    let model_id = model_cache_id(&model);
+    let small = Nsga2Params { seed: 5, ..Nsga2Params::for_small_genome(2) };
+    for (planner_cfg, kind, params, base_seed) in [
+        (sim::Planner::Topsis, PlannerKind::Topsis, Nsga2Params::for_tiny_genome(), 5u64),
+        (sim::Planner::SmartSplit(small.clone()), PlannerKind::SmartSplit, small.clone(), 5u64),
+    ] {
+        let mut cfg = stream_config(planner_cfg, 5);
+        cfg.edge = Some(sim::EdgeSpec::uniform(2, 2, 1000.0));
+        let topo = cfg.edge.as_ref().unwrap().topology();
+        let stream = spawn_stream(&cfg);
+        for (i, m) in band_lattice_members().iter().enumerate() {
+            let band = BatteryBand::of_fraction(m.initial_soc);
+            let bw_q = quantize_bandwidth(m.bandwidth_mbps, 1.25);
+            let site_idx = topo.site_of(i);
+            let site = topo.sites[site_idx];
+            let backhaul_q = quantize_bandwidth(site.backhaul.bandwidth_mbps, 1.25);
+            let key = PlanKey::new(model_id, m.profile, band, bw_q, kind)
+                .with_tier(TierKey::new(site_idx, &site, backhaul_q));
+            let pm = member_perf_model(m.profile, &model, bw_q);
+            let tpm = TieredPerfModel::new(
+                pm,
+                site.profile,
+                site.servers,
+                BackhaulLink { bandwidth_mbps: backhaul_q, latency_s: site.backhaul.latency_s },
+            );
+            let expected =
+                solve_plan_tiered(kind, &tpm, band, &params, key.derived_seed(base_seed))
+                    .expect("frozen tiered path found no split");
+            assert_eq!(
+                stream[i],
+                (i as u32, expected.l1 as u32, expected.l2 as u32),
+                "{kind:?}: tiered member {i} diverged from the pre-redesign stream"
+            );
+        }
+    }
+}
+
+#[test]
+fn sim_custom_strategy_streams_match_frozen_primitives() {
+    // The strategies the sim could never run before the façade: their
+    // spawn decisions equal the frozen §VI-C / §V-A primitives at the
+    // same quantised state.
+    let model = model();
+    let model_id = model_cache_id(&model);
+    for strategy in [
+        Strategy::Lbo,
+        Strategy::Ebo,
+        Strategy::Cos,
+        Strategy::Rs,
+        Strategy::WeightedSum,
+    ] {
+        let cfg = stream_config(sim::Planner::Custom(strategy), 3);
+        let stream = spawn_stream(&cfg);
+        for (i, m) in band_lattice_members().iter().enumerate() {
+            let band = BatteryBand::of_fraction(m.initial_soc);
+            let bw_q = quantize_bandwidth(m.bandwidth_mbps, 1.25);
+            let pm = member_perf_model(m.profile, &model, bw_q);
+            let expected_l1 = match strategy {
+                Strategy::Lbo => smartsplit::optimizer::lbo(&pm).l1,
+                Strategy::Ebo => smartsplit::optimizer::ebo(&pm).l1,
+                Strategy::Cos => smartsplit::optimizer::cos(&pm).l1,
+                Strategy::Rs => {
+                    let key =
+                        PlanKey::new(model_id, m.profile, band, bw_q, strategy.kind());
+                    let mut rng = Xoshiro256::seed_from_u64(key.derived_seed(3));
+                    smartsplit::optimizer::rs(&pm, &mut rng).l1
+                }
+                Strategy::WeightedSum => {
+                    weighted_sum(&pm, Strategy::SCALAR_WEIGHTS).expect("feasible domain")
+                }
+                _ => unreachable!(),
+            };
+            assert_eq!(
+                stream[i],
+                (i as u32, expected_l1 as u32, expected_l1 as u32),
+                "{}: member {i} diverged from the frozen primitive",
+                strategy.name()
+            );
+        }
+    }
+}

@@ -177,6 +177,7 @@ fn fleet_shares_one_cloud_across_heterogeneous_devices() {
             FleetMember { profile: profiles::samsung_j6(), bandwidth_mbps: 150.0 },
             FleetMember { profile: profiles::redmi_note8(), bandwidth_mbps: 150.0 },
         ],
+        strategy: smartsplit::planner::Strategy::SmartSplit,
         nsga2: Nsga2Params { pop_size: 30, generations: 30, ..Default::default() },
         emulate_slowdown: false,
     };
