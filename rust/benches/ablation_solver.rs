@@ -1,5 +1,5 @@
 //! Ablation: is NSGA-II + TOPSIS actually necessary on a ≤38-point split
-//! domain? (A DESIGN.md §9 design-choice check the paper does not run.)
+//! domain? (A DESIGN.md §10 design-choice check the paper does not run.)
 //!
 //! We compare SmartSplit's front against brute-force enumeration of every
 //! split (the ground truth — feasible only because the domain is tiny) and

@@ -1,0 +1,111 @@
+//! §Scale: mobile-city throughput and the cost of edge handover.
+//!
+//! Runs the `city_mobile` scenario (the tiered city with every device
+//! on a waypoint walk between edge sites) and records the numbers the
+//! CI perf trajectory tracks in `BENCH_mobility.json`: events/sec,
+//! handovers (count and per virtual second), migration re-solves and
+//! their share of planner requests, plan-cache hit rate, and the
+//! latency tax relative to the same city frozen static. `--smoke`
+//! shrinks the fleet for CI.
+
+use smartsplit::bench::{black_box, Bench};
+use smartsplit::sim::{self, Mobility};
+use smartsplit::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // (devices, sites, virtual seconds, bench iters, warmup)
+    let sizes: Vec<(usize, usize, f64, usize, usize)> = if smoke {
+        vec![(2_000, 4, 120.0, 2, 1)]
+    } else {
+        vec![(2_000, 4, 300.0, 3, 1), (10_000, 8, 120.0, 3, 1), (50_000, 16, 60.0, 2, 0)]
+    };
+    println!("== mobility_scale: city-mobile scenario, alexnet, seed 7 ==");
+
+    let mut runs = Vec::new();
+    for (devices, sites, duration_s, iters, warmup) in sizes {
+        let cfg = sim::city_mobile("alexnet", devices, sites, duration_s, 7);
+        Bench::new(&format!(
+            "simulate {devices} mobile devices / {sites} edge sites / {duration_s:.0}s virtual"
+        ))
+        .iters(iters)
+        .warmup(warmup)
+        .run(|| {
+            black_box(sim::run(&cfg).expect("sim run"));
+        });
+        let report = sim::run(&cfg)?;
+        // The mobility tax: the identical city frozen static.
+        let mut frozen = cfg.clone();
+        frozen.mobility = Mobility::Static;
+        let baseline = sim::run(&frozen)?;
+
+        let wall_s = report.wall.as_secs_f64().max(1e-9);
+        let migration_requests = report.planner.migration_requests();
+        let request_total: u64 = report.planner.requests_by_reason.iter().sum();
+        println!(
+            "    {:>6} devices: {:>9} events in {:?} → {:>12.0} events/s, \
+             {} handovers ({:.2}/virtual-s), {} migration re-plans \
+             ({:.1}% of planner requests), cache hit rate {:.1}%",
+            devices,
+            report.events,
+            report.wall,
+            report.events_per_wall_second(),
+            report.handovers,
+            report.handovers as f64 / duration_s,
+            report.migration_replans,
+            100.0 * migration_requests as f64 / request_total.max(1) as f64,
+            report.planner.hit_rate() * 100.0,
+        );
+        println!(
+            "    {:>6}         p95 latency {:.2} ms mobile vs {:.2} ms static \
+             ({} vs {} resplits)",
+            "",
+            report.latency.p95() * 1e3,
+            baseline.latency.p95() * 1e3,
+            report.resplits,
+            baseline.resplits,
+        );
+        // A mobility bench in which nobody moves is a silent
+        // misconfiguration, not a perf number.
+        assert!(report.handovers > 0, "no handovers in the mobile city");
+        assert!(report.migration_replans > 0, "handovers produced no migration re-solves");
+        assert_eq!(baseline.handovers, 0, "the frozen baseline must not move");
+        runs.push(Json::obj(vec![
+            ("devices", Json::Num(devices as f64)),
+            ("edge_sites", Json::Num(sites as f64)),
+            ("virtual_s", Json::Num(duration_s)),
+            ("events", Json::Num(report.events as f64)),
+            ("events_per_sec", Json::Num(report.events_per_wall_second())),
+            ("completed", Json::Num(report.completed as f64)),
+            ("handovers", Json::Num(report.handovers as f64)),
+            (
+                "handovers_per_virtual_sec",
+                Json::Num(report.handovers as f64 / duration_s),
+            ),
+            ("migration_replans", Json::Num(report.migration_replans as f64)),
+            ("migration_requests", Json::Num(migration_requests as f64)),
+            ("planner_requests", Json::Num(request_total as f64)),
+            ("planner_solves", Json::Num(report.planner.solves as f64)),
+            ("cache_hit_rate", Json::Num(report.planner.hit_rate())),
+            ("latency_p95_s", Json::Num(report.latency.p95())),
+            ("static_latency_p95_s", Json::Num(baseline.latency.p95())),
+            ("decisions_per_sec", Json::Num(report.decision_count as f64 / wall_s)),
+        ]));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("mobility_scale")),
+        ("smoke", Json::Bool(smoke)),
+        ("scenario", Json::str("city_mobile")),
+        ("model", Json::str("alexnet")),
+        ("runs", Json::Arr(runs)),
+    ]);
+    // Tracked at the repo root (next to BENCH_planner.json /
+    // BENCH_edge.json) so the perf trajectory is versioned;
+    // CARGO_MANIFEST_DIR keeps the location stable however cargo was
+    // invoked.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_mobility.json");
+    std::fs::write(&out, json.to_string_pretty())?;
+    println!("\nwrote {}", std::fs::canonicalize(&out)?.display());
+    Ok(())
+}

@@ -18,11 +18,11 @@ use anyhow::{Context, Result};
 use crate::coordinator::battery::BatteryBand;
 use crate::device::ComputeProfile;
 use crate::edge::SplitPlan;
-use crate::metrics::{Histogram, ThroughputMeter};
+use crate::metrics::{Histogram, PlannerStats, ThroughputMeter};
 use crate::models::zoo;
 use crate::netsim::Link;
 use crate::optimizer::{member_perf_model, Nsga2Params};
-use crate::planner::{PlanRequest, Planner, PlannerConfig, Strategy};
+use crate::planner::{PlanRequest, Planner, PlannerConfig, ReplanReason, Strategy};
 use crate::runtime::Tensor;
 use crate::serve::{CloudServer, DeviceClient};
 use crate::util::pool::ThreadPool;
@@ -83,6 +83,10 @@ pub struct FleetReport {
     pub throughput_rps: f64,
     pub latency: Histogram,
     pub members: Vec<MemberReport>,
+    /// Split-planner accounting from fleet start (spawn-tagged façade
+    /// requests; distinct member states share one solve) — the same
+    /// shape the simulator reports.
+    pub planner: PlannerStats,
 }
 
 impl FleetReport {
@@ -91,6 +95,10 @@ impl FleetReport {
         println!("  requests   : {} ok, {} errors in {:.2}s", self.completed, self.errors, self.elapsed_s);
         println!("  throughput : {:.3} req/s (fleet)", self.throughput_rps);
         println!("  latency    : {}", self.latency.summary());
+        println!(
+            "  planner    : {} solves, cache {} hits / {} misses",
+            self.planner.solves, self.planner.cache_hits, self.planner.cache_misses
+        );
         for m in &self.members {
             println!(
                 "  {:<14} @{:>6.1} Mbps  l1={:<2} served={:<4} E_client={:.2}J E_up={:.2}J M|l1={}",
@@ -109,6 +117,8 @@ pub struct Fleet {
     devices: Vec<Arc<FleetDevice>>,
     pool: ThreadPool,
     cfg: FleetConfig,
+    /// Planner accounting snapshotted after the start-up planning pass.
+    planner_stats: PlannerStats,
     accept_handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -142,6 +152,7 @@ impl Fleet {
                     m.bandwidth_mbps,
                     cfg.strategy,
                 )
+                .with_reason(ReplanReason::Spawn)
             })
             .collect();
         let mut presolved = planner.presolve_batch(&plan_pool, &requests);
@@ -188,7 +199,14 @@ impl Fleet {
             );
         }
         let pool = ThreadPool::new(devices.len());
-        Ok(Fleet { cloud, devices, pool, cfg, accept_handle: Some(accept_handle) })
+        Ok(Fleet {
+            cloud,
+            devices,
+            pool,
+            cfg,
+            planner_stats: stats,
+            accept_handle: Some(accept_handle),
+        })
     }
 
     /// Splits chosen per member (ordered as configured).
@@ -279,6 +297,7 @@ impl Fleet {
             throughput_rps: meter.completed() as f64 / start.elapsed().as_secs_f64(),
             latency,
             members,
+            planner: self.planner_stats,
         })
     }
 

@@ -67,14 +67,33 @@ pub struct EdgeSite {
 }
 
 /// How devices map onto edge sites.
+///
+/// Spawn placement takes only the device id (no position is known yet);
+/// mobility re-attachment ([`EdgeTopology::attach`]) feeds the cell the
+/// device walked into, and the policy maps that cell onto its serving
+/// site.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AssignmentPolicy {
     /// `device_id % sites` — the deterministic default (a city where
-    /// homes are spread uniformly over the metro footprint).
+    /// homes are spread uniformly over the metro footprint). Under
+    /// mobility a device standing in cell `c` attaches to site `c`
+    /// (one cell per site — see the cell geometry on
+    /// [`EdgeTopology`]).
     RoundRobin,
 }
 
 /// The full edge tier: sites plus the device→site assignment.
+///
+/// # Cell geometry
+///
+/// For mobility ([`crate::sim::mobility`]) the metro footprint is
+/// modelled as a 1-D ring of equal **cells**, one per site: cell `k` is
+/// the coverage area of site `k`, and walking off either end of the
+/// ring wraps around (a beltway city). The geometry helpers
+/// ([`EdgeTopology::cell_neighbors`], [`EdgeTopology::cell_distance`],
+/// [`EdgeTopology::step_toward`]) are pure functions of the site count,
+/// so the waypoint walk that uses them is deterministic by
+/// construction.
 #[derive(Clone, Debug)]
 pub struct EdgeTopology {
     pub sites: Vec<EdgeSite>,
@@ -88,15 +107,60 @@ impl EdgeTopology {
         EdgeTopology { sites: vec![site; sites], assignment: AssignmentPolicy::RoundRobin }
     }
 
-    /// Site index serving device `device_id`.
+    /// Site index serving device `device_id` at spawn (no position
+    /// known yet). Equivalent to [`EdgeTopology::attach`] with no cell.
     pub fn site_of(&self, device_id: usize) -> usize {
+        self.attach(device_id, None)
+    }
+
+    /// The attachment rule, shared by spawn placement and mobility
+    /// re-attachment: the site serving `device_id`, standing in `cell`
+    /// when one is known (`None` at spawn — the policy then places by
+    /// id alone).
+    pub fn attach(&self, device_id: usize, cell: Option<usize>) -> usize {
         match self.assignment {
-            AssignmentPolicy::RoundRobin => device_id % self.sites.len(),
+            AssignmentPolicy::RoundRobin => cell.unwrap_or(device_id) % self.sites.len(),
         }
     }
 
     pub fn num_sites(&self) -> usize {
         self.sites.len()
+    }
+
+    /// Number of mobility cells — one per site (cell `k` is site `k`'s
+    /// coverage area).
+    pub fn num_cells(&self) -> usize {
+        self.sites.len()
+    }
+
+    /// The ring neighbours `(counter-clockwise, clockwise)` of `cell`.
+    /// Degenerate rings fold onto themselves: with one cell both
+    /// neighbours are the cell itself, with two they coincide.
+    pub fn cell_neighbors(&self, cell: usize) -> (usize, usize) {
+        let n = self.num_cells();
+        ((cell + n - 1) % n, (cell + 1) % n)
+    }
+
+    /// Minimum number of cell crossings between `a` and `b` on the ring.
+    pub fn cell_distance(&self, a: usize, b: usize) -> usize {
+        let n = self.num_cells();
+        let fwd = (b + n - a) % n;
+        fwd.min(n - fwd)
+    }
+
+    /// The next cell on a shortest ring path from `from` to `to`
+    /// (`from` itself when they are equal; an exact-opposite tie breaks
+    /// clockwise, so the walk is deterministic).
+    pub fn step_toward(&self, from: usize, to: usize) -> usize {
+        let n = self.num_cells();
+        let fwd = (to + n - from) % n;
+        if fwd == 0 {
+            from
+        } else if fwd <= n - fwd {
+            (from + 1) % n
+        } else {
+            (from + n - 1) % n
+        }
     }
 }
 
@@ -118,6 +182,88 @@ mod tests {
         assert!(BackhaulLink::FREE.is_free());
         assert_eq!(BackhaulLink::FREE.transfer_s(10_000_000), 0.0);
         assert!(!BackhaulLink::METRO_1GBE.is_free());
+    }
+
+    #[test]
+    fn cell_ring_geometry_is_coherent() {
+        let topo = EdgeTopology::uniform(
+            5,
+            EdgeSite {
+                servers: 1,
+                profile: profiles::edge_server(),
+                backhaul: BackhaulLink::METRO_1GBE,
+            },
+        );
+        assert_eq!(topo.num_cells(), 5);
+        assert_eq!(topo.cell_neighbors(0), (4, 1));
+        assert_eq!(topo.cell_neighbors(4), (3, 0));
+        // Distance is symmetric, zero on the diagonal, wraps the ring.
+        for a in 0..5 {
+            assert_eq!(topo.cell_distance(a, a), 0);
+            for b in 0..5 {
+                assert_eq!(topo.cell_distance(a, b), topo.cell_distance(b, a));
+                assert!(topo.cell_distance(a, b) <= 2);
+            }
+        }
+        assert_eq!(topo.cell_distance(0, 4), 1, "the ring must wrap");
+        // Stepping toward a waypoint strictly shrinks the distance and
+        // arrives in exactly `cell_distance` hops.
+        for from in 0..5 {
+            for to in 0..5 {
+                let mut cur = from;
+                let mut hops = 0;
+                while cur != to {
+                    let next = topo.step_toward(cur, to);
+                    assert!(
+                        topo.cell_distance(next, to) < topo.cell_distance(cur, to),
+                        "step {cur}→{next} toward {to} did not shrink the distance"
+                    );
+                    cur = next;
+                    hops += 1;
+                    assert!(hops <= 5, "walk {from}→{to} failed to terminate");
+                }
+                assert_eq!(hops, topo.cell_distance(from, to));
+            }
+        }
+        assert_eq!(topo.step_toward(2, 2), 2, "a reached waypoint is a fixed point");
+    }
+
+    #[test]
+    fn degenerate_rings_fold_onto_themselves() {
+        let site = EdgeSite {
+            servers: 1,
+            profile: profiles::edge_server(),
+            backhaul: BackhaulLink::METRO_1GBE,
+        };
+        let one = EdgeTopology::uniform(1, site);
+        assert_eq!(one.cell_neighbors(0), (0, 0));
+        assert_eq!(one.step_toward(0, 0), 0);
+        assert_eq!(one.cell_distance(0, 0), 0);
+        let two = EdgeTopology::uniform(2, site);
+        assert_eq!(two.cell_neighbors(0), (1, 1));
+        assert_eq!(two.step_toward(0, 1), 1);
+        assert_eq!(two.cell_distance(0, 1), 1);
+    }
+
+    #[test]
+    fn attach_matches_spawn_placement_and_follows_cells() {
+        let topo = EdgeTopology::uniform(
+            3,
+            EdgeSite {
+                servers: 2,
+                profile: profiles::edge_server(),
+                backhaul: BackhaulLink::METRO_1GBE,
+            },
+        );
+        for d in 0..9 {
+            // Spawn placement (no cell) is the round-robin rule.
+            assert_eq!(topo.attach(d, None), topo.site_of(d));
+            // A known cell overrides the id: the device attaches to the
+            // site whose coverage area it stands in.
+            for cell in 0..3 {
+                assert_eq!(topo.attach(d, Some(cell)), cell);
+            }
+        }
     }
 
     #[test]

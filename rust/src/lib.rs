@@ -27,7 +27,27 @@
 //! functions it superseded are deprecated shims kept for the parity
 //! tests.
 //!
-//! See [DESIGN.md](../DESIGN.md) for the architecture, the offline
+//! # Module map
+//!
+//! Mirrors `rust/DESIGN.md` §1 (the in-code comments cite that document
+//! by section number):
+//!
+//! | Module | What lives there |
+//! |---|---|
+//! | [`models`] | Layer-spec algebra, the five-model zoo, artifact manifests |
+//! | [`perfmodel`] | The paper's §III latency/energy models and §IV objectives |
+//! | [`optimizer`] | NSGA-II (flat-SoA, zero-alloc), TOPSIS, baselines, scalarisations, the split-plan cache |
+//! | [`planner`] | The façade: `PlanRequest → PlanOutcome`, strategies, replan-reason provenance |
+//! | [`edge`] | Three-tier `(l1, l2)` splitting: topology + cell geometry, tiered §III tables, 2-D genome |
+//! | [`device`], [`netsim`] | Smartphone/cloud compute profiles and the token-bucket WiFi link |
+//! | [`runtime`] | PJRT executor over the python-AOT per-layer HLO artifacts |
+//! | [`serve`], [`coordinator`] | Framed TCP serving stack; live deployments, battery bands, the N-phone fleet |
+//! | [`sim`] | Discrete-event fleet simulator: virtual clock, M/G/c tiers, mobility + edge handover, scenarios |
+//! | [`workload`], [`metrics`], [`figures`], [`bench`] | Arrival processes, histograms/planner counters, paper exhibits, bench harness |
+//! | [`util`] | Offline substrates: CLI, PRNG, JSON, property testing, thread pool |
+//!
+//! See the repo-root `README.md` for the quickstart and
+//! [DESIGN.md](../DESIGN.md) for the architecture, the offline
 //! substrate policy (§4), and the paper-vs-model validation story.
 
 pub mod bench;

@@ -59,7 +59,7 @@ fn cli() -> Cli {
     .opt("pop", "100", "NSGA-II population size")
     .opt("gens", "250", "NSGA-II generations")
     .opt("seed", "7", "PRNG seed")
-    .opt("scenario", "city", "simulate: city | city-tiered | two-phone")
+    .opt("scenario", "city", "simulate: city | city-tiered | city-mobile | two-phone")
     .opt("devices", "10000", "simulate: fleet size (city scenario)")
     .opt("sim-duration", "10m", "simulate: virtual horizon (90, 90s, 10m, 2h)")
     .opt("clouds", "0", "simulate: cloud count override (0 = scenario default)")
@@ -67,6 +67,8 @@ fn cli() -> Cli {
     .opt("edge-sites", "0", "simulate: metro edge sites (0 = scenario default: none, or 3 for city-tiered)")
     .opt("edge-servers", "4", "simulate: torso servers per edge site")
     .opt("backhaul", "1000", "simulate: edge→cloud backhaul bandwidth in Mbps")
+    .opt("mobility", "scenario", "simulate: device mobility: static | waypoint (scenario = the preset's choice; city-mobile walks by default)")
+    .opt("handover-cost", "0.05", "simulate: fixed control-plane cost per edge handover in seconds (torso-state relay over the old backhaul is charged on top)")
     .flag("no-churn", "simulate: disable device churn")
     .flag("no-slowdown", "disable phone-speed emulation")
     .flag("verbose", "log at info level")
@@ -207,6 +209,13 @@ fn run(args: &[String]) -> Result<()> {
                     duration,
                     cfg.seed,
                 ),
+                "city-mobile" => sim::city_mobile(
+                    &cfg.model,
+                    parsed.get_usize("devices"),
+                    if edge_sites > 0 { edge_sites } else { 3 },
+                    duration,
+                    cfg.seed,
+                ),
                 "two-phone" => {
                     // Fleet-simulation default: the small split genome
                     // needs nowhere near the canonical 100×250 budget, so
@@ -228,7 +237,9 @@ fn run(args: &[String]) -> Result<()> {
                     c.duration_s = duration;
                     c
                 }
-                other => bail!("unknown --scenario {other:?} (city | city-tiered | two-phone)"),
+                other => bail!(
+                    "unknown --scenario {other:?} (city | city-tiered | city-mobile | two-phone)"
+                ),
             };
             if parsed.get_usize("clouds") > 0 {
                 sim_cfg.clouds = parsed.get_usize("clouds");
@@ -254,6 +265,24 @@ fn run(args: &[String]) -> Result<()> {
                     parsed.get_usize("edge-servers"),
                     parsed.get_f64("backhaul"),
                 ));
+            }
+            // --mobility overrides the preset's mobility model on any
+            // scenario with an edge tier (city-mobile walks by default;
+            // `--mobility static` freezes it back into the byte-exact
+            // immobile replay). --handover-cost tunes the fixed
+            // control-plane part of each handover.
+            if parsed.provided("mobility") {
+                sim_cfg.mobility = match parsed.get("mobility").to_ascii_lowercase().as_str() {
+                    "static" => sim::Mobility::Static,
+                    "waypoint" => {
+                        sim::Mobility::Waypoint(sim::WaypointWalk::city_default(duration))
+                    }
+                    "scenario" => sim_cfg.mobility,
+                    other => bail!("unknown --mobility {other:?} (static | waypoint)"),
+                };
+            }
+            if parsed.provided("handover-cost") {
+                sim_cfg.handover_cost_s = parsed.get_f64("handover-cost");
             }
             // --planner overrides the scenario's default strategy
             // (city presets default to Topsis, two-phone to SmartSplit);
@@ -288,7 +317,7 @@ fn run(args: &[String]) -> Result<()> {
                 sim_cfg.churn = None;
             }
             println!(
-                "simulating {} device(s) of {} for {:.0}s virtual (seed {}{})...",
+                "simulating {} device(s) of {} for {:.0}s virtual (seed {}{}{})...",
                 sim_cfg.fleet.initial_count(),
                 sim_cfg.model,
                 sim_cfg.duration_s,
@@ -299,6 +328,11 @@ fn run(args: &[String]) -> Result<()> {
                         e.sites, e.servers_per_site, e.backhaul.bandwidth_mbps
                     ),
                     None => String::new(),
+                },
+                if sim_cfg.mobility.is_mobile() {
+                    format!(", waypoint mobility @ {:.0} ms handover", sim_cfg.handover_cost_s * 1e3)
+                } else {
+                    String::new()
                 },
             );
             let report = sim::run(&sim_cfg)?;

@@ -1,6 +1,7 @@
 //! Serving metrics: latency histogram (HDR-style log-bucketed), throughput
 //! meter, per-request split accounting, and split-planner counters
-//! (solves / cache hits / cache misses for the fleet planner layer).
+//! (solves / cache hits / cache misses / per-reason request tallies for
+//! the fleet planner layer).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -161,15 +162,25 @@ impl Histogram {
     }
 }
 
+/// Number of request-reason counter slots (one per
+/// `planner::ReplanReason` variant; see
+/// [`PlannerStats::requests_by_reason`]).
+pub const REPLAN_REASONS: usize = 4;
+
 /// Split-planner accounting: how many full optimiser solves actually ran
-/// versus how many decisions the plan cache served. Atomic so the
-/// parallel re-solve fan-out ([`crate::optimizer::cache`],
+/// versus how many decisions the plan cache served, plus a per-reason
+/// request tally (spawn / drift / band crossing / migration). Atomic so
+/// the parallel re-solve fan-out ([`crate::optimizer::cache`],
 /// `sim::on_reoptimize`) can record from worker threads.
 #[derive(Debug, Default)]
 pub struct PlannerCounters {
     hits: AtomicU64,
     misses: AtomicU64,
     solves: AtomicU64,
+    /// Requests per replan reason, indexed by
+    /// `planner::ReplanReason::index()` (this module stays
+    /// reason-agnostic: the façade passes the slot).
+    reasons: [AtomicU64; REPLAN_REASONS],
 }
 
 /// One consistent snapshot of [`PlannerCounters`].
@@ -178,6 +189,12 @@ pub struct PlannerStats {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub solves: u64,
+    /// Planner requests per replan reason, indexed by
+    /// `planner::ReplanReason::index()`:
+    /// `[spawn, drift, band, migration]`. This is how migration
+    /// re-solves (edge handover) are accounted distinctly from
+    /// battery-band and drift re-splits.
+    pub requests_by_reason: [u64; REPLAN_REASONS],
 }
 
 impl PlannerStats {
@@ -188,6 +205,12 @@ impl PlannerStats {
             return 0.0;
         }
         self.cache_hits as f64 / total as f64
+    }
+
+    /// Requests prompted by an edge handover
+    /// ([`crate::planner::ReplanReason::Migration`]).
+    pub fn migration_requests(&self) -> u64 {
+        self.requests_by_reason[crate::planner::ReplanReason::Migration.index()]
     }
 }
 
@@ -209,11 +232,25 @@ impl PlannerCounters {
         self.solves.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A planner request arrived for reason slot `idx`
+    /// (`planner::ReplanReason::index()`). An out-of-range slot — a
+    /// `ReplanReason` variant added without bumping [`REPLAN_REASONS`]
+    /// — panics loudly rather than silently folding into another
+    /// reason's tally.
+    pub fn record_reason(&self, idx: usize) {
+        self.reasons[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> PlannerStats {
+        let mut requests_by_reason = [0u64; REPLAN_REASONS];
+        for (slot, a) in requests_by_reason.iter_mut().zip(&self.reasons) {
+            *slot = a.load(Ordering::Relaxed);
+        }
         PlannerStats {
             cache_hits: self.hits.load(Ordering::Relaxed),
             cache_misses: self.misses.load(Ordering::Relaxed),
             solves: self.solves.load(Ordering::Relaxed),
+            requests_by_reason,
         }
     }
 }
@@ -378,6 +415,19 @@ mod tests {
         let s = c.snapshot();
         assert_eq!((s.cache_hits, s.cache_misses, s.solves), (3, 1, 1));
         assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(s.requests_by_reason, [0; REPLAN_REASONS]);
+    }
+
+    #[test]
+    fn planner_counters_tally_requests_per_reason_slot() {
+        let c = PlannerCounters::new();
+        c.record_reason(0); // spawn
+        c.record_reason(0);
+        c.record_reason(1); // drift
+        c.record_reason(3); // migration
+        let s = c.snapshot();
+        assert_eq!(s.requests_by_reason, [2, 1, 0, 1]);
+        assert_eq!(s.migration_requests(), 1);
     }
 
     #[test]

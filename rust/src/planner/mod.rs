@@ -43,7 +43,7 @@ use crate::util::pool::ThreadPool;
 use crate::util::rng::SplitMix64;
 
 pub use outcome::{CacheOutcome, PlanOutcome, Provenance};
-pub use request::{PlanRequest, Strategy, TierContext};
+pub use request::{PlanRequest, ReplanReason, Strategy, TierContext};
 
 /// How the solve seed is derived for a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -212,6 +212,7 @@ impl Planner {
         req: &PlanRequest,
         presolved: &mut HashMap<PlanKey, Option<SplitPlan>>,
     ) -> Option<SplitPlan> {
+        self.cache.counters().record_reason(req.reason.index());
         let (key, site) = self.state(req);
         let bw_q = key.bw_mbps();
         let seed = self.seed_for(&key, req.run);
@@ -249,6 +250,7 @@ impl Planner {
         req: &PlanRequest,
         presolved: &mut HashMap<PlanKey, Option<SplitPlan>>,
     ) -> PlanOutcome {
+        self.cache.counters().record_reason(req.reason.index());
         let (key, site) = self.state(req);
         let bw_q = key.bw_mbps();
         let seed = self.seed_for(&key, req.run);
@@ -302,6 +304,7 @@ impl Planner {
                 strategy: req.strategy,
                 kind: key.kind,
                 cache,
+                reason: req.reason,
                 derived_seed: seed,
                 quantized_bw_mbps: bw_q,
                 evaluations,
@@ -444,6 +447,32 @@ mod tests {
         }
         assert_eq!(full.stats(), fast.stats());
         assert_eq!(full.cache_len(), fast.cache_len());
+    }
+
+    #[test]
+    fn replan_reason_is_provenance_not_planner_state() {
+        // A migration re-solve of an already-planned state must be a
+        // cache hit (the reason is not in the key), while the per-reason
+        // request tallies keep migration asks distinct from spawns.
+        let planner = Planner::new(PlannerConfig::fleet(Nsga2Params::for_tiny_genome(), 7));
+        let spawn = req(Strategy::Topsis, 10.0);
+        let migration = spawn.clone().with_reason(ReplanReason::Migration);
+        assert_eq!(planner.key(&spawn), planner.key(&migration));
+
+        let first = planner.plan(&spawn);
+        assert_eq!(first.provenance.cache, CacheOutcome::Miss);
+        assert_eq!(first.provenance.reason, ReplanReason::Spawn);
+        let second = planner.plan(&migration);
+        assert_eq!(second.provenance.cache, CacheOutcome::Hit);
+        assert_eq!(second.provenance.reason, ReplanReason::Migration);
+        assert_eq!(first.plan, second.plan);
+
+        let stats = planner.stats();
+        assert_eq!(stats.requests_by_reason[ReplanReason::Spawn.index()], 1);
+        assert_eq!(stats.requests_by_reason[ReplanReason::Migration.index()], 1);
+        assert_eq!(stats.migration_requests(), 1);
+        assert_eq!(stats.requests_by_reason.iter().sum::<u64>(), 2);
+        assert_eq!(planner.cache_len(), 1, "reason must never fragment the cache");
     }
 
     #[test]

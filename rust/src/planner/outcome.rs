@@ -5,7 +5,7 @@
 use crate::edge::SplitPlan;
 use crate::optimizer::{PlanKey, PlannerKind};
 
-use super::request::Strategy;
+use super::request::{ReplanReason, Strategy};
 
 /// How the plan was served relative to the planner's memo table.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -28,6 +28,11 @@ pub struct Provenance {
     /// Cache-key tag ([`PlanKey::kind`]) the decision was stored under.
     pub kind: PlannerKind,
     pub cache: CacheOutcome,
+    /// Why the consumer asked (spawn / drift / band crossing /
+    /// migration) — copied from the request, never part of the key:
+    /// a migration re-solve landing on an already-planned state is a
+    /// [`CacheOutcome::Hit`] on purpose.
+    pub reason: ReplanReason,
     /// The full quantised planner state this decision keys on.
     pub key: PlanKey,
     /// The seed the solve ran with (key-derived in fleet configs, the

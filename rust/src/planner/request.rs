@@ -145,6 +145,60 @@ impl From<Algorithm> for Strategy {
     }
 }
 
+/// Why a consumer is asking for a (re-)plan. **Provenance, not planner
+/// state**: the reason is deliberately *not* part of the
+/// [`crate::optimizer::PlanKey`] — two devices in the same quantised
+/// state must share one cached plan whatever prompted the ask, so a
+/// migration re-solve that lands on an already-planned `(state, site)`
+/// key is a cache hit, not a fresh solve. Requests are tallied per
+/// reason in [`crate::metrics::PlannerCounters`] (surfaced as
+/// [`crate::metrics::PlannerStats::requests_by_reason`], indexed by
+/// [`ReplanReason::index`]), which is how migration re-solves are
+/// accounted distinctly from battery-band re-splits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReplanReason {
+    /// First plan of a device's life (spawn, fleet start, a one-shot
+    /// `optimize` call). The default.
+    Spawn,
+    /// Periodic re-optimisation sweep: link bandwidth or battery band
+    /// drifted past the threshold.
+    Drift,
+    /// Event-driven battery trigger: a request's drain crossed a
+    /// [`BatteryBand`] boundary.
+    BandCrossing,
+    /// Edge handover: the device re-attached to a different site and
+    /// re-plans with the new [`TierContext`].
+    Migration,
+}
+
+impl ReplanReason {
+    pub const ALL: [ReplanReason; 4] = [
+        ReplanReason::Spawn,
+        ReplanReason::Drift,
+        ReplanReason::BandCrossing,
+        ReplanReason::Migration,
+    ];
+
+    /// Stable slot in [`crate::metrics::PlannerStats::requests_by_reason`].
+    pub fn index(self) -> usize {
+        match self {
+            ReplanReason::Spawn => 0,
+            ReplanReason::Drift => 1,
+            ReplanReason::BandCrossing => 2,
+            ReplanReason::Migration => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplanReason::Spawn => "spawn",
+            ReplanReason::Drift => "drift",
+            ReplanReason::BandCrossing => "band",
+            ReplanReason::Migration => "migration",
+        }
+    }
+}
+
 /// The edge-tier context of a request: which site the device is
 /// assigned to and everything about that site a tiered solve depends
 /// on. `None` in the request plans the paper's two-tier split — the
@@ -188,6 +242,9 @@ pub struct PlanRequest {
     /// seed and bypasses the cache — how the paper exhibits average
     /// [`Strategy::Rs`] over N runs.
     pub run: u64,
+    /// Why this plan is being asked for — provenance and accounting
+    /// only, never part of the cache key (see [`ReplanReason`]).
+    pub reason: ReplanReason,
 }
 
 impl PlanRequest {
@@ -199,7 +256,16 @@ impl PlanRequest {
         bandwidth_mbps: f64,
         strategy: Strategy,
     ) -> PlanRequest {
-        PlanRequest { model, profile, band, bandwidth_mbps, tier: None, strategy, run: 0 }
+        PlanRequest {
+            model,
+            profile,
+            band,
+            bandwidth_mbps,
+            tier: None,
+            strategy,
+            run: 0,
+            reason: ReplanReason::Spawn,
+        }
     }
 
     /// This request planned against an edge site.
@@ -211,6 +277,13 @@ impl PlanRequest {
     /// This request as independent run `run` (see [`PlanRequest::run`]).
     pub fn with_run(mut self, run: u64) -> PlanRequest {
         self.run = run;
+        self
+    }
+
+    /// This request tagged with why it is being asked (see
+    /// [`ReplanReason`] — provenance only, never the cache key).
+    pub fn with_reason(mut self, reason: ReplanReason) -> PlanRequest {
+        self.reason = reason;
         self
     }
 }
@@ -247,6 +320,21 @@ mod tests {
     fn algorithm_embedding_preserves_names() {
         for a in Algorithm::ALL {
             assert_eq!(Strategy::from(a).name(), a.name());
+        }
+    }
+
+    #[test]
+    fn replan_reasons_index_their_counter_slots_bijectively() {
+        // The metrics module sizes its per-reason counter array from
+        // REPLAN_REASONS; a variant added here without bumping it would
+        // panic at the first record — this pins the two in lockstep.
+        assert_eq!(ReplanReason::ALL.len(), crate::metrics::REPLAN_REASONS);
+        let idx: std::collections::HashSet<usize> =
+            ReplanReason::ALL.iter().map(|r| r.index()).collect();
+        assert_eq!(idx.len(), ReplanReason::ALL.len());
+        for r in ReplanReason::ALL {
+            assert!(r.index() < ReplanReason::ALL.len(), "{:?} indexes out of range", r);
+            assert_eq!(ReplanReason::ALL[r.index()], r, "ALL must be index-ordered");
         }
     }
 }

@@ -7,10 +7,13 @@
 //! equivalence is asserted by `tests/sim_determinism.rs` against the
 //! 2-phone fleet.
 //!
-//! A device under an edge topology carries its static
+//! A device under an edge topology carries its current
 //! [`EdgeAttachment`] (assigned site, site profile, backhaul), and its
 //! [`SplitPlan`] may put torso layers there; with no attachment every
-//! plan is the paper's two-tier split (`l1 == l2`).
+//! plan is the paper's two-tier split (`l1 == l2`). Under mobility
+//! ([`crate::sim::mobility`]) the attachment changes over the run —
+//! each request captures its hop costs *and* its site at issue time, so
+//! in-flight work never sees a later re-split or re-attachment.
 
 use std::collections::VecDeque;
 
@@ -65,8 +68,10 @@ impl Planner {
     }
 }
 
-/// A device's static place in the edge topology: which site serves it
-/// and what that site looks like (for the §III-tiered cost tables).
+/// A device's place in the edge topology: which site serves it and
+/// what that site looks like (for the §III-tiered cost tables). Fixed
+/// for the device's life under [`crate::sim::Mobility::Static`];
+/// replaced by each completed handover under a waypoint walk.
 #[derive(Clone, Copy, Debug)]
 pub struct EdgeAttachment {
     pub site: usize,
@@ -133,6 +138,11 @@ pub struct SimDevice {
 pub struct DeviceCost {
     pub head_s: f64,
     pub upload_s: f64,
+    /// Edge site attached when the request was issued (`None` without
+    /// an edge tier). In-flight work routes to *this* site even if a
+    /// mobility handover re-attaches the device mid-flight — the
+    /// handover cost charges the state relay instead.
+    pub edge_site: Option<usize>,
     /// Torso service time at the edge site (0 for two-tier plans).
     pub torso_s: f64,
     /// Edge→cloud backhaul transfer time (0 for two-tier plans).
@@ -386,6 +396,7 @@ impl SimDevice {
         Some(DeviceCost {
             head_s,
             upload_s,
+            edge_site: self.edge.as_ref().map(|e| e.site),
             torso_s: self.torso_s,
             backhaul_s: self.backhaul_s,
             tail_s: self.tail_s,
@@ -540,6 +551,8 @@ mod tests {
         assert_eq!(cost.torso_s, d.torso_s());
         assert_eq!(cost.backhaul_s, d.backhaul_s);
         assert_eq!(cost.tail_s, d.service_s());
+        // The issue-time site rides along too (mobility routing).
+        assert_eq!(cost.edge_site, Some(0));
     }
 
     #[test]

@@ -20,16 +20,20 @@ pub enum Event {
     /// A device finished head compute + activation upload; the request
     /// reaches the next tier (its edge site's torso queue, or directly
     /// the cloud when the plan has no torso). `issued` is the original
-    /// arrival time; the per-hop costs are captured at issue (a re-split
-    /// mid-flight must not change in-flight work): `torso_s` edge
-    /// service, `backhaul_s` edge→cloud transfer, `tail_s` cloud
-    /// service. Two-tier plans carry `torso_s == 0` — but an
-    /// edge-attached device still relays through its site, so its
-    /// `backhaul_s` is 0 only when the backhaul itself is free (the
-    /// degenerate-parity condition) or the tail is empty.
+    /// arrival time; the per-hop costs — and `site`, the edge
+    /// attachment — are captured at issue (a re-split or a mobility
+    /// re-attachment mid-flight must not change in-flight work):
+    /// `torso_s` edge service at `site`, `backhaul_s` edge→cloud
+    /// transfer, `tail_s` cloud service. Two-tier plans carry
+    /// `torso_s == 0` — but an edge-attached device still relays
+    /// through its site, so its `backhaul_s` is 0 only when the
+    /// backhaul itself is free (the degenerate-parity condition) or the
+    /// tail is empty. `site` is `None` for devices with no edge
+    /// attachment (and then `torso_s == 0` always).
     Uplinked {
         device: usize,
         issued: SimTime,
+        site: Option<usize>,
         torso_s: f64,
         backhaul_s: f64,
         tail_s: f64,
@@ -47,6 +51,21 @@ pub enum Event {
     CloudArrive { device: usize, issued: SimTime, tail_s: f64 },
     /// A cloud server finished the tail layers of this device's request.
     CloudDone { cloud: usize, device: usize, issued: SimTime },
+    /// Mobility tick: advance this device's waypoint walk one step
+    /// ([`crate::sim::mobility::Walker::step`]). A tick that crosses
+    /// into another site's cell begins an edge handover — the in-flight
+    /// torso state is relayed over the old site's backhaul — and
+    /// schedules [`Event::Reattach`] at the relay's completion.
+    Handover { device: usize },
+    /// Edge handover complete: the device attaches to `site` and
+    /// re-plans its split with the new tier context (a *migration*
+    /// re-solve, accounted via
+    /// [`crate::planner::ReplanReason::Migration`]). `seq` is the
+    /// device's handover sequence number at scheduling time: relay
+    /// delays vary per crossing, so re-attachments can land out of
+    /// order, and only the event matching the device's *latest*
+    /// crossing may apply — stale ones are dropped.
+    Reattach { device: usize, site: usize, seq: u64 },
     /// Periodic fleet sweep: re-run the split optimiser for devices whose
     /// bandwidth or battery band drifted.
     Reoptimize,

@@ -1,0 +1,256 @@
+//! Device mobility: a deterministic per-device waypoint walk over the
+//! edge topology's site cells — the workload axis the paper's
+//! conclusion flags ("time-varying bandwidth ... the crucial
+//! parameter") but its fixed two-phone testbed cannot exercise.
+//!
+//! The metro footprint is the 1-D ring of cells the
+//! [`EdgeTopology`] defines (one cell per site; see
+//! `edge/topology.rs`). Each mobile device runs its own
+//! random-waypoint state machine ([`Walker`]): pause at the current
+//! cell, pick a waypoint cell uniformly, walk toward it one cell per
+//! hop along the shortest arc, pause again, repeat. Every hop that
+//! crosses into another site's cell begins an **edge handover** in the
+//! simulator: the in-flight torso state is relayed over the *old*
+//! site's backhaul (plus a fixed control-plane cost), the device
+//! re-attaches via the topology's assignment rule, and its split is
+//! re-planned through the planner façade with the new
+//! [`crate::planner::TierContext`] — a migration re-solve, accounted
+//! distinctly from battery/drift re-splits via
+//! [`crate::planner::ReplanReason::Migration`].
+//!
+//! # Determinism contract
+//!
+//! * [`Mobility::Static`] schedules **no** events and draws **no**
+//!   randomness: a Static run replays the corresponding immobile
+//!   scenario byte-for-byte (`tests/edge_parity.rs` pins
+//!   `city_mobile`-frozen-Static against `city_scale_tiered`).
+//! * Each [`Walker`] owns a private RNG stream derived from
+//!   `(scenario seed, device id)`, so mobility never perturbs the
+//!   scenario RNG (spawn order, arrival sampling) and the walk is
+//!   identical whatever the planner fan-out or thread count does.
+
+use crate::edge::EdgeTopology;
+use crate::util::rng::{SplitMix64, Xoshiro256};
+
+/// Shortest dwell between two mobility events of one device, seconds —
+/// a floor against degenerate configs scheduling zero-interval event
+/// storms.
+const MIN_DWELL_S: f64 = 1e-3;
+
+/// Random-waypoint walk parameters (per scenario; every mobile device
+/// draws from these ranges out of its own RNG stream).
+#[derive(Clone, Copy, Debug)]
+pub struct WaypointWalk {
+    /// Mean pause at a reached waypoint before picking the next one,
+    /// seconds (exponentially distributed).
+    pub pause_mean_s: f64,
+    /// Time to cross one cell, drawn uniformly from this range per hop,
+    /// seconds.
+    pub cell_crossing_s: (f64, f64),
+}
+
+impl WaypointWalk {
+    /// City preset scaled to the virtual horizon: a device pauses
+    /// ~`duration/12` between legs and crosses a cell in
+    /// `duration/60 .. duration/30`, so a full run sees several
+    /// handovers per mobile device without the walk dominating the
+    /// event budget.
+    pub fn city_default(duration_s: f64) -> WaypointWalk {
+        let d = duration_s.max(1.0);
+        WaypointWalk { pause_mean_s: d / 12.0, cell_crossing_s: (d / 60.0, d / 30.0) }
+    }
+}
+
+/// How devices move between edge-site cells over a run.
+#[derive(Clone, Copy, Debug)]
+pub enum Mobility {
+    /// Devices never move — the pre-mobility world. Schedules no
+    /// events, draws no randomness: a Static run is byte-identical to
+    /// the immobile scenario it froze.
+    Static,
+    /// Per-device random-waypoint walk over the topology's site cells
+    /// (requires an edge tier — there is nothing to hand over between
+    /// otherwise).
+    Waypoint(WaypointWalk),
+}
+
+impl Mobility {
+    /// Does this model ever move a device?
+    pub fn is_mobile(&self) -> bool {
+        matches!(self, Mobility::Waypoint(_))
+    }
+}
+
+/// One device's walk state: its private RNG stream, the cell it stands
+/// in, and the waypoint it is heading for (if any).
+#[derive(Debug)]
+pub struct Walker {
+    rng: Xoshiro256,
+    cell: usize,
+    waypoint: Option<usize>,
+}
+
+impl Walker {
+    /// A walker for device `device` starting in `cell`. The RNG stream
+    /// is derived from `(seed, device)` so it is private to this device
+    /// — mobility draws must not perturb the scenario RNG (Static
+    /// parity) and must not depend on event interleaving.
+    pub fn new(seed: u64, device: usize, cell: usize) -> Walker {
+        let stream = SplitMix64::new(
+            seed ^ (device as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        )
+        .next_u64();
+        Walker { rng: Xoshiro256::seed_from_u64(stream), cell, waypoint: None }
+    }
+
+    /// The cell this device currently stands in.
+    pub fn cell(&self) -> usize {
+        self.cell
+    }
+
+    /// Advance the walk one tick. Returns `(dwell_s, crossed)`:
+    /// `dwell_s` is the time until this device's next mobility tick,
+    /// and `crossed` is `Some(new_cell)` when this tick stepped into
+    /// another cell (the caller checks whether the serving site changed
+    /// and, if so, runs the handover). Ticks that pause or pick a new
+    /// waypoint return `None`.
+    pub fn step(&mut self, topo: &EdgeTopology, walk: &WaypointWalk) -> (f64, Option<usize>) {
+        match self.waypoint {
+            Some(w) if w != self.cell => {
+                let next = topo.step_toward(self.cell, w);
+                self.cell = next;
+                if next == w {
+                    // Arrived: the next tick pauses and re-aims.
+                    self.waypoint = None;
+                }
+                let (lo, hi) = walk.cell_crossing_s;
+                let dt = lo + (hi - lo).max(0.0) * self.rng.next_f64();
+                (dt.max(MIN_DWELL_S), Some(next))
+            }
+            _ => {
+                // At a waypoint (or freshly spawned): pause, then aim
+                // somewhere — possibly the current cell, which is a
+                // longer stay.
+                self.waypoint = Some(self.rng.gen_range(0, topo.num_cells() - 1));
+                let pause = if walk.pause_mean_s > 0.0 {
+                    self.rng.next_exp(1.0 / walk.pause_mean_s)
+                } else {
+                    MIN_DWELL_S
+                };
+                (pause.max(MIN_DWELL_S), None)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::edge::{BackhaulLink, EdgeSite};
+
+    fn topo(sites: usize) -> EdgeTopology {
+        EdgeTopology::uniform(
+            sites,
+            EdgeSite {
+                servers: 1,
+                profile: profiles::edge_server(),
+                backhaul: BackhaulLink::METRO_1GBE,
+            },
+        )
+    }
+
+    fn walk() -> WaypointWalk {
+        WaypointWalk { pause_mean_s: 10.0, cell_crossing_s: (2.0, 4.0) }
+    }
+
+    #[test]
+    fn walker_is_deterministic_per_seed_and_device() {
+        let t = topo(5);
+        let w = walk();
+        let mut a = Walker::new(7, 3, 3 % 5);
+        let mut b = Walker::new(7, 3, 3 % 5);
+        for _ in 0..200 {
+            assert_eq!(a.step(&t, &w), b.step(&t, &w));
+            assert_eq!(a.cell(), b.cell());
+        }
+    }
+
+    #[test]
+    fn device_streams_are_independent() {
+        // Two devices with the same scenario seed must walk different
+        // paths (their streams are keyed by device id).
+        let t = topo(5);
+        let w = walk();
+        let mut a = Walker::new(7, 0, 0);
+        let mut b = Walker::new(7, 1, 0);
+        let mut diverged = false;
+        for _ in 0..100 {
+            a.step(&t, &w);
+            b.step(&t, &w);
+            if a.cell() != b.cell() {
+                diverged = true;
+            }
+        }
+        assert!(diverged, "device streams never diverged");
+    }
+
+    #[test]
+    fn walk_visits_other_cells_and_stays_in_bounds() {
+        let t = topo(4);
+        let w = walk();
+        let mut walker = Walker::new(42, 0, 0);
+        let mut visited = std::collections::HashSet::new();
+        let mut virtual_t = 0.0;
+        for _ in 0..400 {
+            let (dwell, crossed) = walker.step(&t, &w);
+            assert!(dwell >= MIN_DWELL_S && dwell.is_finite());
+            virtual_t += dwell;
+            if let Some(c) = crossed {
+                assert!(c < t.num_cells(), "walked off the ring: {c}");
+                assert_eq!(c, walker.cell());
+                visited.insert(c);
+            }
+        }
+        assert!(virtual_t > 0.0);
+        assert!(visited.len() >= 2, "walk never left its spawn cell: {visited:?}");
+    }
+
+    #[test]
+    fn crossings_are_single_hops() {
+        // Every crossing moves to a ring neighbour — the walk cannot
+        // teleport over a site.
+        let t = topo(6);
+        let w = walk();
+        let mut walker = Walker::new(9, 2, 2);
+        let mut prev = walker.cell();
+        for _ in 0..300 {
+            let (_, crossed) = walker.step(&t, &w);
+            if let Some(c) = crossed {
+                assert_eq!(t.cell_distance(prev, c), 1, "crossing {prev}→{c} is not one hop");
+                prev = c;
+            }
+        }
+    }
+
+    #[test]
+    fn single_site_ring_never_hands_over() {
+        let t = topo(1);
+        let w = walk();
+        let mut walker = Walker::new(11, 0, 0);
+        for _ in 0..100 {
+            let (_, crossed) = walker.step(&t, &w);
+            assert!(crossed.is_none(), "a one-cell ring produced a crossing");
+            assert_eq!(walker.cell(), 0);
+        }
+    }
+
+    #[test]
+    fn static_mobility_is_inert() {
+        assert!(!Mobility::Static.is_mobile());
+        assert!(Mobility::Waypoint(walk()).is_mobile());
+        let d = WaypointWalk::city_default(600.0);
+        assert!(d.pause_mean_s > 0.0);
+        assert!(d.cell_crossing_s.0 > 0.0 && d.cell_crossing_s.1 >= d.cell_crossing_s.0);
+    }
+}

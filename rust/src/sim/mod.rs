@@ -20,9 +20,15 @@
 //! * [`edge`] — per-site M/G/c torso queues mirroring the cloud, so
 //!   tiered plans ([`crate::edge`]) contend at their metro site while
 //!   tails contend in the cloud;
+//! * [`mobility`] — per-device waypoint walks over the edge topology's
+//!   site cells: crossing into another site's cell triggers an edge
+//!   handover (torso state relayed over the old backhaul, re-attach,
+//!   migration re-solve through the planner façade);
 //! * [`scenario`] — presets: the paper's two-phone fleet (live-parity
-//!   testing), a diurnal city of 10k+ devices with churn, and the same
-//!   city behind a metro edge tier ([`scenario::city_scale_tiered`]).
+//!   testing), a diurnal city of 10k+ devices with churn, the same
+//!   city behind a metro edge tier ([`scenario::city_scale_tiered`]),
+//!   and that tiered city with devices on the move
+//!   ([`scenario::city_mobile`]).
 //!
 //! Reports reuse [`crate::metrics::Histogram`], so simulated and
 //! socket-measured runs read the same.
@@ -31,6 +37,7 @@ pub mod cloud;
 pub mod device;
 pub mod edge;
 pub mod engine;
+pub mod mobility;
 pub mod scenario;
 
 use std::collections::{BTreeMap, HashMap};
@@ -45,7 +52,7 @@ use crate::edge::{EdgeTopology, SplitPlan};
 use crate::metrics::{Histogram, PlannerStats};
 use crate::models::{zoo, ModelProfile};
 use crate::optimizer::{Nsga2Params, PlanKey};
-use crate::planner::{PlanRequest, PlannerConfig, TierContext};
+use crate::planner::{PlanRequest, PlannerConfig, ReplanReason, TierContext};
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Xoshiro256;
 use crate::workload::next_interarrival;
@@ -54,9 +61,10 @@ pub use cloud::SimCloud;
 pub use device::{EdgeAttachment, Planner, SimDevice};
 pub use edge::SimEdge;
 pub use engine::{Event, EventQueue, SimTime};
+pub use mobility::{Mobility, WaypointWalk};
 pub use scenario::{
-    city_scale, city_scale_tiered, two_phone_fleet, ChurnConfig, EdgeSpec, ExplicitMember,
-    FleetSpec, PlannerPerfConfig, SimConfig,
+    city_mobile, city_scale, city_scale_tiered, two_phone_fleet, ChurnConfig, EdgeSpec,
+    ExplicitMember, FleetSpec, PlannerPerfConfig, SimConfig,
 };
 
 /// Per-profile slice of the fleet report (devices sharing a
@@ -112,7 +120,20 @@ pub struct SimReport {
     /// Per-edge-site slices (same shape as the cloud slices); empty
     /// without an edge tier.
     pub edges: Vec<CloudSlice>,
+    /// Adopted plan *moves* — re-plans whose `(l1, l2)` actually
+    /// changed — from any trigger: battery-band crossing, drift sweep,
+    /// or migration. Slice re-plans by cause via
+    /// [`SimReport::migration_replans`] and
+    /// [`crate::metrics::PlannerStats::requests_by_reason`].
     pub resplits: u64,
+    /// Completed edge handovers: a device crossed into another site's
+    /// cell and re-attached there (0 under [`Mobility::Static`] or
+    /// without an edge tier).
+    pub handovers: u64,
+    /// Migration re-solves adopted after a handover (the
+    /// [`crate::planner::ReplanReason::Migration`] slice of
+    /// [`SimReport::planner`], as decisions rather than requests).
+    pub migration_replans: u64,
     pub client_energy_j: f64,
     pub upload_energy_j: f64,
     /// Final split distribution: (plan, active devices running it).
@@ -162,7 +183,7 @@ impl SimReport {
             self.edges.iter().map(|e| format!("{:.4}", e.utilization)).collect();
         format!(
             "model={} seed={} completed={} dropped={} joined={} left={} dead={} \
-             resplits={} latency[{}] deviceq[{}] edgeq[{}] cloudq[{}] \
+             resplits={} handovers={} migrations={} latency[{}] deviceq[{}] edgeq[{}] cloudq[{}] \
              E_client={:.6}J E_up={:.6}J util=[{}] eutil=[{}]",
             self.model,
             self.seed,
@@ -172,6 +193,8 @@ impl SimReport {
             self.left,
             self.batteries_exhausted,
             self.resplits,
+            self.handovers,
+            self.migration_replans,
             self.latency.summary(),
             self.device_queue_delay.summary(),
             self.edge_queue_delay.summary(),
@@ -266,6 +289,12 @@ impl SimReport {
             self.planner.hit_rate() * 100.0,
             self.reopt_sweeps,
         );
+        println!(
+            "  mobility   : {} handovers, {} migration re-plans ({} migration requests to the planner)",
+            self.handovers,
+            self.migration_replans,
+            self.planner.migration_requests(),
+        );
         let splits: Vec<String> = self
             .split_distribution
             .iter()
@@ -338,6 +367,8 @@ struct Counters {
     joined: u64,
     left: u64,
     exhausted: u64,
+    handovers: u64,
+    migrations: u64,
 }
 
 /// The event-loop state. Lives for one [`run`] call.
@@ -356,6 +387,24 @@ struct Sim<'a> {
     /// Expanded edge tier, shared by the planner (tiered keys/solves)
     /// and the engine (site routing).
     topology: Option<EdgeTopology>,
+    /// Waypoint-walk parameters, `Some` only when the scenario both
+    /// moves devices and has an edge tier to move them between.
+    walk: Option<WaypointWalk>,
+    /// Per-device walk state, index-parallel with `devices` whenever
+    /// `walk` is `Some` (empty otherwise). Each walker owns a private
+    /// RNG stream, so mobility never touches the scenario RNG.
+    walkers: Vec<mobility::Walker>,
+    /// Per-device *decided* attachment: the current site, or the target
+    /// of an in-flight re-attachment. Crossings are judged against this
+    /// (not the lagging attachment), so a quick back-crossing during a
+    /// slow relay still schedules the corrective handover.
+    /// Index-parallel with `walkers`.
+    target_site: Vec<usize>,
+    /// Per-device handover sequence number; stamped into each scheduled
+    /// [`Event::Reattach`] so a stale (superseded) re-attachment that
+    /// lands out of order is dropped instead of overwriting a newer
+    /// one. Index-parallel with `walkers`.
+    handover_seq: Vec<u64>,
     latency_by_profile: BTreeMap<&'static str, Histogram>,
     devices_by_profile: BTreeMap<&'static str, usize>,
     /// Device-tier queue delay (backlog wait before head compute).
@@ -408,6 +457,22 @@ impl<'a> Sim<'a> {
             .as_ref()
             .map(|t| t.sites.iter().map(|s| SimEdge::new(s.servers)).collect())
             .unwrap_or_default();
+        let walk = match (&cfg.mobility, &topology) {
+            (Mobility::Waypoint(w), Some(_)) => {
+                if !(cfg.handover_cost_s >= 0.0) || !cfg.handover_cost_s.is_finite() {
+                    bail!(
+                        "handover cost must be a finite non-negative number of seconds, got {}",
+                        cfg.handover_cost_s
+                    );
+                }
+                Some(*w)
+            }
+            (Mobility::Waypoint(_), None) => bail!(
+                "mobility needs an edge tier to move devices between \
+                 (add --edge-sites, or use --scenario city-mobile)"
+            ),
+            (Mobility::Static, _) => None,
+        };
         // The façade owns quantisation → key → derived seed → cache.
         // Base seed and NSGA-II budget follow the configured planner:
         // only [`Planner::SmartSplit`] consumes the budget (the other
@@ -435,6 +500,10 @@ impl<'a> Sim<'a> {
                 .collect(),
             edges,
             topology,
+            walk,
+            walkers: Vec::new(),
+            target_site: Vec::new(),
+            handover_seq: Vec::new(),
             latency_by_profile: BTreeMap::new(),
             devices_by_profile: BTreeMap::new(),
             device_wait: Histogram::new(),
@@ -449,16 +518,29 @@ impl<'a> Sim<'a> {
         })
     }
 
-    /// This device's static edge attachment (assigned site), if the
-    /// scenario has an edge tier.
+    /// The attachment for site `site` of the edge tier.
+    fn attachment_at(&self, site: usize) -> EdgeAttachment {
+        let t = self.topology.as_ref().expect("attachment without an edge tier");
+        EdgeAttachment { site, profile: t.sites[site].profile, backhaul: t.sites[site].backhaul }
+    }
+
+    /// This device's spawn-time edge attachment (assigned site), if the
+    /// scenario has an edge tier. Later handovers replace it via
+    /// `on_reattach`.
     fn attachment(&self, device: usize) -> Option<EdgeAttachment> {
         let t = self.topology.as_ref()?;
-        let site = t.site_of(device);
-        Some(EdgeAttachment {
-            site,
-            profile: t.sites[site].profile,
-            backhaul: t.sites[site].backhaul,
-        })
+        Some(self.attachment_at(t.site_of(device)))
+    }
+
+    /// The site device `member` is *currently* attached to: its live
+    /// attachment once it exists (mobility moves it), the spawn
+    /// placement rule before that (the spawn path plans before the
+    /// device is constructed).
+    fn current_site(&self, member: usize, t: &EdgeTopology) -> usize {
+        self.devices
+            .get(member)
+            .and_then(|d| d.edge.as_ref().map(|e| e.site))
+            .unwrap_or_else(|| t.site_of(member))
     }
 
     /// Account one adopted split decision (and retain it in the trace
@@ -473,14 +555,16 @@ impl<'a> Sim<'a> {
     // ---------------------------------------------------- planner layer
 
     /// The façade request for device `member`'s current conditions —
-    /// exact bandwidth in (the façade buckets it), assigned edge site
-    /// attached when the scenario has a tier.
+    /// exact bandwidth in (the façade buckets it), the *currently*
+    /// attached edge site when the scenario has a tier (handover moves
+    /// it), and the reason tag for provenance/accounting.
     fn plan_request(
         &self,
         member: usize,
         profile: &'static ComputeProfile,
         bw_exact: f64,
         band: BatteryBand,
+        reason: ReplanReason,
     ) -> PlanRequest {
         let strategy = self
             .cfg
@@ -493,9 +577,10 @@ impl<'a> Sim<'a> {
             band,
             bw_exact,
             strategy,
-        );
+        )
+        .with_reason(reason);
         if let Some(t) = self.topology.as_ref() {
-            let site = t.site_of(member);
+            let site = self.current_site(member, t);
             req.tier = Some(TierContext { site, edge: t.sites[site] });
         }
         req
@@ -510,8 +595,9 @@ impl<'a> Sim<'a> {
         profile: &'static ComputeProfile,
         bw_exact: f64,
         band: BatteryBand,
+        reason: ReplanReason,
     ) -> Option<SplitPlan> {
-        self.plan_split_with(member, profile, bw_exact, band, &mut HashMap::new())
+        self.plan_split_with(member, profile, bw_exact, band, reason, &mut HashMap::new())
     }
 
     /// As [`Sim::plan_split`], but a cache miss is served from `presolved`
@@ -526,9 +612,10 @@ impl<'a> Sim<'a> {
         profile: &'static ComputeProfile,
         bw_exact: f64,
         band: BatteryBand,
+        reason: ReplanReason,
         presolved: &mut HashMap<PlanKey, Option<SplitPlan>>,
     ) -> Option<SplitPlan> {
-        let req = self.plan_request(member, profile, bw_exact, band);
+        let req = self.plan_request(member, profile, bw_exact, band, reason);
         self.facade.split_with(&req, presolved)
     }
 
@@ -541,7 +628,7 @@ impl<'a> Sim<'a> {
         let profile = self.devices[d].profile;
         let bw = self.devices[d].bandwidth_at(now);
         let band = BatteryBand::of_fraction(self.devices[d].soc());
-        let Some(plan) = self.plan_split(d, profile, bw, band) else {
+        let Some(plan) = self.plan_split(d, profile, bw, band, ReplanReason::BandCrossing) else {
             return;
         };
         self.devices[d].apply_split(plan, &self.model, bw);
@@ -564,7 +651,9 @@ impl<'a> Sim<'a> {
         }
         let requests: Vec<PlanRequest> = pending
             .iter()
-            .map(|&(d, bw, band)| self.plan_request(d, self.devices[d].profile, bw, band))
+            .map(|&(d, bw, band)| {
+                self.plan_request(d, self.devices[d].profile, bw, band, ReplanReason::Drift)
+            })
             .collect();
         let pool = self
             .pool
@@ -589,7 +678,7 @@ impl<'a> Sim<'a> {
             _ => {
                 let band = BatteryBand::of_fraction(soc.clamp(0.0, 1.0));
                 let plan = self
-                    .plan_split(id, profile, bw, band)
+                    .plan_split(id, profile, bw, band, ReplanReason::Spawn)
                     .expect("no feasible split for device");
                 (plan, false)
             }
@@ -610,6 +699,21 @@ impl<'a> Sim<'a> {
         *self.devices_by_profile.entry(profile.name).or_insert(0) += 1;
         self.devices.push(d);
         self.active.insert(id);
+        if let Some(walk) = self.walk {
+            // The walker starts in its spawn site's cell on a private
+            // RNG stream; its first tick (after the initial dwell) aims
+            // at a waypoint. Churn joins get walkers exactly like the
+            // initial fleet.
+            let topo = self.topology.as_ref().expect("mobility without an edge tier");
+            let cell = edge.expect("mobility without an attachment").site;
+            let mut walker = mobility::Walker::new(self.cfg.seed, id, cell);
+            let (dwell, crossed) = walker.step(topo, &walk);
+            debug_assert!(crossed.is_none(), "a fresh walker cannot cross");
+            self.walkers.push(walker);
+            self.target_site.push(cell);
+            self.handover_seq.push(0);
+            self.q.schedule(at + dwell, Event::Handover { device: id });
+        }
         if let Some(churn) = &self.cfg.churn {
             let lifetime = self.rng.next_exp(1.0 / churn.mean_lifetime_s.max(1e-9));
             self.q.schedule(at + lifetime, Event::Leave { device: id });
@@ -639,6 +743,7 @@ impl<'a> Sim<'a> {
                     Event::Uplinked {
                         device: d,
                         issued,
+                        site: cost.edge_site,
                         torso_s: cost.torso_s,
                         backhaul_s: cost.backhaul_s,
                         tail_s: cost.tail_s,
@@ -701,27 +806,28 @@ impl<'a> Sim<'a> {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn on_uplinked(
         &mut self,
         device: usize,
         issued: SimTime,
+        site: Option<usize>,
         torso_s: f64,
         backhaul_s: f64,
         tail_s: f64,
         now: SimTime,
     ) {
         self.devices[device].busy = false;
-        // Route by the costs captured at issue: torso work contends at
-        // the assigned edge site, then crosses the backhaul; empty hops
-        // are skipped entirely, so a two-tier plan (torso == backhaul ==
-        // 0) takes exactly the classic device→cloud path — the zero-edge
-        // degeneracy `tests/edge_parity.rs` pins.
+        // Route by the costs — and the site — captured at issue: torso
+        // work contends at the edge site the request was *issued*
+        // under (a handover mid-flight must not reroute in-flight work;
+        // the handover cost charges the state relay instead), then
+        // crosses the backhaul; empty hops are skipped entirely, so a
+        // two-tier plan (torso == backhaul == 0) takes exactly the
+        // classic device→cloud path — the zero-edge degeneracy
+        // `tests/edge_parity.rs` pins.
         if torso_s > 0.0 {
-            let site = self.devices[device]
-                .edge
-                .as_ref()
-                .map(|e| e.site)
-                .expect("torso work without an edge attachment");
+            let site = site.expect("torso work without an edge attachment");
             if let Some(svc) =
                 self.edges[site].offer(device, issued, now, torso_s, backhaul_s, tail_s)
             {
@@ -823,7 +929,9 @@ impl<'a> Sim<'a> {
         // pass-2 results through the normal (counted) cache path.
         for (d, bw, band) in pending {
             let profile = self.devices[d].profile;
-            let Some(plan) = self.plan_split_with(d, profile, bw, band, &mut presolved) else {
+            let Some(plan) =
+                self.plan_split_with(d, profile, bw, band, ReplanReason::Drift, &mut presolved)
+            else {
                 continue;
             };
             self.devices[d].apply_split(plan, &self.model, bw);
@@ -836,6 +944,86 @@ impl<'a> Sim<'a> {
         self.reopt_tick += 1;
         self.q
             .schedule(self.cfg.reopt_period_s * self.reopt_tick as f64, Event::Reoptimize);
+    }
+
+    /// Mobility tick: advance the device's waypoint walk one step. A
+    /// step that crosses into a cell whose site differs from the
+    /// device's *decided* attachment (current site, or the target of an
+    /// in-flight re-attachment — so a quick back-crossing during a slow
+    /// relay is not lost) begins the handover: the in-flight torso
+    /// state (the layer-`l1` activation) is relayed over the backhaul
+    /// of the site currently serving the device, plus the configured
+    /// control-plane cost, and the re-attachment lands when the relay
+    /// completes. The walk stops at the horizon (and on deactivation)
+    /// so the event queue drains.
+    fn on_handover(&mut self, device: usize) {
+        if self.horizon_reached || !self.devices[device].active {
+            return;
+        }
+        let Some(walk) = self.walk else { return };
+        let topo = self.topology.as_ref().expect("mobility without an edge tier");
+        let (dwell, crossed) = self.walkers[device].step(topo, &walk);
+        if let Some(cell) = crossed {
+            let new_site = topo.attach(device, Some(cell));
+            if new_site != self.target_site[device] {
+                self.target_site[device] = new_site;
+                self.handover_seq[device] += 1;
+                let serving = self.devices[device].edge.expect("mobile device without an attachment");
+                let plan = self.devices[device].plan();
+                let state_bytes =
+                    if plan.is_two_tier() { 0 } else { self.model.intermediate_bytes(plan.l1) };
+                let cost =
+                    self.cfg.handover_cost_s.max(0.0) + serving.backhaul.transfer_s(state_bytes);
+                self.q.schedule_in(
+                    cost,
+                    Event::Reattach { device, site: new_site, seq: self.handover_seq[device] },
+                );
+            }
+        }
+        self.q.schedule_in(dwell, Event::Handover { device });
+    }
+
+    /// Handover complete: adopt the new attachment, refresh the cached
+    /// §III hop costs against it, and re-plan with the new tier context
+    /// — the *migration* re-solve. The new site's `TierKey` makes this
+    /// a distinct planner state, so the decision matches what any
+    /// device already at that site would plan; the cache makes repeat
+    /// migrations onto a known state one map lookup. A `seq` that no
+    /// longer matches the device's latest crossing is superseded (a
+    /// newer re-attachment exists or already landed) and is dropped;
+    /// after the horizon pending re-attachments are dropped too, so the
+    /// drain runs entirely on the attachments that served the in-flight
+    /// work.
+    fn on_reattach(&mut self, device: usize, site: usize, seq: u64, now: SimTime) {
+        if self.horizon_reached || !self.devices[device].active {
+            return;
+        }
+        if self.handover_seq[device] != seq {
+            return;
+        }
+        let attachment = self.attachment_at(site);
+        self.devices[device].edge = Some(attachment);
+        self.counters.handovers += 1;
+        let bw = self.devices[device].bandwidth_at(now);
+        if self.devices[device].pinned() {
+            // Pinned splits never re-plan, but the cached hop costs
+            // must follow the attachment that now serves them.
+            let plan = self.devices[device].plan();
+            self.devices[device].apply_split(plan, &self.model, bw);
+            return;
+        }
+        let profile = self.devices[device].profile;
+        let band = BatteryBand::of_fraction(self.devices[device].soc());
+        let planned = self.plan_split(device, profile, bw, band, ReplanReason::Migration);
+        // Adopt the migration plan; with no feasible plan at the new
+        // state, keep the old plan but still refresh its cached hop
+        // costs against the site now serving it.
+        let plan = planned.unwrap_or_else(|| self.devices[device].plan());
+        self.devices[device].apply_split(plan, &self.model, bw);
+        if planned.is_some() {
+            self.counters.migrations += 1;
+            self.note_decision(device, plan);
+        }
     }
 
     fn on_join(&mut self, now: SimTime) {
@@ -884,8 +1072,8 @@ impl<'a> Sim<'a> {
             match event {
                 Event::Horizon => self.horizon_reached = true,
                 Event::Arrival => self.on_arrival(now),
-                Event::Uplinked { device, issued, torso_s, backhaul_s, tail_s } => {
-                    self.on_uplinked(device, issued, torso_s, backhaul_s, tail_s, now)
+                Event::Uplinked { device, issued, site, torso_s, backhaul_s, tail_s } => {
+                    self.on_uplinked(device, issued, site, torso_s, backhaul_s, tail_s, now)
                 }
                 Event::EdgeDone { site, device, issued, backhaul_s, tail_s } => {
                     self.on_edge_done(site, device, issued, backhaul_s, tail_s, now)
@@ -895,6 +1083,10 @@ impl<'a> Sim<'a> {
                 }
                 Event::CloudDone { cloud, device, issued } => {
                     self.on_cloud_done(cloud, device, issued, now)
+                }
+                Event::Handover { device } => self.on_handover(device),
+                Event::Reattach { device, site, seq } => {
+                    self.on_reattach(device, site, seq, now)
                 }
                 Event::Reoptimize => self.on_reoptimize(now),
                 Event::Join => self.on_join(now),
@@ -976,6 +1168,8 @@ impl<'a> Sim<'a> {
             clouds,
             edges,
             resplits: self.devices.iter().map(|d| d.resplits).sum(),
+            handovers: self.counters.handovers,
+            migration_replans: self.counters.migrations,
             client_energy_j: self.devices.iter().map(|d| d.client_energy_j).sum(),
             upload_energy_j: self.devices.iter().map(|d| d.upload_energy_j).sum(),
             split_distribution: split_counts.into_iter().collect(),

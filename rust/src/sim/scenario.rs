@@ -10,6 +10,11 @@
 //! * [`city_scale`] — 10k+ heterogeneous devices under a diurnal load
 //!   swing with churn, per-device bandwidth wobble and battery drain —
 //!   the scale the ROADMAP aims at and the testbed cannot reach.
+//!
+//! [`city_scale_tiered`] puts the same city behind a metro edge tier,
+//! and [`city_mobile`] additionally sets its devices walking between
+//! the sites (waypoint mobility → edge handovers → migration
+//! re-solves).
 
 use std::time::Duration;
 
@@ -18,8 +23,14 @@ use crate::edge::{AssignmentPolicy, BackhaulLink, EdgeSite, EdgeTopology};
 use crate::netsim::BandwidthTrace;
 use crate::optimizer::Nsga2Params;
 use crate::sim::device::Planner;
+use crate::sim::mobility::{Mobility, WaypointWalk};
 use crate::util::rng::Xoshiro256;
 use crate::workload::Arrival;
+
+/// Default fixed control-plane cost per edge handover, seconds (the
+/// torso-state relay over the old site's backhaul is charged on top) —
+/// a 4G/5G-handover-class interruption.
+pub const DEFAULT_HANDOVER_COST_S: f64 = 0.05;
 
 /// Device churn: Poisson joins, exponential lifetimes.
 #[derive(Clone, Debug)]
@@ -250,6 +261,17 @@ pub struct SimConfig {
     /// Metro edge tier between the fleet and the cloud(s); `None` is the
     /// paper's two-tier world (every plan has an empty torso).
     pub edge: Option<EdgeSpec>,
+    /// Device mobility between edge-site cells. [`Mobility::Static`]
+    /// (every preset's default) schedules no events and draws no
+    /// randomness — a Static run replays the corresponding immobile
+    /// scenario byte-for-byte. [`Mobility::Waypoint`] requires an edge
+    /// tier.
+    pub mobility: Mobility,
+    /// Fixed control-plane latency charged per completed handover,
+    /// seconds; the in-flight torso-state relay over the old site's
+    /// backhaul is added on top. Only read when `mobility` moves
+    /// devices.
+    pub handover_cost_s: f64,
 }
 
 /// The paper's two-phone testbed, matching `main.rs`'s live `fleet`
@@ -291,6 +313,8 @@ pub fn two_phone_fleet(
         // but every decision equals the uncached solve bit-for-bit).
         planner_perf: PlannerPerfConfig::default(),
         edge: None,
+        mobility: Mobility::Static,
+        handover_cost_s: DEFAULT_HANDOVER_COST_S,
     }
 }
 
@@ -332,6 +356,8 @@ pub fn city_scale(model: &str, devices: usize, duration_s: f64, seed: u64) -> Si
         }),
         planner_perf: PlannerPerfConfig::fleet_scale(),
         edge: None,
+        mobility: Mobility::Static,
+        handover_cost_s: DEFAULT_HANDOVER_COST_S,
     }
 }
 
@@ -355,6 +381,26 @@ pub fn city_scale_tiered(
         backhaul: BackhaulLink::METRO_1GBE,
         assignment: AssignmentPolicy::RoundRobin,
     });
+    cfg
+}
+
+/// [`city_scale_tiered`] with the devices on the move: each phone runs
+/// a deterministic waypoint walk over the sites' cells
+/// ([`WaypointWalk::city_default`] scaled to the horizon), so the run
+/// exercises edge handovers — torso-state relays over the old site's
+/// backhaul — and migration re-solves through the planner façade.
+/// Freezing `mobility` back to [`Mobility::Static`] makes this
+/// scenario byte-identical to [`city_scale_tiered`]
+/// (`tests/edge_parity.rs` pins it).
+pub fn city_mobile(
+    model: &str,
+    devices: usize,
+    sites: usize,
+    duration_s: f64,
+    seed: u64,
+) -> SimConfig {
+    let mut cfg = city_scale_tiered(model, devices, sites, duration_s, seed);
+    cfg.mobility = Mobility::Waypoint(WaypointWalk::city_default(duration_s));
     cfg
 }
 
@@ -447,6 +493,33 @@ mod tests {
         assert_eq!(relay.servers_per_site, 0);
         assert!(relay.backhaul.is_free());
         assert_eq!(relay.topology().num_sites(), 3);
+    }
+
+    #[test]
+    fn mobile_preset_only_differs_by_mobility() {
+        let mobile = city_mobile("alexnet", 1000, 3, 120.0, 7);
+        assert!(mobile.mobility.is_mobile(), "city_mobile must move devices");
+        assert!(mobile.handover_cost_s >= 0.0 && mobile.handover_cost_s.is_finite());
+        // Everything except the mobility model matches the tiered city —
+        // the byte-for-byte Static replay in tests/edge_parity.rs
+        // depends on this.
+        let tiered = city_scale_tiered("alexnet", 1000, 3, 120.0, 7);
+        assert!(!tiered.mobility.is_mobile());
+        assert_eq!(mobile.handover_cost_s, tiered.handover_cost_s);
+        assert_eq!(mobile.fleet.initial_count(), tiered.fleet.initial_count());
+        assert_eq!(mobile.clouds, tiered.clouds);
+        assert_eq!(mobile.edge.as_ref().unwrap().sites, tiered.edge.as_ref().unwrap().sites);
+        assert_eq!(mobile.reopt_period_s, tiered.reopt_period_s);
+        assert_eq!(mobile.idle_drain_w, tiered.idle_drain_w);
+        // The walk parameters scale with the horizon.
+        match mobile.mobility {
+            Mobility::Waypoint(w) => {
+                assert!(w.pause_mean_s > 0.0);
+                assert!(w.cell_crossing_s.0 > 0.0 && w.cell_crossing_s.1 >= w.cell_crossing_s.0);
+                assert!(w.pause_mean_s < 120.0, "a device should move within the run");
+            }
+            Mobility::Static => unreachable!(),
+        }
     }
 
     #[test]

@@ -2,9 +2,14 @@
 //! (relay-only sites over a free backhaul) reproduces the two-tier
 //! decision stream and downstream metrics exactly; (b) a real tiered
 //! scenario is bit-identical under one seed (per-tier queue histograms
-//! included) and actually places torso work at the edge.
+//! included) and actually places torso work at the edge; (c) mobility —
+//! `Mobility::Static` replays the immobile tiered city byte-for-byte,
+//! while the `city_mobile` waypoint walk produces real handovers and
+//! migration re-solves with a decision stream that is independent of
+//! the planner's thread configuration.
 
-use smartsplit::sim::{self, EdgeSpec};
+use smartsplit::planner::ReplanReason;
+use smartsplit::sim::{self, EdgeSpec, Mobility};
 use smartsplit::workload::Arrival;
 
 #[test]
@@ -96,6 +101,108 @@ fn tiered_request_conservation_holds() {
     // both tiers must actually serve work in the tiered city.
     assert!(cloud_served > 0, "no tail work reached the cloud");
     assert!(edge_served > 0, "no torso work reached the edge");
+}
+
+#[test]
+fn static_mobility_replays_the_tiered_city_byte_for_byte() {
+    // `city_mobile` differs from `city_scale_tiered` only in its
+    // mobility model; freezing it back to Static must therefore replay
+    // the pre-mobility scenario exactly — no extra events, no extra RNG
+    // draws, no decision drift. This is the zero-mobility degeneracy
+    // contract (DESIGN.md §9). Note the equality half is partly
+    // structural (both arms build the same config value, pinned by
+    // scenario::tests::mobile_preset_only_differs_by_mobility); the
+    // load-bearing signal here is the zero mobility counters below plus
+    // determinism across the two construction paths.
+    let mut tiered = sim::city_scale_tiered("alexnet", 400, 3, 120.0, 21);
+    tiered.planner_perf.record_decisions = true;
+    let mut frozen = sim::city_mobile("alexnet", 400, 3, 120.0, 21);
+    frozen.mobility = Mobility::Static;
+    frozen.planner_perf.record_decisions = true;
+
+    let a = sim::run(&tiered).expect("tiered run");
+    let b = sim::run(&frozen).expect("frozen mobile run");
+
+    assert!(!a.decisions.is_empty(), "scenario exercised no planning");
+    assert_eq!(a.decisions, b.decisions, "Static mobility changed a split decision");
+    assert_eq!(a.summary(), b.summary());
+    assert_eq!(a.events, b.events, "Static mobility changed the event stream");
+    assert_eq!(a.generated, b.generated);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.dropped, b.dropped);
+    assert_eq!(a.resplits, b.resplits);
+    assert_eq!(a.reopt_sweeps, b.reopt_sweeps);
+    assert_eq!(a.devices_created, b.devices_created);
+    assert_eq!(a.split_distribution, b.split_distribution);
+    assert_eq!(a.planner, b.planner, "Static mobility perturbed planner accounting");
+    assert_eq!(a.latency.summary(), b.latency.summary());
+    assert_eq!(a.edge_queue_delay.summary(), b.edge_queue_delay.summary());
+    // Neither run moved anything.
+    assert_eq!((a.handovers, a.migration_replans), (0, 0));
+    assert_eq!((b.handovers, b.migration_replans), (0, 0));
+    assert_eq!(b.planner.migration_requests(), 0);
+}
+
+#[test]
+fn mobile_city_reports_handovers_and_migration_resolves() {
+    let mut cfg = sim::city_mobile("alexnet", 600, 3, 120.0, 33);
+    cfg.planner_perf.record_decisions = true;
+    let r = sim::run(&cfg).expect("mobile run");
+
+    // The walk actually moved devices between sites...
+    assert!(r.handovers > 0, "no handovers in the mobile city");
+    // ... and every completed handover re-planned through the façade,
+    // tagged as a migration (visible in both the sim counters and the
+    // planner's per-reason request tally).
+    assert!(r.migration_replans > 0, "handovers adopted no migration re-solves");
+    assert!(
+        r.planner.migration_requests() >= r.migration_replans,
+        "{} migration requests < {} adopted migration re-plans",
+        r.planner.migration_requests(),
+        r.migration_replans
+    );
+    assert!(
+        r.planner.requests_by_reason[ReplanReason::Spawn.index()] >= r.devices_created as u64,
+        "every spawn is a spawn-tagged planner request"
+    );
+    // Conservation still holds across the extra event class.
+    assert_eq!(r.generated, r.completed + r.dropped);
+    // Decision stream stays inside the ordered tiered domain.
+    assert!(!r.decisions.is_empty());
+    for &(_, l1, l2) in &r.decisions {
+        assert!(l1 <= l2, "unordered decision ({l1}, {l2})");
+    }
+    // Migration re-solves are re-plans of live devices: the decision
+    // count must cover spawns plus adopted re-plans.
+    assert!(r.decision_count >= r.devices_created as u64 + r.migration_replans);
+}
+
+#[test]
+fn mobile_decision_stream_is_thread_config_independent() {
+    // Same seed ⇒ byte-identical decision streams whether cache-miss
+    // solves fan out over the worker pool or run sequentially inline —
+    // mobility draws come from per-device streams, and solve seeds from
+    // quantised keys, so thread count cannot perturb either.
+    let mut parallel = sim::city_mobile("alexnet", 400, 3, 120.0, 9);
+    parallel.planner_perf.record_decisions = true;
+    parallel.planner_perf.parallel = true;
+    let mut sequential = parallel.clone();
+    sequential.planner_perf.parallel = false;
+
+    let a = sim::run(&parallel).expect("parallel run");
+    let b = sim::run(&sequential).expect("sequential run");
+    assert!(!a.decisions.is_empty());
+    assert_eq!(a.decisions, b.decisions, "thread fan-out changed a mobile decision");
+    assert_eq!(a.summary(), b.summary());
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.handovers, b.handovers);
+    assert_eq!(a.migration_replans, b.migration_replans);
+    assert_eq!(a.planner, b.planner, "fan-out perturbed planner accounting");
+
+    // And the run is bit-identical to itself on a re-run.
+    let c = sim::run(&parallel).expect("parallel rerun");
+    assert_eq!(a.decisions, c.decisions);
+    assert_eq!(a.summary(), c.summary());
 }
 
 #[test]

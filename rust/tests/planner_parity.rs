@@ -245,6 +245,8 @@ fn stream_config(planner: sim::Planner, seed: u64) -> sim::SimConfig {
             record_decisions: true,
         },
         edge: None,
+        mobility: sim::Mobility::Static,
+        handover_cost_s: 0.0,
     }
 }
 
