@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Schema check for the observability exports (rust/DESIGN.md §12).
+
+Usage: check_observability.py TRACE_FILE... METRICS_FILE...
+
+File role is picked by shape, not order: a `.jsonl` file is validated
+as a line-delimited trace, a JSON object with "traceEvents" as a
+Chrome trace, and a JSON object with "series" as a --metrics-out
+export. The checks mirror what `rust/tests/observability.rs` asserts
+in-process: span tiling, ordered causal events, window partition —
+here re-asserted on the serialized bytes, through an independent JSON
+parser, so a malformed export can't hide behind the in-process view.
+"""
+import json
+import sys
+
+SPAN_KINDS = {
+    "device_queue", "head_compute", "uplink", "edge_queue",
+    "edge_service", "backhaul", "cloud_queue", "cloud_service",
+    "downlink",
+}
+EVENT_TYPES = {"replan", "handover_relay", "reattach"}
+
+
+def fail(path, msg):
+    sys.exit(f"{path}: {msg}")
+
+
+def check_jsonl_trace(path, lines):
+    meta = json.loads(lines[0])
+    if meta.get("type") != "meta" or meta.get("format") != "smartsplit-trace":
+        fail(path, "first line is not a smartsplit-trace meta header")
+    if meta["sample_every"] < 1 or meta["unfinished"] != 0:
+        fail(path, f"bad meta: {meta}")
+    requests = events = 0
+    last_event_t = float("-inf")
+    for line in lines[1:]:
+        obj = json.loads(line)
+        kind = obj["type"]
+        if kind == "request":
+            requests += 1
+            spans = obj["spans"]
+            if not spans:
+                fail(path, f"request {obj['req']} has no spans")
+            if spans[0]["start_s"] != obj["issued_s"]:
+                fail(path, f"request {obj['req']}: first span does not start at issue")
+            if spans[-1]["end_s"] != obj["completed_s"]:
+                fail(path, f"request {obj['req']}: last span does not end at completion")
+            if spans[-1]["kind"] != "downlink":
+                fail(path, f"request {obj['req']}: timeline does not end in downlink")
+            for prev, cur in zip(spans, spans[1:]):
+                if prev["end_s"] != cur["start_s"]:
+                    fail(path, f"request {obj['req']}: gap between {prev['kind']} and {cur['kind']}")
+            for s in spans:
+                if s["kind"] not in SPAN_KINDS:
+                    fail(path, f"unknown span kind {s['kind']!r}")
+                if s["end_s"] < s["start_s"]:
+                    fail(path, f"negative-duration span {s}")
+        elif kind in EVENT_TYPES:
+            events += 1
+            t = obj["start_s"] if kind == "handover_relay" else obj["t_s"]
+            if t < last_event_t:
+                fail(path, "causal events are not in nondecreasing time order")
+            last_event_t = t
+            if kind == "replan" and not obj["derived_seed"].startswith("0x"):
+                fail(path, "replan derived_seed is not a hex string")
+        else:
+            fail(path, f"unknown line type {kind!r}")
+    if requests != meta["requests"] or events != meta["events"]:
+        fail(path, "meta counts do not match body")
+    if requests == 0:
+        fail(path, "trace recorded no requests")
+    return f"{requests} requests, {events} events"
+
+
+def check_chrome_trace(path, doc):
+    events = doc["traceEvents"]
+    if not events:
+        fail(path, "empty traceEvents")
+    for e in events:
+        if e["ph"] not in ("X", "i"):
+            fail(path, f"unexpected phase {e['ph']!r}")
+        if e["ph"] == "X" and (e["dur"] < 0 or e["name"] not in SPAN_KINDS):
+            fail(path, f"bad complete event {e['name']!r}")
+    if doc["otherData"]["format"] != "smartsplit-trace":
+        fail(path, "missing smartsplit meta in otherData")
+    return f"{len(events)} trace events"
+
+
+def check_metrics(path, doc):
+    for key in ("model", "seed", "duration_s", "generated", "completed", "series"):
+        if key not in doc:
+            fail(path, f"missing top-level key {key!r}")
+    series = doc["series"]
+    if series["window_s"] <= 0 or not series["windows"]:
+        fail(path, "empty or unwindowed series")
+    totals = {"generated": 0, "completed": 0}
+    prev_end = 0.0
+    for i, w in enumerate(series["windows"]):
+        if w["index"] != i or w["start_s"] != prev_end:
+            fail(path, f"window {i} does not partition the run")
+        prev_end = w["end_s"]
+        for key in totals:
+            totals[key] += w[key]
+        lat = w["latency"]
+        if not lat["p50_s"] <= lat["p95_s"] <= lat["p99_s"] <= lat["max_s"]:
+            fail(path, f"window {i}: latency quantiles out of order")
+        if not 0.0 <= w["planner"]["hit_rate"] <= 1.0:
+            fail(path, f"window {i}: hit rate out of range")
+    for key, total in totals.items():
+        if total != doc[key]:
+            fail(path, f"per-window {key} sums to {total}, run total is {doc[key]}")
+    return f"{len(series['windows'])} windows of {series['window_s']}s"
+
+
+def main(paths):
+    if not paths:
+        sys.exit("usage: check_observability.py FILE...")
+    for path in paths:
+        with open(path) as f:
+            text = f.read()
+        if path.endswith(".jsonl"):
+            summary = check_jsonl_trace(path, text.splitlines())
+        else:
+            doc = json.loads(text)
+            if "traceEvents" in doc:
+                summary = check_chrome_trace(path, doc)
+            elif "series" in doc:
+                summary = check_metrics(path, doc)
+            else:
+                fail(path, "neither a chrome trace nor a metrics export")
+        print(f"ok {path}: {summary}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,118 @@
+//! The observability layer (DESIGN.md §12) on a walking city: trace a
+//! mobile tiered simulation, print one request's span timeline and the
+//! causal events around a handover, show the windowed time series, and
+//! export both machine-readable formats.
+//!
+//!     cargo run --release --example observability
+//!
+//! Everything printed here is deterministic — virtual-clock timestamps
+//! only, so the same seed reproduces the same timeline byte-for-byte.
+
+use smartsplit::sim;
+use smartsplit::trace::CausalEvent;
+
+fn main() -> anyhow::Result<()> {
+    let devices = 1_000;
+    let sites = 3;
+    let duration_s = 180.0;
+
+    let mut cfg = sim::city_mobile("alexnet", devices, sites, duration_s, 7);
+    // Trace every request, cut the series into 15 s windows.
+    cfg.observability = sim::ObservabilityConfig::full(15.0);
+
+    println!(
+        "== alexnet: {devices} devices / {sites} edge sites / {duration_s:.0}s virtual, \
+         fully traced =="
+    );
+    let report = sim::run(&cfg)?;
+    report.print();
+
+    let trace = report.trace.as_ref().expect("tracing was enabled");
+    let series = report.series.as_ref().expect("windowing was enabled");
+
+    // -- one request, span by span ------------------------------------
+    // Pick the traced request with the worst end-to-end latency: the
+    // timeline shows exactly where that time went.
+    let worst = trace
+        .requests
+        .iter()
+        .max_by(|a, b| a.latency_s().partial_cmp(&b.latency_s()).unwrap())
+        .expect("a traced run serves at least one request");
+    println!("\n-- worst traced request: #{} on device {} --", worst.req, worst.device);
+    for s in &worst.spans {
+        let site = s.site.map(|i| format!(" @site {i}")).unwrap_or_default();
+        println!(
+            "  {:<12} [{:>9.4}s → {:>9.4}s] {:>8.3} ms{}",
+            s.kind.name(),
+            s.start_s,
+            s.end_s,
+            (s.end_s - s.start_s) * 1e3,
+            site
+        );
+    }
+    println!(
+        "  spans tile the request exactly: {:.4}s issued → {:.4}s completed ({:.1} ms)",
+        worst.issued_s,
+        worst.completed_s,
+        worst.latency_s() * 1e3
+    );
+
+    // -- causal events around the first handover ----------------------
+    if let Some(relay_at) = trace.events.iter().find_map(|e| match e {
+        CausalEvent::HandoverRelay { start_s, .. } => Some(*start_s),
+        _ => None,
+    }) {
+        println!("\n-- causal events around the first handover ({relay_at:.2}s) --");
+        for e in trace
+            .events
+            .iter()
+            .filter(|e| (e.t_s() - relay_at).abs() < 5.0)
+            .take(8)
+        {
+            match e {
+                CausalEvent::HandoverRelay { start_s, end_s, device, from_site, to_site, state_bytes } => {
+                    println!(
+                        "  {start_s:>8.3}s relay    device {device}: site {from_site} → {to_site}, \
+                         {state_bytes} B of torso state, {:.1} ms",
+                        (end_s - start_s) * 1e3
+                    );
+                }
+                CausalEvent::Reattach { t_s, device, site, replanned } => {
+                    println!(
+                        "  {t_s:>8.3}s reattach device {device} @site {site} (replanned: {replanned})"
+                    );
+                }
+                CausalEvent::Replan { t_s, device, reason, cache, plan, .. } => {
+                    println!(
+                        "  {t_s:>8.3}s replan   device {device}: {reason:?}/{cache:?} → {plan:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    // -- the windowed series ------------------------------------------
+    println!();
+    series.print_brief();
+    let curve: Vec<String> =
+        series.hit_rate_curve().iter().map(|h| format!("{:.2}", h)).collect();
+    println!("planner hit rate per window: [{}]", curve.join(", "));
+
+    // -- machine-readable exports -------------------------------------
+    let dir = std::env::temp_dir();
+    let jsonl = dir.join("smartsplit_observability.jsonl");
+    let chrome = dir.join("smartsplit_observability.json");
+    trace.export(&jsonl)?;
+    trace.export(&chrome)?;
+    println!(
+        "\nexported {} traced requests + {} events:\n  JSONL        → {}\n  chrome trace → {} (open in chrome://tracing or Perfetto)",
+        trace.requests.len(),
+        trace.events.len(),
+        jsonl.display(),
+        chrome.display()
+    );
+
+    assert_eq!(trace.unfinished, 0, "every begun request must complete under drain");
+    assert_eq!(trace.requests.len() as u64, report.completed);
+    Ok(())
+}

@@ -227,6 +227,28 @@ fn main() -> anyhow::Result<()> {
         "acceptance gate: cold-tick speedup {speedup_cold:.1}× < 10× vs uncached sequential"
     );
 
+    // ---- Hit rate over time: a windowed city run through the full sim
+    // (the TimeSeries collector of DESIGN.md §12), so the JSON records
+    // how fast the plan cache converges to steady state, not just the
+    // end-of-run average.
+    println!("\n== planner_throughput: cache hit rate over time (city sim) ==");
+    let (ts_devices, ts_duration) = if smoke { (1_000, 60.0) } else { (5_000, 120.0) };
+    let mut ts_cfg = smartsplit::sim::city_scale("alexnet", ts_devices, ts_duration, 7);
+    ts_cfg.observability.window_s = ts_duration / 12.0;
+    let ts_report = smartsplit::sim::run(&ts_cfg)?;
+    let series = ts_report
+        .series
+        .expect("windowed run must produce a time series");
+    let curve = series.hit_rate_curve();
+    let curve_str: Vec<String> = curve.iter().map(|h| format!("{:.3}", h)).collect();
+    println!(
+        "  {} windows of {:.1}s over {} devices: [{}]",
+        curve.len(),
+        series.window_s,
+        ts_devices,
+        curve_str.join(", ")
+    );
+
     // ---- BENCH_planner.json for the CI perf trajectory.
     let json = Json::obj(vec![
         ("bench", Json::str("planner_throughput")),
@@ -269,6 +291,15 @@ fn main() -> anyhow::Result<()> {
             Json::obj(vec![
                 ("allocs_per_generation", Json::Num(per_gen)),
                 ("alloc_free_hot_path", Json::Bool(alloc_free)),
+            ]),
+        ),
+        (
+            "hit_rate_over_time",
+            Json::obj(vec![
+                ("sim_devices", Json::Num(ts_devices as f64)),
+                ("sim_duration_s", Json::Num(ts_duration)),
+                ("window_s", Json::Num(series.window_s)),
+                ("curve", Json::arr_f64(&curve)),
             ]),
         ),
     ]);

@@ -290,11 +290,17 @@ impl Fleet {
             })
             .collect();
         let latency = Arc::try_unwrap(latency).unwrap_or_else(|_| panic!("latency still shared"));
+        // Freeze the serving interval into the meter so the report's
+        // elapsed/throughput come from one clock source. Live serving is
+        // genuinely wall-clock (unlike `sim::`, which pins the meter to
+        // the virtual clock); pinning the measured interval here keeps
+        // the two derived fields consistent with each other.
+        meter.set_elapsed_s(start.elapsed().as_secs_f64());
         Ok(FleetReport {
             completed: meter.completed(),
             errors: errors.load(Ordering::SeqCst),
-            elapsed_s: start.elapsed().as_secs_f64(),
-            throughput_rps: meter.completed() as f64 / start.elapsed().as_secs_f64(),
+            elapsed_s: meter.elapsed_s(),
+            throughput_rps: meter.rps(),
             latency,
             members,
             planner: self.planner_stats,

@@ -43,7 +43,8 @@
 //! | [`runtime`] | PJRT executor over the python-AOT per-layer HLO artifacts |
 //! | [`serve`], [`coordinator`] | Framed TCP serving stack; live deployments, battery bands, the N-phone fleet |
 //! | [`sim`] | Discrete-event fleet simulator: virtual clock, M/G/c tiers, mobility + edge handover, scenarios |
-//! | [`workload`], [`metrics`], [`figures`], [`bench`] | Arrival processes, histograms/planner counters, paper exhibits, bench harness |
+//! | [`trace`] | Deterministic per-request span timelines + causal annotations; JSONL / Chrome `trace_event` export |
+//! | [`workload`], [`metrics`], [`figures`], [`bench`] | Arrival processes, histograms/time-series/planner counters, paper exhibits, bench harness |
 //! | [`util`] | Offline substrates: CLI, PRNG, JSON, property testing, thread pool |
 //!
 //! See the repo-root `README.md` for the quickstart and
@@ -64,6 +65,7 @@ pub mod planner;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

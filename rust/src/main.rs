@@ -69,6 +69,10 @@ fn cli() -> Cli {
     .opt("backhaul", "1000", "simulate: edge→cloud backhaul bandwidth in Mbps")
     .opt("mobility", "scenario", "simulate: device mobility: static | waypoint (scenario = the preset's choice; city-mobile walks by default)")
     .opt("handover-cost", "0.05", "simulate: fixed control-plane cost per edge handover in seconds (torso-state relay over the old backhaul is charged on top)")
+    .opt("trace-out", "", "simulate: enable per-request tracing and write the timeline here (.jsonl = JSON Lines, otherwise Chrome trace_event JSON for chrome://tracing / Perfetto)")
+    .opt("trace-sample", "1", "simulate: record every Nth request in the trace (1 = all; causal annotations are always recorded)")
+    .opt("metrics-out", "", "simulate: enable the windowed time-series collector and write its JSON here")
+    .opt("metrics-window", "0", "simulate: time-series window length in virtual seconds (0 = horizon / 60)")
     .flag("no-churn", "simulate: disable device churn")
     .flag("no-slowdown", "disable phone-speed emulation")
     .flag("verbose", "log at info level")
@@ -316,6 +320,20 @@ fn run(args: &[String]) -> Result<()> {
             if parsed.get_bool("no-churn") {
                 sim_cfg.churn = None;
             }
+            // Observability is opt-in per sink: --trace-out turns the
+            // span recorder on, --metrics-out the windowed collector.
+            // Neither perturbs decisions or event order (DESIGN.md §12).
+            let trace_out = parsed.get("trace-out").to_string();
+            let metrics_out = parsed.get("metrics-out").to_string();
+            if !trace_out.is_empty() {
+                sim_cfg.observability.trace_sample_every =
+                    parsed.get_u64("trace-sample").max(1);
+            }
+            if !metrics_out.is_empty() {
+                let w = parsed.get_f64("metrics-window");
+                sim_cfg.observability.window_s =
+                    if w > 0.0 { w } else { sim_cfg.duration_s / 60.0 };
+            }
             println!(
                 "simulating {} device(s) of {} for {:.0}s virtual (seed {}{}{})...",
                 sim_cfg.fleet.initial_count(),
@@ -337,6 +355,33 @@ fn run(args: &[String]) -> Result<()> {
             );
             let report = sim::run(&sim_cfg)?;
             report.print();
+            if !metrics_out.is_empty() {
+                let ts = report
+                    .series
+                    .as_ref()
+                    .expect("--metrics-out enabled the collector");
+                let doc = smartsplit::util::json::Json::obj(vec![
+                    ("model", smartsplit::util::json::Json::str(&report.model)),
+                    ("seed", smartsplit::util::json::Json::Num(report.seed as f64)),
+                    ("duration_s", smartsplit::util::json::Json::Num(report.duration_s)),
+                    ("generated", smartsplit::util::json::Json::Num(report.generated as f64)),
+                    ("completed", smartsplit::util::json::Json::Num(report.completed as f64)),
+                    ("series", ts.to_json()),
+                ]);
+                std::fs::write(&metrics_out, doc.to_string_pretty())
+                    .with_context(|| format!("writing --metrics-out {metrics_out}"))?;
+                println!("wrote windowed metrics ({} windows) to {metrics_out}", ts.windows.len());
+            }
+            if !trace_out.is_empty() {
+                let tr = report.trace.as_ref().expect("--trace-out enabled tracing");
+                tr.export(std::path::Path::new(&trace_out))
+                    .with_context(|| format!("writing --trace-out {trace_out}"))?;
+                println!(
+                    "wrote {} request timelines + {} causal events to {trace_out}",
+                    tr.requests.len(),
+                    tr.events.len()
+                );
+            }
         }
         other => bail!("unknown command {other:?} (try --help)"),
     }

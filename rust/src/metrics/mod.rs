@@ -1,7 +1,11 @@
 //! Serving metrics: latency histogram (HDR-style log-bucketed), throughput
-//! meter, per-request split accounting, and split-planner counters
-//! (solves / cache hits / cache misses / per-reason request tallies for
-//! the fleet planner layer).
+//! meter, windowed time series ([`timeseries`]), per-request split
+//! accounting, and split-planner counters (solves / cache hits / cache
+//! misses / per-reason request tallies for the fleet planner layer).
+
+pub mod timeseries;
+
+pub use timeseries::{PoolGauge, TierWindow, TimeSeries, TimeSeriesReport, WindowSummary};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -21,6 +25,13 @@ struct HistState {
     sum_s: f64,
     min_s: f64,
     max_s: f64,
+    /// Samples below the 1 µs bucket floor. They still land in the edge
+    /// bucket (so `total`/quantiles see them), but the clamp is counted
+    /// instead of silent — a wave of sub-µs samples is a measurement
+    /// bug, not a latency distribution.
+    underflow: u64,
+    /// Samples above the ~4470 s bucket ceiling, counted like underflow.
+    overflow: u64,
 }
 
 const BUCKETS: usize = 512;
@@ -42,14 +53,22 @@ impl Histogram {
                 sum_s: 0.0,
                 min_s: f64::INFINITY,
                 max_s: 0.0,
+                underflow: 0,
+                overflow: 0,
             }),
         }
     }
 
-    fn bucket_of(seconds: f64) -> usize {
+    /// Unclamped bucket index — negative for sub-µs samples, `>= BUCKETS`
+    /// for samples past the ceiling. `bucket_of` clamps; `record_secs`
+    /// uses the raw value to count the clamp.
+    fn raw_index(seconds: f64) -> isize {
         let l = seconds.max(1e-9).log10();
-        let idx = ((l - LOG_MIN) / (LOG_MAX - LOG_MIN) * BUCKETS as f64) as isize;
-        idx.clamp(0, BUCKETS as isize - 1) as usize
+        ((l - LOG_MIN) / (LOG_MAX - LOG_MIN) * BUCKETS as f64) as isize
+    }
+
+    fn bucket_of(seconds: f64) -> usize {
+        Self::raw_index(seconds).clamp(0, BUCKETS as isize - 1) as usize
     }
 
     fn bucket_value(idx: usize) -> f64 {
@@ -62,8 +81,14 @@ impl Histogram {
     }
 
     pub fn record_secs(&self, s: f64) {
+        let raw = Self::raw_index(s);
         let mut st = self.buckets.lock().unwrap();
-        st.counts[Self::bucket_of(s)] += 1;
+        st.counts[raw.clamp(0, BUCKETS as isize - 1) as usize] += 1;
+        if raw < 0 {
+            st.underflow += 1;
+        } else if raw >= BUCKETS as isize {
+            st.overflow += 1;
+        }
         st.total += 1;
         st.sum_s += s;
         st.min_s = st.min_s.min(s);
@@ -79,9 +104,9 @@ impl Histogram {
     /// `other` is snapshotted before `self` is locked, so concurrent merges
     /// in either direction (and self-merge, which doubles) cannot deadlock.
     pub fn merge(&self, other: &Histogram) {
-        let (counts, total, sum_s, min_s, max_s) = {
+        let (counts, total, sum_s, min_s, max_s, underflow, overflow) = {
             let o = other.buckets.lock().unwrap();
-            (o.counts.clone(), o.total, o.sum_s, o.min_s, o.max_s)
+            (o.counts.clone(), o.total, o.sum_s, o.min_s, o.max_s, o.underflow, o.overflow)
         };
         if total == 0 {
             return;
@@ -94,6 +119,8 @@ impl Histogram {
         st.sum_s += sum_s;
         st.min_s = st.min_s.min(min_s);
         st.max_s = st.max_s.max(max_s);
+        st.underflow += underflow;
+        st.overflow += overflow;
     }
 
     pub fn count(&self) -> u64 {
@@ -115,6 +142,18 @@ impl Histogram {
 
     pub fn max_s(&self) -> f64 {
         self.buckets.lock().unwrap().max_s
+    }
+
+    /// Samples that fell below the 1 µs bucket floor (clamped into the
+    /// first bucket, but counted here instead of silently absorbed).
+    pub fn underflow(&self) -> u64 {
+        self.buckets.lock().unwrap().underflow
+    }
+
+    /// Samples past the ~4470 s bucket ceiling (clamped into the last
+    /// bucket, but counted here instead of silently absorbed).
+    pub fn overflow(&self) -> u64 {
+        self.buckets.lock().unwrap().overflow
     }
 
     /// Quantile in [0,1] via bucket midpoint interpolation.
@@ -150,7 +189,7 @@ impl Histogram {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "n={} mean={} p50={} p95={} p99={} max={}",
             self.count(),
             crate::util::fmt_secs(self.mean_s()),
@@ -158,7 +197,18 @@ impl Histogram {
             crate::util::fmt_secs(self.p95()),
             crate::util::fmt_secs(self.p99()),
             crate::util::fmt_secs(self.max_s()),
-        )
+        );
+        // Out-of-range clamps are exceptional — the tail only appears
+        // when there is something to report, so the common summary
+        // string stays byte-stable.
+        let (uf, of) = (self.underflow(), self.overflow());
+        if uf > 0 {
+            s.push_str(&format!(" uf={uf}"));
+        }
+        if of > 0 {
+            s.push_str(&format!(" of={of}"));
+        }
+        s
     }
 }
 
@@ -256,11 +306,31 @@ impl PlannerCounters {
 }
 
 /// Requests-per-second meter over the whole run.
+///
+/// Two clock disciplines share one meter:
+///
+/// * **wall clock** (default, [`ThroughputMeter::new`]) — `elapsed()` is
+///   real `Instant` time, for the live serving paths;
+/// * **virtual clock** ([`ThroughputMeter::virtual_time`] /
+///   [`ThroughputMeter::set_elapsed_s`]) — `elapsed()`/`rps()` read a
+///   caller-supplied elapsed-seconds override, so a simulated run's
+///   throughput is a pure function of its virtual horizon and therefore
+///   deterministic across machines and repeat runs.
+///
+/// The counter is a plain [`AtomicU64`]: `record` from any worker thread
+/// is one uncontended `fetch_add`, no lock.
 #[derive(Debug)]
 pub struct ThroughputMeter {
     start: Instant,
-    completed: Mutex<u64>,
+    completed: AtomicU64,
+    /// f64 bit pattern of the virtual elapsed override; `u64::MAX` (an
+    /// f64 NaN) is the sentinel for "no override — use the wall clock".
+    elapsed_bits: AtomicU64,
 }
+
+/// Sentinel bit pattern meaning "no virtual override" (a NaN, so it can
+/// never collide with a legitimate `f64::to_bits` of an elapsed time).
+const WALL_CLOCK: u64 = u64::MAX;
 
 impl Default for ThroughputMeter {
     fn default() -> Self {
@@ -270,24 +340,53 @@ impl Default for ThroughputMeter {
 
 impl ThroughputMeter {
     pub fn new() -> Self {
-        ThroughputMeter { start: Instant::now(), completed: Mutex::new(0) }
+        ThroughputMeter {
+            start: Instant::now(),
+            completed: AtomicU64::new(0),
+            elapsed_bits: AtomicU64::new(WALL_CLOCK),
+        }
+    }
+
+    /// A meter that reports `elapsed_s` of virtual time instead of wall
+    /// clock (the override can be re-pinned later with
+    /// [`ThroughputMeter::set_elapsed_s`] as the virtual clock advances).
+    pub fn virtual_time(elapsed_s: f64) -> Self {
+        let m = Self::new();
+        m.set_elapsed_s(elapsed_s);
+        m
+    }
+
+    /// Pin the elapsed time to `s` seconds of virtual time. From here on
+    /// `elapsed()`/`rps()` are deterministic functions of the recorded
+    /// count and this value.
+    pub fn set_elapsed_s(&self, s: f64) {
+        self.elapsed_bits.store(s.to_bits(), Ordering::Relaxed);
     }
 
     pub fn record(&self, n: u64) {
-        *self.completed.lock().unwrap() += n;
+        self.completed.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn completed(&self) -> u64 {
-        *self.completed.lock().unwrap()
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    /// Elapsed seconds: the virtual override if pinned, wall clock
+    /// otherwise.
+    pub fn elapsed_s(&self) -> f64 {
+        match self.elapsed_bits.load(Ordering::Relaxed) {
+            WALL_CLOCK => self.start.elapsed().as_secs_f64(),
+            bits => f64::from_bits(bits),
+        }
     }
 
     pub fn elapsed(&self) -> Duration {
-        self.start.elapsed()
+        Duration::from_secs_f64(self.elapsed_s().max(0.0))
     }
 
     pub fn rps(&self) -> f64 {
-        let e = self.elapsed().as_secs_f64();
-        if e == 0.0 {
+        let e = self.elapsed_s();
+        if e <= 0.0 {
             return 0.0;
         }
         self.completed() as f64 / e
@@ -438,5 +537,73 @@ mod tests {
         assert_eq!(t.completed(), 15);
         std::thread::sleep(Duration::from_millis(20));
         assert!(t.rps() > 0.0);
+    }
+
+    #[test]
+    fn throughput_meter_virtual_override_is_deterministic() {
+        let t = ThroughputMeter::virtual_time(120.0);
+        t.record(600);
+        assert_eq!(t.elapsed_s(), 120.0);
+        assert_eq!(t.rps(), 5.0);
+        assert_eq!(t.elapsed(), Duration::from_secs(120));
+        // Re-pinning moves the rate with it.
+        t.set_elapsed_s(300.0);
+        assert_eq!(t.rps(), 2.0);
+        // Zero virtual elapsed never divides by zero.
+        t.set_elapsed_s(0.0);
+        assert_eq!(t.rps(), 0.0);
+    }
+
+    #[test]
+    fn throughput_meter_records_from_many_threads() {
+        let t = std::sync::Arc::new(ThroughputMeter::virtual_time(10.0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let t = std::sync::Arc::clone(&t);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        t.record(1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.completed(), 4000);
+        assert_eq!(t.rps(), 400.0);
+    }
+
+    #[test]
+    fn histogram_counts_underflow_and_overflow() {
+        let h = Histogram::new();
+        h.record_secs(1e-8); // below the 1 µs floor
+        h.record_secs(0.5); // in range
+        h.record_secs(10_000.0); // above the ~4470 s ceiling
+        assert_eq!(h.count(), 3, "clamped samples still count toward total");
+        assert_eq!(h.underflow(), 1);
+        assert_eq!(h.overflow(), 1);
+        let s = h.summary();
+        assert!(s.contains(" uf=1") && s.contains(" of=1"), "summary hides clamps: {s}");
+        // An in-range histogram keeps the legacy summary shape.
+        let clean = Histogram::new();
+        clean.record_secs(0.5);
+        let s = clean.summary();
+        assert!(!s.contains("uf=") && !s.contains("of="), "spurious clamp tail: {s}");
+        assert_eq!((clean.underflow(), clean.overflow()), (0, 0));
+    }
+
+    #[test]
+    fn merge_carries_underflow_and_overflow() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record_secs(1e-9);
+        b.record_secs(5000.0);
+        b.record_secs(1e-12);
+        a.merge(&b);
+        assert_eq!(a.underflow(), 2);
+        assert_eq!(a.overflow(), 1);
+        // b untouched.
+        assert_eq!((b.underflow(), b.overflow()), (1, 1));
     }
 }

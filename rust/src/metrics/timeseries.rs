@@ -1,0 +1,498 @@
+//! Windowed time-series telemetry: fixed virtual-time windows over the
+//! simulated request path (DESIGN.md §12).
+//!
+//! The whole-run aggregates in [`super`] answer *what happened*; this
+//! collector answers *when*: per-window latency quantiles per tier,
+//! per-site queue depth and utilisation, planner cache hit rate, and
+//! handover/migration rates. Windows are `[k·w, (k+1)·w)` on the virtual
+//! clock — an event stamped exactly on a boundary opens the next window
+//! — so the series is a pure function of the event stream and therefore
+//! byte-identical across thread configs and repeat runs.
+//!
+//! Memory discipline: only the *current* window holds live histograms
+//! (four log-bucketed [`Histogram`]s); every closed window is flattened
+//! to a [`WindowSummary`] of plain numbers, so a long run with small
+//! windows stays cheap.
+
+use super::{Histogram, PlannerStats};
+use crate::util::json::Json;
+
+/// Boundary snapshot of one M/G/c pool (edge site or cloud), taken by
+/// the caller when a window closes. `busy_time_s` is the pool's
+/// cumulative committed service time — the collector differences
+/// consecutive snapshots to get per-window utilisation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolGauge {
+    pub queue_len: usize,
+    pub busy_time_s: f64,
+    pub servers: usize,
+}
+
+/// One tier's latency distribution inside one window, flattened.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TierWindow {
+    pub count: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+impl TierWindow {
+    fn from_hist(h: &Histogram) -> TierWindow {
+        TierWindow {
+            count: h.count(),
+            mean_s: h.mean_s(),
+            p50_s: h.p50(),
+            p95_s: h.p95(),
+            p99_s: h.p99(),
+            max_s: h.max_s(),
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("mean_s", Json::Num(self.mean_s)),
+            ("p50_s", Json::Num(self.p50_s)),
+            ("p95_s", Json::Num(self.p95_s)),
+            ("p99_s", Json::Num(self.p99_s)),
+            ("max_s", Json::Num(self.max_s)),
+        ])
+    }
+}
+
+/// One pool's state over one window: queue depth at the closing
+/// boundary, utilisation over the window (committed service time /
+/// server-seconds — unclamped, like `utilization()` on the pools, so a
+/// backlog burning down can legitimately exceed 1).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PoolWindow {
+    pub queue_depth: usize,
+    pub utilization: f64,
+}
+
+impl PoolWindow {
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("utilization", Json::Num(self.utilization)),
+        ])
+    }
+}
+
+/// A closed window, flattened to plain numbers.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WindowSummary {
+    /// Window ordinal: this window covers `[index·w, end_s)`.
+    pub index: u64,
+    pub start_s: f64,
+    /// End boundary — `(index+1)·w` for full windows, the horizon for a
+    /// partial tail window.
+    pub end_s: f64,
+    pub generated: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub resplits: u64,
+    pub handovers: u64,
+    pub migration_replans: u64,
+    /// Planner cache traffic inside this window (façade requests from
+    /// any thread land here when the window closes).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// End-to-end latency of requests *completing* in this window.
+    pub latency: TierWindow,
+    pub device_queue: TierWindow,
+    pub edge_queue: TierWindow,
+    pub cloud_queue: TierWindow,
+    pub edges: Vec<PoolWindow>,
+    pub clouds: Vec<PoolWindow>,
+}
+
+impl WindowSummary {
+    /// Planner cache hit rate inside this window, in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / total as f64
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("index", Json::Num(self.index as f64)),
+            ("start_s", Json::Num(self.start_s)),
+            ("end_s", Json::Num(self.end_s)),
+            ("generated", Json::Num(self.generated as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            ("resplits", Json::Num(self.resplits as f64)),
+            ("handovers", Json::Num(self.handovers as f64)),
+            ("migration_replans", Json::Num(self.migration_replans as f64)),
+            (
+                "planner",
+                Json::obj(vec![
+                    ("cache_hits", Json::Num(self.cache_hits as f64)),
+                    ("cache_misses", Json::Num(self.cache_misses as f64)),
+                    ("hit_rate", Json::Num(self.hit_rate())),
+                ]),
+            ),
+            ("latency", self.latency.to_json()),
+            ("device_queue", self.device_queue.to_json()),
+            ("edge_queue", self.edge_queue.to_json()),
+            ("cloud_queue", self.cloud_queue.to_json()),
+            ("edges", Json::Arr(self.edges.iter().map(|p| p.to_json()).collect())),
+            ("clouds", Json::Arr(self.clouds.iter().map(|p| p.to_json()).collect())),
+        ])
+    }
+}
+
+/// The finalized series: every window in order, ready for `SimReport`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TimeSeriesReport {
+    pub window_s: f64,
+    pub windows: Vec<WindowSummary>,
+}
+
+impl TimeSeriesReport {
+    /// Deterministic JSON (insertion-ordered objects; the `--metrics-out`
+    /// payload embeds this under `"series"`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("window_s", Json::Num(self.window_s)),
+            ("windows", Json::Arr(self.windows.iter().map(|w| w.to_json()).collect())),
+        ])
+    }
+
+    /// Per-window planner hit rates, in window order (the
+    /// `planner_throughput` bench tracks this curve in
+    /// `BENCH_planner.json`).
+    pub fn hit_rate_curve(&self) -> Vec<f64> {
+        self.windows.iter().map(|w| w.hit_rate()).collect()
+    }
+
+    /// Compact per-window console table (one line per window).
+    pub fn print_brief(&self) {
+        println!(
+            "  series     : {} windows of {:.1}s (virtual)",
+            self.windows.len(),
+            self.window_s
+        );
+        for w in &self.windows {
+            println!(
+                "    [{:>3}] {:>7.1}-{:<7.1} gen={:<6} done={:<6} p95={} hit={:>3.0}% ho={} mig={}",
+                w.index,
+                w.start_s,
+                w.end_s,
+                w.generated,
+                w.completed,
+                crate::util::fmt_secs(w.latency.p95_s),
+                w.hit_rate() * 100.0,
+                w.handovers,
+                w.migration_replans,
+            );
+        }
+    }
+}
+
+/// Live accumulator for the current window.
+#[derive(Debug, Default)]
+struct WindowAcc {
+    generated: u64,
+    completed: u64,
+    dropped: u64,
+    resplits: u64,
+    handovers: u64,
+    migration_replans: u64,
+    latency: Histogram,
+    device_queue: Histogram,
+    edge_queue: Histogram,
+    cloud_queue: Histogram,
+}
+
+/// The collector: record hooks fill the current window; [`TimeSeries::roll`]
+/// closes it (possibly several, when the clock jumps over quiet windows)
+/// whenever the virtual clock crosses a boundary.
+#[derive(Debug)]
+pub struct TimeSeries {
+    window_s: f64,
+    cur_idx: u64,
+    cur: WindowAcc,
+    /// Planner counters at the last window close — windows report deltas.
+    planner_base: PlannerStats,
+    /// `busy_time_s` per edge site / cloud at the last window close.
+    edge_busy_base: Vec<f64>,
+    cloud_busy_base: Vec<f64>,
+    closed: Vec<WindowSummary>,
+}
+
+impl TimeSeries {
+    /// `window_s` must be positive; callers gate collection on a
+    /// configured window, so a non-positive width is a config bug.
+    pub fn new(window_s: f64, n_edges: usize, n_clouds: usize) -> TimeSeries {
+        assert!(window_s > 0.0, "time-series window must be positive, got {window_s}");
+        TimeSeries {
+            window_s,
+            cur_idx: 0,
+            cur: WindowAcc::default(),
+            planner_base: PlannerStats {
+                cache_hits: 0,
+                cache_misses: 0,
+                solves: 0,
+                requests_by_reason: [0; super::REPLAN_REASONS],
+            },
+            edge_busy_base: vec![0.0; n_edges],
+            cloud_busy_base: vec![0.0; n_clouds],
+            closed: Vec::new(),
+        }
+    }
+
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    /// Cheap pre-check: does the clock at `t` sit past the current
+    /// window? Callers test this before assembling the (more expensive)
+    /// pool gauges that [`TimeSeries::roll`] needs.
+    pub fn needs_roll(&self, t: f64) -> bool {
+        t >= (self.cur_idx + 1) as f64 * self.window_s
+    }
+
+    // ------------------------------------------------------ record hooks
+
+    pub fn on_generated(&mut self) {
+        self.cur.generated += 1;
+    }
+
+    pub fn on_completed(&mut self, latency_s: f64) {
+        self.cur.completed += 1;
+        self.cur.latency.record_secs(latency_s);
+    }
+
+    pub fn on_dropped(&mut self, n: u64) {
+        self.cur.dropped += n;
+    }
+
+    pub fn on_resplit(&mut self) {
+        self.cur.resplits += 1;
+    }
+
+    pub fn on_handover(&mut self) {
+        self.cur.handovers += 1;
+    }
+
+    pub fn on_migration(&mut self) {
+        self.cur.migration_replans += 1;
+    }
+
+    pub fn on_device_wait(&mut self, s: f64) {
+        self.cur.device_queue.record_secs(s);
+    }
+
+    pub fn on_edge_wait(&mut self, s: f64) {
+        self.cur.edge_queue.record_secs(s);
+    }
+
+    pub fn on_cloud_wait(&mut self, s: f64) {
+        self.cur.cloud_queue.record_secs(s);
+    }
+
+    // ------------------------------------------------------------- close
+
+    /// Close every window whose end boundary is `<= t` (quiet windows in
+    /// between close empty — the series stays contiguous). `planner` is
+    /// the *cumulative* stats snapshot and the gauges the *cumulative*
+    /// pool states; the collector differences them against the previous
+    /// boundary.
+    pub fn roll(&mut self, t: f64, planner: PlannerStats, edges: &[PoolGauge], clouds: &[PoolGauge]) {
+        while self.needs_roll(t) {
+            let end = (self.cur_idx + 1) as f64 * self.window_s;
+            self.close_current(end, planner, edges, clouds);
+        }
+    }
+
+    fn close_current(
+        &mut self,
+        end_s: f64,
+        planner: PlannerStats,
+        edges: &[PoolGauge],
+        clouds: &[PoolGauge],
+    ) {
+        let start_s = self.cur_idx as f64 * self.window_s;
+        let dur = (end_s - start_s).max(0.0);
+        let acc = std::mem::take(&mut self.cur);
+        let pool_windows = |gauges: &[PoolGauge], base: &mut Vec<f64>| -> Vec<PoolWindow> {
+            gauges
+                .iter()
+                .enumerate()
+                .map(|(i, g)| {
+                    let prev = base.get(i).copied().unwrap_or(0.0);
+                    if base.len() <= i {
+                        base.resize(i + 1, 0.0);
+                    }
+                    base[i] = g.busy_time_s;
+                    let utilization = if g.servers == 0 || dur <= 0.0 {
+                        0.0
+                    } else {
+                        (g.busy_time_s - prev) / (g.servers as f64 * dur)
+                    };
+                    PoolWindow { queue_depth: g.queue_len, utilization }
+                })
+                .collect()
+        };
+        let edge_windows = pool_windows(edges, &mut self.edge_busy_base);
+        let cloud_windows = pool_windows(clouds, &mut self.cloud_busy_base);
+        self.closed.push(WindowSummary {
+            index: self.cur_idx,
+            start_s,
+            end_s,
+            generated: acc.generated,
+            completed: acc.completed,
+            dropped: acc.dropped,
+            resplits: acc.resplits,
+            handovers: acc.handovers,
+            migration_replans: acc.migration_replans,
+            cache_hits: planner.cache_hits - self.planner_base.cache_hits,
+            cache_misses: planner.cache_misses - self.planner_base.cache_misses,
+            latency: TierWindow::from_hist(&acc.latency),
+            device_queue: TierWindow::from_hist(&acc.device_queue),
+            edge_queue: TierWindow::from_hist(&acc.edge_queue),
+            cloud_queue: TierWindow::from_hist(&acc.cloud_queue),
+            edges: edge_windows,
+            clouds: cloud_windows,
+        });
+        self.planner_base = planner;
+        self.cur_idx += 1;
+    }
+
+    /// Close out the run at `end_s`: full windows first, then a partial
+    /// tail window iff the horizon lands strictly inside one.
+    pub fn finalize(
+        mut self,
+        end_s: f64,
+        planner: PlannerStats,
+        edges: &[PoolGauge],
+        clouds: &[PoolGauge],
+    ) -> TimeSeriesReport {
+        self.roll(end_s, planner, edges, clouds);
+        if end_s > self.cur_idx as f64 * self.window_s {
+            self.close_current(end_s, planner, edges, clouds);
+        }
+        TimeSeriesReport { window_s: self.window_s, windows: self.closed }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(hits: u64, misses: u64) -> PlannerStats {
+        PlannerStats {
+            cache_hits: hits,
+            cache_misses: misses,
+            solves: misses,
+            requests_by_reason: [0; crate::metrics::REPLAN_REASONS],
+        }
+    }
+
+    #[test]
+    fn windows_are_contiguous_even_across_quiet_gaps() {
+        let mut ts = TimeSeries::new(10.0, 0, 1);
+        ts.on_generated();
+        ts.on_completed(0.5);
+        // The clock jumps straight to 35s: windows 0, 1, 2 must all
+        // close (1 and 2 empty), and the tail [30, 35) is partial.
+        let gauges = [PoolGauge { queue_len: 0, busy_time_s: 5.0, servers: 2 }];
+        ts.roll(35.0, stats(3, 1), &[], &gauges);
+        ts.on_completed(1.0);
+        let report = ts.finalize(35.0, stats(4, 1), &[], &gauges);
+        assert_eq!(report.windows.len(), 4);
+        for (i, w) in report.windows.iter().enumerate() {
+            assert_eq!(w.index, i as u64);
+            assert_eq!(w.start_s, i as f64 * 10.0);
+        }
+        for pair in report.windows.windows(2) {
+            assert_eq!(pair[0].end_s, pair[1].start_s, "gap in the series");
+        }
+        assert_eq!(report.windows[0].completed, 1);
+        assert_eq!(report.windows[1].completed, 0);
+        assert_eq!(report.windows[3].end_s, 35.0);
+        assert_eq!(report.windows[3].completed, 1);
+        // Totals are conserved across windows.
+        let total: u64 = report.windows.iter().map(|w| w.completed).sum();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn planner_deltas_and_hit_rate_per_window() {
+        let mut ts = TimeSeries::new(1.0, 0, 0);
+        ts.roll(1.0, stats(2, 2), &[], &[]);
+        ts.roll(2.0, stats(8, 2), &[], &[]);
+        let report = ts.finalize(2.0, stats(8, 2), &[], &[]);
+        assert_eq!(report.windows.len(), 2);
+        assert_eq!((report.windows[0].cache_hits, report.windows[0].cache_misses), (2, 2));
+        assert_eq!((report.windows[1].cache_hits, report.windows[1].cache_misses), (6, 0));
+        assert!((report.windows[0].hit_rate() - 0.5).abs() < 1e-12);
+        assert!((report.windows[1].hit_rate() - 1.0).abs() < 1e-12);
+        assert_eq!(report.hit_rate_curve(), vec![0.5, 1.0]);
+    }
+
+    #[test]
+    fn pool_utilization_differences_busy_time() {
+        let mut ts = TimeSeries::new(10.0, 1, 0);
+        // 4s of committed service on a 2-server site over a 10s window.
+        ts.roll(10.0, stats(0, 0), &[PoolGauge { queue_len: 3, busy_time_s: 4.0, servers: 2 }], &[]);
+        // 4 more seconds over the next window.
+        let report = ts.finalize(
+            20.0,
+            stats(0, 0),
+            &[PoolGauge { queue_len: 0, busy_time_s: 8.0, servers: 2 }],
+            &[],
+        );
+        assert_eq!(report.windows.len(), 2);
+        assert_eq!(report.windows[0].edges[0].queue_depth, 3);
+        assert!((report.windows[0].edges[0].utilization - 0.2).abs() < 1e-12);
+        assert!((report.windows[1].edges[0].utilization - 0.2).abs() < 1e-12);
+        assert_eq!(report.windows[1].edges[0].queue_depth, 0);
+    }
+
+    #[test]
+    fn relay_only_pool_reports_zero_utilization() {
+        let ts = TimeSeries::new(5.0, 1, 0);
+        let gauge = [PoolGauge { queue_len: 0, busy_time_s: 0.0, servers: 0 }];
+        let report = ts.finalize(5.0, stats(0, 0), &gauge, &[]);
+        assert_eq!(report.windows[0].edges[0].utilization, 0.0);
+    }
+
+    #[test]
+    fn exact_horizon_boundary_emits_no_empty_tail() {
+        let mut ts = TimeSeries::new(10.0, 0, 0);
+        ts.on_completed(0.1);
+        let report = ts.finalize(20.0, stats(0, 0), &[], &[]);
+        assert_eq!(report.windows.len(), 2, "horizon on a boundary must not add a tail");
+        assert_eq!(report.windows[1].end_s, 20.0);
+    }
+
+    #[test]
+    fn json_shape_is_stable_and_parseable() {
+        let mut ts = TimeSeries::new(10.0, 1, 1);
+        ts.on_generated();
+        ts.on_completed(0.25);
+        ts.on_handover();
+        let g = [PoolGauge { queue_len: 1, busy_time_s: 2.0, servers: 2 }];
+        let report = ts.finalize(10.0, stats(1, 1), &g, &g);
+        let j = report.to_json();
+        let text = j.to_string_pretty();
+        let parsed = crate::util::json::Json::parse(&text).expect("self-emitted JSON parses");
+        assert_eq!(parsed.get_f64("window_s").unwrap(), 10.0);
+        let w = parsed.get("windows").unwrap().at(0).unwrap();
+        assert_eq!(w.get_usize("completed").unwrap(), 1);
+        assert_eq!(w.get("planner").unwrap().get_f64("hit_rate").unwrap(), 0.5);
+        assert_eq!(w.get("latency").unwrap().get_usize("count").unwrap(), 1);
+        assert_eq!(w.get("edges").unwrap().at(0).unwrap().get_usize("queue_depth").unwrap(), 1);
+        // Serialisation is deterministic.
+        assert_eq!(text, report.to_json().to_string_pretty());
+    }
+}

@@ -15,6 +15,7 @@ use crate::sim::engine::SimTime;
 /// One queued request.
 #[derive(Clone, Copy, Debug)]
 struct Queued {
+    req: u64,
     device: usize,
     issued: SimTime,
     enqueued: SimTime,
@@ -24,9 +25,14 @@ struct Queued {
 /// A request popped off the queue when a server frees up.
 #[derive(Clone, Copy, Debug)]
 pub struct Dequeued {
+    pub req: u64,
     pub device: usize,
     pub issued: SimTime,
     pub service_s: f64,
+    /// Time this request spent queued (`now - enqueued`), surfaced so
+    /// the caller can feed the windowed time series and close the
+    /// request's `cloud_queue` trace span without re-deriving it.
+    pub waited_s: f64,
 }
 
 /// A virtual cloud server pool.
@@ -64,6 +70,7 @@ impl SimCloud {
     /// request queues FIFO.
     pub fn offer(
         &mut self,
+        req: u64,
         device: usize,
         issued: SimTime,
         now: SimTime,
@@ -75,7 +82,7 @@ impl SimCloud {
             self.queue_delay.record_secs(0.0);
             Some(service_s)
         } else {
-            self.queue.push_back(Queued { device, issued, enqueued: now, service_s });
+            self.queue.push_back(Queued { req, device, issued, enqueued: now, service_s });
             self.peak_queue = self.peak_queue.max(self.queue.len());
             None
         }
@@ -89,7 +96,13 @@ impl SimCloud {
             Some(q) => {
                 self.queue_delay.record_secs(now - q.enqueued);
                 self.busy_time_s += q.service_s;
-                Some(Dequeued { device: q.device, issued: q.issued, service_s: q.service_s })
+                Some(Dequeued {
+                    req: q.req,
+                    device: q.device,
+                    issued: q.issued,
+                    service_s: q.service_s,
+                    waited_s: now - q.enqueued,
+                })
             }
             None => {
                 self.busy -= 1;
@@ -108,6 +121,13 @@ impl SimCloud {
 
     pub fn peak_queue(&self) -> usize {
         self.peak_queue
+    }
+
+    /// Cumulative committed service time, in seconds. The windowed
+    /// time series differences boundary snapshots of this to get
+    /// per-window utilisation.
+    pub fn busy_time_s(&self) -> f64 {
+        self.busy_time_s
     }
 
     /// Offered utilisation: busy-seconds accrued per server-second of the
@@ -129,28 +149,31 @@ mod tests {
     #[test]
     fn serves_immediately_when_free() {
         let mut c = SimCloud::new(2);
-        assert_eq!(c.offer(0, 0.0, 0.0, 0.5), Some(0.5));
-        assert_eq!(c.offer(1, 0.0, 0.0, 0.5), Some(0.5));
+        assert_eq!(c.offer(10, 0, 0.0, 0.0, 0.5), Some(0.5));
+        assert_eq!(c.offer(11, 1, 0.0, 0.0, 0.5), Some(0.5));
         assert_eq!(c.busy(), 2);
-        assert_eq!(c.offer(2, 0.1, 0.1, 0.5), None);
+        assert_eq!(c.offer(12, 2, 0.1, 0.1, 0.5), None);
         assert_eq!(c.queue_len(), 1);
     }
 
     #[test]
     fn finish_dequeues_fifo_with_captured_service_time() {
         let mut c = SimCloud::new(1);
-        assert!(c.offer(0, 0.0, 0.0, 1.0).is_some());
-        assert!(c.offer(1, 0.2, 0.2, 0.7).is_none());
-        assert!(c.offer(2, 0.3, 0.3, 0.9).is_none());
+        assert!(c.offer(10, 0, 0.0, 0.0, 1.0).is_some());
+        assert!(c.offer(11, 1, 0.2, 0.2, 0.7).is_none());
+        assert!(c.offer(12, 2, 0.3, 0.3, 0.9).is_none());
         // Server frees at t=1.0: device 1 (queued first) starts with the
         // service time captured at issue.
         let d = c.finish(1.0).unwrap();
+        assert_eq!(d.req, 11);
         assert_eq!(d.device, 1);
         assert_eq!(d.issued, 0.2);
         assert_eq!(d.service_s, 0.7);
         // Its queue delay was 1.0 - 0.2 = 0.8 s.
+        assert!((d.waited_s - 0.8).abs() < 1e-12);
         assert!((c.queue_delay.max_s() - 0.8).abs() < 1e-12);
         let d = c.finish(1.7).unwrap();
+        assert_eq!(d.req, 12);
         assert_eq!(d.device, 2);
         assert!(c.finish(2.6).is_none());
         assert_eq!(c.busy(), 0);
@@ -161,12 +184,13 @@ mod tests {
     #[test]
     fn utilization_is_busy_time_over_capacity() {
         let mut c = SimCloud::new(2);
-        c.offer(0, 0.0, 0.0, 3.0);
-        c.offer(1, 0.0, 0.0, 1.0);
+        c.offer(0, 0, 0.0, 0.0, 3.0);
+        c.offer(1, 1, 0.0, 0.0, 1.0);
         c.finish(1.0);
         c.finish(3.0);
         // 4 busy-seconds over 2 servers × 4 s horizon = 0.5.
         assert!((c.utilization(4.0) - 0.5).abs() < 1e-12);
+        assert!((c.busy_time_s() - 4.0).abs() < 1e-12);
         assert_eq!(c.utilization(0.0), 0.0);
     }
 }

@@ -119,9 +119,11 @@ pub struct SimDevice {
     /// `Planner::Fixed` devices never re-plan.
     pinned: bool,
 
-    // Serial execution: one request at a time on the phone.
+    // Serial execution: one request at a time on the phone. The backlog
+    // holds `(request ordinal, issue time)` — the ordinal keys the
+    // request's trace timeline across its whole journey.
     pub busy: bool,
-    pub backlog: VecDeque<SimTime>,
+    pub backlog: VecDeque<(u64, SimTime)>,
     pub active: bool,
 
     // Accounting.

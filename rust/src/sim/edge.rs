@@ -16,6 +16,7 @@ use crate::sim::engine::SimTime;
 /// One queued torso request.
 #[derive(Clone, Copy, Debug)]
 struct Queued {
+    req: u64,
     device: usize,
     issued: SimTime,
     enqueued: SimTime,
@@ -27,11 +28,16 @@ struct Queued {
 /// A torso request popped off the queue when an edge server frees up.
 #[derive(Clone, Copy, Debug)]
 pub struct EdgeDequeued {
+    pub req: u64,
     pub device: usize,
     pub issued: SimTime,
     pub service_s: f64,
     pub backhaul_s: f64,
     pub tail_s: f64,
+    /// Time this request spent queued (`now - enqueued`), surfaced so
+    /// the caller can feed the windowed time series and close the
+    /// request's `edge_queue` trace span without re-deriving it.
+    pub waited_s: f64,
 }
 
 /// A virtual edge-site server pool.
@@ -69,6 +75,7 @@ impl SimEdge {
     #[allow(clippy::too_many_arguments)]
     pub fn offer(
         &mut self,
+        req: u64,
         device: usize,
         issued: SimTime,
         now: SimTime,
@@ -84,6 +91,7 @@ impl SimEdge {
             Some(service_s)
         } else {
             self.queue.push_back(Queued {
+                req,
                 device,
                 issued,
                 enqueued: now,
@@ -105,11 +113,13 @@ impl SimEdge {
                 self.queue_delay.record_secs(now - q.enqueued);
                 self.busy_time_s += q.service_s;
                 Some(EdgeDequeued {
+                    req: q.req,
                     device: q.device,
                     issued: q.issued,
                     service_s: q.service_s,
                     backhaul_s: q.backhaul_s,
                     tail_s: q.tail_s,
+                    waited_s: now - q.enqueued,
                 })
             }
             None => {
@@ -131,6 +141,12 @@ impl SimEdge {
         self.peak_queue
     }
 
+    /// Cumulative committed service time, in seconds (same role as
+    /// [`crate::sim::SimCloud::busy_time_s`]).
+    pub fn busy_time_s(&self) -> f64 {
+        self.busy_time_s
+    }
+
     /// Offered utilisation — same convention as
     /// [`crate::sim::SimCloud::utilization`] (deliberately unclamped).
     /// Relay-only sites report 0.
@@ -149,25 +165,27 @@ mod tests {
     #[test]
     fn serves_immediately_when_free() {
         let mut e = SimEdge::new(2);
-        assert_eq!(e.offer(0, 0.0, 0.0, 0.5, 0.1, 0.2), Some(0.5));
-        assert_eq!(e.offer(1, 0.0, 0.0, 0.5, 0.1, 0.2), Some(0.5));
+        assert_eq!(e.offer(10, 0, 0.0, 0.0, 0.5, 0.1, 0.2), Some(0.5));
+        assert_eq!(e.offer(11, 1, 0.0, 0.0, 0.5, 0.1, 0.2), Some(0.5));
         assert_eq!(e.busy(), 2);
-        assert_eq!(e.offer(2, 0.1, 0.1, 0.5, 0.1, 0.2), None);
+        assert_eq!(e.offer(12, 2, 0.1, 0.1, 0.5, 0.1, 0.2), None);
         assert_eq!(e.queue_len(), 1);
     }
 
     #[test]
     fn finish_dequeues_fifo_with_captured_hop_costs() {
         let mut e = SimEdge::new(1);
-        assert!(e.offer(0, 0.0, 0.0, 1.0, 0.01, 0.3).is_some());
-        assert!(e.offer(1, 0.2, 0.2, 0.7, 0.02, 0.4).is_none());
+        assert!(e.offer(10, 0, 0.0, 0.0, 1.0, 0.01, 0.3).is_some());
+        assert!(e.offer(11, 1, 0.2, 0.2, 0.7, 0.02, 0.4).is_none());
         let d = e.finish(1.0).unwrap();
+        assert_eq!(d.req, 11);
         assert_eq!(d.device, 1);
         assert_eq!(d.issued, 0.2);
         assert_eq!(d.service_s, 0.7);
         // The downstream hop costs ride through the queue untouched.
         assert_eq!(d.backhaul_s, 0.02);
         assert_eq!(d.tail_s, 0.4);
+        assert!((d.waited_s - 0.8).abs() < 1e-12);
         assert!((e.queue_delay.max_s() - 0.8).abs() < 1e-12);
         assert!(e.finish(1.7).is_none());
         assert_eq!(e.busy(), 0);
@@ -177,11 +195,12 @@ mod tests {
     #[test]
     fn utilization_mirrors_cloud_convention() {
         let mut e = SimEdge::new(2);
-        e.offer(0, 0.0, 0.0, 3.0, 0.0, 0.0);
-        e.offer(1, 0.0, 0.0, 1.0, 0.0, 0.0);
+        e.offer(0, 0, 0.0, 0.0, 3.0, 0.0, 0.0);
+        e.offer(1, 1, 0.0, 0.0, 1.0, 0.0, 0.0);
         e.finish(1.0);
         e.finish(3.0);
         assert!((e.utilization(4.0) - 0.5).abs() < 1e-12);
+        assert!((e.busy_time_s() - 4.0).abs() < 1e-12);
         assert_eq!(e.utilization(0.0), 0.0);
         assert_eq!(SimEdge::new(0).utilization(10.0), 0.0);
     }
@@ -190,6 +209,6 @@ mod tests {
     #[should_panic(expected = "relay-only")]
     fn relay_site_rejects_torso_work() {
         let mut e = SimEdge::new(0);
-        e.offer(0, 0.0, 0.0, 1.0, 0.0, 0.0);
+        e.offer(0, 0, 0.0, 0.0, 1.0, 0.0, 0.0);
     }
 }

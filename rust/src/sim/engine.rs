@@ -29,8 +29,12 @@ pub enum Event {
     /// through its site, so its `backhaul_s` is 0 only when the
     /// backhaul itself is free (the degenerate-parity condition) or the
     /// tail is empty. `site` is `None` for devices with no edge
-    /// attachment (and then `torso_s == 0` always).
+    /// attachment (and then `torso_s == 0` always). `req` is the
+    /// fleet-wide request ordinal (assigned at generation), carried so
+    /// the tracer can stitch every hop of one request into one
+    /// timeline.
     Uplinked {
+        req: u64,
         device: usize,
         issued: SimTime,
         site: Option<usize>,
@@ -41,6 +45,7 @@ pub enum Event {
     /// An edge-site server finished the torso layers of this device's
     /// request; next stop is the backhaul (then the cloud).
     EdgeDone {
+        req: u64,
         site: usize,
         device: usize,
         issued: SimTime,
@@ -48,9 +53,9 @@ pub enum Event {
         tail_s: f64,
     },
     /// A request crossed the backhaul and reaches its cloud's queue.
-    CloudArrive { device: usize, issued: SimTime, tail_s: f64 },
+    CloudArrive { req: u64, device: usize, issued: SimTime, tail_s: f64 },
     /// A cloud server finished the tail layers of this device's request.
-    CloudDone { cloud: usize, device: usize, issued: SimTime },
+    CloudDone { req: u64, cloud: usize, device: usize, issued: SimTime },
     /// Mobility tick: advance this device's waypoint walk one step
     /// ([`crate::sim::mobility::Walker::step`]). A tick that crosses
     /// into another site's cell begins an edge handover — the in-flight

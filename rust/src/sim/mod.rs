@@ -32,6 +32,14 @@
 //!
 //! Reports reuse [`crate::metrics::Histogram`], so simulated and
 //! socket-measured runs read the same.
+//!
+//! **Observability** ([`scenario::ObservabilityConfig`], DESIGN.md §12)
+//! is opt-in: per-request span timelines through [`crate::trace`]
+//! (exportable via `simulate --trace-out`) and a windowed
+//! [`crate::metrics::TimeSeries`] (`--metrics-out`). Both stamp the
+//! virtual clock only, never change decisions or event order, and cost
+//! nothing when disabled — `tests/observability.rs` pins transparency
+//! and byte-identical exports across thread configs.
 
 pub mod cloud;
 pub mod device;
@@ -49,10 +57,13 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::battery::BatteryBand;
 use crate::device::ComputeProfile;
 use crate::edge::{EdgeTopology, SplitPlan};
-use crate::metrics::{Histogram, PlannerStats};
+use crate::metrics::{
+    Histogram, PlannerStats, PoolGauge, ThroughputMeter, TimeSeries, TimeSeriesReport,
+};
 use crate::models::{zoo, ModelProfile};
 use crate::optimizer::{Nsga2Params, PlanKey};
 use crate::planner::{PlanRequest, PlannerConfig, ReplanReason, TierContext};
+use crate::trace::{CausalEvent, SpanKind, TraceRecorder, TraceReport};
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Xoshiro256;
 use crate::workload::next_interarrival;
@@ -64,7 +75,7 @@ pub use engine::{Event, EventQueue, SimTime};
 pub use mobility::{Mobility, WaypointWalk};
 pub use scenario::{
     city_mobile, city_scale, city_scale_tiered, two_phone_fleet, ChurnConfig, EdgeSpec,
-    ExplicitMember, FleetSpec, PlannerPerfConfig, SimConfig,
+    ExplicitMember, FleetSpec, ObservabilityConfig, PlannerPerfConfig, SimConfig,
 };
 
 /// Per-profile slice of the fleet report (devices sharing a
@@ -153,6 +164,14 @@ pub struct SimReport {
     /// byte-identical streams — `tests/planner_cache.rs`); empty
     /// otherwise.
     pub decisions: Vec<(u32, u32, u32)>,
+    /// Windowed time series ([`ObservabilityConfig::window_s`] > 0);
+    /// `None` when the collector was disabled. Exported by
+    /// `simulate --metrics-out`.
+    pub series: Option<TimeSeriesReport>,
+    /// Per-request span timelines + causal annotations
+    /// ([`ObservabilityConfig::trace_sample_every`] > 0); `None` when
+    /// tracing was disabled. Exported by `simulate --trace-out`.
+    pub trace: Option<TraceReport>,
 }
 
 impl SimReport {
@@ -295,6 +314,18 @@ impl SimReport {
             self.migration_replans,
             self.planner.migration_requests(),
         );
+        if let Some(ts) = &self.series {
+            ts.print_brief();
+        }
+        if let Some(tr) = &self.trace {
+            println!(
+                "  trace      : {} requests sampled (every {}), {} causal events, {} unfinished",
+                tr.requests.len(),
+                tr.sample_every,
+                tr.events.len(),
+                tr.unfinished
+            );
+        }
         let splits: Vec<String> = self
             .split_distribution
             .iter()
@@ -423,6 +454,29 @@ struct Sim<'a> {
     decision_count: u64,
     /// Full decision trace; only fed when `planner_perf.record_decisions`.
     decisions: Vec<(u32, u32, u32)>,
+    /// Virtual-time throughput meter: completions accumulate on the hot
+    /// path, the elapsed override is pinned to the horizon at report
+    /// time — `rps()` never reads the wall clock in a sim.
+    meter: ThroughputMeter,
+    /// Per-request span recorder; `Some` iff
+    /// `observability.trace_sample_every > 0`.
+    trace: Option<TraceRecorder>,
+    /// Windowed telemetry collector; `Some` iff
+    /// `observability.window_s > 0`.
+    series: Option<TimeSeries>,
+}
+
+/// Boundary snapshot of every pool for the time-series collector.
+fn pool_gauges(edges: &[SimEdge], clouds: &[SimCloud]) -> (Vec<PoolGauge>, Vec<PoolGauge>) {
+    let snap_e = edges
+        .iter()
+        .map(|e| PoolGauge { queue_len: e.queue_len(), busy_time_s: e.busy_time_s(), servers: e.servers })
+        .collect();
+    let snap_c = clouds
+        .iter()
+        .map(|c| PoolGauge { queue_len: c.queue_len(), busy_time_s: c.busy_time_s(), servers: c.servers })
+        .collect();
+    (snap_e, snap_c)
 }
 
 impl<'a> Sim<'a> {
@@ -450,6 +504,13 @@ impl<'a> Sim<'a> {
         }
         if cfg.fleet.initial_count() == 0 {
             bail!("sim needs at least one initial device");
+        }
+        let obs = cfg.observability;
+        if !(obs.window_s >= 0.0) || !obs.window_s.is_finite() {
+            bail!(
+                "time-series window must be a finite non-negative number of seconds, got {}",
+                obs.window_s
+            );
         }
         let model = Arc::new(spec.analyze(1));
         let topology = cfg.edge.as_ref().map(|spec| spec.topology());
@@ -488,6 +549,17 @@ impl<'a> Sim<'a> {
                 .with_bucket_ratio(cfg.planner_perf.bw_bucket_ratio)
                 .with_cache(cfg.planner_perf.cache),
         );
+        let edge_sites: usize = topology.as_ref().map(|t| t.num_sites()).unwrap_or(0);
+        let trace = if obs.trace_sample_every > 0 {
+            Some(TraceRecorder::new(obs.trace_sample_every))
+        } else {
+            None
+        };
+        let series = if obs.window_s > 0.0 {
+            Some(TimeSeries::new(obs.window_s, edge_sites, cfg.clouds.max(1)))
+        } else {
+            None
+        };
         Ok(Sim {
             cfg,
             model,
@@ -515,6 +587,9 @@ impl<'a> Sim<'a> {
             sweeps: 0,
             decision_count: 0,
             decisions: Vec::new(),
+            meter: ThroughputMeter::virtual_time(0.0),
+            trace,
+            series,
         })
     }
 
@@ -587,25 +662,14 @@ impl<'a> Sim<'a> {
     }
 
     /// One cache-aware split decision. Identical inputs give identical
-    /// decisions whether served from cache, solved inline, or solved on a
-    /// pool worker — the seed comes from the key.
-    fn plan_split(
-        &self,
-        member: usize,
-        profile: &'static ComputeProfile,
-        bw_exact: f64,
-        band: BatteryBand,
-        reason: ReplanReason,
-    ) -> Option<SplitPlan> {
-        self.plan_split_with(member, profile, bw_exact, band, reason, &mut HashMap::new())
-    }
-
-    /// As [`Sim::plan_split`], but a cache miss is served from `presolved`
-    /// when a batch fan-out already solved this key (falling back to an
-    /// inline solve). Counting runs through the façade's counted cache
-    /// path either way, so the parallel path's `PlannerStats` are
-    /// identical to a sequential pass. Uses the façade's decision-only
-    /// fast path: a cache hit stays one map lookup.
+    /// decisions whether served from cache, solved inline, or solved on
+    /// a pool worker — the seed comes from the key. A cache miss is
+    /// served from `presolved` when a batch fan-out already solved this
+    /// key (falling back to an inline solve). Counting runs through the
+    /// façade's counted cache path either way, so the parallel path's
+    /// `PlannerStats` are identical to a sequential pass. Uses the
+    /// façade's decision-only fast path: a cache hit stays one map
+    /// lookup.
     fn plan_split_with(
         &self,
         member: usize,
@@ -619,6 +683,45 @@ impl<'a> Sim<'a> {
         self.facade.split_with(&req, presolved)
     }
 
+    /// As [`Sim::plan_split_with`], additionally noting a
+    /// [`CausalEvent::Replan`] annotation (with the façade's full
+    /// [`crate::planner::PlanOutcome`] provenance) when tracing is on.
+    /// The full-outcome path counts identically to the decision-only
+    /// fast path — pinned by
+    /// `planner::tests::split_fast_path_matches_plan_and_counts_identically`
+    /// — so enabling tracing cannot perturb `PlannerStats` or any
+    /// decision.
+    #[allow(clippy::too_many_arguments)]
+    fn plan_split_traced(
+        &mut self,
+        member: usize,
+        profile: &'static ComputeProfile,
+        bw_exact: f64,
+        band: BatteryBand,
+        reason: ReplanReason,
+        now: SimTime,
+        presolved: &mut HashMap<PlanKey, Option<SplitPlan>>,
+    ) -> Option<SplitPlan> {
+        if self.trace.is_none() {
+            return self.plan_split_with(member, profile, bw_exact, band, reason, presolved);
+        }
+        let req = self.plan_request(member, profile, bw_exact, band, reason);
+        let outcome = self.facade.plan_with(&req, presolved);
+        let p = &outcome.provenance;
+        let ev = CausalEvent::Replan {
+            t_s: now,
+            device: member as u64,
+            reason: p.reason,
+            strategy: p.strategy,
+            cache: p.cache,
+            plan: outcome.plan.map(|pl| (pl.l1 as u32, pl.l2 as u32)),
+            quantized_bw_mbps: p.quantized_bw_mbps,
+            derived_seed: p.derived_seed,
+        };
+        self.trace.as_mut().expect("tracing checked on").note(ev);
+        outcome.plan
+    }
+
     /// Cache-aware unconditional re-plan of device `d` at `now` (the
     /// event-driven battery-band trigger).
     fn replan_device(&mut self, d: usize, now: SimTime) {
@@ -628,10 +731,23 @@ impl<'a> Sim<'a> {
         let profile = self.devices[d].profile;
         let bw = self.devices[d].bandwidth_at(now);
         let band = BatteryBand::of_fraction(self.devices[d].soc());
-        let Some(plan) = self.plan_split(d, profile, bw, band, ReplanReason::BandCrossing) else {
+        let Some(plan) = self.plan_split_traced(
+            d,
+            profile,
+            bw,
+            band,
+            ReplanReason::BandCrossing,
+            now,
+            &mut HashMap::new(),
+        ) else {
             return;
         };
-        self.devices[d].apply_split(plan, &self.model, bw);
+        let moved = self.devices[d].apply_split(plan, &self.model, bw);
+        if moved {
+            if let Some(s) = self.series.as_mut() {
+                s.on_resplit();
+            }
+        }
         self.note_decision(d, plan);
     }
 
@@ -670,15 +786,27 @@ impl<'a> Sim<'a> {
         let id = self.devices.len();
         let cloud = id % self.clouds.len();
         let bw = trace.at(Duration::from_secs_f64(at.max(0.0)));
-        let (plan, pinned) = match &self.cfg.planner {
-            Planner::Fixed(l1) => {
-                let l1 = (*l1).clamp(1, self.model.num_layers.saturating_sub(1).max(1));
+        let fixed = match &self.cfg.planner {
+            Planner::Fixed(l1) => Some(*l1),
+            _ => None,
+        };
+        let (plan, pinned) = match fixed {
+            Some(l1) => {
+                let l1 = l1.clamp(1, self.model.num_layers.saturating_sub(1).max(1));
                 (SplitPlan::two_tier(l1), true)
             }
-            _ => {
+            None => {
                 let band = BatteryBand::of_fraction(soc.clamp(0.0, 1.0));
                 let plan = self
-                    .plan_split(id, profile, bw, band, ReplanReason::Spawn)
+                    .plan_split_traced(
+                        id,
+                        profile,
+                        bw,
+                        band,
+                        ReplanReason::Spawn,
+                        at,
+                        &mut HashMap::new(),
+                    )
                     .expect("no feasible split for device");
                 (plan, false)
             }
@@ -723,24 +851,50 @@ impl<'a> Sim<'a> {
     /// Deactivate a device, dropping whatever it had queued locally.
     fn deactivate(&mut self, d: usize) {
         self.devices[d].active = false;
-        self.counters.dropped += self.devices[d].backlog.len() as u64;
+        let backlogged = self.devices[d].backlog.len() as u64;
+        self.counters.dropped += backlogged;
+        if backlogged > 0 {
+            if let Some(s) = self.series.as_mut() {
+                s.on_dropped(backlogged);
+            }
+        }
         self.devices[d].backlog.clear();
         self.active.remove(d);
     }
 
-    /// Start a request (issued at `issued`) on an idle device `d` at `now`;
-    /// schedules its uplink-complete event carrying the captured per-hop
-    /// costs.
-    fn start_on(&mut self, d: usize, issued: SimTime, now: SimTime) {
+    /// Start request `req` (issued at `issued`) on an idle device `d` at
+    /// `now`; schedules its uplink-complete event carrying the captured
+    /// per-hop costs.
+    fn start_on(&mut self, d: usize, req: u64, issued: SimTime, now: SimTime) {
         self.devices[d].apply_idle_drain(now, self.cfg.idle_drain_w);
         match self.devices[d].start_request(now) {
             Some(cost) => {
                 // Device-tier queue delay: the serial phone made this
                 // request wait `now - issued` (0 when started at once).
                 self.device_wait.record_secs(now - issued);
+                if let Some(s) = self.series.as_mut() {
+                    s.on_device_wait(now - issued);
+                }
+                if let Some(tr) = self.trace.as_mut() {
+                    // Span boundaries mirror the engine's scheduling
+                    // arithmetic bit-for-bit (same parenthesisation), so
+                    // the timeline tiles the event timestamps exactly —
+                    // the invariant tests/observability.rs pins.
+                    tr.begin(req, d as u64, issued);
+                    tr.span(req, SpanKind::DeviceQueue, issued, now, None);
+                    tr.span(req, SpanKind::HeadCompute, now, now + cost.head_s, None);
+                    tr.span(
+                        req,
+                        SpanKind::Uplink,
+                        now + cost.head_s,
+                        now + (cost.head_s + cost.upload_s),
+                        None,
+                    );
+                }
                 self.q.schedule_in(
                     cost.head_s + cost.upload_s,
                     Event::Uplinked {
+                        req,
                         device: d,
                         issued,
                         site: cost.edge_site,
@@ -753,6 +907,9 @@ impl<'a> Sim<'a> {
             None => {
                 self.counters.dropped += 1;
                 self.counters.exhausted += 1;
+                if let Some(s) = self.series.as_mut() {
+                    s.on_dropped(1);
+                }
                 self.deactivate(d);
             }
         }
@@ -760,13 +917,20 @@ impl<'a> Sim<'a> {
 
     /// Request fully served: completion accounting shared by the cloud
     /// tail and the edge-terminal path.
-    fn complete_request(&mut self, device: usize, issued: SimTime, now: SimTime) {
+    fn complete_request(&mut self, req: u64, device: usize, issued: SimTime, now: SimTime) {
         self.counters.completed += 1;
+        self.meter.record(1);
         self.devices[device].served += 1;
         self.latency_by_profile
             .entry(self.devices[device].profile.name)
             .or_insert_with(Histogram::new)
             .record_secs(now - issued);
+        if let Some(s) = self.series.as_mut() {
+            s.on_completed(now - issued);
+        }
+        if let Some(tr) = self.trace.as_mut() {
+            tr.complete(req, now);
+        }
     }
 
     /// Hand a request to its device's cloud queue (tail layers). An
@@ -775,14 +939,30 @@ impl<'a> Sim<'a> {
     /// must not occupy a cloud server or queue behind real tail work.
     /// (Two-tier plans always have a non-empty tail — `l1 ≤ L-1` is
     /// enforced — so this path cannot fire for them.)
-    fn offer_cloud(&mut self, device: usize, issued: SimTime, tail_s: f64, now: SimTime) {
+    fn offer_cloud(&mut self, req: u64, device: usize, issued: SimTime, tail_s: f64, now: SimTime) {
         if tail_s <= 0.0 {
-            self.complete_request(device, issued, now);
+            self.complete_request(req, device, issued, now);
             return;
         }
         let c = self.devices[device].cloud;
-        if let Some(svc) = self.clouds[c].offer(device, issued, now, tail_s) {
-            self.q.schedule_in(svc, Event::CloudDone { cloud: c, device, issued });
+        match self.clouds[c].offer(req, device, issued, now, tail_s) {
+            Some(svc) => {
+                if let Some(s) = self.series.as_mut() {
+                    s.on_cloud_wait(0.0);
+                }
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.span(req, SpanKind::CloudQueue, now, now, Some(c as u32));
+                    tr.span(req, SpanKind::CloudService, now, now + svc, Some(c as u32));
+                }
+                self.q.schedule_in(svc, Event::CloudDone { req, cloud: c, device, issued });
+            }
+            None => {
+                // Queued: the span stays open until a server frees up
+                // (closed in on_cloud_done when this request dequeues).
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.begin_span(req, SpanKind::CloudQueue, now, Some(c as u32));
+                }
+            }
         }
     }
 
@@ -792,15 +972,26 @@ impl<'a> Sim<'a> {
         }
         let gap = next_interarrival(self.cfg.arrival, now, &mut self.rng);
         self.q.schedule(now + gap, Event::Arrival);
+        // The pre-increment value is this request's fleet-wide ordinal —
+        // the key every trace span and causal annotation hangs off.
+        let req = self.counters.generated;
         self.counters.generated += 1;
+        if let Some(s) = self.series.as_mut() {
+            s.on_generated();
+        }
         let pick = self.active.sample(&mut self.rng);
         match pick {
-            None => self.counters.dropped += 1,
+            None => {
+                self.counters.dropped += 1;
+                if let Some(s) = self.series.as_mut() {
+                    s.on_dropped(1);
+                }
+            }
             Some(d) => {
                 if self.devices[d].busy {
-                    self.devices[d].backlog.push_back(now);
+                    self.devices[d].backlog.push_back((req, now));
                 } else {
-                    self.start_on(d, now, now);
+                    self.start_on(d, req, now, now);
                 }
             }
         }
@@ -809,6 +1000,7 @@ impl<'a> Sim<'a> {
     #[allow(clippy::too_many_arguments)]
     fn on_uplinked(
         &mut self,
+        req: u64,
         device: usize,
         issued: SimTime,
         site: Option<usize>,
@@ -828,18 +1020,39 @@ impl<'a> Sim<'a> {
         // `tests/edge_parity.rs` pins.
         if torso_s > 0.0 {
             let site = site.expect("torso work without an edge attachment");
-            if let Some(svc) =
-                self.edges[site].offer(device, issued, now, torso_s, backhaul_s, tail_s)
-            {
-                self.q.schedule_in(
-                    svc,
-                    Event::EdgeDone { site, device, issued, backhaul_s, tail_s },
-                );
+            match self.edges[site].offer(req, device, issued, now, torso_s, backhaul_s, tail_s) {
+                Some(svc) => {
+                    if let Some(s) = self.series.as_mut() {
+                        s.on_edge_wait(0.0);
+                    }
+                    if let Some(tr) = self.trace.as_mut() {
+                        tr.span(req, SpanKind::EdgeQueue, now, now, Some(site as u32));
+                        tr.span(req, SpanKind::EdgeService, now, now + svc, Some(site as u32));
+                    }
+                    self.q.schedule_in(
+                        svc,
+                        Event::EdgeDone { req, site, device, issued, backhaul_s, tail_s },
+                    );
+                }
+                None => {
+                    if let Some(tr) = self.trace.as_mut() {
+                        tr.begin_span(req, SpanKind::EdgeQueue, now, Some(site as u32));
+                    }
+                }
             }
         } else if backhaul_s > 0.0 {
-            self.q.schedule_in(backhaul_s, Event::CloudArrive { device, issued, tail_s });
+            if let Some(tr) = self.trace.as_mut() {
+                tr.span(
+                    req,
+                    SpanKind::Backhaul,
+                    now,
+                    now + backhaul_s,
+                    site.map(|s| s as u32),
+                );
+            }
+            self.q.schedule_in(backhaul_s, Event::CloudArrive { req, device, issued, tail_s });
         } else {
-            self.offer_cloud(device, issued, tail_s, now);
+            self.offer_cloud(req, device, issued, tail_s, now);
         }
         // The drain from this request may have crossed a battery band
         // boundary — the event-driven re-split trigger.
@@ -856,8 +1069,8 @@ impl<'a> Sim<'a> {
         }
         // Serial device: pick up the next locally queued request.
         if self.devices[device].active {
-            if let Some(issued2) = self.devices[device].backlog.pop_front() {
-                self.start_on(device, issued2, now);
+            if let Some((req2, issued2)) = self.devices[device].backlog.pop_front() {
+                self.start_on(device, req2, issued2, now);
             }
         }
     }
@@ -865,8 +1078,10 @@ impl<'a> Sim<'a> {
     /// An edge server finished this request's torso: send it over the
     /// backhaul (or straight to the cloud when the backhaul is free) and
     /// start the next queued torso, if any.
+    #[allow(clippy::too_many_arguments)]
     fn on_edge_done(
         &mut self,
+        req: u64,
         site: usize,
         device: usize,
         issued: SimTime,
@@ -875,14 +1090,32 @@ impl<'a> Sim<'a> {
         now: SimTime,
     ) {
         if backhaul_s > 0.0 {
-            self.q.schedule_in(backhaul_s, Event::CloudArrive { device, issued, tail_s });
+            if let Some(tr) = self.trace.as_mut() {
+                tr.span(req, SpanKind::Backhaul, now, now + backhaul_s, Some(site as u32));
+            }
+            self.q.schedule_in(backhaul_s, Event::CloudArrive { req, device, issued, tail_s });
         } else {
-            self.offer_cloud(device, issued, tail_s, now);
+            self.offer_cloud(req, device, issued, tail_s, now);
         }
         if let Some(next) = self.edges[site].finish(now) {
+            if let Some(s) = self.series.as_mut() {
+                s.on_edge_wait(next.waited_s);
+            }
+            if let Some(tr) = self.trace.as_mut() {
+                // Close the open edge_queue span and start service.
+                tr.end_span(next.req, now);
+                tr.span(
+                    next.req,
+                    SpanKind::EdgeService,
+                    now,
+                    now + next.service_s,
+                    Some(site as u32),
+                );
+            }
             self.q.schedule_in(
                 next.service_s,
                 Event::EdgeDone {
+                    req: next.req,
                     site,
                     device: next.device,
                     issued: next.issued,
@@ -893,12 +1126,26 @@ impl<'a> Sim<'a> {
         }
     }
 
-    fn on_cloud_done(&mut self, cloud: usize, device: usize, issued: SimTime, now: SimTime) {
-        self.complete_request(device, issued, now);
+    fn on_cloud_done(&mut self, req: u64, cloud: usize, device: usize, issued: SimTime, now: SimTime) {
+        self.complete_request(req, device, issued, now);
         if let Some(next) = self.clouds[cloud].finish(now) {
+            if let Some(s) = self.series.as_mut() {
+                s.on_cloud_wait(next.waited_s);
+            }
+            if let Some(tr) = self.trace.as_mut() {
+                // Close the open cloud_queue span and start service.
+                tr.end_span(next.req, now);
+                tr.span(
+                    next.req,
+                    SpanKind::CloudService,
+                    now,
+                    now + next.service_s,
+                    Some(cloud as u32),
+                );
+            }
             self.q.schedule_in(
                 next.service_s,
-                Event::CloudDone { cloud, device: next.device, issued: next.issued },
+                Event::CloudDone { req: next.req, cloud, device: next.device, issued: next.issued },
             );
         }
     }
@@ -929,12 +1176,23 @@ impl<'a> Sim<'a> {
         // pass-2 results through the normal (counted) cache path.
         for (d, bw, band) in pending {
             let profile = self.devices[d].profile;
-            let Some(plan) =
-                self.plan_split_with(d, profile, bw, band, ReplanReason::Drift, &mut presolved)
-            else {
+            let Some(plan) = self.plan_split_traced(
+                d,
+                profile,
+                bw,
+                band,
+                ReplanReason::Drift,
+                now,
+                &mut presolved,
+            ) else {
                 continue;
             };
-            self.devices[d].apply_split(plan, &self.model, bw);
+            let moved = self.devices[d].apply_split(plan, &self.model, bw);
+            if moved {
+                if let Some(s) = self.series.as_mut() {
+                    s.on_resplit();
+                }
+            }
             self.note_decision(d, plan);
         }
         // Canonical re-arm: sweep k fires at exactly k·period on the
@@ -956,7 +1214,7 @@ impl<'a> Sim<'a> {
     /// control-plane cost, and the re-attachment lands when the relay
     /// completes. The walk stops at the horizon (and on deactivation)
     /// so the event queue drains.
-    fn on_handover(&mut self, device: usize) {
+    fn on_handover(&mut self, device: usize, now: SimTime) {
         if self.horizon_reached || !self.devices[device].active {
             return;
         }
@@ -974,6 +1232,16 @@ impl<'a> Sim<'a> {
                     if plan.is_two_tier() { 0 } else { self.model.intermediate_bytes(plan.l1) };
                 let cost =
                     self.cfg.handover_cost_s.max(0.0) + serving.backhaul.transfer_s(state_bytes);
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.note(CausalEvent::HandoverRelay {
+                        start_s: now,
+                        end_s: now + cost,
+                        device: device as u64,
+                        from_site: serving.site as u32,
+                        to_site: new_site as u32,
+                        state_bytes: state_bytes as u64,
+                    });
+                }
                 self.q.schedule_in(
                     cost,
                     Event::Reattach { device, site: new_site, seq: self.handover_seq[device] },
@@ -1004,25 +1272,63 @@ impl<'a> Sim<'a> {
         let attachment = self.attachment_at(site);
         self.devices[device].edge = Some(attachment);
         self.counters.handovers += 1;
+        if let Some(s) = self.series.as_mut() {
+            s.on_handover();
+        }
         let bw = self.devices[device].bandwidth_at(now);
         if self.devices[device].pinned() {
             // Pinned splits never re-plan, but the cached hop costs
             // must follow the attachment that now serves them.
             let plan = self.devices[device].plan();
             self.devices[device].apply_split(plan, &self.model, bw);
+            if let Some(tr) = self.trace.as_mut() {
+                tr.note(CausalEvent::Reattach {
+                    t_s: now,
+                    device: device as u64,
+                    site: site as u32,
+                    replanned: false,
+                });
+            }
             return;
         }
         let profile = self.devices[device].profile;
         let band = BatteryBand::of_fraction(self.devices[device].soc());
-        let planned = self.plan_split(device, profile, bw, band, ReplanReason::Migration);
+        // The Replan annotation (inside plan_split_traced) lands before
+        // the Reattach annotation below — cause before effect, in the
+        // deterministic order the export contract pins.
+        let planned = self.plan_split_traced(
+            device,
+            profile,
+            bw,
+            band,
+            ReplanReason::Migration,
+            now,
+            &mut HashMap::new(),
+        );
         // Adopt the migration plan; with no feasible plan at the new
         // state, keep the old plan but still refresh its cached hop
         // costs against the site now serving it.
         let plan = planned.unwrap_or_else(|| self.devices[device].plan());
-        self.devices[device].apply_split(plan, &self.model, bw);
+        let moved = self.devices[device].apply_split(plan, &self.model, bw);
+        if moved {
+            if let Some(s) = self.series.as_mut() {
+                s.on_resplit();
+            }
+        }
         if planned.is_some() {
             self.counters.migrations += 1;
+            if let Some(s) = self.series.as_mut() {
+                s.on_migration();
+            }
             self.note_decision(device, plan);
+        }
+        if let Some(tr) = self.trace.as_mut() {
+            tr.note(CausalEvent::Reattach {
+                t_s: now,
+                device: device as u64,
+                site: site as u32,
+                replanned: planned.is_some(),
+            });
         }
     }
 
@@ -1069,22 +1375,33 @@ impl<'a> Sim<'a> {
         }
 
         while let Some((now, event)) = self.q.pop() {
+            // Close any windows the virtual clock just crossed *before*
+            // dispatching: the event at `now` belongs to the window
+            // containing `now`, and boundary snapshots (queue depth,
+            // busy time, planner counters) are taken at the crossing.
+            if self.series.as_ref().map_or(false, |s| s.needs_roll(now)) {
+                let planner = self.facade.stats();
+                let (e_gauges, c_gauges) = pool_gauges(&self.edges, &self.clouds);
+                if let Some(s) = self.series.as_mut() {
+                    s.roll(now, planner, &e_gauges, &c_gauges);
+                }
+            }
             match event {
                 Event::Horizon => self.horizon_reached = true,
                 Event::Arrival => self.on_arrival(now),
-                Event::Uplinked { device, issued, site, torso_s, backhaul_s, tail_s } => {
-                    self.on_uplinked(device, issued, site, torso_s, backhaul_s, tail_s, now)
+                Event::Uplinked { req, device, issued, site, torso_s, backhaul_s, tail_s } => {
+                    self.on_uplinked(req, device, issued, site, torso_s, backhaul_s, tail_s, now)
                 }
-                Event::EdgeDone { site, device, issued, backhaul_s, tail_s } => {
-                    self.on_edge_done(site, device, issued, backhaul_s, tail_s, now)
+                Event::EdgeDone { req, site, device, issued, backhaul_s, tail_s } => {
+                    self.on_edge_done(req, site, device, issued, backhaul_s, tail_s, now)
                 }
-                Event::CloudArrive { device, issued, tail_s } => {
-                    self.offer_cloud(device, issued, tail_s, now)
+                Event::CloudArrive { req, device, issued, tail_s } => {
+                    self.offer_cloud(req, device, issued, tail_s, now)
                 }
-                Event::CloudDone { cloud, device, issued } => {
-                    self.on_cloud_done(cloud, device, issued, now)
+                Event::CloudDone { req, cloud, device, issued } => {
+                    self.on_cloud_done(req, cloud, device, issued, now)
                 }
-                Event::Handover { device } => self.on_handover(device),
+                Event::Handover { device } => self.on_handover(device, now),
                 Event::Reattach { device, site, seq } => {
                     self.on_reattach(device, site, seq, now)
                 }
@@ -1095,7 +1412,21 @@ impl<'a> Sim<'a> {
         }
     }
 
-    fn report(self, wall: Duration) -> SimReport {
+    fn report(mut self, wall: Duration) -> SimReport {
+        // Finalise the observability sinks first: the time series closes
+        // its partial tail window at the drained clock (which may run
+        // past the horizon), and the tracer seals its completion-ordered
+        // request list. Both consume only virtual-clock state, so the
+        // reports are deterministic across thread configs and reruns.
+        let series = self.series.take().map(|s| {
+            let (e_gauges, c_gauges) = pool_gauges(&self.edges, &self.clouds);
+            s.finalize(self.q.now(), self.facade.stats(), &e_gauges, &c_gauges)
+        });
+        let trace = self.trace.take().map(|t| t.finish());
+        // The meter ran on virtual time: pin its elapsed window to the
+        // configured horizon so `rps()` reports offered-load throughput.
+        self.meter.set_elapsed_s(self.cfg.duration_s);
+        debug_assert_eq!(self.meter.completed(), self.counters.completed);
         let latency = Histogram::new();
         let mut per_profile = Vec::new();
         for (name, hist) in self.latency_by_profile {
@@ -1177,6 +1508,8 @@ impl<'a> Sim<'a> {
             planner: self.facade.stats(),
             decision_count: self.decision_count,
             decisions: self.decisions,
+            series,
+            trace,
         }
     }
 }

@@ -39,6 +39,42 @@ pub struct ChurnConfig {
     pub mean_lifetime_s: f64,
 }
 
+/// Opt-in observability (DESIGN.md §12): per-request span tracing and
+/// the windowed time series. Both default to *off* — the recording
+/// hooks are `Option`-gated so a disabled run does no extra work —
+/// and neither may change decisions or event order
+/// (`tests/observability.rs` pins transparency).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ObservabilityConfig {
+    /// Record every n-th request's span timeline (by fleet-wide request
+    /// ordinal); `0` disables tracing entirely, `1` traces everything.
+    pub trace_sample_every: u64,
+    /// Fixed virtual-time window width for the
+    /// [`crate::metrics::TimeSeries`] collector, seconds; `0` disables
+    /// the collector.
+    pub window_s: f64,
+}
+
+impl Default for ObservabilityConfig {
+    fn default() -> Self {
+        ObservabilityConfig::disabled()
+    }
+}
+
+impl ObservabilityConfig {
+    /// Everything off — what every preset ships with.
+    pub fn disabled() -> ObservabilityConfig {
+        ObservabilityConfig { trace_sample_every: 0, window_s: 0.0 }
+    }
+
+    /// Trace every request and window the series — the configuration
+    /// the determinism tests and the `--trace-out`/`--metrics-out` CLI
+    /// path use.
+    pub fn full(window_s: f64) -> ObservabilityConfig {
+        ObservabilityConfig { trace_sample_every: 1, window_s }
+    }
+}
+
 /// One explicitly configured fleet member.
 #[derive(Clone, Debug)]
 pub struct ExplicitMember {
@@ -272,6 +308,10 @@ pub struct SimConfig {
     /// backhaul is added on top. Only read when `mobility` moves
     /// devices.
     pub handover_cost_s: f64,
+    /// Opt-in tracing / time-series collection; disabled in every
+    /// preset (enabling it must not change the run — see
+    /// `tests/observability.rs`).
+    pub observability: ObservabilityConfig,
 }
 
 /// The paper's two-phone testbed, matching `main.rs`'s live `fleet`
@@ -315,6 +355,7 @@ pub fn two_phone_fleet(
         edge: None,
         mobility: Mobility::Static,
         handover_cost_s: DEFAULT_HANDOVER_COST_S,
+        observability: ObservabilityConfig::disabled(),
     }
 }
 
@@ -358,6 +399,7 @@ pub fn city_scale(model: &str, devices: usize, duration_s: f64, seed: u64) -> Si
         edge: None,
         mobility: Mobility::Static,
         handover_cost_s: DEFAULT_HANDOVER_COST_S,
+        observability: ObservabilityConfig::disabled(),
     }
 }
 
@@ -511,6 +553,11 @@ mod tests {
         assert_eq!(mobile.edge.as_ref().unwrap().sites, tiered.edge.as_ref().unwrap().sites);
         assert_eq!(mobile.reopt_period_s, tiered.reopt_period_s);
         assert_eq!(mobile.idle_drain_w, tiered.idle_drain_w);
+        // Observability ships disabled everywhere.
+        assert_eq!(mobile.observability, ObservabilityConfig::disabled());
+        assert_eq!(tiered.observability, ObservabilityConfig::default());
+        assert_eq!(mobile.observability.trace_sample_every, 0);
+        assert_eq!(ObservabilityConfig::full(10.0).trace_sample_every, 1);
         // The walk parameters scale with the horizon.
         match mobile.mobility {
             Mobility::Waypoint(w) => {

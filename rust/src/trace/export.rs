@@ -1,0 +1,308 @@
+//! Machine-readable exports of a [`TraceReport`]: line-delimited JSON
+//! (one self-describing object per line — a meta header, then one line
+//! per completed request in completion order, then the causal
+//! annotations in record order) and Chrome `trace_event` JSON
+//! (loadable in `chrome://tracing` / Perfetto: spans as `"X"` complete
+//! events on a per-device track, annotations as `"i"` instants).
+//!
+//! Both formats are built from [`crate::util::json::Json`] values with
+//! insertion-ordered keys and serialized compactly, so a frozen
+//! scenario exports byte-identical files on every run — the property
+//! `tests/observability.rs` asserts. 64-bit solve seeds are exported
+//! as hex strings (a JSON number would round through f64 and lose low
+//! bits).
+
+use std::io;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::{cache_outcome_name, CausalEvent, RequestTrace, Span, TraceReport};
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn count(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+fn span_json(s: &Span) -> Json {
+    let mut pairs = vec![
+        ("kind", Json::str(s.kind.name())),
+        ("start_s", num(s.start_s)),
+        ("end_s", num(s.end_s)),
+    ];
+    if let Some(site) = s.site {
+        pairs.push(("site", count(site as u64)));
+    }
+    Json::obj(pairs)
+}
+
+fn request_json(t: &RequestTrace) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("request")),
+        ("req", count(t.req)),
+        ("device", count(t.device)),
+        ("issued_s", num(t.issued_s)),
+        ("completed_s", num(t.completed_s)),
+        ("latency_s", num(t.latency_s())),
+        ("spans", Json::Arr(t.spans.iter().map(span_json).collect())),
+    ])
+}
+
+fn event_json(e: &CausalEvent) -> Json {
+    match *e {
+        CausalEvent::Replan {
+            t_s,
+            device,
+            reason,
+            strategy,
+            cache,
+            plan,
+            quantized_bw_mbps,
+            derived_seed,
+        } => Json::obj(vec![
+            ("type", Json::str("replan")),
+            ("t_s", num(t_s)),
+            ("device", count(device)),
+            ("reason", Json::str(reason.name())),
+            ("strategy", Json::str(strategy.name())),
+            ("cache", Json::str(cache_outcome_name(cache))),
+            (
+                "plan",
+                match plan {
+                    Some((l1, l2)) => Json::obj(vec![
+                        ("l1", count(l1 as u64)),
+                        ("l2", count(l2 as u64)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+            ("quantized_bw_mbps", num(quantized_bw_mbps)),
+            ("derived_seed", Json::str(&format!("{derived_seed:#018x}"))),
+        ]),
+        CausalEvent::HandoverRelay { start_s, end_s, device, from_site, to_site, state_bytes } => {
+            Json::obj(vec![
+                ("type", Json::str("handover_relay")),
+                ("start_s", num(start_s)),
+                ("end_s", num(end_s)),
+                ("device", count(device)),
+                ("from_site", count(from_site as u64)),
+                ("to_site", count(to_site as u64)),
+                ("state_bytes", count(state_bytes)),
+            ])
+        }
+        CausalEvent::Reattach { t_s, device, site, replanned } => Json::obj(vec![
+            ("type", Json::str("reattach")),
+            ("t_s", num(t_s)),
+            ("device", count(device)),
+            ("site", count(site as u64)),
+            ("replanned", Json::Bool(replanned)),
+        ]),
+    }
+}
+
+const MICROS: f64 = 1e6;
+
+fn chrome_span(t: &RequestTrace, s: &Span) -> Json {
+    let mut args = vec![("req", count(t.req))];
+    if let Some(site) = s.site {
+        args.push(("site", count(site as u64)));
+    }
+    Json::obj(vec![
+        ("name", Json::str(s.kind.name())),
+        ("cat", Json::str("request")),
+        ("ph", Json::str("X")),
+        ("ts", num(s.start_s * MICROS)),
+        ("dur", num(s.duration_s() * MICROS)),
+        ("pid", count(0)),
+        ("tid", count(t.device)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+fn chrome_instant(e: &CausalEvent) -> Json {
+    let device = match *e {
+        CausalEvent::Replan { device, .. }
+        | CausalEvent::HandoverRelay { device, .. }
+        | CausalEvent::Reattach { device, .. } => device,
+    };
+    Json::obj(vec![
+        ("name", Json::str(e.name())),
+        ("cat", Json::str("causal")),
+        ("ph", Json::str("i")),
+        ("ts", num(e.t_s() * MICROS)),
+        ("pid", count(0)),
+        ("tid", count(device)),
+        ("s", Json::str("t")),
+        ("args", event_json(e)),
+    ])
+}
+
+impl TraceReport {
+    /// Header object of the JSONL export (also embedded in the Chrome
+    /// export's `otherData`).
+    fn meta_json(&self) -> Json {
+        Json::obj(vec![
+            ("type", Json::str("meta")),
+            ("format", Json::str("smartsplit-trace")),
+            ("version", count(1)),
+            ("sample_every", count(self.sample_every)),
+            ("requests", count(self.requests.len() as u64)),
+            ("events", count(self.events.len() as u64)),
+            ("unfinished", count(self.unfinished)),
+        ])
+    }
+
+    /// Line-delimited JSON: meta header, completed requests in
+    /// completion order, then causal annotations in record order.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.meta_json().to_string());
+        out.push('\n');
+        for t in &self.requests {
+            out.push_str(&request_json(t).to_string());
+            out.push('\n');
+        }
+        for e in &self.events {
+            out.push_str(&event_json(e).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome `trace_event` JSON (object form): spans as `"X"`
+    /// complete events with microsecond timestamps on track
+    /// `pid 0 / tid <device>`, annotations as thread-scoped `"i"`
+    /// instants.
+    pub fn to_chrome_trace(&self) -> String {
+        let mut events = Vec::new();
+        for t in &self.requests {
+            for s in &t.spans {
+                events.push(chrome_span(t, s));
+            }
+        }
+        for e in &self.events {
+            events.push(chrome_instant(e));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+            ("otherData", self.meta_json()),
+        ])
+        .to_string()
+    }
+
+    /// Write the export `path`'s extension selects: `.jsonl` → JSONL,
+    /// anything else (conventionally `.json`) → Chrome `trace_event`.
+    pub fn export(&self, path: &Path) -> io::Result<()> {
+        let body = match path.extension().and_then(|e| e.to_str()) {
+            Some("jsonl") => self.to_jsonl(),
+            _ => self.to_chrome_trace(),
+        };
+        std::fs::write(path, body)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{SpanKind, TraceRecorder};
+    use super::*;
+    use crate::planner::{CacheOutcome, ReplanReason, Strategy};
+
+    fn sample_report() -> TraceReport {
+        let mut rec = TraceRecorder::new(1);
+        rec.note(CausalEvent::Replan {
+            t_s: 0.0,
+            device: 4,
+            reason: ReplanReason::Spawn,
+            strategy: Strategy::Topsis,
+            cache: CacheOutcome::Miss,
+            plan: Some((2, 2)),
+            quantized_bw_mbps: 12.5,
+            derived_seed: u64::MAX,
+        });
+        rec.begin(0, 4, 1.0);
+        rec.span(0, SpanKind::DeviceQueue, 1.0, 1.0, None);
+        rec.span(0, SpanKind::HeadCompute, 1.0, 1.25, None);
+        rec.span(0, SpanKind::Uplink, 1.25, 1.5, None);
+        rec.span(0, SpanKind::EdgeQueue, 1.5, 1.5, Some(2));
+        rec.span(0, SpanKind::EdgeService, 1.5, 1.75, Some(2));
+        rec.complete(0, 1.75);
+        rec.note(CausalEvent::HandoverRelay {
+            start_s: 2.0,
+            end_s: 2.25,
+            device: 4,
+            from_site: 2,
+            to_site: 0,
+            state_bytes: 1 << 20,
+        });
+        rec.finish()
+    }
+
+    #[test]
+    fn jsonl_lines_are_self_describing_and_parseable() {
+        let rep = sample_report();
+        let text = rep.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        // meta + 1 request + 2 events.
+        assert_eq!(lines.len(), 4);
+        let meta = Json::parse(lines[0]).expect("meta parses");
+        assert_eq!(meta.get_str("type").unwrap(), "meta");
+        assert_eq!(meta.get_usize("requests").unwrap(), 1);
+        assert_eq!(meta.get_usize("events").unwrap(), 2);
+        assert_eq!(meta.get_usize("unfinished").unwrap(), 0);
+
+        let req = Json::parse(lines[1]).expect("request parses");
+        assert_eq!(req.get_str("type").unwrap(), "request");
+        let spans = req.get("spans").unwrap().as_arr().unwrap();
+        // 5 recorded + appended downlink.
+        assert_eq!(spans.len(), 6);
+        assert_eq!(spans[3].get_str("kind").unwrap(), "edge_queue");
+        assert_eq!(spans[3].get_usize("site").unwrap(), 2);
+        assert_eq!(req.get_f64("latency_s").unwrap(), 0.75);
+
+        let replan = Json::parse(lines[2]).expect("replan parses");
+        assert_eq!(replan.get_str("type").unwrap(), "replan");
+        assert_eq!(replan.get_str("reason").unwrap(), "spawn");
+        assert_eq!(replan.get("plan").unwrap().get_usize("l2").unwrap(), 2);
+        // Full-width seeds survive as hex strings.
+        assert_eq!(replan.get_str("derived_seed").unwrap(), "0xffffffffffffffff");
+
+        let relay = Json::parse(lines[3]).expect("relay parses");
+        assert_eq!(relay.get_str("type").unwrap(), "handover_relay");
+        assert_eq!(relay.get_usize("state_bytes").unwrap(), 1 << 20);
+    }
+
+    #[test]
+    fn chrome_trace_parses_with_microsecond_timestamps() {
+        let rep = sample_report();
+        let doc = Json::parse(&rep.to_chrome_trace()).expect("chrome trace parses");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 6 spans + 2 instants.
+        assert_eq!(events.len(), 8);
+        let head = &events[1];
+        assert_eq!(head.get_str("ph").unwrap(), "X");
+        assert_eq!(head.get_str("name").unwrap(), "head_compute");
+        assert_eq!(head.get_f64("ts").unwrap(), 1.0 * 1e6);
+        assert_eq!(head.get_f64("dur").unwrap(), 0.25 * 1e6);
+        assert_eq!(head.get_usize("tid").unwrap(), 4);
+        let instant = &events[6];
+        assert_eq!(instant.get_str("ph").unwrap(), "i");
+        assert_eq!(instant.get_str("name").unwrap(), "replan");
+        assert_eq!(
+            instant.get("args").unwrap().get_str("strategy").unwrap(),
+            "Topsis"
+        );
+        assert_eq!(doc.get("otherData").unwrap().get_str("format").unwrap(), "smartsplit-trace");
+    }
+
+    #[test]
+    fn export_is_deterministic_across_calls() {
+        let a = sample_report();
+        let b = sample_report();
+        assert_eq!(a.to_jsonl(), b.to_jsonl());
+        assert_eq!(a.to_chrome_trace(), b.to_chrome_trace());
+    }
+}

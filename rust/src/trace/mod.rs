@@ -1,0 +1,401 @@
+//! Deterministic per-request tracing: virtual-clock span timelines plus
+//! causal annotations, recorded by the fleet simulator and exported as
+//! JSONL or Chrome `trace_event` JSON (see [`export`] and
+//! `simulate --trace-out`).
+//!
+//! A sampled request's life is a gapless tiling of [`Span`]s — device
+//! queue wait, head compute, radio uplink, edge torso queue + service,
+//! backhaul relay, cloud queue + service, and the zero-length downlink
+//! the paper's Eq. 14 excludes — every timestamp taken from the sim's
+//! virtual clock with the *exact* f64 arithmetic the engine scheduled
+//! with, so span boundaries chain bit-for-bit
+//! (`tests/observability.rs` pins the tiling). Causal annotations
+//! ([`CausalEvent`]) record the *why* alongside the *when*: every
+//! re-plan with its [`ReplanReason`] and façade provenance, every
+//! handover torso-state relay, every re-attachment.
+//!
+//! Determinism contract: the recorder keys open traces in a `HashMap`
+//! but never iterates it — completed traces land in a `Vec` in
+//! completion order and annotations in record order, so two runs of a
+//! frozen scenario export byte-identical files regardless of thread
+//! configuration. Recording is opt-in per request via the sampling
+//! knob (`sample_every`); unsampled requests cost one modulo per hook.
+
+pub mod export;
+
+use std::collections::HashMap;
+
+use crate::planner::{CacheOutcome, ReplanReason, Strategy};
+
+/// One stage of a request's path through the three-tier pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Waiting in the device's FIFO backlog (zero-length when idle).
+    DeviceQueue,
+    /// Head layers `1..=l1` on the device NPU/CPU.
+    HeadCompute,
+    /// Radio upload of the layer-`l1` activation.
+    Uplink,
+    /// Waiting for a free torso server at the edge site.
+    EdgeQueue,
+    /// Torso layers `l1+1..=l2` on the edge site.
+    EdgeService,
+    /// Edge→cloud relay of the layer-`l2` activation.
+    Backhaul,
+    /// Waiting for a free cloud server.
+    CloudQueue,
+    /// Tail layers `l2+1..=L` in the cloud.
+    CloudService,
+    /// Result download — zero-length by the paper's Eq. 14 (the
+    /// classification result is negligibly small).
+    Downlink,
+}
+
+impl SpanKind {
+    /// Stable export name (the JSONL / Chrome-trace event name).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::DeviceQueue => "device_queue",
+            SpanKind::HeadCompute => "head_compute",
+            SpanKind::Uplink => "uplink",
+            SpanKind::EdgeQueue => "edge_queue",
+            SpanKind::EdgeService => "edge_service",
+            SpanKind::Backhaul => "backhaul",
+            SpanKind::CloudQueue => "cloud_queue",
+            SpanKind::CloudService => "cloud_service",
+            SpanKind::Downlink => "downlink",
+        }
+    }
+}
+
+/// One virtual-time interval of a request's timeline. `site` is the
+/// edge-site index for edge/backhaul spans and the cloud index for
+/// cloud spans; `None` for device-local stages.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub site: Option<u32>,
+}
+
+impl Span {
+    pub fn duration_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
+/// The complete recorded timeline of one sampled request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestTrace {
+    /// Fleet-wide request id (issue order).
+    pub req: u64,
+    /// Device the request ran on.
+    pub device: u64,
+    /// Virtual time the request was issued (span tiling starts here).
+    pub issued_s: f64,
+    /// Virtual completion time (the tiling ends here; `NaN` while the
+    /// request is still in flight).
+    pub completed_s: f64,
+    /// Gapless, ordered stage intervals covering
+    /// `[issued_s, completed_s]`.
+    pub spans: Vec<Span>,
+}
+
+impl RequestTrace {
+    /// Recorded end-to-end latency.
+    pub fn latency_s(&self) -> f64 {
+        self.completed_s - self.issued_s
+    }
+}
+
+/// A causally significant moment recorded alongside the span
+/// timelines: why plans changed and what mobility did, each tagged
+/// with the provenance the planner façade already produces.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CausalEvent {
+    /// A split decision was adopted (spawn, drift sweep, battery-band
+    /// crossing, or migration), with the [`crate::planner::Provenance`]
+    /// fields that make the solve reproducible offline.
+    Replan {
+        t_s: f64,
+        device: u64,
+        reason: ReplanReason,
+        strategy: Strategy,
+        cache: CacheOutcome,
+        /// Adopted `(l1, l2)`; `None` when the strategy found no
+        /// feasible split.
+        plan: Option<(u32, u32)>,
+        quantized_bw_mbps: f64,
+        derived_seed: u64,
+    },
+    /// An edge handover's torso-state relay: the control-plane cost
+    /// plus the state transfer over the *old* site's backhaul.
+    HandoverRelay {
+        start_s: f64,
+        end_s: f64,
+        device: u64,
+        from_site: u32,
+        to_site: u32,
+        state_bytes: u64,
+    },
+    /// The device finished re-attaching to its new site; `replanned`
+    /// says whether a migration re-solve was adopted.
+    Reattach { t_s: f64, device: u64, site: u32, replanned: bool },
+}
+
+impl CausalEvent {
+    /// Stable export name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CausalEvent::Replan { .. } => "replan",
+            CausalEvent::HandoverRelay { .. } => "handover_relay",
+            CausalEvent::Reattach { .. } => "reattach",
+        }
+    }
+
+    /// Virtual time of the annotation (start time for intervals).
+    pub fn t_s(&self) -> f64 {
+        match self {
+            CausalEvent::Replan { t_s, .. } => *t_s,
+            CausalEvent::HandoverRelay { start_s, .. } => *start_s,
+            CausalEvent::Reattach { t_s, .. } => *t_s,
+        }
+    }
+}
+
+/// Export name of a [`CacheOutcome`] (the planner enum itself stays
+/// presentation-free).
+pub fn cache_outcome_name(c: CacheOutcome) -> &'static str {
+    match c {
+        CacheOutcome::Hit => "hit",
+        CacheOutcome::Miss => "miss",
+        CacheOutcome::Bypassed => "bypass",
+    }
+}
+
+/// The in-run recorder: open traces keyed by request id, completed
+/// traces in completion order, annotations in record order.
+///
+/// Span hooks silently no-op for unsampled requests, so the sim wires
+/// them unconditionally. The map is never iterated (determinism —
+/// see the module docs).
+#[derive(Debug)]
+pub struct TraceRecorder {
+    sample_every: u64,
+    open: HashMap<u64, RequestTrace>,
+    done: Vec<RequestTrace>,
+    events: Vec<CausalEvent>,
+}
+
+impl TraceRecorder {
+    /// Record every `sample_every`-th request (1 = all). Annotations
+    /// are always recorded — they are per-device, not per-request.
+    pub fn new(sample_every: u64) -> TraceRecorder {
+        assert!(sample_every >= 1, "sample_every must be >= 1");
+        TraceRecorder {
+            sample_every,
+            open: HashMap::new(),
+            done: Vec::new(),
+            events: Vec::new(),
+        }
+    }
+
+    /// Is request `req` in the recorded sample?
+    pub fn sampled(&self, req: u64) -> bool {
+        req % self.sample_every == 0
+    }
+
+    /// Open a timeline for `req` (no-op when unsampled).
+    pub fn begin(&mut self, req: u64, device: u64, issued_s: f64) {
+        if !self.sampled(req) {
+            return;
+        }
+        self.open.insert(
+            req,
+            RequestTrace { req, device, issued_s, completed_s: f64::NAN, spans: Vec::new() },
+        );
+    }
+
+    /// Append a closed span to `req`'s timeline.
+    pub fn span(&mut self, req: u64, kind: SpanKind, start_s: f64, end_s: f64, site: Option<u32>) {
+        if !self.sampled(req) {
+            return;
+        }
+        if let Some(t) = self.open.get_mut(&req) {
+            t.spans.push(Span { kind, start_s, end_s, site });
+        }
+    }
+
+    /// Open a span whose end is not yet known (a queue wait of unknown
+    /// length); close it with [`TraceRecorder::end_span`].
+    pub fn begin_span(&mut self, req: u64, kind: SpanKind, start_s: f64, site: Option<u32>) {
+        self.span(req, kind, start_s, f64::NAN, site);
+    }
+
+    /// Close `req`'s most recent open span.
+    pub fn end_span(&mut self, req: u64, end_s: f64) {
+        if !self.sampled(req) {
+            return;
+        }
+        if let Some(t) = self.open.get_mut(&req) {
+            if let Some(s) = t.spans.last_mut() {
+                debug_assert!(s.end_s.is_nan(), "end_span on a closed {:?} span", s.kind);
+                s.end_s = end_s;
+            }
+        }
+    }
+
+    /// Complete `req`: stamp the completion time, append the
+    /// zero-length downlink span, and move the trace to the completed
+    /// list (completion order = export order).
+    pub fn complete(&mut self, req: u64, completed_s: f64) {
+        if !self.sampled(req) {
+            return;
+        }
+        if let Some(mut t) = self.open.remove(&req) {
+            t.completed_s = completed_s;
+            t.spans.push(Span {
+                kind: SpanKind::Downlink,
+                start_s: completed_s,
+                end_s: completed_s,
+                site: None,
+            });
+            self.done.push(t);
+        }
+    }
+
+    /// Record a causal annotation (always; annotations are not
+    /// subject to request sampling).
+    pub fn note(&mut self, event: CausalEvent) {
+        self.events.push(event);
+    }
+
+    /// Seal the recorder into its exportable report.
+    pub fn finish(self) -> TraceReport {
+        TraceReport {
+            sample_every: self.sample_every,
+            unfinished: self.open.len() as u64,
+            requests: self.done,
+            events: self.events,
+        }
+    }
+}
+
+/// The sealed result of a traced run, carried in
+/// [`crate::sim::SimReport`] and exported by [`export`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceReport {
+    /// The sampling knob the run recorded under.
+    pub sample_every: u64,
+    /// Sampled requests still open when the run ended (0 when the
+    /// event queue drained — pinned by `tests/observability.rs`).
+    pub unfinished: u64,
+    /// Completed timelines, in completion order.
+    pub requests: Vec<RequestTrace>,
+    /// Causal annotations, in record order.
+    pub events: Vec<CausalEvent>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record_one(rec: &mut TraceRecorder, req: u64, device: u64, t0: f64) {
+        rec.begin(req, device, t0);
+        rec.span(req, SpanKind::DeviceQueue, t0, t0, None);
+        rec.span(req, SpanKind::HeadCompute, t0, t0 + 0.2, None);
+        rec.span(req, SpanKind::Uplink, t0 + 0.2, t0 + 0.5, None);
+        rec.begin_span(req, SpanKind::CloudQueue, t0 + 0.5, Some(0));
+        rec.end_span(req, t0 + 0.7);
+        rec.span(req, SpanKind::CloudService, t0 + 0.7, t0 + 1.0, Some(0));
+        rec.complete(req, t0 + 1.0);
+    }
+
+    #[test]
+    fn timeline_tiles_from_issue_to_completion() {
+        let mut rec = TraceRecorder::new(1);
+        record_one(&mut rec, 0, 7, 10.0);
+        let rep = rec.finish();
+        assert_eq!(rep.unfinished, 0);
+        assert_eq!(rep.requests.len(), 1);
+        let t = &rep.requests[0];
+        assert_eq!((t.req, t.device), (0, 7));
+        assert_eq!(t.spans.first().unwrap().start_s, t.issued_s);
+        assert_eq!(t.spans.last().unwrap().end_s, t.completed_s);
+        assert_eq!(t.spans.last().unwrap().kind, SpanKind::Downlink);
+        for w in t.spans.windows(2) {
+            assert_eq!(w[0].end_s, w[1].start_s, "gap between {:?} and {:?}", w[0], w[1]);
+        }
+        assert!((t.latency_s() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampling_skips_off_sample_requests_silently() {
+        let mut rec = TraceRecorder::new(2);
+        assert!(rec.sampled(0) && !rec.sampled(1) && rec.sampled(2));
+        record_one(&mut rec, 0, 1, 0.0);
+        record_one(&mut rec, 1, 1, 5.0); // every hook must no-op
+        record_one(&mut rec, 2, 2, 9.0);
+        let rep = rec.finish();
+        assert_eq!(rep.requests.len(), 2);
+        assert_eq!(rep.requests[0].req, 0);
+        assert_eq!(rep.requests[1].req, 2);
+    }
+
+    #[test]
+    fn completion_order_is_export_order() {
+        let mut rec = TraceRecorder::new(1);
+        rec.begin(0, 0, 0.0);
+        rec.begin(1, 1, 0.5);
+        // Request 1 completes before request 0.
+        rec.span(1, SpanKind::HeadCompute, 0.5, 1.0, None);
+        rec.complete(1, 1.0);
+        rec.span(0, SpanKind::HeadCompute, 0.0, 2.0, None);
+        rec.complete(0, 2.0);
+        let rep = rec.finish();
+        let order: Vec<u64> = rep.requests.iter().map(|t| t.req).collect();
+        assert_eq!(order, vec![1, 0]);
+    }
+
+    #[test]
+    fn unfinished_counts_open_traces() {
+        let mut rec = TraceRecorder::new(1);
+        rec.begin(0, 0, 0.0);
+        rec.begin(1, 1, 0.0);
+        rec.complete(1, 3.0);
+        let rep = rec.finish();
+        assert_eq!(rep.unfinished, 1);
+        assert_eq!(rep.requests.len(), 1);
+    }
+
+    #[test]
+    fn annotations_keep_record_order_and_names() {
+        let mut rec = TraceRecorder::new(1);
+        rec.note(CausalEvent::Replan {
+            t_s: 1.0,
+            device: 3,
+            reason: ReplanReason::Spawn,
+            strategy: Strategy::Topsis,
+            cache: CacheOutcome::Miss,
+            plan: Some((2, 5)),
+            quantized_bw_mbps: 10.0,
+            derived_seed: 42,
+        });
+        rec.note(CausalEvent::HandoverRelay {
+            start_s: 2.0,
+            end_s: 2.1,
+            device: 3,
+            from_site: 0,
+            to_site: 1,
+            state_bytes: 4096,
+        });
+        rec.note(CausalEvent::Reattach { t_s: 2.1, device: 3, site: 1, replanned: true });
+        let rep = rec.finish();
+        let names: Vec<&str> = rep.events.iter().map(|e| e.name()).collect();
+        assert_eq!(names, vec!["replan", "handover_relay", "reattach"]);
+        assert_eq!(rep.events[0].t_s(), 1.0);
+        assert_eq!(rep.events[1].t_s(), 2.0);
+        assert_eq!(cache_outcome_name(CacheOutcome::Bypassed), "bypass");
+    }
+}

@@ -1,0 +1,331 @@
+//! Observability integration: (a) traced timelines tile a request's
+//! life *exactly* — span boundaries chain bit-for-bit from issue to
+//! completion, so the per-stage durations account for the recorded
+//! end-to-end latency with no gaps and no overlaps, in the static
+//! tiered city and in the mobile city (handover relays included);
+//! (b) enabling tracing/metrics is transparent — decisions, event
+//! counts, and planner accounting are byte-identical to a dark run;
+//! (c) the JSONL / Chrome-trace / metrics-JSON exports are
+//! byte-identical across thread configurations and repeat runs;
+//! (d) windowed metrics partition the run: per-window counters sum to
+//! the run totals and window boundaries are contiguous.
+
+use smartsplit::planner::ReplanReason;
+use smartsplit::sim::{self, ObservabilityConfig};
+use smartsplit::trace::{CausalEvent, SpanKind, TraceReport};
+
+/// Pipeline position of each span kind; a request's spans must be
+/// strictly increasing in this rank (each stage at most once).
+fn rank(kind: SpanKind) -> u32 {
+    match kind {
+        SpanKind::DeviceQueue => 0,
+        SpanKind::HeadCompute => 1,
+        SpanKind::Uplink => 2,
+        SpanKind::EdgeQueue => 3,
+        SpanKind::EdgeService => 4,
+        SpanKind::Backhaul => 5,
+        SpanKind::CloudQueue => 6,
+        SpanKind::CloudService => 7,
+        SpanKind::Downlink => 8,
+    }
+}
+
+/// The tiling property: every sampled request's spans are ordered,
+/// non-overlapping, and chain *exactly* (f64 equality, no epsilon)
+/// from `issued_s` to `completed_s` — which is precisely the statement
+/// that the per-stage durations, gaps accounted, sum to the recorded
+/// end-to-end latency.
+fn assert_tiling(report: &TraceReport) {
+    assert!(!report.requests.is_empty(), "no requests traced");
+    for t in &report.requests {
+        assert!(t.completed_s.is_finite(), "req {} never completed", t.req);
+        assert!(t.latency_s() >= 0.0);
+        let spans = &t.spans;
+        assert!(spans.len() >= 4, "req {} has only {} spans", t.req, spans.len());
+        assert_eq!(
+            spans.first().unwrap().start_s,
+            t.issued_s,
+            "req {}: timeline does not start at issue",
+            t.req
+        );
+        assert_eq!(
+            spans.last().unwrap().end_s,
+            t.completed_s,
+            "req {}: timeline does not end at completion",
+            t.req
+        );
+        assert_eq!(spans.last().unwrap().kind, SpanKind::Downlink);
+        for (i, s) in spans.iter().enumerate() {
+            assert!(
+                s.start_s.is_finite() && s.end_s.is_finite(),
+                "req {} span {i} ({:?}) left open",
+                t.req,
+                s.kind
+            );
+            assert!(
+                s.end_s >= s.start_s,
+                "req {} span {i} ({:?}) has negative duration",
+                t.req,
+                s.kind
+            );
+        }
+        for w in spans.windows(2) {
+            // Exact chaining — no gap, no overlap, no epsilon. The
+            // recorder mirrors the engine's scheduling arithmetic.
+            assert_eq!(
+                w[0].end_s, w[1].start_s,
+                "req {}: gap/overlap between {:?} and {:?}",
+                t.req, w[0].kind, w[1].kind
+            );
+            assert!(
+                rank(w[0].kind) < rank(w[1].kind),
+                "req {}: {:?} out of pipeline order vs {:?}",
+                t.req,
+                w[0].kind,
+                w[1].kind
+            );
+        }
+        // Mandatory stages: queue wait (possibly zero-length), head
+        // compute, uplink.
+        for need in [SpanKind::DeviceQueue, SpanKind::HeadCompute, SpanKind::Uplink] {
+            assert!(
+                spans.iter().any(|s| s.kind == need),
+                "req {} is missing {need:?}",
+                t.req
+            );
+        }
+        // Queue/service pairing: an edge (cloud) service span implies
+        // its queue span, carrying the same site.
+        for (q, svc) in [
+            (SpanKind::EdgeQueue, SpanKind::EdgeService),
+            (SpanKind::CloudQueue, SpanKind::CloudService),
+        ] {
+            let sq = spans.iter().find(|s| s.kind == q);
+            let ss = spans.iter().find(|s| s.kind == svc);
+            assert_eq!(sq.is_some(), ss.is_some(), "req {}: unpaired {q:?}/{svc:?}", t.req);
+            if let (Some(a), Some(b)) = (sq, ss) {
+                assert_eq!(a.site, b.site, "req {}: queue/service site mismatch", t.req);
+                assert!(a.site.is_some());
+            }
+        }
+    }
+}
+
+#[test]
+fn tiered_city_timelines_tile_exactly() {
+    let mut cfg = sim::city_scale_tiered("alexnet", 300, 3, 90.0, 7);
+    cfg.observability = ObservabilityConfig::full(10.0);
+    let r = sim::run(&cfg).expect("tiered run");
+    let tr = r.trace.as_ref().expect("tracing was on");
+    // The queue drained, so every sampled request either completed or
+    // was dropped *before* tracing began (drops never open a timeline).
+    assert_eq!(tr.unfinished, 0, "open timelines after drain");
+    assert_eq!(tr.requests.len() as u64, r.completed, "sample=1 must trace every completion");
+    assert_tiling(tr);
+    // The tiered city actually exercises the edge stages.
+    assert!(
+        tr.requests
+            .iter()
+            .any(|t| t.spans.iter().any(|s| s.kind == SpanKind::EdgeService)),
+        "no traced request crossed the edge tier"
+    );
+    // Spawn provenance: one spawn-tagged replan annotation per device.
+    let spawns = tr
+        .events
+        .iter()
+        .filter(
+            |e| matches!(e, CausalEvent::Replan { reason: ReplanReason::Spawn, .. }),
+        )
+        .count() as u64;
+    assert_eq!(
+        spawns,
+        r.planner.requests_by_reason[ReplanReason::Spawn.index()],
+        "spawn annotations disagree with planner accounting"
+    );
+    // Annotations are recorded in nondecreasing virtual time (the sim
+    // notes them as the clock advances).
+    for w in tr.events.windows(2) {
+        assert!(w[0].t_s() <= w[1].t_s(), "annotations out of time order");
+    }
+}
+
+#[test]
+fn mobile_city_timelines_tile_across_handovers() {
+    let mut cfg = sim::city_mobile("alexnet", 400, 3, 120.0, 9);
+    cfg.observability = ObservabilityConfig::full(12.0);
+    let r = sim::run(&cfg).expect("mobile run");
+    let tr = r.trace.as_ref().expect("tracing was on");
+    assert_eq!(tr.unfinished, 0);
+    assert_eq!(tr.requests.len() as u64, r.completed);
+    // In-flight work issued before a handover still tiles exactly: the
+    // costs were captured at issue, the relay is charged separately.
+    assert_tiling(tr);
+
+    assert!(r.handovers > 0, "mobile city produced no handovers");
+    let relays = tr
+        .events
+        .iter()
+        .filter(|e| matches!(e, CausalEvent::HandoverRelay { .. }))
+        .count() as u64;
+    let reattaches = tr
+        .events
+        .iter()
+        .filter(|e| matches!(e, CausalEvent::Reattach { .. }))
+        .count() as u64;
+    let migrations = tr
+        .events
+        .iter()
+        .filter(
+            |e| matches!(e, CausalEvent::Replan { reason: ReplanReason::Migration, .. }),
+        )
+        .count() as u64;
+    // Every completed handover re-attached; superseded relays may
+    // outnumber them (a quick back-crossing cancels the older relay).
+    assert_eq!(reattaches, r.handovers, "one reattach annotation per handover");
+    assert!(relays >= r.handovers, "{relays} relays < {} handovers", r.handovers);
+    assert_eq!(
+        migrations,
+        r.planner.migration_requests(),
+        "migration annotations disagree with planner accounting"
+    );
+    for e in &tr.events {
+        if let CausalEvent::HandoverRelay { start_s, end_s, from_site, to_site, .. } = e {
+            assert!(end_s >= start_s, "relay with negative duration");
+            assert_ne!(from_site, to_site, "relay to the serving site");
+        }
+    }
+}
+
+#[test]
+fn observability_is_transparent_to_the_simulation() {
+    // Byte-identical decisions, events, and planner accounting whether
+    // the sinks are on or off — observation must not perturb the run.
+    let mut dark = sim::city_scale_tiered("alexnet", 300, 3, 90.0, 7);
+    dark.planner_perf.record_decisions = true;
+    let mut lit = dark.clone();
+    lit.observability = ObservabilityConfig::full(10.0);
+
+    let a = sim::run(&dark).expect("dark run");
+    let b = sim::run(&lit).expect("observed run");
+    assert!(a.series.is_none() && a.trace.is_none());
+    assert!(b.series.is_some() && b.trace.is_some());
+    assert!(!a.decisions.is_empty());
+    assert_eq!(a.decisions, b.decisions, "observation changed a split decision");
+    assert_eq!(a.summary(), b.summary(), "observation changed the measured run");
+    assert_eq!(a.events, b.events, "observation changed the event stream");
+    assert_eq!(a.generated, b.generated);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.dropped, b.dropped);
+    assert_eq!(a.planner, b.planner, "observation perturbed planner accounting");
+    assert_eq!(a.split_distribution, b.split_distribution);
+}
+
+/// Exports for one config: (JSONL trace, Chrome trace, metrics JSON).
+fn exports(cfg: &sim::SimConfig) -> (String, String, String) {
+    let r = sim::run(cfg).expect("sim run");
+    let tr = r.trace.as_ref().expect("tracing was on");
+    let ts = r.series.as_ref().expect("series was on");
+    (tr.to_jsonl(), tr.to_chrome_trace(), ts.to_json().to_string_pretty())
+}
+
+fn assert_exports_stable(mut cfg: sim::SimConfig) {
+    cfg.observability = ObservabilityConfig::full(15.0);
+    cfg.planner_perf.parallel = true;
+    let mut sequential = cfg.clone();
+    sequential.planner_perf.parallel = false;
+
+    let a = exports(&cfg);
+    let b = exports(&sequential);
+    let c = exports(&cfg);
+    assert!(a.0.lines().count() > 2, "trivial JSONL export");
+    assert_eq!(a.0, b.0, "JSONL trace differs across thread configs");
+    assert_eq!(a.1, b.1, "Chrome trace differs across thread configs");
+    assert_eq!(a.2, b.2, "metrics JSON differs across thread configs");
+    assert_eq!(a.0, c.0, "JSONL trace differs across reruns");
+    assert_eq!(a.1, c.1, "Chrome trace differs across reruns");
+    assert_eq!(a.2, c.2, "metrics JSON differs across reruns");
+}
+
+#[test]
+fn tiered_exports_are_byte_identical_across_thread_configs() {
+    assert_exports_stable(sim::city_scale_tiered("alexnet", 300, 3, 90.0, 7));
+}
+
+#[test]
+fn mobile_exports_are_byte_identical_across_thread_configs() {
+    assert_exports_stable(sim::city_mobile("alexnet", 400, 3, 120.0, 9));
+}
+
+#[test]
+fn windows_partition_the_run() {
+    let mut cfg = sim::city_scale_tiered("alexnet", 300, 3, 90.0, 11);
+    cfg.observability.window_s = 10.0; // metrics only, no tracing
+    let r = sim::run(&cfg).expect("tiered run");
+    assert!(r.trace.is_none());
+    let ts = r.series.as_ref().expect("series was on");
+    assert_eq!(ts.window_s, 10.0);
+    assert!(ts.windows.len() >= 9, "only {} windows for a 90 s run", ts.windows.len());
+
+    // Contiguous coverage from t=0 to the drained clock.
+    assert_eq!(ts.windows[0].start_s, 0.0);
+    for w in ts.windows.windows(2) {
+        assert_eq!(w[0].end_s, w[1].start_s, "window gap at {}", w[0].end_s);
+        assert_eq!(w[0].index + 1, w[1].index);
+    }
+    let last = ts.windows.last().unwrap();
+    assert!(
+        (last.end_s - r.sim_end_s).abs() < 1e-9,
+        "series ends at {} but the clock drained at {}",
+        last.end_s,
+        r.sim_end_s
+    );
+
+    // Per-window counters partition the run totals exactly.
+    let sum = |f: fn(&smartsplit::metrics::WindowSummary) -> u64| -> u64 {
+        ts.windows.iter().map(f).sum()
+    };
+    assert_eq!(sum(|w| w.generated), r.generated);
+    assert_eq!(sum(|w| w.completed), r.completed);
+    assert_eq!(sum(|w| w.dropped), r.dropped);
+    assert_eq!(sum(|w| w.resplits), r.resplits);
+    assert_eq!(sum(|w| w.handovers), r.handovers);
+    assert_eq!(sum(|w| w.migration_replans), r.migration_replans);
+    assert_eq!(sum(|w| w.cache_hits), r.planner.cache_hits);
+    assert_eq!(sum(|w| w.cache_misses), r.planner.cache_misses);
+    assert_eq!(sum(|w| w.latency.count), r.completed);
+
+    // Tier quantiles and pool gauges stay sane in every window.
+    for w in &ts.windows {
+        assert_eq!(w.edges.len(), r.edges.len());
+        assert_eq!(w.clouds.len(), r.clouds.len());
+        let hr = w.hit_rate();
+        assert!((0.0..=1.0).contains(&hr), "hit rate {hr} outside [0,1]");
+        for tier in [&w.latency, &w.device_queue, &w.edge_queue, &w.cloud_queue] {
+            if tier.count > 0 {
+                assert!(tier.p50_s <= tier.p95_s + 1e-12);
+                assert!(tier.p95_s <= tier.p99_s + 1e-12);
+                assert!(tier.p99_s <= tier.max_s + 1e-12);
+            }
+        }
+        for p in w.edges.iter().chain(&w.clouds) {
+            assert!(p.utilization >= 0.0 && p.utilization.is_finite());
+        }
+    }
+    assert_eq!(ts.hit_rate_curve().len(), ts.windows.len());
+}
+
+#[test]
+fn trace_sampling_records_every_nth_request() {
+    let mut cfg = sim::city_scale_tiered("alexnet", 300, 3, 90.0, 7);
+    cfg.observability.trace_sample_every = 3;
+    let r = sim::run(&cfg).expect("tiered run");
+    let tr = r.trace.as_ref().expect("tracing was on");
+    assert_eq!(tr.sample_every, 3);
+    assert_eq!(tr.unfinished, 0);
+    assert!(!tr.requests.is_empty());
+    assert!((tr.requests.len() as u64) < r.completed, "sampling recorded everything");
+    for t in &tr.requests {
+        assert_eq!(t.req % 3, 0, "off-sample request {} recorded", t.req);
+    }
+    assert_tiling(tr);
+}

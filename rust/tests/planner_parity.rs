@@ -247,6 +247,7 @@ fn stream_config(planner: sim::Planner, seed: u64) -> sim::SimConfig {
         edge: None,
         mobility: sim::Mobility::Static,
         handover_cost_s: 0.0,
+        observability: sim::ObservabilityConfig::disabled(),
     }
 }
 
