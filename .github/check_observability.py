@@ -19,7 +19,11 @@ SPAN_KINDS = {
     "edge_service", "backhaul", "cloud_queue", "cloud_service",
     "downlink",
 }
-EVENT_TYPES = {"replan", "handover_relay", "reattach"}
+EVENT_TYPES = {"replan", "handover_relay", "reattach", "fault", "failover"}
+FAULT_KINDS = {
+    "site_down", "site_up", "backhaul_degrade", "backhaul_restore",
+    "flash_crowd_start", "flash_crowd_end",
+}
 
 
 def fail(path, msg):
@@ -64,6 +68,8 @@ def check_jsonl_trace(path, lines):
             last_event_t = t
             if kind == "replan" and not obj["derived_seed"].startswith("0x"):
                 fail(path, "replan derived_seed is not a hex string")
+            if kind == "fault" and obj["kind"] not in FAULT_KINDS:
+                fail(path, f"unknown fault kind {obj['kind']!r}")
         else:
             fail(path, f"unknown line type {kind!r}")
     if requests != meta["requests"] or events != meta["events"]:

@@ -1,0 +1,116 @@
+//! §Scale: faulty-city throughput and the cost of failure.
+//!
+//! Runs the `city_faulty` scenario (the tiered city under the scripted
+//! outage + brownout + flash-crowd schedule) and records the numbers
+//! the CI perf trajectory tracks in `BENCH_faults.json`: events/sec
+//! through the handover storm, forced reattaches and cloud reroutes
+//! (count and per virtual second), failover re-solves and their share
+//! of planner requests, and the p95 latency tax relative to the same
+//! city with the fault plan cleared. `--smoke` shrinks the fleet for
+//! CI.
+
+use smartsplit::bench::{black_box, Bench};
+use smartsplit::sim::{self, FaultPlan};
+use smartsplit::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // (devices, sites, virtual seconds, bench iters, warmup)
+    let sizes: Vec<(usize, usize, f64, usize, usize)> = if smoke {
+        vec![(2_000, 4, 120.0, 2, 1)]
+    } else {
+        vec![(2_000, 4, 300.0, 3, 1), (10_000, 8, 120.0, 3, 1), (50_000, 16, 60.0, 2, 0)]
+    };
+    println!("== fault_scale: city-faulty scenario, alexnet, seed 7 ==");
+
+    let mut runs = Vec::new();
+    for (devices, sites, duration_s, iters, warmup) in sizes {
+        let cfg = sim::city_faulty("alexnet", devices, sites, duration_s, 7);
+        Bench::new(&format!(
+            "simulate {devices} devices / {sites} edge sites / {duration_s:.0}s virtual \
+             under {} fault(s)",
+            cfg.faults.events.len()
+        ))
+        .iters(iters)
+        .warmup(warmup)
+        .run(|| {
+            black_box(sim::run(&cfg).expect("sim run"));
+        });
+        let report = sim::run(&cfg)?;
+        // The failure tax: the identical city with the plan cleared.
+        let mut calm = cfg.clone();
+        calm.faults = FaultPlan::none();
+        let baseline = sim::run(&calm)?;
+
+        let wall_s = report.wall.as_secs_f64().max(1e-9);
+        let failovers = report.failover_reattaches + report.requests_rerouted;
+        let failover_requests = report.planner.failover_requests();
+        let request_total: u64 = report.planner.requests_by_reason.iter().sum();
+        println!(
+            "    {:>6} devices: {:>9} events in {:?} → {:>12.0} events/s, \
+             {} forced reattaches + {} reroutes ({:.2} failovers/virtual-s), \
+             {} failover re-plans ({:.1}% of planner requests)",
+            devices,
+            report.events,
+            report.wall,
+            report.events_per_wall_second(),
+            report.failover_reattaches,
+            report.requests_rerouted,
+            failovers as f64 / duration_s,
+            report.failover_replans,
+            100.0 * failover_requests as f64 / request_total.max(1) as f64,
+        );
+        println!(
+            "    {:>6}         p95 latency {:.2} ms faulty vs {:.2} ms calm \
+             ({} vs {} dropped)",
+            "",
+            report.latency.p95() * 1e3,
+            baseline.latency.p95() * 1e3,
+            report.dropped,
+            baseline.dropped,
+        );
+        // A fault bench in which nothing breaks is a silent
+        // misconfiguration, not a perf number — and conservation is
+        // non-negotiable even in a benchmark.
+        assert!(report.fault_events > 0, "the fault schedule never fired");
+        assert!(report.failover_reattaches > 0, "the outage stormed nobody");
+        assert_eq!(report.generated, report.completed + report.dropped, "requests leaked");
+        assert_eq!(baseline.fault_events, 0, "the calm baseline must not fault");
+        runs.push(Json::obj(vec![
+            ("devices", Json::Num(devices as f64)),
+            ("edge_sites", Json::Num(sites as f64)),
+            ("virtual_s", Json::Num(duration_s)),
+            ("events", Json::Num(report.events as f64)),
+            ("events_per_sec", Json::Num(report.events_per_wall_second())),
+            ("completed", Json::Num(report.completed as f64)),
+            ("dropped", Json::Num(report.dropped as f64)),
+            ("fault_events", Json::Num(report.fault_events as f64)),
+            ("failover_reattaches", Json::Num(report.failover_reattaches as f64)),
+            ("requests_rerouted", Json::Num(report.requests_rerouted as f64)),
+            ("failovers_per_virtual_sec", Json::Num(failovers as f64 / duration_s)),
+            ("failover_replans", Json::Num(report.failover_replans as f64)),
+            ("failover_requests", Json::Num(failover_requests as f64)),
+            ("planner_requests", Json::Num(request_total as f64)),
+            ("cache_hit_rate", Json::Num(report.planner.hit_rate())),
+            ("latency_p95_s", Json::Num(report.latency.p95())),
+            ("calm_latency_p95_s", Json::Num(baseline.latency.p95())),
+            ("decisions_per_sec", Json::Num(report.decision_count as f64 / wall_s)),
+        ]));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("fault_scale")),
+        ("smoke", Json::Bool(smoke)),
+        ("scenario", Json::str("city_faulty")),
+        ("model", Json::str("alexnet")),
+        ("runs", Json::Arr(runs)),
+    ]);
+    // Tracked at the repo root (next to BENCH_planner.json /
+    // BENCH_mobility.json) so the perf trajectory is versioned;
+    // CARGO_MANIFEST_DIR keeps the location stable however cargo was
+    // invoked.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_faults.json");
+    std::fs::write(&out, json.to_string_pretty())?;
+    println!("\nwrote {}", std::fs::canonicalize(&out)?.display());
+    Ok(())
+}

@@ -123,6 +123,40 @@ impl EdgeTopology {
         }
     }
 
+    /// Outage-aware attachment ([`crate::sim::faults`]): the site that
+    /// serves `device_id` when some sites are down. `down[k]` marks
+    /// site `k` unavailable. Returns the natural [`EdgeTopology::attach`]
+    /// site when it is up; otherwise the nearest live site by ring
+    /// [`EdgeTopology::cell_distance`] from the natural site's cell,
+    /// ties broken clockwise (lowest forward distance first) so the
+    /// fallback is deterministic. `None` when every site is down.
+    pub fn attach_avoiding(
+        &self,
+        device_id: usize,
+        cell: Option<usize>,
+        down: &[bool],
+    ) -> Option<usize> {
+        let natural = self.attach(device_id, cell);
+        if !down.get(natural).copied().unwrap_or(false) {
+            return Some(natural);
+        }
+        let n = self.num_cells();
+        // Walk outward from the natural cell: clockwise neighbour at
+        // each distance before the counter-clockwise one (the same
+        // clockwise preference as `step_toward`).
+        for d in 1..n {
+            let cw = (natural + d) % n;
+            if !down[cw] {
+                return Some(cw);
+            }
+            let ccw = (natural + n - d) % n;
+            if !down[ccw] {
+                return Some(ccw);
+            }
+        }
+        None
+    }
+
     pub fn num_sites(&self) -> usize {
         self.sites.len()
     }
@@ -264,6 +298,38 @@ mod tests {
                 assert_eq!(topo.attach(d, Some(cell)), cell);
             }
         }
+    }
+
+    #[test]
+    fn attach_avoiding_routes_around_outages_deterministically() {
+        let topo = EdgeTopology::uniform(
+            4,
+            EdgeSite {
+                servers: 2,
+                profile: profiles::edge_server(),
+                backhaul: BackhaulLink::METRO_1GBE,
+            },
+        );
+        // All up: identical to the natural rule (zero-fault parity).
+        for d in 0..8 {
+            for cell in [None, Some(0), Some(3)] {
+                assert_eq!(
+                    topo.attach_avoiding(d, cell, &[false; 4]),
+                    Some(topo.attach(d, cell))
+                );
+            }
+        }
+        // Natural site down: nearest live site, clockwise tie-break.
+        let down1 = [false, true, false, false];
+        assert_eq!(topo.attach_avoiding(1, None, &down1), Some(2), "1's neighbours tie; clockwise wins");
+        assert_eq!(topo.attach_avoiding(5, Some(1), &down1), Some(2));
+        assert_eq!(topo.attach_avoiding(0, None, &down1), Some(0), "live sites are untouched");
+        // Two adjacent sites down: the walk keeps widening.
+        let down12 = [false, true, true, false];
+        assert_eq!(topo.attach_avoiding(1, None, &down12), Some(0), "ccw at distance 1 beats cw at 2");
+        assert_eq!(topo.attach_avoiding(2, None, &down12), Some(3));
+        // Everything down: nowhere to attach.
+        assert_eq!(topo.attach_avoiding(0, None, &[true; 4]), None);
     }
 
     #[test]

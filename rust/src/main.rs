@@ -59,7 +59,7 @@ fn cli() -> Cli {
     .opt("pop", "100", "NSGA-II population size")
     .opt("gens", "250", "NSGA-II generations")
     .opt("seed", "7", "PRNG seed")
-    .opt("scenario", "city", "simulate: city | city-tiered | city-mobile | two-phone")
+    .opt("scenario", "city", "simulate: city | city-tiered | city-mobile | city-faulty | two-phone")
     .opt("devices", "10000", "simulate: fleet size (city scenario)")
     .opt("sim-duration", "10m", "simulate: virtual horizon (90, 90s, 10m, 2h)")
     .opt("clouds", "0", "simulate: cloud count override (0 = scenario default)")
@@ -69,6 +69,7 @@ fn cli() -> Cli {
     .opt("backhaul", "1000", "simulate: edge→cloud backhaul bandwidth in Mbps")
     .opt("mobility", "scenario", "simulate: device mobility: static | waypoint (scenario = the preset's choice; city-mobile walks by default)")
     .opt("handover-cost", "0.05", "simulate: fixed control-plane cost per edge handover in seconds (torso-state relay over the old backhaul is charged on top)")
+    .opt("fault-plan", "", "simulate: fault-injection schedule file (one `<at_s> <kind> <site> [args]` per line; kinds: site-down, site-up, backhaul-degrade, backhaul-restore, flash-crowd); overrides the scenario's plan")
     .opt("trace-out", "", "simulate: enable per-request tracing and write the timeline here (.jsonl = JSON Lines, otherwise Chrome trace_event JSON for chrome://tracing / Perfetto)")
     .opt("trace-sample", "1", "simulate: record every Nth request in the trace (1 = all; causal annotations are always recorded)")
     .opt("metrics-out", "", "simulate: enable the windowed time-series collector and write its JSON here")
@@ -220,6 +221,13 @@ fn run(args: &[String]) -> Result<()> {
                     duration,
                     cfg.seed,
                 ),
+                "city-faulty" => sim::city_faulty(
+                    &cfg.model,
+                    parsed.get_usize("devices"),
+                    if edge_sites > 0 { edge_sites } else { 3 },
+                    duration,
+                    cfg.seed,
+                ),
                 "two-phone" => {
                     // Fleet-simulation default: the small split genome
                     // needs nowhere near the canonical 100×250 budget, so
@@ -242,7 +250,7 @@ fn run(args: &[String]) -> Result<()> {
                     c
                 }
                 other => bail!(
-                    "unknown --scenario {other:?} (city | city-tiered | city-mobile | two-phone)"
+                    "unknown --scenario {other:?} (city | city-tiered | city-mobile | city-faulty | two-phone)"
                 ),
             };
             if parsed.get_usize("clouds") > 0 {
@@ -287,6 +295,18 @@ fn run(args: &[String]) -> Result<()> {
             }
             if parsed.provided("handover-cost") {
                 sim_cfg.handover_cost_s = parsed.get_f64("handover-cost");
+            }
+            // --fault-plan replaces the scenario's fault schedule with a
+            // file-scripted one (city-faulty ships a built-in schedule;
+            // every other preset defaults to none). Parse errors carry
+            // the offending line and, for unknown kinds, the valid-name
+            // list — the run never starts on a bad plan.
+            let fault_plan_path = parsed.get("fault-plan");
+            if !fault_plan_path.is_empty() {
+                let text = std::fs::read_to_string(fault_plan_path)
+                    .with_context(|| format!("reading --fault-plan {fault_plan_path}"))?;
+                sim_cfg.faults = sim::FaultPlan::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("--fault-plan {fault_plan_path}: {e}"))?;
             }
             // --planner overrides the scenario's default strategy
             // (city presets default to Topsis, two-phone to SmartSplit);
@@ -353,6 +373,9 @@ fn run(args: &[String]) -> Result<()> {
                     String::new()
                 },
             );
+            if !sim_cfg.faults.is_empty() {
+                println!("  injecting {} scheduled fault(s)", sim_cfg.faults.events.len());
+            }
             let report = sim::run(&sim_cfg)?;
             report.print();
             if !metrics_out.is_empty() {

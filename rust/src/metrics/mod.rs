@@ -215,11 +215,12 @@ impl Histogram {
 /// Number of request-reason counter slots (one per
 /// `planner::ReplanReason` variant; see
 /// [`PlannerStats::requests_by_reason`]).
-pub const REPLAN_REASONS: usize = 4;
+pub const REPLAN_REASONS: usize = 5;
 
 /// Split-planner accounting: how many full optimiser solves actually ran
 /// versus how many decisions the plan cache served, plus a per-reason
-/// request tally (spawn / drift / band crossing / migration). Atomic so
+/// request tally (spawn / drift / band crossing / migration /
+/// failover). Atomic so
 /// the parallel re-solve fan-out ([`crate::optimizer::cache`],
 /// `sim::on_reoptimize`) can record from worker threads.
 #[derive(Debug, Default)]
@@ -241,9 +242,10 @@ pub struct PlannerStats {
     pub solves: u64,
     /// Planner requests per replan reason, indexed by
     /// `planner::ReplanReason::index()`:
-    /// `[spawn, drift, band, migration]`. This is how migration
-    /// re-solves (edge handover) are accounted distinctly from
-    /// battery-band and drift re-splits.
+    /// `[spawn, drift, band, migration, failover]`. This is how
+    /// migration re-solves (edge handover) and fault-driven failover
+    /// re-solves are accounted distinctly from battery-band and drift
+    /// re-splits.
     pub requests_by_reason: [u64; REPLAN_REASONS],
 }
 
@@ -261,6 +263,12 @@ impl PlannerStats {
     /// ([`crate::planner::ReplanReason::Migration`]).
     pub fn migration_requests(&self) -> u64 {
         self.requests_by_reason[crate::planner::ReplanReason::Migration.index()]
+    }
+
+    /// Requests prompted by an injected fault
+    /// ([`crate::planner::ReplanReason::Failover`]).
+    pub fn failover_requests(&self) -> u64 {
+        self.requests_by_reason[crate::planner::ReplanReason::Failover.index()]
     }
 }
 
@@ -524,9 +532,11 @@ mod tests {
         c.record_reason(0);
         c.record_reason(1); // drift
         c.record_reason(3); // migration
+        c.record_reason(4); // failover
         let s = c.snapshot();
-        assert_eq!(s.requests_by_reason, [2, 1, 0, 1]);
+        assert_eq!(s.requests_by_reason, [2, 1, 0, 1, 1]);
         assert_eq!(s.migration_requests(), 1);
+        assert_eq!(s.failover_requests(), 1);
     }
 
     #[test]

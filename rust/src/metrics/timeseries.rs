@@ -97,6 +97,14 @@ pub struct WindowSummary {
     pub resplits: u64,
     pub handovers: u64,
     pub migration_replans: u64,
+    /// Failover actions inside this window: outage-forced reattaches
+    /// plus requests rerouted to the cloud off a dead site. Per-window
+    /// values partition the run total (`tests/fault_injection.rs`).
+    pub failovers: u64,
+    /// Number of fault conditions active at the window's close boundary
+    /// (a gauge, not a rate: outages + brownouts + flash crowds in
+    /// progress).
+    pub faults_active: u64,
     /// Planner cache traffic inside this window (façade requests from
     /// any thread land here when the window closes).
     pub cache_hits: u64,
@@ -131,6 +139,8 @@ impl WindowSummary {
             ("resplits", Json::Num(self.resplits as f64)),
             ("handovers", Json::Num(self.handovers as f64)),
             ("migration_replans", Json::Num(self.migration_replans as f64)),
+            ("failovers", Json::Num(self.failovers as f64)),
+            ("faults_active", Json::Num(self.faults_active as f64)),
             (
                 "planner",
                 Json::obj(vec![
@@ -182,7 +192,7 @@ impl TimeSeriesReport {
         );
         for w in &self.windows {
             println!(
-                "    [{:>3}] {:>7.1}-{:<7.1} gen={:<6} done={:<6} p95={} hit={:>3.0}% ho={} mig={}",
+                "    [{:>3}] {:>7.1}-{:<7.1} gen={:<6} done={:<6} p95={} hit={:>3.0}% ho={} mig={} fo={} faults={}",
                 w.index,
                 w.start_s,
                 w.end_s,
@@ -192,6 +202,8 @@ impl TimeSeriesReport {
                 w.hit_rate() * 100.0,
                 w.handovers,
                 w.migration_replans,
+                w.failovers,
+                w.faults_active,
             );
         }
     }
@@ -206,6 +218,7 @@ struct WindowAcc {
     resplits: u64,
     handovers: u64,
     migration_replans: u64,
+    failovers: u64,
     latency: Histogram,
     device_queue: Histogram,
     edge_queue: Histogram,
@@ -225,6 +238,9 @@ pub struct TimeSeries {
     /// `busy_time_s` per edge site / cloud at the last window close.
     edge_busy_base: Vec<f64>,
     cloud_busy_base: Vec<f64>,
+    /// Live count of in-progress fault conditions, set by the fault
+    /// injector; snapshotted into every window it closes over.
+    faults_active: u64,
     closed: Vec<WindowSummary>,
 }
 
@@ -245,6 +261,7 @@ impl TimeSeries {
             },
             edge_busy_base: vec![0.0; n_edges],
             cloud_busy_base: vec![0.0; n_clouds],
+            faults_active: 0,
             closed: Vec::new(),
         }
     }
@@ -285,6 +302,18 @@ impl TimeSeries {
 
     pub fn on_migration(&mut self) {
         self.cur.migration_replans += 1;
+    }
+
+    /// One failover action: an outage-forced reattach or a request
+    /// rerouted to the cloud off a dead site.
+    pub fn on_failover(&mut self) {
+        self.cur.failovers += 1;
+    }
+
+    /// Update the active-fault gauge; the value at a window's close
+    /// boundary is what the window reports.
+    pub fn set_faults_active(&mut self, n: u64) {
+        self.faults_active = n;
     }
 
     pub fn on_device_wait(&mut self, s: f64) {
@@ -354,6 +383,8 @@ impl TimeSeries {
             resplits: acc.resplits,
             handovers: acc.handovers,
             migration_replans: acc.migration_replans,
+            failovers: acc.failovers,
+            faults_active: self.faults_active,
             cache_hits: planner.cache_hits - self.planner_base.cache_hits,
             cache_misses: planner.cache_misses - self.planner_base.cache_misses,
             latency: TierWindow::from_hist(&acc.latency),
@@ -473,6 +504,31 @@ mod tests {
         let report = ts.finalize(20.0, stats(0, 0), &[], &[]);
         assert_eq!(report.windows.len(), 2, "horizon on a boundary must not add a tail");
         assert_eq!(report.windows[1].end_s, 20.0);
+    }
+
+    #[test]
+    fn failovers_partition_and_fault_gauge_snapshots_at_close() {
+        let mut ts = TimeSeries::new(10.0, 0, 0);
+        // Window 0: two failovers, one fault goes active before close.
+        ts.on_failover();
+        ts.on_failover();
+        ts.set_faults_active(1);
+        ts.roll(10.0, stats(0, 0), &[], &[]);
+        // Window 1: quiet, fault still active.
+        ts.roll(20.0, stats(0, 0), &[], &[]);
+        // Window 2: three failovers, the fault clears before close.
+        ts.on_failover();
+        ts.on_failover();
+        ts.on_failover();
+        ts.set_faults_active(0);
+        let report = ts.finalize(30.0, stats(0, 0), &[], &[]);
+        assert_eq!(report.windows.len(), 3);
+        let per_window: Vec<u64> = report.windows.iter().map(|w| w.failovers).collect();
+        assert_eq!(per_window, vec![2, 0, 3]);
+        // Partition property: window counters sum to the run total.
+        assert_eq!(per_window.iter().sum::<u64>(), 5);
+        let gauges: Vec<u64> = report.windows.iter().map(|w| w.faults_active).collect();
+        assert_eq!(gauges, vec![1, 1, 0]);
     }
 
     #[test]

@@ -169,14 +169,22 @@ pub enum ReplanReason {
     /// Edge handover: the device re-attached to a different site and
     /// re-plans with the new [`TierContext`].
     Migration,
+    /// Fault recovery: the device was forced off (or back onto) a site
+    /// by an injected fault — an outage-driven reattach storm or a
+    /// backhaul brownout/restore — and re-plans with the new
+    /// [`TierContext`]. Accounted distinctly from voluntary
+    /// [`ReplanReason::Migration`] so failure scenarios are auditable
+    /// in the per-reason tallies.
+    Failover,
 }
 
 impl ReplanReason {
-    pub const ALL: [ReplanReason; 4] = [
+    pub const ALL: [ReplanReason; 5] = [
         ReplanReason::Spawn,
         ReplanReason::Drift,
         ReplanReason::BandCrossing,
         ReplanReason::Migration,
+        ReplanReason::Failover,
     ];
 
     /// Stable slot in [`crate::metrics::PlannerStats::requests_by_reason`].
@@ -186,6 +194,7 @@ impl ReplanReason {
             ReplanReason::Drift => 1,
             ReplanReason::BandCrossing => 2,
             ReplanReason::Migration => 3,
+            ReplanReason::Failover => 4,
         }
     }
 
@@ -195,6 +204,7 @@ impl ReplanReason {
             ReplanReason::Drift => "drift",
             ReplanReason::BandCrossing => "band",
             ReplanReason::Migration => "migration",
+            ReplanReason::Failover => "failover",
         }
     }
 }

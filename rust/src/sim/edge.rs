@@ -129,6 +129,31 @@ impl SimEdge {
         }
     }
 
+    /// Evacuate the whole waiting queue — a site outage
+    /// ([`crate::sim::faults`]). Every queued torso request is popped
+    /// (recording its queue delay up to `now`) and handed back so the
+    /// caller can relay it onward to the cloud; requests must never be
+    /// silently lost with the site. In-service work is untouched: those
+    /// requests already committed their service time and their
+    /// `EdgeDone` events complete normally, so `busy`, `served`, and
+    /// `busy_time_s` are deliberately not modified here.
+    pub fn drain(&mut self, now: SimTime) -> Vec<EdgeDequeued> {
+        let mut out = Vec::with_capacity(self.queue.len());
+        while let Some(q) = self.queue.pop_front() {
+            self.queue_delay.record_secs(now - q.enqueued);
+            out.push(EdgeDequeued {
+                req: q.req,
+                device: q.device,
+                issued: q.issued,
+                service_s: q.service_s,
+                backhaul_s: q.backhaul_s,
+                tail_s: q.tail_s,
+                waited_s: now - q.enqueued,
+            });
+        }
+        out
+    }
+
     pub fn busy(&self) -> usize {
         self.busy
     }
@@ -203,6 +228,30 @@ mod tests {
         assert!((e.busy_time_s() - 4.0).abs() < 1e-12);
         assert_eq!(e.utilization(0.0), 0.0);
         assert_eq!(SimEdge::new(0).utilization(10.0), 0.0);
+    }
+
+    #[test]
+    fn drain_evacuates_the_queue_without_touching_service_state() {
+        let mut e = SimEdge::new(1);
+        assert!(e.offer(10, 0, 0.0, 0.0, 1.0, 0.01, 0.3).is_some());
+        assert!(e.offer(11, 1, 0.2, 0.2, 0.7, 0.02, 0.4).is_none());
+        assert!(e.offer(12, 2, 0.3, 0.3, 0.9, 0.03, 0.5).is_none());
+        let drained = e.drain(1.0);
+        assert_eq!(drained.len(), 2);
+        assert_eq!((drained[0].req, drained[1].req), (11, 12), "drain must be FIFO");
+        assert!((drained[0].waited_s - 0.8).abs() < 1e-12);
+        assert!((drained[1].waited_s - 0.7).abs() < 1e-12);
+        assert_eq!(drained[0].tail_s, 0.4);
+        assert_eq!(e.queue_len(), 0);
+        // The in-service request is untouched by the drain...
+        assert_eq!(e.busy(), 1);
+        assert_eq!(e.served, 0);
+        assert!((e.busy_time_s() - 1.0).abs() < 1e-12);
+        // ... and completes normally, freeing the server.
+        assert!(e.finish(1.0).is_none());
+        assert_eq!(e.busy(), 0);
+        assert_eq!(e.served, 1);
+        assert!(e.drain(2.0).is_empty());
     }
 
     #[test]

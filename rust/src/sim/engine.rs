@@ -69,8 +69,32 @@ pub enum Event {
     /// device's handover sequence number at scheduling time: relay
     /// delays vary per crossing, so re-attachments can land out of
     /// order, and only the event matching the device's *latest*
-    /// crossing may apply — stale ones are dropped.
-    Reattach { device: usize, site: usize, seq: u64 },
+    /// crossing may apply — stale ones are dropped. `failover` marks
+    /// re-attachments forced by an injected fault (site outage or
+    /// recovery re-balance): they re-plan under
+    /// [`crate::planner::ReplanReason::Failover`] instead and are
+    /// tallied apart from voluntary mobility.
+    Reattach { device: usize, site: usize, seq: u64, failover: bool },
+    /// Fault injection ([`crate::sim::faults::FaultPlan`]): an edge
+    /// site dies. Its queued torso work is relayed onward and every
+    /// attached device storms through the epoch-guarded
+    /// [`Event::Reattach`] path to the nearest live site.
+    SiteDown { site: usize },
+    /// Fault injection: a dead site recovers; devices whose natural
+    /// attachment is this site re-balance back onto it.
+    SiteUp { site: usize },
+    /// Fault injection: scale `site`'s backhaul bandwidth by `factor`
+    /// (a brownout) until the matching [`Event::BackhaulRestore`].
+    BackhaulDegrade { site: usize, factor: f64 },
+    /// Fault injection: end a brownout — the site's backhaul returns
+    /// to its configured bandwidth.
+    BackhaulRestore { site: usize },
+    /// Fault injection: a flash crowd pins itself to `site`'s cell —
+    /// arrivals are boosted by `boost` and biased toward devices
+    /// attached there until [`Event::FlashCrowdEnd`].
+    FlashCrowdStart { site: usize, boost: f64 },
+    /// Fault injection: the flash crowd at `site` disperses.
+    FlashCrowdEnd { site: usize },
     /// Periodic fleet sweep: re-run the split optimiser for devices whose
     /// bandwidth or battery band drifted.
     Reoptimize,

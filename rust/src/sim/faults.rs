@@ -1,0 +1,423 @@
+//! Deterministic fault injection: scripted site outages, backhaul
+//! brownouts, and flash crowds on the simulator's virtual clock.
+//!
+//! The topology PRs 3–5 built is immortal — no edge site ever dies, no
+//! backhaul ever degrades, and load only varies sinusoidally. A
+//! [`FaultPlan`] breaks that: an ordered list of [`FaultEvent`]s, each
+//! a virtual-time instant plus a [`FaultKind`], that the engine turns
+//! into ordinary events on its queue (`SiteDown`/`SiteUp`/
+//! `BackhaulDegrade`/`BackhaulRestore`/`FlashCrowdStart`/
+//! `FlashCrowdEnd` in [`crate::sim::engine`]).
+//!
+//! # Scenario families
+//!
+//! * **Site outage** (`site-down` … `site-up`): every device attached
+//!   to the dead site is re-attached to the nearest live site through
+//!   the existing epoch-guarded `Reattach` path — a handover storm —
+//!   and queued torso work is relayed onward to the cloud, never
+//!   silently lost. Recovery re-balances devices whose natural
+//!   assignment is the recovered site.
+//! * **Backhaul brownout** (`backhaul-degrade` … `backhaul-restore`):
+//!   the site's [`crate::edge::BackhaulLink`] bandwidth is scaled by a
+//!   scripted factor for a window, forcing failover re-plans under the
+//!   degraded [`crate::planner::TierContext`].
+//! * **Flash crowd** (`flash-crowd`): arrivals are boosted and biased
+//!   toward one site's cell for a window — the stadium scenario.
+//!
+//! # Determinism contract
+//!
+//! An **empty plan is inert**: it schedules no events and draws no
+//! randomness, so a zero-fault run replays the corresponding
+//! fault-free scenario byte-for-byte (`tests/fault_injection.rs` pins
+//! `city_scale_tiered` and `city_mobile`; the same discipline as
+//! [`crate::sim::Mobility::Static`]). [`FaultPlan::random`] draws its
+//! schedule from a private seeded stream *at construction*, so runtime
+//! behaviour stays a pure function of the finished plan. Conservation
+//! is a property: across any schedule, every issued request completes
+//! or is dropped exactly once.
+
+use crate::util::rng::{SplitMix64, Xoshiro256};
+
+/// One kind of injected fault. Sites are indices into the run's
+/// [`crate::edge::EdgeTopology`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Take a site out: storm-reattach its devices, relay its queue.
+    SiteDown { site: usize },
+    /// Bring a site back and re-balance natural attachments onto it.
+    SiteUp { site: usize },
+    /// Scale the site's backhaul bandwidth by `factor` (in `(0, 1]`).
+    BackhaulDegrade { site: usize, factor: f64 },
+    /// Restore the site's backhaul to its configured bandwidth.
+    BackhaulRestore { site: usize },
+    /// For `duration_s`, multiply the arrival rate by `boost` (≥ 1)
+    /// and bias new work toward devices attached to `site`.
+    FlashCrowd { site: usize, duration_s: f64, boost: f64 },
+}
+
+impl FaultKind {
+    /// Every parseable kind name, in declaration order — the
+    /// valid-name list unknown-kind errors print (the same error shape
+    /// as `planner::Strategy::by_name`).
+    pub const NAMES: [&'static str; 5] = [
+        "site-down",
+        "site-up",
+        "backhaul-degrade",
+        "backhaul-restore",
+        "flash-crowd",
+    ];
+
+    /// The plan-file keyword for this kind.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::SiteDown { .. } => "site-down",
+            FaultKind::SiteUp { .. } => "site-up",
+            FaultKind::BackhaulDegrade { .. } => "backhaul-degrade",
+            FaultKind::BackhaulRestore { .. } => "backhaul-restore",
+            FaultKind::FlashCrowd { .. } => "flash-crowd",
+        }
+    }
+
+    /// The site this fault targets.
+    pub fn site(&self) -> usize {
+        match *self {
+            FaultKind::SiteDown { site }
+            | FaultKind::SiteUp { site }
+            | FaultKind::BackhaulDegrade { site, .. }
+            | FaultKind::BackhaulRestore { site }
+            | FaultKind::FlashCrowd { site, .. } => site,
+        }
+    }
+}
+
+/// One scheduled fault: `kind` fires at virtual time `at_s`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub at_s: f64,
+    pub kind: FaultKind,
+}
+
+/// A scripted fault schedule. The default (empty) plan is inert — see
+/// the module docs for the zero-fault parity contract.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Events in schedule order. Ties on `at_s` fire in list order
+    /// (the engine's queue is FIFO among equal timestamps).
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// No faults at all — the inert plan.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Does this plan inject nothing?
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Check every event against the run it will drive: site indices
+    /// in `0..num_sites`, finite non-negative times, degrade factors
+    /// in `(0, 1]`, crowd boosts ≥ 1 over positive windows.
+    pub fn validate(&self, num_sites: usize) -> Result<(), String> {
+        for (i, e) in self.events.iter().enumerate() {
+            let at = e.at_s;
+            if !at.is_finite() || at < 0.0 {
+                return Err(format!("fault {} ({}): bad time {at}", i, e.kind.name()));
+            }
+            let site = e.kind.site();
+            if site >= num_sites {
+                return Err(format!(
+                    "fault {} ({}): site {site} out of range (topology has {num_sites} site(s))",
+                    i,
+                    e.kind.name()
+                ));
+            }
+            match e.kind {
+                FaultKind::BackhaulDegrade { factor, .. } => {
+                    if !(factor > 0.0 && factor <= 1.0) || !factor.is_finite() {
+                        return Err(format!(
+                            "fault {i} (backhaul-degrade): factor {factor} not in (0, 1]"
+                        ));
+                    }
+                }
+                FaultKind::FlashCrowd { duration_s, boost, .. } => {
+                    if !(duration_s > 0.0) || !duration_s.is_finite() {
+                        return Err(format!(
+                            "fault {i} (flash-crowd): bad duration {duration_s}"
+                        ));
+                    }
+                    if !(boost >= 1.0) || !boost.is_finite() {
+                        return Err(format!("fault {i} (flash-crowd): boost {boost} < 1"));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a plan file. One event per line:
+    ///
+    /// ```text
+    /// # <at_s> <kind> <site> [args]
+    /// 30   site-down        1
+    /// 45   backhaul-degrade 0  0.25     # factor in (0, 1]
+    /// 60   site-up          1
+    /// 75   backhaul-restore 0
+    /// 90   flash-crowd      2  30  4    # duration_s, boost
+    /// ```
+    ///
+    /// Blank lines and `#` comments (whole-line or trailing) are
+    /// ignored. Unknown kinds are rejected with the valid-name list —
+    /// never a panic.
+    pub fn parse(text: &str) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let n = lineno + 1;
+            let mut parts = line.split_whitespace();
+            let at_s: f64 = parts
+                .next()
+                .unwrap()
+                .parse()
+                .map_err(|_| format!("line {n}: bad time in {line:?}"))?;
+            let kind_name = parts.next().ok_or_else(|| format!("line {n}: missing fault kind"))?;
+            let mut arg = |what: &str| -> Result<f64, String> {
+                parts
+                    .next()
+                    .ok_or_else(|| format!("line {n} ({kind_name}): missing {what}"))?
+                    .parse::<f64>()
+                    .map_err(|_| format!("line {n} ({kind_name}): bad {what}"))
+            };
+            let site = arg("site index")? as usize;
+            let kind = match kind_name {
+                "site-down" => FaultKind::SiteDown { site },
+                "site-up" => FaultKind::SiteUp { site },
+                "backhaul-degrade" => {
+                    FaultKind::BackhaulDegrade { site, factor: arg("degrade factor")? }
+                }
+                "backhaul-restore" => FaultKind::BackhaulRestore { site },
+                "flash-crowd" => FaultKind::FlashCrowd {
+                    site,
+                    duration_s: arg("crowd duration")?,
+                    boost: arg("arrival boost")?,
+                },
+                other => {
+                    return Err(format!(
+                        "line {n}: unknown fault kind {other:?} (valid: {})",
+                        FaultKind::NAMES.join(", ")
+                    ))
+                }
+            };
+            if let Some(extra) = parts.next() {
+                return Err(format!("line {n} ({kind_name}): unexpected trailing {extra:?}"));
+            }
+            events.push(FaultEvent { at_s, kind });
+        }
+        Ok(FaultPlan { events })
+    }
+
+    /// Render this plan in the format [`FaultPlan::parse`] reads
+    /// (round-trips exactly for finite values).
+    pub fn to_text(&self) -> String {
+        let mut s = String::from("# <at_s> <kind> <site> [args]\n");
+        for e in &self.events {
+            match e.kind {
+                FaultKind::SiteDown { site } => {
+                    s.push_str(&format!("{} site-down {}\n", e.at_s, site))
+                }
+                FaultKind::SiteUp { site } => s.push_str(&format!("{} site-up {}\n", e.at_s, site)),
+                FaultKind::BackhaulDegrade { site, factor } => {
+                    s.push_str(&format!("{} backhaul-degrade {} {}\n", e.at_s, site, factor))
+                }
+                FaultKind::BackhaulRestore { site } => {
+                    s.push_str(&format!("{} backhaul-restore {}\n", e.at_s, site))
+                }
+                FaultKind::FlashCrowd { site, duration_s, boost } => s.push_str(&format!(
+                    "{} flash-crowd {} {} {}\n",
+                    e.at_s, site, duration_s, boost
+                )),
+            }
+        }
+        s
+    }
+
+    /// The scripted city-faulty schedule the `--scenario city-faulty`
+    /// preset and `examples/edge_faulty.rs` run: one mid-run outage of
+    /// site 1 (down at 25 % of the horizon, back at 55 %), one brownout
+    /// of site 0 (35 %–65 %, backhaul at a quarter bandwidth), and one
+    /// flash crowd pinned to the last site (50 %, lasting 20 % of the
+    /// horizon at 4× arrivals). Purely scripted — no randomness.
+    pub fn city_faulty(sites: usize, duration_s: f64) -> FaultPlan {
+        let d = duration_s.max(1.0);
+        let mut events = vec![
+            FaultEvent { at_s: 0.25 * d, kind: FaultKind::SiteDown { site: 1 % sites.max(1) } },
+            FaultEvent { at_s: 0.55 * d, kind: FaultKind::SiteUp { site: 1 % sites.max(1) } },
+            FaultEvent {
+                at_s: 0.35 * d,
+                kind: FaultKind::BackhaulDegrade { site: 0, factor: 0.25 },
+            },
+            FaultEvent { at_s: 0.65 * d, kind: FaultKind::BackhaulRestore { site: 0 } },
+        ];
+        if sites > 0 {
+            events.push(FaultEvent {
+                at_s: 0.5 * d,
+                kind: FaultKind::FlashCrowd { site: sites - 1, duration_s: 0.2 * d, boost: 4.0 },
+            });
+        }
+        events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        FaultPlan { events }
+    }
+
+    /// A randomized-but-reproducible schedule for property tests: the
+    /// whole schedule is drawn here, from a stream derived from `seed`
+    /// alone, so two calls with equal arguments build equal plans and
+    /// the run itself stays deterministic. Always valid for a
+    /// `sites`-site topology (site 0 is never taken down, so the fleet
+    /// always has somewhere to land).
+    pub fn random(seed: u64, sites: usize, duration_s: f64) -> FaultPlan {
+        let mut rng = Xoshiro256::seed_from_u64(
+            SplitMix64::new(seed ^ 0xFA_017_FA_017).next_u64(),
+        );
+        let d = duration_s.max(1.0);
+        let mut events = Vec::new();
+        if sites > 1 {
+            for _ in 0..(1 + rng.gen_range(0, 1)) {
+                let site = rng.gen_range(1, sites - 1);
+                let down = d * (0.1 + 0.5 * rng.next_f64());
+                let up = down + d * (0.05 + 0.25 * rng.next_f64());
+                events.push(FaultEvent { at_s: down, kind: FaultKind::SiteDown { site } });
+                events.push(FaultEvent { at_s: up, kind: FaultKind::SiteUp { site } });
+            }
+        }
+        if sites > 0 {
+            let site = rng.gen_range(0, sites - 1);
+            let start = d * (0.1 + 0.5 * rng.next_f64());
+            let factor = 0.1 + 0.6 * rng.next_f64();
+            events.push(FaultEvent {
+                at_s: start,
+                kind: FaultKind::BackhaulDegrade { site, factor },
+            });
+            events.push(FaultEvent {
+                at_s: start + d * (0.1 + 0.2 * rng.next_f64()),
+                kind: FaultKind::BackhaulRestore { site },
+            });
+            let crowd_site = rng.gen_range(0, sites - 1);
+            events.push(FaultEvent {
+                at_s: d * (0.2 + 0.5 * rng.next_f64()),
+                kind: FaultKind::FlashCrowd {
+                    site: crowd_site,
+                    duration_s: d * (0.05 + 0.2 * rng.next_f64()),
+                    boost: 2.0 + 4.0 * rng.next_f64(),
+                },
+            });
+        }
+        events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        FaultPlan { events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_inert() {
+        assert!(FaultPlan::default().is_empty());
+        assert!(FaultPlan::none().is_empty());
+        assert_eq!(FaultPlan::default(), FaultPlan::none());
+        assert!(FaultPlan::default().validate(0).is_ok());
+    }
+
+    #[test]
+    fn parse_round_trips_through_to_text() {
+        let text = "\
+# a comment
+30 site-down 1
+45 backhaul-degrade 0 0.25
+60 site-up 1        # trailing comment
+75 backhaul-restore 0
+
+90 flash-crowd 2 30 4
+";
+        let plan = FaultPlan::parse(text).expect("parse");
+        assert_eq!(plan.events.len(), 5);
+        assert_eq!(plan.events[0].kind, FaultKind::SiteDown { site: 1 });
+        assert_eq!(plan.events[4].kind, FaultKind::FlashCrowd {
+            site: 2,
+            duration_s: 30.0,
+            boost: 4.0
+        });
+        assert!(plan.validate(3).is_ok());
+        let reparsed = FaultPlan::parse(&plan.to_text()).expect("reparse");
+        assert_eq!(plan, reparsed);
+    }
+
+    #[test]
+    fn unknown_kind_lists_valid_names() {
+        let err = FaultPlan::parse("10 meteor-strike 0").unwrap_err();
+        assert!(err.contains("unknown fault kind"), "{err}");
+        for name in FaultKind::NAMES {
+            assert!(err.contains(name), "error {err:?} does not list {name}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(FaultPlan::parse("ten site-down 0").is_err());
+        assert!(FaultPlan::parse("10 site-down").is_err());
+        assert!(FaultPlan::parse("10 backhaul-degrade 0").is_err());
+        assert!(FaultPlan::parse("10 site-down 0 extra").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_and_bad_args() {
+        let plan = FaultPlan::parse("10 site-down 5").unwrap();
+        assert!(plan.validate(3).unwrap_err().contains("out of range"));
+        let plan = FaultPlan::parse("10 backhaul-degrade 0 1.5").unwrap();
+        assert!(plan.validate(3).is_err());
+        let plan = FaultPlan::parse("10 flash-crowd 0 30 0.5").unwrap();
+        assert!(plan.validate(3).is_err());
+        let plan = FaultPlan::parse("-5 site-down 0").unwrap();
+        assert!(plan.validate(3).is_err());
+    }
+
+    #[test]
+    fn city_faulty_is_scripted_valid_and_ordered() {
+        for sites in [2, 3, 8] {
+            let plan = FaultPlan::city_faulty(sites, 600.0);
+            assert!(!plan.is_empty());
+            assert!(plan.validate(sites).is_ok(), "sites={sites}");
+            for w in plan.events.windows(2) {
+                assert!(w[0].at_s <= w[1].at_s, "unordered schedule");
+            }
+            assert_eq!(plan, FaultPlan::city_faulty(sites, 600.0));
+        }
+    }
+
+    #[test]
+    fn random_plans_are_reproducible_and_valid() {
+        for seed in 0..20u64 {
+            let a = FaultPlan::random(seed, 4, 300.0);
+            let b = FaultPlan::random(seed, 4, 300.0);
+            assert_eq!(a, b, "seed {seed} not reproducible");
+            assert!(a.validate(4).is_ok(), "seed {seed}: {:?}", a.validate(4));
+            assert!(!a.is_empty());
+            // Site 0 is the guaranteed survivor.
+            assert!(a
+                .events
+                .iter()
+                .all(|e| !matches!(e.kind, FaultKind::SiteDown { site: 0 })));
+        }
+        assert_ne!(
+            FaultPlan::random(1, 4, 300.0),
+            FaultPlan::random(2, 4, 300.0),
+            "seeds do not differentiate schedules"
+        );
+    }
+}

@@ -45,6 +45,7 @@ pub mod cloud;
 pub mod device;
 pub mod edge;
 pub mod engine;
+pub mod faults;
 pub mod mobility;
 pub mod scenario;
 
@@ -72,10 +73,11 @@ pub use cloud::SimCloud;
 pub use device::{EdgeAttachment, Planner, SimDevice};
 pub use edge::SimEdge;
 pub use engine::{Event, EventQueue, SimTime};
+pub use faults::{FaultEvent, FaultKind, FaultPlan};
 pub use mobility::{Mobility, WaypointWalk};
 pub use scenario::{
-    city_mobile, city_scale, city_scale_tiered, two_phone_fleet, ChurnConfig, EdgeSpec,
-    ExplicitMember, FleetSpec, ObservabilityConfig, PlannerPerfConfig, SimConfig,
+    city_faulty, city_mobile, city_scale, city_scale_tiered, two_phone_fleet, ChurnConfig,
+    EdgeSpec, ExplicitMember, FleetSpec, ObservabilityConfig, PlannerPerfConfig, SimConfig,
 };
 
 /// Per-profile slice of the fleet report (devices sharing a
@@ -145,6 +147,24 @@ pub struct SimReport {
     /// [`crate::planner::ReplanReason::Migration`] slice of
     /// [`SimReport::planner`], as decisions rather than requests).
     pub migration_replans: u64,
+    /// Completed *forced* re-attachments: a fault (site outage or
+    /// recovery re-balance, [`faults::FaultPlan`]) moved the device,
+    /// as opposed to a voluntary mobility handover. Always 0 with an
+    /// empty fault plan.
+    pub failover_reattaches: u64,
+    /// In-flight or queued requests a site outage relayed onward to the
+    /// cloud instead of losing them with the site. Conservation
+    /// (`generated == completed + dropped`) holds across outages
+    /// because of exactly this path — pinned by
+    /// `tests/fault_injection.rs`.
+    pub requests_rerouted: u64,
+    /// Re-solves adopted under [`crate::planner::ReplanReason::Failover`]
+    /// (forced re-attachments and brownout re-plans that produced a
+    /// decision).
+    pub failover_replans: u64,
+    /// Scripted fault events applied (outages, recoveries, brownout
+    /// edges, flash-crowd edges). 0 with an empty plan.
+    pub fault_events: u64,
     pub client_energy_j: f64,
     pub upload_energy_j: f64,
     /// Final split distribution: (plan, active devices running it).
@@ -202,7 +222,8 @@ impl SimReport {
             self.edges.iter().map(|e| format!("{:.4}", e.utilization)).collect();
         format!(
             "model={} seed={} completed={} dropped={} joined={} left={} dead={} \
-             resplits={} handovers={} migrations={} latency[{}] deviceq[{}] edgeq[{}] cloudq[{}] \
+             resplits={} handovers={} migrations={} failovers={} rerouted={} freplans={} \
+             faults={} latency[{}] deviceq[{}] edgeq[{}] cloudq[{}] \
              E_client={:.6}J E_up={:.6}J util=[{}] eutil=[{}]",
             self.model,
             self.seed,
@@ -214,6 +235,10 @@ impl SimReport {
             self.resplits,
             self.handovers,
             self.migration_replans,
+            self.failover_reattaches,
+            self.requests_rerouted,
+            self.failover_replans,
+            self.fault_events,
             self.latency.summary(),
             self.device_queue_delay.summary(),
             self.edge_queue_delay.summary(),
@@ -314,6 +339,16 @@ impl SimReport {
             self.migration_replans,
             self.planner.migration_requests(),
         );
+        if self.fault_events > 0 {
+            println!(
+                "  faults     : {} fault events, {} forced re-attachments, {} requests rerouted, {} failover re-plans ({} failover requests to the planner)",
+                self.fault_events,
+                self.failover_reattaches,
+                self.requests_rerouted,
+                self.failover_replans,
+                self.planner.failover_requests(),
+            );
+        }
         if let Some(ts) = &self.series {
             ts.print_brief();
         }
@@ -400,6 +435,15 @@ struct Counters {
     exhausted: u64,
     handovers: u64,
     migrations: u64,
+    /// Forced (fault-driven) re-attachments that landed.
+    failover_reattaches: u64,
+    /// Requests relayed to the cloud off a dead site (queued or in
+    /// flight at outage time) instead of being lost.
+    rerouted: u64,
+    /// Adopted re-plans under [`ReplanReason::Failover`].
+    failover_replans: u64,
+    /// Scripted fault events applied.
+    faults: u64,
 }
 
 /// The event-loop state. Lives for one [`run`] call.
@@ -428,14 +472,32 @@ struct Sim<'a> {
     /// Per-device *decided* attachment: the current site, or the target
     /// of an in-flight re-attachment. Crossings are judged against this
     /// (not the lagging attachment), so a quick back-crossing during a
-    /// slow relay still schedules the corrective handover.
-    /// Index-parallel with `walkers`.
+    /// slow relay still schedules the corrective handover. Fault storms
+    /// share it: an outage retargets every device decided onto the dead
+    /// site. `usize::MAX` marks a device detached by a total outage.
+    /// Index-parallel with `devices` whenever the scenario has an edge
+    /// tier (empty otherwise).
     target_site: Vec<usize>,
     /// Per-device handover sequence number; stamped into each scheduled
     /// [`Event::Reattach`] so a stale (superseded) re-attachment that
     /// lands out of order is dropped instead of overwriting a newer
-    /// one. Index-parallel with `walkers`.
+    /// one. Mobility handovers and fault storms bump the same epoch, so
+    /// either path supersedes the other's in-flight re-attachments.
+    /// Index-parallel with `target_site`.
     handover_seq: Vec<u64>,
+    /// `site_down[s]` while a scripted [`Event::SiteDown`] outage holds
+    /// site `s`. All-false (and never consulted beyond a cheap scan)
+    /// with an empty fault plan.
+    site_down: Vec<bool>,
+    /// Brownout state: `< 1.0` scales site `s`'s backhaul bandwidth
+    /// until the matching restore. Exactly `1.0` (and bit-transparent:
+    /// the degraded copy is never even constructed) otherwise.
+    backhaul_factor: Vec<f64>,
+    /// Active flash crowd, if any: `(pinned site, arrival boost)`.
+    crowd: Option<(usize, f64)>,
+    /// Concurrently-active injected faults (outages + brownouts +
+    /// crowds), mirrored into the time series as a gauge.
+    faults_active: u64,
     latency_by_profile: BTreeMap<&'static str, Histogram>,
     devices_by_profile: BTreeMap<&'static str, usize>,
     /// Device-tier queue delay (backlog wait before head compute).
@@ -550,6 +612,23 @@ impl<'a> Sim<'a> {
                 .with_cache(cfg.planner_perf.cache),
         );
         let edge_sites: usize = topology.as_ref().map(|t| t.num_sites()).unwrap_or(0);
+        if !cfg.faults.is_empty() {
+            if topology.is_none() {
+                bail!(
+                    "a fault plan needs an edge tier to injure \
+                     (add --edge-sites, or use --scenario city-faulty)"
+                );
+            }
+            if !(cfg.handover_cost_s >= 0.0) || !cfg.handover_cost_s.is_finite() {
+                bail!(
+                    "handover cost must be a finite non-negative number of seconds, got {}",
+                    cfg.handover_cost_s
+                );
+            }
+            if let Err(e) = cfg.faults.validate(edge_sites) {
+                bail!("invalid fault plan: {e}");
+            }
+        }
         let trace = if obs.trace_sample_every > 0 {
             Some(TraceRecorder::new(obs.trace_sample_every))
         } else {
@@ -576,6 +655,10 @@ impl<'a> Sim<'a> {
             walkers: Vec::new(),
             target_site: Vec::new(),
             handover_seq: Vec::new(),
+            site_down: vec![false; edge_sites],
+            backhaul_factor: vec![1.0; edge_sites],
+            crowd: None,
+            faults_active: 0,
             latency_by_profile: BTreeMap::new(),
             devices_by_profile: BTreeMap::new(),
             device_wait: Histogram::new(),
@@ -593,29 +676,58 @@ impl<'a> Sim<'a> {
         })
     }
 
-    /// The attachment for site `site` of the edge tier.
-    fn attachment_at(&self, site: usize) -> EdgeAttachment {
-        let t = self.topology.as_ref().expect("attachment without an edge tier");
-        EdgeAttachment { site, profile: t.sites[site].profile, backhaul: t.sites[site].backhaul }
+    /// Site `site` as the fleet currently experiences it: the configured
+    /// [`crate::edge::EdgeSite`] verbatim, except under a brownout
+    /// ([`Event::BackhaulDegrade`]) when its backhaul bandwidth is
+    /// scaled by the scripted factor. The un-degraded copy is returned
+    /// bit-for-bit untouched (no arithmetic on it at all), which is
+    /// what makes the zero-fault byte-parity guarantee trivial.
+    fn effective_site(&self, site: usize) -> crate::edge::EdgeSite {
+        let t = self.topology.as_ref().expect("site lookup without an edge tier");
+        let mut s = t.sites[site];
+        let f = self.backhaul_factor[site];
+        if f < 1.0 {
+            s.backhaul.bandwidth_mbps *= f;
+        }
+        s
     }
 
-    /// This device's spawn-time edge attachment (assigned site), if the
-    /// scenario has an edge tier. Later handovers replace it via
-    /// `on_reattach`.
+    /// The attachment for site `site` of the edge tier, reflecting any
+    /// active brownout on its backhaul.
+    fn attachment_at(&self, site: usize) -> EdgeAttachment {
+        let s = self.effective_site(site);
+        EdgeAttachment { site, profile: s.profile, backhaul: s.backhaul }
+    }
+
+    /// The spawn placement rule: the topology's natural site, routed
+    /// around any sites currently down. `None` only when every site is
+    /// down (the device spawns unattached and plans two-tier).
+    fn spawn_site(&self, member: usize, t: &EdgeTopology) -> Option<usize> {
+        if self.site_down.iter().any(|&d| d) {
+            t.attach_avoiding(member, None, &self.site_down)
+        } else {
+            Some(t.site_of(member))
+        }
+    }
+
+    /// This device's spawn-time edge attachment (assigned site, routed
+    /// around outages), if the scenario has an edge tier. Later
+    /// handovers and fault storms replace it via `on_reattach`.
     fn attachment(&self, device: usize) -> Option<EdgeAttachment> {
         let t = self.topology.as_ref()?;
-        Some(self.attachment_at(t.site_of(device)))
+        let site = self.spawn_site(device, t)?;
+        Some(self.attachment_at(site))
     }
 
     /// The site device `member` is *currently* attached to: its live
-    /// attachment once it exists (mobility moves it), the spawn
-    /// placement rule before that (the spawn path plans before the
-    /// device is constructed).
-    fn current_site(&self, member: usize, t: &EdgeTopology) -> usize {
-        self.devices
-            .get(member)
-            .and_then(|d| d.edge.as_ref().map(|e| e.site))
-            .unwrap_or_else(|| t.site_of(member))
+    /// attachment once it exists (mobility and faults move it; `None`
+    /// while detached by a total outage), the spawn placement rule
+    /// before the device is constructed (the spawn path plans first).
+    fn current_site(&self, member: usize, t: &EdgeTopology) -> Option<usize> {
+        match self.devices.get(member) {
+            Some(d) => d.edge.as_ref().map(|e| e.site),
+            None => self.spawn_site(member, t),
+        }
     }
 
     /// Account one adopted split decision (and retain it in the trace
@@ -655,8 +767,13 @@ impl<'a> Sim<'a> {
         )
         .with_reason(reason);
         if let Some(t) = self.topology.as_ref() {
-            let site = self.current_site(member, t);
-            req.tier = Some(TierContext { site, edge: t.sites[site] });
+            // A brownout flows into the tier context here: the degraded
+            // backhaul quantises into a different `TierKey` bucket, so
+            // the façade treats it as a distinct planner state and
+            // solves it fresh instead of serving the healthy plan.
+            if let Some(site) = self.current_site(member, t) {
+                req.tier = Some(TierContext { site, edge: self.effective_site(site) });
+            }
         }
         req
     }
@@ -827,19 +944,26 @@ impl<'a> Sim<'a> {
         *self.devices_by_profile.entry(profile.name).or_insert(0) += 1;
         self.devices.push(d);
         self.active.insert(id);
+        if self.topology.is_some() {
+            // Decided attachment + re-attach epoch exist for every
+            // device under an edge tier: mobility handovers and fault
+            // storms share the same epoch-guarded Reattach path.
+            // `usize::MAX` marks a device spawned during a total outage.
+            self.target_site.push(edge.map(|e| e.site).unwrap_or(usize::MAX));
+            self.handover_seq.push(0);
+        }
         if let Some(walk) = self.walk {
-            // The walker starts in its spawn site's cell on a private
-            // RNG stream; its first tick (after the initial dwell) aims
-            // at a waypoint. Churn joins get walkers exactly like the
-            // initial fleet.
+            // The walker starts in its spawn site's *natural* cell (its
+            // physical position — under an outage the serving site may
+            // be farther away) on a private RNG stream; its first tick
+            // (after the initial dwell) aims at a waypoint. Churn joins
+            // get walkers exactly like the initial fleet.
             let topo = self.topology.as_ref().expect("mobility without an edge tier");
-            let cell = edge.expect("mobility without an attachment").site;
+            let cell = topo.site_of(id);
             let mut walker = mobility::Walker::new(self.cfg.seed, id, cell);
             let (dwell, crossed) = walker.step(topo, &walk);
             debug_assert!(crossed.is_none(), "a fresh walker cannot cross");
             self.walkers.push(walker);
-            self.target_site.push(cell);
-            self.handover_seq.push(0);
             self.q.schedule(at + dwell, Event::Handover { device: id });
         }
         if let Some(churn) = &self.cfg.churn {
@@ -966,11 +1090,34 @@ impl<'a> Sim<'a> {
         }
     }
 
+    /// Biased device pick while a flash crowd pins `site`: bounded
+    /// rejection sampling — up to 8 uniform draws from the scenario RNG,
+    /// returning the first device decided onto the crowded site (else
+    /// the last draw, so a crowd at an empty site degrades gracefully).
+    /// All randomness still flows through `active.sample`, so the
+    /// decision stream stays a pure function of the seed.
+    fn sample_crowded(&mut self, site: usize) -> Option<usize> {
+        let mut last = None;
+        for _ in 0..8 {
+            let d = self.active.sample(&mut self.rng)?;
+            last = Some(d);
+            if self.target_site.get(d).copied() == Some(site) {
+                break;
+            }
+        }
+        last
+    }
+
     fn on_arrival(&mut self, now: SimTime) {
         if self.horizon_reached {
             return;
         }
-        let gap = next_interarrival(self.cfg.arrival, now, &mut self.rng);
+        let mut gap = next_interarrival(self.cfg.arrival, now, &mut self.rng);
+        if let Some((_, boost)) = self.crowd {
+            // Flash crowd: the fleet offers `boost`× the configured load
+            // for the scripted window.
+            gap /= boost;
+        }
         self.q.schedule(now + gap, Event::Arrival);
         // The pre-increment value is this request's fleet-wide ordinal —
         // the key every trace span and causal annotation hangs off.
@@ -979,7 +1126,10 @@ impl<'a> Sim<'a> {
         if let Some(s) = self.series.as_mut() {
             s.on_generated();
         }
-        let pick = self.active.sample(&mut self.rng);
+        let pick = match self.crowd {
+            None => self.active.sample(&mut self.rng),
+            Some((site, _)) => self.sample_crowded(site),
+        };
         match pick {
             None => {
                 self.counters.dropped += 1;
@@ -1020,6 +1170,15 @@ impl<'a> Sim<'a> {
         // `tests/edge_parity.rs` pins.
         if torso_s > 0.0 {
             let site = site.expect("torso work without an edge attachment");
+            if self.site_down[site] {
+                // The site died while this request was uplinking: relay
+                // the whole remainder onward — torso *and* tail run at
+                // the cloud — instead of queueing work on a corpse. The
+                // request completes exactly once (conservation).
+                self.reroute_to_cloud(req, device, issued, torso_s + tail_s, backhaul_s, site, now);
+                self.after_uplink(device, now);
+                return;
+            }
             match self.edges[site].offer(req, device, issued, now, torso_s, backhaul_s, tail_s) {
                 Some(svc) => {
                     if let Some(s) = self.series.as_mut() {
@@ -1054,6 +1213,13 @@ impl<'a> Sim<'a> {
         } else {
             self.offer_cloud(req, device, issued, tail_s, now);
         }
+        self.after_uplink(device, now);
+    }
+
+    /// Post-uplink device bookkeeping shared by the normal and the
+    /// dead-site-reroute paths: the event-driven battery-band trigger,
+    /// then the serial device picking up its next backlogged request.
+    fn after_uplink(&mut self, device: usize, now: SimTime) {
         // The drain from this request may have crossed a battery band
         // boundary — the event-driven re-split trigger.
         if self.devices[device].active {
@@ -1072,6 +1238,48 @@ impl<'a> Sim<'a> {
             if let Some((req2, issued2)) = self.devices[device].backlog.pop_front() {
                 self.start_on(device, req2, issued2, now);
             }
+        }
+    }
+
+    /// Relay a request off a dead site to its device's cloud: the
+    /// remaining compute (`cloud_tail_s`, the captured torso + tail) is
+    /// served there after the captured backhaul crossing. Counted as a
+    /// failover in both the run totals and the active window; never
+    /// dropped — `tests/fault_injection.rs` pins conservation on
+    /// exactly this path.
+    #[allow(clippy::too_many_arguments)]
+    fn reroute_to_cloud(
+        &mut self,
+        req: u64,
+        device: usize,
+        issued: SimTime,
+        cloud_tail_s: f64,
+        backhaul_s: f64,
+        from_site: usize,
+        now: SimTime,
+    ) {
+        self.counters.rerouted += 1;
+        if let Some(s) = self.series.as_mut() {
+            s.on_failover();
+        }
+        if let Some(tr) = self.trace.as_mut() {
+            tr.note(CausalEvent::Failover {
+                t_s: now,
+                req,
+                device: device as u64,
+                from_site: from_site as u32,
+            });
+        }
+        if backhaul_s > 0.0 {
+            if let Some(tr) = self.trace.as_mut() {
+                tr.span(req, SpanKind::Backhaul, now, now + backhaul_s, Some(from_site as u32));
+            }
+            self.q.schedule_in(
+                backhaul_s,
+                Event::CloudArrive { req, device, issued, tail_s: cloud_tail_s },
+            );
+        } else {
+            self.offer_cloud(req, device, issued, cloud_tail_s, now);
         }
     }
 
@@ -1222,30 +1430,64 @@ impl<'a> Sim<'a> {
         let topo = self.topology.as_ref().expect("mobility without an edge tier");
         let (dwell, crossed) = self.walkers[device].step(topo, &walk);
         if let Some(cell) = crossed {
-            let new_site = topo.attach(device, Some(cell));
-            if new_site != self.target_site[device] {
-                self.target_site[device] = new_site;
-                self.handover_seq[device] += 1;
-                let serving = self.devices[device].edge.expect("mobile device without an attachment");
-                let plan = self.devices[device].plan();
-                let state_bytes =
-                    if plan.is_two_tier() { 0 } else { self.model.intermediate_bytes(plan.l1) };
-                let cost =
-                    self.cfg.handover_cost_s.max(0.0) + serving.backhaul.transfer_s(state_bytes);
-                if let Some(tr) = self.trace.as_mut() {
-                    tr.note(CausalEvent::HandoverRelay {
-                        start_s: now,
-                        end_s: now + cost,
-                        device: device as u64,
-                        from_site: serving.site as u32,
-                        to_site: new_site as u32,
-                        state_bytes: state_bytes as u64,
-                    });
+            // Under an outage the crossing routes around dead sites —
+            // the healthy path is byte-identical to `attach` (pinned by
+            // edge/topology tests), so a zero-fault run never diverges.
+            let routed = if self.site_down.iter().any(|&x| x) {
+                topo.attach_avoiding(device, Some(cell), &self.site_down)
+            } else {
+                Some(topo.attach(device, Some(cell)))
+            };
+            if let Some(new_site) = routed {
+                if new_site != self.target_site[device] {
+                    self.target_site[device] = new_site;
+                    self.handover_seq[device] += 1;
+                    match self.devices[device].edge {
+                        Some(serving) => {
+                            let plan = self.devices[device].plan();
+                            let state_bytes = if plan.is_two_tier() {
+                                0
+                            } else {
+                                self.model.intermediate_bytes(plan.l1)
+                            };
+                            let cost = self.cfg.handover_cost_s.max(0.0)
+                                + serving.backhaul.transfer_s(state_bytes);
+                            if let Some(tr) = self.trace.as_mut() {
+                                tr.note(CausalEvent::HandoverRelay {
+                                    start_s: now,
+                                    end_s: now + cost,
+                                    device: device as u64,
+                                    from_site: serving.site as u32,
+                                    to_site: new_site as u32,
+                                    state_bytes: state_bytes as u64,
+                                });
+                            }
+                            self.q.schedule_in(
+                                cost,
+                                Event::Reattach {
+                                    device,
+                                    site: new_site,
+                                    seq: self.handover_seq[device],
+                                    failover: false,
+                                },
+                            );
+                        }
+                        None => {
+                            // Detached by a total outage: nothing to
+                            // relay — a forced re-attachment at the
+                            // control-plane cost alone.
+                            self.q.schedule_in(
+                                self.cfg.handover_cost_s.max(0.0),
+                                Event::Reattach {
+                                    device,
+                                    site: new_site,
+                                    seq: self.handover_seq[device],
+                                    failover: true,
+                                },
+                            );
+                        }
+                    }
                 }
-                self.q.schedule_in(
-                    cost,
-                    Event::Reattach { device, site: new_site, seq: self.handover_seq[device] },
-                );
             }
         }
         self.q.schedule_in(dwell, Event::Handover { device });
@@ -1262,7 +1504,7 @@ impl<'a> Sim<'a> {
     /// after the horizon pending re-attachments are dropped too, so the
     /// drain runs entirely on the attachments that served the in-flight
     /// work.
-    fn on_reattach(&mut self, device: usize, site: usize, seq: u64, now: SimTime) {
+    fn on_reattach(&mut self, device: usize, site: usize, seq: u64, failover: bool, now: SimTime) {
         if self.horizon_reached || !self.devices[device].active {
             return;
         }
@@ -1271,10 +1513,18 @@ impl<'a> Sim<'a> {
         }
         let attachment = self.attachment_at(site);
         self.devices[device].edge = Some(attachment);
-        self.counters.handovers += 1;
-        if let Some(s) = self.series.as_mut() {
-            s.on_handover();
+        if failover {
+            self.counters.failover_reattaches += 1;
+            if let Some(s) = self.series.as_mut() {
+                s.on_failover();
+            }
+        } else {
+            self.counters.handovers += 1;
+            if let Some(s) = self.series.as_mut() {
+                s.on_handover();
+            }
         }
+        let reason = if failover { ReplanReason::Failover } else { ReplanReason::Migration };
         let bw = self.devices[device].bandwidth_at(now);
         if self.devices[device].pinned() {
             // Pinned splits never re-plan, but the cached hop costs
@@ -1301,7 +1551,7 @@ impl<'a> Sim<'a> {
             profile,
             bw,
             band,
-            ReplanReason::Migration,
+            reason,
             now,
             &mut HashMap::new(),
         );
@@ -1316,9 +1566,13 @@ impl<'a> Sim<'a> {
             }
         }
         if planned.is_some() {
-            self.counters.migrations += 1;
-            if let Some(s) = self.series.as_mut() {
-                s.on_migration();
+            if failover {
+                self.counters.failover_replans += 1;
+            } else {
+                self.counters.migrations += 1;
+                if let Some(s) = self.series.as_mut() {
+                    s.on_migration();
+                }
             }
             self.note_decision(device, plan);
         }
@@ -1330,6 +1584,229 @@ impl<'a> Sim<'a> {
                 replanned: planned.is_some(),
             });
         }
+    }
+
+    // ------------------------------------------------ fault injection
+
+    /// Shared fault-edge bookkeeping: count the event, move the
+    /// active-fault gauge by `delta`, mirror it into the time series,
+    /// and drop a causal [`CausalEvent::Fault`] annotation.
+    fn note_fault(&mut self, now: SimTime, kind: &'static str, site: usize, value: f64, delta: i64) {
+        self.counters.faults += 1;
+        self.faults_active = if delta >= 0 {
+            self.faults_active + delta as u64
+        } else {
+            self.faults_active.saturating_sub(delta.unsigned_abs())
+        };
+        if let Some(s) = self.series.as_mut() {
+            s.set_faults_active(self.faults_active);
+        }
+        if let Some(tr) = self.trace.as_mut() {
+            tr.note(CausalEvent::Fault { t_s: now, kind, site: site as u32, value });
+        }
+    }
+
+    /// Re-plan device `d` under [`ReplanReason::Failover`] after a fault
+    /// changed the tier serving it in place (brownout edge, detachment
+    /// by a total outage). The cached hop costs are refreshed even when
+    /// the plan stands — and for pinned devices, which never re-plan
+    /// but must still see the degraded backhaul in their hop costs.
+    fn failover_replan(&mut self, d: usize, now: SimTime) {
+        let bw = self.devices[d].bandwidth_at(now);
+        if self.devices[d].pinned() {
+            let plan = self.devices[d].plan();
+            self.devices[d].apply_split(plan, &self.model, bw);
+            return;
+        }
+        let profile = self.devices[d].profile;
+        let band = BatteryBand::of_fraction(self.devices[d].soc());
+        let planned = self.plan_split_traced(
+            d,
+            profile,
+            bw,
+            band,
+            ReplanReason::Failover,
+            now,
+            &mut HashMap::new(),
+        );
+        let plan = planned.unwrap_or_else(|| self.devices[d].plan());
+        let moved = self.devices[d].apply_split(plan, &self.model, bw);
+        if moved {
+            if let Some(s) = self.series.as_mut() {
+                s.on_resplit();
+            }
+        }
+        if planned.is_some() {
+            self.counters.failover_replans += 1;
+            self.note_decision(d, plan);
+        }
+    }
+
+    /// Scripted site outage. Three obligations, in order: mark the site
+    /// dead (new uplinks reroute), evacuate its waiting torso queue to
+    /// the cloud (nothing queued dies with the site — conservation),
+    /// and storm every device decided onto it through the epoch-guarded
+    /// Reattach path to the nearest live site. In-service torso work
+    /// finishes normally (its `EdgeDone` is already scheduled).
+    fn on_site_down(&mut self, site: usize, now: SimTime) {
+        if self.horizon_reached || self.site_down[site] {
+            return;
+        }
+        self.site_down[site] = true;
+        self.note_fault(now, "site_down", site, 0.0, 1);
+        let drained = self.edges[site].drain(now);
+        for q in &drained {
+            if let Some(s) = self.series.as_mut() {
+                s.on_edge_wait(q.waited_s);
+            }
+            if let Some(tr) = self.trace.as_mut() {
+                // Close the open edge_queue span before relaying on.
+                tr.end_span(q.req, now);
+            }
+            // Torso + tail both run at the cloud for evacuated work.
+            self.reroute_to_cloud(
+                q.req,
+                q.device,
+                q.issued,
+                q.service_s + q.tail_s,
+                q.backhaul_s,
+                site,
+                now,
+            );
+        }
+        // Handover storm: mass forced re-attachment, one control-plane
+        // cost each, all stamped with a fresh epoch so any in-flight
+        // voluntary re-attachments onto the dead site are superseded.
+        for d in 0..self.devices.len() {
+            if !self.devices[d].active || self.target_site[d] != site {
+                continue;
+            }
+            self.handover_seq[d] += 1;
+            let fallback = self
+                .topology
+                .as_ref()
+                .expect("fault without an edge tier")
+                .attach_avoiding(d, Some(site), &self.site_down);
+            match fallback {
+                Some(new_site) => {
+                    self.target_site[d] = new_site;
+                    let seq = self.handover_seq[d];
+                    self.q.schedule_in(
+                        self.cfg.handover_cost_s.max(0.0),
+                        Event::Reattach { device: d, site: new_site, seq, failover: true },
+                    );
+                }
+                None => {
+                    // Every site is down: detach — the device plans
+                    // two-tier until a site comes back.
+                    self.target_site[d] = usize::MAX;
+                    self.devices[d].edge = None;
+                    self.failover_replan(d, now);
+                }
+            }
+        }
+    }
+
+    /// Scripted site recovery: re-balance. Devices whose *natural*
+    /// placement (walker cell under mobility, the spawn rule otherwise)
+    /// routes onto the recovered site — plus any left detached by a
+    /// total outage — storm back through the same epoch-guarded path.
+    fn on_site_up(&mut self, site: usize, now: SimTime) {
+        if self.horizon_reached || !self.site_down[site] {
+            return;
+        }
+        self.site_down[site] = false;
+        self.note_fault(now, "site_up", site, 0.0, -1);
+        for d in 0..self.devices.len() {
+            if !self.devices[d].active {
+                continue;
+            }
+            let desired = {
+                let t = self.topology.as_ref().expect("fault without an edge tier");
+                let cell = if self.walk.is_some() { Some(self.walkers[d].cell()) } else { None };
+                if self.site_down.iter().any(|&x| x) {
+                    t.attach_avoiding(d, cell, &self.site_down)
+                } else {
+                    Some(t.attach(d, cell))
+                }
+            };
+            let Some(desired) = desired else { continue };
+            if desired == self.target_site[d] {
+                continue;
+            }
+            if desired == site || self.target_site[d] == usize::MAX {
+                self.handover_seq[d] += 1;
+                self.target_site[d] = desired;
+                let seq = self.handover_seq[d];
+                self.q.schedule_in(
+                    self.cfg.handover_cost_s.max(0.0),
+                    Event::Reattach { device: d, site: desired, seq, failover: true },
+                );
+            }
+        }
+    }
+
+    /// Scripted brownout edge: scale the site's backhaul bandwidth and
+    /// push the degraded tier context through every attached device —
+    /// refreshed hop costs for all, a [`ReplanReason::Failover`]
+    /// re-solve for the unpinned (the degraded bandwidth buckets into a
+    /// distinct `TierKey`, so the planner genuinely reconsiders).
+    fn on_backhaul_degrade(&mut self, site: usize, factor: f64, now: SimTime) {
+        if self.horizon_reached {
+            return;
+        }
+        let was_degraded = self.backhaul_factor[site] < 1.0;
+        self.backhaul_factor[site] = factor;
+        self.note_fault(now, "backhaul_degrade", site, factor, if was_degraded { 0 } else { 1 });
+        self.refresh_site_attachments(site, now);
+    }
+
+    /// Scripted brownout end: the backhaul returns to its configured
+    /// bandwidth and the site's devices re-plan back.
+    fn on_backhaul_restore(&mut self, site: usize, now: SimTime) {
+        if self.horizon_reached || self.backhaul_factor[site] >= 1.0 {
+            return;
+        }
+        self.backhaul_factor[site] = 1.0;
+        self.note_fault(now, "backhaul_restore", site, 1.0, -1);
+        self.refresh_site_attachments(site, now);
+    }
+
+    /// Re-issue the (possibly degraded) attachment to every active
+    /// device attached to `site`, then run the failover re-plan.
+    fn refresh_site_attachments(&mut self, site: usize, now: SimTime) {
+        for d in 0..self.devices.len() {
+            if !self.devices[d].active {
+                continue;
+            }
+            if self.devices[d].edge.map(|e| e.site) != Some(site) {
+                continue;
+            }
+            self.devices[d].edge = Some(self.attachment_at(site));
+            self.failover_replan(d, now);
+        }
+    }
+
+    /// Flash-crowd start: arrivals are boosted and pinned toward the
+    /// crowded site until the matching end event. Overlapping crowds
+    /// don't stack — the first active crowd wins and a latecomer is
+    /// dropped (its end event finds a different site and no-ops).
+    fn on_flash_crowd_start(&mut self, site: usize, boost: f64, now: SimTime) {
+        if self.horizon_reached || self.crowd.is_some() {
+            return;
+        }
+        self.crowd = Some((site, boost));
+        self.note_fault(now, "flash_crowd_start", site, boost, 1);
+    }
+
+    /// Flash-crowd end: disperse, if this site's crowd is the one
+    /// active.
+    fn on_flash_crowd_end(&mut self, site: usize, now: SimTime) {
+        if self.horizon_reached || self.crowd.map(|(s, _)| s) != Some(site) {
+            return;
+        }
+        self.crowd = None;
+        self.note_fault(now, "flash_crowd_end", site, 0.0, -1);
     }
 
     fn on_join(&mut self, now: SimTime) {
@@ -1357,6 +1834,31 @@ impl<'a> Sim<'a> {
         // in particular a re-optimisation tick whose grid point coincides
         // with the horizon (sweep k fires iff k·period < duration).
         self.q.schedule(self.cfg.duration_s, Event::Horizon);
+        // The scripted fault schedule enters the queue up front, on the
+        // virtual clock like everything else. An empty plan schedules
+        // nothing and draws nothing — the event-sequence numbers (and
+        // therefore every FIFO tie-break) are untouched, which is what
+        // makes a zero-fault run replay the frozen scenarios
+        // byte-for-byte (tests/fault_injection.rs).
+        let cfg = self.cfg;
+        for e in &cfg.faults.events {
+            match e.kind {
+                FaultKind::SiteDown { site } => {
+                    self.q.schedule(e.at_s, Event::SiteDown { site })
+                }
+                FaultKind::SiteUp { site } => self.q.schedule(e.at_s, Event::SiteUp { site }),
+                FaultKind::BackhaulDegrade { site, factor } => {
+                    self.q.schedule(e.at_s, Event::BackhaulDegrade { site, factor })
+                }
+                FaultKind::BackhaulRestore { site } => {
+                    self.q.schedule(e.at_s, Event::BackhaulRestore { site })
+                }
+                FaultKind::FlashCrowd { site, duration_s, boost } => {
+                    self.q.schedule(e.at_s, Event::FlashCrowdStart { site, boost });
+                    self.q.schedule(e.at_s + duration_s, Event::FlashCrowdEnd { site });
+                }
+            }
+        }
         for member in 0..self.cfg.fleet.initial_count() {
             self.spawn_device(0.0, member);
         }
@@ -1402,9 +1904,19 @@ impl<'a> Sim<'a> {
                     self.on_cloud_done(req, cloud, device, issued, now)
                 }
                 Event::Handover { device } => self.on_handover(device, now),
-                Event::Reattach { device, site, seq } => {
-                    self.on_reattach(device, site, seq, now)
+                Event::Reattach { device, site, seq, failover } => {
+                    self.on_reattach(device, site, seq, failover, now)
                 }
+                Event::SiteDown { site } => self.on_site_down(site, now),
+                Event::SiteUp { site } => self.on_site_up(site, now),
+                Event::BackhaulDegrade { site, factor } => {
+                    self.on_backhaul_degrade(site, factor, now)
+                }
+                Event::BackhaulRestore { site } => self.on_backhaul_restore(site, now),
+                Event::FlashCrowdStart { site, boost } => {
+                    self.on_flash_crowd_start(site, boost, now)
+                }
+                Event::FlashCrowdEnd { site } => self.on_flash_crowd_end(site, now),
                 Event::Reoptimize => self.on_reoptimize(now),
                 Event::Join => self.on_join(now),
                 Event::Leave { device } => self.on_leave(device),
@@ -1501,6 +2013,10 @@ impl<'a> Sim<'a> {
             resplits: self.devices.iter().map(|d| d.resplits).sum(),
             handovers: self.counters.handovers,
             migration_replans: self.counters.migrations,
+            failover_reattaches: self.counters.failover_reattaches,
+            requests_rerouted: self.counters.rerouted,
+            failover_replans: self.counters.failover_replans,
+            fault_events: self.counters.faults,
             client_energy_j: self.devices.iter().map(|d| d.client_energy_j).sum(),
             upload_energy_j: self.devices.iter().map(|d| d.upload_energy_j).sum(),
             split_distribution: split_counts.into_iter().collect(),

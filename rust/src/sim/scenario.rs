@@ -23,6 +23,7 @@ use crate::edge::{AssignmentPolicy, BackhaulLink, EdgeSite, EdgeTopology};
 use crate::netsim::BandwidthTrace;
 use crate::optimizer::Nsga2Params;
 use crate::sim::device::Planner;
+use crate::sim::faults::FaultPlan;
 use crate::sim::mobility::{Mobility, WaypointWalk};
 use crate::util::rng::Xoshiro256;
 use crate::workload::Arrival;
@@ -312,6 +313,13 @@ pub struct SimConfig {
     /// preset (enabling it must not change the run — see
     /// `tests/observability.rs`).
     pub observability: ObservabilityConfig,
+    /// Scripted fault injection ([`FaultPlan`], DESIGN.md §13): site
+    /// outages, backhaul brownouts, flash crowds. The default (empty)
+    /// plan schedules no events and draws no randomness — a zero-fault
+    /// run replays the corresponding healthy scenario byte-for-byte
+    /// (`tests/fault_injection.rs`). A non-empty plan requires an edge
+    /// tier.
+    pub faults: FaultPlan,
 }
 
 /// The paper's two-phone testbed, matching `main.rs`'s live `fleet`
@@ -356,6 +364,7 @@ pub fn two_phone_fleet(
         mobility: Mobility::Static,
         handover_cost_s: DEFAULT_HANDOVER_COST_S,
         observability: ObservabilityConfig::disabled(),
+        faults: FaultPlan::none(),
     }
 }
 
@@ -400,6 +409,7 @@ pub fn city_scale(model: &str, devices: usize, duration_s: f64, seed: u64) -> Si
         mobility: Mobility::Static,
         handover_cost_s: DEFAULT_HANDOVER_COST_S,
         observability: ObservabilityConfig::disabled(),
+        faults: FaultPlan::none(),
     }
 }
 
@@ -443,6 +453,26 @@ pub fn city_mobile(
 ) -> SimConfig {
     let mut cfg = city_scale_tiered(model, devices, sites, duration_s, seed);
     cfg.mobility = Mobility::Waypoint(WaypointWalk::city_default(duration_s));
+    cfg
+}
+
+/// [`city_scale_tiered`] under the canonical scripted fault schedule
+/// ([`FaultPlan::city_faulty`]): one mid-run site outage with recovery,
+/// one backhaul brownout, one flash crowd. The schedule is embedded in
+/// the config (no external plan file needed), fully deterministic, and
+/// draws no randomness — the `--scenario city-faulty` CLI preset and
+/// `examples/edge_faulty.rs` both build on it. Replacing the plan with
+/// [`FaultPlan::none`] makes this scenario byte-identical to
+/// [`city_scale_tiered`].
+pub fn city_faulty(
+    model: &str,
+    devices: usize,
+    sites: usize,
+    duration_s: f64,
+    seed: u64,
+) -> SimConfig {
+    let mut cfg = city_scale_tiered(model, devices, sites, duration_s, seed);
+    cfg.faults = FaultPlan::city_faulty(sites.max(1), duration_s);
     cfg
 }
 
@@ -567,6 +597,27 @@ mod tests {
             }
             Mobility::Static => unreachable!(),
         }
+    }
+
+    #[test]
+    fn faulty_preset_only_differs_by_fault_plan() {
+        let faulty = city_faulty("alexnet", 1000, 3, 120.0, 7);
+        assert!(!faulty.faults.is_empty(), "city_faulty must script faults");
+        faulty.faults.validate(3).expect("embedded schedule must be valid for its own tier");
+        // Everything except the fault plan matches the tiered city —
+        // the zero-fault byte-for-byte replay in
+        // tests/fault_injection.rs depends on this.
+        let tiered = city_scale_tiered("alexnet", 1000, 3, 120.0, 7);
+        assert!(tiered.faults.is_empty());
+        assert_eq!(faulty.fleet.initial_count(), tiered.fleet.initial_count());
+        assert_eq!(faulty.clouds, tiered.clouds);
+        assert_eq!(faulty.edge.as_ref().unwrap().sites, tiered.edge.as_ref().unwrap().sites);
+        assert_eq!(faulty.reopt_period_s, tiered.reopt_period_s);
+        assert_eq!(faulty.handover_cost_s, tiered.handover_cost_s);
+        assert!(!faulty.mobility.is_mobile());
+        let mut defaulted = faulty.clone();
+        defaulted.faults = FaultPlan::none();
+        assert_eq!(defaulted.faults, tiered.faults);
     }
 
     #[test]

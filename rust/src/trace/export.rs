@@ -100,6 +100,20 @@ fn event_json(e: &CausalEvent) -> Json {
             ("site", count(site as u64)),
             ("replanned", Json::Bool(replanned)),
         ]),
+        CausalEvent::Fault { t_s, kind, site, value } => Json::obj(vec![
+            ("type", Json::str("fault")),
+            ("t_s", num(t_s)),
+            ("kind", Json::str(kind)),
+            ("site", count(site as u64)),
+            ("value", num(value)),
+        ]),
+        CausalEvent::Failover { t_s, req, device, from_site } => Json::obj(vec![
+            ("type", Json::str("failover")),
+            ("t_s", num(t_s)),
+            ("req", count(req)),
+            ("device", count(device)),
+            ("from_site", count(from_site as u64)),
+        ]),
     }
 }
 
@@ -126,7 +140,11 @@ fn chrome_instant(e: &CausalEvent) -> Json {
     let device = match *e {
         CausalEvent::Replan { device, .. }
         | CausalEvent::HandoverRelay { device, .. }
-        | CausalEvent::Reattach { device, .. } => device,
+        | CausalEvent::Reattach { device, .. }
+        | CausalEvent::Failover { device, .. } => device,
+        // Faults are site-scoped, not device-scoped: park them on a
+        // dedicated track keyed far above any real device id.
+        CausalEvent::Fault { site, .. } => u64::MAX - site as u64,
     };
     Json::obj(vec![
         ("name", Json::str(e.name())),
@@ -296,6 +314,39 @@ mod tests {
             "Topsis"
         );
         assert_eq!(doc.get("otherData").unwrap().get_str("format").unwrap(), "smartsplit-trace");
+    }
+
+    #[test]
+    fn fault_and_failover_events_export_with_t_s_and_type() {
+        let mut rec = TraceRecorder::new(1);
+        rec.note(CausalEvent::Fault { t_s: 30.0, kind: "site_down", site: 1, value: 0.0 });
+        rec.note(CausalEvent::Failover { t_s: 30.0, req: 17, device: 4, from_site: 1 });
+        rec.note(CausalEvent::Fault {
+            t_s: 45.0,
+            kind: "backhaul_degrade",
+            site: 0,
+            value: 0.25,
+        });
+        let rep = rec.finish();
+        let lines: Vec<&str> = rep.to_jsonl().lines().skip(1).map(str::trim).collect();
+        let fault = Json::parse(lines[0]).expect("fault parses");
+        assert_eq!(fault.get_str("type").unwrap(), "fault");
+        assert_eq!(fault.get_str("kind").unwrap(), "site_down");
+        assert_eq!(fault.get_f64("t_s").unwrap(), 30.0);
+        assert_eq!(fault.get_usize("site").unwrap(), 1);
+        let failover = Json::parse(lines[1]).expect("failover parses");
+        assert_eq!(failover.get_str("type").unwrap(), "failover");
+        assert_eq!(failover.get_usize("req").unwrap(), 17);
+        assert_eq!(failover.get_usize("from_site").unwrap(), 1);
+        let brown = Json::parse(lines[2]).expect("brownout parses");
+        assert_eq!(brown.get_f64("value").unwrap(), 0.25);
+        // Chrome export: failovers ride their device's track, faults a
+        // dedicated per-site track.
+        let doc = Json::parse(&rep.to_chrome_trace()).expect("chrome parses");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[1].get_str("name").unwrap(), "failover");
+        assert_eq!(events[1].get_usize("tid").unwrap(), 4);
     }
 
     #[test]

@@ -142,6 +142,16 @@ pub enum CausalEvent {
     /// The device finished re-attaching to its new site; `replanned`
     /// says whether a migration re-solve was adopted.
     Reattach { t_s: f64, device: u64, site: u32, replanned: bool },
+    /// An injected fault edge ([`crate::sim::faults`]) was applied:
+    /// `kind` is the stable edge name (`site_down`, `site_up`,
+    /// `backhaul_degrade`, `backhaul_restore`, `flash_crowd_start`,
+    /// `flash_crowd_end`), `value` its scalar argument (degrade factor,
+    /// arrival boost; 0 where meaningless).
+    Fault { t_s: f64, kind: &'static str, site: u32, value: f64 },
+    /// A site outage forced request `req` (in flight or queued at the
+    /// dead site) to be relayed onward to the cloud — the conservation
+    /// path: rerouted, never lost.
+    Failover { t_s: f64, req: u64, device: u64, from_site: u32 },
 }
 
 impl CausalEvent {
@@ -151,6 +161,8 @@ impl CausalEvent {
             CausalEvent::Replan { .. } => "replan",
             CausalEvent::HandoverRelay { .. } => "handover_relay",
             CausalEvent::Reattach { .. } => "reattach",
+            CausalEvent::Fault { .. } => "fault",
+            CausalEvent::Failover { .. } => "failover",
         }
     }
 
@@ -160,6 +172,8 @@ impl CausalEvent {
             CausalEvent::Replan { t_s, .. } => *t_s,
             CausalEvent::HandoverRelay { start_s, .. } => *start_s,
             CausalEvent::Reattach { t_s, .. } => *t_s,
+            CausalEvent::Fault { t_s, .. } => *t_s,
+            CausalEvent::Failover { t_s, .. } => *t_s,
         }
     }
 }

@@ -1,0 +1,196 @@
+//! Fault-injection properties (DESIGN.md §13): (a) request conservation
+//! — every issued request completes or is dropped exactly once — holds
+//! across scripted outages, brownouts, and flash crowds, and across
+//! randomized-but-reproducible schedules; (b) the zero-fault degeneracy
+//! contract — an empty `FaultPlan` schedules nothing and draws nothing,
+//! so the faulty construction paths replay `city_scale_tiered` and
+//! `city_mobile` byte-for-byte; (c) a faulty run is deterministic and
+//! independent of the planner's thread configuration; (d) the windowed
+//! time series partitions the run's failover totals and tracks the
+//! active-fault gauge.
+
+use smartsplit::sim::{self, FaultPlan};
+
+#[test]
+fn conservation_holds_under_the_scripted_city_faulty_schedule() {
+    let r = sim::run(&sim::city_faulty("alexnet", 500, 3, 120.0, 7)).expect("faulty run");
+    // Conservation: the outage drained its site's queue into reroutes,
+    // never into thin air.
+    assert_eq!(r.generated, r.completed + r.dropped);
+    // The schedule really fired: one outage + recovery, one brownout +
+    // restore, one flash crowd start + end.
+    assert_eq!(r.fault_events, 6);
+    // The outage stormed devices off the dead site...
+    assert!(r.failover_reattaches > 0, "outage forced no reattaches");
+    // ... and failover activity as a whole is visible.
+    assert!(
+        r.failover_reattaches + r.requests_rerouted > 0,
+        "no failover activity at all"
+    );
+    assert!(
+        r.planner.failover_requests() >= r.failover_replans,
+        "{} failover requests < {} adopted failover re-plans",
+        r.planner.failover_requests(),
+        r.failover_replans
+    );
+    assert!(r.completed > 0, "the faulty city completed nothing");
+}
+
+#[test]
+fn conservation_holds_across_randomized_schedules() {
+    for seed in 1..=5u64 {
+        let mut cfg = sim::city_scale_tiered("alexnet", 300, 4, 90.0, seed);
+        cfg.faults = FaultPlan::random(seed, 4, 90.0);
+        let r = sim::run(&cfg).expect("randomized faulty run");
+        assert_eq!(
+            r.generated,
+            r.completed + r.dropped,
+            "seed {seed}: conservation broken under {:?}",
+            cfg.faults
+        );
+        assert!(r.fault_events > 0, "seed {seed}: schedule never fired");
+        assert!(r.completed > 0, "seed {seed}: nothing completed");
+    }
+}
+
+#[test]
+fn zero_fault_plan_replays_the_tiered_city_byte_for_byte() {
+    // `city_faulty` differs from `city_scale_tiered` only in its fault
+    // plan; clearing the plan must therefore replay the fault-free
+    // scenario exactly — no extra events, no extra RNG draws, no
+    // decision drift. As with the Static-mobility contract, the
+    // equality half is partly structural (both arms build the same
+    // config value, pinned by
+    // scenario::tests::faulty_preset_only_differs_by_fault_plan); the
+    // load-bearing signal is the zero fault counters below plus
+    // determinism across the two construction paths.
+    let mut tiered = sim::city_scale_tiered("alexnet", 400, 3, 120.0, 21);
+    tiered.planner_perf.record_decisions = true;
+    let mut disarmed = sim::city_faulty("alexnet", 400, 3, 120.0, 21);
+    disarmed.faults = FaultPlan::none();
+    disarmed.planner_perf.record_decisions = true;
+
+    let a = sim::run(&tiered).expect("tiered run");
+    let b = sim::run(&disarmed).expect("disarmed faulty run");
+
+    assert!(!a.decisions.is_empty(), "scenario exercised no planning");
+    assert_eq!(a.decisions, b.decisions, "an empty fault plan changed a split decision");
+    assert_eq!(a.summary(), b.summary());
+    assert_eq!(a.events, b.events, "an empty fault plan changed the event stream");
+    assert_eq!(a.planner, b.planner, "an empty fault plan perturbed planner accounting");
+    assert_eq!(a.latency.summary(), b.latency.summary());
+    assert_eq!(a.edge_queue_delay.summary(), b.edge_queue_delay.summary());
+    assert_eq!(a.split_distribution, b.split_distribution);
+    for r in [&a, &b] {
+        assert_eq!(
+            (r.fault_events, r.failover_reattaches, r.requests_rerouted, r.failover_replans),
+            (0, 0, 0, 0),
+            "fault counters moved without a fault plan"
+        );
+        assert_eq!(r.planner.failover_requests(), 0);
+    }
+}
+
+#[test]
+fn zero_fault_plan_replays_the_mobile_city_byte_for_byte() {
+    // Same degeneracy contract on top of mobility: the fault layer's
+    // per-event bookkeeping (outage scan, backhaul factors, crowd
+    // sampling) must leave the waypoint walk's event stream untouched
+    // when the plan is empty.
+    let mut mobile = sim::city_mobile("alexnet", 400, 3, 120.0, 33);
+    mobile.planner_perf.record_decisions = true;
+    let mut disarmed = mobile.clone();
+    disarmed.faults = FaultPlan::none();
+
+    let a = sim::run(&mobile).expect("mobile run");
+    let b = sim::run(&disarmed).expect("disarmed mobile run");
+
+    assert!(a.handovers > 0, "the walk moved nothing");
+    assert_eq!(a.decisions, b.decisions);
+    assert_eq!(a.summary(), b.summary());
+    assert_eq!(a.events, b.events);
+    assert_eq!((a.handovers, a.migration_replans), (b.handovers, b.migration_replans));
+    assert_eq!((a.fault_events, a.failover_reattaches), (0, 0));
+}
+
+#[test]
+fn faulty_runs_are_deterministic_and_thread_config_independent() {
+    // Fault handling draws from the same per-device streams and
+    // quantised solve seeds as everything else, so neither a re-run nor
+    // the planner's worker-pool fan-out may perturb the decision or
+    // event stream of a faulty scenario.
+    let mut parallel = sim::city_faulty("alexnet", 400, 3, 120.0, 9);
+    parallel.planner_perf.record_decisions = true;
+    parallel.planner_perf.parallel = true;
+    let mut sequential = parallel.clone();
+    sequential.planner_perf.parallel = false;
+
+    let a = sim::run(&parallel).expect("parallel faulty run");
+    let b = sim::run(&sequential).expect("sequential faulty run");
+    assert!(!a.decisions.is_empty());
+    assert!(a.fault_events > 0, "the schedule never fired");
+    assert_eq!(a.decisions, b.decisions, "thread fan-out changed a faulty decision");
+    assert_eq!(a.summary(), b.summary());
+    assert_eq!(a.events, b.events);
+    assert_eq!(
+        (a.failover_reattaches, a.requests_rerouted, a.failover_replans),
+        (b.failover_reattaches, b.requests_rerouted, b.failover_replans)
+    );
+    assert_eq!(a.planner, b.planner, "fan-out perturbed planner accounting");
+
+    let c = sim::run(&parallel).expect("parallel faulty rerun");
+    assert_eq!(a.decisions, c.decisions);
+    assert_eq!(a.summary(), c.summary());
+}
+
+#[test]
+fn faults_survive_mobility_and_conserve_requests() {
+    // Outage storms and voluntary waypoint handovers race through the
+    // same epoch-guarded reattach path; whichever lands second
+    // supersedes the other, and no request may be lost in the shuffle.
+    let mut cfg = sim::city_mobile("alexnet", 500, 3, 120.0, 13);
+    assert!(cfg.mobility.is_mobile());
+    cfg.faults = FaultPlan::city_faulty(3, 120.0);
+    let r = sim::run(&cfg).expect("mobile faulty run");
+    assert_eq!(r.generated, r.completed + r.dropped);
+    assert!(r.handovers > 0, "mobility stalled under faults");
+    assert!(r.failover_reattaches > 0, "outage forced no reattaches");
+    assert_eq!(r.fault_events, 6);
+}
+
+#[test]
+fn windowed_failovers_partition_run_totals() {
+    let mut cfg = sim::city_faulty("alexnet", 500, 3, 120.0, 7);
+    cfg.observability.window_s = 10.0;
+    let r = sim::run(&cfg).expect("faulty run with series");
+    let series = r.series.as_ref().expect("collector was enabled");
+    assert!(!series.windows.is_empty());
+
+    // Per-window counters partition the run totals exactly — under
+    // drops, outages, and reroutes alike.
+    let sum = |f: fn(&smartsplit::metrics::WindowSummary) -> u64| -> u64 {
+        series.windows.iter().map(f).sum()
+    };
+    assert_eq!(sum(|w| w.generated), r.generated);
+    assert_eq!(sum(|w| w.completed), r.completed);
+    assert_eq!(sum(|w| w.dropped), r.dropped);
+    assert_eq!(
+        sum(|w| w.failovers),
+        r.failover_reattaches + r.requests_rerouted,
+        "window failovers do not partition the run's failover total"
+    );
+    // The active-fault gauge saw overlapping faults mid-run and came
+    // back to zero once the schedule drained (city_faulty clears its
+    // last fault at 70 % of the horizon).
+    let peak = series.windows.iter().map(|w| w.faults_active).max().unwrap();
+    assert!(peak >= 2, "overlapping faults never registered (peak {peak})");
+    assert_eq!(
+        series.windows.last().unwrap().faults_active,
+        0,
+        "gauge did not return to zero after the schedule drained"
+    );
+
+    // Enabling the collector must not have perturbed the run itself.
+    let plain = sim::run(&sim::city_faulty("alexnet", 500, 3, 120.0, 7)).expect("plain run");
+    assert_eq!(r.summary(), plain.summary());
+}
