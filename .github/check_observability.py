@@ -1,15 +1,21 @@
 #!/usr/bin/env python3
-"""Schema check for the observability exports (rust/DESIGN.md §12).
+"""Schema check for the observability exports (rust/DESIGN.md §12, §14).
 
-Usage: check_observability.py TRACE_FILE... METRICS_FILE...
+Usage: check_observability.py TRACE_FILE... METRICS_FILE... REPORT_FILE...
 
 File role is picked by shape, not order: a `.jsonl` file is validated
 as a line-delimited trace, a JSON object with "traceEvents" as a
-Chrome trace, and a JSON object with "series" as a --metrics-out
-export. The checks mirror what `rust/tests/observability.rs` asserts
-in-process: span tiling, ordered causal events, window partition —
-here re-asserted on the serialized bytes, through an independent JSON
+Chrome trace, one with "series" as a --metrics-out export, one with
+format "smartsplit-analyze" as a --report-out analysis, and one with
+format "smartsplit-analyze-diff" as a --diff-out run diff. The checks
+mirror what `rust/tests/observability.rs` / `rust/tests/analyze.rs`
+assert in-process: span tiling, ordered causal events, window
+partition, attribution shares, SLO verdict consistency — here
+re-asserted on the serialized bytes, through an independent JSON
 parser, so a malformed export can't hide behind the in-process view.
+
+Every format is versioned; unknown schema_versions fail the check so a
+silent format drift can't pass CI.
 """
 import json
 import sys
@@ -24,16 +30,31 @@ FAULT_KINDS = {
     "site_down", "site_up", "backhaul_degrade", "backhaul_restore",
     "flash_crowd_start", "flash_crowd_end",
 }
+# Trace schema 1 used the key "version"; 2 renamed it to the uniform
+# "schema_version" (readers accept both, writers emit 2).
+TRACE_SCHEMA_ACCEPTED = {1, 2}
+METRICS_SCHEMA_VERSION = 1
+ANALYZE_SCHEMA_VERSION = 1
+SLO_METRICS = {"p50", "p95", "p99", "mean", "max", "drop"}
+SLO_VERDICTS = {"pass", "fail"}
 
 
 def fail(path, msg):
     sys.exit(f"{path}: {msg}")
 
 
+def check_schema_version(path, doc, accepted):
+    v = doc.get("schema_version", doc.get("version"))
+    if v not in accepted:
+        fail(path, f"schema_version {v!r} not in accepted set {sorted(accepted)}")
+    return v
+
+
 def check_jsonl_trace(path, lines):
     meta = json.loads(lines[0])
     if meta.get("type") != "meta" or meta.get("format") != "smartsplit-trace":
         fail(path, "first line is not a smartsplit-trace meta header")
+    check_schema_version(path, meta, TRACE_SCHEMA_ACCEPTED)
     if meta["sample_every"] < 1 or meta["unfinished"] != 0:
         fail(path, f"bad meta: {meta}")
     requests = events = 0
@@ -90,6 +111,7 @@ def check_chrome_trace(path, doc):
             fail(path, f"bad complete event {e['name']!r}")
     if doc["otherData"]["format"] != "smartsplit-trace":
         fail(path, "missing smartsplit meta in otherData")
+    check_schema_version(path, doc["otherData"], TRACE_SCHEMA_ACCEPTED)
     return f"{len(events)} trace events"
 
 
@@ -97,10 +119,13 @@ def check_metrics(path, doc):
     for key in ("model", "seed", "duration_s", "generated", "completed", "series"):
         if key not in doc:
             fail(path, f"missing top-level key {key!r}")
+    check_schema_version(path, doc, {METRICS_SCHEMA_VERSION})
     series = doc["series"]
     if series["window_s"] <= 0 or not series["windows"]:
         fail(path, "empty or unwindowed series")
     totals = {"generated": 0, "completed": 0}
+    if "dropped" in doc:
+        totals["dropped"] = 0
     prev_end = 0.0
     for i, w in enumerate(series["windows"]):
         if w["index"] != i or w["start_s"] != prev_end:
@@ -119,6 +144,74 @@ def check_metrics(path, doc):
     return f"{len(series['windows'])} windows of {series['window_s']}s"
 
 
+def check_slice_row(path, row, label):
+    stages = row["stages"]
+    if [s["stage"] for s in stages] != [
+        "device_queue", "head_compute", "uplink", "edge_queue", "edge_service",
+        "backhaul", "cloud_queue", "cloud_service", "downlink",
+    ]:
+        fail(path, f"{label}: stage rows out of pipeline order")
+    for s in stages:
+        for key in ("share_of_total", "share_p50", "share_p95", "share_p99"):
+            # Shares may dip epsilon-below 0 / above 1: the downlink slot
+            # absorbs the exact residual, which can be a tiny negative.
+            if not -1e-6 <= s[key] <= 1.0 + 1e-6:
+                fail(path, f"{label}/{s['stage']}: {key}={s[key]} outside [0,1]")
+    share_sum = sum(s["share_of_total"] for s in stages)
+    if row["latency"]["count"] > 0 and abs(share_sum - 1.0) > 1e-9:
+        fail(path, f"{label}: shares sum to {share_sum}, not 1")
+
+
+def check_analyze_report(path, doc):
+    check_schema_version(path, doc, {ANALYZE_SCHEMA_VERSION})
+    src = doc["source"]
+    if src["requests"] <= 0:
+        fail(path, "analysis over zero requests")
+    attr = doc["attribution"]
+    overall = attr["overall"]
+    if overall["latency"]["count"] != src["requests"]:
+        fail(path, "overall attribution count disagrees with source requests")
+    check_slice_row(path, overall, "overall")
+    for group in ("by_site", "by_strategy", "by_reason"):
+        for row in attr[group]:
+            check_slice_row(path, row, f"{group}/{row['key']}")
+            if row["latency"]["count"] <= 0:
+                fail(path, f"{group}/{row['key']}: empty slice emitted")
+    for s in doc["slos"]:
+        if s["metric"] not in SLO_METRICS or s["verdict"] not in SLO_VERDICTS:
+            fail(path, f"malformed SLO outcome {s['slo']!r}")
+        if s["windows_violating"] > s["windows_evaluated"]:
+            fail(path, f"SLO {s['slo']!r}: more violations than evaluated windows")
+        if s["verdict"] == "pass" and (not s["overall_pass"] or s["windows_violating"]):
+            fail(path, f"SLO {s['slo']!r}: verdict pass contradicts its counters")
+    for iv in doc["faults"]["intervals"]:
+        if iv["kind"] not in FAULT_KINDS:
+            fail(path, f"fault interval with unknown kind {iv['kind']!r}")
+        if iv["end_s"] < iv["start_s"]:
+            fail(path, f"fault interval {iv['kind']!r} runs backwards")
+    return (
+        f"{src['requests']} requests, {len(doc['slos'])} SLOs, "
+        f"{len(doc['faults']['intervals'])} fault intervals"
+    )
+
+
+def check_diff(path, doc):
+    check_schema_version(path, doc, {ANALYZE_SCHEMA_VERSION})
+    changes = doc["changes"]
+    if doc["empty"] != (len(changes) == 0) or doc["changed"] != len(changes):
+        fail(path, "diff counters disagree with the change list")
+    by_class = {"regression": 0, "improvement": 0, "neutral": 0}
+    for c in changes:
+        if c["class"] not in by_class:
+            fail(path, f"unknown diff class {c['class']!r}")
+        by_class[c["class"]] += 1
+    if by_class["regression"] != doc["regressions"]:
+        fail(path, "regression count disagrees with the change list")
+    if by_class["improvement"] != doc["improvements"]:
+        fail(path, "improvement count disagrees with the change list")
+    return f"{len(changes)} changes, {doc['regressions']} regressions"
+
+
 def main(paths):
     if not paths:
         sys.exit("usage: check_observability.py FILE...")
@@ -131,10 +224,14 @@ def main(paths):
             doc = json.loads(text)
             if "traceEvents" in doc:
                 summary = check_chrome_trace(path, doc)
+            elif doc.get("format") == "smartsplit-analyze":
+                summary = check_analyze_report(path, doc)
+            elif doc.get("format") == "smartsplit-analyze-diff":
+                summary = check_diff(path, doc)
             elif "series" in doc:
                 summary = check_metrics(path, doc)
             else:
-                fail(path, "neither a chrome trace nor a metrics export")
+                fail(path, "not a recognized smartsplit export")
         print(f"ok {path}: {summary}")
 
 

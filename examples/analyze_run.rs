@@ -1,0 +1,99 @@
+//! The analysis layer (DESIGN.md §14) on the faulty city: run the
+//! scripted outage scenario fully traced, attribute every request's
+//! latency to its pipeline stages, audit two SLOs window by window,
+//! charge each fault interval its impact, and diff the run against a
+//! different seed to see what the diff classifier flags.
+//!
+//!     cargo run --release --example analyze_run
+//!
+//! Everything printed is deterministic: the same binary reproduces the
+//! same report byte-for-byte, and analysing the serialized exports
+//! offline reproduces the in-process analysis exactly — both are
+//! asserted at the end.
+
+use smartsplit::analyze::{diff_reports, AnalyzeReport, RunData, Slo};
+use smartsplit::sim;
+
+fn main() -> anyhow::Result<()> {
+    let devices = 1_000;
+    let sites = 3;
+    let duration_s = 180.0;
+
+    let mut cfg = sim::city_faulty("alexnet", devices, sites, duration_s, 7);
+    cfg.observability = sim::ObservabilityConfig::full(15.0);
+
+    println!(
+        "== alexnet: {devices} devices / {sites} edge sites / {duration_s:.0}s virtual, \
+         scripted faults, fully traced =="
+    );
+    let report = sim::run(&cfg)?;
+
+    // -- the analysis, in-process --------------------------------------
+    let slos: Vec<Slo> = ["p99<30s", "p50<0.2s", "drop<50%"]
+        .iter()
+        .map(|s| Slo::parse(s).expect("slo grammar"))
+        .collect();
+    let data = RunData::from_report(&report)?;
+    let analysis = AnalyzeReport::build(&data, &slos);
+    analysis.print();
+
+    // Attribution is a partition, not an estimate: the nine stage
+    // shares of every request re-fold to its end-to-end latency
+    // bit-for-bit (`rust/tests/analyze.rs` pins this for the suite).
+    for rec in &data.requests {
+        assert_eq!(rec.share_sum().to_bits(), rec.latency_s().to_bits());
+    }
+    println!(
+        "\nevery one of the {} stage decompositions re-folds to its latency exactly",
+        data.requests.len()
+    );
+
+    // -- offline agreement ---------------------------------------------
+    // The CLI path (`simulate --trace-out/--metrics-out` then
+    // `analyze --trace/--metrics`) must land on the same report.
+    let dir = std::env::temp_dir();
+    let trace_path = dir.join("smartsplit_analyze_trace.jsonl");
+    let metrics_path = dir.join("smartsplit_analyze_metrics.json");
+    report.trace.as_ref().expect("tracing was on").export(&trace_path)?;
+    std::fs::write(
+        &metrics_path,
+        report.metrics_json().expect("series was on").to_string_pretty(),
+    )?;
+    let offline = RunData::from_export_files(Some(&trace_path), Some(&metrics_path))?;
+    let offline_report = AnalyzeReport::build(&offline, &slos);
+    assert_eq!(
+        analysis.to_json().to_string_pretty(),
+        offline_report.to_json().to_string_pretty(),
+        "offline analysis diverged from the in-process analysis"
+    );
+    println!(
+        "offline re-analysis of {} + {} is byte-identical to the in-process report",
+        trace_path.display(),
+        metrics_path.display()
+    );
+
+    // -- run-vs-run diff ------------------------------------------------
+    // Self-diff is exactly empty; a different seed shows the classifier
+    // separating regressions from improvements from neutral drift.
+    let selfdiff = diff_reports(&analysis.to_json(), &analysis.to_json());
+    assert!(selfdiff.is_empty(), "a run diffed against itself must be empty");
+    println!("\nself-diff: empty, as required");
+
+    let mut other_cfg = sim::city_faulty("alexnet", devices, sites, duration_s, 8);
+    other_cfg.observability = sim::ObservabilityConfig::full(15.0);
+    let other = sim::run(&other_cfg)?;
+    let other_report =
+        AnalyzeReport::build(&RunData::from_report(&other)?, &slos);
+    println!("\n-- seed 7 (baseline) vs seed 8 (candidate) --");
+    let d = diff_reports(&analysis.to_json(), &other_report.to_json());
+    println!(
+        "{} changed leaves: {} regressions, {} improvements",
+        d.changes.len(),
+        d.regressions,
+        d.improvements
+    );
+    for c in d.changes.iter().filter(|c| c.class != "neutral").take(8) {
+        println!("  [{:<11}] {}: {} -> {}", c.class, c.path, c.baseline, c.candidate);
+    }
+    Ok(())
+}

@@ -87,6 +87,14 @@ fn main() -> anyhow::Result<()> {
                         "  {t_s:>8.3}s replan   device {device}: {reason:?}/{cache:?} → {plan:?}"
                     );
                 }
+                CausalEvent::Fault { t_s, kind, site, value } => {
+                    println!("  {t_s:>8.3}s fault    {kind} @site {site} (value {value})");
+                }
+                CausalEvent::Failover { t_s, req, device, from_site } => {
+                    println!(
+                        "  {t_s:>8.3}s failover req {req} on device {device} rerouted off site {from_site}"
+                    );
+                }
             }
         }
     }

@@ -1,0 +1,125 @@
+//! §Scale: trace-plane analytics throughput.
+//!
+//! Runs the `city_faulty` scenario with full observability, then
+//! benches the analysis pipeline over the captured trace: per-request
+//! stage attribution, the SLO audit + fault-impact pass, and report
+//! assembly. Records the numbers the CI perf trajectory tracks in
+//! `BENCH_analyze.json`: requests attributed per second (in-process)
+//! and parsed per second (offline JSONL), report build time, and the
+//! analysis surface (SLO outcomes, fault intervals, residuals). The
+//! exact-partition invariant and the empty self-diff are asserted on
+//! every record — a fast analysis that miscounts is not a perf number.
+//! `--smoke` shrinks the fleet for CI.
+
+use smartsplit::analyze::{diff_reports, AnalyzeReport, RunData, Slo};
+use smartsplit::bench::{black_box, Bench};
+use smartsplit::sim::{self, ObservabilityConfig};
+use smartsplit::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // (devices, sites, virtual seconds, bench iters, warmup)
+    let sizes: Vec<(usize, usize, f64, usize, usize)> = if smoke {
+        vec![(2_000, 4, 120.0, 3, 1)]
+    } else {
+        vec![(2_000, 4, 300.0, 3, 1), (10_000, 8, 120.0, 3, 1), (50_000, 16, 60.0, 2, 0)]
+    };
+    println!("== analyze_scale: city-faulty scenario, alexnet, seed 7 ==");
+
+    let slos: Vec<Slo> = ["p99<30s", "p50<0.2s", "drop<50%"]
+        .iter()
+        .map(|s| Slo::parse(s).expect("slo grammar"))
+        .collect();
+
+    let mut runs = Vec::new();
+    for (devices, sites, duration_s, iters, warmup) in sizes {
+        let mut cfg = sim::city_faulty("alexnet", devices, sites, duration_s, 7);
+        cfg.observability = ObservabilityConfig::full(duration_s / 12.0);
+        let report = sim::run(&cfg)?;
+
+        Bench::new(&format!(
+            "attribute + audit {} traced requests ({devices} devices / {sites} sites / \
+             {duration_s:.0}s virtual)",
+            report.completed
+        ))
+        .iters(iters)
+        .warmup(warmup)
+        .run(|| {
+            let data = RunData::from_report(&report).expect("analysis inputs");
+            black_box(AnalyzeReport::build(&data, &slos));
+        });
+
+        let t0 = std::time::Instant::now();
+        let data = RunData::from_report(&report)?;
+        let analysis = AnalyzeReport::build(&data, &slos);
+        let build_s = t0.elapsed().as_secs_f64().max(1e-9);
+
+        // Offline path: parse the JSONL the CLI would have written.
+        let jsonl = report.trace.as_ref().expect("tracing was on").to_jsonl();
+        let t1 = std::time::Instant::now();
+        let offline = RunData::from_export_strs(Some(&jsonl), None)?;
+        let parse_s = t1.elapsed().as_secs_f64().max(1e-9);
+
+        // Correctness gates on every record, every run.
+        assert!(report.fault_events > 0, "the fault schedule never fired");
+        assert_eq!(data.requests.len() as u64, report.completed, "attribution lost requests");
+        assert_eq!(offline.requests.len(), data.requests.len(), "offline parse lost requests");
+        for rec in data.requests.iter().chain(&offline.requests) {
+            assert_eq!(
+                rec.share_sum().to_bits(),
+                rec.latency_s().to_bits(),
+                "req {}: stage shares do not partition latency bit-for-bit",
+                rec.req
+            );
+        }
+        let doc = analysis.to_json();
+        let selfdiff = diff_reports(&doc, &doc);
+        assert!(selfdiff.is_empty(), "self-diff of the report is not empty");
+        assert!(!analysis.faults.intervals.is_empty(), "no fault intervals attributed");
+
+        let n = data.requests.len() as f64;
+        println!(
+            "    {:>6} devices: {:>8} requests analyzed in {:.3}s → {:>10.0} req/s \
+             (offline parse {:>10.0} req/s), {} SLOs, {} fault intervals, {} residual-bearing",
+            devices,
+            data.requests.len(),
+            build_s,
+            n / build_s,
+            n / parse_s,
+            analysis.slos.len(),
+            analysis.faults.intervals.len(),
+            analysis.attribution.residual_requests,
+        );
+        runs.push(Json::obj(vec![
+            ("devices", Json::Num(devices as f64)),
+            ("edge_sites", Json::Num(sites as f64)),
+            ("virtual_s", Json::Num(duration_s)),
+            ("traced_requests", Json::Num(data.requests.len() as f64)),
+            ("causal_events", Json::Num(data.events_total as f64)),
+            ("windows", Json::Num(data.windows.len() as f64)),
+            ("analyze_build_s", Json::Num(build_s)),
+            ("requests_attributed_per_sec", Json::Num(n / build_s)),
+            ("trace_parse_s", Json::Num(parse_s)),
+            ("requests_parsed_per_sec", Json::Num(n / parse_s)),
+            ("slo_outcomes", Json::Num(analysis.slos.len() as f64)),
+            ("fault_intervals", Json::Num(analysis.faults.intervals.len() as f64)),
+            ("residual_requests", Json::Num(analysis.attribution.residual_requests as f64)),
+        ]));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("analyze_scale")),
+        ("smoke", Json::Bool(smoke)),
+        ("scenario", Json::str("city_faulty")),
+        ("model", Json::str("alexnet")),
+        ("slos", Json::Arr(slos.iter().map(|s| Json::str(&s.raw)).collect())),
+        ("runs", Json::Arr(runs)),
+    ]);
+    // Tracked at the repo root (next to the other BENCH_*.json files)
+    // so the perf trajectory is versioned; CARGO_MANIFEST_DIR keeps the
+    // location stable however cargo was invoked.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_analyze.json");
+    std::fs::write(&out, json.to_string_pretty())?;
+    println!("\nwrote {}", std::fs::canonicalize(&out)?.display());
+    Ok(())
+}

@@ -1,0 +1,417 @@
+//! Critical-path latency attribution (DESIGN.md §14): which pipeline
+//! stage owns the latency mass, overall and at the tail, sliced by edge
+//! site, planner strategy, and [`crate::planner::ReplanReason`].
+//!
+//! All statistics are exact order statistics over the recorded
+//! requests — no histogram buckets, no re-derivation of the engine's
+//! arithmetic. The per-stage totals are folds over requests in
+//! completion order (the trace's export order), so the report is a pure
+//! deterministic function of the trace.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::{ReqRecord, RunData, STAGES};
+
+/// Exact latency order statistics for one request population.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    pub count: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+/// One stage's latency share within a population: the total mass it
+/// absorbed, its share of the population's total latency, and its share
+/// of the p50/p95/p99 *request* — i.e. where the quantile request
+/// actually spent its time, which is the "where did the tail go"
+/// question.
+#[derive(Clone, Debug, Default)]
+pub struct StageShare {
+    pub total_s: f64,
+    pub share_of_total: f64,
+    pub share_p50: f64,
+    pub share_p95: f64,
+    pub share_p99: f64,
+}
+
+/// Attribution for one population of requests (the whole run or a
+/// slice of it).
+#[derive(Clone, Debug, Default)]
+pub struct SliceRow {
+    pub key: String,
+    pub latency: LatencyStats,
+    pub stages: [StageShare; 9],
+}
+
+/// The full attribution block of an analyze report.
+#[derive(Clone, Debug, Default)]
+pub struct Attribution {
+    pub overall: SliceRow,
+    /// Per edge site (numeric order), then `cloud-only` for requests
+    /// that never touched an edge tier.
+    pub by_site: Vec<SliceRow>,
+    /// Per governing planner strategy, alphabetical; `unknown` when a
+    /// request predates any recorded re-plan for its device.
+    pub by_strategy: Vec<SliceRow>,
+    /// Per governing [`crate::planner::ReplanReason`], in the façade's
+    /// canonical order (`spawn`, `drift`, `band`, `migration`,
+    /// `failover`), then `unknown`; empty groups are dropped.
+    pub by_reason: Vec<SliceRow>,
+    /// Requests whose nine-way share fold needed a nonzero `downlink`
+    /// residual to close exactly (≤ 1 ulp each — see
+    /// [`super::ReqRecord::shares`]).
+    pub residual_requests: u64,
+}
+
+/// Nearest-rank index of quantile `q` in a population of `n` sorted
+/// samples (shared with the SLO audit's exact overall statistics).
+pub(crate) fn quantile_idx(n: usize, q: f64) -> usize {
+    ((q * n as f64).ceil() as usize).clamp(1, n) - 1
+}
+
+/// Indices of `members` sorted by (latency, req) — the req tiebreak
+/// keeps the order total, so quantile picks are deterministic even
+/// under duplicate latencies.
+fn sorted_by_latency(data: &RunData, members: &[usize]) -> Vec<usize> {
+    let mut idx = members.to_vec();
+    idx.sort_by(|&a, &b| {
+        let (ra, rb) = (&data.requests[a], &data.requests[b]);
+        ra.latency_s()
+            .partial_cmp(&rb.latency_s())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(ra.req.cmp(&rb.req))
+    });
+    idx
+}
+
+/// Share of request `r`'s latency spent in stage `i` (0 when the
+/// latency itself is zero).
+fn stage_fraction(r: &ReqRecord, i: usize) -> f64 {
+    let lat = r.latency_s();
+    if lat <= 0.0 {
+        0.0
+    } else {
+        r.shares[i] / lat
+    }
+}
+
+/// Build one [`SliceRow`] over `members` (indices into
+/// `data.requests`), which must be in request (completion) order.
+fn slice_row(data: &RunData, key: &str, members: &[usize]) -> SliceRow {
+    let mut row = SliceRow { key: key.to_string(), ..SliceRow::default() };
+    let n = members.len();
+    row.latency.count = n as u64;
+    if n == 0 {
+        return row;
+    }
+    let mut lat_total = 0.0f64;
+    for &m in members {
+        let r = &data.requests[m];
+        lat_total += r.latency_s();
+        for i in 0..9 {
+            row.stages[i].total_s += r.shares[i];
+        }
+    }
+    row.latency.mean_s = lat_total / n as f64;
+    let sorted = sorted_by_latency(data, members);
+    let (i50, i95, i99) = (quantile_idx(n, 0.50), quantile_idx(n, 0.95), quantile_idx(n, 0.99));
+    let (r50, r95, r99) = (
+        &data.requests[sorted[i50]],
+        &data.requests[sorted[i95]],
+        &data.requests[sorted[i99]],
+    );
+    row.latency.p50_s = r50.latency_s();
+    row.latency.p95_s = r95.latency_s();
+    row.latency.p99_s = r99.latency_s();
+    row.latency.max_s = data.requests[*sorted.last().unwrap()].latency_s();
+    for i in 0..9 {
+        row.stages[i].share_of_total =
+            if lat_total > 0.0 { row.stages[i].total_s / lat_total } else { 0.0 };
+        row.stages[i].share_p50 = stage_fraction(r50, i);
+        row.stages[i].share_p95 = stage_fraction(r95, i);
+        row.stages[i].share_p99 = stage_fraction(r99, i);
+    }
+    row
+}
+
+/// Index of the governing re-plan for each request: the latest
+/// [`super::ReplanNote`] for the request's device at or before its
+/// issue time. `None` when no such re-plan was recorded.
+fn governing_replans(data: &RunData) -> Vec<Option<usize>> {
+    // Per-device replan indices; record order is nondecreasing in t_s,
+    // so each per-device list is too — partition_point applies.
+    let mut by_device: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    for (i, rp) in data.replans.iter().enumerate() {
+        by_device.entry(rp.device).or_default().push(i);
+    }
+    data.requests
+        .iter()
+        .map(|r| {
+            let list = by_device.get(&r.device)?;
+            let k = list.partition_point(|&i| data.replans[i].t_s <= r.issued_s);
+            if k == 0 {
+                None
+            } else {
+                Some(list[k - 1])
+            }
+        })
+        .collect()
+}
+
+/// Canonical row order for the reason slice (the façade's reason order,
+/// then the fallback bucket).
+const REASON_ORDER: [&str; 6] = ["spawn", "drift", "band", "migration", "failover", "unknown"];
+
+/// Run the attribution pass (see [`Attribution`]).
+pub fn attribute(data: &RunData) -> Attribution {
+    let all: Vec<usize> = (0..data.requests.len()).collect();
+    let mut a = Attribution {
+        overall: slice_row(data, "all", &all),
+        ..Attribution::default()
+    };
+    a.residual_requests = data.requests.iter().filter(|r| r.shares[8] != 0.0).count() as u64;
+
+    // --- by site: numeric site order, then cloud-only.
+    let mut by_site: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+    let mut cloud_only: Vec<usize> = Vec::new();
+    for (i, r) in data.requests.iter().enumerate() {
+        match r.site {
+            Some(s) => by_site.entry(s).or_default().push(i),
+            None => cloud_only.push(i),
+        }
+    }
+    for (site, members) in &by_site {
+        a.by_site.push(slice_row(data, &format!("site:{site}"), members));
+    }
+    if !cloud_only.is_empty() {
+        a.by_site.push(slice_row(data, "cloud-only", &cloud_only));
+    }
+
+    // --- by strategy / by reason, via each request's governing re-plan.
+    let governing = governing_replans(data);
+    let mut by_strategy: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    let mut by_reason: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (i, g) in governing.iter().enumerate() {
+        let (strategy, reason) = match g {
+            Some(k) => (data.replans[*k].strategy.as_str(), data.replans[*k].reason.as_str()),
+            None => ("unknown", "unknown"),
+        };
+        by_strategy.entry(strategy).or_default().push(i);
+        by_reason.entry(reason).or_default().push(i);
+    }
+    for (strategy, members) in &by_strategy {
+        a.by_strategy.push(slice_row(data, strategy, members));
+    }
+    for reason in REASON_ORDER {
+        if let Some(members) = by_reason.remove(reason) {
+            a.by_reason.push(slice_row(data, reason, &members));
+        }
+    }
+    // A reason name outside the canonical list (a future façade) still
+    // gets a row rather than silently vanishing; BTreeMap keeps the
+    // leftovers alphabetical.
+    for (reason, members) in &by_reason {
+        a.by_reason.push(slice_row(data, reason, members));
+    }
+    a
+}
+
+impl LatencyStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("mean_s", Json::Num(self.mean_s)),
+            ("p50_s", Json::Num(self.p50_s)),
+            ("p95_s", Json::Num(self.p95_s)),
+            ("p99_s", Json::Num(self.p99_s)),
+            ("max_s", Json::Num(self.max_s)),
+        ])
+    }
+}
+
+impl SliceRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("key", Json::str(&self.key)),
+            ("latency", self.latency.to_json()),
+            (
+                "stages",
+                Json::Arr(
+                    STAGES
+                        .iter()
+                        .zip(&self.stages)
+                        .map(|(kind, s)| {
+                            Json::obj(vec![
+                                ("stage", Json::str(kind.name())),
+                                ("total_s", Json::Num(s.total_s)),
+                                ("share_of_total", Json::Num(s.share_of_total)),
+                                ("share_p50", Json::Num(s.share_p50)),
+                                ("share_p95", Json::Num(s.share_p95)),
+                                ("share_p99", Json::Num(s.share_p99)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Name of the stage with the largest share of the p99 request.
+    pub fn dominant_p99_stage(&self) -> &'static str {
+        let mut best = 0;
+        for i in 1..9 {
+            if self.stages[i].share_p99 > self.stages[best].share_p99 {
+                best = i;
+            }
+        }
+        STAGES[best].name()
+    }
+}
+
+impl Attribution {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("overall", self.overall.to_json()),
+            ("by_site", Json::Arr(self.by_site.iter().map(SliceRow::to_json).collect())),
+            (
+                "by_strategy",
+                Json::Arr(self.by_strategy.iter().map(SliceRow::to_json).collect()),
+            ),
+            ("by_reason", Json::Arr(self.by_reason.iter().map(SliceRow::to_json).collect())),
+            ("residual_requests", Json::Num(self.residual_requests as f64)),
+        ])
+    }
+
+    /// Console tables: the overall stage breakdown, then one line per
+    /// slice with its tail owner.
+    pub fn print(&self) {
+        println!("-- stage attribution (overall, {} requests) --", self.overall.latency.count);
+        println!(
+            "{:<14} {:>12} {:>8} {:>8} {:>8} {:>8}",
+            "stage", "total_s", "share", "@p50", "@p95", "@p99"
+        );
+        for (kind, s) in STAGES.iter().zip(&self.overall.stages) {
+            println!(
+                "{:<14} {:>12.4} {:>7.1}% {:>7.1}% {:>7.1}% {:>7.1}%",
+                kind.name(),
+                s.total_s,
+                100.0 * s.share_of_total,
+                100.0 * s.share_p50,
+                100.0 * s.share_p95,
+                100.0 * s.share_p99,
+            );
+        }
+        for (label, rows) in
+            [("site", &self.by_site), ("strategy", &self.by_strategy), ("reason", &self.by_reason)]
+        {
+            if rows.is_empty() {
+                continue;
+            }
+            println!("-- by {label} --");
+            for row in rows {
+                println!(
+                    "{:<14} n={:<7} p50={:.4}s p99={:.4}s tail-owner={}",
+                    row.key,
+                    row.latency.count,
+                    row.latency.p50_s,
+                    row.latency.p99_s,
+                    row.dominant_p99_stage(),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ReplanNote, ReqRecord};
+    use super::*;
+
+    fn req(req: u64, device: u64, t0: f64, shares: [f64; 9], site: Option<u32>) -> ReqRecord {
+        let lat: f64 = shares.iter().sum();
+        ReqRecord { req, device, issued_s: t0, completed_s: t0 + lat, shares, site }
+    }
+
+    fn data3() -> RunData {
+        let mut shares_a = [0.0; 9];
+        shares_a[1] = 0.2; // head
+        shares_a[4] = 0.8; // edge service
+        let mut shares_b = [0.0; 9];
+        shares_b[1] = 0.1;
+        shares_b[7] = 0.4; // cloud service
+        let mut shares_c = [0.0; 9];
+        shares_c[2] = 2.0; // uplink-dominated straggler
+        RunData {
+            requests: vec![
+                req(0, 0, 0.0, shares_a, Some(0)),
+                req(1, 1, 1.0, shares_b, None),
+                req(2, 0, 2.0, shares_c, Some(1)),
+            ],
+            replans: vec![
+                ReplanNote { t_s: 0.0, device: 0, reason: "spawn".into(), strategy: "SmartSplit".into() },
+                ReplanNote { t_s: 1.5, device: 0, reason: "drift".into(), strategy: "Topsis".into() },
+            ],
+            ..RunData::default()
+        }
+    }
+
+    #[test]
+    fn quantiles_are_nearest_rank() {
+        assert_eq!(quantile_idx(1, 0.5), 0);
+        assert_eq!(quantile_idx(2, 0.5), 0);
+        assert_eq!(quantile_idx(3, 0.5), 1);
+        assert_eq!(quantile_idx(100, 0.95), 94);
+        assert_eq!(quantile_idx(100, 0.99), 98);
+        assert_eq!(quantile_idx(100, 1.0), 99);
+    }
+
+    #[test]
+    fn overall_shares_and_tail_owner() {
+        let a = attribute(&data3());
+        assert_eq!(a.overall.latency.count, 3);
+        // max latency is the 2.0s uplink straggler; it owns p99.
+        assert_eq!(a.overall.latency.max_s, 2.0);
+        assert_eq!(a.overall.dominant_p99_stage(), "uplink");
+        // share_of_total partitions to 1 across stages.
+        let sum: f64 = a.overall.stages.iter().map(|s| s.share_of_total).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert_eq!(a.residual_requests, 0);
+    }
+
+    #[test]
+    fn site_slices_are_numeric_then_cloud_only() {
+        let a = attribute(&data3());
+        let keys: Vec<&str> = a.by_site.iter().map(|r| r.key.as_str()).collect();
+        assert_eq!(keys, vec!["site:0", "site:1", "cloud-only"]);
+        assert_eq!(a.by_site[2].latency.count, 1);
+    }
+
+    #[test]
+    fn governing_replan_slices_by_strategy_and_reason() {
+        let a = attribute(&data3());
+        // req 0 (device 0, issued 0.0) governed by the spawn/SmartSplit
+        // replan at t=0.0; req 2 (device 0, issued 2.0) by drift/Topsis
+        // at t=1.5; req 1 (device 1) has no replan → unknown.
+        let strat: Vec<(&str, u64)> =
+            a.by_strategy.iter().map(|r| (r.key.as_str(), r.latency.count)).collect();
+        assert_eq!(strat, vec![("SmartSplit", 1), ("Topsis", 1), ("unknown", 1)]);
+        let reason: Vec<&str> = a.by_reason.iter().map(|r| r.key.as_str()).collect();
+        assert_eq!(reason, vec!["spawn", "drift", "unknown"]);
+    }
+
+    #[test]
+    fn empty_run_attributes_without_nan() {
+        let a = attribute(&RunData::default());
+        assert_eq!(a.overall.latency.count, 0);
+        for s in &a.overall.stages {
+            assert!(s.share_of_total == 0.0 && s.total_s == 0.0);
+        }
+        let text = a.to_json().to_string_pretty();
+        assert!(!text.contains("NaN") && !text.contains("inf"), "{text}");
+    }
+}

@@ -1,0 +1,282 @@
+//! Run-vs-run regression diff (DESIGN.md §14): a structural walk over
+//! two analyze-report JSON trees that emits every changed leaf, tagged
+//! `regression` / `improvement` / `neutral` by a direction-aware
+//! classifier.
+//!
+//! The diff is defined on the *serialized report*, not on re-analyzed
+//! inputs — so a run diffed against itself is exactly empty (the
+//! reports are byte-identical; `tests/analyze.rs` and CI pin this), and
+//! whatever the report records is exactly what the diff can flag.
+
+use crate::util::json::Json;
+
+use super::ANALYZE_SCHEMA_VERSION;
+
+/// One changed leaf between two reports.
+#[derive(Clone, Debug)]
+pub struct DiffEntry {
+    /// Dotted path to the leaf (`attribution.overall.latency.p99_s`,
+    /// `slos[0].verdict`, …).
+    pub path: String,
+    pub baseline: Json,
+    pub candidate: Json,
+    /// `"regression"`, `"improvement"`, or `"neutral"`.
+    pub class: &'static str,
+}
+
+/// The assembled diff.
+#[derive(Clone, Debug, Default)]
+pub struct DiffReport {
+    pub changes: Vec<DiffEntry>,
+    pub regressions: u64,
+    pub improvements: u64,
+}
+
+/// Leaf keys where a larger candidate value is worse (latency mass,
+/// drops, SLO burn).
+const WORSE_UP: [&str; 15] = [
+    "mean_s",
+    "p50_s",
+    "p95_s",
+    "p99_s",
+    "max_s",
+    "total_s",
+    "dropped",
+    "overall_value",
+    "windows_violating",
+    "violation_time_s",
+    "longest_streak",
+    "burn_fraction",
+    "latency_tax_s",
+    "mean_latency_in_s",
+    "reroutes",
+];
+
+/// Leaf keys where a smaller candidate value is worse.
+const WORSE_DOWN: [&str; 2] = ["completed", "completions_in"];
+
+/// Direction-aware classification of one changed leaf.
+fn classify(leaf_key: &str, baseline: &Json, candidate: &Json) -> &'static str {
+    match (baseline, candidate) {
+        (Json::Num(a), Json::Num(b)) => {
+            if WORSE_UP.contains(&leaf_key) {
+                if b > a {
+                    "regression"
+                } else {
+                    "improvement"
+                }
+            } else if WORSE_DOWN.contains(&leaf_key) {
+                if b < a {
+                    "regression"
+                } else {
+                    "improvement"
+                }
+            } else {
+                "neutral"
+            }
+        }
+        (Json::Str(a), Json::Str(b)) if leaf_key == "verdict" => {
+            match (a.as_str(), b.as_str()) {
+                (_, "fail") => "regression",
+                ("fail", "pass") => "improvement",
+                _ => "neutral",
+            }
+        }
+        (Json::Bool(a), Json::Bool(b)) if leaf_key == "overall_pass" => {
+            if *a && !*b {
+                "regression"
+            } else if !*a && *b {
+                "improvement"
+            } else {
+                "neutral"
+            }
+        }
+        _ => "neutral",
+    }
+}
+
+/// Last path segment without any `[i]` index (the classifier key).
+fn leaf_key(path: &str) -> &str {
+    let last = path.rsplit('.').next().unwrap_or(path);
+    match last.find('[') {
+        Some(i) => &last[..i],
+        None => last,
+    }
+}
+
+fn walk(path: &str, baseline: &Json, candidate: &Json, out: &mut Vec<DiffEntry>) {
+    match (baseline, candidate) {
+        (Json::Obj(a), Json::Obj(b)) => {
+            // Candidate key order first, then keys only the baseline has.
+            for (k, bv) in b {
+                let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                match a.iter().find(|(ak, _)| ak == k) {
+                    Some((_, av)) => walk(&sub, av, bv, out),
+                    None => push(out, &sub, Json::Null, bv.clone()),
+                }
+            }
+            for (k, av) in a {
+                if !b.iter().any(|(bk, _)| bk == k) {
+                    let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                    push(out, &sub, av.clone(), Json::Null);
+                }
+            }
+        }
+        (Json::Arr(a), Json::Arr(b)) => {
+            for (i, (av, bv)) in a.iter().zip(b).enumerate() {
+                walk(&format!("{path}[{i}]"), av, bv, out);
+            }
+            if a.len() != b.len() {
+                push(
+                    out,
+                    &format!("{path}.len"),
+                    Json::Num(a.len() as f64),
+                    Json::Num(b.len() as f64),
+                );
+            }
+        }
+        _ => {
+            if baseline != candidate {
+                push(out, path, baseline.clone(), candidate.clone());
+            }
+        }
+    }
+}
+
+fn push(out: &mut Vec<DiffEntry>, path: &str, baseline: Json, candidate: Json) {
+    let class = classify(leaf_key(path), &baseline, &candidate);
+    out.push(DiffEntry { path: path.to_string(), baseline, candidate, class });
+}
+
+/// Diff two analyze-report documents (baseline vs candidate).
+pub fn diff_reports(baseline: &Json, candidate: &Json) -> DiffReport {
+    let mut changes = Vec::new();
+    walk("", baseline, candidate, &mut changes);
+    let regressions = changes.iter().filter(|c| c.class == "regression").count() as u64;
+    let improvements = changes.iter().filter(|c| c.class == "improvement").count() as u64;
+    DiffReport { changes, regressions, improvements }
+}
+
+impl DiffEntry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("path", Json::str(&self.path)),
+            ("baseline", self.baseline.clone()),
+            ("candidate", self.candidate.clone()),
+            ("class", Json::str(self.class)),
+        ])
+    }
+}
+
+impl DiffReport {
+    /// True iff the two reports were byte-equivalent.
+    pub fn is_empty(&self) -> bool {
+        self.changes.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str("smartsplit-analyze-diff")),
+            ("schema_version", Json::Num(ANALYZE_SCHEMA_VERSION as f64)),
+            ("empty", Json::Bool(self.is_empty())),
+            ("changed", Json::Num(self.changes.len() as f64)),
+            ("regressions", Json::Num(self.regressions as f64)),
+            ("improvements", Json::Num(self.improvements as f64)),
+            ("changes", Json::Arr(self.changes.iter().map(DiffEntry::to_json).collect())),
+        ])
+    }
+
+    pub fn print(&self) {
+        if self.is_empty() {
+            println!("-- diff: reports are identical --");
+            return;
+        }
+        println!(
+            "-- diff: {} changed leaves ({} regressions, {} improvements) --",
+            self.changes.len(),
+            self.regressions,
+            self.improvements,
+        );
+        for c in &self.changes {
+            println!("[{:<11}] {}: {} -> {}", c.class, c.path, c.baseline, c.candidate);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(p99: f64, verdict: &str, completed: u64) -> Json {
+        Json::obj(vec![
+            ("format", Json::str("smartsplit-analyze")),
+            (
+                "attribution",
+                Json::obj(vec![(
+                    "overall",
+                    Json::obj(vec![(
+                        "latency",
+                        Json::obj(vec![
+                            ("p99_s", Json::Num(p99)),
+                            ("completed", Json::Num(completed as f64)),
+                        ]),
+                    )]),
+                )]),
+            ),
+            (
+                "slos",
+                Json::Arr(vec![Json::obj(vec![("verdict", Json::str(verdict))])]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn self_diff_is_exactly_empty() {
+        let r = report(1.5, "pass", 100);
+        let d = diff_reports(&r, &r);
+        assert!(d.is_empty());
+        assert_eq!((d.regressions, d.improvements), (0, 0));
+        let j = d.to_json();
+        assert_eq!(j.get("empty").unwrap(), &Json::Bool(true));
+        assert_eq!(j.get("changed").unwrap(), &Json::Num(0.0));
+    }
+
+    #[test]
+    fn directional_classification() {
+        let d = diff_reports(&report(1.5, "pass", 100), &report(2.5, "fail", 90));
+        assert_eq!(d.changes.len(), 3);
+        assert_eq!(d.regressions, 3);
+        let paths: Vec<&str> = d.changes.iter().map(|c| c.path.as_str()).collect();
+        assert!(paths.contains(&"attribution.overall.latency.p99_s"));
+        assert!(paths.contains(&"slos[0].verdict"));
+        // And the reverse direction is all improvements.
+        let back = diff_reports(&report(2.5, "fail", 90), &report(1.5, "pass", 100));
+        assert_eq!(back.improvements, 3);
+        assert_eq!(back.regressions, 0);
+    }
+
+    #[test]
+    fn added_and_removed_keys_and_length_changes_surface() {
+        let a = Json::obj(vec![("x", Json::Num(1.0)), ("gone", Json::Bool(true))]);
+        let b = Json::obj(vec![
+            ("x", Json::Num(1.0)),
+            ("added", Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)])),
+        ]);
+        let d = diff_reports(&a, &b);
+        let paths: Vec<&str> = d.changes.iter().map(|c| c.path.as_str()).collect();
+        assert_eq!(paths, vec!["added", "gone"]);
+        let arr_len = diff_reports(
+            &Json::Arr(vec![Json::Num(1.0)]),
+            &Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)]),
+        );
+        assert_eq!(arr_len.changes[0].path, ".len");
+    }
+
+    #[test]
+    fn leaf_key_strips_indices() {
+        assert_eq!(leaf_key("slos[0].verdict"), "verdict");
+        assert_eq!(leaf_key("attribution.by_site[2].latency.p99_s"), "p99_s");
+        assert_eq!(leaf_key("changes[3]"), "changes");
+        assert_eq!(leaf_key("top"), "top");
+    }
+}

@@ -1,0 +1,747 @@
+//! Deterministic post-run analytics over the observability plane
+//! (DESIGN.md §14): critical-path latency attribution, declarative SLO
+//! audits with per-fault impact accounting, and run-vs-run regression
+//! diffs.
+//!
+//! PR 6/PR 7 gave every sampled request a span timeline that tiles
+//! `issued_s → completed_s` bit-for-bit and every fault a causal
+//! annotation; this module is the layer that *answers questions* from
+//! them — which tier owns the p99 tail ([`attribution`]), whether the
+//! run met its latency/drop objectives and what each injected fault
+//! cost ([`slo`]), and whether a change regressed anything ([`diff`]).
+//!
+//! Two input paths produce the identical analysis:
+//!
+//! * **in-process** — [`RunData::from_report`] against a live
+//!   [`crate::sim::SimReport`] (the `simulate --slo` / `--report-out`
+//!   path);
+//! * **offline** — [`RunData::from_export_files`] against the
+//!   `--trace-out` JSONL and `--metrics-out` JSON files (the `analyze`
+//!   subcommand), re-parsed through [`crate::util::json`]. The JSONL
+//!   writer emits shortest-roundtrip f64s, so the offline path recovers
+//!   the engine's exact bits and the two paths agree byte-for-byte
+//!   (`tests/analyze.rs`).
+//!
+//! Determinism contract (same discipline as the exports themselves):
+//! reports are pure functions of their inputs, serialized from
+//! insertion-ordered [`Json`] objects, grouped through `BTreeMap` (never
+//! a `HashMap` iteration), with every division guarded so no NaN can
+//! reach the serializer — byte-identical across thread configs and
+//! reruns, pinned by `tests/analyze.rs` and replayed by CI.
+
+pub mod attribution;
+pub mod diff;
+pub mod slo;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::TimeSeriesReport;
+use crate::sim::SimReport;
+use crate::trace::{CausalEvent, RequestTrace, SpanKind, TraceReport};
+use crate::util::json::Json;
+
+pub use attribution::{Attribution, LatencyStats, SliceRow, StageShare};
+pub use diff::{diff_reports, DiffEntry, DiffReport};
+pub use slo::{FaultAudit, FaultImpact, Slo, SloOutcome};
+
+/// Version stamped into every analyze report (`schema_version`);
+/// `.github/check_observability.py` validates it on the serialized
+/// bytes.
+pub const ANALYZE_SCHEMA_VERSION: u64 = 1;
+
+/// Every pipeline stage, in pipeline order — the fixed row order of
+/// every attribution table. `Downlink` is last and holds the (≤ 1 ulp,
+/// usually zero) telescoping residual — see [`ReqRecord::shares`].
+pub const STAGES: [SpanKind; 9] = [
+    SpanKind::DeviceQueue,
+    SpanKind::HeadCompute,
+    SpanKind::Uplink,
+    SpanKind::EdgeQueue,
+    SpanKind::EdgeService,
+    SpanKind::Backhaul,
+    SpanKind::CloudQueue,
+    SpanKind::CloudService,
+    SpanKind::Downlink,
+];
+
+/// Index of a stage in [`STAGES`] (= its pipeline rank).
+pub fn stage_index(kind: SpanKind) -> usize {
+    match kind {
+        SpanKind::DeviceQueue => 0,
+        SpanKind::HeadCompute => 1,
+        SpanKind::Uplink => 2,
+        SpanKind::EdgeQueue => 3,
+        SpanKind::EdgeService => 4,
+        SpanKind::Backhaul => 5,
+        SpanKind::CloudQueue => 6,
+        SpanKind::CloudService => 7,
+        SpanKind::Downlink => 8,
+    }
+}
+
+/// Inverse of [`SpanKind::name`] for the offline parse path.
+pub fn stage_by_name(name: &str) -> Option<SpanKind> {
+    STAGES.iter().copied().find(|k| k.name() == name)
+}
+
+/// One completed request, reduced to the numbers attribution needs.
+#[derive(Clone, Debug)]
+pub struct ReqRecord {
+    pub req: u64,
+    pub device: u64,
+    pub issued_s: f64,
+    pub completed_s: f64,
+    /// Exact per-stage decomposition of the end-to-end latency, indexed
+    /// by [`STAGES`]. Stages `0..8` are the recorded span durations
+    /// (each exact: consecutive span boundaries are within a factor of
+    /// two, so the subtraction is exact by Sterbenz); slot 8
+    /// (`Downlink`, zero-length by the paper's Eq. 14) is defined as
+    /// `latency - Σ(other stages)` so that the left-to-right sum of all
+    /// nine shares reproduces `completed_s - issued_s` **bit-for-bit**
+    /// — the partition is exact by construction, not by tolerance
+    /// (`tests/analyze.rs` asserts it with `==` over `city_mobile` and
+    /// `city_faulty`). The slot is nonzero only when the f64 fold of
+    /// the exact span durations rounds off the real-number telescope —
+    /// at most 1 ulp, counted in
+    /// [`Attribution::residual_requests`].
+    pub shares: [f64; 9],
+    /// Edge site of the first edge-tier span (queue/service/backhaul);
+    /// `None` for requests that never touched an edge site.
+    pub site: Option<u32>,
+}
+
+impl ReqRecord {
+    /// Recorded end-to-end latency (the engine's own subtraction).
+    pub fn latency_s(&self) -> f64 {
+        self.completed_s - self.issued_s
+    }
+
+    /// Left-to-right sum of the nine stage shares. Bit-equal to
+    /// [`ReqRecord::latency_s`] by construction (see
+    /// [`ReqRecord::shares`]).
+    pub fn share_sum(&self) -> f64 {
+        self.shares.iter().fold(0.0f64, |acc, &d| acc + d)
+    }
+}
+
+/// A split re-plan annotation, reduced for slicing (strategy and reason
+/// keep their stable export names so the offline path needs no enum
+/// round-trip).
+#[derive(Clone, Debug)]
+pub struct ReplanNote {
+    pub t_s: f64,
+    pub device: u64,
+    pub reason: String,
+    pub strategy: String,
+}
+
+/// A fault edge (`site_down`, `backhaul_degrade`, …) from the causal
+/// stream.
+#[derive(Clone, Debug)]
+pub struct FaultNote {
+    pub t_s: f64,
+    pub kind: String,
+    pub site: u32,
+    pub value: f64,
+}
+
+/// A request rerouted to the cloud off a dead site.
+#[derive(Clone, Debug)]
+pub struct FailoverNote {
+    pub t_s: f64,
+    pub req: u64,
+    pub device: u64,
+    pub from_site: u32,
+}
+
+/// One time-series window, reduced to what the SLO audit evaluates.
+#[derive(Clone, Debug, Default)]
+pub struct WindowStats {
+    pub index: u64,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub generated: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+/// Everything the analysis consumes, loadable from a live report or
+/// from the serialized exports (the two agree bit-for-bit — module
+/// docs).
+#[derive(Clone, Debug, Default)]
+pub struct RunData {
+    /// Model name; empty when the input was a trace file alone (the
+    /// trace export does not carry it).
+    pub model: String,
+    pub seed: Option<u64>,
+    /// Completed sampled requests, in completion order.
+    pub requests: Vec<ReqRecord>,
+    /// Re-plan annotations in record order (nondecreasing `t_s`).
+    pub replans: Vec<ReplanNote>,
+    /// Fault edges in record order.
+    pub faults: Vec<FaultNote>,
+    /// Outage reroutes in record order.
+    pub failovers: Vec<FailoverNote>,
+    /// All causal annotations, including kinds the analysis only counts.
+    pub events_total: u64,
+    /// The trace's sampling knob (1 = every request was recorded).
+    pub sample_every: u64,
+    /// Window width; 0 when no series was attached.
+    pub window_s: f64,
+    pub windows: Vec<WindowStats>,
+    /// Run totals — `None` for trace-only inputs (the sampled trace
+    /// cannot reconstruct them).
+    pub generated: Option<u64>,
+    pub completed: Option<u64>,
+    pub dropped: Option<u64>,
+    /// Latest virtual time seen (drain time in-process; max of window
+    /// ends / completions / event stamps offline) — closes unclosed
+    /// fault intervals.
+    pub horizon_s: f64,
+}
+
+/// Reduce one traced request (shared by both input paths — this is the
+/// single place the exact-partition arithmetic lives).
+fn req_record(t: &RequestTrace) -> ReqRecord {
+    let mut shares = [0.0f64; 9];
+    let mut sum = 0.0f64;
+    let mut site = None;
+    for s in &t.spans {
+        if s.kind == SpanKind::Downlink {
+            continue; // zero-length marker; slot 8 is the residual below
+        }
+        let d = s.end_s - s.start_s;
+        shares[stage_index(s.kind)] += d;
+        sum += d;
+        if site.is_none()
+            && matches!(s.kind, SpanKind::EdgeQueue | SpanKind::EdgeService | SpanKind::Backhaul)
+        {
+            site = s.site;
+        }
+    }
+    // The residual makes the partition exact: sum + (latency - sum)
+    // re-folds to latency bit-for-bit (Sterbenz: the fold of exact
+    // span durations lands within a factor of two of the latency, so
+    // the subtraction below is itself exact).
+    shares[8] = t.latency_s() - sum;
+    ReqRecord {
+        req: t.req,
+        device: t.device,
+        issued_s: t.issued_s,
+        completed_s: t.completed_s,
+        shares,
+        site,
+    }
+}
+
+impl RunData {
+    /// In-process path: consume a live [`SimReport`]. Tracing must have
+    /// been enabled; the window series is attached when present.
+    pub fn from_report(r: &SimReport) -> Result<RunData> {
+        let tr = r.trace.as_ref().context(
+            "analysis needs per-request tracing \
+             (--trace-out / ObservabilityConfig::trace_sample_every >= 1)",
+        )?;
+        let mut d = RunData::from_trace(tr);
+        d.model = r.model.clone();
+        d.seed = Some(r.seed);
+        d.generated = Some(r.generated);
+        d.completed = Some(r.completed);
+        d.dropped = Some(r.dropped);
+        d.horizon_s = d.horizon_s.max(r.sim_end_s);
+        if let Some(ts) = &r.series {
+            d.attach_series(ts);
+        }
+        Ok(d)
+    }
+
+    /// Reduce a sealed trace (no run totals, no windows).
+    pub fn from_trace(tr: &TraceReport) -> RunData {
+        let requests: Vec<ReqRecord> = tr.requests.iter().map(req_record).collect();
+        let mut d = RunData {
+            sample_every: tr.sample_every,
+            events_total: tr.events.len() as u64,
+            ..RunData::default()
+        };
+        for e in &tr.events {
+            match e {
+                CausalEvent::Replan { t_s, device, reason, strategy, .. } => {
+                    d.replans.push(ReplanNote {
+                        t_s: *t_s,
+                        device: *device,
+                        reason: reason.name().to_string(),
+                        strategy: strategy.name().to_string(),
+                    });
+                }
+                CausalEvent::Fault { t_s, kind, site, value } => {
+                    d.faults.push(FaultNote {
+                        t_s: *t_s,
+                        kind: (*kind).to_string(),
+                        site: *site,
+                        value: *value,
+                    });
+                }
+                CausalEvent::Failover { t_s, req, device, from_site } => {
+                    d.failovers.push(FailoverNote {
+                        t_s: *t_s,
+                        req: *req,
+                        device: *device,
+                        from_site: *from_site,
+                    });
+                }
+                CausalEvent::HandoverRelay { .. } | CausalEvent::Reattach { .. } => {}
+            }
+            d.horizon_s = d.horizon_s.max(e.t_s());
+        }
+        for r in &requests {
+            d.horizon_s = d.horizon_s.max(r.completed_s);
+        }
+        d.requests = requests;
+        d
+    }
+
+    /// Attach a windowed series to trace-derived data.
+    pub fn attach_series(&mut self, ts: &TimeSeriesReport) {
+        self.window_s = ts.window_s;
+        self.windows = ts
+            .windows
+            .iter()
+            .map(|w| WindowStats {
+                index: w.index,
+                start_s: w.start_s,
+                end_s: w.end_s,
+                generated: w.generated,
+                completed: w.completed,
+                dropped: w.dropped,
+                mean_s: w.latency.mean_s,
+                p50_s: w.latency.p50_s,
+                p95_s: w.latency.p95_s,
+                p99_s: w.latency.p99_s,
+                max_s: w.latency.max_s,
+            })
+            .collect();
+        if let Some(last) = self.windows.last() {
+            self.horizon_s = self.horizon_s.max(last.end_s);
+        }
+    }
+
+    /// Offline path: parse the `--trace-out` JSONL and/or the
+    /// `--metrics-out` JSON. At least one must be given; attribution
+    /// and fault impact need the trace, the windowed SLO audit the
+    /// metrics.
+    pub fn from_export_files(trace: Option<&Path>, metrics: Option<&Path>) -> Result<RunData> {
+        let read = |p: &Path| {
+            std::fs::read_to_string(p).with_context(|| format!("reading {}", p.display()))
+        };
+        let trace_text = trace.map(read).transpose()?;
+        let metrics_text = metrics.map(read).transpose()?;
+        RunData::from_export_strs(trace_text.as_deref(), metrics_text.as_deref())
+    }
+
+    /// [`RunData::from_export_files`] on in-memory strings (the form the
+    /// round-trip tests use).
+    pub fn from_export_strs(trace_jsonl: Option<&str>, metrics_json: Option<&str>) -> Result<RunData> {
+        if trace_jsonl.is_none() && metrics_json.is_none() {
+            bail!("analysis needs a trace JSONL and/or a metrics JSON export");
+        }
+        let mut d = match trace_jsonl {
+            Some(text) => parse_trace_jsonl(text)?,
+            None => RunData::default(),
+        };
+        if let Some(text) = metrics_json {
+            parse_metrics_json(text, &mut d)?;
+        }
+        Ok(d)
+    }
+
+    /// Overall drop rate in `[0, 1]`: run totals when known, else the
+    /// window sums, else 0.
+    pub fn drop_rate(&self) -> f64 {
+        let (gen, dropped) = match (self.generated, self.dropped) {
+            (Some(g), Some(x)) => (g, x),
+            _ => (
+                self.windows.iter().map(|w| w.generated).sum(),
+                self.windows.iter().map(|w| w.dropped).sum(),
+            ),
+        };
+        if gen == 0 {
+            return 0.0;
+        }
+        dropped as f64 / gen as f64
+    }
+}
+
+/// Accepted trace schema versions: 1 (PR 6/PR 7, `"version"`) and the
+/// current `"schema_version"`.
+const TRACE_SCHEMA_ACCEPTED: [u64; 2] = [1, crate::trace::export::TRACE_SCHEMA_VERSION];
+
+fn parse_trace_jsonl(text: &str) -> Result<RunData> {
+    let mut lines = text.lines().enumerate();
+    let (_, first) = lines.next().context("empty trace file")?;
+    let meta = Json::parse(first).context("trace line 1 (meta header)")?;
+    if meta.get_str("type").ok() != Some("meta")
+        || meta.get_str("format").ok() != Some("smartsplit-trace")
+    {
+        bail!("not a smartsplit-trace JSONL export (missing meta header)");
+    }
+    let version = meta
+        .get("schema_version")
+        .or_else(|_| meta.get("version"))
+        .and_then(|v| v.as_u64())
+        .context("trace meta carries no schema version")?;
+    if !TRACE_SCHEMA_ACCEPTED.contains(&version) {
+        bail!(
+            "unsupported trace schema_version {version} (this build reads {:?})",
+            TRACE_SCHEMA_ACCEPTED
+        );
+    }
+    let mut d = RunData {
+        sample_every: meta.get("sample_every").and_then(|v| v.as_u64()).unwrap_or(1),
+        ..RunData::default()
+    };
+    for (i, line) in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let obj = Json::parse(line).with_context(|| format!("trace line {}", i + 1))?;
+        let kind = obj.get_str("type").map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?;
+        match kind {
+            "request" => {
+                let spans = obj
+                    .get("spans")
+                    .and_then(|s| s.as_arr())
+                    .map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?;
+                let mut t = RequestTrace {
+                    req: obj.get("req").and_then(|v| v.as_u64()).unwrap_or(0),
+                    device: obj.get("device").and_then(|v| v.as_u64()).unwrap_or(0),
+                    issued_s: obj.get_f64("issued_s").unwrap_or(0.0),
+                    completed_s: obj.get_f64("completed_s").unwrap_or(0.0),
+                    spans: Vec::with_capacity(spans.len()),
+                };
+                for s in spans {
+                    let name = s.get_str("kind").unwrap_or("");
+                    let kind = stage_by_name(name)
+                        .with_context(|| format!("trace line {}: unknown span kind {name:?}", i + 1))?;
+                    t.spans.push(crate::trace::Span {
+                        kind,
+                        start_s: s.get_f64("start_s").unwrap_or(0.0),
+                        end_s: s.get_f64("end_s").unwrap_or(0.0),
+                        site: s.get("site").ok().and_then(|v| v.as_u64().ok()).map(|v| v as u32),
+                    });
+                }
+                d.horizon_s = d.horizon_s.max(t.completed_s);
+                d.requests.push(req_record(&t));
+            }
+            "replan" => {
+                d.events_total += 1;
+                let t_s = obj.get_f64("t_s").unwrap_or(0.0);
+                d.horizon_s = d.horizon_s.max(t_s);
+                d.replans.push(ReplanNote {
+                    t_s,
+                    device: obj.get("device").and_then(|v| v.as_u64()).unwrap_or(0),
+                    reason: obj.get_str("reason").unwrap_or("unknown").to_string(),
+                    strategy: obj.get_str("strategy").unwrap_or("unknown").to_string(),
+                });
+            }
+            "fault" => {
+                d.events_total += 1;
+                let t_s = obj.get_f64("t_s").unwrap_or(0.0);
+                d.horizon_s = d.horizon_s.max(t_s);
+                d.faults.push(FaultNote {
+                    t_s,
+                    kind: obj.get_str("kind").unwrap_or("unknown").to_string(),
+                    site: obj.get("site").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+                    value: obj.get_f64("value").unwrap_or(0.0),
+                });
+            }
+            "failover" => {
+                d.events_total += 1;
+                let t_s = obj.get_f64("t_s").unwrap_or(0.0);
+                d.horizon_s = d.horizon_s.max(t_s);
+                d.failovers.push(FailoverNote {
+                    t_s,
+                    req: obj.get("req").and_then(|v| v.as_u64()).unwrap_or(0),
+                    device: obj.get("device").and_then(|v| v.as_u64()).unwrap_or(0),
+                    from_site: obj.get("from_site").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+                });
+            }
+            "handover_relay" | "reattach" => {
+                d.events_total += 1;
+                let t_s = obj
+                    .get_f64("t_s")
+                    .or_else(|_| obj.get_f64("start_s"))
+                    .unwrap_or(0.0);
+                d.horizon_s = d.horizon_s.max(t_s);
+            }
+            other => bail!("trace line {}: unknown line type {other:?}", i + 1),
+        }
+    }
+    Ok(d)
+}
+
+fn parse_metrics_json(text: &str, d: &mut RunData) -> Result<()> {
+    let doc = Json::parse(text).context("parsing metrics JSON")?;
+    if let Ok(v) = doc.get("schema_version").and_then(|v| v.as_u64()) {
+        if v > crate::metrics::METRICS_SCHEMA_VERSION {
+            bail!(
+                "unsupported metrics schema_version {v} (this build reads <= {})",
+                crate::metrics::METRICS_SCHEMA_VERSION
+            );
+        }
+    }
+    if d.model.is_empty() {
+        d.model = doc.get_str("model").unwrap_or("").to_string();
+    }
+    if d.seed.is_none() {
+        d.seed = doc.get("seed").ok().and_then(|v| v.as_u64().ok());
+    }
+    if let Ok(g) = doc.get("generated").and_then(|v| v.as_u64()) {
+        d.generated = Some(g);
+    }
+    if let Ok(c) = doc.get("completed").and_then(|v| v.as_u64()) {
+        d.completed = Some(c);
+    }
+    if let Ok(x) = doc.get("dropped").and_then(|v| v.as_u64()) {
+        d.dropped = Some(x);
+    }
+    let series = doc.get("series").context("metrics JSON carries no \"series\"")?;
+    d.window_s = series.get_f64("window_s").context("series.window_s")?;
+    let windows = series.get("windows").and_then(|w| w.as_arr())?;
+    d.windows = windows
+        .iter()
+        .map(|w| -> Result<WindowStats> {
+            let lat = w.get("latency").context("window.latency")?;
+            Ok(WindowStats {
+                index: w.get("index").and_then(|v| v.as_u64()).unwrap_or(0),
+                start_s: w.get_f64("start_s").unwrap_or(0.0),
+                end_s: w.get_f64("end_s").unwrap_or(0.0),
+                generated: w.get("generated").and_then(|v| v.as_u64()).unwrap_or(0),
+                completed: w.get("completed").and_then(|v| v.as_u64()).unwrap_or(0),
+                dropped: w.get("dropped").and_then(|v| v.as_u64()).unwrap_or(0),
+                mean_s: lat.get_f64("mean_s").unwrap_or(0.0),
+                p50_s: lat.get_f64("p50_s").unwrap_or(0.0),
+                p95_s: lat.get_f64("p95_s").unwrap_or(0.0),
+                p99_s: lat.get_f64("p99_s").unwrap_or(0.0),
+                max_s: lat.get_f64("max_s").unwrap_or(0.0),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    if let Some(last) = d.windows.last() {
+        d.horizon_s = d.horizon_s.max(last.end_s);
+    }
+    Ok(())
+}
+
+/// The assembled analysis: attribution + SLO audit + fault impact, with
+/// a versioned byte-stable JSON form and a console table form.
+#[derive(Clone, Debug)]
+pub struct AnalyzeReport {
+    pub model: String,
+    pub seed: Option<u64>,
+    pub requests: u64,
+    pub events: u64,
+    pub windows: u64,
+    pub attribution: Attribution,
+    pub slos: Vec<SloOutcome>,
+    pub faults: FaultAudit,
+}
+
+impl AnalyzeReport {
+    /// Run the full analysis. Pure: same data + same SLOs → the same
+    /// report, byte-for-byte.
+    pub fn build(data: &RunData, slos: &[Slo]) -> AnalyzeReport {
+        AnalyzeReport {
+            model: data.model.clone(),
+            seed: data.seed,
+            requests: data.requests.len() as u64,
+            events: data.events_total,
+            windows: data.windows.len() as u64,
+            attribution: attribution::attribute(data),
+            slos: slo::audit(data, slos),
+            faults: slo::fault_impact(data),
+        }
+    }
+
+    /// The versioned report document (`--report-out`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str("smartsplit-analyze")),
+            ("schema_version", Json::Num(ANALYZE_SCHEMA_VERSION as f64)),
+            ("model", Json::str(&self.model)),
+            (
+                "seed",
+                match self.seed {
+                    Some(s) => Json::Num(s as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "source",
+                Json::obj(vec![
+                    ("requests", Json::Num(self.requests as f64)),
+                    ("events", Json::Num(self.events as f64)),
+                    ("windows", Json::Num(self.windows as f64)),
+                ]),
+            ),
+            ("attribution", self.attribution.to_json()),
+            ("slos", Json::Arr(self.slos.iter().map(SloOutcome::to_json).collect())),
+            ("faults", self.faults.to_json()),
+        ])
+    }
+
+    /// Console tables: the overall stage table, the per-slice tails,
+    /// SLO verdicts, and per-fault impact lines.
+    pub fn print(&self) {
+        println!(
+            "== analyze: {} — {} requests, {} events, {} windows ==",
+            if self.model.is_empty() { "(unknown model)" } else { &self.model },
+            self.requests,
+            self.events,
+            self.windows,
+        );
+        self.attribution.print();
+        if !self.slos.is_empty() {
+            println!("-- SLOs --");
+            for s in &self.slos {
+                s.print();
+            }
+        }
+        self.faults.print();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceRecorder;
+
+    fn traced(rec: &mut TraceRecorder, req: u64, t0: f64, spans: &[(SpanKind, f64)]) {
+        rec.begin(req, req, t0);
+        let mut t = t0;
+        for &(kind, d) in spans {
+            let site = matches!(
+                kind,
+                SpanKind::EdgeQueue | SpanKind::EdgeService | SpanKind::Backhaul
+            )
+            .then_some(1);
+            rec.span(req, kind, t, t + d, site);
+            t += d;
+        }
+        rec.complete(req, t);
+    }
+
+    #[test]
+    fn shares_partition_latency_bit_for_bit() {
+        let mut rec = TraceRecorder::new(1);
+        traced(
+            &mut rec,
+            0,
+            10.0,
+            &[
+                (SpanKind::DeviceQueue, 0.0),
+                (SpanKind::HeadCompute, 0.125),
+                (SpanKind::Uplink, 0.1),
+                (SpanKind::EdgeQueue, 0.3),
+                (SpanKind::EdgeService, 0.2),
+            ],
+        );
+        // Awkward magnitudes on purpose: non-representable sums.
+        traced(
+            &mut rec,
+            1,
+            1234.567,
+            &[
+                (SpanKind::DeviceQueue, 0.1),
+                (SpanKind::HeadCompute, 0.2),
+                (SpanKind::Uplink, 0.3),
+                (SpanKind::CloudQueue, 0.0001),
+                (SpanKind::CloudService, 0.7),
+            ],
+        );
+        let d = RunData::from_trace(&rec.finish());
+        assert_eq!(d.requests.len(), 2);
+        for r in &d.requests {
+            assert_eq!(
+                r.share_sum().to_bits(),
+                r.latency_s().to_bits(),
+                "request {} shares do not partition its latency exactly",
+                r.req
+            );
+        }
+        assert_eq!(d.requests[0].site, Some(1));
+        assert_eq!(d.requests[1].site, None);
+    }
+
+    #[test]
+    fn trace_jsonl_round_trip_preserves_exact_bits() {
+        let mut rec = TraceRecorder::new(1);
+        traced(
+            &mut rec,
+            0,
+            987.654321,
+            &[
+                (SpanKind::DeviceQueue, 0.0),
+                (SpanKind::HeadCompute, 1.0 / 3.0),
+                (SpanKind::Uplink, 0.1),
+                (SpanKind::EdgeQueue, 1e-7),
+                (SpanKind::EdgeService, 0.25),
+                (SpanKind::Backhaul, 0.0125),
+                (SpanKind::CloudQueue, 0.0),
+                (SpanKind::CloudService, 2.0 / 7.0),
+            ],
+        );
+        rec.note(CausalEvent::Fault { t_s: 30.0, kind: "site_down", site: 1, value: 0.0 });
+        rec.note(CausalEvent::Failover { t_s: 30.0, req: 0, device: 0, from_site: 1 });
+        let report = rec.finish();
+        let live = RunData::from_trace(&report);
+        let parsed = RunData::from_export_strs(Some(&report.to_jsonl()), None).expect("parses");
+        assert_eq!(live.requests.len(), parsed.requests.len());
+        for (a, b) in live.requests.iter().zip(&parsed.requests) {
+            assert_eq!(a.issued_s.to_bits(), b.issued_s.to_bits());
+            assert_eq!(a.completed_s.to_bits(), b.completed_s.to_bits());
+            for i in 0..9 {
+                assert_eq!(a.shares[i].to_bits(), b.shares[i].to_bits(), "stage {i} drifted");
+            }
+        }
+        assert_eq!(parsed.faults.len(), 1);
+        assert_eq!(parsed.failovers.len(), 1);
+        assert_eq!(parsed.events_total, 2);
+    }
+
+    #[test]
+    fn span_order_matches_stage_rank_order() {
+        // The exact-partition argument needs the span order and the
+        // STAGES order to coincide; pin the table against SpanKind.
+        for (i, k) in STAGES.iter().enumerate() {
+            assert_eq!(stage_index(*k), i);
+            assert_eq!(stage_by_name(k.name()), Some(*k));
+        }
+        assert_eq!(stage_by_name("nope"), None);
+    }
+
+    #[test]
+    fn rejects_unknown_schema_and_garbage() {
+        assert!(RunData::from_export_strs(None, None).is_err());
+        assert!(RunData::from_export_strs(Some("not json"), None).is_err());
+        let bad_version = "{\"type\": \"meta\", \"format\": \"smartsplit-trace\", \
+                           \"schema_version\": 999, \"sample_every\": 1}";
+        let err = RunData::from_export_strs(Some(bad_version), None).unwrap_err();
+        assert!(format!("{err:#}").contains("schema_version 999"), "{err:#}");
+    }
+
+    #[test]
+    fn zero_length_request_is_partitioned_without_nan() {
+        let mut rec = TraceRecorder::new(1);
+        traced(&mut rec, 0, 5.0, &[(SpanKind::DeviceQueue, 0.0), (SpanKind::HeadCompute, 0.0)]);
+        let d = RunData::from_trace(&rec.finish());
+        assert_eq!(d.requests[0].latency_s(), 0.0);
+        assert_eq!(d.requests[0].share_sum().to_bits(), 0.0f64.to_bits());
+    }
+}

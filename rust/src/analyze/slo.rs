@@ -1,0 +1,638 @@
+//! Declarative SLO audit and per-fault impact attribution
+//! (DESIGN.md §14).
+//!
+//! An SLO is a one-liner like `p99<2.5s` or `drop<0.1%` ([`Slo::parse`]
+//! documents the grammar). Each SLO is judged twice: once against the
+//! exact overall statistics of the run, and once per time-series window
+//! with burn accounting — how many windows violated, for how much
+//! virtual time, in how long a streak. The fault audit pairs PR 7's
+//! `Fault` edges into intervals and charges each one with what happened
+//! causally inside it: reroutes, completions, the latency tax over the
+//! calm-run baseline, and (at window resolution) drops.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::attribution::quantile_idx;
+use super::RunData;
+
+/// What an SLO measures. Latency metrics are in seconds; `Drop` is the
+/// dropped/generated fraction in `[0, 1]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SloMetric {
+    P50,
+    P95,
+    P99,
+    Mean,
+    Max,
+    Drop,
+}
+
+impl SloMetric {
+    pub fn name(self) -> &'static str {
+        match self {
+            SloMetric::P50 => "p50",
+            SloMetric::P95 => "p95",
+            SloMetric::P99 => "p99",
+            SloMetric::Mean => "mean",
+            SloMetric::Max => "max",
+            SloMetric::Drop => "drop",
+        }
+    }
+}
+
+/// The comparison an SLO asserts (`value op threshold` must hold).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SloOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl SloOp {
+    pub fn symbol(self) -> &'static str {
+        match self {
+            SloOp::Lt => "<",
+            SloOp::Le => "<=",
+            SloOp::Gt => ">",
+            SloOp::Ge => ">=",
+        }
+    }
+}
+
+/// A parsed `--slo` clause.
+#[derive(Clone, Debug)]
+pub struct Slo {
+    /// The clause as the user wrote it (echoed in reports).
+    pub raw: String,
+    pub metric: SloMetric,
+    pub op: SloOp,
+    /// Seconds for latency metrics, a `[0, 1]` fraction for `drop`.
+    pub threshold: f64,
+}
+
+fn grammar_error(raw: &str, detail: &str) -> String {
+    format!(
+        "bad SLO {raw:?}: {detail} — grammar is <metric><op><value>[unit] with \
+         metric ∈ p50|p95|p99|mean|max|drop, op ∈ <|<=|>|>=, \
+         unit ∈ ms|s for latency or % for drop; e.g. \"p99<2.5s\", \"drop<0.1%\""
+    )
+}
+
+impl Slo {
+    /// Parse one clause; the error message teaches the grammar.
+    pub fn parse(raw: &str) -> Result<Slo, String> {
+        let s = raw.trim();
+        const METRICS: [(&str, SloMetric); 6] = [
+            ("p50", SloMetric::P50),
+            ("p95", SloMetric::P95),
+            ("p99", SloMetric::P99),
+            ("mean", SloMetric::Mean),
+            ("max", SloMetric::Max),
+            ("drop", SloMetric::Drop),
+        ];
+        let (name, metric) = METRICS
+            .iter()
+            .find(|(n, _)| s.starts_with(n))
+            .ok_or_else(|| grammar_error(raw, "unknown metric"))?;
+        let rest = s[name.len()..].trim_start();
+        let (op, rest) = if let Some(r) = rest.strip_prefix("<=") {
+            (SloOp::Le, r)
+        } else if let Some(r) = rest.strip_prefix(">=") {
+            (SloOp::Ge, r)
+        } else if let Some(r) = rest.strip_prefix('<') {
+            (SloOp::Lt, r)
+        } else if let Some(r) = rest.strip_prefix('>') {
+            (SloOp::Gt, r)
+        } else {
+            return Err(grammar_error(raw, "missing comparison operator"));
+        };
+        let body = rest.trim();
+        let (num, unit) = if let Some(v) = body.strip_suffix("ms") {
+            (v, "ms")
+        } else if let Some(v) = body.strip_suffix('s') {
+            (v, "s")
+        } else if let Some(v) = body.strip_suffix('%') {
+            (v, "%")
+        } else {
+            (body, "")
+        };
+        let value: f64 = num
+            .trim()
+            .parse()
+            .map_err(|_| grammar_error(raw, "threshold is not a number"))?;
+        if !value.is_finite() || value < 0.0 {
+            return Err(grammar_error(raw, "threshold must be finite and >= 0"));
+        }
+        let threshold = match (*metric, unit) {
+            (SloMetric::Drop, "%") => value / 100.0,
+            (SloMetric::Drop, "") => value,
+            (SloMetric::Drop, _) => {
+                return Err(grammar_error(raw, "drop takes % or a bare fraction, not a time unit"))
+            }
+            (_, "ms") => value / 1000.0,
+            (_, "s") | (_, "") => value,
+            (_, "%") => return Err(grammar_error(raw, "% only applies to drop")),
+        };
+        Ok(Slo { raw: s.to_string(), metric: *metric, op, threshold })
+    }
+
+    /// Does `value` satisfy the clause?
+    pub fn holds(&self, value: f64) -> bool {
+        match self.op {
+            SloOp::Lt => value < self.threshold,
+            SloOp::Le => value <= self.threshold,
+            SloOp::Gt => value > self.threshold,
+            SloOp::Ge => value >= self.threshold,
+        }
+    }
+}
+
+/// Verdict of one SLO clause over one run.
+#[derive(Clone, Debug)]
+pub struct SloOutcome {
+    pub slo: Slo,
+    /// The run-level metric value (exact order statistics when the
+    /// trace is present; the worst evaluated window otherwise — a
+    /// conservative window-resolution stand-in, see [`audit`]).
+    pub overall_value: f64,
+    pub overall_pass: bool,
+    pub windows_total: u64,
+    /// Windows that carried enough traffic to be judged (latency
+    /// clauses need completions, drop clauses need arrivals).
+    pub windows_evaluated: u64,
+    pub windows_violating: u64,
+    /// Virtual time spent inside violating windows.
+    pub violation_time_s: f64,
+    /// Longest run of consecutive violating windows (idle windows
+    /// neither extend nor break a streak — a traffic gap should not
+    /// clear a burn).
+    pub longest_streak: u64,
+    pub first_violation_s: Option<f64>,
+    /// `violation_time_s` over total evaluated window time.
+    pub burn_fraction: f64,
+    /// `"pass"` iff the overall value passes and no window violated.
+    pub verdict: &'static str,
+}
+
+/// Per-window value of a clause; `None` when the window carries no
+/// signal for it.
+fn window_value(slo: &Slo, w: &super::WindowStats) -> Option<f64> {
+    if slo.metric == SloMetric::Drop {
+        if w.generated == 0 {
+            return None;
+        }
+        return Some(w.dropped as f64 / w.generated as f64);
+    }
+    if w.completed == 0 {
+        return None;
+    }
+    Some(match slo.metric {
+        SloMetric::P50 => w.p50_s,
+        SloMetric::P95 => w.p95_s,
+        SloMetric::P99 => w.p99_s,
+        SloMetric::Mean => w.mean_s,
+        SloMetric::Max => w.max_s,
+        SloMetric::Drop => unreachable!("handled above"),
+    })
+}
+
+/// The run-level value of a clause: exact order statistics over the
+/// traced requests when available, else the worst evaluated window.
+fn overall_value(slo: &Slo, data: &RunData) -> f64 {
+    if slo.metric == SloMetric::Drop {
+        return data.drop_rate();
+    }
+    if !data.requests.is_empty() {
+        let mut lats: Vec<f64> = data.requests.iter().map(super::ReqRecord::latency_s).collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let n = lats.len();
+        return match slo.metric {
+            SloMetric::P50 => lats[quantile_idx(n, 0.50)],
+            SloMetric::P95 => lats[quantile_idx(n, 0.95)],
+            SloMetric::P99 => lats[quantile_idx(n, 0.99)],
+            SloMetric::Mean => lats.iter().sum::<f64>() / n as f64,
+            SloMetric::Max => lats[n - 1],
+            SloMetric::Drop => unreachable!(),
+        };
+    }
+    // Metrics-only input: take the worst window (conservative — an SLO
+    // that passes every window passes this too).
+    data.windows
+        .iter()
+        .filter_map(|w| window_value(slo, w))
+        .fold(0.0f64, f64::max)
+}
+
+/// Judge every clause (see [`SloOutcome`]).
+pub fn audit(data: &RunData, slos: &[Slo]) -> Vec<SloOutcome> {
+    slos.iter()
+        .map(|slo| {
+            let overall = overall_value(slo, data);
+            let overall_pass = slo.holds(overall);
+            let mut evaluated = 0u64;
+            let mut violating = 0u64;
+            let mut violation_time_s = 0.0f64;
+            let mut evaluated_time_s = 0.0f64;
+            let mut streak = 0u64;
+            let mut longest_streak = 0u64;
+            let mut first_violation_s = None;
+            for w in &data.windows {
+                let Some(v) = window_value(slo, w) else { continue };
+                evaluated += 1;
+                evaluated_time_s += w.end_s - w.start_s;
+                if slo.holds(v) {
+                    streak = 0;
+                } else {
+                    violating += 1;
+                    violation_time_s += w.end_s - w.start_s;
+                    streak += 1;
+                    longest_streak = longest_streak.max(streak);
+                    if first_violation_s.is_none() {
+                        first_violation_s = Some(w.start_s);
+                    }
+                }
+            }
+            SloOutcome {
+                slo: slo.clone(),
+                overall_value: overall,
+                overall_pass,
+                windows_total: data.windows.len() as u64,
+                windows_evaluated: evaluated,
+                windows_violating: violating,
+                violation_time_s,
+                longest_streak,
+                first_violation_s,
+                burn_fraction: if evaluated_time_s > 0.0 {
+                    violation_time_s / evaluated_time_s
+                } else {
+                    0.0
+                },
+                verdict: if overall_pass && violating == 0 { "pass" } else { "fail" },
+            }
+        })
+        .collect()
+}
+
+impl SloOutcome {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("slo", Json::str(&self.slo.raw)),
+            ("metric", Json::str(self.slo.metric.name())),
+            ("op", Json::str(self.slo.op.symbol())),
+            ("threshold", Json::Num(self.slo.threshold)),
+            ("overall_value", Json::Num(self.overall_value)),
+            ("overall_pass", Json::Bool(self.overall_pass)),
+            ("windows_total", Json::Num(self.windows_total as f64)),
+            ("windows_evaluated", Json::Num(self.windows_evaluated as f64)),
+            ("windows_violating", Json::Num(self.windows_violating as f64)),
+            ("violation_time_s", Json::Num(self.violation_time_s)),
+            ("longest_streak", Json::Num(self.longest_streak as f64)),
+            (
+                "first_violation_s",
+                match self.first_violation_s {
+                    Some(t) => Json::Num(t),
+                    None => Json::Null,
+                },
+            ),
+            ("burn_fraction", Json::Num(self.burn_fraction)),
+            ("verdict", Json::str(self.verdict)),
+        ])
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:<16} {:<4} value={:.6} threshold={:.6} windows={}/{} violating \
+             (burn {:.1}%, longest streak {})",
+            self.slo.raw,
+            self.verdict.to_uppercase(),
+            self.overall_value,
+            self.slo.threshold,
+            self.windows_violating,
+            self.windows_evaluated,
+            100.0 * self.burn_fraction,
+            self.longest_streak,
+        );
+    }
+}
+
+/// What one fault interval cost. `latency_tax_s` is the mean latency of
+/// completions inside the interval minus the calm baseline (negative
+/// when the interval was calmer than baseline). Drops are charged at
+/// window resolution — the finest the metrics plane records — so
+/// `dropped_in_windows` sums windows *overlapping* the interval and is
+/// `None` without a time series.
+#[derive(Clone, Debug)]
+pub struct FaultImpact {
+    /// The opening edge's kind (`site_down`, `backhaul_degrade`,
+    /// `flash_crowd_start`).
+    pub kind: String,
+    pub site: u32,
+    pub start_s: f64,
+    /// Close edge time; the run horizon when the fault never lifted.
+    pub end_s: f64,
+    /// `Failover` reroutes off this site inside the interval.
+    pub reroutes: u64,
+    pub completions_in: u64,
+    pub mean_latency_in_s: f64,
+    pub latency_tax_s: f64,
+    pub dropped_in_windows: Option<u64>,
+}
+
+/// The fault block of an analyze report.
+#[derive(Clone, Debug, Default)]
+pub struct FaultAudit {
+    /// Mean latency of completions outside every fault interval.
+    pub baseline_mean_latency_s: f64,
+    pub baseline_completions: u64,
+    /// Paired intervals, ordered by (start, site, kind).
+    pub intervals: Vec<FaultImpact>,
+}
+
+/// Fault-edge families: the opening kind and its closing kind.
+const FAULT_FAMILIES: [(&str, &str); 3] = [
+    ("site_down", "site_up"),
+    ("backhaul_degrade", "backhaul_restore"),
+    ("flash_crowd_start", "flash_crowd_end"),
+];
+
+/// Pair fault edges into intervals and charge each with its causal
+/// impact (see [`FaultImpact`]).
+pub fn fault_impact(data: &RunData) -> FaultAudit {
+    // Pair open/close edges per (family, site); record order is
+    // time-ordered, so a simple open-slot map suffices.
+    let mut open: BTreeMap<(usize, u32), f64> = BTreeMap::new();
+    let mut intervals: Vec<(usize, u32, f64, f64)> = Vec::new();
+    for f in &data.faults {
+        if let Some(fam) = FAULT_FAMILIES.iter().position(|(start, _)| *start == f.kind) {
+            open.insert((fam, f.site), f.t_s);
+        } else if let Some(fam) = FAULT_FAMILIES.iter().position(|(_, end)| *end == f.kind) {
+            if let Some(start) = open.remove(&(fam, f.site)) {
+                intervals.push((fam, f.site, start, f.t_s));
+            }
+        }
+    }
+    for ((fam, site), start) in open {
+        intervals.push((fam, site, start, data.horizon_s));
+    }
+    intervals.sort_by(|a, b| {
+        a.2.partial_cmp(&b.2)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.1.cmp(&b.1))
+            .then(a.0.cmp(&b.0))
+    });
+
+    // Baseline: completions causally outside every interval.
+    let inside =
+        |t: f64| intervals.iter().any(|&(_, _, s, e)| t >= s && t < e);
+    let mut baseline_sum = 0.0f64;
+    let mut baseline_n = 0u64;
+    for r in &data.requests {
+        if !inside(r.completed_s) {
+            baseline_sum += r.latency_s();
+            baseline_n += 1;
+        }
+    }
+    let baseline_mean = if baseline_n > 0 { baseline_sum / baseline_n as f64 } else { 0.0 };
+
+    let impacts = intervals
+        .iter()
+        .map(|&(fam, site, start, end)| {
+            let mut sum = 0.0f64;
+            let mut n = 0u64;
+            for r in &data.requests {
+                if r.completed_s >= start && r.completed_s < end {
+                    sum += r.latency_s();
+                    n += 1;
+                }
+            }
+            let mean_in = if n > 0 { sum / n as f64 } else { 0.0 };
+            let reroutes = data
+                .failovers
+                .iter()
+                .filter(|fo| fo.from_site == site && fo.t_s >= start && fo.t_s < end)
+                .count() as u64;
+            let dropped_in_windows = if data.windows.is_empty() {
+                None
+            } else {
+                Some(
+                    data.windows
+                        .iter()
+                        .filter(|w| w.start_s < end && w.end_s > start)
+                        .map(|w| w.dropped)
+                        .sum(),
+                )
+            };
+            FaultImpact {
+                kind: FAULT_FAMILIES[fam].0.to_string(),
+                site,
+                start_s: start,
+                end_s: end,
+                reroutes,
+                completions_in: n,
+                mean_latency_in_s: mean_in,
+                latency_tax_s: if n > 0 { mean_in - baseline_mean } else { 0.0 },
+                dropped_in_windows,
+            }
+        })
+        .collect();
+
+    FaultAudit {
+        baseline_mean_latency_s: baseline_mean,
+        baseline_completions: baseline_n,
+        intervals: impacts,
+    }
+}
+
+impl FaultImpact {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(&self.kind)),
+            ("site", Json::Num(self.site as f64)),
+            ("start_s", Json::Num(self.start_s)),
+            ("end_s", Json::Num(self.end_s)),
+            ("reroutes", Json::Num(self.reroutes as f64)),
+            ("completions_in", Json::Num(self.completions_in as f64)),
+            ("mean_latency_in_s", Json::Num(self.mean_latency_in_s)),
+            ("latency_tax_s", Json::Num(self.latency_tax_s)),
+            (
+                "dropped_in_windows",
+                match self.dropped_in_windows {
+                    Some(d) => Json::Num(d as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+impl FaultAudit {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("baseline_mean_latency_s", Json::Num(self.baseline_mean_latency_s)),
+            ("baseline_completions", Json::Num(self.baseline_completions as f64)),
+            ("intervals", Json::Arr(self.intervals.iter().map(FaultImpact::to_json).collect())),
+        ])
+    }
+
+    pub fn print(&self) {
+        if self.intervals.is_empty() {
+            return;
+        }
+        println!(
+            "-- fault impact (baseline mean {:.4}s over {} calm completions) --",
+            self.baseline_mean_latency_s, self.baseline_completions
+        );
+        for i in &self.intervals {
+            println!(
+                "{:<18} site {} [{:.1}s, {:.1}s): {} reroutes, {} completions, \
+                 latency tax {:+.4}s{}",
+                i.kind,
+                i.site,
+                i.start_s,
+                i.end_s,
+                i.reroutes,
+                i.completions_in,
+                i.latency_tax_s,
+                match i.dropped_in_windows {
+                    Some(d) => format!(", {d} dropped in overlapping windows"),
+                    None => String::new(),
+                },
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{FailoverNote, FaultNote, ReqRecord, WindowStats};
+    use super::*;
+
+    fn req(id: u64, t0: f64, lat: f64) -> ReqRecord {
+        let mut shares = [0.0; 9];
+        shares[1] = lat;
+        ReqRecord { req: id, device: 0, issued_s: t0, completed_s: t0 + lat, shares, site: None }
+    }
+
+    #[test]
+    fn grammar_accepts_the_documented_forms() {
+        let s = Slo::parse("p99<2.5s").unwrap();
+        assert_eq!((s.metric, s.op), (SloMetric::P99, SloOp::Lt));
+        assert_eq!(s.threshold, 2.5);
+        assert_eq!(Slo::parse("mean<=250ms").unwrap().threshold, 0.25);
+        assert_eq!(Slo::parse("drop<0.1%").unwrap().threshold, 0.001);
+        assert_eq!(Slo::parse("drop<0.05").unwrap().threshold, 0.05);
+        assert_eq!(Slo::parse(" max < 10 ").unwrap().threshold, 10.0);
+        assert_eq!(Slo::parse("p50>=1").unwrap().op, SloOp::Ge);
+    }
+
+    #[test]
+    fn grammar_rejections_teach_the_grammar() {
+        for bad in ["p42<1", "p99=1", "p99<abc", "drop<5ms", "p99<5%", "p99<-1", "p99<inf"] {
+            let err = Slo::parse(bad).unwrap_err();
+            assert!(err.contains("grammar"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn audit_counts_burn_and_streaks() {
+        let mut d = RunData::default();
+        // Four 10s windows with p99 = 1, 3, 3, 1 against p99<2.5s:
+        // windows 1 and 2 violate (streak 2), 20s of 40s burn.
+        for (i, p99) in [1.0, 3.0, 3.0, 1.0].into_iter().enumerate() {
+            d.windows.push(WindowStats {
+                index: i as u64,
+                start_s: 10.0 * i as f64,
+                end_s: 10.0 * (i + 1) as f64,
+                generated: 10,
+                completed: 10,
+                p50_s: p99,
+                p95_s: p99,
+                p99_s: p99,
+                mean_s: p99,
+                max_s: p99,
+                ..WindowStats::default()
+            });
+        }
+        let out = audit(&d, &[Slo::parse("p99<2.5s").unwrap()]);
+        assert_eq!(out.len(), 1);
+        let o = &out[0];
+        assert_eq!(o.windows_evaluated, 4);
+        assert_eq!(o.windows_violating, 2);
+        assert_eq!(o.longest_streak, 2);
+        assert_eq!(o.first_violation_s, Some(10.0));
+        assert!((o.violation_time_s - 20.0).abs() < 1e-12);
+        assert!((o.burn_fraction - 0.5).abs() < 1e-12);
+        assert_eq!(o.verdict, "fail");
+        // overall (worst window, no requests attached) = 3.0.
+        assert_eq!(o.overall_value, 3.0);
+    }
+
+    #[test]
+    fn overall_uses_exact_request_stats_when_traced() {
+        let mut d = RunData::default();
+        for i in 0..100 {
+            d.requests.push(req(i, i as f64, if i < 99 { 1.0 } else { 9.0 }));
+        }
+        let out = audit(&d, &[Slo::parse("p95<2s").unwrap(), Slo::parse("max<2s").unwrap()]);
+        assert_eq!(out[0].overall_value, 1.0);
+        assert_eq!(out[0].verdict, "pass");
+        assert_eq!(out[1].overall_value, 9.0);
+        assert_eq!(out[1].verdict, "fail");
+    }
+
+    #[test]
+    fn drop_clause_reads_totals() {
+        let mut d = RunData::default();
+        d.generated = Some(1000);
+        d.dropped = Some(5);
+        let out = audit(&d, &[Slo::parse("drop<1%").unwrap()]);
+        assert_eq!(out[0].overall_value, 0.005);
+        assert_eq!(out[0].verdict, "pass");
+    }
+
+    #[test]
+    fn fault_intervals_pair_charge_and_close_at_horizon() {
+        let mut d = RunData::default();
+        d.horizon_s = 100.0;
+        d.faults = vec![
+            FaultNote { t_s: 20.0, kind: "site_down".into(), site: 1, value: 0.0 },
+            FaultNote { t_s: 40.0, kind: "site_up".into(), site: 1, value: 0.0 },
+            FaultNote { t_s: 50.0, kind: "backhaul_degrade".into(), site: 0, value: 0.25 },
+            // never restored → closes at the horizon
+        ];
+        d.failovers = vec![
+            FailoverNote { t_s: 21.0, req: 5, device: 2, from_site: 1 },
+            FailoverNote { t_s: 45.0, req: 9, device: 2, from_site: 1 }, // outside
+        ];
+        // Calm completions at latency 1.0, in-outage completions at 3.0.
+        d.requests.push(req(0, 5.0, 1.0));
+        d.requests.push(req(1, 10.0, 1.0));
+        d.requests.push(req(2, 22.0, 3.0));
+        let audit = fault_impact(&d);
+        assert_eq!(audit.baseline_completions, 2);
+        assert_eq!(audit.baseline_mean_latency_s, 1.0);
+        assert_eq!(audit.intervals.len(), 2);
+        let outage = &audit.intervals[0];
+        assert_eq!((outage.kind.as_str(), outage.site), ("site_down", 1));
+        assert_eq!((outage.start_s, outage.end_s), (20.0, 40.0));
+        assert_eq!(outage.reroutes, 1);
+        assert_eq!(outage.completions_in, 1);
+        assert!((outage.latency_tax_s - 2.0).abs() < 1e-12);
+        assert_eq!(outage.dropped_in_windows, None);
+        let brownout = &audit.intervals[1];
+        assert_eq!((brownout.start_s, brownout.end_s), (50.0, 100.0));
+        assert_eq!(brownout.completions_in, 0);
+        assert_eq!(brownout.latency_tax_s, 0.0);
+    }
+
+    #[test]
+    fn outcome_json_has_no_nan_even_when_empty() {
+        let out = audit(&RunData::default(), &[Slo::parse("p99<1s").unwrap()]);
+        let text = out[0].to_json().to_string_pretty();
+        assert!(!text.contains("NaN"), "{text}");
+        assert_eq!(out[0].verdict, "pass"); // vacuously: no data, 0 < threshold
+    }
+}

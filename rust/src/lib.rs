@@ -44,6 +44,7 @@
 //! | [`serve`], [`coordinator`] | Framed TCP serving stack; live deployments, battery bands, the N-phone fleet |
 //! | [`sim`] | Discrete-event fleet simulator: virtual clock, M/G/c tiers, mobility + edge handover, scenarios |
 //! | [`trace`] | Deterministic per-request span timelines + causal annotations; JSONL / Chrome `trace_event` export |
+//! | [`analyze`] | Trace-plane analytics: critical-path attribution, SLO audits + fault impact, run-vs-run regression diffs |
 //! | [`workload`], [`metrics`], [`figures`], [`bench`] | Arrival processes, histograms/time-series/planner counters, paper exhibits, bench harness |
 //! | [`util`] | Offline substrates: CLI, PRNG, JSON, property testing, thread pool |
 //!
@@ -51,6 +52,7 @@
 //! [DESIGN.md](../DESIGN.md) for the architecture, the offline
 //! substrate policy (§4), and the paper-vs-model validation story.
 
+pub mod analyze;
 pub mod bench;
 pub mod coordinator;
 pub mod device;

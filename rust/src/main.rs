@@ -10,6 +10,8 @@
 //!   fleet      heterogeneous multi-phone deployment sharing one cloud
 //!   simulate   discrete-event fleet simulation (thousands of virtual
 //!              devices, diurnal load, churn — no sockets, no wall time)
+//!   analyze    trace-plane analytics over simulate's exports: stage
+//!              attribution, SLO audit + fault impact, run-vs-run diff
 //!   models     list models available in the artifacts directory
 //!
 //! Every planning subcommand shares the one `--planner <strategy>` flag
@@ -42,7 +44,7 @@ fn main() {
 fn cli() -> Cli {
     Cli::new(
         "smartsplit — CNN split serving between a smartphone and a cloud server\n\
-         usage: smartsplit <optimize|cloud|device|serve|fleet|simulate|models> [flags]",
+         usage: smartsplit <optimize|cloud|device|serve|fleet|simulate|analyze|models> [flags]",
     )
     .opt("model", "alexnet", "CNN model (alexnet|vgg11|vgg13|vgg16|mobilenet_v2)")
     .opt("batch", "1", "hardware batch size of the loaded artifacts")
@@ -71,9 +73,16 @@ fn cli() -> Cli {
     .opt("handover-cost", "0.05", "simulate: fixed control-plane cost per edge handover in seconds (torso-state relay over the old backhaul is charged on top)")
     .opt("fault-plan", "", "simulate: fault-injection schedule file (one `<at_s> <kind> <site> [args]` per line; kinds: site-down, site-up, backhaul-degrade, backhaul-restore, flash-crowd); overrides the scenario's plan")
     .opt("trace-out", "", "simulate: enable per-request tracing and write the timeline here (.jsonl = JSON Lines, otherwise Chrome trace_event JSON for chrome://tracing / Perfetto)")
-    .opt("trace-sample", "1", "simulate: record every Nth request in the trace (1 = all; causal annotations are always recorded)")
+    .opt("trace-sample", "1", "simulate: record every Nth request in the trace (N >= 1; 1 = all; causal annotations are always recorded)")
     .opt("metrics-out", "", "simulate: enable the windowed time-series collector and write its JSON here")
-    .opt("metrics-window", "0", "simulate: time-series window length in virtual seconds (0 = horizon / 60)")
+    .opt("metrics-window", "auto", "simulate: time-series window length in virtual seconds (> 0, or 'auto' = horizon / 60)")
+    .multi("slo", "SLO clause, repeatable: <p50|p95|p99|mean|max><op><seconds>[s|ms] or drop<op><rate>[%], e.g. --slo 'p99<2.5s' --slo 'drop<0.1%' (simulate/analyze)")
+    .opt("report-out", "", "write the versioned analyze report JSON here (simulate/analyze)")
+    .opt("trace", "", "analyze: trace JSONL input (written by simulate --trace-out)")
+    .opt("metrics", "", "analyze: windowed-metrics JSON input (written by simulate --metrics-out)")
+    .opt("baseline", "", "analyze: baseline analyze-report JSON to diff this run against")
+    .opt("diff-out", "", "analyze: write the run-vs-run diff JSON here")
+    .flag("fail-on-regression", "analyze: exit non-zero when the diff against --baseline contains regressions")
     .flag("no-churn", "simulate: disable device churn")
     .flag("no-slowdown", "disable phone-speed emulation")
     .flag("verbose", "log at info level")
@@ -343,16 +352,41 @@ fn run(args: &[String]) -> Result<()> {
             // Observability is opt-in per sink: --trace-out turns the
             // span recorder on, --metrics-out the windowed collector.
             // Neither perturbs decisions or event order (DESIGN.md §12).
+            // Asking for analysis (--slo / --report-out) implies both
+            // sinks: attribution needs spans, SLO windows need the
+            // series (DESIGN.md §14).
             let trace_out = parsed.get("trace-out").to_string();
             let metrics_out = parsed.get("metrics-out").to_string();
-            if !trace_out.is_empty() {
-                sim_cfg.observability.trace_sample_every =
-                    parsed.get_u64("trace-sample").max(1);
+            let report_out = parsed.get("report-out").to_string();
+            let slos = parse_slos(parsed.get_multi("slo"))?;
+            let analysis_requested = !report_out.is_empty() || !slos.is_empty();
+            if !trace_out.is_empty() || analysis_requested {
+                let every = parsed.get_u64("trace-sample");
+                if every == 0 {
+                    bail!(
+                        "--trace-sample 0 is out of range: the recorder keeps every Nth \
+                         request, so N must be >= 1 (1 = every request)"
+                    );
+                }
+                sim_cfg.observability.trace_sample_every = every;
             }
-            if !metrics_out.is_empty() {
-                let w = parsed.get_f64("metrics-window");
-                sim_cfg.observability.window_s =
-                    if w > 0.0 { w } else { sim_cfg.duration_s / 60.0 };
+            if !metrics_out.is_empty() || analysis_requested {
+                sim_cfg.observability.window_s = match parsed.get("metrics-window") {
+                    "auto" => sim_cfg.duration_s / 60.0,
+                    raw => {
+                        let w: f64 = raw
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("--metrics-window {raw:?} is not a number"))?;
+                        if !w.is_finite() || w <= 0.0 {
+                            bail!(
+                                "--metrics-window {raw} is out of range: the window length \
+                                 must be a finite number of virtual seconds > 0 (or 'auto' \
+                                 = horizon / 60)"
+                            );
+                        }
+                        w
+                    }
+                };
             }
             println!(
                 "simulating {} device(s) of {} for {:.0}s virtual (seed {}{}{})...",
@@ -379,21 +413,13 @@ fn run(args: &[String]) -> Result<()> {
             let report = sim::run(&sim_cfg)?;
             report.print();
             if !metrics_out.is_empty() {
-                let ts = report
-                    .series
-                    .as_ref()
+                let doc = report
+                    .metrics_json()
                     .expect("--metrics-out enabled the collector");
-                let doc = smartsplit::util::json::Json::obj(vec![
-                    ("model", smartsplit::util::json::Json::str(&report.model)),
-                    ("seed", smartsplit::util::json::Json::Num(report.seed as f64)),
-                    ("duration_s", smartsplit::util::json::Json::Num(report.duration_s)),
-                    ("generated", smartsplit::util::json::Json::Num(report.generated as f64)),
-                    ("completed", smartsplit::util::json::Json::Num(report.completed as f64)),
-                    ("series", ts.to_json()),
-                ]);
                 std::fs::write(&metrics_out, doc.to_string_pretty())
                     .with_context(|| format!("writing --metrics-out {metrics_out}"))?;
-                println!("wrote windowed metrics ({} windows) to {metrics_out}", ts.windows.len());
+                let n = report.series.as_ref().map_or(0, |ts| ts.windows.len());
+                println!("wrote windowed metrics ({n} windows) to {metrics_out}");
             }
             if !trace_out.is_empty() {
                 let tr = report.trace.as_ref().expect("--trace-out enabled tracing");
@@ -405,10 +431,79 @@ fn run(args: &[String]) -> Result<()> {
                     tr.events.len()
                 );
             }
+            if analysis_requested {
+                use smartsplit::analyze::{AnalyzeReport, RunData};
+                let data = RunData::from_report(&report)?;
+                let analysis = AnalyzeReport::build(&data, &slos);
+                println!();
+                analysis.print();
+                if !report_out.is_empty() {
+                    std::fs::write(&report_out, analysis.to_json().to_string_pretty())
+                        .with_context(|| format!("writing --report-out {report_out}"))?;
+                    println!("wrote analyze report to {report_out}");
+                }
+            }
+        }
+        "analyze" => {
+            use smartsplit::analyze::{diff_reports, AnalyzeReport, RunData};
+            let trace_path = parsed.get("trace");
+            let metrics_path = parsed.get("metrics");
+            if trace_path.is_empty() && metrics_path.is_empty() {
+                bail!(
+                    "analyze needs at least one input: --trace <file.jsonl> (from simulate \
+                     --trace-out) and/or --metrics <file.json> (from simulate --metrics-out)"
+                );
+            }
+            let slos = parse_slos(parsed.get_multi("slo"))?;
+            let data = RunData::from_export_files(
+                (!trace_path.is_empty()).then(|| std::path::Path::new(trace_path)),
+                (!metrics_path.is_empty()).then(|| std::path::Path::new(metrics_path)),
+            )?;
+            let analysis = AnalyzeReport::build(&data, &slos);
+            analysis.print();
+            let doc = analysis.to_json();
+            let report_out = parsed.get("report-out");
+            if !report_out.is_empty() {
+                std::fs::write(report_out, doc.to_string_pretty())
+                    .with_context(|| format!("writing --report-out {report_out}"))?;
+                println!("wrote analyze report to {report_out}");
+            }
+            let baseline = parsed.get("baseline");
+            if !baseline.is_empty() {
+                let text = std::fs::read_to_string(baseline)
+                    .with_context(|| format!("reading --baseline {baseline}"))?;
+                let base = smartsplit::util::json::Json::parse(&text)
+                    .with_context(|| format!("parsing --baseline {baseline}"))?;
+                let d = diff_reports(&base, &doc);
+                println!();
+                d.print();
+                let diff_out = parsed.get("diff-out");
+                if !diff_out.is_empty() {
+                    std::fs::write(diff_out, d.to_json().to_string_pretty())
+                        .with_context(|| format!("writing --diff-out {diff_out}"))?;
+                    println!("wrote diff report to {diff_out}");
+                }
+                if parsed.get_bool("fail-on-regression") && d.regressions > 0 {
+                    bail!(
+                        "{} regression(s) against --baseline {baseline}",
+                        d.regressions
+                    );
+                }
+            }
         }
         other => bail!("unknown command {other:?} (try --help)"),
     }
     Ok(())
+}
+
+/// Parse every repeated `--slo` clause, attaching the offending clause to
+/// the grammar error so the message teaches the fix.
+fn parse_slos(raws: &[String]) -> Result<Vec<smartsplit::analyze::Slo>> {
+    raws.iter()
+        .map(|r| {
+            smartsplit::analyze::Slo::parse(r).map_err(|e| anyhow::anyhow!("--slo {r:?}: {e}"))
+        })
+        .collect()
 }
 
 fn arrival_of(rps: f64) -> Arrival {

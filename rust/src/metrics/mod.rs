@@ -5,7 +5,9 @@
 
 pub mod timeseries;
 
-pub use timeseries::{PoolGauge, TierWindow, TimeSeries, TimeSeriesReport, WindowSummary};
+pub use timeseries::{
+    PoolGauge, TierWindow, TimeSeries, TimeSeriesReport, WindowSummary, METRICS_SCHEMA_VERSION,
+};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;

@@ -17,6 +17,11 @@
 use super::{Histogram, PlannerStats};
 use crate::util::json::Json;
 
+/// Schema version of the `--metrics-out` document
+/// ([`crate::sim::SimReport::metrics_json`] stamps it;
+/// `.github/check_observability.py` and [`crate::analyze`] validate it).
+pub const METRICS_SCHEMA_VERSION: u64 = 1;
+
 /// Boundary snapshot of one M/G/c pool (edge site or cloud), taken by
 /// the caller when a window closes. `busy_time_s` is the pool's
 /// cumulative committed service time — the collector differences
@@ -225,6 +230,25 @@ struct WindowAcc {
     cloud_queue: Histogram,
 }
 
+impl WindowAcc {
+    /// True when nothing was recorded since the last close — used by
+    /// [`TimeSeries::finalize`] to decide whether an exact-boundary
+    /// horizon still owes a (zero-width) flush.
+    fn is_empty(&self) -> bool {
+        self.generated == 0
+            && self.completed == 0
+            && self.dropped == 0
+            && self.resplits == 0
+            && self.handovers == 0
+            && self.migration_replans == 0
+            && self.failovers == 0
+            && self.latency.count() == 0
+            && self.device_queue.count() == 0
+            && self.edge_queue.count() == 0
+            && self.cloud_queue.count() == 0
+    }
+}
+
 /// The collector: record hooks fill the current window; [`TimeSeries::roll`]
 /// closes it (possibly several, when the clock jumps over quiet windows)
 /// whenever the virtual clock crosses a boundary.
@@ -399,7 +423,12 @@ impl TimeSeries {
     }
 
     /// Close out the run at `end_s`: full windows first, then a partial
-    /// tail window iff the horizon lands strictly inside one.
+    /// tail window iff the horizon lands strictly inside one — or, when
+    /// the horizon sits exactly on a boundary but events were recorded
+    /// *at* that boundary after the last roll (roll-before-dispatch puts
+    /// a boundary-stamped event into the next window), a zero-width
+    /// flush window, so per-window counters always partition the run
+    /// totals exactly (`tests/observability.rs` pins the property).
     pub fn finalize(
         mut self,
         end_s: f64,
@@ -408,8 +437,11 @@ impl TimeSeries {
         clouds: &[PoolGauge],
     ) -> TimeSeriesReport {
         self.roll(end_s, planner, edges, clouds);
-        if end_s > self.cur_idx as f64 * self.window_s {
-            self.close_current(end_s, planner, edges, clouds);
+        let tail_start = self.cur_idx as f64 * self.window_s;
+        let planner_delta_pending = planner.cache_hits > self.planner_base.cache_hits
+            || planner.cache_misses > self.planner_base.cache_misses;
+        if end_s > tail_start || !self.cur.is_empty() || planner_delta_pending {
+            self.close_current(end_s.max(tail_start), planner, edges, clouds);
         }
         TimeSeriesReport { window_s: self.window_s, windows: self.closed }
     }
@@ -504,6 +536,35 @@ mod tests {
         let report = ts.finalize(20.0, stats(0, 0), &[], &[]);
         assert_eq!(report.windows.len(), 2, "horizon on a boundary must not add a tail");
         assert_eq!(report.windows[1].end_s, 20.0);
+    }
+
+    #[test]
+    fn boundary_stamped_events_flush_in_a_zero_width_tail() {
+        // Roll-before-dispatch: an event at exactly t=10 rolls window 0
+        // closed, then records into window 1. If the run then drains at
+        // exactly t=10, those events must still be reported — as a
+        // zero-width tail window — or the per-window counters would no
+        // longer partition the run totals.
+        let mut ts = TimeSeries::new(10.0, 0, 0);
+        ts.on_completed(0.5);
+        ts.roll(10.0, stats(0, 0), &[], &[]);
+        ts.on_generated();
+        ts.on_completed(1.0);
+        ts.on_failover();
+        let report = ts.finalize(10.0, stats(2, 1), &[], &[]);
+        assert_eq!(report.windows.len(), 2);
+        let tail = &report.windows[1];
+        assert_eq!((tail.start_s, tail.end_s), (10.0, 10.0));
+        assert_eq!((tail.generated, tail.completed, tail.failovers), (1, 1, 1));
+        assert_eq!((tail.cache_hits, tail.cache_misses), (2, 1));
+        let completed: u64 = report.windows.iter().map(|w| w.completed).sum();
+        assert_eq!(completed, 2, "flush lost completions");
+        // A pure planner delta (no accumulator traffic) also flushes.
+        let mut ts = TimeSeries::new(10.0, 0, 0);
+        ts.roll(10.0, stats(1, 0), &[], &[]);
+        let report = ts.finalize(10.0, stats(4, 1), &[], &[]);
+        assert_eq!(report.windows.len(), 2);
+        assert_eq!((report.windows[1].cache_hits, report.windows[1].cache_misses), (3, 1));
     }
 
     #[test]

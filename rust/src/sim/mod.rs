@@ -39,7 +39,10 @@
 //! [`crate::metrics::TimeSeries`] (`--metrics-out`). Both stamp the
 //! virtual clock only, never change decisions or event order, and cost
 //! nothing when disabled — `tests/observability.rs` pins transparency
-//! and byte-identical exports across thread configs.
+//! and byte-identical exports across thread configs. [`crate::analyze`]
+//! consumes both sinks (in-process via [`SimReport`] or offline from
+//! the exports) for critical-path attribution, SLO audits, and
+//! run-vs-run diffs (DESIGN.md §14).
 
 pub mod cloud;
 pub mod device;
@@ -210,6 +213,30 @@ impl SimReport {
             return f64::INFINITY;
         }
         self.events as f64 / w
+    }
+
+    /// The `--metrics-out` document: run identity + totals + the windowed
+    /// time series, self-describing via `format` / `schema_version` so the
+    /// offline `analyze` reader ([`crate::analyze::RunData`]) can validate
+    /// what it was handed. `None` when the collector was disabled.
+    ///
+    /// Everything here is seed-reproducible (no wall-clock fields), so the
+    /// serialized document is byte-identical across reruns and thread
+    /// configs — the property `tests/observability.rs` pins.
+    pub fn metrics_json(&self) -> Option<crate::util::json::Json> {
+        use crate::util::json::Json;
+        let ts = self.series.as_ref()?;
+        Some(Json::obj(vec![
+            ("format", Json::str("smartsplit-metrics")),
+            ("schema_version", Json::Num(crate::metrics::METRICS_SCHEMA_VERSION as f64)),
+            ("model", Json::str(&self.model)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("duration_s", Json::Num(self.duration_s)),
+            ("generated", Json::Num(self.generated as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            ("series", ts.to_json()),
+        ]))
     }
 
     /// Deterministic one-line digest: everything seed-reproducible, nothing

@@ -19,6 +19,13 @@ use crate::util::json::Json;
 
 use super::{cache_outcome_name, CausalEvent, RequestTrace, Span, TraceReport};
 
+/// Schema version stamped into the JSONL meta header and the Chrome
+/// export's `otherData`. History: 1 = PR 6/PR 7 (`"version"` key);
+/// 2 = the key is named `schema_version` and fault/failover lines are
+/// part of the contract. Readers ([`crate::analyze`],
+/// `.github/check_observability.py`) accept both spellings.
+pub const TRACE_SCHEMA_VERSION: u64 = 2;
+
 fn num(x: f64) -> Json {
     Json::Num(x)
 }
@@ -165,7 +172,7 @@ impl TraceReport {
         Json::obj(vec![
             ("type", Json::str("meta")),
             ("format", Json::str("smartsplit-trace")),
-            ("version", count(1)),
+            ("schema_version", count(TRACE_SCHEMA_VERSION)),
             ("sample_every", count(self.sample_every)),
             ("requests", count(self.requests.len() as u64)),
             ("events", count(self.events.len() as u64)),
@@ -268,6 +275,7 @@ mod tests {
         assert_eq!(lines.len(), 4);
         let meta = Json::parse(lines[0]).expect("meta parses");
         assert_eq!(meta.get_str("type").unwrap(), "meta");
+        assert_eq!(meta.get_usize("schema_version").unwrap(), TRACE_SCHEMA_VERSION as usize);
         assert_eq!(meta.get_usize("requests").unwrap(), 1);
         assert_eq!(meta.get_usize("events").unwrap(), 2);
         assert_eq!(meta.get_usize("unfinished").unwrap(), 0);

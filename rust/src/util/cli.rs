@@ -11,6 +11,9 @@ pub struct Opt {
     pub help: &'static str,
     pub default: Option<&'static str>,
     pub is_bool: bool,
+    /// Repeatable flag: every occurrence is kept, in argv order
+    /// (`--slo a --slo b`); read back with [`Parsed::get_multi`].
+    pub is_multi: bool,
 }
 
 #[derive(Debug, Default)]
@@ -24,6 +27,7 @@ pub struct Cli {
 pub struct Parsed {
     values: BTreeMap<&'static str, String>,
     bools: BTreeMap<&'static str, bool>,
+    multis: BTreeMap<&'static str, Vec<String>>,
     /// Flags the user actually typed (as opposed to declared defaults) —
     /// lets callers distinguish "explicitly asked for the default value"
     /// from "said nothing".
@@ -37,17 +41,25 @@ impl Cli {
     }
 
     pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
-        self.opts.push(Opt { name, help, default: Some(default), is_bool: false });
+        self.opts.push(Opt { name, help, default: Some(default), is_bool: false, is_multi: false });
         self
     }
 
     pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
-        self.opts.push(Opt { name, help, default: None, is_bool: false });
+        self.opts.push(Opt { name, help, default: None, is_bool: false, is_multi: false });
         self
     }
 
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
-        self.opts.push(Opt { name, help, default: None, is_bool: true });
+        self.opts.push(Opt { name, help, default: None, is_bool: true, is_multi: false });
+        self
+    }
+
+    /// A repeatable value flag: `--name a --name b` accumulates
+    /// `["a", "b"]` (argv order); zero occurrences is fine. Read back
+    /// with [`Parsed::get_multi`].
+    pub fn multi(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_bool: false, is_multi: true });
         self
     }
 
@@ -66,10 +78,11 @@ impl Cli {
     pub fn usage(&self) -> String {
         let mut s = format!("{}\n\nOptions:\n", self.about);
         for o in &self.opts {
-            let d = match (&o.default, o.is_bool) {
-                (Some(d), _) => format!(" [default: {d}]"),
-                (None, true) => String::new(),
-                (None, false) => " (required)".into(),
+            let d = match (&o.default, o.is_bool, o.is_multi) {
+                (Some(d), _, _) => format!(" [default: {d}]"),
+                (None, _, true) => " (repeatable)".into(),
+                (None, true, _) => String::new(),
+                (None, false, _) => " (required)".into(),
             };
             s.push_str(&format!("  --{:<22} {}{}\n", o.name, o.help, d));
         }
@@ -83,6 +96,7 @@ impl Cli {
         let mut p = Parsed {
             values: BTreeMap::new(),
             bools: BTreeMap::new(),
+            multis: BTreeMap::new(),
             provided: std::collections::BTreeSet::new(),
             positionals: Vec::new(),
         };
@@ -92,6 +106,9 @@ impl Cli {
             }
             if o.is_bool {
                 p.bools.insert(o.name, false);
+            }
+            if o.is_multi {
+                p.multis.insert(o.name, Vec::new());
             }
         }
         let mut i = 0;
@@ -123,7 +140,11 @@ impl Cli {
                                 .ok_or_else(|| format!("--{name} needs a value"))?
                         }
                     };
-                    p.values.insert(opt.name, v);
+                    if opt.is_multi {
+                        p.multis.entry(opt.name).or_default().push(v);
+                    } else {
+                        p.values.insert(opt.name, v);
+                    }
                 }
             } else {
                 p.positionals.push(a.clone());
@@ -131,7 +152,7 @@ impl Cli {
             i += 1;
         }
         for o in &self.opts {
-            if !o.is_bool && !p.values.contains_key(o.name) {
+            if !o.is_bool && !o.is_multi && !p.values.contains_key(o.name) {
                 return Err(format!("missing required --{}\n\n{}", o.name, self.usage()));
             }
         }
@@ -204,6 +225,16 @@ impl Parsed {
             .parse()
             .unwrap_or_else(|_| panic!("--{name} expects a duration like 90, 90s, 10m or 2h, got {v:?}"));
         n * mult
+    }
+
+    /// Every occurrence of a repeatable flag (see [`Cli::multi`]), in
+    /// argv order; empty when the user never passed it.
+    pub fn get_multi(&self, name: &str) -> &[String] {
+        self.multis
+            .iter()
+            .find(|(k, _)| **k == name)
+            .map(|(_, v)| v.as_slice())
+            .unwrap_or_else(|| panic!("multi flag {name} not declared"))
     }
 
     /// Comma-separated list.
@@ -291,6 +322,20 @@ mod tests {
         assert_eq!(p.planner(), Ok(crate::planner::Strategy::Topsis));
         let err = c.parse(&argv(&["--planner", "nope"])).unwrap().planner().unwrap_err();
         assert!(err.contains("SmartSplit") && err.contains("EpsilonConstrained"));
+    }
+
+    #[test]
+    fn multi_flags_accumulate_in_argv_order() {
+        let c = Cli::new("t").multi("slo", "an SLO clause");
+        let p = c.parse(&argv(&["--slo", "p99<2.5s", "--slo=drop<0.1%"])).unwrap();
+        assert_eq!(p.get_multi("slo"), ["p99<2.5s", "drop<0.1%"]);
+        assert!(p.provided("slo"));
+        // Zero occurrences is fine — multi flags are never required.
+        let p = c.parse(&[]).unwrap();
+        assert!(p.get_multi("slo").is_empty());
+        assert!(!p.provided("slo"));
+        // And the help line marks repeatability.
+        assert!(c.usage().contains("(repeatable)"));
     }
 
     #[test]

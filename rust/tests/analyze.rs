@@ -1,0 +1,144 @@
+//! Analyze-plane integration: (a) per-request stage attribution
+//! *partitions* end-to-end latency — the nine shares re-fold to
+//! `completed_s - issued_s` bit-for-bit in the mobile city (handover
+//! relays in flight) and in the faulty city (reroutes in flight);
+//! (b) the assembled analyze report is byte-identical across thread
+//! configurations and reruns; (c) a run diffed against itself is
+//! exactly empty; (d) analysing the serialized exports offline
+//! reproduces the in-process analysis byte-for-byte, so CI gating on
+//! files and tests gating on live reports agree by construction.
+
+use smartsplit::analyze::{diff_reports, AnalyzeReport, RunData, Slo};
+use smartsplit::sim::{self, ObservabilityConfig};
+
+/// A representative SLO mix: two that comfortably hold, one latency
+/// bound tight enough to exercise the violation path on these runs.
+fn slos() -> Vec<Slo> {
+    ["p99<30s", "p50<0.2s", "drop<50%"]
+        .iter()
+        .map(|s| Slo::parse(s).expect("slo grammar"))
+        .collect()
+}
+
+fn assert_exact_partition(data: &RunData) {
+    assert!(!data.requests.is_empty(), "no requests to attribute");
+    for rec in &data.requests {
+        assert!(rec.shares.iter().all(|d| d.is_finite()));
+        // The partition property: re-folding the nine stage shares in
+        // pipeline order reproduces the recorded latency exactly — f64
+        // bit equality, no epsilon (DESIGN.md §14).
+        assert_eq!(
+            rec.share_sum().to_bits(),
+            rec.latency_s().to_bits(),
+            "req {}: shares {:?} do not re-fold to latency {} bit-for-bit",
+            rec.req,
+            rec.shares,
+            rec.latency_s()
+        );
+    }
+}
+
+#[test]
+fn stage_shares_partition_latency_exactly_in_the_mobile_city() {
+    let mut cfg = sim::city_mobile("alexnet", 400, 3, 120.0, 9);
+    cfg.observability = ObservabilityConfig::full(12.0);
+    let r = sim::run(&cfg).expect("mobile run");
+    assert!(r.handovers > 0, "mobile city exercised no handovers");
+    let data = RunData::from_report(&r).expect("analysis inputs");
+    // sample=1: one record per completion, even through relays.
+    assert_eq!(data.requests.len() as u64, r.completed);
+    assert_exact_partition(&data);
+}
+
+#[test]
+fn stage_shares_partition_latency_exactly_under_faults() {
+    let mut cfg = sim::city_faulty("alexnet", 500, 3, 120.0, 7);
+    cfg.observability = ObservabilityConfig::full(12.0);
+    let r = sim::run(&cfg).expect("faulty run");
+    assert!(r.fault_events > 0, "faulty city fired no faults");
+    let data = RunData::from_report(&r).expect("analysis inputs");
+    assert_eq!(data.requests.len() as u64, r.completed);
+    // Rerouted requests still tile (the reroute re-issues downstream
+    // stages on the fallback path; the recorder mirrors the engine).
+    assert_exact_partition(&data);
+
+    // The fault audit pairs the scenario's annotations into closed
+    // intervals and charges in-interval impact.
+    assert!(!data.faults.is_empty(), "no fault annotations in the trace");
+    let audit = smartsplit::analyze::slo::fault_impact(&data);
+    assert!(
+        audit.intervals.len() >= 3,
+        "only {} fault interval(s) from the city-faulty schedule",
+        audit.intervals.len()
+    );
+    for iv in &audit.intervals {
+        assert!(iv.end_s >= iv.start_s, "{}: interval runs backwards", iv.kind);
+        assert!(iv.end_s <= data.horizon_s, "{}: interval past the horizon", iv.kind);
+    }
+    if r.requests_rerouted > 0 {
+        let charged: u64 = audit.intervals.iter().map(|iv| iv.reroutes).sum();
+        assert!(charged > 0, "reroutes happened but no interval charged any");
+    }
+}
+
+/// One analyze-report document for a config (pretty JSON string).
+fn report_doc(cfg: &sim::SimConfig) -> String {
+    let r = sim::run(cfg).expect("sim run");
+    let data = RunData::from_report(&r).expect("analysis inputs");
+    AnalyzeReport::build(&data, &slos()).to_json().to_string_pretty()
+}
+
+#[test]
+fn analyze_reports_are_byte_identical_across_thread_configs_and_reruns() {
+    let mut cfg = sim::city_faulty("alexnet", 400, 3, 90.0, 7);
+    cfg.observability = ObservabilityConfig::full(15.0);
+    cfg.planner_perf.parallel = true;
+    let mut sequential = cfg.clone();
+    sequential.planner_perf.parallel = false;
+
+    let a = report_doc(&cfg);
+    let b = report_doc(&sequential);
+    let c = report_doc(&cfg);
+    assert!(a.len() > 500, "trivial analyze report");
+    assert_eq!(a, b, "analyze report differs across thread configs");
+    assert_eq!(a, c, "analyze report differs across reruns");
+}
+
+#[test]
+fn self_diff_of_a_real_run_is_exactly_empty() {
+    let mut cfg = sim::city_mobile("alexnet", 400, 3, 120.0, 9);
+    cfg.observability = ObservabilityConfig::full(12.0);
+    let r = sim::run(&cfg).expect("mobile run");
+    let data = RunData::from_report(&r).expect("analysis inputs");
+    let doc = AnalyzeReport::build(&data, &slos()).to_json();
+    let d = diff_reports(&doc, &doc);
+    assert!(
+        d.is_empty(),
+        "self-diff produced {} change(s): first = {:?}",
+        d.changes.len(),
+        d.changes.first().map(|c| &c.path)
+    );
+    assert_eq!(d.regressions, 0);
+    assert_eq!(d.improvements, 0);
+}
+
+#[test]
+fn offline_exports_reproduce_the_in_process_analysis_byte_for_byte() {
+    let mut cfg = sim::city_faulty("alexnet", 400, 3, 90.0, 7);
+    cfg.observability = ObservabilityConfig::full(15.0);
+    let r = sim::run(&cfg).expect("faulty run");
+    let inproc = RunData::from_report(&r).expect("in-process inputs");
+
+    // The same two documents `simulate --trace-out/--metrics-out` write.
+    let jsonl = r.trace.as_ref().expect("tracing on").to_jsonl();
+    let metrics = r.metrics_json().expect("series on").to_string_pretty();
+    let offline =
+        RunData::from_export_strs(Some(&jsonl), Some(&metrics)).expect("offline inputs");
+
+    assert_eq!(offline.requests.len(), inproc.requests.len());
+    assert_exact_partition(&offline);
+    let sl = slos();
+    let a = AnalyzeReport::build(&inproc, &sl).to_json().to_string_pretty();
+    let b = AnalyzeReport::build(&offline, &sl).to_json().to_string_pretty();
+    assert_eq!(a, b, "offline export round-trip changed the analysis");
+}

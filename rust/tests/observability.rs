@@ -314,6 +314,67 @@ fn windows_partition_the_run() {
     assert_eq!(ts.hit_rate_curve().len(), ts.windows.len());
 }
 
+/// Property form of the partition invariant: whatever the window
+/// length — commensurate with the horizon or not — the per-window
+/// counters sum to the run totals and the series tiles `[0, sim_end]`
+/// contiguously. The drained clock usually lands strictly inside the
+/// final window, which is exactly the partial tail `finalize` must
+/// flush (the zero-width boundary case is pinned by a unit test in
+/// `metrics::timeseries`).
+#[test]
+fn windows_partition_the_run_for_any_window_length() {
+    use smartsplit::prop_assert;
+    use smartsplit::util::prop::run_prop;
+    run_prop("windowed counters partition run totals", 6, |g| {
+        let devices = g.usize_in(60, 150);
+        let duration = *g.choice(&[30.0, 45.0, 60.0]);
+        let seed = g.usize_in(1, 9999) as u64;
+        let mut cfg = sim::city_scale_tiered("alexnet", devices, 2, duration, seed);
+        cfg.observability.window_s = if g.bool() {
+            duration / (g.usize_in(2, 6) as f64)
+        } else {
+            g.f64_in(3.0, 25.0)
+        };
+        let r = sim::run(&cfg).map_err(|e| format!("sim failed: {e}"))?;
+        let ts = r.series.as_ref().ok_or_else(|| "series missing".to_string())?;
+        prop_assert!(!ts.windows.is_empty(), "no windows emitted");
+        prop_assert!(
+            ts.windows[0].start_s == 0.0,
+            "first window starts at {}",
+            ts.windows[0].start_s
+        );
+        for w in ts.windows.windows(2) {
+            prop_assert!(
+                w[0].end_s == w[1].start_s && w[0].index + 1 == w[1].index,
+                "window gap/reorder at {}",
+                w[0].end_s
+            );
+        }
+        let last_end = ts.windows.last().unwrap().end_s;
+        prop_assert!(
+            last_end == r.sim_end_s,
+            "series ends at {last_end} but the clock drained at {}",
+            r.sim_end_s
+        );
+        let sum = |f: fn(&smartsplit::metrics::WindowSummary) -> u64| -> u64 {
+            ts.windows.iter().map(f).sum()
+        };
+        for (name, got, want) in [
+            ("generated", sum(|w| w.generated), r.generated),
+            ("completed", sum(|w| w.completed), r.completed),
+            ("dropped", sum(|w| w.dropped), r.dropped),
+            ("resplits", sum(|w| w.resplits), r.resplits),
+            ("handovers", sum(|w| w.handovers), r.handovers),
+            ("cache_hits", sum(|w| w.cache_hits), r.planner.cache_hits),
+            ("cache_misses", sum(|w| w.cache_misses), r.planner.cache_misses),
+            ("latency.count", sum(|w| w.latency.count), r.completed),
+        ] {
+            prop_assert!(got == want, "{name}: windows sum to {got}, run total {want}");
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn trace_sampling_records_every_nth_request() {
     let mut cfg = sim::city_scale_tiered("alexnet", 300, 3, 90.0, 7);
