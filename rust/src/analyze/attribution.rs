@@ -128,7 +128,11 @@ fn slice_row(data: &RunData, key: &str, members: &[usize]) -> SliceRow {
     row.latency.p50_s = r50.latency_s();
     row.latency.p95_s = r95.latency_s();
     row.latency.p99_s = r99.latency_s();
-    row.latency.max_s = data.requests[*sorted.last().unwrap()].latency_s();
+    // `members` is non-empty here (the n == 0 early return above), but
+    // detlint rule R1 wants the guard structural, not positional.
+    if let Some(&last) = sorted.last() {
+        row.latency.max_s = data.requests[last].latency_s();
+    }
     for i in 0..9 {
         row.stages[i].share_of_total =
             if lat_total > 0.0 { row.stages[i].total_s / lat_total } else { 0.0 };

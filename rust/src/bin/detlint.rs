@@ -1,0 +1,56 @@
+//! `detlint` — run the determinism & robustness static-analysis pass
+//! (DESIGN.md §15) over the crate sources and exit nonzero on any
+//! unsuppressed finding.
+//!
+//! ```text
+//! cargo run --bin detlint              # scan rust/src/** (the CI gate)
+//! cargo run --bin detlint -- --rules   # print the rule table
+//! cargo run --bin detlint -- DIR ...   # scan explicit roots instead
+//! ```
+//!
+//! The report is deterministic and stable-sorted, so two runs over the
+//! same tree are byte-identical — the lint output honors the same
+//! contract it enforces.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use smartsplit::lint;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--rules") {
+        print!("{}", lint::rules_table());
+        return ExitCode::SUCCESS;
+    }
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!("usage: detlint [--rules] [DIR ...]");
+        println!("scans DIR (default: this crate's src/) for determinism");
+        println!("and robustness violations; see --rules for the rule set");
+        return ExitCode::SUCCESS;
+    }
+
+    let roots: Vec<PathBuf> = if args.is_empty() {
+        vec![PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src")]
+    } else {
+        args.iter().map(PathBuf::from).collect()
+    };
+
+    let mut report = lint::LintReport::default();
+    for root in &roots {
+        match lint::scan_tree(root) {
+            Ok(rep) => report.merge(rep),
+            Err(e) => {
+                eprintln!("detlint: cannot scan {}: {e}", root.display());
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    print!("{}", report.render());
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -127,7 +127,7 @@ impl Fleet {
     pub fn start(cfg: FleetConfig) -> Result<Fleet> {
         anyhow::ensure!(!cfg.members.is_empty(), "empty fleet");
         let cloud = CloudServer::bind("127.0.0.1:0", cfg.artifacts_dir.clone())?;
-        let accept_handle = cloud.spawn();
+        let accept_handle = cloud.spawn()?;
         let spec = zoo::by_name(&cfg.model).context("unknown model")?;
         let profile = Arc::new(spec.analyze(cfg.batch));
         for m in &cfg.members {
@@ -233,6 +233,7 @@ impl Fleet {
         let latency = Arc::new(Histogram::new());
         let meter = Arc::new(ThroughputMeter::new());
         let errors = Arc::new(AtomicU64::new(0));
+        // detlint:allow(D1): live fleet pacing against real sockets; the sim path never runs this
         let start = Instant::now();
         let shape = self.devices[0].device.input_shape().to_vec();
         let (c, hw) = (shape[1], shape[2]);

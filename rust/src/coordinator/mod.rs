@@ -173,7 +173,7 @@ impl Deployment {
 
     pub fn start_with_split(cfg: Config, split: SplitDecision) -> Result<Deployment> {
         let cloud = CloudServer::bind("127.0.0.1:0", cfg.artifacts_dir.clone())?;
-        let accept_handle = cloud.spawn();
+        let accept_handle = cloud.spawn()?;
         let link = Arc::new(Link::new(cfg.bandwidth_mbps));
         let mut device = DeviceClient::connect(
             &cloud.addr.to_string(),
@@ -208,9 +208,10 @@ impl Deployment {
         requests: &[Request],
         trace: Option<&BandwidthTrace>,
     ) -> Result<ServeReport> {
-        let router = Router::start(Arc::clone(&self.device), self.cfg.router.clone());
+        let router = Router::start(Arc::clone(&self.device), self.cfg.router.clone())?;
         let latency = Histogram::new();
         let meter = ThroughputMeter::new();
+        // detlint:allow(D1): live serving pacing against real sockets; the sim path never runs this
         let start = Instant::now();
         let mut errors = 0u64;
         let shape = self.device.input_shape().to_vec();

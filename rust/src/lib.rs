@@ -47,6 +47,7 @@
 //! | [`analyze`] | Trace-plane analytics: critical-path attribution, SLO audits + fault impact, run-vs-run regression diffs |
 //! | [`workload`], [`metrics`], [`figures`], [`bench`] | Arrival processes, histograms/time-series/planner counters, paper exhibits, bench harness |
 //! | [`util`] | Offline substrates: CLI, PRNG, JSON, property testing, thread pool |
+//! | [`lint`] | `detlint`: the in-tree determinism/robustness static-analysis pass (DESIGN.md §15) |
 //!
 //! See the repo-root `README.md` for the quickstart and
 //! [DESIGN.md](../DESIGN.md) for the architecture, the offline
@@ -58,6 +59,7 @@ pub mod coordinator;
 pub mod device;
 pub mod edge;
 pub mod figures;
+pub mod lint;
 pub mod metrics;
 pub mod models;
 pub mod netsim;

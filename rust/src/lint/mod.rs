@@ -1,0 +1,941 @@
+//! `detlint` — the in-tree determinism & robustness static-analysis pass
+//! (DESIGN.md §15).
+//!
+//! Every parity claim this repo makes — byte-identical decision streams
+//! across thread configs, zero-edge/zero-fault byte-for-byte replays,
+//! identical exports across reruns — rests on a determinism contract
+//! that used to be enforced only by convention. This module makes the
+//! contract machine-checked: a pure-std token/line scanner (no new
+//! dependencies — the vendored-offline build stays self-contained) that
+//! walks `rust/src/**` and reports violations of five named rules:
+//!
+//! | Rule | Contract |
+//! |---|---|
+//! | `D1` | No wall clock (`Instant::now` / `SystemTime::now`) outside the wall-side allowlist ([`WALL_SIDE`]) — the sim/planner/trace/analyze decision plane uses the virtual clock only |
+//! | `D2` | No OS or thread-local randomness (`thread_rng`, `rand::random`, `RandomState`) anywhere — all RNG flows from seeded [`crate::util::rng`] streams |
+//! | `D3` | No default-hasher `HashMap`/`HashSet` in the export plane ([`EXPORT_PLANE`]) — iteration order would leak into exports; use `BTreeMap`/`BTreeSet` or sort before emitting |
+//! | `D4` | No `Ordering::Relaxed` atomics in the export plane — counters that appear in serialized reports must not be torn across threads |
+//! | `R1` | No `unwrap()`/`expect()` on the serving/export paths ([`ROBUST_PLANE`]) — protocol and file I/O must fail with errors, not panics |
+//!
+//! The scanner strips comments and string/char-literal contents before
+//! matching (a rule named in a doc comment never trips), skips
+//! `#[cfg(test)]` regions for the rules where test code is exempt, and
+//! is deliberately token-level: it cannot resolve types, so the D3/D4
+//! scopes are *module* approximations of "writes an export" — precise
+//! enough for this tree, and auditable when they are not.
+//!
+//! **Suppression.** A violation is suppressible only by an inline
+//! annotation — a plain (non-doc) `//` comment of the form
+//! `detlint:allow(<rule>): <justification>` — on the same line as the
+//! violation, or on a comment-only line directly above it. The
+//! justification after the `:` is mandatory, the rule id must be real,
+//! and an allow that suppresses nothing is itself a finding (rule
+//! `ALLOW`) — so every exemption stays visible, justified, and alive.
+//! The tool counts and prints all suppressions. Annotations are only
+//! recognized in plain comments: the same marker inside a string
+//! literal or a doc comment (like the ones in this header) is inert.
+//!
+//! Output is a deterministic, stable-sorted report (`file:line`, rule
+//! id, offending token, fix hint); the `detlint` binary exits nonzero
+//! on any unsuppressed finding, and the CI `lint` job gates on it.
+//! `tests/detlint.rs` proves each rule fires on its fixture corpus
+//! (`tests/lint_fixtures/`) and that the repository itself lints clean.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Rule id reserved for suppression-hygiene problems: malformed
+/// allow syntax, unknown rule ids, missing justifications, and allows
+/// that suppress nothing.
+pub const ALLOW_RULE: &str = "ALLOW";
+
+/// Wall-side modules where reading the wall clock is the point: the
+/// live TCP serving stack, the real-socket link shaper, the bench
+/// harness, and the PJRT runtime. Everything else is the decision
+/// plane and must use the virtual clock.
+pub const WALL_SIDE: &[&str] = &["serve/", "netsim/", "bench/", "runtime/", "benches/"];
+
+/// Export-plane modules: anything here feeds a serialized report, an
+/// export file, or a decision stream, so iteration order and relaxed
+/// counter reads are part of the byte-identity contract.
+pub const EXPORT_PLANE: &[&str] = &["trace/", "analyze/", "metrics/", "figures/", "bench/"];
+
+/// Panic-free plane: protocol and file-I/O paths that must return
+/// errors with context instead of unwinding under live traffic.
+pub const ROBUST_PLANE: &[&str] = &["serve/", "analyze/", "trace/export.rs"];
+
+/// Where in the tree a rule applies, matched on the path relative to
+/// the scan root (forward slashes; a full file name is a valid prefix).
+#[derive(Clone, Copy, Debug)]
+pub enum Scope {
+    /// Applies to every scanned file.
+    Everywhere,
+    /// Applies only outside these path prefixes (the allowlist).
+    Outside(&'static [&'static str]),
+    /// Applies only within these path prefixes.
+    Within(&'static [&'static str]),
+}
+
+impl Scope {
+    fn applies(&self, rel: &str) -> bool {
+        match self {
+            Scope::Everywhere => true,
+            Scope::Outside(prefixes) => !prefixes.iter().any(|p| rel.starts_with(p)),
+            Scope::Within(prefixes) => prefixes.iter().any(|p| rel.starts_with(p)),
+        }
+    }
+
+    /// Human-readable scope description for the `--rules` table.
+    pub fn describe(&self) -> String {
+        match self {
+            Scope::Everywhere => "everywhere".to_string(),
+            Scope::Outside(prefixes) => format!("outside {}", prefixes.join(", ")),
+            Scope::Within(prefixes) => format!("within {}", prefixes.join(", ")),
+        }
+    }
+}
+
+/// One named rule of the determinism/robustness contract.
+#[derive(Clone, Copy, Debug)]
+pub struct Rule {
+    /// Stable id (`D1`..`D4`, `R1`) — what an allow annotation names.
+    pub id: &'static str,
+    /// One-line statement of the contract clause.
+    pub title: &'static str,
+    /// Source tokens whose presence (at identifier boundaries, outside
+    /// comments/strings) constitutes a finding.
+    pub tokens: &'static [&'static str],
+    /// Where the rule applies.
+    pub scope: Scope,
+    /// Whether `#[cfg(test)]` regions are exempt.
+    pub skip_test_code: bool,
+    /// What to do instead.
+    pub hint: &'static str,
+}
+
+/// The enforced rule set, in report order.
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "D1",
+        title: "no wall clock on the decision plane",
+        tokens: &["Instant::now", "SystemTime::now"],
+        scope: Scope::Outside(WALL_SIDE),
+        skip_test_code: true,
+        hint: "use the sim's virtual clock; wall time belongs to serve/, netsim/, bench/, runtime/",
+    },
+    Rule {
+        id: "D2",
+        title: "no OS or thread-local randomness",
+        tokens: &["thread_rng", "rand::random", "RandomState"],
+        scope: Scope::Everywhere,
+        skip_test_code: false,
+        hint: "derive a seeded util::rng::Xoshiro256 stream so every run replays",
+    },
+    Rule {
+        id: "D3",
+        title: "no default-hasher map in the export plane",
+        tokens: &["HashMap", "HashSet"],
+        scope: Scope::Within(EXPORT_PLANE),
+        skip_test_code: true,
+        hint: "iteration order is nondeterministic; use BTreeMap/BTreeSet or sort before emitting",
+    },
+    Rule {
+        id: "D4",
+        title: "no relaxed atomics in the export plane",
+        tokens: &["Ordering::Relaxed"],
+        scope: Scope::Within(EXPORT_PLANE),
+        skip_test_code: true,
+        hint: "counters that reach serialized reports use Ordering::SeqCst",
+    },
+    Rule {
+        id: "R1",
+        title: "no panics on protocol or export I/O paths",
+        tokens: &[".unwrap()", ".expect("],
+        scope: Scope::Within(ROBUST_PLANE),
+        skip_test_code: true,
+        hint: "return an error with context (anyhow::Context); serving paths must not unwind",
+    },
+];
+
+/// Look up a rule by id.
+pub fn rule_by_id(id: &str) -> Option<&'static Rule> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// One unsuppressed violation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Path as shown in the report (scan root joined with the relative
+    /// path, so `file:line` is clickable from the repo).
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule id (`D1`.. / `R1` / [`ALLOW_RULE`]).
+    pub rule: &'static str,
+    /// The offending token (or, for `ALLOW`, the problem description).
+    pub token: String,
+    /// Fix hint.
+    pub hint: String,
+}
+
+/// One counted allow exemption that suppressed a finding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Suppression {
+    /// Path as shown in the report.
+    pub path: String,
+    /// 1-based line of the suppressed finding.
+    pub line: usize,
+    /// Rule id the allow names.
+    pub rule: String,
+    /// The mandatory inline justification.
+    pub justification: String,
+}
+
+/// Result of scanning one file or a whole tree: unsuppressed findings
+/// plus the audited exemption list, both stable-sorted.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub suppressed: Vec<Suppression>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// True when the tree honors the contract (no unsuppressed
+    /// findings; counted exemptions are allowed).
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    fn sort(&mut self) {
+        self.findings.sort_by(|a, b| {
+            (&a.path, a.line, a.rule, &a.token).cmp(&(&b.path, b.line, b.rule, &b.token))
+        });
+        self.suppressed
+            .sort_by(|a, b| (&a.path, a.line, &a.rule).cmp(&(&b.path, b.line, &b.rule)));
+    }
+
+    /// Fold another report in, keeping the merged report stable-sorted.
+    pub fn merge(&mut self, other: LintReport) {
+        self.findings.extend(other.findings);
+        self.suppressed.extend(other.suppressed);
+        self.files_scanned += other.files_scanned;
+        self.sort();
+    }
+
+    /// Deterministic human-readable report: findings first (stable
+    /// order), then the suppression audit, then the summary line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "{}:{}: {} `{}` — {}\n",
+                f.path, f.line, f.rule, f.token, f.hint
+            ));
+        }
+        if !self.suppressed.is_empty() {
+            out.push_str("suppressions (detlint allow):\n");
+            for s in &self.suppressed {
+                out.push_str(&format!(
+                    "  {}:{}: {} — {}\n",
+                    s.path, s.line, s.rule, s.justification
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "detlint: {} file(s) scanned, {} finding(s), {} suppressed\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.suppressed.len()
+        ));
+        out
+    }
+}
+
+/// The `--rules` table: id, scope, contract, hint.
+pub fn rules_table() -> String {
+    let mut out = format!(
+        "detlint rules (suppress with a `{ALLOW_MARKER}(<id>): <justification>` comment):\n"
+    );
+    for r in RULES {
+        out.push_str(&format!(
+            "  {}  {} [{}]\n      fix: {}\n",
+            r.id,
+            r.title,
+            r.scope.describe(),
+            r.hint
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Source splitting: one channel with comments and literal contents blanked
+// (token matching), one with only plain-comment text kept (allow parsing).
+// Both preserve the line structure exactly.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq)]
+enum StripState {
+    Code,
+    /// `is_doc` distinguishes `///` and `//!` from plain `//`.
+    LineComment { is_doc: bool },
+    /// Nesting depth plus the doc-ness of the outermost opener.
+    BlockComment { depth: u32, is_doc: bool },
+    Str,
+    RawStr { hashes: u32 },
+    CharLit,
+}
+
+/// Source split into matching channels with identical line structure.
+struct Channels {
+    /// Comments and string/char contents blanked to spaces.
+    code: String,
+    /// Only plain (non-doc) comment text kept; everything else blanked.
+    comments: String,
+}
+
+impl Channels {
+    fn push(&mut self, c: char, as_code: bool, as_comment: bool) {
+        self.code.push(if as_code { c } else { ' ' });
+        self.comments.push(if as_comment { c } else { ' ' });
+    }
+
+    fn newline(&mut self) {
+        self.code.push('\n');
+        self.comments.push('\n');
+    }
+}
+
+fn at(chars: &[char], i: usize) -> char {
+    chars.get(i).copied().unwrap_or('\0')
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Split source into the code and plain-comment channels. Handles
+/// nested block comments, escapes, raw strings (and byte variants),
+/// and the char-literal/lifetime ambiguity.
+fn split_channels(src: &str) -> Channels {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Channels {
+        code: String::with_capacity(src.len()),
+        comments: String::with_capacity(src.len()),
+    };
+    let mut state = StripState::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(state, StripState::LineComment { .. }) {
+                state = StripState::Code;
+            }
+            out.newline();
+            i += 1;
+            continue;
+        }
+        match state {
+            StripState::Code => {
+                if c == '/' && at(&chars, i + 1) == '/' {
+                    let next = at(&chars, i + 2);
+                    let is_doc = next == '/' || next == '!';
+                    state = StripState::LineComment { is_doc };
+                    out.push(' ', false, false);
+                    out.push(' ', false, false);
+                    i += 2;
+                } else if c == '/' && at(&chars, i + 1) == '*' {
+                    let next = at(&chars, i + 2);
+                    let is_doc = next == '!' || (next == '*' && at(&chars, i + 3) != '/');
+                    state = StripState::BlockComment { depth: 1, is_doc };
+                    out.push(' ', false, false);
+                    out.push(' ', false, false);
+                    i += 2;
+                } else if c == '"' {
+                    state = StripState::Str;
+                    out.push(' ', false, false);
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && (i == 0 || !is_ident_char(at(&chars, i - 1))) {
+                    // Possible raw/byte string opener: b" r" br" r#" br##" …
+                    let mut j = i;
+                    if at(&chars, j) == 'b' {
+                        j += 1;
+                    }
+                    let raw = at(&chars, j) == 'r';
+                    if raw {
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while raw && at(&chars, j) == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if at(&chars, j) == '"' && (raw || c == 'b') {
+                        for _ in i..=j {
+                            out.push(' ', false, false);
+                        }
+                        i = j + 1;
+                        state = if raw {
+                            StripState::RawStr { hashes }
+                        } else {
+                            StripState::Str
+                        };
+                    } else {
+                        out.push(c, true, false);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime: a backslash or a closing
+                    // quote two chars on means literal; otherwise it is
+                    // a lifetime and stays in the code channel.
+                    let next = at(&chars, i + 1);
+                    let is_char = next == '\\' || (next != '\0' && at(&chars, i + 2) == '\'');
+                    if is_char {
+                        state = StripState::CharLit;
+                        out.push(' ', false, false);
+                        i += 1;
+                    } else {
+                        out.push(c, true, false);
+                        i += 1;
+                    }
+                } else {
+                    out.push(c, true, false);
+                    i += 1;
+                }
+            }
+            StripState::LineComment { is_doc } => {
+                out.push(c, false, !is_doc);
+                i += 1;
+            }
+            StripState::BlockComment { depth, is_doc } => {
+                if c == '*' && at(&chars, i + 1) == '/' {
+                    state = if depth == 1 {
+                        StripState::Code
+                    } else {
+                        StripState::BlockComment {
+                            depth: depth - 1,
+                            is_doc,
+                        }
+                    };
+                    out.push(' ', false, false);
+                    out.push(' ', false, false);
+                    i += 2;
+                } else if c == '/' && at(&chars, i + 1) == '*' {
+                    state = StripState::BlockComment {
+                        depth: depth + 1,
+                        is_doc,
+                    };
+                    out.push(' ', false, false);
+                    out.push(' ', false, false);
+                    i += 2;
+                } else {
+                    out.push(c, false, !is_doc);
+                    i += 1;
+                }
+            }
+            StripState::Str => {
+                if c == '\\' && at(&chars, i + 1) != '\0' && at(&chars, i + 1) != '\n' {
+                    out.push(' ', false, false);
+                    out.push(' ', false, false);
+                    i += 2;
+                } else {
+                    if c == '"' {
+                        state = StripState::Code;
+                    }
+                    out.push(' ', false, false);
+                    i += 1;
+                }
+            }
+            StripState::RawStr { hashes } => {
+                if c == '"' {
+                    let mut k = 0u32;
+                    while k < hashes && at(&chars, i + 1 + k as usize) == '#' {
+                        k += 1;
+                    }
+                    if k == hashes {
+                        for _ in 0..=hashes {
+                            out.push(' ', false, false);
+                        }
+                        i += 1 + hashes as usize;
+                        state = StripState::Code;
+                    } else {
+                        out.push(' ', false, false);
+                        i += 1;
+                    }
+                } else {
+                    out.push(' ', false, false);
+                    i += 1;
+                }
+            }
+            StripState::CharLit => {
+                if c == '\\' && at(&chars, i + 1) != '\0' && at(&chars, i + 1) != '\n' {
+                    out.push(' ', false, false);
+                    out.push(' ', false, false);
+                    i += 2;
+                } else {
+                    if c == '\'' {
+                        state = StripState::Code;
+                    }
+                    out.push(' ', false, false);
+                    i += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Byte offsets of identifier-boundary occurrences of `token` in
+/// `line` (already-stripped code). A token whose first/last character
+/// is an identifier character must not touch another identifier
+/// character (`Instant::nowhere` is not a wall-clock read).
+fn token_offsets(line: &str, token: &str) -> Vec<usize> {
+    let bytes = line.as_bytes();
+    let first_ident = token.chars().next().map(is_ident_char).unwrap_or(false);
+    let last_ident = token.chars().last().map(is_ident_char).unwrap_or(false);
+    let ident_byte = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    line.match_indices(token)
+        .filter(|(pos, _)| {
+            let before_ok = !first_ident || *pos == 0 || !ident_byte(bytes[pos - 1]);
+            let after = pos + token.len();
+            let after_ok = !last_ident || after >= bytes.len() || !ident_byte(bytes[after]);
+            before_ok && after_ok
+        })
+        .map(|(pos, _)| pos)
+        .collect()
+}
+
+/// Which lines fall inside a `#[cfg(test)]` item (brace-balanced from
+/// the first `{` after the attribute). Returns a per-line flag.
+fn test_code_lines(code_lines: &[&str]) -> Vec<bool> {
+    let mut flags = vec![false; code_lines.len()];
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut region_floor: Option<i64> = None;
+    for (idx, line) in code_lines.iter().enumerate() {
+        let mut in_test = region_floor.is_some();
+        if line.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    if pending && region_floor.is_none() {
+                        region_floor = Some(depth);
+                        pending = false;
+                        in_test = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some(floor) = region_floor {
+                        if depth <= floor {
+                            region_floor = None;
+                            // The closing-brace line is still test code.
+                            in_test = true;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        if region_floor.is_some() {
+            in_test = true;
+        }
+        flags[idx] = in_test;
+    }
+    flags
+}
+
+/// A parsed allow annotation.
+struct Allow {
+    rule: String,
+    /// 1-based line of the annotation comment.
+    line: usize,
+    /// 1-based line the annotation covers (same line, or the next line
+    /// when the annotation sits on a comment-only line).
+    target: usize,
+    justification: String,
+    used: bool,
+}
+
+/// The annotation marker, assembled so the scanner never reads its own
+/// definition as an annotation.
+const ALLOW_MARKER: &str = concat!("detlint", ":", "allow");
+
+/// Parse every allow annotation in the plain-comment channel; syntax
+/// problems become `ALLOW` findings immediately.
+fn parse_allows(
+    display_path: &str,
+    comment_lines: &[&str],
+    code_lines: &[&str],
+    findings: &mut Vec<Finding>,
+) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for (idx, text) in comment_lines.iter().enumerate() {
+        let line_no = idx + 1;
+        let mut cursor = 0usize;
+        while let Some(p) = text[cursor..].find(ALLOW_MARKER) {
+            let start = cursor + p + ALLOW_MARKER.len();
+            cursor = start;
+            let rest = &text[start..];
+            let mut bad = |why: String| {
+                findings.push(Finding {
+                    path: display_path.to_string(),
+                    line: line_no,
+                    rule: ALLOW_RULE,
+                    token: why,
+                    hint: format!("syntax: // {ALLOW_MARKER}(<rule>): <justification>"),
+                });
+            };
+            if !rest.starts_with('(') {
+                bad(format!("missing (rule) after {ALLOW_MARKER}"));
+                continue;
+            }
+            let Some(close) = rest.find(')') else {
+                bad(format!("unclosed (rule) after {ALLOW_MARKER}"));
+                continue;
+            };
+            let rule_id = rest[1..close].trim().to_string();
+            if rule_by_id(&rule_id).is_none() {
+                bad(format!("unknown rule `{rule_id}`"));
+                continue;
+            }
+            let after = &rest[close + 1..];
+            let Some(just) = after.strip_prefix(':') else {
+                bad(format!("missing `: <justification>` for {rule_id}"));
+                continue;
+            };
+            let justification = just.trim().to_string();
+            if justification.is_empty() {
+                bad(format!("empty justification for {rule_id}"));
+                continue;
+            }
+            // A comment-only annotation line covers the line below it;
+            // a trailing annotation covers its own line.
+            let own_code = code_lines
+                .get(idx)
+                .map(|l| !l.trim().is_empty())
+                .unwrap_or(false);
+            let target = if own_code { line_no } else { line_no + 1 };
+            allows.push(Allow {
+                rule: rule_id,
+                line: line_no,
+                target,
+                justification,
+                used: false,
+            });
+        }
+    }
+    allows
+}
+
+/// Scan one file's source. `rel_path` (forward slashes, relative to the
+/// scan root) drives rule scoping; `display_path` is what reports show.
+pub fn scan_source(rel_path: &str, display_path: &str, source: &str) -> LintReport {
+    let channels = split_channels(source);
+    let code_lines: Vec<&str> = channels.code.lines().collect();
+    let comment_lines: Vec<&str> = channels.comments.lines().collect();
+    let in_test = test_code_lines(&code_lines);
+
+    let mut findings = Vec::new();
+    let mut allows = parse_allows(display_path, &comment_lines, &code_lines, &mut findings);
+    let mut suppressed = Vec::new();
+
+    for rule in RULES {
+        if !rule.scope.applies(rel_path) {
+            continue;
+        }
+        for (idx, line) in code_lines.iter().enumerate() {
+            if rule.skip_test_code && in_test[idx] {
+                continue;
+            }
+            let line_no = idx + 1;
+            for token in rule.tokens {
+                for _offset in token_offsets(line, token) {
+                    let allow = allows
+                        .iter_mut()
+                        .find(|a| a.target == line_no && a.rule == rule.id);
+                    match allow {
+                        Some(a) => {
+                            a.used = true;
+                            suppressed.push(Suppression {
+                                path: display_path.to_string(),
+                                line: line_no,
+                                rule: a.rule.clone(),
+                                justification: a.justification.clone(),
+                            });
+                        }
+                        None => findings.push(Finding {
+                            path: display_path.to_string(),
+                            line: line_no,
+                            rule: rule.id,
+                            token: (*token).to_string(),
+                            hint: rule.hint.to_string(),
+                        }),
+                    }
+                }
+            }
+        }
+    }
+
+    // A suppression nothing needed is stale: surface it so allows can
+    // never outlive the code they excused.
+    for a in &allows {
+        if !a.used {
+            findings.push(Finding {
+                path: display_path.to_string(),
+                line: a.line,
+                rule: ALLOW_RULE,
+                token: format!("{ALLOW_MARKER}({})", a.rule),
+                hint: "suppresses no finding on its target line — remove the stale allow"
+                    .to_string(),
+            });
+        }
+    }
+
+    let mut report = LintReport {
+        findings,
+        suppressed,
+        files_scanned: 1,
+    };
+    report.sort();
+    report
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Scan every `.rs` file under `root` (recursively, sorted) and merge
+/// into one stable-sorted report. Report paths are `root/<relative>`.
+pub fn scan_tree(root: &Path) -> io::Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut merged = LintReport::default();
+    for file in &files {
+        let source = std::fs::read_to_string(file)?;
+        let rel = match file.strip_prefix(root) {
+            Ok(r) => r.to_string_lossy().replace('\\', "/"),
+            Err(_) => file.to_string_lossy().replace('\\', "/"),
+        };
+        let display = root.join(rel.as_str()).to_string_lossy().to_string();
+        let one = scan_source(&rel, &display, &source);
+        merged.findings.extend(one.findings);
+        merged.suppressed.extend(one.suppressed);
+        merged.files_scanned += 1;
+    }
+    merged.sort();
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(rel: &str, src: &str) -> LintReport {
+        scan_source(rel, rel, src)
+    }
+
+    fn allow_comment(rule: &str, justification: &str) -> String {
+        format!("// {ALLOW_MARKER}({rule}): {justification}")
+    }
+
+    #[test]
+    fn strips_comments_strings_and_char_literals() {
+        let src = "let a = \"Instant::now\"; // Instant::now\nlet b = 'x'; /* thread_rng */ let c = r#\"HashMap\"#;\n";
+        let code = split_channels(src).code;
+        assert!(!code.contains("Instant::now"), "{code}");
+        assert!(!code.contains("thread_rng"), "{code}");
+        assert!(!code.contains("HashMap"), "{code}");
+        assert!(code.contains("let a ="));
+        assert_eq!(code.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn lifetimes_survive_stripping() {
+        let src = "fn f<'a>(x: &'a str) -> &'static str { x }\n";
+        let code = split_channels(src).code;
+        assert!(code.contains("'static"), "{code}");
+    }
+
+    #[test]
+    fn nested_block_comments_strip_fully() {
+        let src = "/* outer /* Instant::now */ still comment */ let x = 1;\n";
+        let code = split_channels(src).code;
+        assert!(!code.contains("Instant::now"));
+        assert!(code.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn comment_channel_keeps_plain_comments_only() {
+        let src = format!(
+            "// plain {m}\n/// doc {m}\n//! inner doc {m}\nlet s = \"{m}\";\n/* block {m} */\n/** doc block {m} */\n",
+            m = ALLOW_MARKER
+        );
+        let comments = split_channels(&src).comments;
+        let lines: Vec<&str> = comments.lines().collect();
+        assert!(lines[0].contains(ALLOW_MARKER), "{comments}");
+        assert!(!lines[1].contains(ALLOW_MARKER), "{comments}");
+        assert!(!lines[2].contains(ALLOW_MARKER), "{comments}");
+        assert!(!lines[3].contains(ALLOW_MARKER), "{comments}");
+        assert!(lines[4].contains(ALLOW_MARKER), "{comments}");
+        assert!(!lines[5].contains(ALLOW_MARKER), "{comments}");
+    }
+
+    #[test]
+    fn token_boundaries_respected() {
+        assert_eq!(token_offsets("let t = Instant::now();", "Instant::now").len(), 1);
+        assert_eq!(token_offsets("Instant::nowhere()", "Instant::now").len(), 0);
+        assert_eq!(token_offsets("MyInstant::now()", "Instant::now").len(), 0);
+        assert_eq!(token_offsets("x.unwrap().y.unwrap()", ".unwrap()").len(), 2);
+        assert_eq!(token_offsets("x.unwrap_or(0)", ".unwrap()").len(), 0);
+        assert_eq!(token_offsets("x.expect_err(\"e\")", ".expect(").len(), 0);
+    }
+
+    #[test]
+    fn d1_fires_outside_the_allowlist_only() {
+        let src = "pub fn f() { let t = std::time::Instant::now(); }\n";
+        assert_eq!(scan("sim/engine.rs", src).findings.len(), 1);
+        assert_eq!(scan("sim/engine.rs", src).findings[0].rule, "D1");
+        assert!(scan("serve/router.rs", src).findings.is_empty());
+        assert!(scan("netsim/mod.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn r1_skips_test_modules() {
+        let src = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       #[test]\n\
+                       fn t() { Some(1u32).unwrap(); }\n\
+                   }\n";
+        let rep = scan("serve/protocol.rs", src);
+        assert_eq!(rep.findings.len(), 1, "{:?}", rep.findings);
+        assert_eq!(rep.findings[0].line, 1);
+    }
+
+    #[test]
+    fn allow_suppresses_and_is_counted() {
+        let src = format!(
+            "{}\npub fn f() {{ let t = std::time::Instant::now(); }}\n",
+            allow_comment("D1", "wall-side measurement only")
+        );
+        let rep = scan("sim/engine.rs", &src);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+        assert_eq!(rep.suppressed.len(), 1);
+        assert_eq!(rep.suppressed[0].rule, "D1");
+        assert_eq!(rep.suppressed[0].justification, "wall-side measurement only");
+    }
+
+    #[test]
+    fn trailing_allow_covers_its_own_line() {
+        let src = format!(
+            "pub fn f() {{ let t = std::time::Instant::now(); }} {}\n",
+            allow_comment("D1", "wall side")
+        );
+        let rep = scan("sim/engine.rs", &src);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+        assert_eq!(rep.suppressed.len(), 1);
+    }
+
+    #[test]
+    fn allow_without_justification_is_a_finding() {
+        let src = format!(
+            "// {ALLOW_MARKER}(D1)\npub fn f() {{ let t = std::time::Instant::now(); }}\n"
+        );
+        let rep = scan("sim/engine.rs", &src);
+        // The malformed allow plus the unsuppressed D1 finding.
+        assert_eq!(rep.findings.len(), 2, "{:?}", rep.findings);
+        assert!(rep.findings.iter().any(|f| f.rule == ALLOW_RULE));
+        assert!(rep.findings.iter().any(|f| f.rule == "D1"));
+    }
+
+    #[test]
+    fn unknown_rule_and_stale_allow_are_findings() {
+        let src = format!(
+            "{}\npub fn f() {{}}\n{}\npub fn g() {{}}\n",
+            allow_comment("D9", "not a rule"),
+            allow_comment("D2", "nothing random below")
+        );
+        let rep = scan("sim/engine.rs", &src);
+        assert_eq!(rep.findings.len(), 2, "{:?}", rep.findings);
+        assert!(rep.findings.iter().all(|f| f.rule == ALLOW_RULE));
+    }
+
+    #[test]
+    fn wrong_rule_allow_does_not_suppress() {
+        let src = format!(
+            "{}\npub fn f() {{ let t = std::time::Instant::now(); }}\n",
+            allow_comment("D2", "wrong rule named")
+        );
+        let rep = scan("sim/engine.rs", &src);
+        assert!(rep.findings.iter().any(|f| f.rule == "D1"));
+        // The D2 allow is stale on top of the live D1 finding.
+        assert!(rep.findings.iter().any(|f| f.rule == ALLOW_RULE));
+    }
+
+    #[test]
+    fn marker_in_string_or_doc_comment_is_inert() {
+        let src = format!(
+            "/// Example: {}\npub fn f() {{ let _s = \"{}(D1): in a string\"; }}\n",
+            allow_comment("D1", "doc example"),
+            ALLOW_MARKER
+        );
+        let rep = scan("sim/engine.rs", &src);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+        assert!(rep.suppressed.is_empty());
+    }
+
+    #[test]
+    fn d3_and_d4_scope_to_the_export_plane() {
+        let map = "use std::collections::HashMap;\n";
+        assert_eq!(scan("trace/mod.rs", map).findings.len(), 1);
+        assert!(scan("optimizer/cache.rs", map).findings.is_empty());
+        let relaxed = "let x = c.load(Ordering::Relaxed);\n";
+        assert_eq!(scan("metrics/mod.rs", relaxed).findings.len(), 1);
+        assert!(scan("serve/router.rs", relaxed).findings.is_empty());
+    }
+
+    #[test]
+    fn d2_applies_even_in_tests() {
+        let src = "#[cfg(test)]\nmod tests {\n fn t() { let r = rand::random::<u64>(); }\n}\n";
+        let rep = scan("workload/mod.rs", src);
+        assert_eq!(rep.findings.len(), 1);
+        assert_eq!(rep.findings[0].rule, "D2");
+    }
+
+    #[test]
+    fn report_is_stable_sorted() {
+        let src =
+            "pub fn f(x: Option<u32>) -> u32 { let t = std::time::Instant::now(); x.unwrap() }\n";
+        let rep = scan("analyze/mod.rs", src);
+        let rendered = rep.render();
+        assert_eq!(rendered, scan("analyze/mod.rs", src).render());
+        // D1 sorts before R1 on the same line.
+        assert_eq!(rep.findings[0].rule, "D1");
+        assert_eq!(rep.findings[1].rule, "R1");
+    }
+
+    #[test]
+    fn rules_table_names_every_rule() {
+        let table = rules_table();
+        for r in RULES {
+            assert!(table.contains(r.id));
+        }
+        assert!(rule_by_id("D3").is_some());
+        assert!(rule_by_id("Z9").is_none());
+    }
+}

@@ -144,7 +144,7 @@ fn run(args: &[String]) -> Result<()> {
         "cloud" => {
             let server = CloudServer::bind(parsed.get("listen"), cfg.artifacts_dir.clone())?;
             println!("cloud daemon listening on {}", server.addr);
-            let h = server.spawn();
+            let h = server.spawn()?;
             h.join().ok();
         }
         "device" => {
@@ -533,10 +533,11 @@ fn serve_on_device(
     use smartsplit::serve::Router;
     use smartsplit::workload::synth_images;
 
-    let router = Router::start(Arc::clone(&device), cfg.router.clone());
+    let router = Router::start(Arc::clone(&device), cfg.router.clone())?;
     let latency = Histogram::new();
     let reqs = generate(n, arrival_of(rps), cfg.seed);
     let shape = device.input_shape().to_vec();
+    // detlint:allow(D1): live serving CLI pacing against real sockets
     let start = std::time::Instant::now();
     for req in &reqs {
         let now = start.elapsed();

@@ -280,16 +280,16 @@ impl PlannerCounters {
     }
 
     pub fn record_hit(&self) {
-        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.hits.fetch_add(1, Ordering::SeqCst);
     }
 
     pub fn record_miss(&self) {
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.misses.fetch_add(1, Ordering::SeqCst);
     }
 
     /// A full optimiser run actually executed (cached or not).
     pub fn record_solve(&self) {
-        self.solves.fetch_add(1, Ordering::Relaxed);
+        self.solves.fetch_add(1, Ordering::SeqCst);
     }
 
     /// A planner request arrived for reason slot `idx`
@@ -298,18 +298,18 @@ impl PlannerCounters {
     /// — panics loudly rather than silently folding into another
     /// reason's tally.
     pub fn record_reason(&self, idx: usize) {
-        self.reasons[idx].fetch_add(1, Ordering::Relaxed);
+        self.reasons[idx].fetch_add(1, Ordering::SeqCst);
     }
 
     pub fn snapshot(&self) -> PlannerStats {
         let mut requests_by_reason = [0u64; REPLAN_REASONS];
         for (slot, a) in requests_by_reason.iter_mut().zip(&self.reasons) {
-            *slot = a.load(Ordering::Relaxed);
+            *slot = a.load(Ordering::SeqCst);
         }
         PlannerStats {
-            cache_hits: self.hits.load(Ordering::Relaxed),
-            cache_misses: self.misses.load(Ordering::Relaxed),
-            solves: self.solves.load(Ordering::Relaxed),
+            cache_hits: self.hits.load(Ordering::SeqCst),
+            cache_misses: self.misses.load(Ordering::SeqCst),
+            solves: self.solves.load(Ordering::SeqCst),
             requests_by_reason,
         }
     }
@@ -328,7 +328,9 @@ impl PlannerCounters {
 ///   deterministic across machines and repeat runs.
 ///
 /// The counter is a plain [`AtomicU64`]: `record` from any worker thread
-/// is one uncontended `fetch_add`, no lock.
+/// is one uncontended `fetch_add`, no lock. All atomics here use
+/// `SeqCst` — these counters land in serialized reports, and detlint
+/// rule D4 bans relaxed orderings on the export plane.
 #[derive(Debug)]
 pub struct ThroughputMeter {
     start: Instant,
@@ -351,6 +353,7 @@ impl Default for ThroughputMeter {
 impl ThroughputMeter {
     pub fn new() -> Self {
         ThroughputMeter {
+            // detlint:allow(D1): wall-clock discipline for live serving; sim paths pin the virtual override
             start: Instant::now(),
             completed: AtomicU64::new(0),
             elapsed_bits: AtomicU64::new(WALL_CLOCK),
@@ -370,21 +373,21 @@ impl ThroughputMeter {
     /// `elapsed()`/`rps()` are deterministic functions of the recorded
     /// count and this value.
     pub fn set_elapsed_s(&self, s: f64) {
-        self.elapsed_bits.store(s.to_bits(), Ordering::Relaxed);
+        self.elapsed_bits.store(s.to_bits(), Ordering::SeqCst);
     }
 
     pub fn record(&self, n: u64) {
-        self.completed.fetch_add(n, Ordering::Relaxed);
+        self.completed.fetch_add(n, Ordering::SeqCst);
     }
 
     pub fn completed(&self) -> u64 {
-        self.completed.load(Ordering::Relaxed)
+        self.completed.load(Ordering::SeqCst)
     }
 
     /// Elapsed seconds: the virtual override if pinned, wall clock
     /// otherwise.
     pub fn elapsed_s(&self) -> f64 {
-        match self.elapsed_bits.load(Ordering::Relaxed) {
+        match self.elapsed_bits.load(Ordering::SeqCst) {
             WALL_CLOCK => self.start.elapsed().as_secs_f64(),
             bits => f64::from_bits(bits),
         }

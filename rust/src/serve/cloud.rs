@@ -40,31 +40,38 @@ impl CloudServer {
     }
 
     /// Run the accept loop on a background thread; returns the join handle.
-    pub fn spawn(self: &Arc<Self>) -> std::thread::JoinHandle<()> {
+    pub fn spawn(self: &Arc<Self>) -> Result<std::thread::JoinHandle<()>> {
         let this = Arc::clone(self);
         std::thread::Builder::new()
             .name("smartsplit-cloud-accept".into())
             .spawn(move || this.accept_loop())
-            .expect("spawn cloud accept loop")
+            .context("spawning cloud accept-loop thread")
     }
 
     fn accept_loop(self: Arc<Self>) {
-        // Short-poll accept so shutdown is observed promptly.
-        self.listener.set_nonblocking(true).expect("listener nonblocking");
+        // Short-poll accept so shutdown is observed promptly. A failure
+        // here leaves the server unreachable but must not unwind — log
+        // and bail out of the loop instead.
+        if let Err(e) = self.listener.set_nonblocking(true) {
+            log::warn!("cloud: cannot set listener nonblocking: {e}");
+            return;
+        }
         while !self.shutdown.load(Ordering::SeqCst) {
             match self.listener.accept() {
                 Ok((stream, peer)) => {
                     log::info!("cloud: connection from {peer}");
                     stream.set_nodelay(true).ok();
                     let this = Arc::clone(&self);
-                    std::thread::Builder::new()
+                    let spawned = std::thread::Builder::new()
                         .name("smartsplit-cloud-conn".into())
                         .spawn(move || {
                             if let Err(e) = this.handle_conn(stream) {
                                 log::warn!("cloud: connection ended: {e:#}");
                             }
-                        })
-                        .expect("spawn conn handler");
+                        });
+                    if let Err(e) = spawned {
+                        log::warn!("cloud: failed to spawn connection handler: {e}");
+                    }
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(std::time::Duration::from_millis(10));

@@ -135,6 +135,14 @@ impl DeviceClient {
         &self.model
     }
 
+    /// Lock the connection, recovering from a poisoned mutex: a panic
+    /// on one request thread must not wedge every later request
+    /// (detlint rule R1 — serving paths never unwind on lock
+    /// acquisition).
+    fn conn(&self) -> std::sync::MutexGuard<'_, Conn> {
+        self.conn.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn split(&self) -> usize {
         self.split_l1.load(Ordering::SeqCst)
     }
@@ -152,7 +160,7 @@ impl DeviceClient {
         self.memory
             .reserve(new_bytes)
             .map_err(|free| anyhow::anyhow!("Eq.17 violated at l1={l1}: {free} B free"))?;
-        let mut conn = self.conn.lock().unwrap();
+        let mut conn = self.conn();
         write_msg(&mut conn.writer, &Msg::SetSplit { l1: l1 as u32 })?;
         Ok(())
     }
@@ -198,7 +206,7 @@ impl DeviceClient {
         // ---- phase 2: shaped upload ------------------------------------
         let t1 = Instant::now();
         let reply = {
-            let mut conn = self.conn.lock().unwrap();
+            let mut conn = self.conn();
             conn.next_id += 1;
             let id = conn.next_id;
             let msg = Msg::Infer { request_id: id, from_layer, tensor: intermediate };
@@ -206,7 +214,7 @@ impl DeviceClient {
             let upload_s = t1.elapsed().as_secs_f64();
             self.energy.record(
                 EnergyComponent::Upload,
-                self.link_upload_power_w(),
+                self.link_upload_power_w()?,
                 upload_s,
             );
 
@@ -216,7 +224,7 @@ impl DeviceClient {
             let down_s = t2.elapsed().as_secs_f64();
             self.energy.record(
                 EnergyComponent::Download,
-                self.link_download_power_w(),
+                self.link_download_power_w()?,
                 // Only the transfer fraction draws radio power; the cloud
                 // compute wait is idle. Approximate transfer time from size.
                 self.link
@@ -247,14 +255,14 @@ impl DeviceClient {
         }
     }
 
-    fn link_upload_power_w(&self) -> f64 {
-        let radio = self.profile.wifi.expect("device profile has a radio").radio_power();
-        radio.upload_power_w(self.link.bandwidth_mbps())
+    fn link_upload_power_w(&self) -> Result<f64> {
+        let radio = self.profile.wifi.context("device profile has no radio")?.radio_power();
+        Ok(radio.upload_power_w(self.link.bandwidth_mbps()))
     }
 
-    fn link_download_power_w(&self) -> f64 {
-        let radio = self.profile.wifi.expect("device profile has a radio").radio_power();
-        radio.download_power_w(self.link.bandwidth_mbps())
+    fn link_download_power_w(&self) -> Result<f64> {
+        let radio = self.profile.wifi.context("device profile has no radio")?.radio_power();
+        Ok(radio.download_power_w(self.link.bandwidth_mbps()))
     }
 
     /// Write `msg` through the token-bucket shaper in CHUNK pieces.
@@ -271,7 +279,7 @@ impl DeviceClient {
 
     /// Orderly goodbye.
     pub fn shutdown(&self) -> Result<()> {
-        let mut conn = self.conn.lock().unwrap();
+        let mut conn = self.conn();
         write_msg(&mut conn.writer, &Msg::Shutdown)?;
         Ok(())
     }

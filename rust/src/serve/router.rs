@@ -12,10 +12,17 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::runtime::Tensor;
 use crate::serve::device::{DeviceClient, RequestTiming};
+
+/// Lock the queue, recovering from a poisoned mutex: a panicked
+/// submitter must not wedge the dispatcher (detlint rule R1 — serving
+/// paths never unwind on lock acquisition).
+fn lock_queue<'a>(lock: &'a Mutex<Queue>) -> std::sync::MutexGuard<'a, Queue> {
+    lock.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// A completed inference.
 #[derive(Clone, Debug)]
@@ -64,7 +71,7 @@ pub struct Router {
 }
 
 impl Router {
-    pub fn start(device: Arc<DeviceClient>, cfg: RouterConfig) -> Router {
+    pub fn start(device: Arc<DeviceClient>, cfg: RouterConfig) -> Result<Router> {
         assert!(cfg.max_batch >= 1);
         let queue = Arc::new((
             Mutex::new(Queue { items: VecDeque::new(), closed: false }),
@@ -78,9 +85,9 @@ impl Router {
             std::thread::Builder::new()
                 .name("smartsplit-router".into())
                 .spawn(move || dispatcher_loop(device, queue, cfg, stopped))
-                .expect("spawn router dispatcher")
+                .context("spawning router dispatcher thread")?
         };
-        Router { queue, cfg, stopped, dispatcher: Some(dispatcher) }
+        Ok(Router { queue, cfg, stopped, dispatcher: Some(dispatcher) })
     }
 
     /// Submit an image; returns a receiver for the completion.
@@ -91,7 +98,7 @@ impl Router {
     ) -> std::sync::mpsc::Receiver<Result<Completion>> {
         let (tx, rx) = std::sync::mpsc::channel();
         let (lock, cv) = &*self.queue;
-        let mut q = lock.lock().unwrap();
+        let mut q = lock_queue(lock);
         q.items.push_back(Pending { id, image, tx });
         cv.notify_one();
         rx
@@ -112,7 +119,7 @@ impl Router {
     pub fn stop(mut self) {
         {
             let (lock, cv) = &*self.queue;
-            lock.lock().unwrap().closed = true;
+            lock_queue(lock).closed = true;
             cv.notify_all();
         }
         self.stopped.store(true, Ordering::SeqCst);
@@ -130,21 +137,26 @@ fn dispatcher_loop(
 ) {
     let (lock, cv) = &*queue;
     loop {
-        // Wait for at least one request (or close).
+        // Wait for at least one request (or close). Condvar waits
+        // recover the guard from a poisoned lock the same way
+        // `lock_queue` does — the dispatcher must outlive a panicking
+        // peer thread.
         let mut batch: Vec<Pending> = Vec::new();
         {
-            let mut q = lock.lock().unwrap();
-            loop {
-                if !q.items.is_empty() {
-                    break;
+            let mut q = lock_queue(lock);
+            let first = loop {
+                if let Some(p) = q.items.pop_front() {
+                    break p;
                 }
                 if q.closed || stopped.load(Ordering::SeqCst) {
                     return;
                 }
-                let (guard, _) = cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                let (guard, _) = cv
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap_or_else(|e| e.into_inner());
                 q = guard;
-            }
-            batch.push(q.items.pop_front().unwrap());
+            };
+            batch.push(first);
             // Batching window: wait up to max_wait for peers.
             if cfg.max_batch > 1 {
                 let deadline = Instant::now() + cfg.max_wait;
@@ -157,7 +169,9 @@ fn dispatcher_loop(
                     if now >= deadline || q.closed {
                         break;
                     }
-                    let (guard, _) = cv.wait_timeout(q, deadline - now).unwrap();
+                    let (guard, _) = cv
+                        .wait_timeout(q, deadline - now)
+                        .unwrap_or_else(|e| e.into_inner());
                     q = guard;
                 }
             }
@@ -206,7 +220,7 @@ fn run_batch(
     let stacked = Tensor::new(shape, data)?;
     let (logits, timing) = device.infer(&stacked)?;
 
-    let classes = *logits.shape.last().unwrap();
+    let classes = *logits.shape.last().context("logits tensor has an empty shape")?;
     let labels = logits.argmax_rows();
     Ok(batch
         .iter()

@@ -2060,6 +2060,7 @@ impl<'a> Sim<'a> {
 /// Run a scenario to completion (all in-flight work drained past the
 /// horizon) and report.
 pub fn run(cfg: &SimConfig) -> Result<SimReport> {
+    // detlint:allow(D1): wall-clock throughput measurement only; never feeds a decision or an export payload
     let wall_start = Instant::now();
     let mut sim = Sim::new(cfg)?;
     sim.run_loop();

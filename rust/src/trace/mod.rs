@@ -14,16 +14,20 @@
 //! re-plan with its [`ReplanReason`] and façade provenance, every
 //! handover torso-state relay, every re-attachment.
 //!
-//! Determinism contract: the recorder keys open traces in a `HashMap`
-//! but never iterates it — completed traces land in a `Vec` in
-//! completion order and annotations in record order, so two runs of a
-//! frozen scenario export byte-identical files regardless of thread
-//! configuration. Recording is opt-in per request via the sampling
-//! knob (`sample_every`); unsampled requests cost one modulo per hook.
+//! Determinism contract: the recorder keys open traces in a `BTreeMap`
+//! (ordered, hasher-free — detlint rule D3 bans default-hasher maps on
+//! the export plane, so the ordering guarantee is structural, not a
+//! comment) — completed traces land in a `Vec` in completion order and
+//! annotations in record order, so two runs of a frozen scenario
+//! export byte-identical files regardless of thread configuration.
+//! `tests/export_order.rs` pins this: shuffled insertion orders export
+//! byte-identically across 100 reruns. Recording is opt-in per request
+//! via the sampling knob (`sample_every`); unsampled requests cost one
+//! modulo per hook.
 
 pub mod export;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::planner::{CacheOutcome, ReplanReason, Strategy};
 
@@ -192,12 +196,12 @@ pub fn cache_outcome_name(c: CacheOutcome) -> &'static str {
 /// traces in completion order, annotations in record order.
 ///
 /// Span hooks silently no-op for unsampled requests, so the sim wires
-/// them unconditionally. The map is never iterated (determinism —
-/// see the module docs).
+/// them unconditionally. The map is a `BTreeMap`, so even an iteration
+/// added later would be deterministic (see the module docs).
 #[derive(Debug)]
 pub struct TraceRecorder {
     sample_every: u64,
-    open: HashMap<u64, RequestTrace>,
+    open: BTreeMap<u64, RequestTrace>,
     done: Vec<RequestTrace>,
     events: Vec<CausalEvent>,
 }
@@ -209,7 +213,7 @@ impl TraceRecorder {
         assert!(sample_every >= 1, "sample_every must be >= 1");
         TraceRecorder {
             sample_every,
-            open: HashMap::new(),
+            open: BTreeMap::new(),
             done: Vec::new(),
             events: Vec::new(),
         }

@@ -1,0 +1,135 @@
+//! The detlint gate's own contract (DESIGN.md §15): every rule fires
+//! on its known-bad fixture, clean fixtures stay silent, the allow
+//! suppression syntax works and is counted, the report is
+//! deterministic, and — the part that keeps the CI gate honest — the
+//! repository's own sources lint clean with every exemption justified.
+
+use std::path::PathBuf;
+
+use smartsplit::lint::{self, LintReport};
+
+fn fixtures(which: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("lint_fixtures")
+        .join(which)
+}
+
+fn scan(which: &str) -> LintReport {
+    lint::scan_tree(&fixtures(which)).expect("fixture tree scans")
+}
+
+fn count(rep: &LintReport, rule: &str) -> usize {
+    rep.findings.iter().filter(|f| f.rule == rule).count()
+}
+
+#[test]
+fn every_rule_fires_on_its_bad_fixture() {
+    let rep = scan("bad");
+    assert_eq!(count(&rep, "D1"), 2, "{}", rep.render());
+    assert_eq!(count(&rep, "D2"), 3, "{}", rep.render());
+    assert_eq!(count(&rep, "D3"), 5, "{}", rep.render());
+    assert_eq!(count(&rep, "D4"), 1, "{}", rep.render());
+    assert_eq!(count(&rep, "R1"), 2, "{}", rep.render());
+    assert!(!rep.clean());
+    // Nothing in the bad corpus carries a usable allow.
+    assert!(rep.suppressed.is_empty(), "{}", rep.render());
+}
+
+#[test]
+fn findings_land_in_the_right_files() {
+    let rep = scan("bad");
+    for f in &rep.findings {
+        let expected = match f.rule {
+            "D1" => "sim/wall_clock.rs",
+            "D2" => "planner/os_random.rs",
+            "D3" => "trace/map_iter.rs",
+            "D4" => "metrics/relaxed.rs",
+            "R1" => "serve/panics.rs",
+            "ALLOW" => "serve/stale_allow.rs",
+            other => panic!("unexpected rule {other}"),
+        };
+        assert!(
+            f.path.replace('\\', "/").ends_with(expected),
+            "{} finding in {}, expected {expected}",
+            f.rule,
+            f.path
+        );
+    }
+}
+
+#[test]
+fn allow_hygiene_is_enforced() {
+    // The stale-allow fixture holds exactly three hygiene problems: an
+    // allow that suppresses nothing, an unknown rule id, and a missing
+    // justification.
+    let rep = scan("bad");
+    assert_eq!(count(&rep, "ALLOW"), 3, "{}", rep.render());
+}
+
+#[test]
+fn r1_exempts_test_modules() {
+    // serve/panics.rs has unwrap/expect both in production code (lines
+    // 5-6) and in its #[cfg(test)] module; only the former may fire.
+    let rep = scan("bad");
+    let r1_lines: Vec<usize> = rep
+        .findings
+        .iter()
+        .filter(|f| f.rule == "R1")
+        .map(|f| f.line)
+        .collect();
+    assert_eq!(r1_lines, vec![5, 6], "{}", rep.render());
+}
+
+#[test]
+fn clean_fixtures_stay_silent_and_suppressions_are_counted() {
+    let rep = scan("clean");
+    assert!(rep.clean(), "{}", rep.render());
+    // Exactly one justified allow in the clean corpus (sim/suppressed.rs).
+    assert_eq!(rep.suppressed.len(), 1, "{}", rep.render());
+    assert_eq!(rep.suppressed[0].rule, "D1");
+    assert!(!rep.suppressed[0].justification.is_empty());
+    assert!(rep.suppressed[0]
+        .path
+        .replace('\\', "/")
+        .ends_with("sim/suppressed.rs"));
+}
+
+#[test]
+fn report_is_deterministic() {
+    let a = scan("bad").render();
+    let b = scan("bad").render();
+    assert_eq!(a, b);
+    // Findings are stable-sorted by (path, line, rule, token).
+    let rep = scan("bad");
+    let mut sorted = rep.findings.clone();
+    sorted.sort_by(|a, b| {
+        (&a.path, a.line, a.rule, &a.token).cmp(&(&b.path, b.line, b.rule, &b.token))
+    });
+    assert_eq!(rep.findings, sorted);
+}
+
+#[test]
+fn repository_lints_clean() {
+    // The gate itself: the crate's own sources must carry zero
+    // unsuppressed findings, and every exemption must be justified.
+    // This is what `cargo run --bin detlint` enforces in CI; failing
+    // here names the violation with file:line.
+    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let rep = lint::scan_tree(&src).expect("src tree scans");
+    assert!(rep.clean(), "repository has lint findings:\n{}", rep.render());
+    assert!(rep.files_scanned > 20, "scan missed the tree");
+    for s in &rep.suppressed {
+        assert!(
+            !s.justification.is_empty(),
+            "unjustified allow at {}:{}",
+            s.path,
+            s.line
+        );
+    }
+    // Today every in-tree exemption is a wall-clock (D1) one; widening
+    // this list is a deliberate act, not drift.
+    for s in &rep.suppressed {
+        assert_eq!(s.rule, "D1", "unexpected {} exemption at {}:{}", s.rule, s.path, s.line);
+    }
+}

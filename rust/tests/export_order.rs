@@ -1,0 +1,82 @@
+//! D3 regression (detlint, DESIGN.md §15): trace exports must be
+//! byte-identical no matter what order requests were *begun* in.
+//!
+//! The recorder keys open traces by request id; before this gate that
+//! map was a default-hasher `HashMap` whose ordering neutrality was
+//! honored only by a comment. This test is the adversarial version of
+//! a perturbed-hasher-seed check: 100 reruns, each beginning and
+//! recording the same requests in a different seeded shuffle of
+//! insertion order (the spans themselves interleave in reverse), must
+//! export the same bytes — because completion order, and only
+//! completion order, defines export order.
+
+use smartsplit::trace::{CausalEvent, SpanKind, TraceRecorder};
+use smartsplit::util::rng::Xoshiro256;
+
+const REQUESTS: u64 = 40;
+const LEFT_OPEN: u64 = 5;
+
+/// Record the same logical run with `order` controlling the insertion
+/// order of `begin` and the interleaving of span appends; completion
+/// order is always ascending. Returns (JSONL, Chrome trace) exports.
+fn export_with_order(order: &[u64]) -> (String, String) {
+    let mut rec = TraceRecorder::new(1);
+    for &req in order {
+        rec.begin(req, req % 7, req as f64 * 0.5);
+    }
+    // Append spans in the reverse of the shuffled order, so the open
+    // map is exercised under a second, different access pattern.
+    for &req in order.iter().rev() {
+        let t0 = req as f64 * 0.5;
+        rec.span(req, SpanKind::DeviceQueue, t0, t0, None);
+        rec.span(req, SpanKind::HeadCompute, t0, t0 + 0.2, None);
+        rec.span(req, SpanKind::Uplink, t0 + 0.2, t0 + 0.5, None);
+        rec.span(req, SpanKind::CloudQueue, t0 + 0.5, t0 + 0.7, Some(0));
+        rec.span(req, SpanKind::CloudService, t0 + 0.7, t0 + 1.0, Some(0));
+    }
+    rec.note(CausalEvent::Fault { t_s: 1.0, kind: "site_down", site: 1, value: 0.0 });
+    // Completion order is part of the run's semantics — fixed. The
+    // tail stays open so the unfinished count is exercised too.
+    for req in 0..REQUESTS - LEFT_OPEN {
+        rec.complete(req, req as f64 * 0.5 + 1.0);
+    }
+    let rep = rec.finish();
+    assert_eq!(rep.unfinished, LEFT_OPEN);
+    (rep.to_jsonl(), rep.to_chrome_trace())
+}
+
+/// Seeded Fisher–Yates over the request ids.
+fn shuffled(seed: u64) -> Vec<u64> {
+    let mut ids: Vec<u64> = (0..REQUESTS).collect();
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    for i in (1..ids.len()).rev() {
+        let j = rng.gen_range(0, i);
+        ids.swap(i, j);
+    }
+    ids
+}
+
+#[test]
+fn exports_are_byte_identical_across_100_shuffled_insertion_orders() {
+    let natural: Vec<u64> = (0..REQUESTS).collect();
+    let (base_jsonl, base_chrome) = export_with_order(&natural);
+    assert!(!base_jsonl.is_empty() && !base_chrome.is_empty());
+    for trial in 0..100u64 {
+        let order = shuffled(0xC0FFEE ^ trial);
+        let (jsonl, chrome) = export_with_order(&order);
+        assert_eq!(jsonl, base_jsonl, "JSONL diverged on trial {trial}");
+        assert_eq!(chrome, base_chrome, "Chrome trace diverged on trial {trial}");
+    }
+}
+
+#[test]
+fn shuffles_actually_differ() {
+    // Guard the guard: if the shuffle were the identity the test above
+    // would pass vacuously.
+    let natural: Vec<u64> = (0..REQUESTS).collect();
+    let distinct = (0..100u64)
+        .map(|t| shuffled(0xC0FFEE ^ t))
+        .filter(|o| *o != natural)
+        .count();
+    assert!(distinct >= 99, "only {distinct} shuffles differed");
+}

@@ -1,0 +1,11 @@
+//! D4 fixture: relaxed atomics on the export plane must trip.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn bump(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,16 @@
+//! D2 fixture: OS/thread-local randomness must trip anywhere, even in
+//! test modules.
+
+pub fn jitter() -> u64 {
+    let mut rng = rand::thread_rng();
+    rng.next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn seeded_by_the_os() {
+        let _x: u64 = rand::random();
+        let _m: std::collections::hash_map::RandomState = Default::default();
+    }
+}

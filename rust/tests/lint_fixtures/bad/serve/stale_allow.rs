@@ -1,0 +1,17 @@
+//! ALLOW-hygiene fixture: a stale allow, an unknown rule id, and a
+//! malformed annotation must each surface as findings.
+
+// detlint:allow(R1): nothing on the next line actually panics
+pub fn fine(x: u64) -> u64 {
+    x + 1
+}
+
+// detlint:allow(D9): no such rule
+pub fn also_fine(x: u64) -> u64 {
+    x + 2
+}
+
+// detlint:allow(D4)
+pub fn missing_justification(x: u64) -> u64 {
+    x + 3
+}

@@ -1,0 +1,9 @@
+//! D1 fixture: wall-clock reads on the decision plane (sim/) must trip.
+
+use std::time::{Instant, SystemTime};
+
+pub fn decide() -> f64 {
+    let t = Instant::now();
+    let _wall = SystemTime::now();
+    t.elapsed().as_secs_f64()
+}

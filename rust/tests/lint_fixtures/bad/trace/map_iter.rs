@@ -1,0 +1,14 @@
+//! D3 fixture: default-hasher maps on the export plane must trip.
+
+use std::collections::{HashMap, HashSet};
+
+pub fn export(counts: &HashMap<String, u64>) -> String {
+    let mut out = String::new();
+    let mut seen: HashSet<&str> = HashSet::new();
+    for (k, v) in counts {
+        if seen.insert(k) {
+            out.push_str(&format!("{k}={v}\n"));
+        }
+    }
+    out
+}

@@ -1,0 +1,10 @@
+//! Clean fixture: wall-clock reads are the point of the wall-side
+//! modules — D1 must stay silent here.
+
+use std::time::Instant;
+
+pub fn measure<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,10 @@
+//! Clean fixture: a justified allow suppresses the D1 finding and is
+//! counted in the suppression audit.
+
+use std::time::Instant;
+
+pub fn wall_profile() -> f64 {
+    // detlint:allow(D1): wall-side profiling helper; output never feeds a decision
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

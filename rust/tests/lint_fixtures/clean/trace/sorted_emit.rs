@@ -1,0 +1,15 @@
+//! Clean fixture: ordered containers on the export plane — D3 must
+//! stay silent for `BTreeMap`/`BTreeSet` and sorted `Vec` emission.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+pub fn export(counts: &BTreeMap<String, u64>) -> String {
+    let mut out = String::new();
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    for (k, v) in counts {
+        if seen.insert(k) {
+            out.push_str(&format!("{k}={v}\n"));
+        }
+    }
+    out
+}
