@@ -1,18 +1,32 @@
-//! §Scale: discrete-event simulator throughput — events/sec at 1k, 10k
-//! and 100k devices (city scenario, diurnal load, churn on). The whole
-//! point of `sim/` is that fleet size costs events, not wall-clock
-//! sockets; this bench pins the events/sec the engine sustains so
-//! regressions in the hot loop (heap ops, planning, histogram records)
-//! show up as numbers, not vibes.
+//! §Scale: discrete-event simulator throughput — events/sec at 1k
+//! through 1M devices (city scenario, diurnal load, churn on), plus
+//! the sharded engine's scaling curves. The whole point of `sim/` is
+//! that fleet size costs events, not wall-clock sockets; this bench
+//! pins the events/sec the engine sustains so regressions in the hot
+//! loop (heap ops, planning, histogram records) show up as numbers,
+//! not vibes.
 //!
-//! Also measures (and gates, <1%) the observability seam's overhead:
-//! with the sinks disabled every hook is an `Option` branch on `None`,
-//! and even armed at the sparsest sampling the hot loop must not slow
-//! down measurably — the "zero-cost when dark" claim of DESIGN.md §12,
-//! measured rather than asserted.
+//! Three sections:
+//!  1. the device ladder — raw events/sec at each fleet size (`--smoke`
+//!     trims iterations and caps the ladder at 100k devices; the full
+//!     run attempts a 1M-device short-horizon city where host memory
+//!     allows);
+//!  2. the observability overhead gate (<1%): with the sinks disabled
+//!     every hook is an `Option` branch on `None`, and even armed at
+//!     the sparsest sampling the hot loop must not slow down measurably
+//!     — the "zero-cost when dark" claim of DESIGN.md §12, measured
+//!     rather than asserted;
+//!  3. shard-scaling curves — the tiered and mobile cities dispatched
+//!     at 1/2/4 shards, recording events/sec and events/sec-per-core
+//!     (normalised by `min(shards, available_parallelism)`), merged
+//!     into `BENCH_edge.json` / `BENCH_mobility.json` under a
+//!     `shard_scaling` key. Every sharded run is checked against the
+//!     1-shard event count — a bench that silently broke replay parity
+//!     would be measuring a different simulation.
 
 use smartsplit::bench::{black_box, Bench};
 use smartsplit::sim;
+use smartsplit::util::json::{self, Json};
 
 /// Best-of-N wall throughput (events per wall second) for a config —
 /// min-wall filtering keeps scheduler noise out of a 1% comparison.
@@ -27,12 +41,55 @@ fn best_events_per_sec(cfg: &sim::SimConfig, iters: usize) -> (f64, u64) {
     (best, events)
 }
 
+/// Cores the sharded dispatch can actually use: the engine's window
+/// drains fan out at most one thread per shard, bounded by the host.
+fn cores_used(shards: usize) -> usize {
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    shards.clamp(1, host)
+}
+
+/// Read-modify-write a `shard_scaling` section into a tracked
+/// `BENCH_*.json` without clobbering the owning bench's own numbers
+/// (edge_scale / mobility_scale write the rest of the file).
+fn merge_shard_scaling(path: &std::path::Path, section: Json) -> anyhow::Result<()> {
+    let mut doc = json::parse_file(path)
+        .unwrap_or_else(|_| Json::obj(vec![("bench", Json::str("sim_scale"))]));
+    if let Json::Obj(pairs) = &mut doc {
+        if let Some(slot) = pairs.iter_mut().find(|(k, _)| k == "shard_scaling") {
+            slot.1 = section;
+        } else {
+            pairs.push(("shard_scaling".to_string(), section));
+        }
+    } else {
+        doc = Json::obj(vec![("shard_scaling", section)]);
+    }
+    std::fs::write(path, doc.to_string_pretty())?;
+    println!("    merged shard_scaling into {}", path.display());
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    // ---------------------------------------------------- 1. device ladder
     println!("== sim_scale: city scenario, alexnet, seed 7 ==");
     // (devices, virtual seconds, bench iters, warmup)
-    let sizes: [(usize, f64, usize, usize); 3] =
-        [(1_000, 120.0, 5, 1), (10_000, 60.0, 3, 1), (100_000, 30.0, 2, 0)];
+    let sizes: Vec<(usize, f64, usize, usize)> = if smoke {
+        vec![(1_000, 60.0, 2, 1), (10_000, 30.0, 1, 0), (100_000, 10.0, 1, 0)]
+    } else {
+        vec![
+            (1_000, 120.0, 5, 1),
+            (10_000, 60.0, 3, 1),
+            (100_000, 30.0, 2, 0),
+            // The 1M+ attempt: a short-horizon city so the fleet spawn
+            // dominates memory, not the request log. Hosts that cannot
+            // hold the fleet will fail loudly here rather than publish
+            // a truncated ladder.
+            (1_000_000, 3.0, 1, 0),
+        ]
+    };
 
+    let mut ladder = Vec::new();
     for (devices, duration_s, iters, warmup) in sizes {
         let cfg = sim::city_scale("alexnet", devices, duration_s, 7);
         Bench::new(&format!("simulate {devices} devices / {duration_s:.0}s virtual"))
@@ -52,21 +109,30 @@ fn main() -> anyhow::Result<()> {
             report.completed,
             report.resplits,
         );
+        ladder.push((devices, report.events_per_wall_second()));
     }
+    assert!(
+        ladder.iter().any(|&(d, _)| d >= 100_000),
+        "the ladder must measure at least one ≥100k-device fleet"
+    );
 
-    // Observability overhead gate: same 10k-device city, once fully dark
-    // and once with the trace recorder armed at the sparsest sampling
-    // (`u64::MAX` → only request 0 is sampled, so every hook still pays
-    // its branch + modulo while recording almost nothing). Best-of-N
-    // wall throughput on both sides; the armed side must stay within 1%
-    // of dark. Event counts must match exactly — observability may never
-    // perturb the schedule.
-    println!("== sim_scale: observability overhead (10k devices / 60s virtual) ==");
-    let dark = sim::city_scale("alexnet", 10_000, 60.0, 7);
+    // ------------------------------------- 2. observability overhead gate
+    // Same city, once fully dark and once with the trace recorder armed
+    // at the sparsest sampling (`u64::MAX` → only request 0 is sampled,
+    // so every hook still pays its branch + modulo while recording
+    // almost nothing). Best-of-N wall throughput on both sides; the
+    // armed side must stay within 1% of dark. Event counts must match
+    // exactly — observability may never perturb the schedule.
+    let (ov_devices, ov_duration, ov_iters) =
+        if smoke { (10_000, 30.0, 3) } else { (10_000, 60.0, 4) };
+    println!(
+        "== sim_scale: observability overhead ({ov_devices} devices / {ov_duration:.0}s virtual) =="
+    );
+    let dark = sim::city_scale("alexnet", ov_devices, ov_duration, 7);
     let mut armed = dark.clone();
     armed.observability.trace_sample_every = u64::MAX;
-    let (dark_eps, dark_events) = best_events_per_sec(&dark, 4);
-    let (armed_eps, armed_events) = best_events_per_sec(&armed, 4);
+    let (dark_eps, dark_events) = best_events_per_sec(&dark, ov_iters);
+    let (armed_eps, armed_events) = best_events_per_sec(&armed, ov_iters);
     assert_eq!(
         dark_events, armed_events,
         "tracing must be schedule-transparent: event counts diverged"
@@ -81,5 +147,72 @@ fn main() -> anyhow::Result<()> {
         "observability seam costs {overhead_pct:.3}% with tracing effectively \
          disabled — budget is <1%"
     );
+
+    // ------------------------------------------- 3. shard-scaling curves
+    // Tiered and mobile cities at 1/2/4 shards. The 1-shard run is the
+    // frozen reference; every layout must dispatch the identical event
+    // count (the replay-parity contract, `tests/shard_parity.rs`) —
+    // what varies is wall time, reported both raw and per core.
+    let shard_counts = [1usize, 2, 4];
+    let scenarios: Vec<(&str, &std::path::Path, sim::SimConfig, usize)> = {
+        let (td, ts, md, ms) =
+            if smoke { (100_000, 10.0, 20_000, 15.0) } else { (200_000, 20.0, 50_000, 40.0) };
+        vec![
+            (
+                "city_scale_tiered",
+                std::path::Path::new("../BENCH_edge.json"),
+                sim::city_scale_tiered("alexnet", td, 8, ts, 7),
+                td,
+            ),
+            (
+                "city_mobile",
+                std::path::Path::new("../BENCH_mobility.json"),
+                sim::city_mobile("alexnet", md, 8, ms, 7),
+                md,
+            ),
+        ]
+    };
+
+    for (name, bench_file, cfg, devices) in scenarios {
+        println!("== sim_scale: shard scaling, {name} ({devices} devices) ==");
+        let mut reference_events = None;
+        let mut curve = Vec::new();
+        for shards in shard_counts {
+            let mut sharded = cfg.clone();
+            sharded.shards = shards;
+            let iters = if smoke { 1 } else { 2 };
+            let (eps, events) = best_events_per_sec(&sharded, iters);
+            match reference_events {
+                None => reference_events = Some(events),
+                Some(reference) => assert_eq!(
+                    events, reference,
+                    "{name}: {shards} shards dispatched a different event count — \
+                     the bench broke replay parity"
+                ),
+            }
+            let cores = cores_used(shards);
+            let eps_per_core = eps / cores as f64;
+            println!(
+                "    {shards} shard(s): {eps:>12.0} events/s over {cores} core(s) \
+                 → {eps_per_core:>12.0} events/s/core"
+            );
+            curve.push(Json::obj(vec![
+                ("shards", Json::Num(shards as f64)),
+                ("cores_used", Json::Num(cores as f64)),
+                ("events", Json::Num(events as f64)),
+                ("events_per_sec", Json::Num(eps)),
+                ("events_per_sec_per_core", Json::Num(eps_per_core)),
+            ]));
+        }
+        let section = Json::obj(vec![
+            ("scenario", Json::str(name)),
+            ("devices", Json::Num(devices as f64)),
+            ("virtual_s", Json::Num(cfg.duration_s)),
+            ("smoke", Json::Bool(smoke)),
+            ("curve", Json::Arr(curve)),
+        ]);
+        let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(bench_file);
+        merge_shard_scaling(&out, section)?;
+    }
     Ok(())
 }

@@ -161,6 +161,38 @@ impl EdgeTopology {
         self.sites.len()
     }
 
+    /// The smallest one-way backhaul propagation delay over all sites —
+    /// the topology's contribution to the sharded engine's conservative
+    /// lookahead bound ([`crate::sim::shard::lookahead_bound`]): no event
+    /// generated at one site can take effect at another sooner than the
+    /// cheapest wired hop. Infinity when the topology has no sites.
+    pub fn min_backhaul_latency_s(&self) -> f64 {
+        self.sites.iter().fold(f64::INFINITY, |m, s| m.min(s.backhaul.latency_s))
+    }
+
+    /// Contiguous near-equal partition of the sites into `shards` groups:
+    /// `shard_map(s)[k]` is the shard owning site `k`. The first
+    /// `num_sites % shards` shards take one extra site, so group sizes
+    /// differ by at most one and every shard owns at least one site when
+    /// `shards <= num_sites` (beyond that the surplus shards stay empty
+    /// by construction — callers clamp). Pure function of the site count:
+    /// the same topology always shards the same way.
+    pub fn shard_map(&self, shards: usize) -> Vec<u32> {
+        let shards = shards.max(1);
+        let n = self.sites.len();
+        let base = n / shards;
+        let extra = n % shards;
+        let mut map = Vec::with_capacity(n);
+        for shard in 0..shards {
+            let len = base + usize::from(shard < extra);
+            for _ in 0..len {
+                map.push(shard as u32);
+            }
+        }
+        debug_assert_eq!(map.len(), n);
+        map
+    }
+
     /// Number of mobility cells — one per site (cell `k` is site `k`'s
     /// coverage area).
     pub fn num_cells(&self) -> usize {
@@ -330,6 +362,59 @@ mod tests {
         assert_eq!(topo.attach_avoiding(2, None, &down12), Some(3));
         // Everything down: nowhere to attach.
         assert_eq!(topo.attach_avoiding(0, None, &[true; 4]), None);
+    }
+
+    #[test]
+    fn min_backhaul_latency_takes_the_cheapest_hop() {
+        let mut topo = EdgeTopology::uniform(
+            3,
+            EdgeSite {
+                servers: 1,
+                profile: profiles::edge_server(),
+                backhaul: BackhaulLink::METRO_1GBE,
+            },
+        );
+        assert_eq!(topo.min_backhaul_latency_s(), 2e-3);
+        topo.sites[1].backhaul = BackhaulLink { bandwidth_mbps: 100.0, latency_s: 5e-4 };
+        assert_eq!(topo.min_backhaul_latency_s(), 5e-4);
+        topo.sites[2].backhaul = BackhaulLink::FREE;
+        assert_eq!(topo.min_backhaul_latency_s(), 0.0);
+    }
+
+    #[test]
+    fn shard_map_partitions_sites_contiguously_and_evenly() {
+        let topo = EdgeTopology::uniform(
+            7,
+            EdgeSite {
+                servers: 1,
+                profile: profiles::edge_server(),
+                backhaul: BackhaulLink::METRO_1GBE,
+            },
+        );
+        for shards in 1..=9 {
+            let map = topo.shard_map(shards);
+            assert_eq!(map.len(), 7);
+            // Non-decreasing (contiguous groups) and in range.
+            for w in map.windows(2) {
+                assert!(w[0] <= w[1]);
+                assert!(w[1] < shards as u32);
+            }
+            // Group sizes differ by at most one; every shard that can
+            // own a site does.
+            let used = shards.min(7);
+            let mut counts = vec![0usize; shards];
+            for &s in &map {
+                counts[s as usize] += 1;
+            }
+            assert!(counts.iter().take(used).all(|&c| c > 0));
+            let (min_used, max) = (
+                counts.iter().take(used).min().copied().unwrap(),
+                counts.iter().max().copied().unwrap(),
+            );
+            assert!(max - min_used <= 1, "shards={shards} counts={counts:?}");
+        }
+        assert_eq!(topo.shard_map(2), vec![0, 0, 0, 0, 1, 1, 1]);
+        assert_eq!(topo.shard_map(0), topo.shard_map(1), "0 clamps to 1");
     }
 
     #[test]

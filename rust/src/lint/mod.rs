@@ -57,8 +57,12 @@ pub const WALL_SIDE: &[&str] = &["serve/", "netsim/", "bench/", "runtime/", "ben
 
 /// Export-plane modules: anything here feeds a serialized report, an
 /// export file, or a decision stream, so iteration order and relaxed
-/// counter reads are part of the byte-identity contract.
-pub const EXPORT_PLANE: &[&str] = &["trace/", "analyze/", "metrics/", "figures/", "bench/"];
+/// counter reads are part of the byte-identity contract. The sharded
+/// event engine's cross-shard channel code (`sim/shard*`) is included
+/// because its pop order IS the decision stream: a default-hasher map
+/// or a relaxed counter there would break cross-layout replay parity.
+pub const EXPORT_PLANE: &[&str] =
+    &["trace/", "analyze/", "metrics/", "figures/", "bench/", "sim/shard"];
 
 /// Panic-free plane: protocol and file-I/O paths that must return
 /// errors with context instead of unwinding under live traffic.
@@ -907,6 +911,11 @@ mod tests {
         let relaxed = "let x = c.load(Ordering::Relaxed);\n";
         assert_eq!(scan("metrics/mod.rs", relaxed).findings.len(), 1);
         assert!(scan("serve/router.rs", relaxed).findings.is_empty());
+        // The sharded engine's channel code sits on the export plane:
+        // its pop order is the decision stream.
+        assert_eq!(scan("sim/shard.rs", map).findings.len(), 1);
+        assert_eq!(scan("sim/shard.rs", relaxed).findings.len(), 1);
+        assert!(scan("sim/engine.rs", map).findings.is_empty());
     }
 
     #[test]

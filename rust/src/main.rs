@@ -71,6 +71,7 @@ fn cli() -> Cli {
     .opt("backhaul", "1000", "simulate: edge→cloud backhaul bandwidth in Mbps")
     .opt("mobility", "scenario", "simulate: device mobility: static | waypoint (scenario = the preset's choice; city-mobile walks by default)")
     .opt("handover-cost", "0.05", "simulate: fixed control-plane cost per edge handover in seconds (torso-state relay over the old backhaul is charged on top)")
+    .opt("shards", "1", "simulate: event-engine shards over the edge sites (conservative-lookahead windows; any count replays --shards 1 byte-for-byte)")
     .opt("fault-plan", "", "simulate: fault-injection schedule file (one `<at_s> <kind> <site> [args]` per line; kinds: site-down, site-up, backhaul-degrade, backhaul-restore, flash-crowd); overrides the scenario's plan")
     .opt("trace-out", "", "simulate: enable per-request tracing and write the timeline here (.jsonl = JSON Lines, otherwise Chrome trace_event JSON for chrome://tracing / Perfetto)")
     .opt("trace-sample", "1", "simulate: record every Nth request in the trace (N >= 1; 1 = all; causal annotations are always recorded)")
@@ -305,6 +306,13 @@ fn run(args: &[String]) -> Result<()> {
             if parsed.provided("handover-cost") {
                 sim_cfg.handover_cost_s = parsed.get_f64("handover-cost");
             }
+            // --shards partitions the event engine over the edge sites
+            // (DESIGN.md §16). Pure wall-clock knob: every count must
+            // replay --shards 1 byte-for-byte, so no scenario guard is
+            // needed beyond the engine's own shards >= 1 validation.
+            if parsed.provided("shards") {
+                sim_cfg.shards = parsed.get_usize("shards");
+            }
             // --fault-plan replaces the scenario's fault schedule with a
             // file-scripted one (city-faulty ships a built-in schedule;
             // every other preset defaults to none). Parse errors carry
@@ -409,6 +417,9 @@ fn run(args: &[String]) -> Result<()> {
             );
             if !sim_cfg.faults.is_empty() {
                 println!("  injecting {} scheduled fault(s)", sim_cfg.faults.events.len());
+            }
+            if sim_cfg.shards > 1 {
+                println!("  event engine sharded {}-way (replays --shards 1 byte-for-byte)", sim_cfg.shards);
             }
             let report = sim::run(&sim_cfg)?;
             report.print();

@@ -106,10 +106,15 @@ pub enum Event {
     Horizon,
 }
 
-struct Entry {
-    time: SimTime,
-    seq: u64,
-    event: Event,
+/// One queued event: a timestamp, the global insertion sequence number
+/// (the FIFO tie-break), and the payload. Shared with the sharded
+/// engine ([`super::shard::ShardedQueue`]), whose per-shard heaps hold
+/// exactly these entries — same ordering, same tie-break, one global
+/// `seq` stream — so the two engines pop the identical total order.
+pub(crate) struct Entry {
+    pub(crate) time: SimTime,
+    pub(crate) seq: u64,
+    pub(crate) event: Event,
 }
 
 impl PartialEq for Entry {

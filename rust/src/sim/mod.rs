@@ -10,6 +10,11 @@
 //!
 //! * [`engine`] — virtual clock + binary-heap event queue (deterministic
 //!   under a fixed seed, FIFO tie-breaking);
+//! * [`shard`] — that queue partitioned by edge site (`--shards N`,
+//!   DESIGN.md §16): per-shard heaps drained in parallel behind
+//!   conservative-lookahead window barriers, dispatched sequentially
+//!   in the canonical global order, so every shard layout replays the
+//!   1-shard run byte-for-byte (`tests/shard_parity.rs`);
 //! * [`device`] — virtual smartphones: a [`crate::device::ComputeProfile`],
 //!   a battery integrating the §III power draw (driving
 //!   [`crate::coordinator::battery::BatteryBand`] re-splits as charge
@@ -51,6 +56,7 @@ pub mod engine;
 pub mod faults;
 pub mod mobility;
 pub mod scenario;
+pub mod shard;
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
@@ -82,6 +88,7 @@ pub use scenario::{
     city_faulty, city_mobile, city_scale, city_scale_tiered, two_phone_fleet, ChurnConfig,
     EdgeSpec, ExplicitMember, FleetSpec, ObservabilityConfig, PlannerPerfConfig, SimConfig,
 };
+pub use shard::{lookahead_bound, ShardLayout, ShardSlice, ShardedQueue};
 
 /// Per-profile slice of the fleet report (devices sharing a
 /// [`crate::device::ComputeProfile`]).
@@ -113,6 +120,16 @@ pub struct SimReport {
     pub sim_end_s: f64,
     pub wall: Duration,
     pub events: u64,
+    /// Per-shard dispatch slices (one per configured engine shard).
+    /// Deliberately absent from [`SimReport::summary`] and every
+    /// export: shard accounting is layout-dependent by nature, while
+    /// exports must be layout-independent (the parity contract,
+    /// `tests/shard_parity.rs`).
+    pub shards: Vec<ShardSlice>,
+    /// Lookahead window barriers the sharded engine crossed.
+    pub shard_windows: u64,
+    /// Events scheduled across a shard boundary (cross-shard traffic).
+    pub cross_shard_events: u64,
     pub devices_created: usize,
     pub devices_active_end: usize,
     pub joined: u64,
@@ -289,6 +306,20 @@ impl SimReport {
             self.events,
             self.events_per_wall_second()
         );
+        if self.shards.len() > 1 {
+            let per: Vec<String> = self
+                .shards
+                .iter()
+                .map(|s| format!("{}:{}ev/{}sites", s.shard, s.events, s.sites))
+                .collect();
+            println!(
+                "  shards     : {} shards, {} windows, {} cross-shard events [{}]",
+                self.shards.len(),
+                self.shard_windows,
+                self.cross_shard_events,
+                per.join(" ")
+            );
+        }
         println!(
             "  fleet      : {} created, {} active at end, {} joined, {} left, {} dead batteries",
             self.devices_created,
@@ -480,7 +511,10 @@ struct Sim<'a> {
     /// pure functions of `(model, profile, bandwidth bucket, band)`).
     model: Arc<ModelProfile>,
     rng: Xoshiro256,
-    q: EventQueue,
+    /// The sharded event engine ([`ShardedQueue`], DESIGN.md §16) —
+    /// API- and replay-identical to the single-heap [`EventQueue`];
+    /// `cfg.shards == 1` is the frozen reference layout.
+    q: ShardedQueue,
     devices: Vec<SimDevice>,
     active: ActiveSet,
     clouds: Vec<SimCloud>,
@@ -594,6 +628,9 @@ impl<'a> Sim<'a> {
         if cfg.fleet.initial_count() == 0 {
             bail!("sim needs at least one initial device");
         }
+        if cfg.shards == 0 {
+            bail!("sim needs at least one event-engine shard (--shards 1 is the reference layout)");
+        }
         let obs = cfg.observability;
         if !(obs.window_s >= 0.0) || !obs.window_s.is_finite() {
             bail!(
@@ -666,11 +703,21 @@ impl<'a> Sim<'a> {
         } else {
             None
         };
+        // Shard layout: the topology's contiguous site partition, or a
+        // degenerate siteless layout without an edge tier (every event
+        // then routes to shard 0). The lookahead window is the minimum
+        // cross-shard delay — correctness never depends on it (the
+        // merge enforces global order), only drain batch size does.
+        let layout = match &topology {
+            Some(t) => ShardLayout::for_topology(cfg.shards, t),
+            None => ShardLayout::contiguous(cfg.shards, 0),
+        };
+        let lookahead = lookahead_bound(topology.as_ref(), cfg.handover_cost_s);
         Ok(Sim {
             cfg,
             model,
             rng: Xoshiro256::seed_from_u64(cfg.seed),
-            q: EventQueue::new(),
+            q: ShardedQueue::new(layout, lookahead),
             devices: Vec::new(),
             active: ActiveSet::default(),
             clouds: (0..cfg.clouds.max(1))
@@ -979,6 +1026,9 @@ impl<'a> Sim<'a> {
             self.target_site.push(edge.map(|e| e.site).unwrap_or(usize::MAX));
             self.handover_seq.push(0);
         }
+        // Shard routing metadata: the device's events live on its
+        // serving site's shard (shard 0 while unattached).
+        self.q.attach_device(id, edge.map(|e| e.site));
         if let Some(walk) = self.walk {
             // The walker starts in its spawn site's *natural* cell (its
             // physical position — under an outage the serving site may
@@ -1540,6 +1590,8 @@ impl<'a> Sim<'a> {
         }
         let attachment = self.attachment_at(site);
         self.devices[device].edge = Some(attachment);
+        // The device's events follow it onto the new site's shard.
+        self.q.attach_device(device, Some(site));
         if failover {
             self.counters.failover_reattaches += 1;
             if let Some(s) = self.series.as_mut() {
@@ -1728,6 +1780,7 @@ impl<'a> Sim<'a> {
                     // two-tier until a site comes back.
                     self.target_site[d] = usize::MAX;
                     self.devices[d].edge = None;
+                    self.q.attach_device(d, None);
                     self.failover_replan(d, now);
                 }
             }
@@ -2022,6 +2075,9 @@ impl<'a> Sim<'a> {
             sim_end_s: self.q.now(),
             wall,
             events: self.q.processed(),
+            shards: self.q.shard_slices(),
+            shard_windows: self.q.windows(),
+            cross_shard_events: self.q.cross_shard_events(),
             devices_created: self.devices.len(),
             devices_active_end: self.active.len(),
             joined: self.counters.joined,

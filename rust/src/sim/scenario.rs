@@ -320,6 +320,14 @@ pub struct SimConfig {
     /// (`tests/fault_injection.rs`). A non-empty plan requires an edge
     /// tier.
     pub faults: FaultPlan,
+    /// Event-engine shards ([`crate::sim::shard::ShardedQueue`],
+    /// DESIGN.md §16): the queue is partitioned over the edge sites
+    /// into this many shards and drained behind conservative-lookahead
+    /// window barriers. `1` (every preset's default) is the frozen
+    /// single-heap reference layout; any other count must replay it
+    /// byte-for-byte (`tests/shard_parity.rs`) — the knob trades wall
+    /// clock, never results.
+    pub shards: usize,
 }
 
 /// The paper's two-phone testbed, matching `main.rs`'s live `fleet`
@@ -365,6 +373,7 @@ pub fn two_phone_fleet(
         handover_cost_s: DEFAULT_HANDOVER_COST_S,
         observability: ObservabilityConfig::disabled(),
         faults: FaultPlan::none(),
+        shards: 1,
     }
 }
 
@@ -410,6 +419,7 @@ pub fn city_scale(model: &str, devices: usize, duration_s: f64, seed: u64) -> Si
         handover_cost_s: DEFAULT_HANDOVER_COST_S,
         observability: ObservabilityConfig::disabled(),
         faults: FaultPlan::none(),
+        shards: 1,
     }
 }
 
@@ -543,6 +553,12 @@ mod tests {
         }
         assert!(cfg.churn.is_some());
         assert!(cfg.idle_drain_w > 0.0);
+        // Every preset ships on the 1-shard reference engine layout.
+        assert_eq!(cfg.shards, 1);
+        assert_eq!(two_phone_fleet("alexnet", 10.0, Nsga2Params::for_tiny_genome(), 7).shards, 1);
+        assert_eq!(city_scale_tiered("alexnet", 100, 3, 60.0, 7).shards, 1);
+        assert_eq!(city_mobile("alexnet", 100, 3, 60.0, 7).shards, 1);
+        assert_eq!(city_faulty("alexnet", 100, 3, 60.0, 7).shards, 1);
         // Small fleets still get at least one cloud.
         assert_eq!(city_scale("alexnet", 10, 60.0, 7).clouds, 1);
     }

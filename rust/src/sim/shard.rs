@@ -1,0 +1,728 @@
+//! Sharded event engine: the single binary-heap queue of
+//! [`super::engine::EventQueue`] partitioned by edge site, with
+//! conservative-lookahead windows (DESIGN.md §16).
+//!
+//! # Why sharding cannot mean parallel *dispatch* here
+//!
+//! The repo's determinism contract (PRs 2–7) is byte-for-byte replay:
+//! one scenario RNG stream, one planner cache, one global FIFO
+//! sequence. Any engine that dispatches two handlers concurrently
+//! races those shared streams and the contract is gone. So the
+//! sharded engine keeps dispatch **sequential in the canonical global
+//! (time, seq) order** — a deterministic k-way merge over per-shard
+//! heaps that share one global `seq` counter — and confines
+//! parallelism to the *window drains*: at each window barrier every
+//! shard pops its due entries (already locally ordered by its heap)
+//! into a sorted run, on scoped threads
+//! ([`crate::util::pool::scoped_for_each`]) when the backlog is worth
+//! it. Pop order is identical to the one big heap by induction:
+//! identical pops ⇒ identical handler execution ⇒ identical schedules
+//! and `seq` assignment ⇒ identical next pop.
+//!
+//! # The lookahead bound
+//!
+//! Windows are sized by [`lookahead_bound`]: no event generated while
+//! dispatching at one site can take effect at another site sooner
+//! than the cheapest cross-site path — an edge handover costs at
+//! least the configured handover relay plus one backhaul hop, and
+//! every cloud round-trip crosses a backhaul too. The bound is a
+//! *performance* parameter only (it sets how much work each drain
+//! batches); the merge enforces global order unconditionally, which
+//! is exactly why arbitrary — even randomized — shard layouts replay
+//! the 1-shard reference byte-for-byte (`tests/shard_parity.rs`).
+//!
+//! Determinism note: this module is in detlint's export plane — no
+//! hasher-ordered containers, no relaxed atomics, no wall clock.
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::engine::{Entry, Event, SimTime};
+use crate::edge::EdgeTopology;
+use crate::util::pool;
+use crate::util::rng::Xoshiro256;
+
+/// Fallback lookahead when the topology gives no positive bound
+/// (no edge tier, or a free backhaul with zero handover cost):
+/// one default handover relay (50 ms).
+pub const DEFAULT_LOOKAHEAD_S: f64 = 0.05;
+
+/// Window drains only fork scoped threads when the heaps hold at
+/// least this many entries in total; below it the per-window drain is
+/// cheaper inline than the thread spawn/join. A deterministic
+/// function of queue state, so the threshold can never affect replay.
+const PARALLEL_DRAIN_MIN_EVENTS: usize = 4096;
+
+/// Conservative lookahead for a scenario: the minimum cross-shard
+/// event delay, `handover_cost + min(backhaul latency)`. Falls back
+/// to [`DEFAULT_LOOKAHEAD_S`] when the bound degenerates to zero (or
+/// there is no edge tier at all — then every event routes to shard 0
+/// and the window size is moot anyway).
+pub fn lookahead_bound(topology: Option<&EdgeTopology>, handover_cost_s: f64) -> f64 {
+    let Some(topo) = topology else {
+        return DEFAULT_LOOKAHEAD_S;
+    };
+    let bound = handover_cost_s.max(0.0) + topo.min_backhaul_latency_s();
+    if bound.is_finite() && bound > 0.0 {
+        bound
+    } else {
+        DEFAULT_LOOKAHEAD_S
+    }
+}
+
+/// Which shard owns each edge site. Devices inherit the shard of the
+/// site they are attached to; fleet-plane and cloud-plane events live
+/// on shard 0. The layout decides *load balance only* — never results
+/// (the parity property `tests/shard_parity.rs` pins down with
+/// randomized layouts).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardLayout {
+    /// `site_shard[k]` = shard owning site `k`; values `< shards`.
+    site_shard: Vec<u32>,
+    shards: usize,
+}
+
+impl ShardLayout {
+    /// Everything on one shard — the frozen reference configuration.
+    pub fn single(num_sites: usize) -> ShardLayout {
+        ShardLayout { site_shard: vec![0; num_sites], shards: 1 }
+    }
+
+    /// Contiguous near-equal split of `num_sites` sites into `shards`
+    /// groups (first `num_sites % shards` groups one site larger) —
+    /// the same arithmetic as [`EdgeTopology::shard_map`].
+    pub fn contiguous(shards: usize, num_sites: usize) -> ShardLayout {
+        let shards = shards.max(1);
+        let base = num_sites / shards;
+        let extra = num_sites % shards;
+        let mut site_shard = Vec::with_capacity(num_sites);
+        for shard in 0..shards {
+            let len = base + usize::from(shard < extra);
+            for _ in 0..len {
+                site_shard.push(shard as u32);
+            }
+        }
+        ShardLayout { site_shard, shards }
+    }
+
+    /// The layout the simulator uses: [`EdgeTopology::shard_map`] over
+    /// the scenario's real topology.
+    pub fn for_topology(shards: usize, topo: &EdgeTopology) -> ShardLayout {
+        ShardLayout { site_shard: topo.shard_map(shards), shards: shards.max(1) }
+    }
+
+    /// A seeded uniformly random site→shard assignment — pathological
+    /// on purpose (shards may own scattered or zero sites), used by
+    /// the parity property tests to show the layout cannot matter.
+    pub fn random(shards: usize, num_sites: usize, seed: u64) -> ShardLayout {
+        let shards = shards.max(1);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let site_shard =
+            (0..num_sites).map(|_| rng.gen_range(0, shards - 1) as u32).collect();
+        ShardLayout { site_shard, shards }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn num_sites(&self) -> usize {
+        self.site_shard.len()
+    }
+
+    /// Shard owning `site` (shard 0 for sites beyond the map — the
+    /// flat-city degenerate where no edge tier exists).
+    pub fn shard_of_site(&self, site: usize) -> u32 {
+        self.site_shard.get(site).copied().unwrap_or(0)
+    }
+
+    /// How many sites `shard` owns.
+    pub fn sites_in(&self, shard: u32) -> usize {
+        self.site_shard.iter().filter(|&&s| s == shard).count()
+    }
+}
+
+/// Per-shard event state: the unpopped heap plus the current window's
+/// drained run (sorted by (time, seq) — heap pop order).
+#[derive(Default)]
+struct Shard {
+    heap: BinaryHeap<Entry>,
+    run: VecDeque<Entry>,
+    popped: u64,
+}
+
+impl Shard {
+    /// Move every heap entry due in the current window (`time <=
+    /// window_end`, inclusive so a zero lookahead still drains the
+    /// frontier events) onto the back of the run. Heap pops are
+    /// (time, seq)-ordered, so the run stays sorted.
+    fn drain_due(&mut self, window_end: SimTime) {
+        while let Some(top) = self.heap.peek() {
+            if top.time > window_end {
+                break;
+            }
+            let entry = self.heap.pop().expect("peeked heap entry");
+            self.run.push_back(entry);
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len() + self.run.len()
+    }
+}
+
+/// Per-shard share of the run, reported in
+/// [`crate::sim::SimReport`]: how many sites the shard owned and how
+/// many events it dispatched.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSlice {
+    pub shard: usize,
+    /// Sites owned by this shard under the run's layout.
+    pub sites: usize,
+    /// Events dispatched from this shard's queue.
+    pub events: u64,
+}
+
+/// Drop-in replacement for [`super::engine::EventQueue`] with the
+/// identical scheduling API and the identical pop order, for every
+/// layout. See the module docs for the protocol.
+pub struct ShardedQueue {
+    layout: ShardLayout,
+    shards: Vec<Shard>,
+    /// `device_shard[d]` = shard owning device `d`'s current edge
+    /// attachment (shard 0 when detached) — maintained by
+    /// [`ShardedQueue::attach_device`] from spawn/re-attach/outage
+    /// paths so device-keyed events route to the owning shard.
+    device_shard: Vec<u32>,
+    /// One global insertion sequence across all shards: the FIFO
+    /// tie-break, byte-compatible with the single-heap engine.
+    seq: u64,
+    now: SimTime,
+    popped: u64,
+    /// Current window's inclusive upper edge; entries at or below it
+    /// are drained into runs and eligible to pop.
+    window_end: SimTime,
+    lookahead: f64,
+    windows: u64,
+    cross_shard: u64,
+    /// Shard of the most recently popped event — the "sender" against
+    /// which [`ShardedQueue::schedule`] classifies cross-shard sends.
+    current_shard: u32,
+}
+
+impl ShardedQueue {
+    pub fn new(layout: ShardLayout, lookahead: f64) -> ShardedQueue {
+        let lookahead = if lookahead.is_finite() && lookahead > 0.0 {
+            lookahead
+        } else {
+            DEFAULT_LOOKAHEAD_S
+        };
+        let shards = (0..layout.shards()).map(|_| Shard::default()).collect();
+        ShardedQueue {
+            layout,
+            shards,
+            device_shard: Vec::new(),
+            seq: 0,
+            now: 0.0,
+            popped: 0,
+            // Below every legal timestamp, so the very first pop opens
+            // window 1 at the earliest scheduled event.
+            window_end: f64::NEG_INFINITY,
+            lookahead,
+            windows: 0,
+            cross_shard: 0,
+            current_shard: 0,
+        }
+    }
+
+    /// Current virtual time — the timestamp of the last popped event.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Events popped so far (the `events/sec` numerator in `sim_scale`).
+    pub fn processed(&self) -> u64 {
+        self.popped
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(Shard::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.len() == 0)
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Window barriers crossed so far.
+    pub fn windows(&self) -> u64 {
+        self.windows
+    }
+
+    /// Events that were scheduled onto a different shard than the one
+    /// dispatching them — the cross-shard message traffic a
+    /// distributed engine would put on the wire.
+    pub fn cross_shard_events(&self) -> u64 {
+        self.cross_shard
+    }
+
+    /// The conservative lookahead this queue windows by.
+    pub fn lookahead(&self) -> f64 {
+        self.lookahead
+    }
+
+    /// Record device `device`'s edge attachment (`None` = detached).
+    /// Pure routing metadata: it decides which shard's heap the
+    /// device's events land in, never their order.
+    pub fn attach_device(&mut self, device: usize, site: Option<usize>) {
+        if device >= self.device_shard.len() {
+            self.device_shard.resize(device + 1, 0);
+        }
+        self.device_shard[device] = match site {
+            Some(s) => self.layout.shard_of_site(s),
+            None => 0,
+        };
+    }
+
+    fn shard_of_device(&self, device: usize) -> u32 {
+        self.device_shard.get(device).copied().unwrap_or(0)
+    }
+
+    /// Event routing: site-keyed events go to the site's shard,
+    /// device-keyed events to the device's attached site's shard, and
+    /// fleet-plane / cloud-plane events to shard 0 (the coordinator
+    /// shard — arrivals, churn, re-optimise sweeps, and the cloud tier
+    /// are global state no site owns).
+    fn route(&self, event: &Event) -> u32 {
+        match event {
+            Event::Arrival
+            | Event::Reoptimize
+            | Event::Join
+            | Event::Horizon
+            | Event::CloudArrive { .. }
+            | Event::CloudDone { .. } => 0,
+            Event::Uplinked { site, device, .. } => match site {
+                Some(s) => self.layout.shard_of_site(*s),
+                None => self.shard_of_device(*device),
+            },
+            Event::EdgeDone { site, .. }
+            | Event::Reattach { site, .. }
+            | Event::SiteDown { site }
+            | Event::SiteUp { site }
+            | Event::BackhaulDegrade { site, .. }
+            | Event::BackhaulRestore { site }
+            | Event::FlashCrowdStart { site, .. }
+            | Event::FlashCrowdEnd { site } => self.layout.shard_of_site(*site),
+            Event::Handover { device } | Event::Leave { device } => {
+                self.shard_of_device(*device)
+            }
+        }
+    }
+
+    /// Schedule `event` at absolute time `at` (clamped to the present,
+    /// like the single-heap engine).
+    pub fn schedule(&mut self, at: SimTime, event: Event) {
+        debug_assert!(at.is_finite(), "non-finite event time");
+        let target = self.route(&event);
+        if target != self.current_shard {
+            self.cross_shard += 1;
+        }
+        let entry = Entry { time: at.max(self.now), seq: self.seq, event };
+        self.seq += 1;
+        self.shards[target as usize].heap.push(entry);
+    }
+
+    /// Schedule `event` at `dt` seconds from now.
+    pub fn schedule_in(&mut self, dt: SimTime, event: Event) {
+        debug_assert!(dt >= 0.0, "negative delay {dt}");
+        self.schedule(self.now + dt.max(0.0), event);
+    }
+
+    /// Pop the global-earliest event, advancing the virtual clock —
+    /// the k-way merge. The candidate set is every shard's run front
+    /// plus every in-window heap top (events scheduled *during* the
+    /// current window land in heaps and must compete immediately);
+    /// when the window is exhausted, the next one opens at the
+    /// earliest remaining heap entry plus the lookahead, and all
+    /// shards drain in parallel behind that barrier.
+    pub fn pop(&mut self) -> Option<(SimTime, Event)> {
+        loop {
+            if let Some((shard, from_run)) = self.best_candidate() {
+                let entry = if from_run {
+                    self.shards[shard].run.pop_front().expect("candidate run front")
+                } else {
+                    self.shards[shard].heap.pop().expect("candidate heap top")
+                };
+                self.now = entry.time;
+                self.popped += 1;
+                self.shards[shard].popped += 1;
+                self.current_shard = shard as u32;
+                return Some((entry.time, entry.event));
+            }
+            // No in-window work anywhere: cross the barrier into the
+            // next window (runs are all empty here — run fronts are
+            // unconditional candidates).
+            let next = self.next_heap_time()?;
+            self.window_end = next + self.lookahead;
+            self.windows += 1;
+            self.drain_window();
+        }
+    }
+
+    /// The globally (time, seq)-smallest eligible entry:
+    /// `(shard, from_run)`, or `None` when no shard has in-window work.
+    fn best_candidate(&self) -> Option<(usize, bool)> {
+        let mut best: Option<(SimTime, u64, usize, bool)> = None;
+        for (i, sh) in self.shards.iter().enumerate() {
+            if let Some(front) = sh.run.front() {
+                consider(&mut best, front.time, front.seq, i, true);
+            }
+            if let Some(top) = sh.heap.peek() {
+                if top.time <= self.window_end {
+                    consider(&mut best, top.time, top.seq, i, false);
+                }
+            }
+        }
+        best.map(|(_, _, shard, from_run)| (shard, from_run))
+    }
+
+    /// Earliest timestamp still heaped across all shards.
+    fn next_heap_time(&self) -> Option<SimTime> {
+        let mut next: Option<SimTime> = None;
+        for sh in &self.shards {
+            if let Some(top) = sh.heap.peek() {
+                next = Some(match next {
+                    None => top.time,
+                    Some(t) => t.min(top.time),
+                });
+            }
+        }
+        next
+    }
+
+    /// The window barrier's drain phase: every shard moves its due
+    /// entries into its run — on scoped threads when the backlog
+    /// clears [`PARALLEL_DRAIN_MIN_EVENTS`], inline otherwise. The
+    /// threshold is a pure function of queue state and the drain
+    /// output is per-shard-local, so thread count never touches replay.
+    fn drain_window(&mut self) {
+        let window_end = self.window_end;
+        let backlog: usize = self.shards.iter().map(|s| s.heap.len()).sum();
+        if self.shards.len() > 1 && backlog >= PARALLEL_DRAIN_MIN_EVENTS {
+            pool::scoped_for_each(&mut self.shards, |_, sh| sh.drain_due(window_end));
+        } else {
+            for sh in &mut self.shards {
+                sh.drain_due(window_end);
+            }
+        }
+    }
+
+    /// Per-shard dispatch stats for [`crate::sim::SimReport`].
+    pub fn shard_slices(&self) -> Vec<ShardSlice> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, sh)| ShardSlice {
+                shard: i,
+                sites: self.layout.sites_in(i as u32),
+                events: sh.popped,
+            })
+            .collect()
+    }
+}
+
+/// Keep the (time, seq)-smallest candidate. Free function so the
+/// borrow in [`ShardedQueue::best_candidate`] stays immutable.
+fn consider(
+    best: &mut Option<(SimTime, u64, usize, bool)>,
+    time: SimTime,
+    seq: u64,
+    shard: usize,
+    from_run: bool,
+) {
+    let earlier = match best {
+        None => true,
+        Some((t, q, _, _)) => time < *t || (time == *t && seq < *q),
+    };
+    if earlier {
+        *best = Some((time, seq, shard, from_run));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::EventQueue;
+
+    fn q(layout: ShardLayout) -> ShardedQueue {
+        ShardedQueue::new(layout, 0.05)
+    }
+
+    #[test]
+    fn single_shard_mirrors_the_reference_engine() {
+        let mut a = EventQueue::new();
+        let mut b = q(ShardLayout::single(3));
+        for (t, ev) in [
+            (3.0, Event::Arrival),
+            (1.0, Event::Horizon),
+            (2.0, Event::Join),
+            (1.0, Event::Reoptimize),
+        ] {
+            a.schedule(t, ev.clone());
+            b.schedule(t, ev);
+        }
+        while !a.is_empty() {
+            assert_eq!(a.pop(), b.pop());
+            assert_eq!(a.now(), b.now());
+        }
+        assert!(b.pop().is_none());
+        assert_eq!(a.processed(), b.processed());
+    }
+
+    #[test]
+    fn equal_timestamps_pop_fifo_across_shards() {
+        // 100 same-timestamp events scattered over 4 shards by site:
+        // the global seq tie-break must reproduce submission order.
+        let mut sq = q(ShardLayout::contiguous(4, 8));
+        for s in 0..100 {
+            sq.schedule(5.0, Event::SiteDown { site: s % 8 });
+        }
+        for s in 0..100 {
+            assert_eq!(sq.pop(), Some((5.0, Event::SiteDown { site: s % 8 })));
+        }
+        assert!(sq.pop().is_none());
+    }
+
+    #[test]
+    fn past_schedules_clamp_and_schedule_in_is_relative() {
+        let mut sq = q(ShardLayout::contiguous(2, 4));
+        sq.schedule(10.0, Event::Arrival);
+        sq.pop();
+        sq.schedule(4.0, Event::SiteDown { site: 3 }); // the past clamps
+        sq.schedule_in(2.5, Event::Horizon);
+        assert_eq!(sq.pop(), Some((10.0, Event::SiteDown { site: 3 })));
+        assert_eq!(sq.pop(), Some((12.5, Event::Horizon)));
+    }
+
+    #[test]
+    fn mid_window_schedules_compete_immediately() {
+        // An event scheduled during the current window, earlier than
+        // remaining drained work, must pop before it — the heap-top
+        // candidate path.
+        let mut sq = ShardedQueue::new(ShardLayout::contiguous(2, 4), 10.0);
+        sq.schedule(1.0, Event::Arrival);
+        sq.schedule(5.0, Event::SiteDown { site: 3 });
+        assert_eq!(sq.pop(), Some((1.0, Event::Arrival)));
+        // Window is [1, 11]; both below entries are in-window but only
+        // in the heap, never pre-drained.
+        sq.schedule(2.0, Event::SiteUp { site: 3 });
+        assert_eq!(sq.pop(), Some((2.0, Event::SiteUp { site: 3 })));
+        assert_eq!(sq.pop(), Some((5.0, Event::SiteDown { site: 3 })));
+    }
+
+    #[test]
+    fn window_count_tracks_the_lookahead() {
+        // Three events one window apart: three barriers. Three events
+        // inside one lookahead: one barrier.
+        let mut sparse = ShardedQueue::new(ShardLayout::contiguous(2, 4), 0.05);
+        for t in [0.0, 10.0, 20.0] {
+            sparse.schedule(t, Event::Arrival);
+        }
+        while sparse.pop().is_some() {}
+        assert_eq!(sparse.windows(), 3);
+
+        let mut dense = ShardedQueue::new(ShardLayout::contiguous(2, 4), 0.05);
+        for t in [0.0, 0.01, 0.02] {
+            dense.schedule(t, Event::Arrival);
+        }
+        while dense.pop().is_some() {}
+        assert_eq!(dense.windows(), 1);
+    }
+
+    #[test]
+    fn routing_follows_sites_and_device_attachments() {
+        let mut sq = q(ShardLayout::contiguous(2, 4)); // sites {0,1}→0, {2,3}→1
+        sq.attach_device(7, Some(3));
+        assert_eq!(sq.route(&Event::SiteDown { site: 1 }), 0);
+        assert_eq!(sq.route(&Event::SiteDown { site: 2 }), 1);
+        assert_eq!(sq.route(&Event::Handover { device: 7 }), 1);
+        assert_eq!(sq.route(&Event::Leave { device: 99 }), 0, "unknown device → shard 0");
+        assert_eq!(sq.route(&Event::Arrival), 0, "fleet plane → shard 0");
+        assert_eq!(
+            sq.route(&Event::CloudDone { req: 0, cloud: 0, device: 7, issued: 0.0 }),
+            0,
+            "cloud plane → shard 0"
+        );
+        sq.attach_device(7, None);
+        assert_eq!(sq.route(&Event::Handover { device: 7 }), 0, "detached → shard 0");
+    }
+
+    #[test]
+    fn cross_shard_sends_are_counted() {
+        let mut sq = q(ShardLayout::contiguous(2, 4));
+        // current_shard starts at 0: a site-2 event is a cross-shard send.
+        sq.schedule(1.0, Event::SiteDown { site: 2 });
+        assert_eq!(sq.cross_shard_events(), 1);
+        // Same-shard send from shard 0: not counted.
+        sq.schedule(1.0, Event::Arrival);
+        assert_eq!(sq.cross_shard_events(), 1);
+        // After popping the site-2 event we dispatch *from* shard 1, so
+        // a site-3 (same shard) send is local again…
+        sq.pop(); // site 2 (t=1.0, seq 0)
+        sq.schedule(2.0, Event::SiteUp { site: 3 });
+        assert_eq!(sq.cross_shard_events(), 1);
+        // …and a shard-0 send crosses back.
+        sq.schedule(2.0, Event::Reoptimize);
+        assert_eq!(sq.cross_shard_events(), 2);
+    }
+
+    #[test]
+    fn shard_slices_account_sites_and_events() {
+        let mut sq = q(ShardLayout::contiguous(2, 3)); // sites {0,1}→0, {2}→1
+        sq.schedule(1.0, Event::SiteDown { site: 0 });
+        sq.schedule(2.0, Event::SiteDown { site: 2 });
+        sq.schedule(3.0, Event::SiteUp { site: 2 });
+        while sq.pop().is_some() {}
+        let slices = sq.shard_slices();
+        assert_eq!(slices.len(), 2);
+        assert_eq!(slices[0], ShardSlice { shard: 0, sites: 2, events: 1 });
+        assert_eq!(slices[1], ShardSlice { shard: 1, sites: 1, events: 2 });
+        assert_eq!(sq.processed(), 3);
+    }
+
+    #[test]
+    fn parallel_drain_path_preserves_global_order() {
+        // Enough backlog to clear PARALLEL_DRAIN_MIN_EVENTS so the
+        // scoped-thread drain actually runs, mirrored against the
+        // single-heap reference.
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        let mut reference = EventQueue::new();
+        let mut sq = ShardedQueue::new(ShardLayout::contiguous(4, 16), 1.0);
+        for _ in 0..6000 {
+            let t = rng.next_f64() * 3.0; // dense: most land in window 1
+            let ev = Event::SiteDown { site: rng.gen_range(0, 15) };
+            reference.schedule(t, ev.clone());
+            sq.schedule(t, ev);
+        }
+        loop {
+            let a = reference.pop();
+            let b = sq.pop();
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+        assert_eq!(sq.processed(), 6000);
+    }
+
+    fn random_event(rng: &mut Xoshiro256, sites: usize, devices: usize) -> Event {
+        match rng.gen_range(0, 7) {
+            0 => Event::Arrival,
+            1 => Event::Reoptimize,
+            2 => Event::SiteDown { site: rng.gen_range(0, sites - 1) },
+            3 => Event::SiteUp { site: rng.gen_range(0, sites - 1) },
+            4 => Event::Handover { device: rng.gen_range(0, devices - 1) },
+            5 => Event::Leave { device: rng.gen_range(0, devices - 1) },
+            _ => Event::FlashCrowdEnd { site: rng.gen_range(0, sites - 1) },
+        }
+    }
+
+    /// The heart of the parity contract: for seeded *random* layouts
+    /// (scattered, unbalanced, some shards siteless), a random op
+    /// stream of bursty same-timestamp schedules, interleaved pops,
+    /// and mid-stream re-attachments pops identically to the
+    /// single-heap reference, event for event, clock tick for clock
+    /// tick.
+    #[test]
+    fn random_layouts_never_reorder_against_the_reference() {
+        const SITES: usize = 7;
+        const DEVICES: usize = 12;
+        for seed in 0..8u64 {
+            let layout = ShardLayout::random(1 + (seed as usize % 7), SITES, seed * 31 + 5);
+            let mut reference = EventQueue::new();
+            let mut sq = ShardedQueue::new(layout, 0.02);
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            for d in 0..DEVICES {
+                sq.attach_device(d, Some(d % SITES));
+            }
+            let mut scheduled = 0u32;
+            loop {
+                if scheduled < 400 {
+                    for _ in 0..rng.gen_range(0, 3) {
+                        // Coarse time grid → frequent FIFO ties.
+                        let t = reference.now() + rng.gen_range(0, 4) as f64 * 0.01;
+                        let ev = random_event(&mut rng, SITES, DEVICES);
+                        reference.schedule(t, ev.clone());
+                        sq.schedule(t, ev);
+                        scheduled += 1;
+                    }
+                }
+                if rng.gen_bool(0.1) {
+                    // Routing churn mid-stream: must not affect order.
+                    let d = rng.gen_range(0, DEVICES - 1);
+                    let s = rng.gen_range(0, SITES - 1);
+                    sq.attach_device(d, Some(s));
+                }
+                let a = reference.pop();
+                let b = sq.pop();
+                assert_eq!(a, b, "seed {seed}");
+                assert_eq!(reference.now(), sq.now(), "seed {seed}");
+                if a.is_none() && scheduled >= 400 {
+                    break;
+                }
+            }
+            assert_eq!(reference.processed(), sq.processed(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn lookahead_bound_derivation() {
+        use crate::device::profiles;
+        use crate::edge::{BackhaulLink, EdgeSite};
+        let topo = EdgeTopology::uniform(
+            3,
+            EdgeSite {
+                servers: 1,
+                profile: profiles::edge_server(),
+                backhaul: BackhaulLink::METRO_1GBE,
+            },
+        );
+        // handover cost + cheapest backhaul hop.
+        assert_eq!(lookahead_bound(Some(&topo), 0.05), 0.05 + 2e-3);
+        assert_eq!(lookahead_bound(Some(&topo), -1.0), 2e-3, "negative cost clamps");
+        // Degenerate bounds fall back.
+        let free = EdgeTopology::uniform(
+            2,
+            EdgeSite { servers: 1, profile: profiles::edge_server(), backhaul: BackhaulLink::FREE },
+        );
+        assert_eq!(lookahead_bound(Some(&free), 0.0), DEFAULT_LOOKAHEAD_S);
+        assert_eq!(lookahead_bound(None, 123.0), DEFAULT_LOOKAHEAD_S);
+        // A free backhaul with a real handover cost still bounds.
+        assert_eq!(lookahead_bound(Some(&free), 0.2), 0.2);
+    }
+
+    #[test]
+    fn layout_constructors_are_coherent() {
+        let single = ShardLayout::single(5);
+        assert_eq!(single.shards(), 1);
+        assert!((0..5).all(|s| single.shard_of_site(s) == 0));
+
+        let contig = ShardLayout::contiguous(3, 7);
+        assert_eq!(contig.shards(), 3);
+        assert_eq!(contig.num_sites(), 7);
+        assert_eq!(contig.sites_in(0) + contig.sites_in(1) + contig.sites_in(2), 7);
+        assert!(contig.sites_in(0) >= contig.sites_in(2));
+        assert!(contig.sites_in(0) - contig.sites_in(2) <= 1);
+
+        // Random layouts are seed-deterministic and in range.
+        let a = ShardLayout::random(4, 9, 42);
+        let b = ShardLayout::random(4, 9, 42);
+        assert_eq!(a, b);
+        assert!((0..9).all(|s| (a.shard_of_site(s) as usize) < 4));
+        assert_ne!(a, ShardLayout::random(4, 9, 43), "different seed, different layout");
+
+        assert_eq!(ShardLayout::contiguous(0, 3).shards(), 1, "0 clamps to 1");
+    }
+}

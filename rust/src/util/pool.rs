@@ -149,6 +149,33 @@ impl ThreadPool {
     }
 }
 
+/// Run `f` once per item on scoped threads and join them all before
+/// returning — a structural barrier. Unlike [`ThreadPool::run_all`],
+/// the closures may borrow non-`'static` state (each gets exclusive
+/// `&mut` access to its own item), which is exactly what the sharded
+/// event engine needs for its window drains: each shard's heap is
+/// drained in place, in parallel, and the scope join is the window
+/// barrier (`sim::shard`, DESIGN.md §16). With zero or one item the
+/// call runs inline — no threads, no overhead.
+pub fn scoped_for_each<T, F>(items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    if items.len() <= 1 {
+        if let Some(first) = items.first_mut() {
+            f(0, first);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        for (i, item) in items.iter_mut().enumerate() {
+            let f = &f;
+            s.spawn(move || f(i, item));
+        }
+    });
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         {
@@ -261,5 +288,40 @@ mod tests {
         assert!(ThreadPool::default_threads(8) >= 1);
         assert!(ThreadPool::default_threads(8) <= 8);
         assert_eq!(ThreadPool::default_threads(0), 1);
+    }
+
+    #[test]
+    fn scoped_for_each_visits_every_item_with_its_index() {
+        let mut items: Vec<(usize, u64)> = (0..16).map(|i| (usize::MAX, i as u64)).collect();
+        scoped_for_each(&mut items, |i, item| {
+            item.0 = i;
+            item.1 *= 2;
+        });
+        for (i, item) in items.iter().enumerate() {
+            assert_eq!(item.0, i);
+            assert_eq!(item.1, 2 * i as u64);
+        }
+    }
+
+    #[test]
+    fn scoped_for_each_borrows_local_state() {
+        // The whole point vs `run_all`: closures capture references to
+        // stack-local data (here a shared slice read by every worker).
+        let base: Vec<u64> = (0..8).collect();
+        let mut out = vec![0u64; 8];
+        scoped_for_each(&mut out, |i, slot| *slot = base[i] + 100);
+        assert_eq!(out, (100..108).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_for_each_handles_empty_and_single() {
+        let mut empty: Vec<u64> = Vec::new();
+        scoped_for_each(&mut empty, |_, _| panic!("no items, no calls"));
+        let mut one = vec![7u64];
+        scoped_for_each(&mut one, |i, x| {
+            assert_eq!(i, 0);
+            *x += 1;
+        });
+        assert_eq!(one, vec![8]);
     }
 }

@@ -159,6 +159,93 @@ fn faults_survive_mobility_and_conserve_requests() {
 }
 
 #[test]
+fn conservation_matrix_faults_x_mobility_x_shards() {
+    // The full cross product: randomized fault schedules on top of the
+    // waypoint walk, dispatched through every shard layout the parity
+    // suite covers. Conservation must hold at every shard count, and —
+    // stronger — each sharded run must replay its own 1-shard
+    // reference byte-for-byte even while outage storms and handovers
+    // race across shard boundaries.
+    for seed in [3u64, 11, 27] {
+        let mut base = sim::city_mobile("alexnet", 300, 4, 90.0, seed);
+        assert!(base.mobility.is_mobile());
+        base.faults = FaultPlan::random(seed, 4, 90.0);
+        base.planner_perf.record_decisions = true;
+        let reference = sim::run(&base).expect("1-shard faulty mobile run");
+        assert_eq!(
+            reference.generated,
+            reference.completed + reference.dropped,
+            "seed {seed}: conservation broken at 1 shard"
+        );
+        assert!(reference.fault_events > 0, "seed {seed}: schedule never fired");
+        for shards in [2usize, 4, 7] {
+            let mut cfg = base.clone();
+            cfg.shards = shards;
+            let r = sim::run(&cfg).expect("sharded faulty mobile run");
+            assert_eq!(
+                r.generated,
+                r.completed + r.dropped,
+                "seed {seed}: conservation broken at {shards} shards"
+            );
+            assert_eq!(
+                reference.decisions, r.decisions,
+                "seed {seed}: {shards} shards changed a decision under faults+mobility"
+            );
+            assert_eq!(
+                reference.summary(),
+                r.summary(),
+                "seed {seed}: {shards} shards changed the run under faults+mobility"
+            );
+            assert_eq!(reference.events, r.events);
+            assert_eq!(
+                (reference.failover_reattaches, reference.requests_rerouted, reference.handovers),
+                (r.failover_reattaches, r.requests_rerouted, r.handovers),
+                "seed {seed}: {shards} shards changed failover accounting"
+            );
+        }
+    }
+}
+
+#[test]
+fn site_down_races_an_in_flight_handover_across_a_shard_boundary() {
+    // The nastiest ordering in the sharded engine: a device's waypoint
+    // walk begins a handover toward a site owned by another shard, and
+    // the scripted schedule kills a site while that relay is still in
+    // flight. The outage storm (routed to the dead site's shard) and
+    // the pending `Reattach` (routed to the target site's shard) are
+    // same-window events on different shards; the epoch guard only
+    // works if they dispatch in the exact global order the 1-shard
+    // engine would use. `city_faulty`'s outage fires mid-run at 30 % of
+    // the horizon, squarely inside the mobile city's handover churn, so
+    // this schedule manufactures the race continuously for the whole
+    // outage window.
+    let mut base = sim::city_mobile("alexnet", 500, 3, 120.0, 13);
+    base.faults = FaultPlan::city_faulty(3, 120.0);
+    base.planner_perf.record_decisions = true;
+    let reference = sim::run(&base).expect("1-shard race run");
+    assert!(reference.handovers > 0, "mobility stalled under faults");
+    assert!(reference.failover_reattaches > 0, "outage forced no reattaches");
+    assert_eq!(reference.fault_events, 6);
+    assert_eq!(reference.generated, reference.completed + reference.dropped);
+
+    // One site per shard: every handover between distinct sites and the
+    // whole outage storm are cross-shard by construction.
+    let mut cfg = base.clone();
+    cfg.shards = 3;
+    let r = sim::run(&cfg).expect("3-shard race run");
+    assert!(r.cross_shard_events > 0, "the race never crossed a shard boundary");
+    assert_eq!(r.generated, r.completed + r.dropped, "conservation broken across the race");
+    assert_eq!(reference.decisions, r.decisions, "the race changed a split decision");
+    assert_eq!(reference.summary(), r.summary(), "the race changed the measured run");
+    assert_eq!(reference.events, r.events, "the race changed the event stream");
+    assert_eq!(
+        (reference.handovers, reference.failover_reattaches, reference.requests_rerouted),
+        (r.handovers, r.failover_reattaches, r.requests_rerouted),
+        "the race changed handover/failover accounting"
+    );
+}
+
+#[test]
 fn windowed_failovers_partition_run_totals() {
     let mut cfg = sim::city_faulty("alexnet", 500, 3, 120.0, 7);
     cfg.observability.window_s = 10.0;

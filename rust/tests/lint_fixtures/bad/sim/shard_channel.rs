@@ -1,0 +1,20 @@
+//! D2 + D4 fixture: the sharded engine's cross-shard channel sits on
+//! the export plane (its pop order is the decision stream), so both a
+//! thread-local RNG and a relaxed counter must trip here.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct CrossShardChannel {
+    sent: AtomicU64,
+}
+
+impl CrossShardChannel {
+    pub fn pick_shard(&self, shards: usize) -> usize {
+        use rand::Rng;
+        rand::thread_rng().gen_range(0..shards)
+    }
+
+    pub fn sent(&self) -> u64 {
+        self.sent.load(Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,248 @@
+//! Cross-layout replay parity (DESIGN.md §16): the sharded event
+//! engine is an internal reorganisation, never an observable one. For
+//! any shard count the decision stream, the event/planner accounting,
+//! the trace exports (JSONL + Chrome), and the metrics JSON must be
+//! byte-identical to the `--shards 1` reference run — across the
+//! static tiered city, the mobile city (handovers cross shard
+//! boundaries), and the faulty city (outage storms cross shard
+//! boundaries). A seeded property test additionally pins the core
+//! invariant at the queue level: randomized shard layouts never
+//! reorder same-timestamp events against the single-heap reference.
+
+use smartsplit::sim::{self, Event, EventQueue, ObservabilityConfig, ShardLayout, ShardedQueue};
+use smartsplit::util::rng::Xoshiro256;
+
+/// Everything observable about a run: decisions, the one-line summary,
+/// raw conservation counters, planner accounting, the final split
+/// distribution, and all three serialized exports.
+struct Artifacts {
+    decisions: Vec<(u32, u32, u32)>,
+    summary: String,
+    events: u64,
+    counts: (u64, u64, u64),
+    planner: smartsplit::metrics::PlannerStats,
+    splits: Vec<(smartsplit::edge::SplitPlan, u64)>,
+    trace_jsonl: String,
+    chrome_trace: String,
+    metrics_json: String,
+    report: sim::SimReport,
+}
+
+fn artifacts(mut cfg: sim::SimConfig, shards: usize) -> Artifacts {
+    cfg.shards = shards;
+    cfg.planner_perf.record_decisions = true;
+    cfg.observability = ObservabilityConfig::full(10.0);
+    let r = sim::run(&cfg).expect("sim run");
+    let tr = r.trace.as_ref().expect("tracing was on");
+    Artifacts {
+        decisions: r.decisions.clone(),
+        summary: r.summary(),
+        events: r.events,
+        counts: (r.generated, r.completed, r.dropped),
+        planner: r.planner,
+        splits: r.split_distribution.clone(),
+        trace_jsonl: tr.to_jsonl(),
+        chrome_trace: tr.to_chrome_trace(),
+        metrics_json: r
+            .metrics_json()
+            .expect("series was on")
+            .to_string_pretty(),
+        report: r,
+    }
+}
+
+/// The parity contract for one scenario: every shard count in
+/// `layouts` replays the 1-shard reference byte-for-byte, on every
+/// observable surface.
+fn assert_parity(cfg: sim::SimConfig, layouts: &[usize]) {
+    let reference = artifacts(cfg.clone(), 1);
+    assert!(!reference.decisions.is_empty(), "scenario exercised no planning");
+    assert!(reference.trace_jsonl.lines().count() > 2, "trivial trace export");
+    assert_eq!(reference.report.shards.len(), 1, "reference layout is not single-shard");
+
+    for &n in layouts {
+        let sharded = artifacts(cfg.clone(), n);
+        assert_eq!(
+            reference.decisions, sharded.decisions,
+            "--shards {n} changed a split decision"
+        );
+        assert_eq!(reference.summary, sharded.summary, "--shards {n} changed the summary");
+        assert_eq!(reference.events, sharded.events, "--shards {n} changed the event count");
+        assert_eq!(reference.counts, sharded.counts, "--shards {n} broke conservation parity");
+        assert_eq!(
+            reference.planner, sharded.planner,
+            "--shards {n} perturbed planner accounting"
+        );
+        assert_eq!(
+            reference.splits, sharded.splits,
+            "--shards {n} changed the split distribution"
+        );
+        assert_eq!(
+            reference.trace_jsonl, sharded.trace_jsonl,
+            "--shards {n} changed the JSONL trace export"
+        );
+        assert_eq!(
+            reference.chrome_trace, sharded.chrome_trace,
+            "--shards {n} changed the Chrome trace export"
+        );
+        assert_eq!(
+            reference.metrics_json, sharded.metrics_json,
+            "--shards {n} changed the metrics JSON export"
+        );
+        // The run really went through the sharded layout — the parity
+        // above is a statement about a different engine configuration,
+        // not a silent fallback to one shard.
+        assert_eq!(sharded.report.shards.len(), n, "--shards {n} was not honoured");
+        assert!(sharded.report.shard_windows > 0, "--shards {n} crossed no window barrier");
+    }
+}
+
+#[test]
+fn tiered_city_replays_byte_for_byte_across_shard_counts() {
+    let cfg = sim::city_scale_tiered("alexnet", 300, 3, 90.0, 7);
+    assert_parity(cfg, &[2, 4, 7]);
+}
+
+#[test]
+fn mobile_city_replays_byte_for_byte_across_shard_counts() {
+    // Handovers re-attach devices across shard boundaries mid-run; the
+    // relayed torso state and the migration re-solves must still land
+    // in the identical global order.
+    let cfg = sim::city_mobile("alexnet", 400, 3, 120.0, 9);
+    assert_parity(cfg, &[2, 4, 7]);
+}
+
+#[test]
+fn faulty_city_replays_byte_for_byte_across_shard_counts() {
+    // Outage storms force reattaches and reroutes across shard
+    // boundaries; the fault schedule itself is routed per-site, so the
+    // scripted events land on different shards per layout — and must
+    // still dispatch in the identical global order.
+    let cfg = sim::city_faulty("alexnet", 500, 3, 120.0, 7);
+    assert_parity(cfg, &[2, 4, 7]);
+}
+
+#[test]
+fn multi_shard_runs_actually_exchange_cross_shard_events() {
+    // Guard against a degenerate routing that pins everything to one
+    // shard (which would make the parity tests vacuous): with the
+    // fleet tick on shard 0 and sites spread over the layout, uplinks
+    // must cross shard boundaries.
+    let mut cfg = sim::city_scale_tiered("alexnet", 300, 3, 90.0, 7);
+    cfg.shards = 2;
+    let r = sim::run(&cfg).expect("sharded run");
+    assert!(r.cross_shard_events > 0, "no event ever crossed a shard boundary");
+    let busy = r.shards.iter().filter(|s| s.events > 0).count();
+    assert!(busy >= 2, "only {busy} shard(s) dispatched events");
+    let dispatched: u64 = r.shards.iter().map(|s| s.events).sum();
+    assert_eq!(dispatched, r.events, "per-shard slices do not partition the dispatch total");
+}
+
+/// Integration form of the property: a randomized shard count over a
+/// randomized tiered city replays the 1-shard reference exactly.
+#[test]
+fn random_shard_counts_replay_the_reference() {
+    use smartsplit::prop_assert;
+    use smartsplit::util::prop::run_prop;
+    run_prop("random shard counts replay --shards 1", 5, |g| {
+        let devices = g.usize_in(60, 150);
+        let sites = g.usize_in(2, 6);
+        let duration = *g.choice(&[30.0, 45.0, 60.0]);
+        let seed = g.usize_in(1, 9999) as u64;
+        let shards = g.usize_in(2, 8);
+        let mut cfg = sim::city_scale_tiered("alexnet", devices, sites, duration, seed);
+        cfg.planner_perf.record_decisions = true;
+        let mut sharded = cfg.clone();
+        sharded.shards = shards;
+        let a = sim::run(&cfg).map_err(|e| format!("reference failed: {e}"))?;
+        let b = sim::run(&sharded).map_err(|e| format!("sharded failed: {e}"))?;
+        prop_assert!(
+            a.decisions == b.decisions,
+            "{shards} shards changed a decision (devices={devices} sites={sites} seed={seed})"
+        );
+        prop_assert!(
+            a.summary() == b.summary(),
+            "{shards} shards changed the summary (devices={devices} sites={sites} seed={seed})"
+        );
+        prop_assert!(a.events == b.events, "{shards} shards changed the event count");
+        Ok(())
+    });
+}
+
+/// The queue-level core of the contract, against *randomized layouts*
+/// (not just the contiguous site split the simulator uses): whatever
+/// shard each site lands on, the sharded queue pops the identical
+/// `(time, event)` sequence as the single binary heap — including runs
+/// of same-timestamp events, whose FIFO insertion order must survive
+/// the per-shard heaps.
+#[test]
+fn random_layouts_never_reorder_same_timestamp_events() {
+    use smartsplit::prop_assert;
+    use smartsplit::util::prop::run_prop;
+    run_prop("random layouts keep FIFO order at equal timestamps", 8, |g| {
+        let sites = g.usize_in(2, 9);
+        let shards = g.usize_in(2, 8);
+        let seed = g.usize_in(1, u32::MAX as usize) as u64;
+        let layout = ShardLayout::random(shards, sites, seed);
+        let mut sharded = ShardedQueue::new(layout, 0.25);
+        let mut reference = EventQueue::new();
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x5eed);
+
+        // Interleave schedules and pops; a coarse time grid forces
+        // long runs of equal timestamps, the exact case a per-shard
+        // heap could reorder.
+        let devices = 16usize;
+        for d in 0..devices {
+            let site = if rng.gen_bool(0.8) { Some(rng.gen_range(0, sites - 1)) } else { None };
+            sharded.attach_device(d, site);
+        }
+        for _ in 0..400 {
+            if rng.gen_bool(0.7) || reference.is_empty() {
+                let t = (rng.gen_range(0, 40) as f64) * 0.5;
+                let ev = match rng.gen_range(0, 5) {
+                    0 => Event::Arrival,
+                    1 => Event::Handover { device: rng.gen_range(0, devices - 1) },
+                    2 => Event::SiteDown { site: rng.gen_range(0, sites - 1) },
+                    3 => Event::Leave { device: rng.gen_range(0, devices - 1) },
+                    _ => Event::CloudArrive {
+                        req: 1,
+                        device: rng.gen_range(0, devices - 1),
+                        issued: 0.0,
+                        tail_s: 0.1,
+                    },
+                };
+                sharded.schedule(t, ev.clone());
+                reference.schedule(t, ev);
+            } else {
+                let got = sharded.pop();
+                let want = reference.pop();
+                prop_assert!(
+                    got == want,
+                    "pop diverged under layout seed {seed} ({shards} shards / {sites} sites): \
+                     sharded {got:?} vs reference {want:?}"
+                );
+                // Mid-stream re-attachment churn must not disturb the
+                // already-scheduled order either.
+                if rng.gen_bool(0.2) {
+                    let d = rng.gen_range(0, devices - 1);
+                    let site =
+                        if rng.gen_bool(0.5) { Some(rng.gen_range(0, sites - 1)) } else { None };
+                    sharded.attach_device(d, site);
+                }
+            }
+        }
+        while let Some(want) = reference.pop() {
+            let got = sharded.pop();
+            prop_assert!(
+                got == Some(want.clone()),
+                "drain diverged under layout seed {seed}: sharded {got:?} vs reference {want:?}"
+            );
+        }
+        prop_assert!(sharded.pop().is_none(), "sharded queue held extra events");
+        prop_assert!(
+            sharded.processed() == reference.processed(),
+            "processed counters diverged"
+        );
+        Ok(())
+    });
+}
