@@ -128,7 +128,8 @@ pub struct SimReport {
     pub shards: Vec<ShardSlice>,
     /// Lookahead window barriers the sharded engine crossed.
     pub shard_windows: u64,
-    /// Events scheduled across a shard boundary (cross-shard traffic).
+    /// Events scheduled across a shard boundary (cross-shard traffic);
+    /// setup-time seeding before the first dispatch is excluded.
     pub cross_shard_events: u64,
     pub devices_created: usize,
     pub devices_active_end: usize,

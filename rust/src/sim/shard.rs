@@ -263,7 +263,9 @@ impl ShardedQueue {
 
     /// Events that were scheduled onto a different shard than the one
     /// dispatching them — the cross-shard message traffic a
-    /// distributed engine would put on the wire.
+    /// distributed engine would put on the wire. Setup-time seeding
+    /// (schedules before the first pop) is excluded: those events were
+    /// never dispatched *from* a shard.
     pub fn cross_shard_events(&self) -> u64 {
         self.cross_shard
     }
@@ -326,7 +328,9 @@ impl ShardedQueue {
     pub fn schedule(&mut self, at: SimTime, event: Event) {
         debug_assert!(at.is_finite(), "non-finite event time");
         let target = self.route(&event);
-        if target != self.current_shard {
+        // Setup-time seeding (before the first pop) has no dispatching
+        // shard, so it is never attributed as cross-shard traffic.
+        if self.popped > 0 && target != self.current_shard {
             self.cross_shard += 1;
         }
         let entry = Entry { time: at.max(self.now), seq: self.seq, event };
@@ -562,19 +566,23 @@ mod tests {
     #[test]
     fn cross_shard_sends_are_counted() {
         let mut sq = q(ShardLayout::contiguous(2, 4));
-        // current_shard starts at 0: a site-2 event is a cross-shard send.
+        // Setup-time seeding precedes any dispatch — no event has a
+        // "from" shard yet, so nothing counts as a cross-shard send.
         sq.schedule(1.0, Event::SiteDown { site: 2 });
-        assert_eq!(sq.cross_shard_events(), 1);
-        // Same-shard send from shard 0: not counted.
         sq.schedule(1.0, Event::Arrival);
-        assert_eq!(sq.cross_shard_events(), 1);
+        assert_eq!(sq.cross_shard_events(), 0);
         // After popping the site-2 event we dispatch *from* shard 1, so
-        // a site-3 (same shard) send is local again…
+        // a site-3 (same shard) send is local…
         sq.pop(); // site 2 (t=1.0, seq 0)
         sq.schedule(2.0, Event::SiteUp { site: 3 });
-        assert_eq!(sq.cross_shard_events(), 1);
-        // …and a shard-0 send crosses back.
+        assert_eq!(sq.cross_shard_events(), 0);
+        // …and a shard-0 send crosses.
         sq.schedule(2.0, Event::Reoptimize);
+        assert_eq!(sq.cross_shard_events(), 1);
+        // Dispatching from shard 0 (the arrival), a site-2 send
+        // crosses back the other way.
+        sq.pop(); // arrival (t=1.0, seq 1)
+        sq.schedule(2.0, Event::SiteDown { site: 2 });
         assert_eq!(sq.cross_shard_events(), 2);
     }
 

@@ -155,23 +155,33 @@ impl ThreadPool {
 /// `&mut` access to its own item), which is exactly what the sharded
 /// event engine needs for its window drains: each shard's heap is
 /// drained in place, in parallel, and the scope join is the window
-/// barrier (`sim::shard`, DESIGN.md §16). With zero or one item the
-/// call runs inline — no threads, no overhead.
+/// barrier (`sim::shard`, DESIGN.md §16). Spawned threads are capped at
+/// the machine's available parallelism (items are chunked per thread):
+/// past that point extra threads add per-barrier spawn/join cost
+/// without adding concurrency. With zero or one item — or a
+/// single-core host — the call runs inline: no threads, no overhead.
 pub fn scoped_for_each<T, F>(items: &mut [T], f: F)
 where
     T: Send,
     F: Fn(usize, &mut T) + Sync,
 {
-    if items.len() <= 1 {
-        if let Some(first) = items.first_mut() {
-            f(0, first);
+    let threads = ThreadPool::default_threads(items.len());
+    if items.len() <= 1 || threads == 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
         }
         return;
     }
+    let chunk = items.len().div_ceil(threads);
     std::thread::scope(|s| {
-        for (i, item) in items.iter_mut().enumerate() {
+        for (c, slice) in items.chunks_mut(chunk).enumerate() {
             let f = &f;
-            s.spawn(move || f(i, item));
+            let base = c * chunk;
+            s.spawn(move || {
+                for (off, item) in slice.iter_mut().enumerate() {
+                    f(base + off, item);
+                }
+            });
         }
     });
 }
@@ -311,6 +321,18 @@ mod tests {
         let mut out = vec![0u64; 8];
         scoped_for_each(&mut out, |i, slot| *slot = base[i] + 100);
         assert_eq!(out, (100..108).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_for_each_chunked_beyond_parallelism() {
+        // Far more items than cores: chunking must still hand every
+        // item its own global index exactly once (uneven final chunk
+        // included — 257 is not divisible by any plausible core count).
+        let mut items: Vec<u64> = vec![0; 257];
+        scoped_for_each(&mut items, |i, item| *item += i as u64 + 1);
+        for (i, item) in items.iter().enumerate() {
+            assert_eq!(*item, i as u64 + 1, "item {i} visited exactly once");
+        }
     }
 
     #[test]

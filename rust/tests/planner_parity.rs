@@ -223,32 +223,28 @@ fn band_lattice_members() -> Vec<ExplicitMember> {
 }
 
 fn stream_config(planner: sim::Planner, seed: u64) -> sim::SimConfig {
-    sim::SimConfig {
-        model: "alexnet".into(),
-        duration_s: 30.0,
-        seed,
-        arrival: Arrival::Poisson { rps: 2.0 },
-        clouds: 1,
-        cloud_servers: 4,
-        planner,
-        // Spawn decisions only: no sweeps, no churn — the expected
-        // stream is the per-member frozen solve in member order.
-        reopt_period_s: 0.0,
-        drift_threshold: 0.25,
-        idle_drain_w: 0.0,
-        fleet: FleetSpec::Explicit(band_lattice_members()),
-        churn: None,
-        planner_perf: PlannerPerfConfig {
-            cache: true,
-            parallel: true,
-            bw_bucket_ratio: 1.25,
-            record_decisions: true,
-        },
-        edge: None,
-        mobility: sim::Mobility::Static,
-        handover_cost_s: 0.0,
-        observability: sim::ObservabilityConfig::disabled(),
-    }
+    // Built from the two-phone preset so fields this test doesn't care
+    // about (mobility, observability, faults, shards, …) track their
+    // scenario defaults instead of breaking an exhaustive literal each
+    // time SimConfig grows; everything the expected spawn stream
+    // depends on is overridden below.
+    let mut cfg = sim::two_phone_fleet("alexnet", 10.0, Nsga2Params::for_tiny_genome(), seed);
+    cfg.duration_s = 30.0;
+    cfg.arrival = Arrival::Poisson { rps: 2.0 };
+    cfg.cloud_servers = 4;
+    cfg.planner = planner;
+    // Spawn decisions only: no sweeps, no churn — the expected
+    // stream is the per-member frozen solve in member order.
+    cfg.reopt_period_s = 0.0;
+    cfg.fleet = FleetSpec::Explicit(band_lattice_members());
+    cfg.planner_perf = PlannerPerfConfig {
+        cache: true,
+        parallel: true,
+        bw_bucket_ratio: 1.25,
+        record_decisions: true,
+    };
+    cfg.handover_cost_s = 0.0;
+    cfg
 }
 
 fn spawn_stream(cfg: &sim::SimConfig) -> Vec<(u32, u32, u32)> {
